@@ -1,0 +1,41 @@
+//! Fig. 10 — Benefit of eventual consistency with monitors vs sequential
+//! consistency without monitors, Social Media Analysis on AWS (3 regions,
+//! N=3, 15 clients). Paper: +57% over N3R1W3 and +78% over N3R2W2.
+//!
+//! `BENCH_SCALE=1.0 cargo bench --bench fig10_benefit_aws` for paper scale.
+
+use optikv::client::consistency::ConsistencyCfg;
+use optikv::exp::runner::run;
+use optikv::exp::scenarios::social_media_aws;
+use optikv::metrics::report::{bench_scale, bench_seed, benefit_pct};
+use optikv::util::stats::Table;
+
+fn main() {
+    let scale = bench_scale(0.01);
+    let seed = bench_seed();
+    println!("# Fig. 10 — benefit of N3R1W1+monitors vs sequential (scale {scale})\n");
+
+    let ev = run(&social_media_aws(ConsistencyCfg::n3r1w1(), true, scale, seed));
+    let r1w3 = run(&social_media_aws(ConsistencyCfg::n3r1w3(), false, scale, seed));
+    let r2w2 = run(&social_media_aws(ConsistencyCfg::n3r2w2(), false, scale, seed));
+
+    let mut t = Table::new(&["configuration", "app throughput (ops/s)", "benefit of eventual+mon", "paper"]);
+    t.row(&["N3R1W1 + monitors".into(), format!("{:.1}", ev.app_tps), "—".into(), "—".into()]);
+    t.row(&[
+        "N3R1W3 (sequential)".into(),
+        format!("{:.1}", r1w3.app_tps),
+        format!("+{:.0}%", benefit_pct(ev.app_tps, r1w3.app_tps)),
+        "+57%".into(),
+    ]);
+    t.row(&[
+        "N3R2W2 (sequential)".into(),
+        format!("{:.1}", r2w2.app_tps),
+        format!("+{:.0}%", benefit_pct(ev.app_tps, r2w2.app_tps)),
+        "+78%".into(),
+    ]);
+    println!("{}", t.render());
+    println!("# shape checks: N3R1W1+mon wins both; GET-dominated workload ⇒ R1W3 > R2W2");
+    assert!(ev.app_tps > r1w3.app_tps && ev.app_tps > r2w2.app_tps, "eventual must win");
+    assert!(r1w3.app_tps > r2w2.app_tps, "GET-heavy: R=1 beats R=2");
+    println!("# PASS");
+}

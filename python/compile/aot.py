@@ -1,0 +1,139 @@
+"""AOT lowering: JAX/Pallas detector kernels → HLO *text* artifacts.
+
+HLO text (NOT `lowered.compile()` serialization) is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids which
+xla_extension 0.5.1 (behind the rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Each export writes:
+  artifacts/<name>.hlo.txt   — HLO text, loaded by rust runtime/pjrt.rs
+  artifacts/<name>.meta      — whitespace-separated static shape params
+
+Run `make artifacts` (idempotent: skips when inputs are older than
+outputs). A self-check executes each lowered function against ref.py on
+random inputs before anything is written.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+# compiled batch size of the pair-verdict executable (rust pads to this)
+PAIR_B = 256
+# compiled candidate count / tile of the cut-matrix executable
+CUT_N = 64
+CUT_TILE = 32
+# padded HVC dimension (max servers; the paper's N is 3 or 5)
+DIM = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _rand_clocks(rng, n, d):
+    base = rng.integers(0, 1000, size=(n, 1), dtype=np.int32)
+    start = base + rng.integers(0, 50, size=(n, d), dtype=np.int32)
+    end = start + rng.integers(0, 50, size=(n, d), dtype=np.int32)
+    return start.astype(np.int32), end.astype(np.int32)
+
+
+def selfcheck_pair():
+    rng = np.random.default_rng(0)
+    a_s, a_e = _rand_clocks(rng, PAIR_B, DIM)
+    b_s, b_e = _rand_clocks(rng, PAIR_B, DIM)
+    owners_a = rng.integers(0, DIM, size=PAIR_B)
+    owners_b = rng.integers(0, DIM, size=PAIR_B)
+    a_so = a_s[np.arange(PAIR_B), owners_a]
+    a_eo = a_e[np.arange(PAIR_B), owners_a]
+    b_so = b_s[np.arange(PAIR_B), owners_b]
+    b_eo = b_e[np.arange(PAIR_B), owners_b]
+    eps = np.array([7], dtype=np.int32)
+    got = model.pair_verdict_fn(a_s, a_e, b_s, b_e, a_so, a_eo, b_so, b_eo, eps)[0]
+    want = ref.pair_verdict_ref(a_s, a_e, b_s, b_e, a_so, a_eo, b_so, b_eo, eps[0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def selfcheck_cut():
+    rng = np.random.default_rng(1)
+    s, e = _rand_clocks(rng, CUT_N, DIM)
+    owners = rng.integers(0, DIM, size=CUT_N)
+    so = s[np.arange(CUT_N), owners]
+    eo = e[np.arange(CUT_N), owners]
+    eps = np.array([7], dtype=np.int32)
+    m, counts = model.cut_matrix_fn(s, e, so, eo, eps)
+    want = ref.cut_matrix_ref(s, e, so, eo, eps[0])
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(want))
+    assert counts.shape == (CUT_N,)
+
+
+def export_pair(outdir: str):
+    args = (
+        _i32((PAIR_B, DIM)), _i32((PAIR_B, DIM)),
+        _i32((PAIR_B, DIM)), _i32((PAIR_B, DIM)),
+        _i32((PAIR_B,)), _i32((PAIR_B,)), _i32((PAIR_B,)), _i32((PAIR_B,)),
+        _i32((1,)),
+    )
+    lowered = jax.jit(model.pair_verdict_fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(outdir, "pair_verdict.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(outdir, "pair_verdict.meta"), "w") as f:
+        f.write(f"{PAIR_B} {DIM}\n")
+    return len(text)
+
+
+def export_cut(outdir: str):
+    args = (
+        _i32((CUT_N, DIM)), _i32((CUT_N, DIM)),
+        _i32((CUT_N,)), _i32((CUT_N,)),
+        _i32((1,)),
+    )
+    lowered = jax.jit(model.cut_matrix_fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(outdir, "cut_matrix.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(outdir, "cut_matrix.meta"), "w") as f:
+        f.write(f"{CUT_N} {DIM} {CUT_TILE}\n")
+    return len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="output dir (default ../artifacts)")
+    args = ap.parse_args()
+    outdir = args.out or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+        "artifacts",
+    )
+    os.makedirs(outdir, exist_ok=True)
+    print("self-check: pair_verdict vs ref ...", flush=True)
+    selfcheck_pair()
+    print("self-check: cut_matrix vs ref ...", flush=True)
+    selfcheck_cut()
+    n1 = export_pair(outdir)
+    print(f"wrote pair_verdict.hlo.txt ({n1} chars, B={PAIR_B}, D={DIM})")
+    n2 = export_cut(outdir)
+    print(f"wrote cut_matrix.hlo.txt ({n2} chars, N={CUT_N}, D={DIM})")
+
+
+if __name__ == "__main__":
+    main()

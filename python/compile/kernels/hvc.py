@@ -1,0 +1,134 @@
+"""L1 — Pallas kernels for batched HVC-interval causality verdicts.
+
+The monitors' compute hot-spot: given batches of candidate HVC intervals,
+decide concurrent / before / after under the paper's 3-case rule. Two
+kernels:
+
+* `pair_verdict(...)` — B independent pairs → i32[B] verdicts. One VMEM
+  block (B×D i32 is tiny), pure VPU comparisons, no data-dependent control
+  flow.
+* `cut_matrix(...)` — N intervals → i32[N, N] pairwise verdict matrix,
+  tiled over (TI, TJ) output blocks with BlockSpec so the candidate tiles
+  stream HBM→VMEM; this is the shape a real-TPU deployment would run when
+  joining monitor windows in bulk.
+
+Kernels are lowered with `interpret=True`: the CPU PJRT client cannot run
+Mosaic custom-calls, and correctness (vs `ref.py`) is the build-time
+signal. The TPU performance story (VMEM footprint, lane mapping) is
+estimated in DESIGN.md §Hardware-Adaptation.
+
+Clock encoding: i32 milliseconds; ε=∞ floor entries are pre-shifted by the
+Rust caller (see rust/src/runtime/pjrt.rs `encode_ms`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# shared verdict math (traced inside the kernels)
+# ---------------------------------------------------------------------------
+
+def _vec_less(x, y):
+    le = jnp.all(x <= y, axis=-1)
+    lt = jnp.any(x < y, axis=-1)
+    return jnp.logical_and(le, lt)
+
+
+def _verdict(a_start, a_end, b_start, b_end,
+             a_start_own, a_end_own, b_start_own, b_end_own, eps):
+    swapped = _vec_less(b_start, a_start)
+    sw = swapped[..., None]
+    x_end = jnp.where(sw, b_end, a_end)
+    y_start = jnp.where(sw, a_start, b_start)
+    x_end_own = jnp.where(swapped, b_end_own, a_end_own)
+    y_start_own = jnp.where(swapped, a_start_own, b_start_own)
+    ordered = _vec_less(x_end, y_start)
+    separated = x_end_own <= y_start_own - eps
+    before = jnp.logical_and(ordered, separated)
+    return jnp.where(before, jnp.where(swapped, 2, 1), 0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# pair_verdict: B independent pairs, single block
+# ---------------------------------------------------------------------------
+
+def _pair_verdict_kernel(a_start_ref, a_end_ref, b_start_ref, b_end_ref,
+                         a_so_ref, a_eo_ref, b_so_ref, b_eo_ref, eps_ref,
+                         out_ref):
+    eps = eps_ref[0]
+    out_ref[...] = _verdict(
+        a_start_ref[...], a_end_ref[...], b_start_ref[...], b_end_ref[...],
+        a_so_ref[...], a_eo_ref[...], b_so_ref[...], b_eo_ref[...], eps,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pair_verdict(a_start, a_end, b_start, b_end,
+                 a_start_own, a_end_own, b_start_own, b_end_own, eps):
+    """i32[B,D] ×4, i32[B] ×4, i32[1]  →  i32[B] verdicts."""
+    b = a_start.shape[0]
+    return pl.pallas_call(
+        _pair_verdict_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(a_start, a_end, b_start, b_end,
+      a_start_own, a_end_own, b_start_own, b_end_own, eps)
+
+
+# ---------------------------------------------------------------------------
+# cut_matrix: N×N pairwise verdicts, tiled output grid
+# ---------------------------------------------------------------------------
+
+def _cut_matrix_kernel(starts_i_ref, ends_i_ref, so_i_ref, eo_i_ref,
+                       starts_j_ref, ends_j_ref, so_j_ref, eo_j_ref,
+                       eps_ref, out_ref):
+    # tile shapes: [TI, D] for the i-side, [TJ, D] for the j-side
+    eps = eps_ref[0]
+    si = starts_i_ref[...]          # [TI, D]
+    ei = ends_i_ref[...]
+    sj = starts_j_ref[...]          # [TJ, D]
+    ej = ends_j_ref[...]
+    # broadcast to [TI, TJ, D]
+    a_start = si[:, None, :]
+    a_end = ei[:, None, :]
+    b_start = sj[None, :, :]
+    b_end = ej[None, :, :]
+    a_so = so_i_ref[...][:, None]
+    a_eo = eo_i_ref[...][:, None]
+    b_so = so_j_ref[...][None, :]
+    b_eo = eo_j_ref[...][None, :]
+    out_ref[...] = _verdict(a_start, a_end, b_start, b_end,
+                            a_so, a_eo, b_so, b_eo, eps)
+
+
+def cut_matrix(starts, ends, owns_start, owns_end, eps, tile=32):
+    """i32[N,D] ×2, i32[N] ×2, i32[1] → i32[N,N] pairwise verdicts.
+
+    The output is produced in (tile × tile) blocks; each grid step loads
+    one i-tile and one j-tile of candidates into VMEM.
+    """
+    n, d = starts.shape
+    assert n % tile == 0, f"N={n} must be a multiple of tile={tile}"
+    grid = (n // tile, n // tile)
+    return pl.pallas_call(
+        _cut_matrix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((tile, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile,), lambda i, j: (j,)),
+            pl.BlockSpec((tile,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.int32),
+        interpret=True,
+    )(starts, ends, owns_start, owns_end, starts, ends, owns_start, owns_end, eps)

@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: `hvc.py`'s Pallas kernels must
+match them bit-for-bit (pytest + hypothesis sweep), and the Rust scalar
+backend (`runtime::accel::NativeAccel`) matches the same semantics via the
+differential test in rust/tests/xla_accel.rs.
+
+Semantics — the paper's 3-case HVC-interval causality rule (§V, Fig. 6),
+oriented so that ¬(start_a > start_b):
+
+  1. ¬(end_x < start_y)                          → 0 (concurrent)
+  2. end_x < start_y ∧ end_x[Sx] ≤ start_y[Sy]−ε → x before y
+  3. end_x < start_y, within ε                   → 0 (uncertain ⇒ concurrent)
+
+Verdict encoding: 0 = concurrent, 1 = a before b, 2 = b before a.
+"""
+
+import jax.numpy as jnp
+
+
+def vec_less(x, y):
+    """Strict vector less-than over the trailing (HVC) axis:
+    all(x <= y) and any(x < y)."""
+    le = jnp.all(x <= y, axis=-1)
+    lt = jnp.any(x < y, axis=-1)
+    return jnp.logical_and(le, lt)
+
+
+def pair_verdict_ref(a_start, a_end, b_start, b_end,
+                     a_start_own, a_end_own, b_start_own, b_end_own, eps):
+    """Batched pair verdicts.
+
+    Args:
+      a_start, a_end, b_start, b_end: i32[B, D] HVC vectors (ms).
+      *_own: i32[B] owner-component values of the respective endpoints.
+      eps: i32[] (scalar) clock-synchronization bound, ms.
+
+    Returns:
+      i32[B] verdicts (0 concurrent / 1 a→b / 2 b→a).
+    """
+    # orientation: swap when start_a > start_b (i.e. start_b < start_a)
+    swapped = vec_less(b_start, a_start)  # [B] bool
+    sw = swapped[:, None]
+    x_end = jnp.where(sw, b_end, a_end)
+    y_start = jnp.where(sw, a_start, b_start)
+    x_end_own = jnp.where(swapped, b_end_own, a_end_own)
+    y_start_own = jnp.where(swapped, a_start_own, b_start_own)
+
+    ordered = vec_less(x_end, y_start)
+    separated = x_end_own <= y_start_own - eps
+    before = jnp.logical_and(ordered, separated)
+    verdict = jnp.where(before, jnp.where(swapped, 2, 1), 0)
+    return verdict.astype(jnp.int32)
+
+
+def cut_matrix_ref(starts, ends, owns_start, owns_end, eps):
+    """Pairwise verdict matrix for N candidate intervals.
+
+    Args:
+      starts, ends: i32[N, D]; owns_*: i32[N]; eps: i32[].
+
+    Returns:
+      i32[N, N]: verdict of (interval i, interval j); diagonal is 0
+      (an interval is concurrent with itself — overlap case).
+    """
+    n = starts.shape[0]
+    a_start = jnp.repeat(starts, n, axis=0)  # [N*N, D] (i varies slowly)
+    a_end = jnp.repeat(ends, n, axis=0)
+    b_start = jnp.tile(starts, (n, 1))
+    b_end = jnp.tile(ends, (n, 1))
+    a_so = jnp.repeat(owns_start, n)
+    a_eo = jnp.repeat(owns_end, n)
+    b_so = jnp.tile(owns_start, n)
+    b_eo = jnp.tile(owns_end, n)
+    v = pair_verdict_ref(a_start, a_end, b_start, b_end, a_so, a_eo, b_so, b_eo, eps)
+    return v.reshape(n, n)
+
+
+def paper_rule_scalar(a_start, a_end, b_start, b_end, owner_a, owner_b, eps):
+    """Direct (unvectorized) transliteration of the paper's rule, used by
+    the tests as an independent oracle for the oracles."""
+    def less(x, y):
+        return all(p <= q for p, q in zip(x, y)) and any(p < q for p, q in zip(x, y))
+
+    if less(b_start, a_start):
+        v = paper_rule_scalar(b_start, b_end, a_start, a_end, owner_b, owner_a, eps)
+        return {0: 0, 1: 2, 2: 1}[v]
+    if less(a_end, b_start):
+        if a_end[owner_a] <= b_start[owner_b] - eps:
+            return 1
+        return 0
+    return 0

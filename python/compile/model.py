@@ -1,0 +1,40 @@
+"""L2 — the JAX detector graph composed from the L1 Pallas kernels.
+
+Two exports, AOT-lowered by `aot.py` into `artifacts/` and executed from
+the Rust monitor hot path through PJRT:
+
+* `pair_verdict_fn`  — B pair verdicts (the monitor's candidate-vs-window
+  join when a new candidate arrives);
+* `cut_matrix_fn`    — N×N pairwise verdicts plus, fused on top, the
+  per-row count of concurrent partners (a cheap reduction the monitor
+  uses to prune rows with no partner before the exact tuple search).
+
+Everything here is shape-static (PJRT executables are compiled per
+shape); the Rust side pads batches to the compiled size.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import hvc
+
+
+def pair_verdict_fn(a_start, a_end, b_start, b_end,
+                    a_start_own, a_end_own, b_start_own, b_end_own, eps):
+    """i32[B] verdicts for B interval pairs."""
+    return (hvc.pair_verdict(a_start, a_end, b_start, b_end,
+                             a_start_own, a_end_own, b_start_own, b_end_own,
+                             eps),)
+
+
+def cut_matrix_fn(starts, ends, owns_start, owns_end, eps):
+    """(i32[N,N] verdict matrix, i32[N] concurrent-partner counts).
+
+    The count excludes the diagonal (an interval trivially "overlaps"
+    itself under the rule).
+    """
+    m = hvc.cut_matrix(starts, ends, owns_start, owns_end, eps)
+    n = m.shape[0]
+    concurrent = (m == 0).astype(jnp.int32)
+    off_diag = concurrent - jnp.eye(n, dtype=jnp.int32)
+    counts = jnp.sum(off_diag, axis=1)
+    return m, counts

@@ -1,0 +1,170 @@
+"""Kernel correctness: Pallas (interpret) vs pure-jnp ref vs a scalar
+transliteration of the paper's rule. Hypothesis sweeps shapes and value
+regimes (overlap-heavy, ordered-heavy, ε-uncertain)."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model
+from compile.kernels import hvc, ref
+
+
+def make_intervals(rng, n, d, spread, gap):
+    """Random intervals; `spread` controls concurrency density, `gap`
+    shifts consecutive intervals apart (ordered-heavy when large)."""
+    base = (rng.integers(0, spread, size=(n, 1)) + np.arange(n)[:, None] * gap).astype(np.int64)
+    start = (base + rng.integers(0, 20, size=(n, d))).astype(np.int32)
+    end = start + rng.integers(0, 30, size=(n, d)).astype(np.int32)
+    owners = rng.integers(0, d, size=n)
+    idx = np.arange(n)
+    # owner component must be the max (it's the process's own physical time)
+    start[idx, owners] = start.max(axis=1)
+    end[idx, owners] = end.max(axis=1)
+    return start, end, owners
+
+
+def owner_vals(arr, owners):
+    return arr[np.arange(arr.shape[0]), owners].astype(np.int32)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=48),
+    d=st.integers(min_value=1, max_value=8),
+    spread=st.sampled_from([5, 50, 500]),
+    gap=st.sampled_from([0, 10, 100]),
+    eps=st.sampled_from([0, 3, 25, 1 << 30]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_pair_verdict_matches_ref_and_paper_rule(n, d, spread, gap, eps, seed):
+    rng = np.random.default_rng(seed)
+    a_s, a_e, own_a = make_intervals(rng, n, d, spread, gap)
+    b_s, b_e, own_b = make_intervals(rng, n, d, spread, gap)
+    a_so, a_eo = owner_vals(a_s, own_a), owner_vals(a_e, own_a)
+    b_so, b_eo = owner_vals(b_s, own_b), owner_vals(b_e, own_b)
+    eps_arr = np.array([eps], dtype=np.int32)
+
+    got = np.asarray(
+        hvc.pair_verdict(a_s, a_e, b_s, b_e, a_so, a_eo, b_so, b_eo, eps_arr)
+    )
+    want = np.asarray(
+        ref.pair_verdict_ref(a_s, a_e, b_s, b_e, a_so, a_eo, b_so, b_eo, eps)
+    )
+    np.testing.assert_array_equal(got, want)
+
+    # independent scalar oracle (the paper's rule, line by line)
+    for i in range(n):
+        scalar = ref.paper_rule_scalar(
+            a_s[i].tolist(), a_e[i].tolist(), b_s[i].tolist(), b_e[i].tolist(),
+            int(own_a[i]), int(own_b[i]), eps,
+        )
+        assert got[i] == scalar, f"pair {i}: kernel={got[i]} scalar={scalar}"
+
+
+@given(
+    tiles=st.integers(min_value=1, max_value=3),
+    d=st.integers(min_value=1, max_value=8),
+    eps=st.sampled_from([0, 5, 1 << 30]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_cut_matrix_matches_ref(tiles, d, eps, seed):
+    tile = 8
+    n = tiles * tile
+    rng = np.random.default_rng(seed)
+    s, e, owners = make_intervals(rng, n, d, 100, 5)
+    so, eo = owner_vals(s, owners), owner_vals(e, owners)
+    eps_arr = np.array([eps], dtype=np.int32)
+    got = np.asarray(hvc.cut_matrix(s, e, so, eo, eps_arr, tile=tile))
+    want = np.asarray(ref.cut_matrix_ref(s, e, so, eo, eps))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_verdict_antisymmetry_property():
+    rng = np.random.default_rng(7)
+    n, d = 128, 4
+    a_s, a_e, own_a = make_intervals(rng, n, d, 50, 20)
+    b_s, b_e, own_b = make_intervals(rng, n, d, 50, 20)
+    a_so, a_eo = owner_vals(a_s, own_a), owner_vals(a_e, own_a)
+    b_so, b_eo = owner_vals(b_s, own_b), owner_vals(b_e, own_b)
+    eps = np.array([5], dtype=np.int32)
+    ab = np.asarray(ref.pair_verdict_ref(a_s, a_e, b_s, b_e, a_so, a_eo, b_so, b_eo, 5))
+    ba = np.asarray(ref.pair_verdict_ref(b_s, b_e, a_s, a_e, b_so, b_eo, a_so, a_eo, 5))
+    swap = {0: 0, 1: 2, 2: 1}
+    assert all(ba[i] == swap[int(ab[i])] for i in range(n))
+    del eps
+
+
+def test_eps_infinity_means_never_ordered():
+    # ε = ∞ (the paper's experimental setting) ⇒ case 2 never fires:
+    # physically disjoint but causally incomparable intervals stay concurrent
+    d = 4
+    a_s = np.full((1, d), 10, dtype=np.int32)
+    a_e = np.full((1, d), 20, dtype=np.int32)
+    b_s = np.full((1, d), 500, dtype=np.int32)
+    b_e = np.full((1, d), 600, dtype=np.int32)
+    own = np.array([0])
+    args = (a_s, a_e, b_s, b_e,
+            owner_vals(a_s, own), owner_vals(a_e, own),
+            owner_vals(b_s, own), owner_vals(b_e, own))
+    small = np.asarray(ref.pair_verdict_ref(*args, 5))
+    inf = np.asarray(ref.pair_verdict_ref(*args, 1 << 30))
+    assert small[0] == 1, "clearly ordered with small eps"
+    assert inf[0] == 0, "eps=inf keeps them concurrent"
+
+
+def test_overlapping_intervals_concurrent_any_eps():
+    d = 3
+    a_s = np.array([[10, 10, 10]], dtype=np.int32)
+    a_e = np.array([[50, 50, 50]], dtype=np.int32)
+    b_s = np.array([[30, 30, 30]], dtype=np.int32)
+    b_e = np.array([[70, 70, 70]], dtype=np.int32)
+    own = np.array([1])
+    for eps in (0, 100, 1 << 30):
+        v = np.asarray(ref.pair_verdict_ref(
+            a_s, a_e, b_s, b_e,
+            owner_vals(a_s, own), owner_vals(a_e, own),
+            owner_vals(b_s, own), owner_vals(b_e, own), eps))
+        assert v[0] == 0
+
+
+def test_model_cut_counts():
+    # three mutually overlapping + one far-later interval (small eps)
+    d = 2
+    s = np.array([[0, 0], [5, 5], [8, 8], [1000, 1000]], dtype=np.int32)
+    e = np.array([[20, 20], [25, 25], [30, 30], [1100, 1100]], dtype=np.int32)
+    # pad to one tile
+    pad = 32 - 4
+    s = np.vstack([s, np.full((pad, d), 10_000, dtype=np.int32)])
+    e = np.vstack([e, np.full((pad, d), 10_001, dtype=np.int32)])
+    so = s[:, 0].copy()
+    eo = e[:, 0].copy()
+    eps = np.array([2], dtype=np.int32)
+    m, counts = model.cut_matrix_fn(s, e, so, eo, eps)
+    m = np.asarray(m)
+    counts = np.asarray(counts)
+    assert m[0, 1] == 0 and m[1, 2] == 0 and m[0, 2] == 0
+    assert m[0, 3] == 1 and m[3, 0] == 2
+    assert counts[0] >= 2 and counts[1] >= 2 and counts[2] >= 2
+
+
+@pytest.mark.parametrize("b", [1, 7, 256])
+def test_pair_verdict_shapes(b):
+    d = 8
+    rng = np.random.default_rng(b)
+    a_s, a_e, own_a = make_intervals(rng, b, d, 50, 5)
+    b_s, b_e, own_b = make_intervals(rng, b, d, 50, 5)
+    out = hvc.pair_verdict(
+        a_s, a_e, b_s, b_e,
+        owner_vals(a_s, own_a), owner_vals(a_e, own_a),
+        owner_vals(b_s, own_b), owner_vals(b_e, own_b),
+        np.array([3], dtype=np.int32),
+    )
+    assert out.shape == (b,)
+    assert out.dtype == np.int32

@@ -1,0 +1,660 @@
+//! *Social Media Analysis* (§VI-A): distributed greedy graph coloring on a
+//! power-law social graph. Each client colors its assigned nodes in tasks
+//! of `task_size` nodes; before updating a node it takes Peterson edge
+//! locks for every cross-client edge (in a globally consistent order to
+//! avoid deadlock), reads the neighbors' colors, picks the smallest free
+//! color, *defers* the color write to the end of the task, then releases
+//! the locks. On a violation report the client aborts and restarts the
+//! task — no server-side rollback needed for deferred updates (§VI-B
+//! "Discussion").
+//!
+//! High-degree nodes (degree > q, §VI-A) are pre-colored lock-free by
+//! their owners in a preprocessing pass; their edges need no predicates.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::apps::graph::Graph;
+use crate::apps::peterson::{LockStep, MeOracleRef, PetersonLock};
+use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, OpOutcome};
+use crate::clock::hvc::Millis;
+use crate::metrics::throughput::Metrics;
+use crate::sim::Time;
+use crate::store::value::{resolve, Interner, KeyId, Value};
+
+/// Everything the coloring clients share (single-threaded DES ⇒ `Rc`).
+#[derive(Clone)]
+pub struct ColoringShared {
+    pub graph: Rc<Graph>,
+    /// node → owning client
+    pub owner: Rc<Vec<u32>>,
+    pub interner: Rc<RefCell<Interner>>,
+    pub oracle: MeOracleRef,
+    pub metrics: Metrics,
+    /// node → is high-degree (pre-colored, lock-free)
+    pub hi_deg: Rc<Vec<bool>>,
+    pub task_size: usize,
+    /// recolor forever (throughput experiments) vs one pass
+    pub loop_forever: bool,
+}
+
+impl ColoringShared {
+    pub fn new(
+        graph: Rc<Graph>,
+        n_clients: usize,
+        interner: Rc<RefCell<Interner>>,
+        oracle: MeOracleRef,
+        metrics: Metrics,
+        task_size: usize,
+        loop_forever: bool,
+    ) -> Self {
+        let owner = Rc::new(crate::apps::graph::partition_nodes(graph.n, n_clients));
+        let q = graph.high_degree_threshold();
+        let hi_deg = Rc::new((0..graph.n as u32).map(|v| graph.degree(v) > q).collect());
+        Self { graph, owner, interner, oracle, metrics, hi_deg, task_size, loop_forever }
+    }
+}
+
+pub fn color_key(interner: &mut Interner, v: u32) -> KeyId {
+    interner.intern(&format!("color_{v}"))
+}
+
+/// Smallest non-negative color not in `used`.
+fn mex(used: &[i64]) -> i64 {
+    let mut c = 0i64;
+    loop {
+        if !used.contains(&c) {
+            return c;
+        }
+        c += 1;
+    }
+}
+
+#[derive(Debug)]
+enum Phase {
+    /// first `next()` call: begin the preprocessing pass
+    Init,
+    /// pre-coloring own high-degree nodes: reading neighbor `nj` of prep
+    /// node `pi`
+    PrepRead { pi: usize, nj: usize, used: Vec<i64> },
+    PrepWrite { pi: usize },
+    TaskStart,
+    /// acquiring lock `li` for node `ni` of the current task
+    Lock { ni: usize, li: usize },
+    /// reading neighbor `nj` of node `ni`
+    ReadNbr { ni: usize, nj: usize, used: Vec<i64> },
+    /// releasing lock `li` after the color was chosen (deferred)
+    Release { ni: usize, li: usize },
+    /// committing deferred color `ci` of the task
+    Commit { ci: usize },
+    /// releasing engaged locks after an abort, index into `locks`
+    AbortRelease { li: usize },
+    Done,
+}
+
+pub struct ColoringApp {
+    sh: ColoringShared,
+    client: u32,
+    /// my high-degree nodes (preprocessing pass)
+    prep: Vec<u32>,
+    /// my regular nodes, chunked into tasks
+    tasks: Vec<Vec<u32>>,
+    ti: usize,
+    phase: Phase,
+    /// locks for the node being processed
+    locks: Vec<PetersonLock>,
+    /// deferred (node, color) updates of the current task
+    pending: Vec<(u32, i64)>,
+    restart_pending: bool,
+    task_started: Time,
+    /// cached key ids
+    color_keys: HashMap<u32, KeyId>,
+    /// stats
+    pub nodes_colored: u64,
+    pub tasks_done: u64,
+    pub tasks_aborted: u64,
+}
+
+impl ColoringApp {
+    pub fn new(sh: ColoringShared, client: u32) -> Self {
+        let mine: Vec<u32> = (0..sh.graph.n as u32)
+            .filter(|&v| sh.owner[v as usize] == client)
+            .collect();
+        let prep: Vec<u32> = mine.iter().copied().filter(|&v| sh.hi_deg[v as usize]).collect();
+        let regular: Vec<u32> = mine.iter().copied().filter(|&v| !sh.hi_deg[v as usize]).collect();
+        let tasks: Vec<Vec<u32>> = regular.chunks(sh.task_size.max(1)).map(|c| c.to_vec()).collect();
+        Self {
+            sh,
+            client,
+            prep,
+            tasks,
+            ti: 0,
+            phase: Phase::Init,
+            locks: Vec::new(),
+            pending: Vec::new(),
+            restart_pending: false,
+            task_started: 0,
+            color_keys: HashMap::new(),
+            nodes_colored: 0,
+            tasks_done: 0,
+            tasks_aborted: 0,
+        }
+    }
+
+    fn ckey(&mut self, v: u32) -> KeyId {
+        let interner = &self.sh.interner;
+        *self
+            .color_keys
+            .entry(v)
+            .or_insert_with(|| color_key(&mut interner.borrow_mut(), v))
+    }
+
+    /// Locks needed for node `v`: one per cross-client edge to a non-high-
+    /// degree neighbor, in globally sorted (a, b) order (deadlock freedom).
+    fn locks_for(&self, v: u32) -> Vec<PetersonLock> {
+        let mut edges: Vec<(u32, u32)> = self
+            .sh
+            .graph
+            .neighbors(v)
+            .iter()
+            .filter(|&&u| self.sh.owner[u as usize] != self.client && !self.sh.hi_deg[u as usize])
+            .map(|&u| (v.min(u), v.max(u)))
+            .collect();
+        edges.sort_unstable();
+        let mut interner = self.sh.interner.borrow_mut();
+        edges
+            .into_iter()
+            .map(|(a, b)| PetersonLock::new(a, b, v, &mut interner))
+            .collect()
+    }
+
+    /// Start processing node `ni` of the current task.
+    fn begin_node(&mut self, ni: usize) -> AppAction {
+        let v = self.tasks[self.ti][ni];
+        self.locks = self.locks_for(v);
+        if self.locks.is_empty() {
+            self.phase = Phase::ReadNbr { ni, nj: 0, used: Vec::new() };
+            self.issue_read(ni, 0)
+        } else {
+            self.phase = Phase::Lock { ni, li: 0 };
+            match self.locks[0].acquire() {
+                LockStep::Do(op) => AppAction::Op(op),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    fn issue_read(&mut self, ni: usize, nj: usize) -> AppAction {
+        let v = self.tasks[self.ti][ni];
+        let nbrs = self.sh.graph.neighbors(v).to_vec();
+        if nj < nbrs.len() {
+            let key = self.ckey(nbrs[nj]);
+            AppAction::Op(AppOp::Get(key))
+        } else {
+            unreachable!("issue_read past neighbor list")
+        }
+    }
+
+    /// Node read finished: defer the color, start releasing locks (or move
+    /// on when there are none).
+    fn finish_node(&mut self, ni: usize, mut used: Vec<i64>, now: Time) -> AppAction {
+        let v = self.tasks[self.ti][ni];
+        // deferred updates of same-task neighbors are not in the store yet;
+        // consult the local pending buffer so the task stays self-consistent
+        for &(u, c) in &self.pending {
+            if self.sh.graph.neighbors(v).contains(&u) {
+                used.push(c);
+            }
+        }
+        self.pending.push((v, mex(&used)));
+        if self.locks.is_empty() {
+            self.after_release(ni, now)
+        } else {
+            self.phase = Phase::Release { ni, li: 0 };
+            match self.locks[0].release() {
+                LockStep::Do(op) => AppAction::Op(op),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    fn after_release(&mut self, ni: usize, now: Time) -> AppAction {
+        let task_len = self.tasks[self.ti].len();
+        if ni + 1 < task_len {
+            self.begin_node(ni + 1)
+        } else {
+            // task read phase done → commit deferred updates
+            self.phase = Phase::Commit { ci: 0 };
+            let (v, _) = self.pending[0];
+            let key = self.ckey(v);
+            let val = self.pending[0].1;
+            let _ = now;
+            AppAction::Op(AppOp::Put(key, Value::Int(val)))
+        }
+    }
+
+    fn finish_task(&mut self, now: Time) -> AppAction {
+        self.tasks_done += 1;
+        self.nodes_colored += self.pending.len() as u64;
+        {
+            let mut m = self.sh.metrics.borrow_mut();
+            m.tasks_completed += 1;
+            m.task_durations.push(now - self.task_started);
+        }
+        self.pending.clear();
+        self.ti += 1;
+        if self.ti >= self.tasks.len() {
+            if self.sh.loop_forever {
+                self.ti = 0;
+            } else {
+                self.phase = Phase::Done;
+                return AppAction::Done;
+            }
+        }
+        self.phase = Phase::TaskStart;
+        self.start_task(now)
+    }
+
+    fn start_task(&mut self, now: Time) -> AppAction {
+        self.task_started = now;
+        self.pending.clear();
+        if self.ti >= self.tasks.len() || self.tasks[self.ti].is_empty() {
+            self.phase = Phase::Done;
+            return AppAction::Done;
+        }
+        self.begin_node(0)
+    }
+
+    /// Begin (or continue) prep: color own high-degree nodes lock-free.
+    fn start_prep(&mut self, pi: usize) -> AppAction {
+        if pi >= self.prep.len() {
+            self.phase = Phase::TaskStart;
+            return AppAction::Sleep(0);
+        }
+        let v = self.prep[pi];
+        if self.sh.graph.degree(v) == 0 {
+            self.phase = Phase::PrepWrite { pi };
+            let key = self.ckey(v);
+            return AppAction::Op(AppOp::Put(key, Value::Int(0)));
+        }
+        self.phase = Phase::PrepRead { pi, nj: 0, used: Vec::new() };
+        let key = self.ckey(self.sh.graph.neighbors(v)[0]);
+        AppAction::Op(AppOp::Get(key))
+    }
+
+    fn handle_abort(&mut self, now: Time) -> AppAction {
+        // release any engaged locks, then restart the current task
+        self.restart_pending = false;
+        self.tasks_aborted += 1;
+        self.sh.metrics.borrow_mut().tasks_aborted += 1;
+        self.pending.clear();
+        // oracle bookkeeping: we leave every CS we were in
+        for l in &self.locks {
+            if l.held() {
+                self.sh.oracle.borrow_mut().exit(l.edge(), self.client);
+            }
+        }
+        let engaged: Vec<usize> = self
+            .locks
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.engaged())
+            .map(|(i, _)| i)
+            .collect();
+        if let Some(&first) = engaged.first() {
+            self.phase = Phase::AbortRelease { li: first };
+            match self.locks[first].release() {
+                LockStep::Do(op) => AppAction::Op(op),
+                _ => unreachable!(),
+            }
+        } else {
+            self.start_task(now)
+        }
+    }
+}
+
+impl AppLogic for ColoringApp {
+    fn name(&self) -> &'static str {
+        "social_media_analysis"
+    }
+
+    fn next(&mut self, env: &mut AppEnv, last: Option<(AppOp, OpOutcome)>) -> AppAction {
+        let now = env.now;
+        if self.restart_pending {
+            return self.handle_abort(now);
+        }
+        let outcome = last.map(|(_, o)| o);
+
+        match std::mem::replace(&mut self.phase, Phase::Done) {
+            Phase::Init => {
+                self.task_started = now;
+                self.start_prep(0)
+            }
+            Phase::Done => AppAction::Done,
+            Phase::PrepRead { pi, nj, mut used } => {
+                if let Some(OpOutcome::GetOk(sibs)) = &outcome {
+                    if let Some(c) = resolve(sibs).and_then(|v| v.value.as_int()) {
+                        used.push(c);
+                    }
+                }
+                let v = self.prep[pi];
+                let nbrs_len = self.sh.graph.degree(v);
+                if nj + 1 < nbrs_len {
+                    let key = self.ckey(self.sh.graph.neighbors(v)[nj + 1]);
+                    self.phase = Phase::PrepRead { pi, nj: nj + 1, used };
+                    AppAction::Op(AppOp::Get(key))
+                } else {
+                    let color = mex(&used);
+                    let key = self.ckey(v);
+                    self.phase = Phase::PrepWrite { pi };
+                    AppAction::Op(AppOp::Put(key, Value::Int(color)))
+                }
+            }
+            Phase::PrepWrite { pi } => {
+                self.nodes_colored += 1;
+                self.start_prep(pi + 1)
+            }
+            Phase::TaskStart => {
+                // entered via Sleep(0) from prep, or a restart
+                self.start_task(now)
+            }
+            Phase::Lock { ni, li } => {
+                let out = outcome.expect("lock op outcome");
+                match self.locks[li].on_result(&out) {
+                    LockStep::Do(op) => {
+                        self.phase = Phase::Lock { ni, li };
+                        AppAction::Op(op)
+                    }
+                    LockStep::Acquired => {
+                        self.sh
+                            .oracle
+                            .borrow_mut()
+                            .enter(self.locks[li].edge(), self.client, now);
+                        if li + 1 < self.locks.len() {
+                            self.phase = Phase::Lock { ni, li: li + 1 };
+                            match self.locks[li + 1].acquire() {
+                                LockStep::Do(op) => AppAction::Op(op),
+                                _ => unreachable!(),
+                            }
+                        } else {
+                            self.phase = Phase::ReadNbr { ni, nj: 0, used: Vec::new() };
+                            self.issue_read(ni, 0)
+                        }
+                    }
+                    LockStep::Released => unreachable!(),
+                }
+            }
+            Phase::ReadNbr { ni, nj, mut used } => {
+                if let Some(OpOutcome::GetOk(sibs)) = &outcome {
+                    if let Some(c) = resolve(sibs).and_then(|v| v.value.as_int()) {
+                        used.push(c);
+                    }
+                }
+                let v = self.tasks[self.ti][ni];
+                if nj + 1 < self.sh.graph.degree(v) {
+                    self.phase = Phase::ReadNbr { ni, nj: nj + 1, used };
+                    let key = self.ckey(self.sh.graph.neighbors(v)[nj + 1]);
+                    AppAction::Op(AppOp::Get(key))
+                } else {
+                    self.finish_node(ni, used, now)
+                }
+            }
+            Phase::Release { ni, li } => {
+                let out = outcome.expect("release outcome");
+                match self.locks[li].on_result(&out) {
+                    LockStep::Do(op) => {
+                        self.phase = Phase::Release { ni, li };
+                        AppAction::Op(op)
+                    }
+                    LockStep::Released => {
+                        self.sh.oracle.borrow_mut().exit(self.locks[li].edge(), self.client);
+                        if li + 1 < self.locks.len() {
+                            self.phase = Phase::Release { ni, li: li + 1 };
+                            match self.locks[li + 1].release() {
+                                LockStep::Do(op) => AppAction::Op(op),
+                                _ => unreachable!(),
+                            }
+                        } else {
+                            self.after_release(ni, now)
+                        }
+                    }
+                    LockStep::Acquired => unreachable!(),
+                }
+            }
+            Phase::Commit { ci } => {
+                if ci + 1 < self.pending.len() {
+                    let (v, c) = self.pending[ci + 1];
+                    let key = self.ckey(v);
+                    self.phase = Phase::Commit { ci: ci + 1 };
+                    AppAction::Op(AppOp::Put(key, Value::Int(c)))
+                } else {
+                    self.finish_task(now)
+                }
+            }
+            Phase::AbortRelease { li } => {
+                let out = outcome.expect("abort release outcome");
+                match self.locks[li].on_result(&out) {
+                    LockStep::Do(op) => {
+                        self.phase = Phase::AbortRelease { li };
+                        AppAction::Op(op)
+                    }
+                    LockStep::Released | LockStep::Acquired => {
+                        // find the next engaged lock
+                        let next = self
+                            .locks
+                            .iter()
+                            .enumerate()
+                            .skip(li + 1)
+                            .find(|(_, l)| l.engaged())
+                            .map(|(i, _)| i);
+                        match next {
+                            Some(i) => {
+                                self.phase = Phase::AbortRelease { li: i };
+                                match self.locks[i].release() {
+                                    LockStep::Do(op) => AppAction::Op(op),
+                                    _ => unreachable!(),
+                                }
+                            }
+                            None => self.start_task(now),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_violation(&mut self, _env: &mut AppEnv, _t_violate_ms: Millis) -> bool {
+        if matches!(
+            self.phase,
+            Phase::Done | Phase::Init | Phase::PrepRead { .. } | Phase::PrepWrite { .. }
+        ) {
+            // prep is lock-free and Done has nothing to abort
+            return false;
+        }
+        // abort & restart the current task (deferred updates ⇒ no server
+        // rollback needed)
+        self.restart_pending = true;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::peterson::MeOracle;
+    use crate::metrics::throughput::MetricsHub;
+    use crate::util::rng::Rng;
+
+    fn setup(n_clients: usize) -> (ColoringShared, Rc<RefCell<Interner>>) {
+        let mut rng = Rng::new(11);
+        let graph = Rc::new(Graph::powerlaw_cluster(60, 3, 0.3, &mut rng));
+        let interner = Interner::new();
+        let sh = ColoringShared::new(
+            graph,
+            n_clients,
+            interner.clone(),
+            MeOracle::new(),
+            MetricsHub::new(1, n_clients),
+            5,
+            false,
+        );
+        (sh, interner)
+    }
+
+    /// Pure driver: run the app against an in-memory map (no sim), feeding
+    /// perfect outcomes. Exercises the whole state machine.
+    fn drive_to_completion(app: &mut ColoringApp, store: &mut HashMap<KeyId, Value>) -> usize {
+        let mut rng = Rng::new(1);
+        let mut env = AppEnv { now: 0, client_idx: app.client, rng: &mut rng };
+        let mut last: Option<(AppOp, OpOutcome)> = None;
+        let mut steps = 0;
+        loop {
+            steps += 1;
+            assert!(steps < 1_000_000, "app did not terminate");
+            match app.next(&mut env, last.take()) {
+                AppAction::Op(op) => {
+                    let outcome = match &op {
+                        AppOp::Get(k) => OpOutcome::GetOk(match store.get(k) {
+                            Some(v) => vec![crate::store::value::Versioned::new(
+                                crate::clock::vc::VectorClock::new().incremented(0),
+                                v.clone(),
+                            )],
+                            None => vec![],
+                        }),
+                        AppOp::Put(k, v) => {
+                            store.insert(*k, v.clone());
+                            OpOutcome::PutOk
+                        }
+                    };
+                    last = Some((op, outcome));
+                }
+                AppAction::Sleep(_) => {
+                    last = None;
+                }
+                AppAction::Done => return steps,
+            }
+        }
+    }
+
+    #[test]
+    fn single_client_colors_whole_graph_properly() {
+        let (sh, interner) = setup(1);
+        let graph = sh.graph.clone();
+        let mut app = ColoringApp::new(sh, 0);
+        let mut store: HashMap<KeyId, Value> = HashMap::new();
+        drive_to_completion(&mut app, &mut store);
+        // every node colored, and it is a proper coloring
+        let mut colors = vec![-1i64; graph.n];
+        for v in 0..graph.n as u32 {
+            let key = color_key(&mut interner.borrow_mut(), v);
+            colors[v as usize] = store.get(&key).and_then(|x| x.as_int()).expect("colored");
+        }
+        for (a, b) in graph.edges() {
+            assert_ne!(colors[a as usize], colors[b as usize], "edge ({a},{b}) conflict");
+        }
+    }
+
+    #[test]
+    fn two_sequential_clients_color_properly() {
+        // run client 0 to completion, then client 1 (no concurrency ⇒ the
+        // result must be a proper coloring)
+        let (sh, interner) = setup(2);
+        let graph = sh.graph.clone();
+        let mut store: HashMap<KeyId, Value> = HashMap::new();
+        let mut app0 = ColoringApp::new(sh.clone(), 0);
+        let mut app1 = ColoringApp::new(sh, 1);
+        drive_to_completion(&mut app0, &mut store);
+        drive_to_completion(&mut app1, &mut store);
+        for (a, b) in graph.edges() {
+            let ka = color_key(&mut interner.borrow_mut(), a);
+            let kb = color_key(&mut interner.borrow_mut(), b);
+            let ca = store.get(&ka).and_then(|x| x.as_int());
+            let cb = store.get(&kb).and_then(|x| x.as_int());
+            assert!(ca.is_some() && cb.is_some(), "({a},{b}) uncolored");
+            assert_ne!(ca, cb, "edge ({a},{b}) conflict");
+        }
+    }
+
+    #[test]
+    fn hi_degree_nodes_precolored_without_locks() {
+        let (sh, _) = setup(1);
+        let app = ColoringApp::new(sh.clone(), 0);
+        // every hi-degree node is in prep, not in tasks
+        for v in &app.prep {
+            assert!(sh.hi_deg[*v as usize]);
+        }
+        for t in &app.tasks {
+            for v in t {
+                assert!(!sh.hi_deg[*v as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn locks_sorted_for_deadlock_freedom() {
+        let (sh, _) = setup(4);
+        let app = ColoringApp::new(sh, 0);
+        for task in &app.tasks {
+            for &v in task {
+                let locks = app.locks_for(v);
+                let edges: Vec<(u32, u32)> = locks.iter().map(|l| l.edge()).collect();
+                let mut sorted = edges.clone();
+                sorted.sort_unstable();
+                assert_eq!(edges, sorted);
+            }
+        }
+    }
+
+    #[test]
+    fn mex_picks_smallest_free() {
+        assert_eq!(mex(&[]), 0);
+        assert_eq!(mex(&[0, 1, 2]), 3);
+        assert_eq!(mex(&[1, 2]), 0);
+        assert_eq!(mex(&[0, 2]), 1);
+    }
+
+    #[test]
+    fn violation_triggers_task_restart() {
+        let (sh, _) = setup(2);
+        let metrics = sh.metrics.clone();
+        let mut app = ColoringApp::new(sh, 0);
+        let mut store: HashMap<KeyId, Value> = HashMap::new();
+        let mut rng = Rng::new(1);
+        // step a few ops into the first task
+        let mut env = AppEnv { now: 0, client_idx: 0, rng: &mut rng };
+        let mut last = None;
+        // step until we are inside a regular (locked) task, past the
+        // lock-free prep phase where violations are ignored
+        while !matches!(
+            app.phase,
+            Phase::Lock { .. } | Phase::ReadNbr { .. } | Phase::Release { .. } | Phase::Commit { .. }
+        ) {
+            match app.next(&mut env, last.take()) {
+                AppAction::Op(op) => {
+                    let outcome = match &op {
+                        AppOp::Get(k) => OpOutcome::GetOk(match store.get(k) {
+                            Some(v) => vec![crate::store::value::Versioned::new(
+                                crate::clock::vc::VectorClock::new().incremented(0),
+                                v.clone(),
+                            )],
+                            None => vec![],
+                        }),
+                        AppOp::Put(k, v) => {
+                            store.insert(*k, v.clone());
+                            OpOutcome::PutOk
+                        }
+                    };
+                    last = Some((op, outcome));
+                }
+                AppAction::Sleep(_) => last = None,
+                AppAction::Done => break,
+            }
+        }
+        assert!(app.on_violation(&mut env, 123), "mid-task violation aborts");
+        // restart path: drive to completion still works
+        drive_to_completion(&mut app, &mut store);
+        assert!(metrics.borrow().tasks_aborted >= 1);
+        assert!(app.tasks_done > 0);
+    }
+}

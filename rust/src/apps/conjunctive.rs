@@ -1,0 +1,258 @@
+//! The *Conjunctive* application (§VI-A): distributed-debugging stress
+//! test. The monitors detect `¬P ≡ P_1 ∧ P_2 ∧ … ∧ P_m` where local
+//! predicate `P_i` (variable `x_k_i = 1`, owned by client `i`) becomes
+//! true with probability β (the paper uses β = 1%, from MapReduce time
+//! breakdowns). Because the violation rate is controllable, this workload
+//! measures detection latency with statistical weight (Table III) and
+//! stresses the monitors.
+//!
+//! `put_pct` mixes in extra GETs exactly like Weather Monitoring.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, OpOutcome};
+use crate::predicate::spec::{Clause, Conjunct, Literal, PredId, PredKind, PredicateSpec, Registry};
+use crate::store::value::{Interner, KeyId, Value};
+
+#[derive(Clone)]
+pub struct ConjunctiveShared {
+    pub interner: Rc<RefCell<Interner>>,
+    /// number of conjunctive predicates monitored simultaneously
+    pub n_preds: usize,
+    /// conjuncts per predicate (the paper's P_1 ∧ … ∧ P_10 ⇒ 10)
+    pub n_conjuncts: usize,
+    pub beta: f64,
+    pub put_pct: f64,
+    /// key ids: vars[k][i] = x_k_i
+    pub vars: Rc<Vec<Vec<KeyId>>>,
+    pub pred_ids: Rc<Vec<PredId>>,
+}
+
+impl ConjunctiveShared {
+    /// Build the predicates `conj_k : x_k_0 = 1 ∧ … ∧ x_k_{m-1} = 1` and
+    /// register them (monitors and local detectors share the registry).
+    pub fn setup(
+        registry: &Rc<RefCell<Registry>>,
+        interner: Rc<RefCell<Interner>>,
+        n_preds: usize,
+        n_conjuncts: usize,
+        beta: f64,
+        put_pct: f64,
+    ) -> Self {
+        assert!(n_preds >= 1 && n_conjuncts >= 1);
+        let mut vars = Vec::with_capacity(n_preds);
+        let mut pred_ids = Vec::with_capacity(n_preds);
+        for k in 0..n_preds {
+            let kvars: Vec<KeyId> = (0..n_conjuncts)
+                .map(|i| interner.borrow_mut().intern(&format!("x_{k}_{i}")))
+                .collect();
+            let clause = Clause {
+                conjuncts: kvars
+                    .iter()
+                    .map(|&v| Conjunct {
+                        literals: vec![Literal { var: v, value: Value::Int(1) }],
+                    })
+                    .collect(),
+            };
+            let spec = PredicateSpec {
+                id: PredId(u32::MAX),
+                name: format!("conj_{k}"),
+                kind: PredKind::Linear,
+                clauses: vec![clause],
+            };
+            pred_ids.push(registry.borrow_mut().add(spec));
+            vars.push(kvars);
+        }
+        Self {
+            interner,
+            n_preds,
+            n_conjuncts,
+            beta,
+            put_pct,
+            vars: Rc::new(vars),
+            pred_ids: Rc::new(pred_ids),
+        }
+    }
+
+    pub fn extra_gets(&self) -> usize {
+        ((1.0 - self.put_pct) / self.put_pct).round() as usize
+    }
+}
+
+#[derive(Debug)]
+enum Phase {
+    Flip,
+    Extra { j: usize },
+}
+
+pub struct ConjunctiveApp {
+    sh: ConjunctiveShared,
+    client: u32,
+    /// round-robin predicate cursor
+    k: usize,
+    phase: Phase,
+    /// stop after this many flips (0 = forever)
+    pub max_flips: u64,
+    pub flips: u64,
+    pub trues_set: u64,
+}
+
+impl ConjunctiveApp {
+    pub fn new(sh: ConjunctiveShared, client: u32, max_flips: u64) -> Self {
+        Self { sh, client, k: 0, phase: Phase::Flip, max_flips, flips: 0, trues_set: 0 }
+    }
+
+    /// The conjunct variable this client drives for predicate `k`.
+    fn my_var(&self, k: usize) -> KeyId {
+        let i = self.client as usize % self.sh.n_conjuncts;
+        self.sh.vars[k][i]
+    }
+
+    fn issue_flip(&mut self, env: &mut AppEnv) -> AppAction {
+        if self.max_flips > 0 && self.flips >= self.max_flips {
+            return AppAction::Done;
+        }
+        let truth = env.rng.chance(self.sh.beta);
+        if truth {
+            self.trues_set += 1;
+        }
+        self.flips += 1;
+        let var = self.my_var(self.k);
+        self.k = (self.k + 1) % self.sh.n_preds;
+        AppAction::Op(AppOp::Put(var, Value::Int(truth as i64)))
+    }
+
+    fn issue_extra_get(&mut self, env: &mut AppEnv) -> AppAction {
+        let k = env.rng.below(self.sh.n_preds as u64) as usize;
+        let i = env.rng.below(self.sh.n_conjuncts as u64) as usize;
+        AppAction::Op(AppOp::Get(self.sh.vars[k][i]))
+    }
+}
+
+impl AppLogic for ConjunctiveApp {
+    fn name(&self) -> &'static str {
+        "conjunctive"
+    }
+
+    fn next(&mut self, env: &mut AppEnv, _last: Option<(AppOp, OpOutcome)>) -> AppAction {
+        match self.phase {
+            Phase::Flip => {
+                let extras = self.sh.extra_gets();
+                self.phase = if extras > 0 { Phase::Extra { j: 0 } } else { Phase::Flip };
+                self.issue_flip(env)
+            }
+            Phase::Extra { j } => {
+                let extras = self.sh.extra_gets();
+                self.phase = if j + 1 < extras { Phase::Extra { j: j + 1 } } else { Phase::Flip };
+                self.issue_extra_get(env)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(n_preds: usize, m: usize, beta: f64, put_pct: f64) -> (ConjunctiveShared, Rc<RefCell<Registry>>) {
+        let registry = Rc::new(RefCell::new(Registry::new()));
+        let sh = ConjunctiveShared::setup(
+            &registry,
+            Interner::new(),
+            n_preds,
+            m,
+            beta,
+            put_pct,
+        );
+        (sh, registry)
+    }
+
+    #[test]
+    fn predicates_registered_with_m_conjuncts() {
+        let (sh, registry) = setup(4, 10, 0.01, 0.5);
+        assert_eq!(registry.borrow().len(), 4);
+        for &id in sh.pred_ids.iter() {
+            let reg = registry.borrow();
+            let spec = reg.get(id);
+            assert_eq!(spec.kind, PredKind::Linear);
+            assert_eq!(spec.clauses[0].conjuncts.len(), 10);
+        }
+        // variable indexing: flipping x_0_0 affects only conj_0 conjunct 0
+        let reg = registry.borrow();
+        let hits = reg.affected(sh.vars[0][0]).unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, sh.pred_ids[0]);
+        assert_eq!(hits[0].2, 0);
+    }
+
+    #[test]
+    fn op_mix_matches_put_pct() {
+        let (sh, _) = setup(3, 4, 0.5, 0.25);
+        let mut app = ConjunctiveApp::new(sh, 1, 40);
+        let mut rng = Rng::new(3);
+        let (mut gets, mut puts) = (0, 0);
+        let mut last = None;
+        loop {
+            let mut env = AppEnv { now: 0, client_idx: 1, rng: &mut rng };
+            match app.next(&mut env, last.take()) {
+                AppAction::Op(op) => {
+                    match &op {
+                        AppOp::Get(_) => gets += 1,
+                        AppOp::Put(..) => puts += 1,
+                    }
+                    last = Some((op, OpOutcome::PutOk));
+                }
+                AppAction::Sleep(_) => last = None,
+                AppAction::Done => break,
+            }
+        }
+        assert_eq!(puts, 40);
+        assert_eq!(gets, 120, "put_pct=0.25 ⇒ 3 extra GETs per flip");
+    }
+
+    #[test]
+    fn beta_controls_true_rate() {
+        let (sh, _) = setup(2, 4, 0.2, 1.0);
+        let mut app = ConjunctiveApp::new(sh, 0, 5_000);
+        let mut rng = Rng::new(9);
+        let mut last = None;
+        loop {
+            let mut env = AppEnv { now: 0, client_idx: 0, rng: &mut rng };
+            match app.next(&mut env, last.take()) {
+                AppAction::Op(op) => last = Some((op, OpOutcome::PutOk)),
+                AppAction::Sleep(_) => last = None,
+                AppAction::Done => break,
+            }
+        }
+        let rate = app.trues_set as f64 / app.flips as f64;
+        assert!((rate - 0.2).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn clients_round_robin_preds() {
+        let (sh, _) = setup(3, 4, 1.0, 1.0);
+        let mut app = ConjunctiveApp::new(sh.clone(), 2, 6);
+        let mut rng = Rng::new(1);
+        let mut keys = Vec::new();
+        let mut last = None;
+        loop {
+            let mut env = AppEnv { now: 0, client_idx: 2, rng: &mut rng };
+            match app.next(&mut env, last.take()) {
+                AppAction::Op(op) => {
+                    keys.push(op.key());
+                    last = Some((op, OpOutcome::PutOk));
+                }
+                AppAction::Sleep(_) => last = None,
+                AppAction::Done => break,
+            }
+        }
+        // client 2 drives conjunct 2 of each predicate, cycling k=0,1,2
+        assert_eq!(keys.len(), 6);
+        assert_eq!(keys[0], sh.vars[0][2]);
+        assert_eq!(keys[1], sh.vars[1][2]);
+        assert_eq!(keys[2], sh.vars[2][2]);
+        assert_eq!(keys[3], sh.vars[0][2]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Graph substrate for the paper's applications.
+//!
+//! * **Power-law social graph** (Social Media Analysis): Holme–Kim
+//!   preferential attachment with triad closure — the model behind
+//!   networkx's `powerlaw_cluster_graph`, which the paper uses ("generated
+//!   by the tool networkx that simulates the power-law degree distribution
+//!   and the clustering characteristics of social networks"; 50 000 nodes,
+//!   ~150 000 edges ⇒ m = 3).
+//! * **Planar grid** (Weather Monitoring): W×H lattice, 4-neighborhood.
+//! * **High-degree preprocessing** (§VI-A): the paper's threshold
+//!   `q ≳ (11·|V|/3)^{1/2.5}` — nodes with degree > q are pre-colored so
+//!   the distributed phase needs ≤ q extra colors and far fewer locks.
+//! * **Partitioning**: contiguous chunks of nodes per client; only edges
+//!   crossing clients need mutual-exclusion predicates.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub n: usize,
+    pub adj: Vec<Vec<u32>>,
+}
+
+impl Graph {
+    pub fn empty(n: usize) -> Self {
+        Self { n, adj: vec![Vec::new(); n] }
+    }
+
+    pub fn add_edge(&mut self, a: u32, b: u32) {
+        if a == b || self.adj[a as usize].contains(&b) {
+            return;
+        }
+        self.adj[a as usize].push(b);
+        self.adj[b as usize].push(a);
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        self.adj[v as usize].len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// Undirected edge list with a < b.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.adj.iter().enumerate().flat_map(|(a, nbrs)| {
+            nbrs.iter()
+                .filter(move |&&b| (a as u32) < b)
+                .map(move |&b| (a as u32, b))
+        })
+    }
+
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.adj[v as usize]
+    }
+
+    /// Holme–Kim power-law graph with clustering: `m` edges per new node,
+    /// triad-closure probability `p`.
+    pub fn powerlaw_cluster(n: usize, m: usize, p: f64, rng: &mut Rng) -> Self {
+        assert!(n > m && m >= 1);
+        let mut g = Self::empty(n);
+        // repeated-nodes list: preferential attachment by degree
+        let mut repeated: Vec<u32> = Vec::with_capacity(2 * n * m);
+        // seed clique of m+1 nodes
+        for a in 0..=(m as u32) {
+            for b in (a + 1)..=(m as u32) {
+                g.add_edge(a, b);
+                repeated.push(a);
+                repeated.push(b);
+            }
+        }
+        for v in (m as u32 + 1)..(n as u32) {
+            let mut targets: Vec<u32> = Vec::with_capacity(m);
+            let mut last_target: Option<u32> = None;
+            while targets.len() < m {
+                let candidate = if let (Some(lt), true) = (last_target, rng.chance(p)) {
+                    // triad closure: neighbor of the previous target
+                    let nbrs = &g.adj[lt as usize];
+                    if nbrs.is_empty() {
+                        *rng.choose(&repeated)
+                    } else {
+                        *rng.choose(nbrs)
+                    }
+                } else {
+                    *rng.choose(&repeated)
+                };
+                if candidate != v && !targets.contains(&candidate) {
+                    last_target = Some(candidate);
+                    targets.push(candidate);
+                }
+            }
+            for t in targets {
+                g.add_edge(v, t);
+                repeated.push(v);
+                repeated.push(t);
+            }
+        }
+        g
+    }
+
+    /// W×H planar grid (weather stations), 4-neighborhood.
+    pub fn grid(w: usize, h: usize) -> Self {
+        let mut g = Self::empty(w * h);
+        for y in 0..h {
+            for x in 0..w {
+                let v = (y * w + x) as u32;
+                if x + 1 < w {
+                    g.add_edge(v, v + 1);
+                }
+                if y + 1 < h {
+                    g.add_edge(v, v + w as u32);
+                }
+            }
+        }
+        g
+    }
+
+    /// The paper's high-degree threshold: `q ≳ (11·|V|/3)^{1/2.5}`.
+    pub fn high_degree_threshold(&self) -> usize {
+        ((11.0 * self.n as f64 / 3.0).powf(1.0 / 2.5)).ceil() as usize
+    }
+
+    /// Nodes with degree > q (to be pre-colored without locks).
+    pub fn high_degree_nodes(&self) -> Vec<u32> {
+        let q = self.high_degree_threshold();
+        (0..self.n as u32).filter(|&v| self.degree(v) > q).collect()
+    }
+}
+
+/// Contiguous partition of nodes over `n_clients` clients; returns
+/// `owner[v] = client index`.
+pub fn partition_nodes(n: usize, n_clients: usize) -> Vec<u32> {
+    assert!(n_clients >= 1);
+    let base = n / n_clients;
+    let extra = n % n_clients;
+    let mut owner = Vec::with_capacity(n);
+    for c in 0..n_clients {
+        let len = base + usize::from(c < extra);
+        owner.extend(std::iter::repeat(c as u32).take(len));
+    }
+    owner
+}
+
+/// Edges whose endpoints belong to different clients (these need the
+/// Peterson mutual-exclusion predicate; same-client edges do not — §I).
+pub fn cross_client_edges(g: &Graph, owner: &[u32]) -> Vec<(u32, u32)> {
+    g.edges()
+        .filter(|&(a, b)| owner[a as usize] != owner[b as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn powerlaw_basic_shape() {
+        let mut rng = Rng::new(7);
+        let g = Graph::powerlaw_cluster(2_000, 3, 0.3, &mut rng);
+        assert_eq!(g.n, 2_000);
+        // m edges per node beyond the seed clique → ~3n edges
+        let e = g.n_edges();
+        assert!(e >= 3 * (2_000 - 4) && e <= 3 * 2_000 + 10, "edges={e}");
+        // heavy tail: max degree far above the mean (~6)
+        let max_deg = (0..g.n as u32).map(|v| g.degree(v)).max().unwrap();
+        assert!(max_deg > 40, "max degree {max_deg} not heavy-tailed");
+        // no self loops or duplicates
+        for v in 0..g.n as u32 {
+            let mut nbrs = g.neighbors(v).to_vec();
+            assert!(!nbrs.contains(&v));
+            nbrs.sort_unstable();
+            nbrs.dedup();
+            assert_eq!(nbrs.len(), g.degree(v));
+        }
+    }
+
+    #[test]
+    fn paper_scale_threshold() {
+        // |V| = 50 000 → q ≈ (11*50000/3)^0.4 ≈ 128; the paper reports the
+        // preprocessed graph needs ≤ 2q ≈ 255 colors.
+        let g = Graph::empty(50_000);
+        let q = g.high_degree_threshold();
+        assert!((120..140).contains(&q), "q={q}");
+    }
+
+    #[test]
+    fn high_degree_nodes_are_few() {
+        let mut rng = Rng::new(3);
+        let g = Graph::powerlaw_cluster(5_000, 3, 0.3, &mut rng);
+        let q = g.high_degree_threshold();
+        let hi = g.high_degree_nodes();
+        // the threshold is chosen so that |{v : deg v > q}| ≲ q
+        assert!(hi.len() <= q * 2, "{} high-degree nodes vs q={q}", hi.len());
+        for v in &hi {
+            assert!(g.degree(*v) > q);
+        }
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = Graph::grid(4, 3);
+        assert_eq!(g.n, 12);
+        assert_eq!(g.n_edges(), 17); // h*(w-1) + w*(h-1) = 9 + 8
+        assert_eq!(g.degree(0), 2); // corner
+        assert_eq!(g.degree(5), 4); // interior
+    }
+
+    #[test]
+    fn partition_covers_all() {
+        let owner = partition_nodes(10, 3);
+        assert_eq!(owner.len(), 10);
+        assert_eq!(owner.iter().filter(|&&c| c == 0).count(), 4);
+        assert_eq!(owner.iter().filter(|&&c| c == 1).count(), 3);
+        assert_eq!(owner.iter().filter(|&&c| c == 2).count(), 3);
+    }
+
+    #[test]
+    fn cross_client_edges_only() {
+        let g = Graph::grid(4, 1); // path 0-1-2-3
+        let owner = vec![0, 0, 1, 1];
+        let cross = cross_client_edges(&g, &owner);
+        assert_eq!(cross, vec![(1, 2)]);
+    }
+}

@@ -1,0 +1,8 @@
+//! The paper's three case-study applications (§VI-A) plus the graph
+//! substrate and the Peterson edge-lock protocol they share.
+
+pub mod coloring;
+pub mod conjunctive;
+pub mod graph;
+pub mod peterson;
+pub mod weather;

@@ -1,0 +1,349 @@
+//! Peterson's 2-process mutual exclusion over the key-value store, one
+//! lock per graph edge (§I, §VI-A). Correct under sequential consistency
+//! [Brzezinski & Wawrzyniak]; under eventual consistency it can be
+//! violated — which is exactly what the monitors watch for via the
+//! inferred `me_a_b` predicates.
+//!
+//! The lock is a sub-state-machine the graph apps drive through the
+//! one-op-at-a-time `AppLogic` interface:
+//!
+//! ```text
+//! acquire:  PUT flag_me=true → PUT turn=peer →
+//!           spin { GET flag_peer; GET turn;
+//!                  enter CS iff ¬flag_peer ∨ turn == me }
+//! release:  PUT flag_me=false
+//! ```
+//!
+//! A shared [`MeOracle`] records *actual* critical-section occupancy in
+//! virtual time — the ground truth against which detected violations are
+//! compared (the monitors see replica-level inconsistency; the oracle sees
+//! true mutual-exclusion breaches).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::client::app::{AppOp, OpOutcome};
+use crate::predicate::infer;
+use crate::sim::Time;
+use crate::store::value::{resolve, Interner, KeyId, Value};
+
+/// What the embedding app should do next with the lock.
+#[derive(Debug, Clone)]
+pub enum LockStep {
+    /// issue this store op and feed the outcome back via `on_result`
+    Do(AppOp),
+    /// the critical section is ours
+    Acquired,
+    /// the release completed
+    Released,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum S {
+    Idle,
+    PuttingFlag,
+    PuttingTurn,
+    GettingPeerFlag,
+    GettingTurn { peer_flag: bool },
+    Held,
+    Releasing,
+}
+
+#[derive(Debug, Clone)]
+pub struct PetersonLock {
+    /// edge (a < b)
+    pub a: u32,
+    pub b: u32,
+    /// which endpoint we are
+    pub me: u32,
+    pub peer: u32,
+    flag_me: KeyId,
+    flag_peer: KeyId,
+    turn: KeyId,
+    state: S,
+    /// completed GET-pair spins while waiting
+    pub spins: u32,
+}
+
+impl PetersonLock {
+    pub fn new(a: u32, b: u32, me: u32, interner: &mut Interner) -> Self {
+        assert!(a < b && (me == a || me == b));
+        let peer = if me == a { b } else { a };
+        Self {
+            a,
+            b,
+            me,
+            peer,
+            flag_me: interner.intern(&infer::flag_name(a as u64, b as u64, me as u64)),
+            flag_peer: interner.intern(&infer::flag_name(a as u64, b as u64, peer as u64)),
+            turn: interner.intern(&infer::turn_name(a as u64, b as u64)),
+            state: S::Idle,
+            spins: 0,
+        }
+    }
+
+    pub fn edge(&self) -> (u32, u32) {
+        (self.a, self.b)
+    }
+
+    pub fn held(&self) -> bool {
+        self.state == S::Held
+    }
+
+    /// Has the acquire protocol started (our flag may be set in the store)?
+    pub fn engaged(&self) -> bool {
+        !matches!(self.state, S::Idle)
+    }
+
+    /// Begin acquisition.
+    pub fn acquire(&mut self) -> LockStep {
+        assert_eq!(self.state, S::Idle, "acquire from Idle only");
+        self.state = S::PuttingFlag;
+        self.spins = 0;
+        LockStep::Do(AppOp::Put(self.flag_me, Value::Bool(true)))
+    }
+
+    /// Begin release (valid when held or mid-acquire after an abort).
+    pub fn release(&mut self) -> LockStep {
+        self.state = S::Releasing;
+        LockStep::Do(AppOp::Put(self.flag_me, Value::Bool(false)))
+    }
+
+    /// Feed back the outcome of the op we last asked for.
+    pub fn on_result(&mut self, outcome: &OpOutcome) -> LockStep {
+        if matches!(outcome, OpOutcome::Failed) {
+            // quorum miss: retry the same protocol step
+            return LockStep::Do(self.current_op());
+        }
+        match self.state {
+            S::PuttingFlag => {
+                self.state = S::PuttingTurn;
+                LockStep::Do(AppOp::Put(self.turn, Value::Int(self.peer as i64)))
+            }
+            S::PuttingTurn => {
+                self.state = S::GettingPeerFlag;
+                LockStep::Do(AppOp::Get(self.flag_peer))
+            }
+            S::GettingPeerFlag => {
+                let peer_flag = match outcome {
+                    OpOutcome::GetOk(sibs) => resolve(sibs)
+                        .and_then(|v| v.value.as_bool())
+                        .unwrap_or(false),
+                    _ => false,
+                };
+                self.state = S::GettingTurn { peer_flag };
+                LockStep::Do(AppOp::Get(self.turn))
+            }
+            S::GettingTurn { peer_flag } => {
+                let turn = match outcome {
+                    OpOutcome::GetOk(sibs) => resolve(sibs).and_then(|v| v.value.as_int()),
+                    _ => None,
+                };
+                // enter iff ¬flag_peer ∨ turn == me
+                if !peer_flag || turn == Some(self.me as i64) {
+                    self.state = S::Held;
+                    LockStep::Acquired
+                } else {
+                    self.spins += 1;
+                    self.state = S::GettingPeerFlag;
+                    LockStep::Do(AppOp::Get(self.flag_peer))
+                }
+            }
+            S::Releasing => {
+                self.state = S::Idle;
+                LockStep::Released
+            }
+            S::Idle | S::Held => unreachable!("no op outstanding in {:?}", self.state),
+        }
+    }
+
+    fn current_op(&self) -> AppOp {
+        match self.state {
+            S::PuttingFlag => AppOp::Put(self.flag_me, Value::Bool(true)),
+            S::PuttingTurn => AppOp::Put(self.turn, Value::Int(self.peer as i64)),
+            S::GettingPeerFlag => AppOp::Get(self.flag_peer),
+            S::GettingTurn { .. } => AppOp::Get(self.turn),
+            S::Releasing => AppOp::Put(self.flag_me, Value::Bool(false)),
+            S::Idle | S::Held => unreachable!(),
+        }
+    }
+}
+
+/// Ground-truth critical-section occupancy per edge.
+#[derive(Debug, Clone)]
+pub struct ActualViolation {
+    pub edge: (u32, u32),
+    pub clients: (u32, u32),
+    pub at: Time,
+}
+
+#[derive(Debug, Default)]
+pub struct MeOracle {
+    /// edge → (client, since) currently inside the CS
+    inside: HashMap<(u32, u32), Vec<(u32, Time)>>,
+    pub actual_violations: Vec<ActualViolation>,
+    pub entries: u64,
+}
+
+pub type MeOracleRef = Rc<RefCell<MeOracle>>;
+
+impl MeOracle {
+    pub fn new() -> MeOracleRef {
+        Rc::new(RefCell::new(Self::default()))
+    }
+
+    pub fn enter(&mut self, edge: (u32, u32), client: u32, now: Time) {
+        let occ = self.inside.entry(edge).or_default();
+        if let Some(&(other, _)) = occ.iter().find(|(c, _)| *c != client) {
+            self.actual_violations.push(ActualViolation { edge, clients: (other, client), at: now });
+        }
+        occ.push((client, now));
+        self.entries += 1;
+    }
+
+    pub fn exit(&mut self, edge: (u32, u32), client: u32) {
+        if let Some(occ) = self.inside.get_mut(&edge) {
+            if let Some(pos) = occ.iter().position(|(c, _)| *c == client) {
+                occ.remove(pos);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drive(lock: &mut PetersonLock, outcomes: &mut dyn FnMut(&AppOp) -> OpOutcome) -> u32 {
+        let mut step = lock.acquire();
+        let mut ops = 0;
+        loop {
+            match step {
+                LockStep::Do(op) => {
+                    ops += 1;
+                    assert!(ops < 100, "livelock in test driver");
+                    let out = outcomes(&op);
+                    step = lock.on_result(&out);
+                }
+                LockStep::Acquired => return ops,
+                LockStep::Released => panic!("unexpected release"),
+            }
+        }
+    }
+
+    fn get_ok(v: Value) -> OpOutcome {
+        OpOutcome::GetOk(vec![crate::store::value::Versioned::new(
+            crate::clock::vc::VectorClock::new().incremented(1),
+            v,
+        )])
+    }
+
+    #[test]
+    fn acquires_when_peer_absent() {
+        let interner = Interner::new();
+        let mut lock = PetersonLock::new(1, 2, 1, &mut interner.borrow_mut());
+        let ops = drive(&mut lock, &mut |op| match op {
+            AppOp::Put(..) => OpOutcome::PutOk,
+            AppOp::Get(_) => OpOutcome::GetOk(vec![]), // nothing stored
+        });
+        // flag, turn, get flag, get turn
+        assert_eq!(ops, 4);
+        assert!(lock.held());
+    }
+
+    #[test]
+    fn spins_while_peer_holds_turn() {
+        let interner = Interner::new();
+        let mut lock = PetersonLock::new(1, 2, 1, &mut interner.borrow_mut());
+        let mut reads = 0;
+        let flag_peer = lock.flag_peer;
+        let turn = lock.turn;
+        let ops = drive(&mut lock, &mut |op| match op {
+            AppOp::Put(..) => OpOutcome::PutOk,
+            AppOp::Get(k) if *k == flag_peer => get_ok(Value::Bool(true)),
+            AppOp::Get(k) if *k == turn => {
+                reads += 1;
+                if reads < 3 {
+                    get_ok(Value::Int(2)) // turn == peer → wait
+                } else {
+                    get_ok(Value::Int(1)) // peer yields
+                }
+            }
+            _ => unreachable!(),
+        });
+        assert!(lock.held());
+        assert_eq!(lock.spins, 2);
+        assert!(ops > 4);
+    }
+
+    #[test]
+    fn enters_on_peer_flag_false_even_if_turn_peer() {
+        let interner = Interner::new();
+        let mut lock = PetersonLock::new(3, 9, 9, &mut interner.borrow_mut());
+        let flag_peer = lock.flag_peer;
+        drive(&mut lock, &mut |op| match op {
+            AppOp::Put(..) => OpOutcome::PutOk,
+            AppOp::Get(k) if *k == flag_peer => get_ok(Value::Bool(false)),
+            AppOp::Get(_) => get_ok(Value::Int(3)), // turn == peer, ignored
+        });
+        assert!(lock.held());
+    }
+
+    #[test]
+    fn release_cycle() {
+        let interner = Interner::new();
+        let mut lock = PetersonLock::new(1, 2, 2, &mut interner.borrow_mut());
+        drive(&mut lock, &mut |op| match op {
+            AppOp::Put(..) => OpOutcome::PutOk,
+            AppOp::Get(_) => OpOutcome::GetOk(vec![]),
+        });
+        let LockStep::Do(op) = lock.release() else { panic!() };
+        assert!(matches!(op, AppOp::Put(_, Value::Bool(false))));
+        assert!(matches!(lock.on_result(&OpOutcome::PutOk), LockStep::Released));
+        assert!(!lock.engaged());
+        // reusable
+        assert!(matches!(lock.acquire(), LockStep::Do(_)));
+    }
+
+    #[test]
+    fn failed_ops_are_retried() {
+        let interner = Interner::new();
+        let mut lock = PetersonLock::new(1, 2, 1, &mut interner.borrow_mut());
+        let mut failed_once = false;
+        let ops = drive(&mut lock, &mut |op| match op {
+            AppOp::Put(..) => {
+                if !failed_once {
+                    failed_once = true;
+                    OpOutcome::Failed
+                } else {
+                    OpOutcome::PutOk
+                }
+            }
+            AppOp::Get(_) => OpOutcome::GetOk(vec![]),
+        });
+        assert_eq!(ops, 5, "one retry added");
+        assert!(lock.held());
+    }
+
+    #[test]
+    fn oracle_detects_overlap() {
+        let oracle = MeOracle::new();
+        {
+            let mut o = oracle.borrow_mut();
+            o.enter((1, 2), 10, 100);
+            o.enter((1, 2), 11, 150); // overlap!
+            o.exit((1, 2), 10);
+            o.exit((1, 2), 11);
+            o.enter((1, 2), 10, 300); // clean re-entry
+            o.exit((1, 2), 10);
+            // same client re-entering is not a violation
+            o.enter((3, 4), 10, 100);
+            o.enter((3, 4), 10, 110);
+        }
+        let o = oracle.borrow();
+        assert_eq!(o.actual_violations.len(), 1);
+        assert_eq!(o.actual_violations[0].clients, (10, 11));
+        assert_eq!(o.actual_violations[0].at, 150);
+    }
+}

@@ -1,0 +1,453 @@
+//! *Weather Monitoring* (§VI-A): a planar grid of stations; each client
+//! owns a horizontal strip and continuously updates its nodes from their
+//! neighbors' states. The GET/PUT ratio is tunable (`put_pct` — Fig. 12
+//! runs 25% and 50%): a node update performs `round((1-p)/p)` neighbor
+//! reads followed by one write.
+//!
+//! Nodes on a strip boundary are updated under Peterson edge locks for
+//! their cross-client edges, so the monitors watch one mutual-exclusion
+//! predicate per boundary edge (inferred from the lock variable names).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::apps::graph::Graph;
+use crate::apps::peterson::{LockStep, MeOracleRef, PetersonLock};
+use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, OpOutcome};
+use crate::clock::hvc::Millis;
+use crate::store::value::{Interner, KeyId, Value};
+
+#[derive(Clone)]
+pub struct WeatherShared {
+    pub graph: Rc<Graph>,
+    pub owner: Rc<Vec<u32>>,
+    pub interner: Rc<RefCell<Interner>>,
+    pub oracle: MeOracleRef,
+    /// fraction of data operations that are PUTs (0 < p ≤ 1)
+    pub put_pct: f64,
+    /// protect boundary updates with Peterson locks (monitored predicates)
+    pub use_locks: bool,
+}
+
+impl WeatherShared {
+    pub fn new(
+        graph: Rc<Graph>,
+        n_clients: usize,
+        interner: Rc<RefCell<Interner>>,
+        oracle: MeOracleRef,
+        put_pct: f64,
+        use_locks: bool,
+    ) -> Self {
+        assert!(put_pct > 0.0 && put_pct <= 1.0);
+        let owner = Rc::new(crate::apps::graph::partition_nodes(graph.n, n_clients));
+        Self { graph, owner, interner, oracle, put_pct, use_locks }
+    }
+
+    /// Reads per update to hit the requested PUT percentage.
+    pub fn reads_per_update(&self) -> usize {
+        ((1.0 - self.put_pct) / self.put_pct).round() as usize
+    }
+}
+
+pub fn state_key(interner: &mut Interner, v: u32) -> KeyId {
+    interner.intern(&format!("wx_{v}"))
+}
+
+#[derive(Debug)]
+enum Phase {
+    Init,
+    /// acquiring lock `li` for the current boundary node
+    Lock { li: usize },
+    /// reading neighbor sample `k` of `reads` for the current node
+    Read { k: usize, acc: i64 },
+    Write,
+    Release { li: usize },
+    AbortRelease { li: usize },
+}
+
+pub struct WeatherApp {
+    sh: WeatherShared,
+    client: u32,
+    my_nodes: Vec<u32>,
+    pos: usize,
+    phase: Phase,
+    locks: Vec<PetersonLock>,
+    state_keys: HashMap<u32, KeyId>,
+    restart_pending: bool,
+    /// stop after this many node updates (0 = run forever)
+    pub max_updates: u64,
+    pub updates_done: u64,
+}
+
+impl WeatherApp {
+    pub fn new(sh: WeatherShared, client: u32, max_updates: u64) -> Self {
+        let my_nodes: Vec<u32> = (0..sh.graph.n as u32)
+            .filter(|&v| sh.owner[v as usize] == client)
+            .collect();
+        Self {
+            sh,
+            client,
+            my_nodes,
+            pos: 0,
+            phase: Phase::Init,
+            locks: Vec::new(),
+            state_keys: HashMap::new(),
+            restart_pending: false,
+            max_updates,
+            updates_done: 0,
+        }
+    }
+
+    fn skey(&mut self, v: u32) -> KeyId {
+        let interner = &self.sh.interner;
+        *self
+            .state_keys
+            .entry(v)
+            .or_insert_with(|| state_key(&mut interner.borrow_mut(), v))
+    }
+
+    fn cur_node(&self) -> u32 {
+        self.my_nodes[self.pos % self.my_nodes.len()]
+    }
+
+    fn locks_for(&self, v: u32) -> Vec<PetersonLock> {
+        if !self.sh.use_locks {
+            return Vec::new();
+        }
+        let mut edges: Vec<(u32, u32)> = self
+            .sh
+            .graph
+            .neighbors(v)
+            .iter()
+            .filter(|&&u| self.sh.owner[u as usize] != self.client)
+            .map(|&u| (v.min(u), v.max(u)))
+            .collect();
+        edges.sort_unstable();
+        let mut interner = self.sh.interner.borrow_mut();
+        edges
+            .into_iter()
+            .map(|(a, b)| PetersonLock::new(a, b, v, &mut interner))
+            .collect()
+    }
+
+    fn begin_node(&mut self, env: &mut AppEnv) -> AppAction {
+        if self.max_updates > 0 && self.updates_done >= self.max_updates {
+            return AppAction::Done;
+        }
+        let v = self.cur_node();
+        self.locks = self.locks_for(v);
+        if self.locks.is_empty() {
+            self.begin_reads(env)
+        } else {
+            self.phase = Phase::Lock { li: 0 };
+            match self.locks[0].acquire() {
+                LockStep::Do(op) => AppAction::Op(op),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    fn begin_reads(&mut self, env: &mut AppEnv) -> AppAction {
+        let reads = self.sh.reads_per_update();
+        if reads == 0 {
+            self.phase = Phase::Write;
+            return self.issue_write(env, 0);
+        }
+        self.phase = Phase::Read { k: 0, acc: 0 };
+        self.issue_read(env)
+    }
+
+    fn issue_read(&mut self, env: &mut AppEnv) -> AppAction {
+        let v = self.cur_node();
+        let nbrs = self.sh.graph.neighbors(v);
+        let u = if nbrs.is_empty() {
+            v
+        } else {
+            nbrs[env.rng.below(nbrs.len() as u64) as usize]
+        };
+        let key = self.skey(u);
+        AppAction::Op(AppOp::Get(key))
+    }
+
+    fn issue_write(&mut self, env: &mut AppEnv, acc: i64) -> AppAction {
+        let v = self.cur_node();
+        let key = self.skey(v);
+        // "state" = smoothed neighbor average plus noise
+        let noise = env.rng.range(0, 7) as i64 - 3;
+        AppAction::Op(AppOp::Put(key, Value::Int(acc + noise)))
+    }
+
+    fn finish_node(&mut self, env: &mut AppEnv) -> AppAction {
+        self.updates_done += 1;
+        self.pos += 1;
+        if !self.locks.is_empty() {
+            // release before moving on — handled by caller via Release phase
+            unreachable!("finish_node with locks pending");
+        }
+        self.begin_node(env)
+    }
+
+    fn handle_abort(&mut self, env: &mut AppEnv) -> AppAction {
+        self.restart_pending = false;
+        for l in &self.locks {
+            if l.held() {
+                self.sh.oracle.borrow_mut().exit(l.edge(), self.client);
+            }
+        }
+        let engaged: Vec<usize> = self
+            .locks
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.engaged())
+            .map(|(i, _)| i)
+            .collect();
+        if let Some(&first) = engaged.first() {
+            self.phase = Phase::AbortRelease { li: first };
+            match self.locks[first].release() {
+                LockStep::Do(op) => AppAction::Op(op),
+                _ => unreachable!(),
+            }
+        } else {
+            self.begin_node(env)
+        }
+    }
+}
+
+impl AppLogic for WeatherApp {
+    fn name(&self) -> &'static str {
+        "weather_monitoring"
+    }
+
+    fn next(&mut self, env: &mut AppEnv, last: Option<(AppOp, OpOutcome)>) -> AppAction {
+        if self.restart_pending {
+            return self.handle_abort(env);
+        }
+        if self.my_nodes.is_empty() {
+            return AppAction::Done;
+        }
+        let outcome = last.map(|(_, o)| o);
+        match std::mem::replace(&mut self.phase, Phase::Init) {
+            Phase::Init => self.begin_node(env),
+            Phase::Lock { li } => {
+                let out = outcome.expect("lock outcome");
+                match self.locks[li].on_result(&out) {
+                    LockStep::Do(op) => {
+                        self.phase = Phase::Lock { li };
+                        AppAction::Op(op)
+                    }
+                    LockStep::Acquired => {
+                        self.sh
+                            .oracle
+                            .borrow_mut()
+                            .enter(self.locks[li].edge(), self.client, env.now);
+                        if li + 1 < self.locks.len() {
+                            self.phase = Phase::Lock { li: li + 1 };
+                            match self.locks[li + 1].acquire() {
+                                LockStep::Do(op) => AppAction::Op(op),
+                                _ => unreachable!(),
+                            }
+                        } else {
+                            self.begin_reads(env)
+                        }
+                    }
+                    LockStep::Released => unreachable!(),
+                }
+            }
+            Phase::Read { k, mut acc } => {
+                if let Some(OpOutcome::GetOk(sibs)) = &outcome {
+                    if let Some(x) =
+                        crate::store::value::resolve(sibs).and_then(|v| v.value.as_int())
+                    {
+                        acc = (acc + x) / 2; // running smooth
+                    }
+                }
+                let reads = self.sh.reads_per_update();
+                if k + 1 < reads {
+                    self.phase = Phase::Read { k: k + 1, acc };
+                    self.issue_read(env)
+                } else {
+                    self.phase = Phase::Write;
+                    self.issue_write(env, acc)
+                }
+            }
+            Phase::Write => {
+                if self.locks.is_empty() {
+                    self.finish_node(env)
+                } else {
+                    self.phase = Phase::Release { li: 0 };
+                    match self.locks[0].release() {
+                        LockStep::Do(op) => AppAction::Op(op),
+                        _ => unreachable!(),
+                    }
+                }
+            }
+            Phase::Release { li } => {
+                let out = outcome.expect("release outcome");
+                match self.locks[li].on_result(&out) {
+                    LockStep::Do(op) => {
+                        self.phase = Phase::Release { li };
+                        AppAction::Op(op)
+                    }
+                    LockStep::Released => {
+                        self.sh.oracle.borrow_mut().exit(self.locks[li].edge(), self.client);
+                        if li + 1 < self.locks.len() {
+                            self.phase = Phase::Release { li: li + 1 };
+                            match self.locks[li + 1].release() {
+                                LockStep::Do(op) => AppAction::Op(op),
+                                _ => unreachable!(),
+                            }
+                        } else {
+                            self.updates_done += 1;
+                            self.pos += 1;
+                            self.locks.clear();
+                            self.begin_node(env)
+                        }
+                    }
+                    LockStep::Acquired => unreachable!(),
+                }
+            }
+            Phase::AbortRelease { li } => {
+                let out = outcome.expect("abort outcome");
+                match self.locks[li].on_result(&out) {
+                    LockStep::Do(op) => {
+                        self.phase = Phase::AbortRelease { li };
+                        AppAction::Op(op)
+                    }
+                    _ => {
+                        let next = self
+                            .locks
+                            .iter()
+                            .enumerate()
+                            .skip(li + 1)
+                            .find(|(_, l)| l.engaged())
+                            .map(|(i, _)| i);
+                        match next {
+                            Some(i) => {
+                                self.phase = Phase::AbortRelease { li: i };
+                                match self.locks[i].release() {
+                                    LockStep::Do(op) => AppAction::Op(op),
+                                    _ => unreachable!(),
+                                }
+                            }
+                            None => {
+                                self.locks.clear();
+                                self.begin_node(env)
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_violation(&mut self, _env: &mut AppEnv, _t_violate_ms: Millis) -> bool {
+        if matches!(self.phase, Phase::Lock { .. } | Phase::Read { .. } | Phase::Write) {
+            self.restart_pending = true;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::peterson::MeOracle;
+    use crate::util::rng::Rng;
+
+    fn setup(put_pct: f64, n_clients: usize, use_locks: bool) -> WeatherShared {
+        let graph = Rc::new(Graph::grid(8, 8));
+        WeatherShared::new(
+            graph,
+            n_clients,
+            Interner::new(),
+            MeOracle::new(),
+            put_pct,
+            use_locks,
+        )
+    }
+
+    #[test]
+    fn put_pct_to_reads() {
+        assert_eq!(setup(0.5, 2, false).reads_per_update(), 1);
+        assert_eq!(setup(0.25, 2, false).reads_per_update(), 3);
+        assert_eq!(setup(1.0, 2, false).reads_per_update(), 0);
+    }
+
+    #[test]
+    fn interior_updates_hit_put_ratio() {
+        // single client → no boundary, no locks: ops are exactly
+        // reads_per_update GETs + 1 PUT per update
+        let sh = setup(0.5, 1, true);
+        let mut app = WeatherApp::new(sh, 0, 50);
+        let mut rng = Rng::new(5);
+        let mut gets = 0u32;
+        let mut puts = 0u32;
+        let mut last: Option<(AppOp, OpOutcome)> = None;
+        loop {
+            let mut env = AppEnv { now: 0, client_idx: 0, rng: &mut rng };
+            match app.next(&mut env, last.take()) {
+                AppAction::Op(op) => {
+                    let out = match &op {
+                        AppOp::Get(_) => {
+                            gets += 1;
+                            OpOutcome::GetOk(vec![])
+                        }
+                        AppOp::Put(..) => {
+                            puts += 1;
+                            OpOutcome::PutOk
+                        }
+                    };
+                    last = Some((op, out));
+                }
+                AppAction::Sleep(_) => last = None,
+                AppAction::Done => break,
+            }
+        }
+        assert_eq!(puts, 50);
+        assert_eq!(gets, 50, "put_pct=0.5 ⇒ 1 read per write");
+        assert_eq!(app.updates_done, 50);
+    }
+
+    #[test]
+    fn boundary_nodes_use_locks() {
+        let sh = setup(0.5, 2, true);
+        let app = WeatherApp::new(sh.clone(), 0, 10);
+        // the last row of client 0's strip borders client 1
+        let boundary_node = app
+            .my_nodes
+            .iter()
+            .copied()
+            .find(|&v| {
+                sh.graph
+                    .neighbors(v)
+                    .iter()
+                    .any(|&u| sh.owner[u as usize] != 0)
+            })
+            .expect("boundary exists");
+        assert!(!app.locks_for(boundary_node).is_empty());
+        let interior = app
+            .my_nodes
+            .iter()
+            .copied()
+            .find(|&v| {
+                sh.graph
+                    .neighbors(v)
+                    .iter()
+                    .all(|&u| sh.owner[u as usize] == 0)
+            })
+            .expect("interior exists");
+        assert!(app.locks_for(interior).is_empty());
+    }
+
+    #[test]
+    fn lock_free_mode_has_no_locks() {
+        let sh = setup(0.5, 2, false);
+        let app = WeatherApp::new(sh, 0, 10);
+        for &v in &app.my_nodes {
+            assert!(app.locks_for(v).is_empty());
+        }
+    }
+}

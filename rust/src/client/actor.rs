@@ -1,0 +1,401 @@
+//! The Voldemort-style client actor: executes application operations
+//! against the replicated store with N/R/W quorum semantics (§II-B):
+//!
+//! * parallel phase — send to all N preference-list servers, wait for
+//!   R (W) distinct acknowledgements with a timeout;
+//! * serial phase — on timeout, one more round to the servers that have
+//!   not responded; if the quorum is still not met, the op fails;
+//! * an application PUT is GET_VERSION (quorum R) + PUT (quorum W) with
+//!   the merged, incremented vector clock (§VI-A).
+//!
+//! The client also relays HVC causality between servers by piggy-backing
+//! the freshest server HVC it has seen onto every request.
+
+use crate::clock::hvc::Hvc;
+use crate::clock::vc::VectorClock;
+use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, OpOutcome};
+use crate::client::consistency::{ClientTiming, ConsistencyCfg};
+use crate::metrics::throughput::Metrics;
+use crate::sim::des::{Actor, Ctx};
+use crate::sim::msg::{Msg, RollbackMsg};
+use crate::sim::{ProcId, Time};
+use crate::store::protocol::{ServerOp, ServerReply};
+use crate::store::value::{merge_siblings, Versioned};
+
+const TAG_WAKE: u64 = 0;
+/// think timers carry a generation in the low bits so timers from before
+/// an abort cannot issue ops early (flag bit distinguishes them from the
+/// request-timeout tags, which are small integers)
+const THINK_FLAG: u64 = 1 << 63;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Get,
+    GetVersion,
+    Put,
+}
+
+struct Inflight {
+    app_op: AppOp,
+    phase: Phase,
+    req: u64,
+    /// distinct servers that answered (usable replies)
+    replies: Vec<(ProcId, ServerReply)>,
+    round: u8,
+    started: Time,
+    /// merged version for the PUT phase
+    version: Option<VectorClock>,
+}
+
+pub struct ClientActor {
+    /// index among clients (vector-clock node id, metrics row)
+    pub idx: u32,
+    servers: Vec<ProcId>,
+    cfg: ConsistencyCfg,
+    timing: ClientTiming,
+    app: Box<dyn AppLogic>,
+    inflight: Option<Inflight>,
+    /// op waiting out the client think time
+    stashed: Option<AppOp>,
+    /// think-timer generation (stale timers are ignored)
+    think_seq: u64,
+    next_req: u64,
+    seen_hvc: Option<Hvc>,
+    metrics: Metrics,
+    done: bool,
+    /// stats
+    pub ops_ok: u64,
+    pub ops_failed: u64,
+    pub restarts: u64,
+}
+
+impl ClientActor {
+    pub fn new(
+        idx: u32,
+        servers: Vec<ProcId>,
+        cfg: ConsistencyCfg,
+        timing: ClientTiming,
+        app: Box<dyn AppLogic>,
+        metrics: Metrics,
+    ) -> Self {
+        assert_eq!(servers.len(), cfg.n, "preference list must have N servers");
+        Self {
+            idx,
+            servers,
+            cfg,
+            timing,
+            app,
+            inflight: None,
+            stashed: None,
+            think_seq: 0,
+            next_req: 1,
+            seen_hvc: None,
+            metrics,
+            done: false,
+            ops_ok: 0,
+            ops_failed: 0,
+            restarts: 0,
+        }
+    }
+
+    fn merge_seen(&mut self, h: &Hvc) {
+        match &mut self.seen_hvc {
+            None => self.seen_hvc = Some(h.clone()),
+            Some(s) => {
+                for (a, b) in s.v.iter_mut().zip(h.v.iter()) {
+                    if *b > *a {
+                        *a = *b;
+                    }
+                }
+            }
+        }
+    }
+
+    fn broadcast(&mut self, ctx: &mut Ctx, targets: &[ProcId], req: u64, op: &ServerOp) {
+        for &s in targets {
+            ctx.send(s, Msg::Request { req, op: op.clone(), hvc: self.seen_hvc.clone() });
+        }
+    }
+
+    fn wire_op(&self, phase: Phase, inflight: &Inflight) -> ServerOp {
+        match (phase, &inflight.app_op) {
+            (Phase::Get, AppOp::Get(k)) => ServerOp::Get(*k),
+            (Phase::GetVersion, AppOp::Put(k, _)) => ServerOp::GetVersion(*k),
+            (Phase::Put, AppOp::Put(k, v)) => ServerOp::Put {
+                key: *k,
+                version: inflight.version.clone().expect("version merged"),
+                value: v.clone(),
+            },
+            _ => unreachable!("phase/op mismatch"),
+        }
+    }
+
+    fn start_app_op(&mut self, ctx: &mut Ctx, op: AppOp) {
+        let req = self.next_req;
+        self.next_req += 1;
+        let phase = match op {
+            AppOp::Get(_) => Phase::Get,
+            AppOp::Put(..) => Phase::GetVersion,
+        };
+        let inflight = Inflight {
+            app_op: op,
+            phase,
+            req,
+            replies: Vec::new(),
+            round: 1,
+            started: ctx.now(),
+            version: None,
+        };
+        let wire = self.wire_op(phase, &inflight);
+        let servers = self.servers.clone();
+        self.inflight = Some(inflight);
+        self.broadcast(ctx, &servers, req, &wire);
+        ctx.schedule(self.timing.timeout_round1, req);
+    }
+
+    /// Move a PUT from the version phase to the write phase.
+    fn start_put_phase(&mut self, ctx: &mut Ctx) {
+        let req = self.next_req;
+        self.next_req += 1;
+        let inflight = self.inflight.as_mut().unwrap();
+        inflight.phase = Phase::Put;
+        inflight.req = req;
+        inflight.replies.clear();
+        inflight.round = 1;
+        let wire = self.wire_op(Phase::Put, self.inflight.as_ref().unwrap());
+        let servers = self.servers.clone();
+        self.broadcast(ctx, &servers, req, &wire);
+        ctx.schedule(self.timing.timeout_round1, req);
+    }
+
+    fn required(&self, phase: Phase) -> usize {
+        match phase {
+            Phase::Get | Phase::GetVersion => self.cfg.r,
+            Phase::Put => self.cfg.w,
+        }
+    }
+
+    fn complete(&mut self, ctx: &mut Ctx, outcome: OpOutcome) {
+        let inflight = self.inflight.take().expect("inflight");
+        match &outcome {
+            OpOutcome::Failed => {
+                self.ops_failed += 1;
+                self.metrics.borrow_mut().record_app_failure(self.idx as usize);
+            }
+            _ => {
+                self.ops_ok += 1;
+                let latency = ctx.now() - inflight.started;
+                self.metrics.borrow_mut().record_app(self.idx as usize, ctx.now(), latency);
+            }
+        }
+        self.advance(ctx, Some((inflight.app_op, outcome)));
+    }
+
+    fn advance(&mut self, ctx: &mut Ctx, last: Option<(AppOp, OpOutcome)>) {
+        let now = ctx.now();
+        let idx = self.idx;
+        let action = {
+            let mut env = AppEnv { now, client_idx: idx, rng: ctx.rng() };
+            self.app.next(&mut env, last)
+        };
+        match action {
+            AppAction::Op(op) => {
+                if self.timing.think > 0 {
+                    // model client-side processing between operations
+                    self.stashed = Some(op);
+                    self.think_seq += 1;
+                    ctx.schedule(self.timing.think, THINK_FLAG | self.think_seq);
+                } else {
+                    self.start_app_op(ctx, op);
+                }
+            }
+            AppAction::Sleep(d) => ctx.schedule(d, TAG_WAKE),
+            AppAction::Done => self.done = true,
+        }
+    }
+
+    fn try_finish_phase(&mut self, ctx: &mut Ctx) {
+        let inflight = self.inflight.as_ref().unwrap();
+        let needed = self.required(inflight.phase);
+        if inflight.replies.len() < needed {
+            return;
+        }
+        match inflight.phase {
+            Phase::Get => {
+                let lists: Vec<Vec<Versioned>> = inflight
+                    .replies
+                    .iter()
+                    .filter_map(|(_, r)| match r {
+                        ServerReply::Values(v) => Some(v.clone()),
+                        _ => None,
+                    })
+                    .collect();
+                let merged = merge_siblings(lists);
+                self.complete(ctx, OpOutcome::GetOk(merged));
+            }
+            Phase::GetVersion => {
+                // merge every returned version; the write's version must
+                // dominate everything the read quorum has seen
+                let mut merged = VectorClock::new();
+                for (_, r) in &inflight.replies {
+                    if let ServerReply::Versions(vs) = r {
+                        for v in vs {
+                            merged = merged.merge(v);
+                        }
+                    }
+                }
+                merged.increment(self.idx);
+                self.inflight.as_mut().unwrap().version = Some(merged);
+                self.start_put_phase(ctx);
+            }
+            Phase::Put => {
+                self.complete(ctx, OpOutcome::PutOk);
+            }
+        }
+    }
+
+    fn on_reply(&mut self, ctx: &mut Ctx, from: ProcId, req: u64, reply: ServerReply) {
+        let Some(inflight) = self.inflight.as_mut() else { return };
+        if inflight.req != req {
+            return; // stale reply from a previous phase/op
+        }
+        if matches!(reply, ServerReply::Frozen) {
+            return; // does not count toward the quorum
+        }
+        if inflight.replies.iter().any(|(s, _)| *s == from) {
+            return; // duplicate (second-round overlap)
+        }
+        inflight.replies.push((from, reply));
+        self.try_finish_phase(ctx);
+    }
+
+    fn on_timeout(&mut self, ctx: &mut Ctx, req: u64) {
+        let (cur_req, n_replies, phase, round) = match self.inflight.as_ref() {
+            Some(i) => (i.req, i.replies.len(), i.phase, i.round),
+            None => return,
+        };
+        if cur_req != req {
+            return; // stale timer
+        }
+        if n_replies >= self.required(phase) {
+            return; // already finished (defensive)
+        }
+        let inflight = self.inflight.as_mut().unwrap();
+        let _ = round;
+        if inflight.round == 1 {
+            // serial second round: re-request from non-responders
+            inflight.round = 2;
+            let responded: Vec<ProcId> = inflight.replies.iter().map(|(s, _)| *s).collect();
+            let targets: Vec<ProcId> = self
+                .servers
+                .iter()
+                .copied()
+                .filter(|s| !responded.contains(s))
+                .collect();
+            let phase = inflight.phase;
+            let wire = self.wire_op(phase, self.inflight.as_ref().unwrap());
+            self.broadcast(ctx, &targets, req, &wire);
+            ctx.schedule(self.timing.timeout_round2, req);
+        } else {
+            self.complete(ctx, OpOutcome::Failed);
+        }
+    }
+}
+
+impl Actor for ClientActor {
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        self.advance(ctx, None);
+    }
+
+    fn on_msg(&mut self, ctx: &mut Ctx, from: ProcId, msg: Msg) {
+        match msg {
+            Msg::Reply { req, reply, hvc } => {
+                self.merge_seen(&hvc);
+                self.on_reply(ctx, from, req, reply);
+            }
+            Msg::Rollback(RollbackMsg::Notify { t_violate_ms, .. }) => {
+                let abort = {
+                    let now = ctx.now();
+                    let idx = self.idx;
+                    let mut env = AppEnv { now, client_idx: idx, rng: ctx.rng() };
+                    self.app.on_violation(&mut env, t_violate_ms)
+                };
+                if abort && !self.done {
+                    self.restarts += 1;
+                    self.inflight = None; // outstanding replies/timers go stale
+                    self.stashed = None;
+                    self.think_seq += 1; // pending think timers go stale too
+                    self.advance(ctx, None);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, tag: u64) {
+        if tag & THINK_FLAG != 0 {
+            if (tag & !THINK_FLAG) == self.think_seq {
+                if let Some(op) = self.stashed.take() {
+                    if !self.done {
+                        self.start_app_op(ctx, op);
+                    }
+                }
+            }
+        } else if tag == TAG_WAKE {
+            if !self.done && self.inflight.is_none() {
+                self.advance(ctx, None);
+            }
+        } else {
+            self.on_timeout(ctx, tag);
+        }
+    }
+
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::value::Value;
+
+    #[test]
+    fn wire_op_mapping() {
+        // phase/op translation is pure; exercised without a sim
+        let client = ClientActor::new(
+            0,
+            vec![ProcId(0), ProcId(1), ProcId(2)],
+            ConsistencyCfg::n3r1w1(),
+            ClientTiming::default(),
+            Box::new(crate::client::app::ScriptApp::new(vec![])),
+            crate::metrics::throughput::MetricsHub::new(3, 1),
+        );
+        let inf = Inflight {
+            app_op: AppOp::Put(crate::store::value::KeyId(4), Value::Int(9)),
+            phase: Phase::GetVersion,
+            req: 1,
+            replies: vec![],
+            round: 1,
+            started: 0,
+            version: Some(VectorClock::new().incremented(0)),
+        };
+        assert!(matches!(client.wire_op(Phase::GetVersion, &inf), ServerOp::GetVersion(_)));
+        assert!(matches!(client.wire_op(Phase::Put, &inf), ServerOp::Put { .. }));
+    }
+
+    #[test]
+    fn required_quorums() {
+        let client = ClientActor::new(
+            0,
+            vec![ProcId(0), ProcId(1), ProcId(2)],
+            ConsistencyCfg::n3r2w2(),
+            ClientTiming::default(),
+            Box::new(crate::client::app::ScriptApp::new(vec![])),
+            crate::metrics::throughput::MetricsHub::new(3, 1),
+        );
+        assert_eq!(client.required(Phase::Get), 2);
+        assert_eq!(client.required(Phase::GetVersion), 2);
+        assert_eq!(client.required(Phase::Put), 2);
+    }
+}

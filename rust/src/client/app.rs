@@ -1,0 +1,106 @@
+//! The application interface: apps are state machines that the client
+//! actor drives one store operation at a time (closed loop, as in the
+//! paper's client processes).
+
+use crate::clock::hvc::Millis;
+use crate::sim::Time;
+use crate::store::value::{KeyId, Value, Versioned};
+use crate::util::rng::Rng;
+
+/// Application-level operations (the client library translates a PUT into
+/// GET_VERSION + PUT wire ops).
+#[derive(Debug, Clone)]
+pub enum AppOp {
+    Get(KeyId),
+    Put(KeyId, Value),
+}
+
+impl AppOp {
+    pub fn key(&self) -> KeyId {
+        match self {
+            AppOp::Get(k) => *k,
+            AppOp::Put(k, _) => *k,
+        }
+    }
+}
+
+/// Outcome handed back to the app.
+#[derive(Debug, Clone)]
+pub enum OpOutcome {
+    /// merged sibling versions from R replicas
+    GetOk(Vec<Versioned>),
+    PutOk,
+    /// quorum not reached after both rounds
+    Failed,
+}
+
+impl OpOutcome {
+    pub fn ok(&self) -> bool {
+        !matches!(self, OpOutcome::Failed)
+    }
+}
+
+/// What the app wants next.
+#[derive(Debug, Clone)]
+pub enum AppAction {
+    Op(AppOp),
+    Sleep(Time),
+    Done,
+}
+
+/// Ambient facilities passed into app callbacks.
+pub struct AppEnv<'a> {
+    pub rng: &'a mut Rng,
+    pub now: Time,
+    pub client_idx: u32,
+}
+
+pub trait AppLogic {
+    /// Called with the outcome of the previous op (None on first call /
+    /// after a restart) — returns the next action.
+    fn next(&mut self, env: &mut AppEnv, last: Option<(AppOp, OpOutcome)>) -> AppAction;
+
+    /// A violation was reported (rollback controller broadcast). Return
+    /// true to abort the in-flight op and restart via `next(None)` — the
+    /// paper's task abort-and-restart recovery for graph apps.
+    fn on_violation(&mut self, _env: &mut AppEnv, _t_violate_ms: Millis) -> bool {
+        false
+    }
+
+    /// App label for reports.
+    fn name(&self) -> &'static str {
+        "app"
+    }
+}
+
+/// Trivial app for tests: run a fixed script of operations.
+pub struct ScriptApp {
+    pub script: Vec<AppOp>,
+    pub pos: usize,
+    pub outcomes: Vec<OpOutcome>,
+}
+
+impl ScriptApp {
+    pub fn new(script: Vec<AppOp>) -> Self {
+        Self { script, pos: 0, outcomes: Vec::new() }
+    }
+}
+
+impl AppLogic for ScriptApp {
+    fn next(&mut self, _env: &mut AppEnv, last: Option<(AppOp, OpOutcome)>) -> AppAction {
+        if let Some((_, outcome)) = last {
+            self.outcomes.push(outcome);
+        }
+        if self.pos < self.script.len() {
+            let op = self.script[self.pos].clone();
+            self.pos += 1;
+            AppAction::Op(op)
+        } else {
+            AppAction::Done
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "script"
+    }
+}

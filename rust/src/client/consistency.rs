@@ -1,0 +1,148 @@
+//! N/R/W consistency configuration (Table II).
+//!
+//! Voldemort clients perform the replication themselves: a PUT (GET) is
+//! successful when W (R) of the N replicas acknowledge before the timeout.
+//! `R + W > N ∧ W > N/2` ⇒ sequential consistency; `R + W ≤ N` ⇒ eventual.
+
+use crate::sim::{ms, Time};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConsistencyCfg {
+    pub n: usize,
+    pub r: usize,
+    pub w: usize,
+}
+
+impl ConsistencyCfg {
+    pub fn new(n: usize, r: usize, w: usize) -> Self {
+        assert!(n >= 1 && r >= 1 && w >= 1 && r <= n && w <= n);
+        Self { n, r, w }
+    }
+
+    /// Table II presets.
+    pub fn n3r1w3() -> Self {
+        Self::new(3, 1, 3)
+    }
+    pub fn n3r2w2() -> Self {
+        Self::new(3, 2, 2)
+    }
+    pub fn n3r1w1() -> Self {
+        Self::new(3, 1, 1)
+    }
+    pub fn n5r1w5() -> Self {
+        Self::new(5, 1, 5)
+    }
+    pub fn n5r3w3() -> Self {
+        Self::new(5, 3, 3)
+    }
+    pub fn n5r1w1() -> Self {
+        Self::new(5, 1, 1)
+    }
+
+    /// Parse e.g. "N3R1W3" (case-insensitive).
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.to_ascii_uppercase();
+        let bytes = s.as_bytes();
+        if bytes.first() != Some(&b'N') {
+            return None;
+        }
+        let r_pos = s.find('R')?;
+        let w_pos = s.find('W')?;
+        let n: usize = s[1..r_pos].parse().ok()?;
+        let r: usize = s[r_pos + 1..w_pos].parse().ok()?;
+        let w: usize = s[w_pos + 1..].parse().ok()?;
+        if n >= 1 && r >= 1 && w >= 1 && r <= n && w <= n {
+            Some(Self { n, r, w })
+        } else {
+            None
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("N{}R{}W{}", self.n, self.r, self.w)
+    }
+
+    /// §II-B: sequential iff `W + R > N` and `W > N/2`.
+    pub fn is_sequential(&self) -> bool {
+        self.w + self.r > self.n && 2 * self.w > self.n
+    }
+
+    pub fn is_eventual(&self) -> bool {
+        !self.is_sequential()
+    }
+
+    pub fn model_name(&self) -> &'static str {
+        if self.is_sequential() {
+            "sequential"
+        } else {
+            "eventual"
+        }
+    }
+}
+
+/// Client request timing (§VI-A: parallel phase with a 500 ms timeout,
+/// then a serial second round), plus per-op client *think time* — the
+/// client-side processing between store operations (JVM/client-library/
+/// application compute). The paper's absolute throughputs (e.g. 15
+/// clients ≈ 128 ops/s aggregated on AWS, §VI-A) imply ≈115 ms per op of
+/// non-network time for the Social Media Analysis clients; the regional
+/// stress workloads (§VI-B) run thin clients instead.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientTiming {
+    pub timeout_round1: Time,
+    pub timeout_round2: Time,
+    /// client-side processing before each operation
+    pub think: Time,
+}
+
+impl Default for ClientTiming {
+    fn default() -> Self {
+        Self { timeout_round1: ms(500.0), timeout_round2: ms(500.0), think: 0 }
+    }
+}
+
+impl ClientTiming {
+    pub fn with_think(think_ms: f64) -> Self {
+        Self { think: ms(think_ms), ..Self::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_classification() {
+        // Table II: the paper's six configurations
+        assert!(ConsistencyCfg::n3r1w3().is_sequential());
+        assert!(ConsistencyCfg::n3r2w2().is_sequential());
+        assert!(ConsistencyCfg::n3r1w1().is_eventual());
+        assert!(ConsistencyCfg::n5r1w5().is_sequential());
+        assert!(ConsistencyCfg::n5r3w3().is_sequential());
+        assert!(ConsistencyCfg::n5r1w1().is_eventual());
+    }
+
+    #[test]
+    fn parse_labels() {
+        for c in [
+            ConsistencyCfg::n3r1w3(),
+            ConsistencyCfg::n3r2w2(),
+            ConsistencyCfg::n3r1w1(),
+            ConsistencyCfg::n5r1w5(),
+            ConsistencyCfg::n5r3w3(),
+            ConsistencyCfg::n5r1w1(),
+        ] {
+            assert_eq!(ConsistencyCfg::parse(&c.label()), Some(c));
+        }
+        assert_eq!(ConsistencyCfg::parse("n3r2w2"), Some(ConsistencyCfg::n3r2w2()));
+        assert_eq!(ConsistencyCfg::parse("bogus"), None);
+        assert_eq!(ConsistencyCfg::parse("N3R4W1"), None, "r > n rejected");
+    }
+
+    #[test]
+    fn borderline_quorums() {
+        // R+W>N but W<=N/2 is NOT sequential (write quorums may not overlap)
+        assert!(!ConsistencyCfg::new(4, 3, 2).is_sequential());
+        assert!(ConsistencyCfg::new(4, 2, 3).is_sequential());
+    }
+}

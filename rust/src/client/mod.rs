@@ -1,0 +1,6 @@
+//! The store client: N/R/W quorum engine (client-side replication, as in
+//! Voldemort), consistency presets (Table II), and the app interface.
+
+pub mod actor;
+pub mod app;
+pub mod consistency;

@@ -1,0 +1,388 @@
+//! Hybrid Vector Clocks (HVC, Demirbas & Kulkarni) and the paper's
+//! HVC-*interval* causality rule used by the monitors (§V, Fig. 6).
+//!
+//! An HVC at process `i` is a vector of the most recent *physical* times
+//! process `i` knows about every process, with `hvc[i] = PT_i`. Entries are
+//! floored at `PT_i - ε` (ε = clock synchronization error bound), which is
+//! what allows compression when ε is finite; with ε = ∞ an HVC behaves as a
+//! plain vector clock over physical timestamps (the setting the paper uses
+//! in its experiments).
+//!
+//! Clock values are milliseconds (`i64`); the monitors and the AOT kernels
+//! operate at this granularity. Coarsening only errs toward "concurrent",
+//! the paper's safe direction (no missed violations).
+
+use std::cmp::Ordering;
+
+/// Physical time in milliseconds.
+pub type Millis = i64;
+
+/// Sentinel for "ε = ∞" (pure vector-clock behaviour).
+pub const EPS_INF: Millis = i64::MAX / 4;
+
+/// Comparison result for HVC vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HvcOrd {
+    Equal,
+    Before,
+    After,
+    Concurrent,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Hvc {
+    /// owning process index (a server id in this system)
+    pub owner: u16,
+    /// dense vector, one entry per process, in ms
+    pub v: Vec<Millis>,
+}
+
+impl Hvc {
+    /// A fresh clock for process `owner` among `n` processes at time `pt`,
+    /// with all remote entries at the `pt - eps` floor.
+    pub fn new(owner: u16, n: usize, pt: Millis, eps: Millis) -> Self {
+        let floor = pt.saturating_sub(eps);
+        let mut v = vec![floor; n];
+        v[owner as usize] = pt;
+        Self { owner, v }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.v.len()
+    }
+
+    /// Advance on a local event / message *send* at physical time `pt`:
+    /// `v[i] = pt`, `v[j] = max(v[j], pt - eps)`.
+    pub fn tick(&mut self, pt: Millis, eps: Millis) {
+        let floor = pt.saturating_sub(eps);
+        for x in &mut self.v {
+            if *x < floor {
+                *x = floor;
+            }
+        }
+        let i = self.owner as usize;
+        if self.v[i] < pt {
+            self.v[i] = pt;
+        } else {
+            // physical clock must appear monotone at its own index even if
+            // the OS clock stalls: bump by one ms-step equivalent (0 keeps
+            // the old value, which is still monotone)
+            self.v[i] = self.v[i].max(pt);
+        }
+    }
+
+    /// Merge a piggy-backed clock on message *receive* at physical time
+    /// `pt`: `v[i] = pt`, `v[j] = max(msg[j], v[j], pt - eps)`.
+    pub fn recv(&mut self, msg: &Hvc, pt: Millis, eps: Millis) {
+        debug_assert_eq!(self.dim(), msg.dim());
+        let floor = pt.saturating_sub(eps);
+        for (x, &m) in self.v.iter_mut().zip(msg.v.iter()) {
+            *x = (*x).max(m).max(floor);
+        }
+        let i = self.owner as usize;
+        self.v[i] = self.v[i].max(pt);
+    }
+
+    /// Standard vector comparison.
+    pub fn compare(&self, other: &Hvc) -> HvcOrd {
+        debug_assert_eq!(self.dim(), other.dim());
+        let mut less = false;
+        let mut greater = false;
+        for (a, b) in self.v.iter().zip(other.v.iter()) {
+            match a.cmp(b) {
+                Ordering::Less => less = true,
+                Ordering::Greater => greater = true,
+                Ordering::Equal => {}
+            }
+            if less && greater {
+                return HvcOrd::Concurrent;
+            }
+        }
+        match (less, greater) {
+            (false, false) => HvcOrd::Equal,
+            (true, false) => HvcOrd::Before,
+            (false, true) => HvcOrd::After,
+            (true, true) => HvcOrd::Concurrent,
+        }
+    }
+
+    #[inline]
+    pub fn strictly_before(&self, other: &Hvc) -> bool {
+        self.compare(other) == HvcOrd::Before
+    }
+
+    /// Number of entries that differ from the `pt - eps` floor — the
+    /// compressed representation size the paper describes (a bitmap of n
+    /// bits plus this many explicit integers).
+    pub fn compressed_len(&self, eps: Millis) -> usize {
+        let pt = self.v[self.owner as usize];
+        let floor = pt.saturating_sub(eps);
+        self.v.iter().filter(|&&x| x != floor).count()
+    }
+
+    /// Compress to (bitmap, explicit values); inverse of [`Hvc::decompress`].
+    pub fn compress(&self, eps: Millis) -> (Vec<bool>, Vec<Millis>) {
+        let pt = self.v[self.owner as usize];
+        let floor = pt.saturating_sub(eps);
+        let bitmap: Vec<bool> = self.v.iter().map(|&x| x != floor).collect();
+        let vals: Vec<Millis> = self.v.iter().copied().filter(|&x| x != floor).collect();
+        (bitmap, vals)
+    }
+
+    pub fn decompress(owner: u16, bitmap: &[bool], vals: &[Millis], pt: Millis, eps: Millis) -> Self {
+        let floor = pt.saturating_sub(eps);
+        let mut vi = vals.iter();
+        let v = bitmap
+            .iter()
+            .map(|&set| if set { *vi.next().expect("bitmap/vals mismatch") } else { floor })
+            .collect();
+        Self { owner, v }
+    }
+}
+
+/// An HVC interval `[start, end]` on a server — the time span attached to a
+/// candidate sent to a monitor (the local predicate held throughout it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HvcInterval {
+    pub start: Hvc,
+    pub end: Hvc,
+}
+
+/// Verdict of the paper's 3-case interval causality rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntervalOrd {
+    /// overlapping or within the ε-uncertainty window → treated concurrent
+    Concurrent,
+    /// first interval happened before the second
+    Before,
+    /// second interval happened before the first
+    After,
+}
+
+impl HvcInterval {
+    pub fn new(start: Hvc, end: Hvc) -> Self {
+        debug_assert_eq!(start.owner, end.owner);
+        Self { start, end }
+    }
+
+    pub fn owner(&self) -> u16 {
+        self.start.owner
+    }
+
+    /// The paper's rule (§V "Implementation of the monitors", Fig. 6),
+    /// applied after orienting so that ¬(start_a > start_b):
+    ///
+    /// 1. if ¬(end_a < start_b)          → Concurrent (common segment);
+    /// 2. if end_a < start_b and
+    ///    end_a[Sa] ≤ start_b[Sb] − ε    → `a` Before `b`;
+    /// 3. if end_a < start_b but the physical separation is within ε
+    ///                                   → Concurrent (uncertain, safe).
+    pub fn verdict(a: &HvcInterval, b: &HvcInterval, eps: Millis) -> IntervalOrd {
+        // orient: ensure ¬(start_a > start_b)
+        if a.start.compare(&b.start) == HvcOrd::After {
+            return match Self::verdict(b, a, eps) {
+                IntervalOrd::Before => IntervalOrd::After,
+                IntervalOrd::After => IntervalOrd::Before,
+                IntervalOrd::Concurrent => IntervalOrd::Concurrent,
+            };
+        }
+        if a.end.strictly_before(&b.start) {
+            let pa = a.end.v[a.owner() as usize];
+            let pb = b.start.v[b.owner() as usize];
+            if pa <= pb.saturating_sub(eps) {
+                IntervalOrd::Before
+            } else {
+                IntervalOrd::Concurrent
+            }
+        } else {
+            // overlap (including vector-concurrent endpoints): common segment
+            IntervalOrd::Concurrent
+        }
+    }
+
+    /// Convenience: are the two intervals to be treated as concurrent?
+    pub fn concurrent(a: &HvcInterval, b: &HvcInterval, eps: Millis) -> bool {
+        Self::verdict(a, b, eps) == IntervalOrd::Concurrent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn hvc(owner: u16, v: &[Millis]) -> Hvc {
+        Hvc { owner, v: v.to_vec() }
+    }
+
+    #[test]
+    fn paper_compression_example() {
+        // n=10, eps=20, HVC_0 = [100,80,80,95,80,80,100,80,80,80]
+        // → 3 explicit integers (100, 95, 100)
+        let h = hvc(0, &[100, 80, 80, 95, 80, 80, 100, 80, 80, 80]);
+        assert_eq!(h.compressed_len(20), 3);
+        let (bitmap, vals) = h.compress(20);
+        assert_eq!(vals, vec![100, 95, 100]);
+        let back = Hvc::decompress(0, &bitmap, &vals, 100, 20);
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    fn tick_and_recv_monotone() {
+        let eps = 10;
+        let mut a = Hvc::new(0, 3, 100, eps);
+        a.tick(105, eps);
+        assert_eq!(a.v[0], 105);
+        assert_eq!(a.v[1], 95);
+        let b = Hvc::new(1, 3, 104, eps);
+        let before = a.clone();
+        a.recv(&b, 106, eps);
+        assert_eq!(a.v[0], 106);
+        assert_eq!(a.v[1], 104); // learned from b
+        assert!(matches!(before.compare(&a), HvcOrd::Before));
+    }
+
+    #[test]
+    fn compare_cases() {
+        let a = hvc(0, &[5, 5]);
+        let b = hvc(0, &[6, 6]);
+        let c = hvc(1, &[6, 4]);
+        assert_eq!(a.compare(&b), HvcOrd::Before);
+        assert_eq!(b.compare(&a), HvcOrd::After);
+        assert_eq!(a.compare(&a), HvcOrd::Equal);
+        assert_eq!(a.compare(&c), HvcOrd::Concurrent);
+    }
+
+    #[test]
+    fn interval_rule_overlap() {
+        // intervals share a segment → concurrent regardless of eps
+        let i1 = HvcInterval::new(hvc(0, &[10, 0]), hvc(0, &[20, 0]));
+        let i2 = HvcInterval::new(hvc(1, &[15, 15]), hvc(1, &[15, 25]));
+        assert_eq!(HvcInterval::verdict(&i1, &i2, 0), IntervalOrd::Concurrent);
+    }
+
+    #[test]
+    fn interval_rule_clear_precedence() {
+        // end1 < start2 vector-wise AND physically separated by > eps
+        let i1 = HvcInterval::new(hvc(0, &[10, 5]), hvc(0, &[20, 5]));
+        let i2 = HvcInterval::new(hvc(1, &[25, 40]), hvc(1, &[25, 50]));
+        assert_eq!(HvcInterval::verdict(&i1, &i2, 5), IntervalOrd::Before);
+        assert_eq!(HvcInterval::verdict(&i2, &i1, 5), IntervalOrd::After);
+    }
+
+    #[test]
+    fn interval_rule_uncertain_window() {
+        // end1 < start2 vector-wise, but physical separation within eps →
+        // uncertain → concurrent (the "avoid missing possible bugs" case)
+        let i1 = HvcInterval::new(hvc(0, &[10, 5]), hvc(0, &[20, 5]));
+        let i2 = HvcInterval::new(hvc(1, &[25, 22]), hvc(1, &[25, 50]));
+        // separation = start2[1] - end1[0] = 22 - 20 = 2 < eps=5
+        assert_eq!(HvcInterval::verdict(&i1, &i2, 5), IntervalOrd::Concurrent);
+        // with eps=1 it's a clear precedence (20 <= 22 - 1)
+        assert_eq!(HvcInterval::verdict(&i1, &i2, 1), IntervalOrd::Before);
+    }
+
+    fn random_hvc(rng: &mut Rng, owner: u16, n: usize) -> Hvc {
+        let base = rng.range(0, 1000) as i64;
+        let v = (0..n).map(|_| base + rng.range(0, 50) as i64).collect();
+        Hvc { owner, v }
+    }
+
+    fn random_interval(rng: &mut Rng, n: usize) -> HvcInterval {
+        let owner = rng.below(n as u64) as u16;
+        let s = random_hvc(rng, owner, n);
+        let mut e = s.clone();
+        for x in &mut e.v {
+            *x += rng.range(0, 40) as i64;
+        }
+        e.v[owner as usize] += 1; // end strictly after start at owner
+        HvcInterval::new(s, e)
+    }
+
+    #[test]
+    fn prop_hvc_compare_antisymmetric() {
+        prop::check_default("hvc_antisymmetric", |rng| {
+            let n = rng.range(2, 6) as usize;
+            let a = random_hvc(rng, 0, n);
+            let b = random_hvc(rng, 1, n);
+            let ok = matches!(
+                (a.compare(&b), b.compare(&a)),
+                (HvcOrd::Equal, HvcOrd::Equal)
+                    | (HvcOrd::Before, HvcOrd::After)
+                    | (HvcOrd::After, HvcOrd::Before)
+                    | (HvcOrd::Concurrent, HvcOrd::Concurrent)
+            );
+            if ok {
+                Ok(())
+            } else {
+                Err(format!("a={a:?} b={b:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_interval_verdict_antisymmetric() {
+        prop::check_default("interval_antisymmetric", |rng| {
+            let n = rng.range(2, 6) as usize;
+            let a = random_interval(rng, n);
+            let b = random_interval(rng, n);
+            let eps = rng.range(0, 30) as i64;
+            let ok = matches!(
+                (HvcInterval::verdict(&a, &b, eps), HvcInterval::verdict(&b, &a, eps)),
+                (IntervalOrd::Concurrent, IntervalOrd::Concurrent)
+                    | (IntervalOrd::Before, IntervalOrd::After)
+                    | (IntervalOrd::After, IntervalOrd::Before)
+            );
+            if ok {
+                Ok(())
+            } else {
+                Err(format!("a={a:?} b={b:?} eps={eps}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_larger_eps_never_unconcurrents() {
+        // Growing ε only moves verdicts toward Concurrent (safety): if two
+        // intervals are concurrent at ε they stay concurrent at ε' > ε.
+        prop::check_default("eps_monotone_safety", |rng| {
+            let n = rng.range(2, 5) as usize;
+            let a = random_interval(rng, n);
+            let b = random_interval(rng, n);
+            let e1 = rng.range(0, 20) as i64;
+            let e2 = e1 + rng.range(1, 20) as i64;
+            let v1 = HvcInterval::verdict(&a, &b, e1);
+            let v2 = HvcInterval::verdict(&a, &b, e2);
+            if v1 == IntervalOrd::Concurrent && v2 != IntervalOrd::Concurrent {
+                return Err(format!("eps {e1}->{e2} un-concurrented: {a:?} {b:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_compress_roundtrip() {
+        prop::check_default("hvc_compress_roundtrip", |rng| {
+            let n = rng.range(2, 12) as usize;
+            let owner = rng.below(n as u64) as u16;
+            let eps = rng.range(1, 50) as i64;
+            let pt = rng.range(100, 10_000) as i64;
+            let mut h = Hvc::new(owner, n, pt, eps);
+            // randomly raise some entries above the floor
+            for j in 0..n {
+                if rng.chance(0.4) {
+                    h.v[j] = pt - rng.range(0, eps as u64) as i64;
+                }
+            }
+            h.v[owner as usize] = pt;
+            let (bm, vals) = h.compress(eps);
+            let back = Hvc::decompress(owner, &bm, &vals, pt, eps);
+            if back != h {
+                return Err(format!("roundtrip mismatch {h:?} -> {back:?}"));
+            }
+            Ok(())
+        });
+    }
+}

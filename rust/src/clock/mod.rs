@@ -1,0 +1,5 @@
+//! Logical/physical clocks: vector clocks for value versions (Voldemort
+//! role) and hybrid vector clocks for the monitoring module.
+
+pub mod hvc;
+pub mod vc;

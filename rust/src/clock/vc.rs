@@ -1,0 +1,249 @@
+//! Vector clocks for value *versions* (the Voldemort role: each stored
+//! value carries a vector clock over the writing clients; concurrent
+//! writes produce sibling versions).
+
+use std::cmp::Ordering;
+
+/// Sparse vector clock: sorted `(node_id, counter)` pairs.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct VectorClock {
+    entries: Vec<(u32, u64)>,
+}
+
+/// Result of comparing two vector clocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Causality {
+    Equal,
+    /// self < other (self happened before other)
+    Before,
+    /// self > other
+    After,
+    Concurrent,
+}
+
+impl VectorClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, node: u32) -> u64 {
+        self.entries
+            .binary_search_by_key(&node, |e| e.0)
+            .map(|i| self.entries[i].1)
+            .unwrap_or(0)
+    }
+
+    /// Increment `node`'s component (a client stamping its write).
+    pub fn increment(&mut self, node: u32) {
+        match self.entries.binary_search_by_key(&node, |e| e.0) {
+            Ok(i) => self.entries[i].1 += 1,
+            Err(i) => self.entries.insert(i, (node, 1)),
+        }
+    }
+
+    pub fn incremented(mut self, node: u32) -> Self {
+        self.increment(node);
+        self
+    }
+
+    /// Pointwise max.
+    pub fn merge(&self, other: &Self) -> Self {
+        let mut out = Vec::with_capacity(self.entries.len().max(other.entries.len()));
+        let (mut i, mut j) = (0, 0);
+        while i < self.entries.len() || j < other.entries.len() {
+            match (self.entries.get(i), other.entries.get(j)) {
+                (Some(&(a, av)), Some(&(b, bv))) => {
+                    if a == b {
+                        out.push((a, av.max(bv)));
+                        i += 1;
+                        j += 1;
+                    } else if a < b {
+                        out.push((a, av));
+                        i += 1;
+                    } else {
+                        out.push((b, bv));
+                        j += 1;
+                    }
+                }
+                (Some(&e), None) => {
+                    out.push(e);
+                    i += 1;
+                }
+                (None, Some(&e)) => {
+                    out.push(e);
+                    j += 1;
+                }
+                (None, None) => unreachable!(),
+            }
+        }
+        Self { entries: out }
+    }
+
+    /// Compare for causality.
+    pub fn compare(&self, other: &Self) -> Causality {
+        let mut less = false; // some component self < other
+        let mut greater = false;
+        let (mut i, mut j) = (0, 0);
+        while i < self.entries.len() || j < other.entries.len() {
+            match (self.entries.get(i), other.entries.get(j)) {
+                (Some(&(a, av)), Some(&(b, bv))) => {
+                    if a == b {
+                        match av.cmp(&bv) {
+                            Ordering::Less => less = true,
+                            Ordering::Greater => greater = true,
+                            Ordering::Equal => {}
+                        }
+                        i += 1;
+                        j += 1;
+                    } else if a < b {
+                        // other has implicit 0 here
+                        greater = true;
+                        i += 1;
+                    } else {
+                        less = true;
+                        j += 1;
+                    }
+                }
+                (Some(_), None) => {
+                    greater = true;
+                    i += 1;
+                }
+                (None, Some(_)) => {
+                    less = true;
+                    j += 1;
+                }
+                (None, None) => unreachable!(),
+            }
+            if less && greater {
+                return Causality::Concurrent;
+            }
+        }
+        match (less, greater) {
+            (false, false) => Causality::Equal,
+            (true, false) => Causality::Before,
+            (false, true) => Causality::After,
+            (true, true) => Causality::Concurrent,
+        }
+    }
+
+    pub fn dominates(&self, other: &Self) -> bool {
+        matches!(self.compare(other), Causality::After | Causality::Equal)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[(u32, u64)] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn basic_ordering() {
+        let a = VectorClock::new().incremented(1); // {1:1}
+        let b = a.clone().incremented(1); // {1:2}
+        assert_eq!(a.compare(&b), Causality::Before);
+        assert_eq!(b.compare(&a), Causality::After);
+        assert_eq!(a.compare(&a), Causality::Equal);
+    }
+
+    #[test]
+    fn concurrent_writes() {
+        let base = VectorClock::new();
+        let a = base.clone().incremented(1);
+        let b = base.incremented(2);
+        assert_eq!(a.compare(&b), Causality::Concurrent);
+        assert_eq!(b.compare(&a), Causality::Concurrent);
+    }
+
+    #[test]
+    fn merge_dominates_both() {
+        let a = VectorClock::new().incremented(1).incremented(1);
+        let b = VectorClock::new().incremented(2);
+        let m = a.merge(&b);
+        assert!(m.dominates(&a));
+        assert!(m.dominates(&b));
+        assert_eq!(m.get(1), 2);
+        assert_eq!(m.get(2), 1);
+    }
+
+    #[test]
+    fn implicit_zero_entries() {
+        let a = VectorClock::new().incremented(5);
+        let empty = VectorClock::new();
+        assert_eq!(empty.compare(&a), Causality::Before);
+        assert_eq!(a.compare(&empty), Causality::After);
+    }
+
+    fn random_vc(rng: &mut crate::util::rng::Rng) -> VectorClock {
+        let mut vc = VectorClock::new();
+        let n = rng.below(5);
+        for _ in 0..n {
+            let node = rng.below(6) as u32;
+            let times = rng.range(1, 4);
+            for _ in 0..times {
+                vc.increment(node);
+            }
+        }
+        vc
+    }
+
+    #[test]
+    fn prop_compare_antisymmetric() {
+        prop::check_default("vc_antisymmetric", |rng| {
+            let a = random_vc(rng);
+            let b = random_vc(rng);
+            let ab = a.compare(&b);
+            let ba = b.compare(&a);
+            let ok = matches!(
+                (ab, ba),
+                (Causality::Equal, Causality::Equal)
+                    | (Causality::Before, Causality::After)
+                    | (Causality::After, Causality::Before)
+                    | (Causality::Concurrent, Causality::Concurrent)
+            );
+            if ok {
+                Ok(())
+            } else {
+                Err(format!("a={a:?} b={b:?} ab={ab:?} ba={ba:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_merge_is_lub() {
+        prop::check_default("vc_merge_lub", |rng| {
+            let a = random_vc(rng);
+            let b = random_vc(rng);
+            let m = a.merge(&b);
+            if !m.dominates(&a) || !m.dominates(&b) {
+                return Err(format!("merge not upper bound: a={a:?} b={b:?} m={m:?}"));
+            }
+            // least: every component equals max of inputs
+            for &(n, v) in m.entries() {
+                if v != a.get(n).max(b.get(n)) {
+                    return Err(format!("component {n} not max"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_increment_strictly_after() {
+        prop::check_default("vc_increment_after", |rng| {
+            let a = random_vc(rng);
+            let b = a.clone().incremented(rng.below(6) as u32);
+            if b.compare(&a) != Causality::After {
+                return Err(format!("increment not after: {a:?} -> {b:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,55 @@
+//! Predicate → monitor assignment (§V): "The predicates are assigned to
+//! the monitors based on the hash of the predicate names in order to
+//! balance the monitors' workload." The number of monitors equals the
+//! number of servers, each co-located with one server.
+
+/// FNV-1a — stable across processes, so every server assigns identically.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Index of the monitor responsible for predicate `name` among `n` monitors.
+pub fn monitor_index(name: &str, n: usize) -> usize {
+    assert!(n > 0);
+    (fnv1a(name.as_bytes()) % n as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_and_in_range() {
+        for n in 1..8 {
+            for name in ["me_1_2", "me_3_4", "conj_0", "weather_7"] {
+                let i = monitor_index(name, n);
+                assert!(i < n);
+                assert_eq!(i, monitor_index(name, n), "deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn balances_many_predicates() {
+        let n = 5;
+        let mut counts = vec![0usize; n];
+        for a in 0..200 {
+            for b in (a + 1)..(a + 6) {
+                counts[monitor_index(&format!("me_{a}_{b}"), n)] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let expect = total / n;
+        for &c in &counts {
+            assert!(
+                c > expect / 2 && c < expect * 2,
+                "imbalanced: {counts:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Candidates and violation reports — what flows from the local predicate
+//! detectors to the monitors, and from the monitors to the rollback
+//! controller.
+
+use crate::clock::hvc::{HvcInterval, Millis};
+use crate::predicate::spec::PredId;
+use crate::sim::{ProcId, Time};
+use crate::store::value::{KeyId, Value};
+
+/// A candidate (§V): an HVC interval on one server during which (the local
+/// part of) a conjunct held, plus the partial state that made it hold.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub pred: PredId,
+    /// clause index within ¬P's DNF
+    pub clause: u16,
+    /// conjunct index within the clause
+    pub conjunct: u16,
+    /// originating server (actor id)
+    pub server: ProcId,
+    /// per-server monotone sequence number (dedup / ordering)
+    pub seq: u64,
+    pub interval: HvcInterval,
+    /// values of the conjunct's variables during the interval (sibling
+    /// lists flattened: a var may appear with several concurrent values)
+    pub values: Vec<(KeyId, Value)>,
+    /// whether the conjunct was satisfied during the interval (linear
+    /// predicates pre-filter; semilinear candidates are always sent and
+    /// carry the truth for the monitor to use)
+    pub truth: bool,
+    /// virtual time the server emitted it (latency accounting)
+    pub emitted_at: Time,
+}
+
+impl Candidate {
+    /// Physical start of the interval at the owning server, in ms — the
+    /// paper's safe estimate basis for `T_violate`.
+    pub fn start_pt_ms(&self) -> Millis {
+        self.interval.start.v[self.interval.owner() as usize]
+    }
+
+    pub fn end_pt_ms(&self) -> Millis {
+        self.interval.end.v[self.interval.owner() as usize]
+    }
+}
+
+/// Evidence of a violation: a pairwise-concurrent set of candidates, one
+/// per conjunct of some clause of ¬P.
+#[derive(Debug, Clone)]
+pub struct ViolationReport {
+    pub pred: PredId,
+    pub pred_name: String,
+    pub clause: u16,
+    pub witnesses: Vec<Candidate>,
+    /// safe estimate of when the violation began (min physical start
+    /// across witnesses), used by the rollback module as `T_violate`
+    pub t_violate_ms: Millis,
+    /// when the violating global state came to exist (max physical start
+    /// across witnesses) — basis for detection-latency accounting
+    pub t_occurred_ms: Millis,
+    /// virtual time the monitor detected it
+    pub detected_at: Time,
+    /// monitor that found it
+    pub monitor: ProcId,
+}
+
+impl ViolationReport {
+    pub fn from_witnesses(
+        pred: PredId,
+        pred_name: String,
+        clause: u16,
+        witnesses: Vec<Candidate>,
+        detected_at: Time,
+        monitor: ProcId,
+    ) -> Self {
+        let t_violate_ms = witnesses.iter().map(|c| c.start_pt_ms()).min().unwrap_or(0);
+        let t_occurred_ms = witnesses.iter().map(|c| c.start_pt_ms()).max().unwrap_or(0);
+        Self { pred, pred_name, clause, witnesses, t_violate_ms, t_occurred_ms, detected_at, monitor }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::hvc::Hvc;
+
+    fn interval(owner: u16, s: &[Millis], e: &[Millis]) -> HvcInterval {
+        HvcInterval::new(Hvc { owner, v: s.to_vec() }, Hvc { owner, v: e.to_vec() })
+    }
+
+    fn cand(owner: u16, s: &[Millis], e: &[Millis]) -> Candidate {
+        Candidate {
+            pred: PredId(0),
+            clause: 0,
+            conjunct: owner,
+            server: ProcId(owner as u32),
+            seq: 0,
+            interval: interval(owner, s, e),
+            values: vec![],
+            truth: true,
+            emitted_at: 0,
+        }
+    }
+
+    #[test]
+    fn start_end_pt() {
+        let c = cand(1, &[5, 10], &[5, 20]);
+        assert_eq!(c.start_pt_ms(), 10);
+        assert_eq!(c.end_pt_ms(), 20);
+    }
+
+    #[test]
+    fn t_violate_is_min_start() {
+        let w1 = cand(0, &[100, 0], &[120, 0]);
+        let w2 = cand(1, &[0, 90], &[0, 130]);
+        let rep = ViolationReport::from_witnesses(
+            PredId(3),
+            "me_1_2".into(),
+            0,
+            vec![w1, w2],
+            42,
+            ProcId(7),
+        );
+        assert_eq!(rep.t_violate_ms, 90);
+        assert_eq!(rep.t_occurred_ms, 100);
+        assert_eq!(rep.pred, PredId(3));
+    }
+}

@@ -1,0 +1,437 @@
+//! The local predicate detector attached to each server (§V, Fig. 4/5).
+//!
+//! It intercepts PUT requests, maintains a cache of the variables relevant
+//! to the registered predicates, and sends *candidates* (HVC intervals +
+//! partial state) to the monitors:
+//!
+//! * **linear / conjunctive** conjuncts: a candidate is sent upon a PUT of
+//!   a relevant variable iff the conjunct held during the interval since
+//!   the previous relevant PUT (Fig. 5 — "it depends on whether ¬LP was
+//!   true after execution of the *previous* PUT request");
+//! * **semilinear** conjuncts: a candidate is *always* sent upon a PUT of
+//!   a relevant variable (Fig. 5 caption), carrying the pre-state values.
+//!
+//! It also performs on-demand predicate inference from variable naming
+//! conventions (§V "Automatic inference"), generating the mutual-exclusion
+//! predicate for an edge the first time any of its lock variables is
+//! touched.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::clock::hvc::{Hvc, HvcInterval};
+use crate::detect::assign::monitor_index;
+use crate::detect::candidate::Candidate;
+use crate::predicate::infer;
+use crate::predicate::spec::{PredId, PredKind, Registry};
+use crate::sim::{ProcId, Time};
+use crate::store::table::Table;
+use crate::store::value::{Interner, KeyId, Value};
+
+/// Per-(pred, clause, conjunct) tracking state.
+#[derive(Debug, Clone)]
+struct ConjState {
+    /// HVC when the current state epoch began (start of candidate interval)
+    since: Hvc,
+    /// truth of the conjunct during the current epoch
+    truth: bool,
+}
+
+/// What one PUT interception produced; the server turns these into
+/// messages and CPU charges.
+#[derive(Debug, Default)]
+pub struct DetectorOutput {
+    /// (destination monitor, candidate)
+    pub candidates: Vec<(ProcId, Candidate)>,
+    /// (destination monitor, inferred predicate) registrations
+    pub registrations: Vec<(ProcId, PredId)>,
+    /// conjunct evaluations performed (CPU cost accounting)
+    pub checks: u32,
+}
+
+pub struct LocalDetector {
+    server_idx: u16,
+    registry: Rc<RefCell<Registry>>,
+    interner: Rc<RefCell<Interner>>,
+    /// monitor actor ids, indexed by monitor number
+    monitors: Vec<ProcId>,
+    /// cache of relevant variables: var → sibling values (pre-PUT state)
+    cache: HashMap<KeyId, Vec<Value>>,
+    /// conjunct tracking, keyed by (pred, clause, conjunct)
+    states: HashMap<(PredId, u16, u16), ConjState>,
+    /// per-server monotone candidate sequence
+    seq: u64,
+    /// enable naming-convention inference
+    pub infer_enabled: bool,
+    /// candidates emitted (stats)
+    pub emitted: u64,
+}
+
+impl LocalDetector {
+    pub fn new(
+        server_idx: u16,
+        registry: Rc<RefCell<Registry>>,
+        interner: Rc<RefCell<Interner>>,
+        monitors: Vec<ProcId>,
+        infer_enabled: bool,
+    ) -> Self {
+        Self {
+            server_idx,
+            registry,
+            interner,
+            monitors,
+            cache: HashMap::new(),
+            states: HashMap::new(),
+            seq: 0,
+            infer_enabled,
+            emitted: 0,
+        }
+    }
+
+    pub fn monitor_of(&self, pred_name: &str) -> ProcId {
+        self.monitors[monitor_index(pred_name, self.monitors.len())]
+    }
+
+    /// Seed the cache for a predicate's variables from the current table
+    /// (done at registration so pre-state values are always available).
+    fn seed_pred_cache(&mut self, pred: PredId, table: &Table) {
+        let reg = self.registry.borrow();
+        let spec = reg.get(pred);
+        for var in spec.vars() {
+            self.cache
+                .entry(var)
+                .or_insert_with(|| table.sibling_values(var));
+        }
+    }
+
+    /// Register all predicates currently in the registry (startup).
+    pub fn sync_registry(&mut self, table: &Table) {
+        let ids: Vec<PredId> = self.registry.borrow().iter().map(|s| s.id).collect();
+        for id in ids {
+            self.seed_pred_cache(id, table);
+        }
+    }
+
+    /// Inference hook: any request (GET or PUT) touching `key` may reveal a
+    /// lock variable whose edge predicate doesn't exist yet. Returns
+    /// registrations to forward to the owning monitors.
+    pub fn on_request_key(&mut self, key: KeyId, table: &Table) -> Vec<(ProcId, PredId)> {
+        if !self.infer_enabled {
+            return Vec::new();
+        }
+        let edge = {
+            let interner = self.interner.borrow();
+            infer::recognize(interner.name(key))
+        };
+        let Some(e) = edge else { return Vec::new() };
+        let name = infer::pred_name(e.a, e.b);
+        if self.registry.borrow().by_name(&name).is_some() {
+            return Vec::new();
+        }
+        let spec = infer::edge_predicate(e.a, e.b, &mut self.interner.borrow_mut());
+        let id = self.registry.borrow_mut().add(spec);
+        self.seed_pred_cache(id, table);
+        let dst = self.monitor_of(&name);
+        vec![(dst, id)]
+    }
+
+    /// Intercept a PUT that has just been applied to `table`. `hvc_now` is
+    /// the server's HVC after receiving the request.
+    pub fn on_put(&mut self, key: KeyId, table: &Table, hvc_now: &Hvc, now: Time) -> DetectorOutput {
+        let mut out = DetectorOutput::default();
+
+        // fast path: variable not relevant to any predicate
+        let affected: Vec<(PredId, u16, u16)> = match self.registry.borrow().affected(key) {
+            None => return out,
+            Some(list) => list.to_vec(),
+        };
+
+        // phase 1: emit candidates for every affected conjunct using the
+        // PRE-put cache (the paper's candidates describe the state during
+        // the interval that ends at this PUT)
+        for &(pred, clause, conjunct) in &affected {
+            out.checks += 1;
+            let (kind, name, conj) = {
+                let reg = self.registry.borrow();
+                let spec = reg.get(pred);
+                (
+                    spec.kind,
+                    spec.name.clone(),
+                    spec.clauses[clause as usize].conjuncts[conjunct as usize].clone(),
+                )
+            };
+            let state = self
+                .states
+                .entry((pred, clause, conjunct))
+                .or_insert_with(|| ConjState { since: hvc_now.clone(), truth: false });
+            let pre_truth = state.truth;
+            let since = state.since.clone();
+
+            // pre-state values of the conjunct's variables (from the cache)
+            let pre_values: Vec<(KeyId, Value)> = conj
+                .literals
+                .iter()
+                .flat_map(|l| {
+                    self.cache
+                        .get(&l.var)
+                        .into_iter()
+                        .flatten()
+                        .map(move |v| (l.var, v.clone()))
+                })
+                .collect();
+
+            // Linear/conjunctive predicates use *onset* emission instead
+            // (phase 2 below): the classic weak-conjunctive algorithm sends
+            // the candidate when the local predicate becomes true, which is
+            // what gives the paper's millisecond-scale detection latencies
+            // (Table III). Closing-PUT emission (Fig. 5) would delay
+            // detection until the variable's next write.
+            let emit = match kind {
+                PredKind::Linear => false,
+                PredKind::Semilinear => true,
+            };
+            if emit && since.compare(hvc_now) != crate::clock::hvc::HvcOrd::After {
+                let cand = Candidate {
+                    pred,
+                    clause,
+                    conjunct,
+                    server: ProcId(u32::MAX), // filled by the server actor
+                    seq: self.seq,
+                    interval: HvcInterval::new(since, hvc_now.clone()),
+                    values: pre_values,
+                    truth: pre_truth,
+                    emitted_at: now,
+                };
+                self.seq += 1;
+                self.emitted += 1;
+                let dst = self.monitor_of(&name);
+                out.candidates.push((dst, cand));
+            }
+        }
+
+        // phase 2: refresh the cache with the post-PUT siblings, then
+        // re-evaluate the affected conjuncts for the new state epoch; for
+        // linear predicates, a false→true transition emits an onset
+        // candidate immediately (point interval [now, now])
+        self.cache.insert(key, table.sibling_values(key));
+        for &(pred, clause, conjunct) in &affected {
+            let (kind, name, conj) = {
+                let reg = self.registry.borrow();
+                let spec = reg.get(pred);
+                (
+                    spec.kind,
+                    spec.name.clone(),
+                    spec.clauses[clause as usize].conjuncts[conjunct as usize].clone(),
+                )
+            };
+            let cache = &self.cache;
+            let post_truth = conj.satisfied_by(|k| cache.get(&k).cloned());
+            let pre_truth = self.states.get(&(pred, clause, conjunct)).map(|s| s.truth).unwrap_or(false);
+            if kind == PredKind::Linear && post_truth && !pre_truth {
+                let post_values: Vec<(KeyId, Value)> = conj
+                    .literals
+                    .iter()
+                    .flat_map(|l| {
+                        self.cache
+                            .get(&l.var)
+                            .into_iter()
+                            .flatten()
+                            .map(move |v| (l.var, v.clone()))
+                    })
+                    .collect();
+                let cand = Candidate {
+                    pred,
+                    clause,
+                    conjunct,
+                    server: ProcId(u32::MAX),
+                    seq: self.seq,
+                    interval: HvcInterval::new(hvc_now.clone(), hvc_now.clone()),
+                    values: post_values,
+                    truth: true,
+                    emitted_at: now,
+                };
+                self.seq += 1;
+                self.emitted += 1;
+                let dst = self.monitor_of(&name);
+                out.candidates.push((dst, cand));
+            }
+            let state = self.states.get_mut(&(pred, clause, conjunct)).unwrap();
+            state.truth = post_truth;
+            state.since = hvc_now.clone();
+        }
+        out
+    }
+
+    pub fn server_idx(&self) -> u16 {
+        self.server_idx
+    }
+
+    pub fn registry(&self) -> &Rc<RefCell<Registry>> {
+        &self.registry
+    }
+
+    /// Clear and re-seed the relevant-variable cache from `table` (used
+    /// after a rollback restored older state), and recompute conjunct
+    /// truths against the restored values.
+    pub fn reseed(&mut self, table: &Table) {
+        self.cache.clear();
+        self.sync_registry(table);
+        let keys: Vec<(PredId, u16, u16)> = self.states.keys().copied().collect();
+        for (pred, clause, conjunct) in keys {
+            let conj = {
+                let reg = self.registry.borrow();
+                reg.get(pred).clauses[clause as usize].conjuncts[conjunct as usize].clone()
+            };
+            let cache = &self.cache;
+            let truth = conj.satisfied_by(|k| cache.get(&k).cloned());
+            self.states.get_mut(&(pred, clause, conjunct)).unwrap().truth = truth;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::vc::VectorClock;
+    use crate::predicate::spec::{Clause, Conjunct, Literal, PredicateSpec};
+
+    fn setup(kind: PredKind) -> (LocalDetector, Table, Rc<RefCell<Interner>>, PredId, KeyId, KeyId) {
+        let interner = Interner::new();
+        let registry = Rc::new(RefCell::new(Registry::new()));
+        let (x, y) = {
+            let mut i = interner.borrow_mut();
+            (i.intern("x"), i.intern("y"))
+        };
+        let spec = PredicateSpec {
+            id: PredId(0),
+            name: "p".into(),
+            kind,
+            clauses: vec![Clause {
+                conjuncts: vec![Conjunct {
+                    literals: vec![
+                        Literal { var: x, value: Value::Int(1) },
+                        Literal { var: y, value: Value::Int(1) },
+                    ],
+                }],
+            }],
+        };
+        let id = registry.borrow_mut().add(spec);
+        let mut det = LocalDetector::new(
+            0,
+            registry,
+            interner.clone(),
+            vec![ProcId(10), ProcId(11)],
+            false,
+        );
+        let table = Table::new();
+        det.sync_registry(&table);
+        (det, table, interner, id, x, y)
+    }
+
+    fn hvc(t: i64) -> Hvc {
+        Hvc { owner: 0, v: vec![t, 0] }
+    }
+
+    fn put(table: &mut Table, det: &mut LocalDetector, key: KeyId, val: i64, t: i64, n: u64) -> DetectorOutput {
+        let mut vc = VectorClock::new();
+        for _ in 0..n {
+            vc.increment(9);
+        }
+        table.put(key, vc, Value::Int(val));
+        det.on_put(key, table, &hvc(t), t as u64 * 1_000_000)
+    }
+
+    #[test]
+    fn linear_emits_on_truth_onset() {
+        let (mut det, mut table, _i, _id, x, y) = setup(PredKind::Linear);
+        // x=1: conjunct still false (y missing) → nothing emitted
+        let o1 = put(&mut table, &mut det, x, 1, 10, 1);
+        assert!(o1.candidates.is_empty());
+        // y=1: conjunct becomes TRUE → onset candidate at [20, 20]
+        let o2 = put(&mut table, &mut det, y, 1, 20, 1);
+        assert_eq!(o2.candidates.len(), 1);
+        let c = &o2.candidates[0].1;
+        assert!(c.truth);
+        assert_eq!(c.interval.start.v[0], 20);
+        assert_eq!(c.interval.end.v[0], 20);
+        // x=0: conjunct turns false → no emission (onset-only for linear)
+        let o3 = put(&mut table, &mut det, x, 0, 30, 2);
+        assert!(o3.candidates.is_empty());
+        // x=1 again: rising edge → another onset
+        let o4 = put(&mut table, &mut det, x, 1, 40, 3);
+        assert_eq!(o4.candidates.len(), 1);
+        assert_eq!(o4.candidates[0].1.interval.start.v[0], 40);
+    }
+
+    #[test]
+    fn semilinear_always_emits_on_relevant_put() {
+        let (mut det, mut table, _i, _id, x, _y) = setup(PredKind::Semilinear);
+        let o1 = put(&mut table, &mut det, x, 1, 10, 1);
+        assert_eq!(o1.candidates.len(), 1);
+        assert!(!o1.candidates[0].1.truth, "pre-state was false");
+        let o2 = put(&mut table, &mut det, x, 2, 20, 2);
+        assert_eq!(o2.candidates.len(), 1);
+        // pre-values carried for the monitor to evaluate
+        assert!(o2.candidates[0].1.values.iter().any(|(k, v)| *k == x && *v == Value::Int(1)));
+    }
+
+    #[test]
+    fn irrelevant_put_is_free() {
+        let (mut det, mut table, interner, _id, _x, _y) = setup(PredKind::Linear);
+        let z = interner.borrow_mut().intern("z");
+        let o = put(&mut table, &mut det, z, 5, 10, 1);
+        assert_eq!(o.checks, 0);
+        assert!(o.candidates.is_empty());
+    }
+
+    #[test]
+    fn candidate_seq_monotone() {
+        let (mut det, mut table, _i, _id, x, _y) = setup(PredKind::Semilinear);
+        let o1 = put(&mut table, &mut det, x, 1, 10, 1);
+        let o2 = put(&mut table, &mut det, x, 2, 20, 2);
+        assert!(o2.candidates[0].1.seq > o1.candidates[0].1.seq);
+        assert_eq!(det.emitted, 2);
+    }
+
+    #[test]
+    fn inference_generates_edge_predicate_once() {
+        let interner = Interner::new();
+        let registry = Rc::new(RefCell::new(Registry::new()));
+        let mut det = LocalDetector::new(
+            0,
+            registry.clone(),
+            interner.clone(),
+            vec![ProcId(10), ProcId(11), ProcId(12)],
+            true,
+        );
+        let table = Table::new();
+        let flag = interner.borrow_mut().intern("flag_3_17_3");
+        let regs = det.on_request_key(flag, &table);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(registry.borrow().len(), 1);
+        assert!(registry.borrow().by_name("me_3_17").is_some());
+        // second request: already registered, no-op
+        let regs2 = det.on_request_key(flag, &table);
+        assert!(regs2.is_empty());
+        // unrelated keys do not infer
+        let other = interner.borrow_mut().intern("color_5");
+        assert!(det.on_request_key(other, &table).is_empty());
+        assert_eq!(registry.borrow().len(), 1);
+    }
+
+    #[test]
+    fn monitor_assignment_consistent_across_servers() {
+        let (det_a, ..) = setup(PredKind::Linear);
+        let interner = Interner::new();
+        let registry = Rc::new(RefCell::new(Registry::new()));
+        let det_b = LocalDetector::new(
+            1,
+            registry,
+            interner,
+            vec![ProcId(10), ProcId(11)],
+            false,
+        );
+        assert_eq!(det_a.monitor_of("me_1_2"), det_b.monitor_of("me_1_2"));
+    }
+}

@@ -1,0 +1,8 @@
+//! The monitoring module (§V): local predicate detectors on servers,
+//! monitors running the linear/semilinear detection algorithms, candidate
+//! types, and hash-based predicate→monitor assignment.
+
+pub mod assign;
+pub mod candidate;
+pub mod local;
+pub mod monitor;

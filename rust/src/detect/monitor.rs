@@ -1,0 +1,628 @@
+//! The monitor actor (§V "Implementation of the monitors", Algorithms 1–2).
+//!
+//! Each monitor owns the predicates hash-assigned to it and searches, per
+//! clause of ¬P, for a set of candidates — one per conjunct, possibly from
+//! different servers — that are **pairwise concurrent** under the 3-case
+//! HVC interval rule. Finding one is a consistent cut on which the clause
+//! (hence ¬P) holds: a violation.
+//!
+//! Implementation notes relative to the paper's Algorithms 1/2:
+//! * the global-state advancement along *forbidden* states (linear) is
+//!   realized by retiring candidates that can no longer pair with any
+//!   future candidate — each server's candidate stream is HVC-monotone,
+//!   so a physical-time retirement window is a sound over-approximation
+//!   (it only keeps more candidates than strictly needed, never misses);
+//! * *semi-forbidden* advancement (semilinear) is realized by evaluating
+//!   the conjunct's literals monitor-side on every candidate (candidates
+//!   arrive on every relevant PUT) and only admitting satisfied ones into
+//!   the search windows;
+//! * candidates are processed in small batches so interval verdicts can be
+//!   dispatched to the batched backend (`runtime::accel`) — the XLA/Pallas
+//!   path — instead of one comparison at a time.
+//!
+//! Monitors keep running after reporting (violations may recur), GC
+//! predicates with no recent activity (§V "Handling a large number of
+//! predicates"), and account their CPU on the machine they share with a
+//! server — which is precisely the monitoring overhead the paper measures.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::clock::hvc::{IntervalOrd, Millis};
+use crate::detect::candidate::{Candidate, ViolationReport};
+use crate::metrics::throughput::{Metrics, ViolationRecord};
+use crate::predicate::spec::{PredId, PredKind, Registry};
+use crate::runtime::accel::{Accel, PairQuery};
+use crate::sim::des::{Actor, Ctx};
+use crate::sim::msg::Msg;
+use crate::sim::{ms, ProcId, Time, SEC};
+
+const TAG_BATCH: u64 = 1;
+const TAG_GC: u64 = 2;
+
+/// CPU cost model for monitor work (virtual time charged on the shared
+/// machine). Calibrated in EXPERIMENTS.md §Perf.
+#[derive(Debug, Clone)]
+pub struct MonitorCost {
+    /// per candidate ingested
+    pub per_candidate: Time,
+    /// per pair verdict computed
+    pub per_pair: Time,
+    /// fixed per batch (accel dispatch overhead)
+    pub per_batch: Time,
+}
+
+impl Default for MonitorCost {
+    fn default() -> Self {
+        Self { per_candidate: 12_000, per_pair: 400, per_batch: 8_000 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MonitorCfg {
+    /// batching window before processing pending candidates
+    pub batch_window: Time,
+    /// retire candidates whose interval end is older than this (physical ms)
+    pub retire_window_ms: Millis,
+    /// GC predicates inactive for this long
+    pub inactive_timeout: Time,
+    /// GC sweep period
+    pub gc_period: Time,
+    pub cost: MonitorCost,
+}
+
+impl Default for MonitorCfg {
+    fn default() -> Self {
+        Self {
+            batch_window: ms(1.0),
+            retire_window_ms: 30_000,
+            inactive_timeout: 60 * SEC,
+            gc_period: 10 * SEC,
+            cost: MonitorCost::default(),
+        }
+    }
+}
+
+/// Search state for one clause: a window of admitted candidates per conjunct.
+#[derive(Debug, Default)]
+struct ClauseState {
+    windows: Vec<Vec<Candidate>>,
+}
+
+#[derive(Debug)]
+struct PredState {
+    last_activity: Time,
+    clauses: Vec<ClauseState>,
+}
+
+pub struct MonitorActor {
+    pub idx: u16,
+    registry: Rc<RefCell<Registry>>,
+    accel: Rc<RefCell<dyn Accel>>,
+    controller: Option<ProcId>,
+    cfg: MonitorCfg,
+    metrics: Metrics,
+    states: HashMap<PredId, PredState>,
+    pending: Vec<Candidate>,
+    batch_scheduled: bool,
+    /// stats
+    pub candidates_seen: u64,
+    pub violations_found: u64,
+    pub pairs_checked: u64,
+    pub gc_evicted: u64,
+}
+
+impl MonitorActor {
+    pub fn new(
+        idx: u16,
+        registry: Rc<RefCell<Registry>>,
+        accel: Rc<RefCell<dyn Accel>>,
+        controller: Option<ProcId>,
+        cfg: MonitorCfg,
+        metrics: Metrics,
+    ) -> Self {
+        Self {
+            idx,
+            registry,
+            accel,
+            controller,
+            cfg,
+            metrics,
+            states: HashMap::new(),
+            pending: Vec::new(),
+            batch_scheduled: false,
+            candidates_seen: 0,
+            violations_found: 0,
+            pairs_checked: 0,
+            gc_evicted: 0,
+        }
+    }
+
+    fn pred_state(&mut self, pred: PredId, now: Time) -> &mut PredState {
+        let registry = &self.registry;
+        self.states.entry(pred).or_insert_with(|| {
+            let reg = registry.borrow();
+            let spec = reg.get(pred);
+            PredState {
+                last_activity: now,
+                clauses: spec
+                    .clauses
+                    .iter()
+                    .map(|c| ClauseState { windows: vec![Vec::new(); c.conjuncts.len()] })
+                    .collect(),
+            }
+        })
+    }
+
+    /// Admit `cand` into the clause search; returns a violation witness set
+    /// if a pairwise-concurrent tuple covering all conjuncts now exists.
+    fn search(&mut self, cand: &Candidate, eps: Millis) -> Option<Vec<Candidate>> {
+        let accel = self.accel.clone();
+        let mut pairs_checked = 0u64;
+        let result = {
+            let st = self.states.get(&cand.pred).unwrap();
+            let cs = &st.clauses[cand.clause as usize];
+            search_clause(&accel, &mut pairs_checked, cs, cand, eps)
+        };
+        self.pairs_checked += pairs_checked;
+        result
+    }
+
+    /// Process one candidate: evaluate, search, admit, retire.
+    /// Returns a report if a violation was found.
+    fn process(&mut self, cand: Candidate, now: Time, eps: Millis, monitor_id: ProcId) -> Option<ViolationReport> {
+        self.candidates_seen += 1;
+        self.metrics.borrow_mut().candidates_received += 1;
+
+        let (kind, name, conj) = {
+            let reg = self.registry.borrow();
+            let spec = reg.get(cand.pred);
+            (
+                spec.kind,
+                spec.name.clone(),
+                spec.clauses[cand.clause as usize].conjuncts[cand.conjunct as usize].clone(),
+            )
+        };
+        self.pred_state(cand.pred, now).last_activity = now;
+        let peak = self.states.len();
+        {
+            let mut m = self.metrics.borrow_mut();
+            if peak > m.active_preds_peak {
+                m.active_preds_peak = peak;
+            }
+        }
+
+        // truth: linear candidates are pre-filtered by the local detector;
+        // semilinear candidates are always sent and evaluated here from the
+        // carried values (Algorithm 2's semi-forbidden advancement)
+        let truth = match kind {
+            PredKind::Linear => cand.truth,
+            PredKind::Semilinear => {
+                cand.truth
+                    || conj.satisfied_by(|k| {
+                        let vals: Vec<_> = cand
+                            .values
+                            .iter()
+                            .filter(|(vk, _)| *vk == k)
+                            .map(|(_, v)| v.clone())
+                            .collect();
+                        if vals.is_empty() {
+                            None
+                        } else {
+                            Some(vals)
+                        }
+                    })
+            }
+        };
+
+        // retire stale candidates of this predicate (physical-time window)
+        let horizon = cand.end_pt_ms() - self.cfg.retire_window_ms;
+        {
+            let st = self.states.get_mut(&cand.pred).unwrap();
+            for cs in &mut st.clauses {
+                for win in &mut cs.windows {
+                    win.retain(|o| o.end_pt_ms() >= horizon);
+                }
+            }
+        }
+
+        if !truth {
+            return None;
+        }
+
+        let found = self.search(&cand, eps);
+        match found {
+            Some(witnesses) => {
+                // consume the witnesses so one overlap reports once
+                {
+                    let st = self.states.get_mut(&cand.pred).unwrap();
+                    let cs = &mut st.clauses[cand.clause as usize];
+                    for w in &witnesses {
+                        let win = &mut cs.windows[w.conjunct as usize];
+                        win.retain(|o| !(o.server == w.server && o.seq == w.seq));
+                    }
+                }
+                self.violations_found += 1;
+                Some(ViolationReport::from_witnesses(
+                    cand.pred,
+                    name,
+                    cand.clause,
+                    witnesses,
+                    now,
+                    monitor_id,
+                ))
+            }
+            None => {
+                let st = self.states.get_mut(&cand.pred).unwrap();
+                let cs = &mut st.clauses[cand.clause as usize];
+                cs.windows[cand.conjunct as usize].push(cand);
+                None
+            }
+        }
+    }
+
+    fn flush_batch(&mut self, ctx: &mut Ctx) {
+        self.batch_scheduled = false;
+        if self.pending.is_empty() {
+            return;
+        }
+        let eps = ctx.eps_ms();
+        let pending = std::mem::take(&mut self.pending);
+        let n = pending.len() as u64;
+        let pairs_before = self.pairs_checked;
+        let mut reports = Vec::new();
+        for cand in pending {
+            if let Some(rep) = self.process(cand, ctx.now(), eps, ctx.self_id) {
+                reports.push(rep);
+            }
+        }
+        // charge the CPU for this batch on the shared machine; results
+        // leave once the computation "finishes"
+        let pairs = self.pairs_checked - pairs_before;
+        let cost = self.cfg.cost.per_batch
+            + self.cfg.cost.per_candidate * n
+            + self.cfg.cost.per_pair * pairs;
+        let delay = ctx.cpu_delay(cost);
+        for mut rep in reports {
+            rep.detected_at = ctx.now() + delay;
+            self.metrics.borrow_mut().record_violation(ViolationRecord {
+                pred: rep.pred,
+                name: rep.pred_name.clone(),
+                t_violate_ms: rep.t_violate_ms,
+                t_occurred_ms: rep.t_occurred_ms,
+                detected_at: rep.detected_at,
+                monitor: self.idx,
+            });
+            if let Some(ctl) = self.controller {
+                ctx.send_after(delay, ctl, Msg::Violation(Box::new(rep)));
+            }
+        }
+    }
+
+    fn gc(&mut self, now: Time) {
+        let timeout = self.cfg.inactive_timeout;
+        let before = self.states.len();
+        self.states.retain(|_, st| st.last_activity + timeout >= now);
+        self.gc_evicted += (before - self.states.len()) as u64;
+    }
+
+    /// Number of predicates currently holding monitor state.
+    pub fn active_predicates(&self) -> usize {
+        self.states.len()
+    }
+}
+
+/// Clause-level tuple search (free function so candidate windows stay
+/// borrowed while the accel runs; queries borrow intervals — no clock
+/// clones on the hot path).
+fn search_clause(
+    accel: &Rc<RefCell<dyn Accel>>,
+    pairs_checked: &mut u64,
+    cs: &ClauseState,
+    cand: &Candidate,
+    eps: Millis,
+) -> Option<Vec<Candidate>> {
+    let n_conjuncts = cs.windows.len();
+    if n_conjuncts == 1 {
+        // single conjunct: the candidate alone is the witness
+        return Some(vec![cand.clone()]);
+    }
+
+    // compatibility lists: candidates of every other conjunct that are
+    // concurrent with `cand` — one batched accel call per conjunct
+    let mut compat: Vec<Vec<&Candidate>> = Vec::with_capacity(n_conjuncts);
+    for (j, win) in cs.windows.iter().enumerate() {
+        if j == cand.conjunct as usize {
+            compat.push(Vec::new());
+            continue;
+        }
+        if win.is_empty() {
+            return None; // some conjunct has no active candidate
+        }
+        let queries: Vec<PairQuery> = win
+            .iter()
+            .map(|o| PairQuery { a: &cand.interval, b: &o.interval })
+            .collect();
+        *pairs_checked += queries.len() as u64;
+        let verdicts = accel.borrow_mut().pair_verdicts(&queries, eps);
+        let ok: Vec<&Candidate> = win
+            .iter()
+            .zip(verdicts)
+            .filter(|(_, v)| *v == IntervalOrd::Concurrent)
+            .map(|(o, _)| o)
+            .collect();
+        if ok.is_empty() {
+            return None;
+        }
+        compat.push(ok);
+    }
+
+    // DFS over the compatibility lists for a pairwise-concurrent tuple
+    let mut chosen: Vec<&Candidate> = vec![cand];
+    if dfs(accel, pairs_checked, &compat, cand.conjunct as usize, 0, &mut chosen, eps) {
+        Some(chosen.into_iter().cloned().collect())
+    } else {
+        None
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dfs<'a>(
+    accel: &Rc<RefCell<dyn Accel>>,
+    pairs_checked: &mut u64,
+    compat: &[Vec<&'a Candidate>],
+    skip: usize,
+    j: usize,
+    chosen: &mut Vec<&'a Candidate>,
+    eps: Millis,
+) -> bool {
+    if j >= compat.len() {
+        return true;
+    }
+    if j == skip {
+        return dfs(accel, pairs_checked, compat, skip, j + 1, chosen, eps);
+    }
+    'next: for &o in &compat[j] {
+        // o is already concurrent with the seed; check the rest
+        // (chosen[0] is the seed, skip it)
+        let queries: Vec<PairQuery> = chosen[1..]
+            .iter()
+            .map(|c| PairQuery { a: &c.interval, b: &o.interval })
+            .collect();
+        if !queries.is_empty() {
+            *pairs_checked += queries.len() as u64;
+            let verdicts = accel.borrow_mut().pair_verdicts(&queries, eps);
+            for v in verdicts {
+                if v != IntervalOrd::Concurrent {
+                    continue 'next;
+                }
+            }
+        }
+        chosen.push(o);
+        if dfs(accel, pairs_checked, compat, skip, j + 1, chosen, eps) {
+            return true;
+        }
+        chosen.pop();
+    }
+    false
+}
+
+impl Actor for MonitorActor {
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        ctx.schedule(self.cfg.gc_period, TAG_GC);
+    }
+
+    fn on_msg(&mut self, ctx: &mut Ctx, _from: ProcId, msg: Msg) {
+        match msg {
+            Msg::Candidate(c) => {
+                self.pending.push(*c);
+                if !self.batch_scheduled {
+                    self.batch_scheduled = true;
+                    ctx.schedule(self.cfg.batch_window, TAG_BATCH);
+                }
+            }
+            Msg::RegisterPred(_) => {
+                // registry is shared in-process; the message models the
+                // control-plane traffic and its latency
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, tag: u64) {
+        match tag {
+            TAG_BATCH => self.flush_batch(ctx),
+            TAG_GC => {
+                self.gc(ctx.now());
+                ctx.schedule(self.cfg.gc_period, TAG_GC);
+            }
+            _ => {}
+        }
+    }
+
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::hvc::{Hvc, HvcInterval};
+    use crate::metrics::throughput::MetricsHub;
+    use crate::predicate::spec::{Clause, Conjunct, Literal, PredicateSpec};
+    use crate::runtime::accel::NativeAccel;
+    use crate::store::value::{Interner, Value};
+
+    fn me_registry() -> (Rc<RefCell<Registry>>, PredId) {
+        let interner = Interner::new();
+        let registry = Rc::new(RefCell::new(Registry::new()));
+        let spec = crate::predicate::infer::edge_predicate(1, 2, &mut interner.borrow_mut());
+        let id = registry.borrow_mut().add(spec);
+        (registry, id)
+    }
+
+    fn monitor(registry: Rc<RefCell<Registry>>) -> MonitorActor {
+        MonitorActor::new(
+            0,
+            registry,
+            Rc::new(RefCell::new(NativeAccel::new())),
+            None,
+            MonitorCfg::default(),
+            MetricsHub::new(1, 1),
+        )
+    }
+
+    fn cand(pred: PredId, conjunct: u16, server: u16, seq: u64, s: i64, e: i64, truth: bool) -> Candidate {
+        let dim = 2usize;
+        let mk = |t: i64| {
+            let mut v = vec![t - 1; dim];
+            v[server as usize] = t;
+            Hvc { owner: server, v }
+        };
+        Candidate {
+            pred,
+            clause: 0,
+            conjunct,
+            server: ProcId(server as u32),
+            seq,
+            interval: HvcInterval::new(mk(s), mk(e)),
+            values: vec![],
+            truth,
+            emitted_at: 0,
+        }
+    }
+
+    #[test]
+    fn detects_concurrent_conjuncts_across_servers() {
+        let (reg, id) = me_registry();
+        let mut mon = monitor(reg);
+        // conjunct 0 true on server 0 during [100, 200]
+        let r1 = mon.process(cand(id, 0, 0, 0, 100, 200, true), 0, 5, ProcId(9));
+        assert!(r1.is_none(), "no partner yet");
+        // conjunct 1 true on server 1 during [150, 250] → overlap → violation
+        let r2 = mon.process(cand(id, 1, 1, 0, 150, 250, true), 0, 5, ProcId(9));
+        let rep = r2.expect("violation detected");
+        assert_eq!(rep.witnesses.len(), 2);
+        assert_eq!(rep.t_violate_ms, 100, "safe estimate = min start");
+        assert_eq!(mon.violations_found, 1);
+    }
+
+    #[test]
+    fn ordered_intervals_do_not_fire() {
+        let (reg, id) = me_registry();
+        let mut mon = monitor(reg);
+        mon.process(cand(id, 0, 0, 0, 100, 110, true), 0, 2, ProcId(9));
+        // far later, clearly ordered (separation ≫ eps)
+        let r = mon.process(cand(id, 1, 1, 0, 500, 510, true), 0, 2, ProcId(9));
+        assert!(r.is_none(), "happened-before intervals are not a violation");
+    }
+
+    #[test]
+    fn uncertain_window_fires_conservatively() {
+        let (reg, id) = me_registry();
+        let mut mon = monitor(reg);
+        mon.process(cand(id, 0, 0, 0, 100, 110, true), 0, 50, ProcId(9));
+        // ends before the other starts, but within eps=50 → concurrent
+        let r = mon.process(cand(id, 1, 1, 0, 120, 130, true), 0, 50, ProcId(9));
+        assert!(r.is_some(), "eps-uncertain pairs must be reported");
+    }
+
+    #[test]
+    fn false_semilinear_candidates_do_not_enter_windows() {
+        let (reg, id) = me_registry();
+        let mut mon = monitor(reg);
+        let mut c = cand(id, 0, 0, 0, 100, 200, false);
+        c.values = vec![]; // no values → conjunct unsatisfied
+        assert!(mon.process(c, 0, 5, ProcId(9)).is_none());
+        let r = mon.process(cand(id, 1, 1, 0, 150, 250, true), 0, 5, ProcId(9));
+        assert!(r.is_none(), "false candidate must not act as witness");
+    }
+
+    #[test]
+    fn semilinear_truth_reevaluated_from_values() {
+        let interner = Interner::new();
+        let registry = Rc::new(RefCell::new(Registry::new()));
+        let x = interner.borrow_mut().intern("x");
+        let spec = PredicateSpec {
+            id: PredId(0),
+            name: "sx".into(),
+            kind: PredKind::Semilinear,
+            clauses: vec![Clause {
+                conjuncts: vec![Conjunct {
+                    literals: vec![Literal { var: x, value: Value::Int(1) }],
+                }],
+            }],
+        };
+        let id = registry.borrow_mut().add(spec);
+        let mut mon = monitor(registry);
+        let mut c = cand(id, 0, 0, 0, 100, 200, false);
+        c.values = vec![(x, Value::Int(1))];
+        // single conjunct + values satisfy → immediate violation
+        let r = mon.process(c, 0, 5, ProcId(9));
+        assert!(r.is_some());
+    }
+
+    #[test]
+    fn witnesses_consumed_no_double_report() {
+        let (reg, id) = me_registry();
+        let mut mon = monitor(reg);
+        mon.process(cand(id, 0, 0, 0, 100, 200, true), 0, 5, ProcId(9));
+        assert!(mon.process(cand(id, 1, 1, 0, 150, 250, true), 0, 5, ProcId(9)).is_some());
+        // a third overlapping candidate has no partner left
+        let r = mon.process(cand(id, 1, 1, 1, 160, 260, true), 0, 5, ProcId(9));
+        assert!(r.is_none(), "witnesses were consumed");
+    }
+
+    #[test]
+    fn retirement_bounds_window_size() {
+        let (reg, id) = me_registry();
+        let mut mon = monitor(reg);
+        mon.cfg.retire_window_ms = 1_000;
+        for k in 0..50 {
+            mon.process(cand(id, 0, 0, k, 100 + k as i64, 110 + k as i64, true), 0, 2, ProcId(9));
+        }
+        // a much later candidate retires everything old
+        mon.process(cand(id, 0, 0, 99, 100_000, 100_010, true), 0, 2, ProcId(9));
+        let st = mon.states.get(&id).unwrap();
+        assert!(st.clauses[0].windows[0].len() <= 2, "old candidates retired");
+    }
+
+    #[test]
+    fn gc_evicts_inactive_predicates() {
+        let (reg, id) = me_registry();
+        let mut mon = monitor(reg);
+        mon.process(cand(id, 0, 0, 0, 100, 200, true), 0, 5, ProcId(9));
+        assert_eq!(mon.active_predicates(), 1);
+        mon.gc(mon.cfg.inactive_timeout + 1);
+        assert_eq!(mon.active_predicates(), 0);
+        assert_eq!(mon.gc_evicted, 1);
+    }
+
+    #[test]
+    fn three_way_conjunctive_tuple() {
+        // conjunctive predicate with 3 conjuncts (one var each) — the
+        // Conjunctive app shape; all three must be pairwise concurrent
+        let interner = Interner::new();
+        let registry = Rc::new(RefCell::new(Registry::new()));
+        let mut lits = Vec::new();
+        for i in 0..3 {
+            let v = interner.borrow_mut().intern(&format!("c{i}"));
+            lits.push(Conjunct { literals: vec![Literal { var: v, value: Value::Bool(true) }] });
+        }
+        let spec = PredicateSpec {
+            id: PredId(0),
+            name: "conj".into(),
+            kind: PredKind::Linear,
+            clauses: vec![Clause { conjuncts: lits }],
+        };
+        let id = registry.borrow_mut().add(spec);
+        let mut mon = monitor(registry);
+        assert!(mon.process(cand(id, 0, 0, 0, 100, 300, true), 0, 2, ProcId(9)).is_none());
+        assert!(mon.process(cand(id, 1, 1, 0, 150, 350, true), 0, 2, ProcId(9)).is_none());
+        let r = mon.process(cand(id, 2, 0, 1, 200, 280, true), 0, 2, ProcId(9));
+        assert!(r.is_some(), "three pairwise-overlapping intervals");
+        assert_eq!(r.unwrap().witnesses.len(), 3);
+    }
+}

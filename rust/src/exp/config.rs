@@ -1,0 +1,157 @@
+//! Experiment configuration: one struct describes a full run (topology,
+//! consistency, app, monitoring, recovery), mirroring the parameters the
+//! paper varies in §VI.
+
+use crate::client::consistency::{ClientTiming, ConsistencyCfg};
+use crate::clock::hvc::{Millis, EPS_INF};
+use crate::detect::monitor::MonitorCfg;
+use crate::rollback::recovery::RecoveryPolicy;
+use crate::sim::{Time, SEC};
+use crate::store::server::ServerCfg;
+
+/// Which testbed to simulate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TopoKind {
+    /// Ohio / Oregon / Frankfurt (RTT 76/103/163 ms) — §VI-B
+    AwsGlobal,
+    /// one region, `zones` availability zones, <2 ms — §VI-B workload study
+    AwsRegional { zones: usize },
+    /// the paper's proxy lab (Fig. 8): 3 regions, tunable one-way delay
+    LocalLab { inter_ms: f64 },
+    /// single flat region (tests/micro)
+    Flat { one_way_ms: f64 },
+}
+
+/// Which case study to run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AppKind {
+    /// Social Media Analysis: power-law graph coloring (§VI-A)
+    Coloring {
+        nodes: usize,
+        /// Holme–Kim m (edges per node; paper ratio 150k/50k ⇒ 3)
+        edges_per_node: usize,
+        task_size: usize,
+        loop_forever: bool,
+    },
+    /// Weather Monitoring: planar grid, tunable PUT%
+    Weather { grid_w: usize, grid_h: usize, put_pct: f64, use_locks: bool },
+    /// Conjunctive stress / latency test
+    Conjunctive { n_preds: usize, n_conjuncts: usize, beta: f64, put_pct: f64 },
+}
+
+/// Verdict backend for the monitors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccelKind {
+    /// scalar Rust reference
+    Native,
+    /// AOT-compiled Pallas/JAX kernels through PJRT (requires artifacts/)
+    Xla,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    pub name: String,
+    pub consistency: ConsistencyCfg,
+    pub n_clients: usize,
+    /// monitoring module enabled?
+    pub monitors: bool,
+    pub recovery: RecoveryPolicy,
+    pub topo: TopoKind,
+    pub app: AppKind,
+    pub seed: u64,
+    /// virtual run length
+    pub duration: Time,
+    /// HVC ε; the paper's experiments treat ε as ∞ (§III-A) — pure vector
+    /// clocks. Finite values are exercised in ablations.
+    pub eps_ms: Millis,
+    /// physical clock skew bound of the simulated cluster
+    pub skew_ms: f64,
+    /// Voldemort server threads per machine (paper: M5 instances run 2)
+    pub server_threads: usize,
+    pub server_cfg: ServerCfg,
+    pub monitor_cfg: MonitorCfg,
+    pub timing: ClientTiming,
+    pub drop_prob: f64,
+    pub accel: AccelKind,
+}
+
+impl ExpConfig {
+    /// Baseline config: fill in the paper's defaults, then tweak fields.
+    pub fn new(name: &str, consistency: ConsistencyCfg, app: AppKind) -> Self {
+        Self {
+            name: name.to_string(),
+            consistency,
+            n_clients: 15,
+            monitors: true,
+            recovery: RecoveryPolicy::NotifyClients,
+            topo: TopoKind::AwsGlobal,
+            app,
+            seed: 42,
+            duration: 120 * SEC,
+            eps_ms: EPS_INF,
+            skew_ms: 0.5,
+            server_threads: 2,
+            server_cfg: ServerCfg::default(),
+            monitor_cfg: MonitorCfg::default(),
+            timing: ClientTiming::default(),
+            drop_prob: 0.0,
+            accel: AccelKind::Native,
+        }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.consistency.n
+    }
+
+    pub fn n_regions(&self) -> usize {
+        match self.topo {
+            TopoKind::AwsGlobal => 3,
+            TopoKind::AwsRegional { zones } => zones,
+            TopoKind::LocalLab { .. } => 3,
+            TopoKind::Flat { .. } => 1,
+        }
+    }
+
+    pub fn base_ms(&self) -> Vec<Vec<f64>> {
+        use crate::sim::net::Topology;
+        match self.topo {
+            TopoKind::AwsGlobal => Topology::aws_global(),
+            TopoKind::AwsRegional { zones } => Topology::aws_regional(zones),
+            TopoKind::LocalLab { inter_ms } => Topology::local_lab(inter_ms),
+            TopoKind::Flat { one_way_ms } => vec![vec![one_way_ms]],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let cfg = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Conjunctive { n_preds: 10, n_conjuncts: 10, beta: 0.01, put_pct: 0.5 },
+        );
+        assert_eq!(cfg.n_servers(), 3);
+        assert_eq!(cfg.server_threads, 2);
+        assert_eq!(cfg.eps_ms, EPS_INF, "paper treats eps as infinity");
+        assert_eq!(cfg.n_regions(), 3);
+        assert_eq!(cfg.base_ms()[0][1], 38.0);
+    }
+
+    #[test]
+    fn topo_matrices() {
+        let mut cfg = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n5r1w1(),
+            AppKind::Weather { grid_w: 10, grid_h: 10, put_pct: 0.5, use_locks: true },
+        );
+        cfg.topo = TopoKind::AwsRegional { zones: 5 };
+        assert_eq!(cfg.n_regions(), 5);
+        assert!(cfg.base_ms()[0][1] < 2.0);
+        cfg.topo = TopoKind::LocalLab { inter_ms: 100.0 };
+        assert_eq!(cfg.base_ms()[0][1], 100.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Experiment assembly: configuration, the runner that wires topology +
+//! actors + shared state into a `Sim`, and the per-figure/table scenario
+//! presets.
+
+pub mod config;
+pub mod runner;
+pub mod scenarios;

@@ -1,0 +1,352 @@
+//! The experiment runner: wires an [`ExpConfig`] into a full simulated
+//! deployment — servers (with co-located monitors sharing the machine's
+//! CPU threads, as deployed in the paper), clients, and the rollback
+//! controller — runs it, and extracts the measurements.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::apps::coloring::{ColoringApp, ColoringShared};
+use crate::apps::conjunctive::{ConjunctiveApp, ConjunctiveShared};
+use crate::apps::graph::Graph;
+use crate::apps::peterson::{MeOracle, MeOracleRef};
+use crate::apps::weather::{WeatherApp, WeatherShared};
+use crate::client::actor::ClientActor;
+use crate::client::app::AppLogic;
+use crate::detect::local::LocalDetector;
+use crate::detect::monitor::MonitorActor;
+use crate::exp::config::{AccelKind, AppKind, ExpConfig};
+use crate::metrics::throughput::{stable_mean, Metrics, MetricsHub};
+use crate::predicate::spec::Registry;
+use crate::rollback::recovery::ControllerActor;
+use crate::runtime::accel::{Accel, NativeAccel};
+use crate::sim::des::{Sim, SimStats};
+use crate::sim::net::TopologyBuilder;
+use crate::sim::ProcId;
+use crate::store::server::ServerActor;
+use crate::store::value::Interner;
+use crate::util::rng::Rng;
+
+/// Everything a bench/example needs after a run.
+pub struct ExpResult {
+    pub name: String,
+    pub metrics: Metrics,
+    pub sim_stats: SimStats,
+    pub oracle: MeOracleRef,
+    /// stable-phase aggregated throughput, application perspective (ops/s)
+    pub app_tps: f64,
+    /// stable-phase aggregated throughput, server perspective (ops/s)
+    pub server_tps: f64,
+    pub violations_detected: usize,
+    pub actual_me_violations: usize,
+    /// detection latencies (ms) of every reported violation
+    pub detection_latencies_ms: Vec<f64>,
+    /// aggregate monitor stats
+    pub candidates_seen: u64,
+    pub pairs_checked: u64,
+    pub active_preds_peak: usize,
+    pub gc_evicted: u64,
+    /// aggregate client stats
+    pub ops_ok: u64,
+    pub ops_failed: u64,
+    pub restarts: u64,
+    /// controller stats
+    pub recoveries: u64,
+}
+
+/// Run one experiment to completion.
+pub fn run(cfg: &ExpConfig) -> ExpResult {
+    let s = cfg.n_servers();
+    let c = cfg.n_clients;
+    let n_regions = cfg.n_regions() as u8;
+
+    // ---- actor id layout: servers | monitors | clients | controller ----
+    let server_ids: Vec<ProcId> = (0..s as u32).map(ProcId).collect();
+    let monitor_ids: Vec<ProcId> = (s as u32..2 * s as u32).map(ProcId).collect();
+    let client_ids: Vec<ProcId> = (2 * s as u32..(2 * s + c) as u32).map(ProcId).collect();
+    let controller_id = ProcId((2 * s + c) as u32);
+
+    // ---- topology ----
+    let mut tb = TopologyBuilder::new();
+    let mut server_machines = Vec::new();
+    for i in 0..s {
+        let (_, m) = tb.add_machine_proc(i as u8 % n_regions, cfg.server_threads);
+        server_machines.push(m);
+    }
+    for i in 0..s {
+        // monitor co-located with server i (shares CPU threads)
+        tb.add_colocated_proc(server_machines[i]);
+    }
+    for i in 0..c {
+        tb.add_machine_proc(i as u8 % n_regions, 2);
+    }
+    tb.add_machine_proc(0, 2); // controller
+    let (topo, threads) = tb.build(cfg.base_ms(), cfg.drop_prob);
+
+    // ---- shared state ----
+    let interner = Interner::new();
+    let registry = Rc::new(RefCell::new(Registry::new()));
+    let metrics = MetricsHub::new(s, c);
+    let oracle = MeOracle::new();
+    let accel: Rc<RefCell<dyn Accel>> = match cfg.accel {
+        AccelKind::Native => Rc::new(RefCell::new(NativeAccel::new())),
+        AccelKind::Xla => crate::runtime::pjrt::shared_xla_accel(),
+    };
+
+    // ---- application construction ----
+    let mut app_rng = Rng::stream(cfg.seed, 0xA99);
+    let mut apps: Vec<Box<dyn AppLogic>> = Vec::with_capacity(c);
+    match &cfg.app {
+        AppKind::Coloring { nodes, edges_per_node, task_size, loop_forever } => {
+            let graph = Rc::new(Graph::powerlaw_cluster(*nodes, *edges_per_node, 0.3, &mut app_rng));
+            let sh = ColoringShared::new(
+                graph,
+                c,
+                interner.clone(),
+                oracle.clone(),
+                metrics.clone(),
+                *task_size,
+                *loop_forever,
+            );
+            for i in 0..c {
+                apps.push(Box::new(ColoringApp::new(sh.clone(), i as u32)));
+            }
+        }
+        AppKind::Weather { grid_w, grid_h, put_pct, use_locks } => {
+            let graph = Rc::new(Graph::grid(*grid_w, *grid_h));
+            let sh = WeatherShared::new(
+                graph,
+                c,
+                interner.clone(),
+                oracle.clone(),
+                *put_pct,
+                *use_locks,
+            );
+            for i in 0..c {
+                apps.push(Box::new(WeatherApp::new(sh.clone(), i as u32, 0)));
+            }
+        }
+        AppKind::Conjunctive { n_preds, n_conjuncts, beta, put_pct } => {
+            let sh = ConjunctiveShared::setup(
+                &registry,
+                interner.clone(),
+                *n_preds,
+                *n_conjuncts,
+                *beta,
+                *put_pct,
+            );
+            for i in 0..c {
+                apps.push(Box::new(ConjunctiveApp::new(sh.clone(), i as u32, 0)));
+            }
+        }
+    }
+
+    // ---- simulation assembly ----
+    let mut sim = Sim::new(topo, &threads, cfg.seed, cfg.skew_ms, cfg.eps_ms);
+    for i in 0..s {
+        let detector = cfg.monitors.then(|| {
+            LocalDetector::new(
+                i as u16,
+                registry.clone(),
+                interner.clone(),
+                monitor_ids.clone(),
+                true, // naming-convention inference on
+            )
+        });
+        sim.add_actor(Box::new(ServerActor::new(
+            i as u16,
+            s,
+            detector,
+            cfg.server_cfg.clone(),
+            metrics.clone(),
+            Some(controller_id),
+        )));
+    }
+    for i in 0..s {
+        sim.add_actor(Box::new(MonitorActor::new(
+            i as u16,
+            registry.clone(),
+            accel.clone(),
+            Some(controller_id),
+            cfg.monitor_cfg.clone(),
+            metrics.clone(),
+        )));
+    }
+    for (i, app) in apps.into_iter().enumerate() {
+        sim.add_actor(Box::new(ClientActor::new(
+            i as u32,
+            server_ids.clone(),
+            cfg.consistency,
+            cfg.timing,
+            app,
+            metrics.clone(),
+        )));
+    }
+    sim.add_actor(Box::new(ControllerActor::new(
+        server_ids.clone(),
+        client_ids.clone(),
+        cfg.recovery,
+        metrics.clone(),
+    )));
+
+    // ---- run ----
+    sim.run_until(cfg.duration);
+
+    // ---- extraction ----
+    let (app_tps, server_tps, violations_detected, detection_latencies_ms) = {
+        let m = metrics.borrow();
+        (
+            stable_mean(&m.app_series(), 0.25),
+            stable_mean(&m.server_series(), 0.25),
+            m.violations.len(),
+            m.violations.iter().map(|v| v.detection_latency_ms()).collect::<Vec<f64>>(),
+        )
+    };
+    let mut candidates_seen = 0;
+    let mut pairs_checked = 0;
+    let mut gc_evicted = 0;
+    for &id in &monitor_ids {
+        if let Some(any) = sim.actor_mut(id).as_any() {
+            if let Some(mon) = any.downcast_mut::<MonitorActor>() {
+                candidates_seen += mon.candidates_seen;
+                pairs_checked += mon.pairs_checked;
+                gc_evicted += mon.gc_evicted;
+            }
+        }
+    }
+    let (mut ops_ok, mut ops_failed, mut restarts) = (0, 0, 0);
+    for &id in &client_ids {
+        if let Some(any) = sim.actor_mut(id).as_any() {
+            if let Some(cl) = any.downcast_mut::<ClientActor>() {
+                ops_ok += cl.ops_ok;
+                ops_failed += cl.ops_failed;
+                restarts += cl.restarts;
+            }
+        }
+    }
+    let recoveries = sim
+        .actor_mut(controller_id)
+        .as_any()
+        .and_then(|a| a.downcast_mut::<ControllerActor>())
+        .map(|ctl| ctl.recoveries)
+        .unwrap_or(0);
+
+    let active_preds_peak = metrics.borrow().active_preds_peak;
+    let actual_me_violations = oracle.borrow().actual_violations.len();
+    ExpResult {
+        name: cfg.name.clone(),
+        sim_stats: sim.stats().clone(),
+        metrics,
+        oracle,
+        app_tps,
+        server_tps,
+        violations_detected,
+        actual_me_violations,
+        detection_latencies_ms,
+        candidates_seen,
+        pairs_checked,
+        active_preds_peak,
+        gc_evicted,
+        ops_ok,
+        ops_failed,
+        restarts,
+        recoveries,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::consistency::ConsistencyCfg;
+    use crate::sim::SEC;
+
+    fn small_conj(consistency: ConsistencyCfg, monitors: bool) -> ExpConfig {
+        let mut cfg = ExpConfig::new(
+            "test",
+            consistency,
+            AppKind::Conjunctive { n_preds: 4, n_conjuncts: 3, beta: 0.2, put_pct: 0.5 },
+        );
+        cfg.n_clients = 6;
+        cfg.monitors = monitors;
+        cfg.duration = 20 * SEC;
+        cfg.topo = crate::exp::config::TopoKind::AwsRegional { zones: 3 };
+        cfg
+    }
+
+    #[test]
+    fn conjunctive_run_detects_violations() {
+        let res = run(&small_conj(ConsistencyCfg::n3r1w1(), true));
+        assert!(res.ops_ok > 100, "clients made progress: {}", res.ops_ok);
+        assert!(res.app_tps > 0.0);
+        assert!(res.server_tps > res.app_tps, "servers see replication fan-out");
+        assert!(res.candidates_seen > 0, "candidates flowed to monitors");
+        assert!(
+            res.violations_detected > 0,
+            "beta=0.2 with 3 conjuncts must produce detectable violations"
+        );
+        for l in &res.detection_latencies_ms {
+            assert!(*l > -6.0, "latency cannot be (very) negative: {l}");
+        }
+    }
+
+    #[test]
+    fn monitors_off_means_no_candidates() {
+        let res = run(&small_conj(ConsistencyCfg::n3r1w1(), false));
+        assert_eq!(res.candidates_seen, 0);
+        assert_eq!(res.violations_detected, 0);
+        assert!(res.ops_ok > 100);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = run(&small_conj(ConsistencyCfg::n3r1w1(), true));
+        let b = run(&small_conj(ConsistencyCfg::n3r1w1(), true));
+        assert_eq!(a.ops_ok, b.ops_ok);
+        assert_eq!(a.violations_detected, b.violations_detected);
+        assert_eq!(a.app_tps, b.app_tps);
+    }
+
+    #[test]
+    fn eventual_beats_sequential_throughput() {
+        // the paper's core benefit claim, on the conjunctive workload
+        let ev = run(&small_conj(ConsistencyCfg::n3r1w1(), true));
+        let seq = run(&small_conj(ConsistencyCfg::n3r1w3(), false));
+        assert!(
+            ev.app_tps > seq.app_tps,
+            "eventual ({}) must out-run sequential ({})",
+            ev.app_tps,
+            seq.app_tps
+        );
+    }
+
+    #[test]
+    fn coloring_small_end_to_end() {
+        let mut cfg = ExpConfig::new(
+            "coloring-e2e",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Coloring { nodes: 120, edges_per_node: 3, task_size: 5, loop_forever: false },
+        );
+        cfg.n_clients = 4;
+        cfg.duration = 400 * SEC;
+        let res = run(&cfg);
+        assert!(res.metrics.borrow().tasks_completed > 0, "tasks completed");
+        assert!(res.ops_ok > 200);
+        // predicates were inferred on demand from lock variable names
+        assert!(res.active_preds_peak > 0, "inferred predicates monitored");
+    }
+
+    #[test]
+    fn weather_runs_with_locks() {
+        let mut cfg = ExpConfig::new(
+            "weather-e2e",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Weather { grid_w: 10, grid_h: 10, put_pct: 0.5, use_locks: true },
+        );
+        cfg.n_clients = 4;
+        cfg.duration = 30 * SEC;
+        cfg.topo = crate::exp::config::TopoKind::AwsRegional { zones: 3 };
+        let res = run(&cfg);
+        assert!(res.ops_ok > 100);
+        assert!(res.candidates_seen > 0, "boundary locks feed the monitors");
+    }
+}

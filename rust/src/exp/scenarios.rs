@@ -1,0 +1,229 @@
+//! Scenario presets — one builder per paper experiment (see DESIGN.md §4).
+//!
+//! Every builder takes a `scale` knob: 1.0 reproduces the paper's setup
+//! parameters (50 000-node graph, long runs); smaller values shrink the
+//! workload and duration proportionally so benches finish in CI time while
+//! preserving the *shape* of the results (who wins, by what factor).
+
+use crate::client::consistency::{ClientTiming, ConsistencyCfg};
+use crate::exp::config::{AppKind, ExpConfig, TopoKind};
+use crate::sim::{Time, SEC};
+
+fn dur(scale: f64, full_secs: u64) -> Time {
+    ((full_secs as f64 * scale).max(20.0) as u64) * SEC
+}
+
+fn graph_nodes(scale: f64) -> usize {
+    ((50_000.0 * scale) as usize).max(200)
+}
+
+/// Fig. 9 / Fig. 10 / Fig. 11 base: Social Media Analysis on the AWS
+/// global topology, N = 3 servers, 15 clients (C/N = 5).
+pub fn social_media_aws(
+    consistency: ConsistencyCfg,
+    monitors: bool,
+    scale: f64,
+    seed: u64,
+) -> ExpConfig {
+    let mut cfg = ExpConfig::new(
+        &format!(
+            "social-media-{}-{}",
+            consistency.label(),
+            if monitors { "mon" } else { "nomon" }
+        ),
+        consistency,
+        AppKind::Coloring {
+            nodes: graph_nodes(scale),
+            edges_per_node: 3,
+            task_size: 10,
+            loop_forever: true,
+        },
+    );
+    cfg.n_clients = 15;
+    cfg.monitors = monitors;
+    cfg.topo = TopoKind::AwsGlobal;
+    cfg.duration = dur(scale, 600);
+    cfg.seed = seed;
+    // the paper's coloring clients spend ~115 ms of client-side processing
+    // per op (15 clients ≈ 128 ops/s aggregated, §VI-A)
+    cfg.timing = ClientTiming::with_think(115.0);
+    cfg
+}
+
+/// Fig. 12: Weather Monitoring, one AWS region / 5 AZs, N = 5, 10 clients,
+/// PUT% ∈ {25, 50}.
+pub fn weather_regional(
+    consistency: ConsistencyCfg,
+    monitors: bool,
+    put_pct: f64,
+    scale: f64,
+    seed: u64,
+) -> ExpConfig {
+    let side = ((80.0 * scale.sqrt()) as usize).max(20);
+    let mut cfg = ExpConfig::new(
+        &format!(
+            "weather-{}-put{}-{}",
+            consistency.label(),
+            (put_pct * 100.0) as u32,
+            if monitors { "mon" } else { "nomon" }
+        ),
+        consistency,
+        AppKind::Weather { grid_w: side, grid_h: side, put_pct, use_locks: true },
+    );
+    cfg.n_clients = 10;
+    cfg.monitors = monitors;
+    cfg.topo = TopoKind::AwsRegional { zones: 5 };
+    cfg.duration = dur(scale, 300);
+    cfg.seed = seed;
+    // light clients (§VI-B stresses the servers relative to the global
+    // setup, but the reported throughputs keep them below saturation)
+    cfg.timing = ClientTiming::with_think(2.5);
+    cfg
+}
+
+/// Table III: Conjunctive detection-latency stress, same regional setup as
+/// Fig. 12, β = 1 %, PUT% = 50, predicates of 10 conjuncts.
+pub fn conjunctive_regional(
+    consistency: ConsistencyCfg,
+    monitors: bool,
+    scale: f64,
+    seed: u64,
+) -> ExpConfig {
+    let mut cfg = ExpConfig::new(
+        &format!(
+            "conjunctive-{}-{}",
+            consistency.label(),
+            if monitors { "mon" } else { "nomon" }
+        ),
+        consistency,
+        AppKind::Conjunctive { n_preds: 10, n_conjuncts: 10, beta: 0.01, put_pct: 0.5 },
+    );
+    cfg.n_clients = 10;
+    cfg.monitors = monitors;
+    cfg.topo = TopoKind::AwsRegional { zones: 5 };
+    cfg.duration = dur(scale, 600);
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::with_think(2.5);
+    cfg
+}
+
+/// Table IV rows: the local-lab proxy network (Fig. 8) with a tunable
+/// inter-region one-way latency (50 / 100 ms); N = 3 servers.
+pub fn local_lab(
+    app: LocalLabApp,
+    consistency: ConsistencyCfg,
+    monitors: bool,
+    inter_ms: f64,
+    scale: f64,
+    seed: u64,
+) -> ExpConfig {
+    let (app_kind, n_clients, app_label) = match app {
+        LocalLabApp::Conjunctive => (
+            AppKind::Conjunctive { n_preds: 10, n_conjuncts: 10, beta: 0.01, put_pct: 0.5 },
+            20,
+            "conjunctive",
+        ),
+        LocalLabApp::Weather => {
+            let side = ((60.0 * scale.sqrt()) as usize).max(16);
+            (
+                AppKind::Weather { grid_w: side, grid_h: side, put_pct: 0.5, use_locks: true },
+                20,
+                "weather",
+            )
+        }
+        LocalLabApp::SocialMedia => (
+            AppKind::Coloring {
+                nodes: graph_nodes(scale * 0.4),
+                edges_per_node: 3,
+                task_size: 10,
+                loop_forever: true,
+            },
+            10,
+            "social-media",
+        ),
+    };
+    let mut cfg = ExpConfig::new(
+        &format!(
+            "lab{}ms-{}-{}-{}",
+            inter_ms as u32,
+            app_label,
+            consistency.label(),
+            if monitors { "mon" } else { "nomon" }
+        ),
+        consistency,
+        app_kind,
+    );
+    cfg.n_clients = n_clients;
+    cfg.monitors = monitors;
+    cfg.topo = TopoKind::LocalLab { inter_ms };
+    cfg.duration = dur(scale, 300);
+    cfg.seed = seed;
+    // Table IV's app throughputs (e.g. 470 ops/s over C/N=20) imply heavy
+    // clients here as well
+    cfg.timing = ClientTiming::with_think(115.0);
+    cfg
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalLabApp {
+    Conjunctive,
+    Weather,
+    SocialMedia,
+}
+
+/// The paper's Table II consistency presets for N = 3 and N = 5.
+pub fn table2_n3() -> [ConsistencyCfg; 3] {
+    [ConsistencyCfg::n3r1w3(), ConsistencyCfg::n3r2w2(), ConsistencyCfg::n3r1w1()]
+}
+
+pub fn table2_n5() -> [ConsistencyCfg; 3] {
+    [ConsistencyCfg::n5r1w5(), ConsistencyCfg::n5r3w3(), ConsistencyCfg::n5r1w1()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_produce_paper_parameters() {
+        let f10 = social_media_aws(ConsistencyCfg::n3r1w1(), true, 1.0, 1);
+        assert_eq!(f10.n_clients, 15);
+        assert_eq!(f10.n_servers(), 3);
+        match f10.app {
+            AppKind::Coloring { nodes, task_size, .. } => {
+                assert_eq!(nodes, 50_000);
+                assert_eq!(task_size, 10);
+            }
+            _ => panic!("wrong app"),
+        }
+
+        let f12 = weather_regional(ConsistencyCfg::n5r1w5(), true, 0.25, 1.0, 1);
+        assert_eq!(f12.n_clients, 10);
+        assert_eq!(f12.n_servers(), 5);
+        assert_eq!(f12.topo, TopoKind::AwsRegional { zones: 5 });
+
+        let t3 = conjunctive_regional(ConsistencyCfg::n5r1w1(), true, 1.0, 1);
+        match t3.app {
+            AppKind::Conjunctive { n_conjuncts, beta, put_pct, .. } => {
+                assert_eq!(n_conjuncts, 10);
+                assert_eq!(beta, 0.01);
+                assert_eq!(put_pct, 0.5);
+            }
+            _ => panic!("wrong app"),
+        }
+
+        let t4 = local_lab(LocalLabApp::Weather, ConsistencyCfg::n3r2w2(), true, 50.0, 1.0, 1);
+        assert_eq!(t4.topo, TopoKind::LocalLab { inter_ms: 50.0 });
+        assert_eq!(t4.n_clients, 20);
+    }
+
+    #[test]
+    fn scale_shrinks_but_keeps_minimums() {
+        let small = social_media_aws(ConsistencyCfg::n3r1w1(), true, 0.01, 1);
+        match small.app {
+            AppKind::Coloring { nodes, .. } => assert!(nodes >= 200),
+            _ => unreachable!(),
+        }
+        assert!(small.duration >= 20 * SEC);
+    }
+}

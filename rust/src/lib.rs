@@ -1,0 +1,33 @@
+//! # optikv — Optimistic Execution in a Key-Value Store
+//!
+//! A reproduction of *"Technical Report: Optimistic Execution in
+//! Key-Value Store"* (Nguyen, Charapko, Kulkarni, Demirbas; 2018):
+//! run algorithms designed for sequential consistency on an eventually-
+//! consistent Dynamo/Voldemort-style store, monitor the correctness
+//! predicate P with HVC-based predicate detection, and roll back (or
+//! abort/restart tasks) when P is violated.
+//!
+//! Layers:
+//! * **L3 (this crate)** — the store, the Voldemort-style quorum client,
+//!   the monitoring module (local detectors + monitors), rollback, the
+//!   paper's three applications, and the deterministic discrete-event
+//!   simulator substituting for the paper's AWS/local-lab testbeds.
+//! * **L2/L1 (python/, build-time only)** — JAX + Pallas kernels for the
+//!   batched HVC-interval verdicts, AOT-lowered to HLO text and executed
+//!   from `runtime::pjrt` via the PJRT CPU client.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured numbers.
+
+pub mod apps;
+pub mod client;
+pub mod clock;
+pub mod detect;
+pub mod exp;
+pub mod metrics;
+pub mod predicate;
+pub mod rollback;
+pub mod runtime;
+pub mod sim;
+pub mod store;
+pub mod util;

@@ -1,0 +1,156 @@
+//! optikv CLI — launch optimistic-execution experiments from the command
+//! line.
+//!
+//! ```text
+//! optikv run  --app <coloring|weather|conjunctive> --consistency N3R1W1
+//!             [--clients 15] [--duration-s 120] [--monitors true]
+//!             [--topo aws-global|aws-regional|lab50|lab100]
+//!             [--recovery none|notify|restore] [--accel native|xla]
+//!             [--put-pct 50] [--scale 0.05] [--seed 42] [--eps-ms inf]
+//! optikv table2        — print the consistency presets
+//! optikv latency-demo  — quick Table-III style latency histogram
+//! ```
+
+use optikv::client::consistency::ConsistencyCfg;
+use optikv::exp::config::{AccelKind, AppKind, ExpConfig, TopoKind};
+use optikv::exp::runner::run;
+use optikv::exp::scenarios;
+use optikv::metrics::report;
+use optikv::rollback::recovery::RecoveryPolicy;
+use optikv::sim::SEC;
+use optikv::util::cli::Args;
+use optikv::util::stats::{self, Table};
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("table2") => cmd_table2(),
+        Some("latency-demo") => cmd_latency_demo(&args),
+        _ => {
+            eprintln!("usage: optikv <run|table2|latency-demo> [flags]  (see module docs)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let consistency = ConsistencyCfg::parse(args.get_or("consistency", "N3R1W1"))
+        .expect("bad --consistency (e.g. N3R1W1)");
+    let scale = args.get_f64("scale", 0.05);
+    let seed = args.get_u64("seed", 42);
+    let put_pct = args.get_f64("put-pct", 50.0) / 100.0;
+    let app = match args.get_or("app", "conjunctive") {
+        "coloring" | "social-media" => AppKind::Coloring {
+            nodes: ((50_000.0 * scale) as usize).max(200),
+            edges_per_node: 3,
+            task_size: args.get_usize("task-size", 10),
+            loop_forever: true,
+        },
+        "weather" => {
+            let side = ((80.0 * scale.sqrt()) as usize).max(16);
+            AppKind::Weather { grid_w: side, grid_h: side, put_pct, use_locks: true }
+        }
+        "conjunctive" => AppKind::Conjunctive {
+            n_preds: args.get_usize("preds", 10),
+            n_conjuncts: args.get_usize("conjuncts", 10),
+            beta: args.get_f64("beta", 0.01),
+            put_pct,
+        },
+        other => {
+            eprintln!("unknown --app {other}");
+            std::process::exit(2);
+        }
+    };
+    let mut cfg = ExpConfig::new("cli-run", consistency, app);
+    cfg.n_clients = args.get_usize("clients", 15);
+    cfg.monitors = args.get_bool("monitors", true);
+    cfg.duration = args.get_u64("duration-s", 120) * SEC;
+    cfg.seed = seed;
+    cfg.topo = match args.get_or("topo", "aws-global") {
+        "aws-global" => TopoKind::AwsGlobal,
+        "aws-regional" => TopoKind::AwsRegional { zones: 5 },
+        "lab50" => TopoKind::LocalLab { inter_ms: 50.0 },
+        "lab100" => TopoKind::LocalLab { inter_ms: 100.0 },
+        other => {
+            eprintln!("unknown --topo {other}");
+            std::process::exit(2);
+        }
+    };
+    cfg.recovery = match args.get_or("recovery", "notify") {
+        "none" => RecoveryPolicy::None,
+        "notify" => RecoveryPolicy::NotifyClients,
+        "restore" => RecoveryPolicy::FullRestore,
+        other => {
+            eprintln!("unknown --recovery {other}");
+            std::process::exit(2);
+        }
+    };
+    cfg.accel = match args.get_or("accel", "native") {
+        "native" => AccelKind::Native,
+        "xla" => AccelKind::Xla,
+        other => {
+            eprintln!("unknown --accel {other}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(e) = args.get("eps-ms") {
+        if e != "inf" {
+            cfg.eps_ms = e.parse().expect("bad --eps-ms");
+        }
+    }
+
+    eprintln!(
+        "running `{}` on {} ({} clients, {:?}, monitors={}) ...",
+        args.get_or("app", "conjunctive"),
+        consistency.label(),
+        cfg.n_clients,
+        cfg.topo,
+        cfg.monitors
+    );
+    let res = run(&cfg);
+    println!("{}", report::summarize(&res));
+    let m = res.metrics.borrow();
+    println!(
+        "violations={} recoveries={} tasks done/aborted={}/{} failures={} peak-preds={}",
+        res.violations_detected,
+        res.recoveries,
+        m.tasks_completed,
+        m.tasks_aborted,
+        res.ops_failed,
+        res.active_preds_peak,
+    );
+    if !res.detection_latencies_ms.is_empty() {
+        println!(
+            "detection latency: avg {:.1} ms, p99 {:.1} ms, max {:.1} ms",
+            stats::mean(&res.detection_latencies_ms),
+            stats::percentile(&res.detection_latencies_ms, 99.0),
+            stats::max(&res.detection_latencies_ms)
+        );
+    }
+}
+
+fn cmd_table2() {
+    let mut t = Table::new(&["N", "R", "W", "Abbreviation", "Consistency model"]);
+    for c in scenarios::table2_n3().iter().chain(scenarios::table2_n5().iter()) {
+        t.row(&[
+            c.n.to_string(),
+            c.r.to_string(),
+            c.w.to_string(),
+            c.label(),
+            c.model_name().to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_latency_demo(args: &Args) {
+    let scale = args.get_f64("scale", 0.05);
+    let res = run(&scenarios::conjunctive_regional(
+        ConsistencyCfg::n5r1w1(),
+        true,
+        scale,
+        args.get_u64("seed", 42),
+    ));
+    println!("{}", report::latency_table(&res.detection_latencies_ms));
+}

@@ -1,0 +1,5 @@
+//! Measurement: throughput at the server and application perspectives,
+//! violation records, stabilization trimming.
+
+pub mod report;
+pub mod throughput;

@@ -1,0 +1,89 @@
+//! Reporting helpers shared by the examples and the per-figure benches:
+//! percentage math, scale/seed knobs from the environment, and standard
+//! summary blocks.
+
+use crate::exp::runner::ExpResult;
+use crate::util::stats::{self, Histogram, Table};
+
+/// Benefit of `ours` over `baseline` in percent ((ours - base) / base).
+pub fn benefit_pct(ours: f64, baseline: f64) -> f64 {
+    if baseline == 0.0 {
+        0.0
+    } else {
+        (ours - baseline) / baseline * 100.0
+    }
+}
+
+/// Monitoring overhead in percent ((off - on) / off), server perspective.
+pub fn overhead_pct(tps_with_monitors: f64, tps_without: f64) -> f64 {
+    if tps_without == 0.0 {
+        0.0
+    } else {
+        (tps_without - tps_with_monitors) / tps_without * 100.0
+    }
+}
+
+/// Workload scale factor: `BENCH_SCALE` env (default keeps bench runtimes
+/// in CI budgets; 1.0 = the paper's full parameters).
+pub fn bench_scale(default: f64) -> f64 {
+    std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+pub fn bench_seed() -> u64 {
+    std::env::var("BENCH_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+/// One-line run summary.
+pub fn summarize(r: &ExpResult) -> String {
+    format!(
+        "{:<38} app {:>8.1} ops/s | server {:>9.1} ops/s | viol {:>5} | cand {:>8} | ok {:>8}",
+        r.name, r.app_tps, r.server_tps, r.violations_detected, r.candidates_seen, r.ops_ok
+    )
+}
+
+/// Render Table III from detection latencies.
+pub fn latency_table(lat_ms: &[f64]) -> String {
+    let mut h = Histogram::table3_buckets();
+    for &l in lat_ms {
+        h.add(l.max(0.0));
+    }
+    let mut t = Table::new(&["Response time (ms)", "Count", "Percentage"]);
+    for (label, count, pct) in h.rows() {
+        t.row(&[label, count.to_string(), format!("{pct:.3}%")]);
+    }
+    let mut out = t.render();
+    if !lat_ms.is_empty() {
+        out.push_str(&format!(
+            "n={} avg={:.1} ms p50={:.1} ms p99={:.1} ms max={:.1} ms\n",
+            lat_ms.len(),
+            stats::mean(lat_ms),
+            stats::percentile(lat_ms, 50.0),
+            stats::percentile(lat_ms, 99.0),
+            stats::max(lat_ms),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percent_math() {
+        assert!((benefit_pct(157.0, 100.0) - 57.0).abs() < 1e-9);
+        assert!((overhead_pct(96.0, 100.0) - 4.0).abs() < 1e-9);
+        assert_eq!(benefit_pct(1.0, 0.0), 0.0);
+        assert_eq!(overhead_pct(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn latency_table_renders() {
+        let s = latency_table(&[3.0, 10.0, 60.0, 12_000.0]);
+        assert!(s.contains("Response time"));
+        assert!(s.contains("avg="));
+        // bucket boundaries of the paper's Table III
+        assert!(s.contains("0 - 50"));
+        assert!(s.contains("10,000 - 17,000"));
+    }
+}

@@ -1,0 +1,205 @@
+//! Throughput and violation metrics, recorded at the paper's two
+//! perspectives (§VI-A "Performance Metric and Measurement"):
+//!
+//! * **server perspective** — requests served, aggregated over servers;
+//!   used for *overhead* evaluation (monitors interfere with servers);
+//! * **application perspective** — successful app-level operations;
+//!   used for *benefit* evaluation (what users see).
+//!
+//! Time is bucketed into fixed windows; "result stabilization" (Fig. 9)
+//! trims the initialization phase before averaging.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::clock::hvc::Millis;
+use crate::predicate::spec::PredId;
+use crate::sim::{Time, SEC};
+
+#[derive(Debug, Clone)]
+pub struct ViolationRecord {
+    pub pred: PredId,
+    pub name: String,
+    /// safe estimate of the violation start (min witness start, ms)
+    pub t_violate_ms: Millis,
+    /// when the violating global state came into existence (max witness
+    /// start, ms) — detection latency = detected_at − this
+    pub t_occurred_ms: Millis,
+    pub detected_at: Time,
+    pub monitor: u16,
+}
+
+impl ViolationRecord {
+    /// Detection latency in ms (virtual): time from the violation existing
+    /// to the monitor reporting it.
+    pub fn detection_latency_ms(&self) -> f64 {
+        (self.detected_at / crate::sim::MS) as f64 - self.t_occurred_ms as f64
+    }
+}
+
+#[derive(Debug)]
+pub struct MetricsHub {
+    pub window: Time,
+    /// requests served per server per window
+    server_ops: Vec<Vec<u64>>,
+    /// successful app ops per client per window
+    app_ops: Vec<Vec<u64>>,
+    /// failed app ops per client
+    pub app_failures: Vec<u64>,
+    pub violations: Vec<ViolationRecord>,
+    /// candidates received across monitors
+    pub candidates_received: u64,
+    /// peak number of simultaneously-active predicates across monitors
+    pub active_preds_peak: usize,
+    /// app task accounting (coloring tasks, §VI-B recovery discussion)
+    pub tasks_completed: u64,
+    pub tasks_aborted: u64,
+    /// per-task durations (ns), coloring app (§VI-B Discussion)
+    pub task_durations: Vec<u64>,
+    /// per-op latency samples (ns), app perspective (sampled)
+    pub op_latencies: Vec<u64>,
+}
+
+pub type Metrics = Rc<RefCell<MetricsHub>>;
+
+impl MetricsHub {
+    pub fn new(n_servers: usize, n_clients: usize) -> Metrics {
+        Rc::new(RefCell::new(Self {
+            window: SEC,
+            server_ops: vec![Vec::new(); n_servers],
+            app_ops: vec![Vec::new(); n_clients],
+            app_failures: vec![0; n_clients],
+            violations: Vec::new(),
+            candidates_received: 0,
+            active_preds_peak: 0,
+            tasks_completed: 0,
+            tasks_aborted: 0,
+            task_durations: Vec::new(),
+            op_latencies: Vec::new(),
+        }))
+    }
+
+    fn bump(series: &mut Vec<u64>, window: Time, t: Time) {
+        let idx = (t / window) as usize;
+        if series.len() <= idx {
+            series.resize(idx + 1, 0);
+        }
+        series[idx] += 1;
+    }
+
+    pub fn record_server(&mut self, server_idx: usize, t: Time) {
+        Self::bump(&mut self.server_ops[server_idx], self.window, t);
+    }
+
+    pub fn record_app(&mut self, client_idx: usize, t: Time, latency: Time) {
+        Self::bump(&mut self.app_ops[client_idx], self.window, t);
+        if self.op_latencies.len() < 1_000_000 {
+            self.op_latencies.push(latency);
+        }
+    }
+
+    pub fn record_app_failure(&mut self, client_idx: usize) {
+        self.app_failures[client_idx] += 1;
+    }
+
+    pub fn record_violation(&mut self, rec: ViolationRecord) {
+        self.violations.push(rec);
+    }
+
+    fn aggregate(series: &[Vec<u64>], window: Time) -> Vec<f64> {
+        let len = series.iter().map(|s| s.len()).max().unwrap_or(0);
+        let per_sec = SEC as f64 / window as f64;
+        (0..len)
+            .map(|w| {
+                series.iter().map(|s| *s.get(w).unwrap_or(&0)).sum::<u64>() as f64 * per_sec
+            })
+            .collect()
+    }
+
+    /// Aggregated server throughput per window (ops/s) — overhead metric.
+    pub fn server_series(&self) -> Vec<f64> {
+        Self::aggregate(&self.server_ops, self.window)
+    }
+
+    /// Aggregated application throughput per window (ops/s) — benefit metric.
+    pub fn app_series(&self) -> Vec<f64> {
+        Self::aggregate(&self.app_ops, self.window)
+    }
+
+    pub fn total_app_ops(&self) -> u64 {
+        self.app_ops.iter().flat_map(|s| s.iter()).sum()
+    }
+
+    pub fn total_server_ops(&self) -> u64 {
+        self.server_ops.iter().flat_map(|s| s.iter()).sum()
+    }
+}
+
+/// Mean of the stable phase of a throughput series: drop the first
+/// `warmup_frac` of windows (initialization, per Fig. 9) and the final
+/// window (partial).
+pub fn stable_mean(series: &[f64], warmup_frac: f64) -> f64 {
+    if series.len() < 3 {
+        return crate::util::stats::mean(series);
+    }
+    let skip = ((series.len() as f64 * warmup_frac).ceil() as usize).max(1);
+    let end = series.len() - 1; // final window may be partial
+    if skip >= end {
+        return crate::util::stats::mean(series);
+    }
+    crate::util::stats::mean(&series[skip..end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MS;
+
+    #[test]
+    fn windows_aggregate_across_processes() {
+        let m = MetricsHub::new(2, 2);
+        {
+            let mut m = m.borrow_mut();
+            m.record_server(0, 100 * MS);
+            m.record_server(1, 200 * MS);
+            m.record_server(0, 1_500 * MS);
+            m.record_app(0, 100 * MS, MS);
+            m.record_app(1, 2_500 * MS, 2 * MS);
+        }
+        let m = m.borrow();
+        assert_eq!(m.server_series(), vec![2.0, 1.0]);
+        assert_eq!(m.app_series(), vec![1.0, 0.0, 1.0]);
+        assert_eq!(m.total_app_ops(), 2);
+        assert_eq!(m.total_server_ops(), 3);
+    }
+
+    #[test]
+    fn stable_mean_trims_warmup() {
+        // warmup ramp then steady 100, then partial last window
+        let series = vec![10.0, 50.0, 100.0, 100.0, 100.0, 100.0, 40.0];
+        let sm = stable_mean(&series, 0.25);
+        assert_eq!(sm, 100.0);
+    }
+
+    #[test]
+    fn stable_mean_small_series() {
+        assert_eq!(stable_mean(&[5.0, 7.0], 0.25), 6.0);
+        assert_eq!(stable_mean(&[], 0.25), 0.0);
+    }
+
+    #[test]
+    fn violation_records() {
+        let m = MetricsHub::new(1, 1);
+        m.borrow_mut().record_violation(ViolationRecord {
+            pred: PredId(0),
+            name: "me_1_2".into(),
+            t_violate_ms: 123,
+            t_occurred_ms: 130,
+            detected_at: 456 * MS,
+            monitor: 0,
+        });
+        assert_eq!(m.borrow().violations.len(), 1);
+        let lat = m.borrow().violations[0].detection_latency_ms();
+        assert!((lat - 326.0).abs() < 1e-9);
+    }
+}

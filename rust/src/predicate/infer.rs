@@ -1,0 +1,148 @@
+//! Automatic inference of predicates from variable naming conventions
+//! (§V "Automatic inference of predicate from variable names").
+//!
+//! Graph applications create one mutual-exclusion predicate per edge whose
+//! endpoints belong to different clients. Manually specifying hundreds of
+//! thousands of predicates is impossible, so when a server first sees a
+//! request for a Peterson lock variable it synthesizes the predicate for
+//! that edge on the fly.
+//!
+//! Naming convention (nodes are integers `a < b`):
+//!   flag_{a}_{b}_{a}  — node-a side flag of edge (a,b)
+//!   flag_{a}_{b}_{b}  — node-b side flag
+//!   turn_{a}_{b}      — Peterson turn variable, value `a` or `b`
+//!
+//! The inferred predicate for edge (a,b), per the paper:
+//!   ¬P_ab ≡ (flag_a_b_a = true ∧ turn_a_b = a)
+//!         ∧ (flag_a_b_b = true ∧ turn_a_b = b)
+//! — one clause, two conjuncts (each conjunct must co-hold on one replica
+//! view; the two conjuncts may be witnessed on different replicas).
+
+use crate::predicate::spec::{Clause, Conjunct, Literal, PredKind, PredicateSpec, PredId};
+use crate::store::value::{Interner, Value};
+
+/// A recognized Peterson lock variable for edge (a, b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeLockVar {
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Lock variable names for an edge.
+pub fn flag_name(a: u64, b: u64, side: u64) -> String {
+    debug_assert!(a < b);
+    debug_assert!(side == a || side == b);
+    format!("flag_{a}_{b}_{side}")
+}
+
+pub fn turn_name(a: u64, b: u64) -> String {
+    debug_assert!(a < b);
+    format!("turn_{a}_{b}")
+}
+
+pub fn pred_name(a: u64, b: u64) -> String {
+    format!("me_{a}_{b}")
+}
+
+/// Recognize a lock variable name. Returns the edge if `name` matches the
+/// convention (the trigger for on-demand predicate generation).
+pub fn recognize(name: &str) -> Option<EdgeLockVar> {
+    let rest = name.strip_prefix("flag_").or_else(|| name.strip_prefix("turn_"))?;
+    let is_flag = name.starts_with("flag_");
+    let parts: Vec<&str> = rest.split('_').collect();
+    let expected = if is_flag { 3 } else { 2 };
+    if parts.len() != expected {
+        return None;
+    }
+    let a: u64 = parts[0].parse().ok()?;
+    let b: u64 = parts[1].parse().ok()?;
+    if a >= b {
+        return None;
+    }
+    if is_flag {
+        let side: u64 = parts[2].parse().ok()?;
+        if side != a && side != b {
+            return None;
+        }
+    }
+    Some(EdgeLockVar { a, b })
+}
+
+/// Build the mutual-exclusion predicate for edge (a, b).
+pub fn edge_predicate(a: u64, b: u64, interner: &mut Interner) -> PredicateSpec {
+    debug_assert!(a < b);
+    let fa = interner.intern(&flag_name(a, b, a));
+    let fb = interner.intern(&flag_name(a, b, b));
+    let t = interner.intern(&turn_name(a, b));
+    let clause = Clause {
+        conjuncts: vec![
+            Conjunct {
+                literals: vec![
+                    Literal { var: fa, value: Value::Bool(true) },
+                    Literal { var: t, value: Value::Int(a as i64) },
+                ],
+            },
+            Conjunct {
+                literals: vec![
+                    Literal { var: fb, value: Value::Bool(true) },
+                    Literal { var: t, value: Value::Int(b as i64) },
+                ],
+            },
+        ],
+    };
+    PredicateSpec {
+        id: PredId(u32::MAX), // assigned by the registry
+        name: pred_name(a, b),
+        kind: PredKind::Semilinear,
+        clauses: vec![clause],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recognizes_convention() {
+        assert_eq!(recognize("flag_3_17_3"), Some(EdgeLockVar { a: 3, b: 17 }));
+        assert_eq!(recognize("flag_3_17_17"), Some(EdgeLockVar { a: 3, b: 17 }));
+        assert_eq!(recognize("turn_3_17"), Some(EdgeLockVar { a: 3, b: 17 }));
+    }
+
+    #[test]
+    fn rejects_non_lock_names() {
+        assert_eq!(recognize("color_5"), None);
+        assert_eq!(recognize("flag_17_3_3"), None, "a must be < b");
+        assert_eq!(recognize("flag_3_17_9"), None, "side must be an endpoint");
+        assert_eq!(recognize("turn_3_17_3"), None, "turn has two parts");
+        assert_eq!(recognize("flag_a_b_a"), None, "non-numeric");
+        assert_eq!(recognize("turn_5_5"), None, "self-loop");
+    }
+
+    #[test]
+    fn edge_predicate_shape() {
+        let interner = Interner::new();
+        let spec = edge_predicate(3, 17, &mut interner.borrow_mut());
+        assert_eq!(spec.name, "me_3_17");
+        assert_eq!(spec.kind, PredKind::Semilinear);
+        assert_eq!(spec.clauses.len(), 1);
+        let cjs = &spec.clauses[0].conjuncts;
+        assert_eq!(cjs.len(), 2);
+        assert_eq!(cjs[0].literals.len(), 2);
+        // conjunct 0: flag_3_17_3=true ∧ turn_3_17=3
+        let i = interner.borrow();
+        assert_eq!(i.name(cjs[0].literals[0].var), "flag_3_17_3");
+        assert_eq!(cjs[0].literals[1].value, Value::Int(3));
+        assert_eq!(i.name(cjs[1].literals[0].var), "flag_3_17_17");
+        assert_eq!(cjs[1].literals[1].value, Value::Int(17));
+    }
+
+    #[test]
+    fn name_helpers_round_trip() {
+        let n = flag_name(1, 2, 2);
+        assert_eq!(n, "flag_1_2_2");
+        assert_eq!(recognize(&n), Some(EdgeLockVar { a: 1, b: 2 }));
+        let t = turn_name(1, 2);
+        assert_eq!(recognize(&t), Some(EdgeLockVar { a: 1, b: 2 }));
+    }
+}

@@ -1,0 +1,5 @@
+//! Predicate specifications (DNF over key-value literals), the XML format
+//! of Fig. 3, the shared registry, and naming-convention inference.
+
+pub mod infer;
+pub mod spec;

@@ -1,0 +1,360 @@
+//! Predicate specifications.
+//!
+//! The monitors detect `¬P` given in disjunctive normal form (§V): `¬P ≡
+//! C_1 ∨ C_2 ∨ …` where each *clause* `C_k` is a conjunction of
+//! *conjuncts*, and each conjunct is a set of `(variable = value)`
+//! literals that must hold **within a single server's local view
+//! simultaneously**. Different conjuncts of a clause may be satisfied on
+//! different servers at pairwise-concurrent HVC intervals — that is
+//! exactly the cross-replica inconsistency the paper detects.
+//!
+//! The XML format of Fig. 3 is supported: each `<conjClause>` is a clause
+//! and, per the paper's conjunctive-predicate semantics, every `<var>`
+//! becomes its own conjunct. An extended `<conjunct>` grouping element is
+//! accepted for predicates (like the Peterson mutual-exclusion ones) whose
+//! literals must co-hold on one replica view.
+
+use std::collections::HashMap;
+
+use crate::store::value::{Interner, KeyId, Value};
+use crate::util::xmlmini::{self, Element};
+
+/// Predicate identifier (index into the registry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PredId(pub u32);
+
+/// Predicate class — selects the detection algorithm (§III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredKind {
+    /// e.g. conjunctive predicates; Algorithm 1 (forbidden states)
+    Linear,
+    /// e.g. the mutual-exclusion predicates; Algorithm 2 (semi-forbidden)
+    Semilinear,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Literal {
+    pub var: KeyId,
+    pub value: Value,
+}
+
+/// Literals that must hold together on one server view.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Conjunct {
+    pub literals: Vec<Literal>,
+}
+
+impl Conjunct {
+    /// Does an assignment (var → values seen) satisfy every literal?
+    /// A literal is satisfied if *any* sibling value equals the expected
+    /// value (safe direction: never miss a violation).
+    pub fn satisfied_by(&self, lookup: impl Fn(KeyId) -> Option<Vec<Value>>) -> bool {
+        self.literals.iter().all(|lit| {
+            lookup(lit.var)
+                .map(|vals| vals.iter().any(|v| *v == lit.value))
+                .unwrap_or(false)
+        })
+    }
+}
+
+/// Conjunction of conjuncts: true iff all conjuncts hold on pairwise
+/// concurrent intervals.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Clause {
+    pub conjuncts: Vec<Conjunct>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PredicateSpec {
+    pub id: PredId,
+    pub name: String,
+    pub kind: PredKind,
+    /// DNF of ¬P
+    pub clauses: Vec<Clause>,
+}
+
+impl PredicateSpec {
+    /// All variables the predicate mentions.
+    pub fn vars(&self) -> Vec<KeyId> {
+        let mut out: Vec<KeyId> = self
+            .clauses
+            .iter()
+            .flat_map(|c| c.conjuncts.iter())
+            .flat_map(|cj| cj.literals.iter().map(|l| l.var))
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Parse the paper's XML format (Fig. 3). `interner` resolves variable
+    /// names to key ids.
+    pub fn from_xml(id: PredId, name: &str, src: &str, interner: &mut Interner) -> Result<Self, String> {
+        let root = xmlmini::parse(src).map_err(|e| e.to_string())?;
+        if root.name != "predicate" {
+            return Err(format!("expected <predicate>, got <{}>", root.name));
+        }
+        let kind = match root.child_text("type") {
+            Some("linear") | Some("conjunctive") => PredKind::Linear,
+            Some("semilinear") => PredKind::Semilinear,
+            other => return Err(format!("unknown predicate type {other:?}")),
+        };
+        let mut clauses = Vec::new();
+        for cl in root.children_named("conjClause") {
+            let mut clause = Clause::default();
+            // extended grouping: explicit <conjunct> children
+            let grouped: Vec<&Element> = cl.children_named("conjunct").collect();
+            if !grouped.is_empty() {
+                for g in grouped {
+                    clause.conjuncts.push(parse_conjunct_vars(g, interner)?);
+                }
+            } else {
+                // paper semantics: each <var> is its own conjunct
+                for v in cl.children_named("var") {
+                    let lit = parse_literal(v, interner)?;
+                    clause.conjuncts.push(Conjunct { literals: vec![lit] });
+                }
+            }
+            if clause.conjuncts.is_empty() {
+                return Err("empty conjClause".into());
+            }
+            clauses.push(clause);
+        }
+        if clauses.is_empty() {
+            return Err("predicate has no clauses".into());
+        }
+        Ok(Self { id, name: name.to_string(), kind, clauses })
+    }
+
+    /// Serialize to the XML format (round-trip / tooling).
+    pub fn to_xml(&self, interner: &Interner) -> String {
+        let mut root = Element::new("predicate");
+        let mut ty = Element::new("type");
+        ty.text = match self.kind {
+            PredKind::Linear => "linear".into(),
+            PredKind::Semilinear => "semilinear".into(),
+        };
+        root.children.push(ty);
+        for (ci, clause) in self.clauses.iter().enumerate() {
+            let mut cl = Element::new("conjClause");
+            let mut id_el = Element::new("id");
+            id_el.text = ci.to_string();
+            cl.children.push(id_el);
+            for conjunct in &clause.conjuncts {
+                let mut cj = Element::new("conjunct");
+                for lit in &conjunct.literals {
+                    let mut v = Element::new("var");
+                    let mut n = Element::new("name");
+                    n.text = interner.name(lit.var).to_string();
+                    let mut val = Element::new("value");
+                    val.text = lit.value.to_string();
+                    v.children.push(n);
+                    v.children.push(val);
+                    cj.children.push(v);
+                }
+                cl.children.push(cj);
+            }
+            root.children.push(cl);
+        }
+        root.to_xml()
+    }
+}
+
+fn parse_literal(v: &Element, interner: &mut Interner) -> Result<Literal, String> {
+    let name = v.child_text("name").ok_or("var without <name>")?;
+    let value = v.child_text("value").ok_or("var without <value>")?;
+    Ok(Literal { var: interner.intern(name), value: Value::parse(value) })
+}
+
+fn parse_conjunct_vars(g: &Element, interner: &mut Interner) -> Result<Conjunct, String> {
+    let mut out = Conjunct::default();
+    for v in g.children_named("var") {
+        out.literals.push(parse_literal(v, interner)?);
+    }
+    if out.literals.is_empty() {
+        return Err("empty conjunct".into());
+    }
+    Ok(out)
+}
+
+/// The shared predicate registry: all registered predicates plus the
+/// relevant-variable index the local detectors use for their fast path.
+#[derive(Debug, Default)]
+pub struct Registry {
+    preds: Vec<PredicateSpec>,
+    by_name: HashMap<String, PredId>,
+    /// var → (pred, clause idx, conjunct idx) that mention it
+    var_index: HashMap<KeyId, Vec<(PredId, u16, u16)>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, mut spec: PredicateSpec) -> PredId {
+        if let Some(&id) = self.by_name.get(&spec.name) {
+            return id; // idempotent registration
+        }
+        let id = PredId(self.preds.len() as u32);
+        spec.id = id;
+        for (ci, clause) in spec.clauses.iter().enumerate() {
+            for (ji, conjunct) in clause.conjuncts.iter().enumerate() {
+                for lit in &conjunct.literals {
+                    self.var_index.entry(lit.var).or_default().push((id, ci as u16, ji as u16));
+                }
+            }
+        }
+        self.by_name.insert(spec.name.clone(), id);
+        self.preds.push(spec);
+        id
+    }
+
+    pub fn get(&self, id: PredId) -> &PredicateSpec {
+        &self.preds[id.0 as usize]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<PredId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.preds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.preds.is_empty()
+    }
+
+    /// The local detector's fast-path lookup: which (pred, clause,
+    /// conjunct) does a PUT of `var` affect? None ⇒ zero extra work.
+    pub fn affected(&self, var: KeyId) -> Option<&[(PredId, u16, u16)]> {
+        self.var_index.get(&var).map(|v| v.as_slice())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &PredicateSpec> {
+        self.preds.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIG3: &str = r#"
+<predicate>
+ <type>semilinear</type>
+ <conjClause>
+  <id>0</id>
+  <var> <name>x1</name> <value>1</value> </var>
+  <var> <name>y1</name> <value>1</value> </var>
+ </conjClause>
+ <conjClause>
+  <id>1</id>
+  <var> <name>z2</name> <value>1</value> </var>
+ </conjClause>
+</predicate>"#;
+
+    #[test]
+    fn parses_fig3() {
+        let interner = Interner::new();
+        let spec =
+            PredicateSpec::from_xml(PredId(0), "fig3", FIG3, &mut interner.borrow_mut()).unwrap();
+        assert_eq!(spec.kind, PredKind::Semilinear);
+        assert_eq!(spec.clauses.len(), 2);
+        // paper semantics: each var its own conjunct
+        assert_eq!(spec.clauses[0].conjuncts.len(), 2);
+        assert_eq!(spec.clauses[1].conjuncts.len(), 1);
+        let x1 = interner.borrow().lookup("x1").unwrap();
+        assert_eq!(spec.clauses[0].conjuncts[0].literals[0].var, x1);
+        assert_eq!(spec.clauses[0].conjuncts[0].literals[0].value, Value::Int(1));
+    }
+
+    #[test]
+    fn xml_round_trip() {
+        let interner = Interner::new();
+        let spec =
+            PredicateSpec::from_xml(PredId(0), "rt", FIG3, &mut interner.borrow_mut()).unwrap();
+        let xml = spec.to_xml(&interner.borrow());
+        let spec2 =
+            PredicateSpec::from_xml(PredId(0), "rt", &xml, &mut interner.borrow_mut()).unwrap();
+        // grouping becomes explicit on re-parse; clause/conjunct structure equal
+        assert_eq!(spec.clauses, spec2.clauses);
+        assert_eq!(spec.kind, spec2.kind);
+    }
+
+    #[test]
+    fn grouped_conjuncts_extension() {
+        let src = r#"
+<predicate>
+ <type>semilinear</type>
+ <conjClause>
+  <conjunct>
+   <var><name>flag_1_2_1</name><value>true</value></var>
+   <var><name>turn_1_2</name><value>1</value></var>
+  </conjunct>
+  <conjunct>
+   <var><name>flag_1_2_2</name><value>true</value></var>
+   <var><name>turn_1_2</name><value>2</value></var>
+  </conjunct>
+ </conjClause>
+</predicate>"#;
+        let interner = Interner::new();
+        let spec =
+            PredicateSpec::from_xml(PredId(0), "me", src, &mut interner.borrow_mut()).unwrap();
+        assert_eq!(spec.clauses[0].conjuncts.len(), 2);
+        assert_eq!(spec.clauses[0].conjuncts[0].literals.len(), 2);
+    }
+
+    #[test]
+    fn conjunct_satisfaction_with_siblings() {
+        let interner = Interner::new();
+        let x = interner.borrow_mut().intern("x");
+        let y = interner.borrow_mut().intern("y");
+        let cj = Conjunct {
+            literals: vec![
+                Literal { var: x, value: Value::Int(1) },
+                Literal { var: y, value: Value::Bool(true) },
+            ],
+        };
+        // sibling versions: any matching sibling satisfies the literal
+        let ok = cj.satisfied_by(|k| {
+            if k == x {
+                Some(vec![Value::Int(0), Value::Int(1)])
+            } else {
+                Some(vec![Value::Bool(true)])
+            }
+        });
+        assert!(ok);
+        let missing = cj.satisfied_by(|k| if k == x { Some(vec![Value::Int(1)]) } else { None });
+        assert!(!missing, "absent variable cannot satisfy a literal");
+    }
+
+    #[test]
+    fn registry_index_and_idempotence() {
+        let interner = Interner::new();
+        let mut reg = Registry::new();
+        let spec =
+            PredicateSpec::from_xml(PredId(0), "p0", FIG3, &mut interner.borrow_mut()).unwrap();
+        let id = reg.add(spec.clone());
+        let id2 = reg.add(spec);
+        assert_eq!(id, id2, "re-registration is idempotent");
+        assert_eq!(reg.len(), 1);
+        let x1 = interner.borrow().lookup("x1").unwrap();
+        let hits = reg.affected(x1).unwrap();
+        assert_eq!(hits, &[(id, 0u16, 0u16)]);
+        let z2 = interner.borrow().lookup("z2").unwrap();
+        assert_eq!(reg.affected(z2).unwrap()[0].1, 1, "z2 is in clause 1");
+        let none = interner.borrow_mut().intern("unrelated");
+        assert!(reg.affected(none).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let interner = Interner::new();
+        let mut i = interner.borrow_mut();
+        assert!(PredicateSpec::from_xml(PredId(0), "x", "<predicate><type>bogus</type></predicate>", &mut i).is_err());
+        assert!(PredicateSpec::from_xml(PredId(0), "x", "<predicate><type>linear</type></predicate>", &mut i).is_err());
+        assert!(PredicateSpec::from_xml(PredId(0), "x", "<nope/>", &mut i).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Rollback substrate (§IV): Retroscope-style window logs, periodic
+//! snapshots, and the recovery controller.
+
+pub mod recovery;
+pub mod snapshot;
+pub mod windowlog;

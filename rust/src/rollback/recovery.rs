@@ -1,0 +1,154 @@
+//! The rollback/recovery controller (§IV, Fig. 1): receives violation
+//! reports from the monitors and drives one of the paper's recovery
+//! strategies:
+//!
+//! * `NotifyClients` — the cheap path for task-structured apps (coloring):
+//!   clients abort and restart their current task; no server state rolls
+//!   back because updates were deferred (§VI-B "Discussion").
+//! * `FullRestore` — stop-the-world: freeze all servers, restore each to a
+//!   cut before `T_violate` (window-log if it reaches back far enough,
+//!   periodic snapshot otherwise), resume, and notify clients.
+//! * `None` — record only (the monitors-as-debugger deployment).
+
+use crate::metrics::throughput::Metrics;
+use crate::sim::des::{Actor, Ctx};
+use crate::sim::msg::{Msg, RollbackMsg};
+use crate::sim::{ms, ProcId, Time};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    None,
+    NotifyClients,
+    FullRestore,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Idle,
+    Freezing { acks: usize },
+    Restoring { acks: usize },
+}
+
+pub struct ControllerActor {
+    servers: Vec<ProcId>,
+    clients: Vec<ProcId>,
+    policy: RecoveryPolicy,
+    state: State,
+    epoch: u64,
+    /// suppress recoveries closer together than this
+    min_gap: Time,
+    last_recovery: Time,
+    pending_t_violate: i64,
+    metrics: Metrics,
+    /// stats
+    pub violations_received: u64,
+    pub recoveries: u64,
+    pub window_log_restores: u64,
+    pub snapshot_restores: u64,
+}
+
+impl ControllerActor {
+    pub fn new(
+        servers: Vec<ProcId>,
+        clients: Vec<ProcId>,
+        policy: RecoveryPolicy,
+        metrics: Metrics,
+    ) -> Self {
+        Self {
+            servers,
+            clients,
+            policy,
+            state: State::Idle,
+            epoch: 0,
+            min_gap: ms(1_000.0),
+            last_recovery: 0,
+            pending_t_violate: 0,
+            metrics,
+            violations_received: 0,
+            recoveries: 0,
+            window_log_restores: 0,
+            snapshot_restores: 0,
+        }
+    }
+
+    fn notify_clients(&mut self, ctx: &mut Ctx, t_violate_ms: i64) {
+        for &c in &self.clients {
+            ctx.send(c, Msg::Rollback(RollbackMsg::Notify { epoch: self.epoch, t_violate_ms }));
+        }
+    }
+
+    fn begin_recovery(&mut self, ctx: &mut Ctx, t_violate_ms: i64) {
+        self.epoch += 1;
+        self.recoveries += 1;
+        self.last_recovery = ctx.now();
+        match self.policy {
+            RecoveryPolicy::None => {}
+            RecoveryPolicy::NotifyClients => {
+                self.notify_clients(ctx, t_violate_ms);
+            }
+            RecoveryPolicy::FullRestore => {
+                self.state = State::Freezing { acks: 0 };
+                self.pending_t_violate = t_violate_ms;
+                for &s in &self.servers {
+                    ctx.send(s, Msg::Rollback(RollbackMsg::Freeze { epoch: self.epoch }));
+                }
+            }
+        }
+    }
+}
+
+impl Actor for ControllerActor {
+    fn on_msg(&mut self, ctx: &mut Ctx, _from: ProcId, msg: Msg) {
+        match msg {
+            Msg::Violation(rep) => {
+                self.violations_received += 1;
+                let _ = &self.metrics; // violation metrics recorded by monitors
+                let busy = self.state != State::Idle;
+                let too_soon = ctx.now() < self.last_recovery + self.min_gap && self.recoveries > 0;
+                if self.policy != RecoveryPolicy::None && !busy && !too_soon {
+                    self.begin_recovery(ctx, rep.t_violate_ms);
+                }
+            }
+            Msg::Rollback(RollbackMsg::FrozenAck { epoch }) if epoch == self.epoch => {
+                if let State::Freezing { acks } = self.state {
+                    let acks = acks + 1;
+                    if acks == self.servers.len() {
+                        self.state = State::Restoring { acks: 0 };
+                        // restore to just before the violation started
+                        let to_ms = self.pending_t_violate - 1;
+                        for &s in &self.servers {
+                            ctx.send(s, Msg::Rollback(RollbackMsg::Restore { epoch, to_ms }));
+                        }
+                    } else {
+                        self.state = State::Freezing { acks };
+                    }
+                }
+            }
+            Msg::Rollback(RollbackMsg::RestoredAck { epoch, from_window_log }) if epoch == self.epoch => {
+                if from_window_log {
+                    self.window_log_restores += 1;
+                } else {
+                    self.snapshot_restores += 1;
+                }
+                if let State::Restoring { acks } = self.state {
+                    let acks = acks + 1;
+                    if acks == self.servers.len() {
+                        self.state = State::Idle;
+                        for &s in &self.servers {
+                            ctx.send(s, Msg::Rollback(RollbackMsg::Resume { epoch }));
+                        }
+                        let t = self.pending_t_violate;
+                        self.notify_clients(ctx, t);
+                    } else {
+                        self.state = State::Restoring { acks };
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

@@ -1,0 +1,124 @@
+//! Periodic full snapshots (§IV): the fallback when a violation is older
+//! than the window-log horizon. The controller picks the most recent
+//! snapshot strictly before `T_violate`.
+
+use std::collections::HashMap;
+
+use crate::clock::hvc::Millis;
+use crate::store::table::Table;
+use crate::store::value::{KeyId, Versioned};
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub at_ms: Millis,
+    pub data: HashMap<KeyId, Vec<Versioned>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SnapshotStore {
+    snaps: Vec<Snapshot>,
+    /// retain at most this many snapshots (ring)
+    keep: usize,
+    taken: u64,
+}
+
+impl SnapshotStore {
+    pub fn new(keep: usize) -> Self {
+        Self { snaps: Vec::new(), keep: keep.max(1), taken: 0 }
+    }
+
+    pub fn take(&mut self, at_ms: Millis, table: &Table) {
+        self.snaps.push(Snapshot { at_ms, data: table.snapshot() });
+        self.taken += 1;
+        if self.snaps.len() > self.keep {
+            self.snaps.remove(0);
+        }
+    }
+
+    /// Most recent snapshot taken at or before `to_ms`.
+    pub fn latest_before(&self, to_ms: Millis) -> Option<&Snapshot> {
+        self.snaps.iter().rev().find(|s| s.at_ms <= to_ms)
+    }
+
+    /// Restore `table` from the latest snapshot before `to_ms`; falls back
+    /// to the empty initial state if none exists. Returns the snapshot
+    /// time used (0 for initial state).
+    pub fn restore_before(&self, table: &mut Table, to_ms: Millis) -> Millis {
+        match self.latest_before(to_ms) {
+            Some(s) => {
+                table.restore_snapshot(s.data.clone());
+                s.at_ms
+            }
+            None => {
+                table.restore_snapshot(HashMap::new());
+                0
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.snaps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.snaps.is_empty()
+    }
+
+    pub fn taken(&self) -> u64 {
+        self.taken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::vc::VectorClock;
+    use crate::store::value::Value;
+
+    fn vc(n: u64) -> VectorClock {
+        let mut v = VectorClock::new();
+        for _ in 0..n {
+            v.increment(1);
+        }
+        v
+    }
+
+    #[test]
+    fn restore_picks_latest_before_cut() {
+        let mut t = Table::new();
+        let mut ss = SnapshotStore::new(10);
+        t.put(KeyId(1), vc(1), Value::Int(1));
+        ss.take(100, &t);
+        t.put(KeyId(1), vc(2), Value::Int(2));
+        ss.take(200, &t);
+        t.put(KeyId(1), vc(3), Value::Int(3));
+
+        let used = ss.restore_before(&mut t, 150);
+        assert_eq!(used, 100);
+        assert_eq!(t.get(KeyId(1))[0].value, Value::Int(1));
+    }
+
+    #[test]
+    fn restore_before_everything_resets_to_initial() {
+        let mut t = Table::new();
+        let mut ss = SnapshotStore::new(10);
+        t.put(KeyId(1), vc(1), Value::Int(1));
+        ss.take(100, &t);
+        let used = ss.restore_before(&mut t, 50);
+        assert_eq!(used, 0);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn ring_keeps_bounded() {
+        let t = Table::new();
+        let mut ss = SnapshotStore::new(3);
+        for i in 0..10 {
+            ss.take(i * 100, &t);
+        }
+        assert_eq!(ss.len(), 3);
+        assert_eq!(ss.taken(), 10);
+        assert!(ss.latest_before(100).is_none(), "old snapshots evicted");
+        assert!(ss.latest_before(900).is_some());
+    }
+}

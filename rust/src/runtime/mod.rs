@@ -1,0 +1,6 @@
+//! The L3↔L2/L1 boundary: the `Accel` verdict interface, the native Rust
+//! reference backend, and the PJRT-backed XLA backend that executes the
+//! AOT-compiled Pallas/JAX kernels from `artifacts/`.
+
+pub mod accel;
+pub mod pjrt;

@@ -1,0 +1,214 @@
+//! PJRT-backed verdict backend: loads the HLO *text* produced by
+//! `python/compile/aot.py` (JAX + Pallas, lowered once at build time),
+//! compiles it on the PJRT CPU client, and serves batched HVC-interval
+//! verdicts from the monitor hot path. Python never runs at request time.
+//!
+//! Interchange is HLO text, not serialized protos — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! ## Clock encoding
+//!
+//! Kernels use i32 millisecond clocks. HVC entries are either "normal"
+//! (small non-negative ms) or "ε = ∞ floor" values near `-EPS_INF`. The
+//! encoding shifts floor values into `[-2^30 + pt]` so that every
+//! comparison the 3-case rule performs has the same outcome in i32 as in
+//! i64 (floors stay below all normal values and keep their relative
+//! order). ε itself is clamped to 2^30 (⇒ "never physically separated",
+//! exactly the ε = ∞ semantics).
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::clock::hvc::{Hvc, IntervalOrd, Millis};
+use crate::runtime::accel::{Accel, PairQuery};
+
+/// Clamp/encode an i64 ms clock entry into kernel i32 space.
+pub fn encode_ms(x: Millis) -> i32 {
+    const FLOOR_CUT: i64 = -(1 << 40);
+    const SHIFT: i64 = 1 << 30;
+    if x < FLOOR_CUT {
+        // ε=∞ floor: pt - EPS_INF → pt - 2^30
+        let pt = x + crate::clock::hvc::EPS_INF;
+        (pt - SHIFT).clamp(i32::MIN as i64 + 1, i32::MAX as i64) as i32
+    } else {
+        x.clamp(-(1 << 30), i32::MAX as i64) as i32
+    }
+}
+
+/// Encode ε for the kernel (∞ ⇒ 2^30: the separation test never passes).
+pub fn encode_eps(eps: Millis) -> i32 {
+    eps.clamp(0, 1 << 30) as i32
+}
+
+/// Fixed-shape AOT executable for pair verdicts.
+pub struct XlaAccel {
+    exe: xla::PjRtLoadedExecutable,
+    /// compiled batch size
+    pub b: usize,
+    /// compiled (padded) HVC dimension
+    pub d: usize,
+    pub calls: u64,
+    pub pairs: u64,
+}
+
+impl XlaAccel {
+    /// Artifacts directory: `$OPTIKV_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("OPTIKV_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile `pair_verdict.hlo.txt` (+ its `.meta` shape file).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("pair_verdict.meta");
+        let meta = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`)"))?;
+        let mut it = meta.split_whitespace();
+        let b: usize = it.next().ok_or_else(|| anyhow!("meta missing B"))?.parse()?;
+        let d: usize = it.next().ok_or_else(|| anyhow!("meta missing D"))?.parse()?;
+        let hlo_path = dir.join("pair_verdict.hlo.txt");
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {hlo_path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling: {e:?}"))?;
+        Ok(Self { exe, b, d, calls: 0, pairs: 0 })
+    }
+
+    fn pack_clock(&self, out: &mut Vec<i32>, h: &Hvc) {
+        for j in 0..self.d {
+            out.push(h.v.get(j).map(|&x| encode_ms(x)).unwrap_or(0));
+        }
+    }
+
+    /// Execute one padded batch of up to `self.b` pairs.
+    fn run_batch(&mut self, pairs: &[PairQuery<'_>], eps: Millis) -> Result<Vec<IntervalOrd>> {
+        assert!(pairs.len() <= self.b);
+        let (b, d) = (self.b, self.d);
+        let mut a_start = Vec::with_capacity(b * d);
+        let mut a_end = Vec::with_capacity(b * d);
+        let mut b_start = Vec::with_capacity(b * d);
+        let mut b_end = Vec::with_capacity(b * d);
+        let mut a_start_own = Vec::with_capacity(b);
+        let mut a_end_own = Vec::with_capacity(b);
+        let mut b_start_own = Vec::with_capacity(b);
+        let mut b_end_own = Vec::with_capacity(b);
+        for p in pairs {
+            self.pack_clock(&mut a_start, &p.a.start);
+            self.pack_clock(&mut a_end, &p.a.end);
+            self.pack_clock(&mut b_start, &p.b.start);
+            self.pack_clock(&mut b_end, &p.b.end);
+            // (owner components below)
+            let oa = p.a.owner() as usize;
+            let ob = p.b.owner() as usize;
+            a_start_own.push(encode_ms(p.a.start.v[oa]));
+            a_end_own.push(encode_ms(p.a.end.v[oa]));
+            b_start_own.push(encode_ms(p.b.start.v[ob]));
+            b_end_own.push(encode_ms(p.b.end.v[ob]));
+        }
+        // pad with identical dummy intervals (verdict ignored)
+        for _ in pairs.len()..b {
+            for v in [&mut a_start, &mut a_end, &mut b_start, &mut b_end] {
+                v.extend(std::iter::repeat(0).take(d));
+            }
+            a_start_own.push(0);
+            a_end_own.push(0);
+            b_start_own.push(0);
+            b_end_own.push(0);
+        }
+        let shape = [b as i64, d as i64];
+        let lit = |v: &[i32], sh: &[i64]| -> Result<xla::Literal> {
+            xla::Literal::vec1(v)
+                .reshape(sh)
+                .map_err(|e| anyhow!("literal reshape: {e:?}"))
+        };
+        let args = [
+            lit(&a_start, &shape)?,
+            lit(&a_end, &shape)?,
+            lit(&b_start, &shape)?,
+            lit(&b_end, &shape)?,
+            lit(&a_start_own, &[b as i64])?,
+            lit(&a_end_own, &[b as i64])?,
+            lit(&b_start_own, &[b as i64])?,
+            lit(&b_end_own, &[b as i64])?,
+            xla::Literal::vec1(&[encode_eps(eps)]),
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let verdicts: Vec<i32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(verdicts[..pairs.len()]
+            .iter()
+            .map(|&v| match v {
+                1 => IntervalOrd::Before,
+                2 => IntervalOrd::After,
+                _ => IntervalOrd::Concurrent,
+            })
+            .collect())
+    }
+}
+
+impl Accel for XlaAccel {
+    fn pair_verdicts(&mut self, pairs: &[PairQuery<'_>], eps: Millis) -> Vec<IntervalOrd> {
+        self.pairs += pairs.len() as u64;
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(self.b) {
+            self.calls += 1;
+            match self.run_batch(chunk, eps) {
+                Ok(v) => out.extend(v),
+                Err(e) => panic!("XlaAccel execution failed: {e:#}"),
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Shared XLA backend for the experiment runner; panics with a helpful
+/// message when artifacts are missing.
+pub fn shared_xla_accel() -> Rc<RefCell<dyn Accel>> {
+    let dir = XlaAccel::default_dir();
+    match XlaAccel::load(&dir) {
+        Ok(a) => Rc::new(RefCell::new(a)),
+        Err(e) => panic!(
+            "failed to load XLA artifacts from {dir:?}: {e:#}. Build them with `make artifacts`."
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::hvc::EPS_INF;
+
+    #[test]
+    fn encode_preserves_order() {
+        // normal values
+        assert!(encode_ms(10) < encode_ms(20));
+        // floors keep their relative order and stay below normals
+        let f1 = 100 - EPS_INF;
+        let f2 = 200 - EPS_INF;
+        assert!(encode_ms(f1) < encode_ms(f2));
+        assert!(encode_ms(f2) < encode_ms(0));
+        // eps clamp
+        assert_eq!(encode_eps(EPS_INF), 1 << 30);
+        assert_eq!(encode_eps(5), 5);
+    }
+
+    // execution tests against the real artifacts live in
+    // rust/tests/xla_accel.rs (they are skipped when artifacts/ is absent)
+}

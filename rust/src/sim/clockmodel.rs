@@ -1,0 +1,130 @@
+//! Per-process physical clocks with bounded skew.
+//!
+//! HVCs assume clocks are synchronized within ε. The model gives every
+//! process a constant offset drawn uniformly from [-skew_max, +skew_max]
+//! plus a slow sinusoidal wander (NTP-style discipline residue), so the
+//! instantaneous inter-process error is bounded by `2·skew_max`.
+
+use crate::clock::hvc::Millis;
+use crate::sim::{Time, MS};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ClockModel {
+    /// constant per-process offset, ns (may be negative)
+    offsets_ns: Vec<i64>,
+    /// per-process wander amplitude, ns
+    wander_amp_ns: Vec<i64>,
+    /// per-process wander period, ns
+    wander_period_ns: Vec<u64>,
+}
+
+impl ClockModel {
+    /// `skew_max_ms` bounds |offset| + wander amplitude.
+    pub fn new(n_procs: usize, skew_max_ms: f64, rng: &mut Rng) -> Self {
+        let max_ns = (skew_max_ms * MS as f64) as i64;
+        let mut offsets_ns = Vec::with_capacity(n_procs);
+        let mut wander_amp_ns = Vec::with_capacity(n_procs);
+        let mut wander_period_ns = Vec::with_capacity(n_procs);
+        for _ in 0..n_procs {
+            // reserve 20% of the budget for wander
+            let off_budget = (max_ns as f64 * 0.8) as i64;
+            let off = if off_budget > 0 {
+                rng.range(0, (2 * off_budget + 1) as u64) as i64 - off_budget
+            } else {
+                0
+            };
+            offsets_ns.push(off);
+            wander_amp_ns.push((max_ns as f64 * 0.2) as i64);
+            // 30–120 s wander period
+            wander_period_ns.push(rng.range(30, 120) * 1_000_000_000);
+        }
+        Self { offsets_ns, wander_amp_ns, wander_period_ns }
+    }
+
+    /// Perfectly synchronized clocks (skew 0) — for tests.
+    pub fn perfect(n_procs: usize) -> Self {
+        Self {
+            offsets_ns: vec![0; n_procs],
+            wander_amp_ns: vec![0; n_procs],
+            wander_period_ns: vec![60_000_000_000; n_procs],
+        }
+    }
+
+    /// Physical time (ns) of process `p` at virtual time `now`.
+    #[inline]
+    pub fn pt_ns(&self, p: usize, now: Time) -> i64 {
+        let base = now as i64 + self.offsets_ns[p];
+        let amp = self.wander_amp_ns[p];
+        if amp == 0 {
+            return base.max(0);
+        }
+        let period = self.wander_period_ns[p] as f64;
+        let phase = (now as f64 / period) * std::f64::consts::TAU;
+        (base + (phase.sin() * amp as f64) as i64).max(0)
+    }
+
+    /// Physical time in ms (the HVC granularity).
+    #[inline]
+    pub fn pt_ms(&self, p: usize, now: Time) -> Millis {
+        self.pt_ns(p, now) / MS as i64
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.offsets_ns.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn perfect_clocks_agree() {
+        let cm = ClockModel::perfect(4);
+        for t in [0u64, 1_000_000, 5_000_000_000] {
+            for p in 0..4 {
+                assert_eq!(cm.pt_ns(p, t), t as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn skew_is_bounded() {
+        prop::check_default("clock_skew_bounded", |rng| {
+            let skew_ms = rng.range(1, 20) as f64;
+            let cm = ClockModel::new(6, skew_ms, rng);
+            let bound = (skew_ms * MS as f64) as i64 + 1;
+            for _ in 0..50 {
+                let t = rng.range(0, 600_000_000_000);
+                for p in 0..6 {
+                    let err = cm.pt_ns(p, t) - t as i64;
+                    if err.abs() > bound && t as i64 > bound {
+                        return Err(format!("skew {err} exceeds bound {bound} at t={t}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clocks_monotone() {
+        prop::check_default("clock_monotone", |rng| {
+            let cm = ClockModel::new(3, 5.0, rng);
+            let mut prev = [i64::MIN; 3];
+            for k in 0..200u64 {
+                let t = k * 50_000_000; // 50 ms steps ≫ wander slope
+                for p in 0..3 {
+                    let pt = cm.pt_ns(p, t);
+                    if pt < prev[p] {
+                        return Err(format!("clock {p} went backwards at t={t}"));
+                    }
+                    prev[p] = pt;
+                }
+            }
+            Ok(())
+        });
+    }
+}

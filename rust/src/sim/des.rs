@@ -1,0 +1,422 @@
+//! The discrete-event executor: a binary heap of timestamped events,
+//! actors dispatched one event at a time, deterministic under a seed.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::clock::hvc::Millis;
+use crate::sim::clockmodel::ClockModel;
+use crate::sim::machine::Machines;
+use crate::sim::msg::{Msg, MsgClass, N_MSG_CLASSES};
+use crate::sim::net::Topology;
+use crate::sim::{ProcId, Time};
+use crate::util::rng::Rng;
+
+/// A simulated process.
+pub trait Actor {
+    /// Called once before the event loop starts.
+    fn on_start(&mut self, _ctx: &mut Ctx) {}
+    /// A message arrived from `from`.
+    fn on_msg(&mut self, ctx: &mut Ctx, from: ProcId, msg: Msg);
+    /// A self-scheduled timer fired.
+    fn on_timer(&mut self, _ctx: &mut Ctx, _tag: u64) {}
+    /// Downcast hook so the experiment runner can pull stats after a run.
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
+}
+
+#[derive(Debug)]
+enum EvKind {
+    Msg { from: ProcId, msg: Msg },
+    Timer { tag: u64 },
+}
+
+#[derive(Debug)]
+struct Ev {
+    at: Time,
+    seq: u64,
+    dst: ProcId,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // ties broken by insertion order → deterministic FIFO
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Message-traffic counters.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    pub sent: [u64; N_MSG_CLASSES],
+    pub dropped: [u64; N_MSG_CLASSES],
+    pub events: u64,
+}
+
+impl SimStats {
+    pub fn sent_total(&self) -> u64 {
+        self.sent.iter().sum()
+    }
+    pub fn sent_class(&self, c: MsgClass) -> u64 {
+        self.sent[c as usize]
+    }
+}
+
+/// Everything the actors share; split from the actor table so an actor can
+/// hold `&mut Ctx` while being itself borrowed.
+pub struct SimCore {
+    now: Time,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Ev>>,
+    pub topo: Topology,
+    pub clocks: ClockModel,
+    pub machines: Machines,
+    rng_net: Rng,
+    rng_actors: Vec<Rng>,
+    pub stats: SimStats,
+    /// HVC ε (ms) — global config, read by servers/monitors via ctx
+    pub eps_ms: Millis,
+}
+
+/// Per-dispatch context handed to actors.
+pub struct Ctx<'a> {
+    core: &'a mut SimCore,
+    pub self_id: ProcId,
+}
+
+impl<'a> Ctx<'a> {
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.core.now
+    }
+
+    /// This process's physical clock, in ms (HVC granularity).
+    #[inline]
+    pub fn pt_ms(&self) -> Millis {
+        self.core.clocks.pt_ms(self.self_id.idx(), self.core.now)
+    }
+
+    #[inline]
+    pub fn eps_ms(&self) -> Millis {
+        self.core.eps_ms
+    }
+
+    /// This actor's private RNG stream.
+    #[inline]
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.core.rng_actors[self.self_id.idx()]
+    }
+
+    /// Send a message: delivery at `now + net latency` (or never, if the
+    /// loss model drops it).
+    pub fn send(&mut self, dst: ProcId, msg: Msg) {
+        self.send_after(0, dst, msg);
+    }
+
+    /// Send after holding the message locally for `delay` ns (e.g. a reply
+    /// leaving only once the CPU finished the request).
+    pub fn send_after(&mut self, delay: Time, dst: ProcId, msg: Msg) {
+        let class = msg.class() as usize;
+        self.core.stats.sent[class] += 1;
+        if self.core.topo.drops(&mut self.core.rng_net) {
+            self.core.stats.dropped[class] += 1;
+            return;
+        }
+        let lat = self.core.topo.latency(self.self_id, dst, &mut self.core.rng_net);
+        let at = self.core.now + delay + lat;
+        self.core.push(at, dst, EvKind::Msg { from: self.self_id, msg });
+    }
+
+    /// Schedule a timer for this actor.
+    pub fn schedule(&mut self, delay: Time, tag: u64) {
+        let at = self.core.now + delay;
+        let dst = self.self_id;
+        self.core.push(at, dst, EvKind::Timer { tag });
+    }
+
+    /// Claim `svc` ns of CPU on this actor's machine (FIFO across all
+    /// co-located actors). Returns the completion time; callers typically
+    /// `send_after(done - now, …)`.
+    pub fn cpu(&mut self, svc: Time) -> Time {
+        let m = self.core.topo.machine_of[self.self_id.idx()] as usize;
+        self.core.machines.claim(m, self.core.now, svc)
+    }
+
+    /// Completion delay (ns from now) for `svc` ns of CPU work.
+    pub fn cpu_delay(&mut self, svc: Time) -> Time {
+        self.cpu(svc) - self.core.now
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.core.topo
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.core.stats
+    }
+}
+
+impl SimCore {
+    fn push(&mut self, at: Time, dst: ProcId, kind: EvKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Ev { at, seq, dst, kind }));
+    }
+}
+
+/// The simulation: topology + machines + actor table + event loop.
+pub struct Sim {
+    core: SimCore,
+    actors: Vec<Option<Box<dyn Actor>>>,
+    started: bool,
+}
+
+impl Sim {
+    pub fn new(topo: Topology, thread_counts: &[usize], seed: u64, skew_max_ms: f64, eps_ms: Millis) -> Self {
+        let n = topo.n_procs();
+        let mut seeder = Rng::new(seed);
+        let clocks = if skew_max_ms > 0.0 {
+            ClockModel::new(n, skew_max_ms, &mut seeder)
+        } else {
+            ClockModel::perfect(n)
+        };
+        let rng_actors = (0..n).map(|i| Rng::stream(seed, 0x1000 + i as u64)).collect();
+        Self {
+            core: SimCore {
+                now: 0,
+                seq: 0,
+                heap: BinaryHeap::new(),
+                topo,
+                clocks,
+                machines: Machines::new(thread_counts),
+                rng_net: Rng::stream(seed, 0xFACE),
+                rng_actors,
+                stats: SimStats::default(),
+                eps_ms,
+            },
+            actors: Vec::new(),
+            started: false,
+        }
+    }
+
+    /// Register the next actor; ids must line up with the topology's
+    /// process order (the experiment runner guarantees this).
+    pub fn add_actor(&mut self, actor: Box<dyn Actor>) -> ProcId {
+        let id = ProcId(self.actors.len() as u32);
+        assert!(
+            self.actors.len() < self.core.topo.n_procs(),
+            "more actors than topology processes"
+        );
+        self.actors.push(Some(actor));
+        id
+    }
+
+    pub fn now(&self) -> Time {
+        self.core.now
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.core.stats
+    }
+
+    pub fn machines(&self) -> &Machines {
+        &self.core.machines
+    }
+
+    fn dispatch(&mut self, ev: Ev) {
+        let idx = ev.dst.idx();
+        let mut actor = self.actors[idx].take().unwrap_or_else(|| panic!("actor {idx} missing"));
+        let mut ctx = Ctx { core: &mut self.core, self_id: ev.dst };
+        match ev.kind {
+            EvKind::Msg { from, msg } => actor.on_msg(&mut ctx, from, msg),
+            EvKind::Timer { tag } => actor.on_timer(&mut ctx, tag),
+        }
+        self.actors[idx] = Some(actor);
+    }
+
+    fn start_all(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        assert_eq!(
+            self.actors.len(),
+            self.core.topo.n_procs(),
+            "actor count must match topology"
+        );
+        for i in 0..self.actors.len() {
+            let mut actor = self.actors[i].take().unwrap();
+            let mut ctx = Ctx { core: &mut self.core, self_id: ProcId(i as u32) };
+            actor.on_start(&mut ctx);
+            self.actors[i] = Some(actor);
+        }
+    }
+
+    /// Run until virtual time `until` (events at t > until stay queued).
+    pub fn run_until(&mut self, until: Time) {
+        self.start_all();
+        loop {
+            let next_at = match self.core.heap.peek() {
+                Some(Reverse(ev)) => ev.at,
+                None => break,
+            };
+            if next_at > until {
+                break;
+            }
+            let Reverse(ev) = self.core.heap.pop().unwrap();
+            self.core.now = ev.at;
+            self.core.stats.events += 1;
+            self.dispatch(ev);
+        }
+        self.core.now = until;
+    }
+
+    /// Drain every queued event (until the system goes quiet).
+    pub fn run_to_quiescence(&mut self, hard_cap: Time) {
+        self.start_all();
+        while let Some(Reverse(ev)) = self.core.heap.pop() {
+            if ev.at > hard_cap {
+                break;
+            }
+            self.core.now = ev.at;
+            self.core.stats.events += 1;
+            self.dispatch(ev);
+        }
+    }
+
+    /// Direct (test-only) access to an actor.
+    pub fn actor_mut(&mut self, id: ProcId) -> &mut Box<dyn Actor> {
+        self.actors[id.idx()].as_mut().expect("actor present")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::net::Topology;
+    use crate::sim::{MS, SEC};
+    use crate::store::protocol::{ServerOp, ServerReply};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// Ping-pong actor pair used to exercise the loop.
+    struct Pinger {
+        peer: ProcId,
+        remaining: u32,
+        log: Rc<RefCell<Vec<(Time, u64)>>>,
+    }
+
+    impl Actor for Pinger {
+        fn on_start(&mut self, ctx: &mut Ctx) {
+            if self.remaining > 0 {
+                ctx.send(
+                    self.peer,
+                    Msg::Request { req: self.remaining as u64, op: ServerOp::Get(crate::store::value::KeyId(0)), hvc: None },
+                );
+            }
+        }
+        fn on_msg(&mut self, ctx: &mut Ctx, from: ProcId, msg: Msg) {
+            match msg {
+                Msg::Request { req, .. } => {
+                    ctx.send(from, Msg::Reply { req, reply: ServerReply::PutAck, hvc: crate::clock::hvc::Hvc::new(0, 1, ctx.pt_ms(), 0) });
+                }
+                Msg::Reply { req, .. } => {
+                    self.log.borrow_mut().push((ctx.now(), req));
+                    self.remaining -= 1;
+                    if self.remaining > 0 {
+                        ctx.send(
+                            self.peer,
+                            Msg::Request { req: self.remaining as u64, op: ServerOp::Get(crate::store::value::KeyId(0)), hvc: None },
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn two_proc_sim(seed: u64) -> (Sim, Rc<RefCell<Vec<(Time, u64)>>>) {
+        let topo = Topology::flat(2, 10.0);
+        let mut sim = Sim::new(topo, &[1, 1], seed, 0.0, 0);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        sim.add_actor(Box::new(Pinger { peer: ProcId(1), remaining: 5, log: log.clone() }));
+        sim.add_actor(Box::new(Pinger { peer: ProcId(0), remaining: 0, log: log.clone() }));
+        (sim, log)
+    }
+
+    #[test]
+    fn ping_pong_round_trips() {
+        let (mut sim, log) = two_proc_sim(1);
+        sim.run_until(10 * SEC);
+        let log = log.borrow();
+        assert_eq!(log.len(), 5);
+        // each round trip is >= 20 ms (2 x 10 ms one-way)
+        assert!(log[0].0 >= 20 * MS);
+        for w in log.windows(2) {
+            assert!(w[1].0 > w[0].0, "times must advance");
+        }
+    }
+
+    #[test]
+    fn determinism_same_seed() {
+        let (mut a, la) = two_proc_sim(42);
+        let (mut b, lb) = two_proc_sim(42);
+        a.run_until(SEC);
+        b.run_until(SEC);
+        assert_eq!(*la.borrow(), *lb.borrow());
+    }
+
+    #[test]
+    fn different_seed_different_latencies() {
+        let (mut a, la) = two_proc_sim(1);
+        let (mut b, lb) = two_proc_sim(2);
+        a.run_until(SEC);
+        b.run_until(SEC);
+        assert_ne!(*la.borrow(), *lb.borrow());
+    }
+
+    #[test]
+    fn timer_delivery() {
+        struct T {
+            fired: Rc<RefCell<Vec<u64>>>,
+        }
+        impl Actor for T {
+            fn on_start(&mut self, ctx: &mut Ctx) {
+                ctx.schedule(5 * MS, 7);
+                ctx.schedule(MS, 3);
+            }
+            fn on_msg(&mut self, _: &mut Ctx, _: ProcId, _: Msg) {}
+            fn on_timer(&mut self, _ctx: &mut Ctx, tag: u64) {
+                self.fired.borrow_mut().push(tag);
+            }
+        }
+        let topo = Topology::flat(1, 1.0);
+        let mut sim = Sim::new(topo, &[1], 0, 0.0, 0);
+        let fired = Rc::new(RefCell::new(Vec::new()));
+        sim.add_actor(Box::new(T { fired: fired.clone() }));
+        sim.run_until(SEC);
+        assert_eq!(*fired.borrow(), vec![3, 7], "timers fire in time order");
+    }
+
+    #[test]
+    fn stats_count_messages() {
+        let (mut sim, _) = two_proc_sim(3);
+        sim.run_until(10 * SEC);
+        assert_eq!(sim.stats().sent_class(MsgClass::Request), 5);
+        assert_eq!(sim.stats().sent_class(MsgClass::Reply), 5);
+        assert!(sim.stats().events >= 10);
+    }
+}

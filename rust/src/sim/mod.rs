@@ -1,0 +1,51 @@
+//! Deterministic discrete-event simulator (DES).
+//!
+//! Single-threaded, virtual-time executor over a set of actors (servers,
+//! clients, monitors, the rollback controller). Substitutes for the
+//! paper's AWS EC2 / local-lab deployments: network latencies follow the
+//! paper's own Gamma proxy model (§VI-C), per-process physical clocks have
+//! bounded skew (the HVC ε story), and each machine has a bounded number
+//! of CPU threads shared by a server and its co-located monitor (which is
+//! exactly how the paper accounts monitoring overhead).
+
+pub mod clockmodel;
+pub mod des;
+pub mod machine;
+pub mod msg;
+pub mod net;
+
+/// Virtual time in nanoseconds.
+pub type Time = u64;
+
+pub const US: Time = 1_000;
+pub const MS: Time = 1_000_000;
+pub const SEC: Time = 1_000_000_000;
+
+/// Convert a millisecond count (possibly fractional) to virtual ns.
+#[inline]
+pub fn ms(x: f64) -> Time {
+    (x * MS as f64) as Time
+}
+
+/// Virtual ns → whole milliseconds (the HVC granularity).
+#[inline]
+pub fn to_ms(t: Time) -> i64 {
+    (t / MS) as i64
+}
+
+/// Actor (process) identifier: an index into the simulation's actor table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProcId(pub u32);
+
+impl ProcId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for ProcId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "p{}", self.0)
+    }
+}

@@ -1,0 +1,75 @@
+//! The message vocabulary of the simulated distributed system: the
+//! Voldemort-style client↔server protocol, monitor candidates/violations,
+//! rollback control, and predicate registration (for predicates inferred
+//! at runtime from variable names).
+
+use crate::clock::hvc::{Hvc, Millis};
+use crate::detect::candidate::{Candidate, ViolationReport};
+use crate::predicate::spec::PredicateSpec;
+use crate::store::protocol::{ServerOp, ServerReply};
+
+/// Rollback / recovery control messages (controller ↔ servers/clients).
+#[derive(Debug, Clone)]
+pub enum RollbackMsg {
+    /// controller → clients: predicate `pred` was violated at ~`t_violate_ms`;
+    /// abort the current task / roll back. `epoch` identifies the recovery.
+    Notify { epoch: u64, t_violate_ms: Millis },
+    /// controller → servers: stop serving while a restore is in progress.
+    Freeze { epoch: u64 },
+    /// server → controller
+    FrozenAck { epoch: u64 },
+    /// controller → servers: restore state to the latest snapshot/cut
+    /// before `to_ms` (window-log or periodic snapshot, server-side).
+    Restore { epoch: u64, to_ms: Millis },
+    /// server → controller (false ⇒ the window-log did not reach back far
+    /// enough and a full snapshot restore was used instead)
+    RestoredAck { epoch: u64, from_window_log: bool },
+    /// controller → servers and clients: resume computation.
+    Resume { epoch: u64 },
+}
+
+/// Everything that travels between actors.
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// client → server. The client piggy-backs the freshest HVC it has
+    /// observed (clients relay causality between servers; the HVC dimension
+    /// stays = #servers).
+    Request { req: u64, op: ServerOp, hvc: Option<Hvc> },
+    /// server → client.
+    Reply { req: u64, reply: ServerReply, hvc: Hvc },
+    /// local predicate detector (on a server) → monitor.
+    Candidate(Box<Candidate>),
+    /// monitor → rollback controller (and anyone subscribed).
+    Violation(Box<ViolationReport>),
+    /// rollback control plane.
+    Rollback(RollbackMsg),
+    /// server → monitor: a predicate inferred at runtime from variable
+    /// naming conventions (§V "Automatic inference").
+    RegisterPred(Box<PredicateSpec>),
+}
+
+impl Msg {
+    /// Coarse class label for statistics.
+    pub fn class(&self) -> MsgClass {
+        match self {
+            Msg::Request { .. } => MsgClass::Request,
+            Msg::Reply { .. } => MsgClass::Reply,
+            Msg::Candidate(_) => MsgClass::Candidate,
+            Msg::Violation(_) => MsgClass::Violation,
+            Msg::Rollback(_) => MsgClass::Rollback,
+            Msg::RegisterPred(_) => MsgClass::Register,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgClass {
+    Request = 0,
+    Reply = 1,
+    Candidate = 2,
+    Violation = 3,
+    Rollback = 4,
+    Register = 5,
+}
+
+pub const N_MSG_CLASSES: usize = 6;

@@ -1,0 +1,208 @@
+//! Network topology and latency model.
+//!
+//! Latency between two processes follows the paper's §VI-C proxy model:
+//! `D_{A,B} = D^d_{A,B} × (1 + Γ(shape=0.8) × 0.2)` where `D^d` is the
+//! deterministic one-way delay between the *regions* of A and B. Same-
+//! machine traffic (a server and its co-located monitor) uses a loopback
+//! constant. Optional i.i.d. message loss models the timeouts/second
+//! rounds of the Voldemort client.
+
+use crate::sim::{ms, ProcId, Time};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// region index of each process
+    pub region_of: Vec<u8>,
+    /// machine index of each process (co-location ⇒ loopback + shared CPU)
+    pub machine_of: Vec<u32>,
+    /// one-way deterministic delay (ms) between regions, `base_ms[a][b]`
+    pub base_ms: Vec<Vec<f64>>,
+    /// Gamma shape for the stochastic component (paper: 0.8)
+    pub gamma_shape: f64,
+    /// multiplier fraction (paper: 0.2)
+    pub jitter_frac: f64,
+    /// same-machine delay (ms)
+    pub loopback_ms: f64,
+    /// i.i.d. message drop probability
+    pub drop_prob: f64,
+}
+
+impl Topology {
+    /// All processes in one region / machine-per-process. Useful in tests.
+    pub fn flat(n_procs: usize, base_one_way_ms: f64) -> Self {
+        Self {
+            region_of: vec![0; n_procs],
+            machine_of: (0..n_procs as u32).collect(),
+            base_ms: vec![vec![base_one_way_ms]],
+            gamma_shape: 0.8,
+            jitter_frac: 0.2,
+            loopback_ms: 0.05,
+            drop_prob: 0.0,
+        }
+    }
+
+    /// The paper's AWS global setup: Ohio / Oregon / Frankfurt with
+    /// pairwise RTTs 76 / 103 / 163 ms (§VI-A) → one-way halves. Intra-
+    /// region delay ~1 ms.
+    pub fn aws_global() -> Vec<Vec<f64>> {
+        vec![
+            // Ohio     Oregon   Frankfurt
+            vec![1.0, 38.0, 51.5],
+            vec![38.0, 1.0, 81.5],
+            vec![51.5, 81.5, 1.0],
+        ]
+    }
+
+    /// The paper's regional setup: one region, 5 availability zones,
+    /// inter-AZ latency < 2 ms (§VI-B "Impact of workload characteristics").
+    pub fn aws_regional(n_zones: usize) -> Vec<Vec<f64>> {
+        let mut m = vec![vec![0.75; n_zones]; n_zones];
+        for (z, row) in m.iter_mut().enumerate() {
+            row[z] = 0.25;
+        }
+        m
+    }
+
+    /// The paper's local-lab proxy setup (Fig. 8): three regions, 1 ms
+    /// one-way intra-region, `inter_ms` (50 or 100) one-way inter-region.
+    pub fn local_lab(inter_ms: f64) -> Vec<Vec<f64>> {
+        vec![
+            vec![1.0, inter_ms, inter_ms],
+            vec![inter_ms, 1.0, inter_ms],
+            vec![inter_ms, inter_ms, 1.0],
+        ]
+    }
+
+    /// Sample the one-way latency for a message `src → dst`.
+    pub fn latency(&self, src: ProcId, dst: ProcId, rng: &mut Rng) -> Time {
+        if src == dst || self.machine_of[src.idx()] == self.machine_of[dst.idx()] {
+            return ms(self.loopback_ms);
+        }
+        let base = self.base_ms[self.region_of[src.idx()] as usize][self.region_of[dst.idx()] as usize];
+        let sample = rng.gamma(self.gamma_shape);
+        ms(base * (1.0 + sample * self.jitter_frac))
+    }
+
+    /// Should this message be dropped?
+    pub fn drops(&self, rng: &mut Rng) -> bool {
+        self.drop_prob > 0.0 && rng.chance(self.drop_prob)
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.region_of.len()
+    }
+}
+
+/// Builder used by the experiment runner: lay out servers, co-located
+/// monitors, clients and a controller across regions/machines.
+#[derive(Debug, Clone, Default)]
+pub struct TopologyBuilder {
+    region_of: Vec<u8>,
+    machine_of: Vec<u32>,
+    thread_counts: Vec<usize>,
+    next_machine: u32,
+}
+
+impl TopologyBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a process on a brand-new machine with `threads` CPU threads.
+    /// Returns (proc index, machine index).
+    pub fn add_machine_proc(&mut self, region: u8, threads: usize) -> (u32, u32) {
+        let m = self.next_machine;
+        self.next_machine += 1;
+        self.thread_counts.push(threads);
+        let p = self.region_of.len() as u32;
+        self.region_of.push(region);
+        self.machine_of.push(m);
+        (p, m)
+    }
+
+    /// Add a process co-located on an existing machine.
+    pub fn add_colocated_proc(&mut self, machine: u32) -> u32 {
+        let p = self.region_of.len() as u32;
+        let region = self
+            .machine_of
+            .iter()
+            .position(|&m| m == machine)
+            .map(|i| self.region_of[i])
+            .expect("machine exists");
+        self.region_of.push(region);
+        self.machine_of.push(machine);
+        p
+    }
+
+    pub fn build(self, base_ms: Vec<Vec<f64>>, drop_prob: f64) -> (Topology, Vec<usize>) {
+        let topo = Topology {
+            region_of: self.region_of,
+            machine_of: self.machine_of,
+            base_ms,
+            gamma_shape: 0.8,
+            jitter_frac: 0.2,
+            loopback_ms: 0.05,
+            drop_prob,
+        };
+        (topo, self.thread_counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MS;
+
+    #[test]
+    fn loopback_for_colocated() {
+        let mut b = TopologyBuilder::new();
+        let (_s0, m0) = b.add_machine_proc(0, 2);
+        let mon = b.add_colocated_proc(m0);
+        let (s1, _) = b.add_machine_proc(1, 2);
+        let (topo, threads) = b.build(Topology::local_lab(50.0), 0.0);
+        assert_eq!(threads, vec![2, 2]);
+        let mut rng = Rng::new(1);
+        let l = topo.latency(ProcId(0), ProcId(mon), &mut rng);
+        assert!(l < MS, "loopback should be sub-millisecond, got {l}");
+        let l2 = topo.latency(ProcId(0), ProcId(s1), &mut rng);
+        assert!(l2 >= ms(50.0), "inter-region should be >= 50 ms, got {l2}");
+    }
+
+    #[test]
+    fn gamma_jitter_matches_paper_model() {
+        // D = D^d * (1 + gamma(0.8) * 0.2)  →  mean = D^d * 1.16
+        let topo = Topology::flat(2, 100.0);
+        let mut rng = Rng::new(5);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let l = topo.latency(ProcId(0), ProcId(1), &mut rng);
+            assert!(l >= ms(100.0), "jitter is additive-only");
+            sum += l as f64 / MS as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 116.0).abs() < 1.5, "mean={mean}, expected ~116");
+    }
+
+    #[test]
+    fn aws_matrices_shape() {
+        let g = Topology::aws_global();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g[0][1], 38.0);
+        let r = Topology::aws_regional(5);
+        assert_eq!(r.len(), 5);
+        assert!(r[0][1] < 2.0);
+        let l = Topology::local_lab(100.0);
+        assert_eq!(l[0][2], 100.0);
+    }
+
+    #[test]
+    fn drop_probability() {
+        let mut topo = Topology::flat(2, 1.0);
+        topo.drop_prob = 0.5;
+        let mut rng = Rng::new(9);
+        let drops = (0..10_000).filter(|_| topo.drops(&mut rng)).count();
+        assert!((4_500..5_500).contains(&drops));
+    }
+}

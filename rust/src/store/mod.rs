@@ -1,0 +1,7 @@
+//! The Dynamo/Voldemort-style key-value store substrate: versioned
+//! values, server storage engine, wire protocol, and the server actor.
+
+pub mod protocol;
+pub mod server;
+pub mod table;
+pub mod value;

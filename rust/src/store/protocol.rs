@@ -1,0 +1,40 @@
+//! The client↔server wire operations of the Voldemort-style store.
+
+use crate::clock::vc::VectorClock;
+use crate::store::value::{KeyId, Value, Versioned};
+
+/// Operations a client sends to a server. An application-level PUT is
+/// translated by the client library into GET_VERSION followed by PUT with
+/// an incremented version (§VI-A "Performance Metric and Measurement").
+#[derive(Debug, Clone)]
+pub enum ServerOp {
+    Get(KeyId),
+    GetVersion(KeyId),
+    Put { key: KeyId, version: VectorClock, value: Value },
+}
+
+impl ServerOp {
+    pub fn key(&self) -> KeyId {
+        match self {
+            ServerOp::Get(k) | ServerOp::GetVersion(k) => *k,
+            ServerOp::Put { key, .. } => *key,
+        }
+    }
+
+    pub fn is_put(&self) -> bool {
+        matches!(self, ServerOp::Put { .. })
+    }
+}
+
+/// Server replies.
+#[derive(Debug, Clone)]
+pub enum ServerReply {
+    /// all sibling versions of the key (GET)
+    Values(Vec<Versioned>),
+    /// just the version clocks (GET_VERSION)
+    Versions(Vec<VectorClock>),
+    /// write applied (PUT)
+    PutAck,
+    /// server is frozen for recovery — client treats as a miss
+    Frozen,
+}

@@ -1,0 +1,151 @@
+//! A server's storage engine: `key → sibling versions`, with Dynamo
+//! insert semantics. Kept separate from the server actor so snapshots and
+//! the window-log can manipulate it directly.
+
+use std::collections::HashMap;
+
+use crate::clock::vc::VectorClock;
+use crate::store::value::{insert_version, KeyId, Value, Versioned};
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    map: HashMap<KeyId, Vec<Versioned>>,
+    puts_applied: u64,
+}
+
+impl Table {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// All sibling versions of a key (empty slice if absent).
+    pub fn get(&self, key: KeyId) -> &[Versioned] {
+        self.map.get(&key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Version clocks only (GET_VERSION).
+    pub fn versions(&self, key: KeyId) -> Vec<VectorClock> {
+        self.get(key).iter().map(|v| v.version.clone()).collect()
+    }
+
+    /// Resolved single value (server-side convenience for detectors): all
+    /// sibling values.
+    pub fn sibling_values(&self, key: KeyId) -> Vec<Value> {
+        self.get(key).iter().map(|v| v.value.clone()).collect()
+    }
+
+    /// Apply a PUT. Returns the previous sibling list (for the window log)
+    /// and whether the table changed.
+    pub fn put(&mut self, key: KeyId, version: VectorClock, value: Value) -> (Vec<Versioned>, bool) {
+        let entry = self.map.entry(key).or_default();
+        let prev = entry.clone();
+        let changed = insert_version(entry, Versioned::new(version, value));
+        if changed {
+            self.puts_applied += 1;
+        }
+        (prev, changed)
+    }
+
+    /// Overwrite a key's entire sibling list (window-log rollback).
+    pub fn restore_key(&mut self, key: KeyId, siblings: Vec<Versioned>) {
+        if siblings.is_empty() {
+            self.map.remove(&key);
+        } else {
+            self.map.insert(key, siblings);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn puts_applied(&self) -> u64 {
+        self.puts_applied
+    }
+
+    /// Deep snapshot of the whole table (periodic checkpoints).
+    pub fn snapshot(&self) -> HashMap<KeyId, Vec<Versioned>> {
+        self.map.clone()
+    }
+
+    /// Replace contents from a snapshot.
+    pub fn restore_snapshot(&mut self, snap: HashMap<KeyId, Vec<Versioned>>) {
+        self.map = snap;
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&KeyId, &Vec<Versioned>)> {
+        self.map.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vc(node: u32, n: u64) -> VectorClock {
+        let mut v = VectorClock::new();
+        for _ in 0..n {
+            v.increment(node);
+        }
+        v
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut t = Table::new();
+        let k = KeyId(1);
+        let (prev, changed) = t.put(k, vc(1, 1), Value::Int(7));
+        assert!(prev.is_empty());
+        assert!(changed);
+        assert_eq!(t.get(k).len(), 1);
+        assert_eq!(t.get(k)[0].value, Value::Int(7));
+        assert_eq!(t.versions(k), vec![vc(1, 1)]);
+    }
+
+    #[test]
+    fn concurrent_puts_create_siblings() {
+        let mut t = Table::new();
+        let k = KeyId(1);
+        t.put(k, vc(1, 1), Value::Str("A".into()));
+        let (prev, changed) = t.put(k, vc(2, 1), Value::Str("B".into()));
+        assert!(changed);
+        assert_eq!(prev.len(), 1);
+        assert_eq!(t.get(k).len(), 2);
+        assert_eq!(t.sibling_values(k).len(), 2);
+    }
+
+    #[test]
+    fn stale_put_ignored() {
+        let mut t = Table::new();
+        let k = KeyId(1);
+        t.put(k, vc(1, 2), Value::Int(2));
+        let (_, changed) = t.put(k, vc(1, 1), Value::Int(1));
+        assert!(!changed);
+        assert_eq!(t.puts_applied(), 1);
+    }
+
+    #[test]
+    fn snapshot_restore() {
+        let mut t = Table::new();
+        t.put(KeyId(1), vc(1, 1), Value::Int(1));
+        let snap = t.snapshot();
+        t.put(KeyId(1), vc(1, 2), Value::Int(2));
+        t.put(KeyId(2), vc(1, 1), Value::Int(9));
+        assert_eq!(t.len(), 2);
+        t.restore_snapshot(snap);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(KeyId(1))[0].value, Value::Int(1));
+    }
+
+    #[test]
+    fn restore_key_to_empty_removes() {
+        let mut t = Table::new();
+        t.put(KeyId(1), vc(1, 1), Value::Int(1));
+        t.restore_key(KeyId(1), vec![]);
+        assert!(t.is_empty());
+    }
+}

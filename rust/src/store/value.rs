@@ -1,0 +1,287 @@
+//! Values, interned keys, and versioned (vector-clock stamped) entries —
+//! the data model of the Dynamo/Voldemort-style store: a key maps to a
+//! *list* of `<version, value>` pairs; concurrent PUTs leave sibling
+//! versions which clients resolve.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+
+use crate::clock::vc::{Causality, VectorClock};
+
+/// Interned key id. Variable names like `flagA_B_A` are interned once per
+/// simulation; the hot path moves u32s, not strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KeyId(pub u32);
+
+/// String interner shared by all actors of one simulation (single-threaded
+/// DES ⇒ `Rc<RefCell<…>>`).
+#[derive(Debug, Default)]
+pub struct Interner {
+    map: HashMap<Box<str>, u32>,
+    names: Vec<Box<str>>,
+}
+
+impl Interner {
+    pub fn new() -> Rc<RefCell<Interner>> {
+        Rc::new(RefCell::new(Interner::default()))
+    }
+
+    pub fn intern(&mut self, name: &str) -> KeyId {
+        if let Some(&id) = self.map.get(name) {
+            return KeyId(id);
+        }
+        let id = self.names.len() as u32;
+        let boxed: Box<str> = name.into();
+        self.names.push(boxed.clone());
+        self.map.insert(boxed, id);
+        KeyId(id)
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<KeyId> {
+        self.map.get(name).map(|&id| KeyId(id))
+    }
+
+    pub fn name(&self, key: KeyId) -> &str {
+        &self.names[key.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+/// Stored values. Small enum — the paper's applications store flags,
+/// turn-owners, colors and sensor scalars.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Str(Box<str>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            Value::Int(i) => Some(*i != 0),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Bool(b) => Some(*b as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Parse from predicate-spec text: `true`/`false`, integer, else string.
+    pub fn parse(text: &str) -> Value {
+        match text {
+            "true" => Value::Bool(true),
+            "false" => Value::Bool(false),
+            "null" => Value::Null,
+            _ => text
+                .parse::<i64>()
+                .map(Value::Int)
+                .unwrap_or_else(|_| Value::Str(text.into())),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "null"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// A `<version, value>` pair as stored and as returned by GET.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Versioned {
+    pub version: VectorClock,
+    pub value: Value,
+}
+
+impl Versioned {
+    pub fn new(version: VectorClock, value: Value) -> Self {
+        Self { version, value }
+    }
+}
+
+/// Insert a new version into a sibling list with Dynamo semantics:
+/// versions dominated by the newcomer are dropped; if the newcomer is
+/// dominated it is ignored; otherwise it joins as a concurrent sibling.
+/// Returns true if the list changed.
+pub fn insert_version(siblings: &mut Vec<Versioned>, new: Versioned) -> bool {
+    for s in siblings.iter() {
+        match s.version.compare(&new.version) {
+            Causality::After | Causality::Equal => return false, // dominated / duplicate
+            _ => {}
+        }
+    }
+    siblings.retain(|s| s.version.compare(&new.version) != Causality::Before);
+    siblings.push(new);
+    true
+}
+
+/// Merge sibling lists coming from several replicas (a client-side GET
+/// combining R responses): union with domination pruning.
+pub fn merge_siblings(lists: impl IntoIterator<Item = Vec<Versioned>>) -> Vec<Versioned> {
+    let mut out: Vec<Versioned> = Vec::new();
+    for list in lists {
+        for v in list {
+            insert_version(&mut out, v);
+        }
+    }
+    out
+}
+
+/// Default client-side resolver (Voldemort offers a library resolver):
+/// pick the sibling with the causally greatest version; among concurrent
+/// siblings, break ties deterministically by the version's entry list (so
+/// every client resolves identically). Returns None on empty input.
+pub fn resolve(siblings: &[Versioned]) -> Option<&Versioned> {
+    siblings.iter().reduce(|best, v| match v.version.compare(&best.version) {
+        Causality::After => v,
+        Causality::Concurrent => {
+            // deterministic tiebreak: lexicographically larger entry vector
+            if v.version.entries() > best.version.entries() {
+                v
+            } else {
+                best
+            }
+        }
+        _ => best,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn vc(pairs: &[(u32, u64)]) -> VectorClock {
+        let mut v = VectorClock::new();
+        for &(n, c) in pairs {
+            for _ in 0..c {
+                v.increment(n);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn interner_roundtrip() {
+        let i = Interner::new();
+        let a = i.borrow_mut().intern("flagA_B_A");
+        let b = i.borrow_mut().intern("turnA_B");
+        let a2 = i.borrow_mut().intern("flagA_B_A");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(i.borrow().name(a), "flagA_B_A");
+        assert_eq!(i.borrow().lookup("turnA_B"), Some(b));
+        assert_eq!(i.borrow().lookup("nope"), None);
+    }
+
+    #[test]
+    fn value_parse() {
+        assert_eq!(Value::parse("true"), Value::Bool(true));
+        assert_eq!(Value::parse("42"), Value::Int(42));
+        assert_eq!(Value::parse("A"), Value::Str("A".into()));
+        assert_eq!(Value::parse("null"), Value::Null);
+        assert_eq!(Value::Int(1).as_bool(), Some(true));
+    }
+
+    #[test]
+    fn insert_dominating_version_replaces() {
+        let mut sibs = vec![Versioned::new(vc(&[(1, 1)]), Value::Int(1))];
+        let newer = Versioned::new(vc(&[(1, 2)]), Value::Int(2));
+        assert!(insert_version(&mut sibs, newer));
+        assert_eq!(sibs.len(), 1);
+        assert_eq!(sibs[0].value, Value::Int(2));
+    }
+
+    #[test]
+    fn insert_dominated_version_ignored() {
+        let mut sibs = vec![Versioned::new(vc(&[(1, 2)]), Value::Int(2))];
+        let older = Versioned::new(vc(&[(1, 1)]), Value::Int(1));
+        assert!(!insert_version(&mut sibs, older));
+        assert_eq!(sibs.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_versions_coexist() {
+        let mut sibs = vec![Versioned::new(vc(&[(1, 1)]), Value::Str("A".into()))];
+        let other = Versioned::new(vc(&[(2, 1)]), Value::Str("B".into()));
+        assert!(insert_version(&mut sibs, other));
+        assert_eq!(sibs.len(), 2, "concurrent writes must create siblings");
+    }
+
+    #[test]
+    fn merge_from_replicas() {
+        let l1 = vec![Versioned::new(vc(&[(1, 1)]), Value::Int(1))];
+        let l2 = vec![
+            Versioned::new(vc(&[(1, 2)]), Value::Int(2)),
+            Versioned::new(vc(&[(2, 1)]), Value::Int(9)),
+        ];
+        let merged = merge_siblings([l1, l2]);
+        assert_eq!(merged.len(), 2);
+        assert!(merged.iter().any(|v| v.value == Value::Int(2)));
+        assert!(merged.iter().any(|v| v.value == Value::Int(9)));
+    }
+
+    #[test]
+    fn resolver_picks_dominant_then_tiebreaks() {
+        let a = Versioned::new(vc(&[(1, 2)]), Value::Int(10));
+        let b = Versioned::new(vc(&[(1, 1)]), Value::Int(5));
+        assert_eq!(resolve(&[b.clone(), a.clone()]).unwrap().value, Value::Int(10));
+        // concurrent: deterministic, order-independent
+        let c = Versioned::new(vc(&[(2, 1)]), Value::Int(7));
+        let r1 = resolve(&[a.clone(), c.clone()]).unwrap().value.clone();
+        let r2 = resolve(&[c, a]).unwrap().value.clone();
+        assert_eq!(r1, r2);
+        assert_eq!(resolve(&[]), None);
+    }
+
+    #[test]
+    fn prop_sibling_list_is_antichain() {
+        prop::check_default("siblings_antichain", |rng| {
+            let mut sibs: Vec<Versioned> = Vec::new();
+            for i in 0..rng.range(1, 20) {
+                let mut v = VectorClock::new();
+                for _ in 0..rng.range(0, 4) {
+                    v.increment(rng.below(4) as u32);
+                }
+                insert_version(&mut sibs, Versioned::new(v, Value::Int(i as i64)));
+            }
+            for (i, a) in sibs.iter().enumerate() {
+                for b in sibs.iter().skip(i + 1) {
+                    if a.version.compare(&b.version) != Causality::Concurrent {
+                        return Err(format!("non-concurrent siblings: {a:?} {b:?}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal CLI argument parsing (no `clap` offline): `--key value`,
+//! `--key=value`, and boolean `--flag` forms, plus positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args()` tail.
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(body.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") | Some("on") => true,
+            Some("false") | Some("0") | Some("no") | Some("off") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("run --seed 42 --clients=15 --verbose --model eventual");
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get_usize("clients", 0), 15);
+        assert!(a.get_bool("verbose", false));
+        assert_eq!(a.get("model"), Some("eventual"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("--x 1 --flag");
+        assert!(a.get_bool("flag", false));
+        assert_eq!(a.get_u64("x", 0), 1);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_f64("nope", 2.5), 2.5);
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b v");
+        assert!(a.get_bool("a", false));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained utilities (the build is offline: no external crates
+//! beyond `xla`): PRNG + distributions, statistics, a mini property-test
+//! driver, CLI parsing, and an XML-subset parser.
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod xmlmini;

@@ -1,0 +1,85 @@
+//! Minimal property-testing driver (no `proptest` offline): run a closure
+//! over N seeded random cases; on failure, report the failing seed so the
+//! case can be replayed deterministically with `PROP_SEED=<seed>`.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property; override with env `PROP_CASES`.
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(256)
+}
+
+/// Run `f` over `cases` seeded RNGs. `f` returns Err(description) on a
+/// counterexample. Panics with the failing seed for replay.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // replay mode: a single pinned seed
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        let seed: u64 = s.parse().expect("PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        // distinct, stable seeds per case and per property name
+        let seed = fnv1a(name.as_bytes()) ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed at case {case} (replay with PROP_SEED={seed}): {msg}");
+        }
+    }
+}
+
+/// Convenience: run with the default number of cases.
+pub fn check_default<F>(name: &str, f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, default_cases(), f)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 32, |rng| {
+            n += 1;
+            let a = rng.below(100);
+            if a < 100 {
+                Ok(())
+            } else {
+                Err(format!("{a} out of range"))
+            }
+        });
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `failing`")]
+    fn failing_property_panics_with_seed() {
+        check("failing", 8, |rng| {
+            let v = rng.below(4);
+            if v == 3 {
+                Err("hit 3".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,230 @@
+//! Small statistics helpers used by the metrics module and the benches:
+//! mean/std/percentiles, histograms with the paper's latency buckets
+//! (Table III), and a fixed-width table printer for bench output.
+
+/// Arithmetic mean. Returns 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1). Returns 0.0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Coefficient of variation (std/mean); 0 when mean is 0.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        std_dev(xs) / m
+    }
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Histogram over explicit bucket upper bounds (last bucket is overflow).
+/// Used to regenerate Table III's response-time distribution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// upper bounds, exclusive, ascending
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: Vec<f64>) -> Self {
+        let n = bounds.len();
+        Self { bounds, counts: vec![0; n + 1], total: 0 }
+    }
+
+    /// The paper's Table III buckets, in milliseconds.
+    pub fn table3_buckets() -> Self {
+        Self::new(vec![50.0, 1_000.0, 10_000.0, 17_000.0])
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x < b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn fraction(&self, idx: usize) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.counts[idx] as f64 / self.total as f64
+        }
+    }
+
+    /// Rows of (label, count, percentage).
+    pub fn rows(&self) -> Vec<(String, u64, f64)> {
+        let mut out = Vec::new();
+        let mut lo = 0.0;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            out.push((format!("{} - {}", fmt_num(lo), fmt_num(b)), self.counts[i], self.fraction(i) * 100.0));
+            lo = b;
+        }
+        out.push((format!(">= {}", fmt_num(lo)), self.counts[self.bounds.len()], self.fraction(self.bounds.len()) * 100.0));
+        out
+    }
+}
+
+fn fmt_num(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        let i = x as i64;
+        // thousands separators for readability in printed tables
+        let s = i.abs().to_string();
+        let mut out = String::new();
+        for (k, c) in s.chars().enumerate() {
+            if k > 0 && (s.len() - k) % 3 == 0 {
+                out.push(',');
+            }
+            out.push(c);
+        }
+        if i < 0 {
+            format!("-{out}")
+        } else {
+            out
+        }
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Fixed-width table printer for bench output (we have no external
+/// table crates). Column widths auto-size to content.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.2909944487).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        let p50 = percentile(&xs, 50.0);
+        assert!((49.0..=51.0).contains(&p50));
+    }
+
+    #[test]
+    fn histogram_table3_shape() {
+        let mut h = Histogram::table3_buckets();
+        h.add(3.0); // < 50
+        h.add(49.9);
+        h.add(200.0); // 50 - 1000
+        h.add(5_000.0); // 1000 - 10000
+        h.add(12_000.0); // 10000 - 17000
+        h.add(30_000.0); // overflow
+        assert_eq!(h.counts, vec![2, 1, 1, 1, 1]);
+        assert_eq!(h.total, 6);
+        let rows = h.rows();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].1, 2);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| a | bb |"));
+        assert!(s.contains("| 1 | 2  |"));
+    }
+
+    #[test]
+    fn cv_zero_mean() {
+        assert_eq!(cv(&[0.0, 0.0]), 0.0);
+    }
+}

@@ -1,0 +1,272 @@
+//! Tiny XML-subset parser, sufficient for the paper's predicate
+//! specification format (Fig. 3): nested elements, text content, no
+//! attributes/namespaces/CDATA. Entities `&lt; &gt; &amp; &quot; &apos;`
+//! are decoded in text nodes.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Element {
+    pub name: String,
+    pub children: Vec<Element>,
+    /// concatenated text directly under this element (trimmed)
+    pub text: String,
+}
+
+impl Element {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), children: Vec::new(), text: String::new() }
+    }
+
+    /// First child with the given tag name.
+    pub fn child(&self, name: &str) -> Option<&Element> {
+        self.children.iter().find(|c| c.name == name)
+    }
+
+    /// All children with the given tag name.
+    pub fn children_named<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a Element> {
+        self.children.iter().filter(move |c| c.name == name)
+    }
+
+    /// Text of the first child with the given tag name.
+    pub fn child_text(&self, name: &str) -> Option<&str> {
+        self.child(name).map(|c| c.text.as_str())
+    }
+
+    /// Serialize back to XML (used in round-trip tests).
+    pub fn to_xml(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, depth: usize) {
+        let pad = "  ".repeat(depth);
+        if self.children.is_empty() {
+            out.push_str(&format!("{pad}<{0}>{1}</{0}>\n", self.name, escape(&self.text)));
+        } else {
+            out.push_str(&format!("{pad}<{}>\n", self.name));
+            for c in &self.children {
+                c.write(out, depth + 1);
+            }
+            out.push_str(&format!("{pad}</{}>\n", self.name));
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub msg: String,
+    pub pos: usize,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xml parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+struct Parser<'a> {
+    src: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError { msg: msg.into(), pos: self.pos })
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.src.len() && self.src[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn skip_prolog_and_comments(&mut self) {
+        loop {
+            self.skip_ws();
+            if self.src[self.pos..].starts_with(b"<?") {
+                if let Some(end) = find(self.src, self.pos, b"?>") {
+                    self.pos = end + 2;
+                    continue;
+                }
+            }
+            if self.src[self.pos..].starts_with(b"<!--") {
+                if let Some(end) = find(self.src, self.pos, b"-->") {
+                    self.pos = end + 3;
+                    continue;
+                }
+            }
+            break;
+        }
+    }
+
+    fn parse_element(&mut self) -> Result<Element, ParseError> {
+        self.skip_prolog_and_comments();
+        if self.pos >= self.src.len() || self.src[self.pos] != b'<' {
+            return self.err("expected '<'");
+        }
+        self.pos += 1;
+        let name = self.read_name()?;
+        self.skip_ws();
+        // no attributes supported; allow self-closing
+        if self.src[self.pos..].starts_with(b"/>") {
+            self.pos += 2;
+            return Ok(Element::new(name));
+        }
+        if self.pos >= self.src.len() || self.src[self.pos] != b'>' {
+            return self.err(format!("expected '>' after <{name}"));
+        }
+        self.pos += 1;
+        let mut el = Element::new(name.clone());
+        let mut text = String::new();
+        loop {
+            if self.pos >= self.src.len() {
+                return self.err(format!("unexpected EOF inside <{name}>"));
+            }
+            if self.src[self.pos] == b'<' {
+                if self.src[self.pos..].starts_with(b"<!--") {
+                    match find(self.src, self.pos, b"-->") {
+                        Some(end) => {
+                            self.pos = end + 3;
+                            continue;
+                        }
+                        None => return self.err("unterminated comment"),
+                    }
+                }
+                if self.src[self.pos + 1..].first() == Some(&b'/') {
+                    // closing tag
+                    self.pos += 2;
+                    let close = self.read_name()?;
+                    if close != name {
+                        return self.err(format!("mismatched </{close}>, expected </{name}>"));
+                    }
+                    self.skip_ws();
+                    if self.pos >= self.src.len() || self.src[self.pos] != b'>' {
+                        return self.err("expected '>' in closing tag");
+                    }
+                    self.pos += 1;
+                    el.text = unescape(text.trim());
+                    return Ok(el);
+                }
+                el.children.push(self.parse_element()?);
+            } else {
+                text.push(self.src[self.pos] as char);
+                self.pos += 1;
+            }
+        }
+    }
+
+    fn read_name(&mut self) -> Result<String, ParseError> {
+        let start = self.pos;
+        while self.pos < self.src.len() {
+            let c = self.src[self.pos];
+            if c.is_ascii_alphanumeric() || c == b'_' || c == b'-' || c == b'.' || c == b':' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        if self.pos == start {
+            return self.err("empty tag name");
+        }
+        Ok(String::from_utf8_lossy(&self.src[start..self.pos]).into_owned())
+    }
+}
+
+fn find(hay: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|i| i + from)
+}
+
+fn escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+fn unescape(s: &str) -> String {
+    s.replace("&lt;", "<")
+        .replace("&gt;", ">")
+        .replace("&quot;", "\"")
+        .replace("&apos;", "'")
+        .replace("&amp;", "&")
+}
+
+/// Parse a document into its root element.
+pub fn parse(src: &str) -> Result<Element, ParseError> {
+    let mut p = Parser { src: src.as_bytes(), pos: 0 };
+    let el = p.parse_element()?;
+    p.skip_ws();
+    Ok(el)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fig3_predicate_spec() {
+        // The paper's Fig. 3 XML (semilinear predicate).
+        let src = r#"
+<predicate>
+ <type>semilinear</type>
+ <conjClause>
+  <id>0</id>
+  <var> <name>x2</name> <value>1</value> </var>
+  <var> <name>y2</name> <value>1</value> </var>
+ </conjClause>
+ <conjClause>
+  <id>1</id>
+  <var> <name>z2</name> <value>1</value> </var>
+ </conjClause>
+</predicate>"#;
+        let root = parse(src).unwrap();
+        assert_eq!(root.name, "predicate");
+        assert_eq!(root.child_text("type"), Some("semilinear"));
+        let clauses: Vec<_> = root.children_named("conjClause").collect();
+        assert_eq!(clauses.len(), 2);
+        let vars: Vec<_> = clauses[0].children_named("var").collect();
+        assert_eq!(vars.len(), 2);
+        assert_eq!(vars[0].child_text("name"), Some("x2"));
+        assert_eq!(vars[0].child_text("value"), Some("1"));
+        assert_eq!(clauses[1].children_named("var").count(), 1);
+    }
+
+    #[test]
+    fn round_trip() {
+        let src = "<a><b>hi</b><c><d>1</d></c></a>";
+        let el = parse(src).unwrap();
+        let re = parse(&el.to_xml()).unwrap();
+        assert_eq!(el, re);
+    }
+
+    #[test]
+    fn entities_and_comments() {
+        let src = "<x><!-- note --><t>a &amp; b &lt; c</t></x>";
+        let el = parse(src).unwrap();
+        assert_eq!(el.child_text("t"), Some("a & b < c"));
+    }
+
+    #[test]
+    fn self_closing() {
+        let el = parse("<a><b/><c>t</c></a>").unwrap();
+        assert_eq!(el.children.len(), 2);
+        assert_eq!(el.children[0].name, "b");
+    }
+
+    #[test]
+    fn errors_on_mismatch() {
+        assert!(parse("<a><b></a></b>").is_err());
+        assert!(parse("<a>").is_err());
+        assert!(parse("plain").is_err());
+    }
+
+    #[test]
+    fn prolog_skipped() {
+        let el = parse("<?xml version=\"1.0\"?>\n<a><b>1</b></a>").unwrap();
+        assert_eq!(el.name, "a");
+    }
+}

@@ -1,0 +1,141 @@
+//! End-to-end detection tests through the full simulated deployment:
+//! seeded mutual-exclusion violations are detected; correct sequential
+//! executions are (essentially) violation-free; monitoring overhead stays
+//! within the paper's envelope; detection latency is bounded.
+
+use optikv::client::consistency::ConsistencyCfg;
+use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+use optikv::exp::runner::run;
+use optikv::exp::scenarios;
+use optikv::sim::SEC;
+
+fn conj_cfg(consistency: ConsistencyCfg, beta: f64, seed: u64) -> ExpConfig {
+    let mut cfg = ExpConfig::new(
+        "det-e2e",
+        consistency,
+        AppKind::Conjunctive { n_preds: 6, n_conjuncts: 4, beta, put_pct: 0.5 },
+    );
+    cfg.n_clients = 8;
+    cfg.duration = 40 * SEC;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn conjunctive_violations_detected_with_bounded_latency() {
+    let res = run(&conj_cfg(ConsistencyCfg::n3r1w1(), 0.15, 21));
+    assert!(res.violations_detected >= 5, "got {}", res.violations_detected);
+    // regional network: the paper reports >99.9% under 50 ms; allow a
+    // generous bound for the tail (interval closure + batching)
+    let over_5s = res
+        .detection_latencies_ms
+        .iter()
+        .filter(|&&l| l > 5_000.0)
+        .count();
+    assert_eq!(over_5s, 0, "latencies: {:?}", res.detection_latencies_ms);
+}
+
+#[test]
+fn beta_zero_means_no_violations() {
+    let res = run(&conj_cfg(ConsistencyCfg::n3r1w1(), 0.0, 23));
+    assert_eq!(res.violations_detected, 0);
+    // linear predicates with perpetually-false conjuncts emit no candidates
+    assert_eq!(res.candidates_seen, 0);
+    assert!(res.ops_ok > 100, "the workload itself still ran");
+}
+
+#[test]
+fn coloring_sequential_is_far_safer_than_eventual() {
+    // Peterson + (quorum-)sequential consistency: the paper treats R1W3 as
+    // sequential and assumes mutual exclusion holds. With client-side
+    // vector-clock replication the `turn` register is NOT a linearizable
+    // register under write-write races (concurrent writes become siblings
+    // resolved deterministically), so *rare* actual violations remain
+    // possible even at R1W3 — an honest finding of this reproduction, see
+    // EXPERIMENTS.md. The robust claim: sequential shows at most a handful
+    // of violations where eventual shows many (and far fewer per op).
+    let mk = |c: ConsistencyCfg, seed: u64| {
+        let mut cfg = scenarios::social_media_aws(c, true, 0.006, seed);
+        cfg.duration = 60 * SEC;
+        cfg.n_clients = 6;
+        cfg
+    };
+    let seq = run(&mk(ConsistencyCfg::n3r1w3(), 31));
+    assert!(seq.ops_ok > 300, "clients made progress: {}", seq.ops_ok);
+    assert!(
+        seq.actual_me_violations <= 2,
+        "sequential must be (nearly) violation-free, got {}",
+        seq.actual_me_violations
+    );
+    let ev = run(&mk(ConsistencyCfg::n3r1w1(), 31));
+    let seq_rate = seq.actual_me_violations as f64 / seq.ops_ok.max(1) as f64;
+    let ev_rate = ev.actual_me_violations as f64 / ev.ops_ok.max(1) as f64;
+    assert!(
+        ev_rate >= seq_rate,
+        "eventual ({ev_rate:.2e}) must violate at least as often as sequential ({seq_rate:.2e})"
+    );
+}
+
+#[test]
+fn coloring_monitors_infer_edge_predicates() {
+    let mut cfg = scenarios::social_media_aws(ConsistencyCfg::n3r1w1(), true, 0.006, 33);
+    cfg.duration = 60 * SEC;
+    cfg.n_clients = 6;
+    let res = run(&cfg);
+    assert!(res.active_preds_peak > 3, "peak active predicates: {}", res.active_preds_peak);
+    assert!(res.candidates_seen > 0);
+}
+
+#[test]
+fn monitoring_overhead_within_paper_envelope() {
+    // server-perspective throughput with monitors on vs off — the paper
+    // reports ≤ 8% even under stress, typically ≤ 4%
+    let base = conj_cfg(ConsistencyCfg::n3r1w1(), 0.05, 41);
+    let mut off = base.clone();
+    off.monitors = false;
+    off.name = "det-e2e-nomon".into();
+    let on = run(&base);
+    let noff = run(&off);
+    let overhead = (noff.server_tps - on.server_tps) / noff.server_tps;
+    assert!(
+        overhead < 0.10,
+        "overhead {:.1}% exceeds the paper's worst case (on={:.0}, off={:.0})",
+        overhead * 100.0,
+        on.server_tps,
+        noff.server_tps
+    );
+}
+
+#[test]
+fn gc_reclaims_inactive_predicates() {
+    // short inactive timeout: predicates idle after their burst get evicted
+    let mut cfg = conj_cfg(ConsistencyCfg::n3r1w1(), 0.1, 43);
+    cfg.monitor_cfg.inactive_timeout = 5 * SEC;
+    cfg.monitor_cfg.gc_period = 2 * SEC;
+    cfg.duration = 30 * SEC;
+    let res = run(&cfg);
+    assert!(res.candidates_seen > 0);
+    // predicates keep being active here, so eviction may be partial — the
+    // assertion is that the mechanism runs without losing detections
+    assert!(res.violations_detected > 0);
+}
+
+#[test]
+fn xla_backend_agrees_with_native_end_to_end() {
+    use optikv::exp::config::AccelKind;
+    use optikv::runtime::pjrt::XlaAccel;
+    if XlaAccel::load(&XlaAccel::default_dir()).is_err() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return;
+    }
+    let base = conj_cfg(ConsistencyCfg::n3r1w1(), 0.15, 45);
+    let mut xla_cfg = base.clone();
+    xla_cfg.accel = AccelKind::Xla;
+    let native = run(&base);
+    let xla = run(&xla_cfg);
+    // identical seeds + identical verdict semantics ⇒ identical results
+    assert_eq!(native.violations_detected, xla.violations_detected);
+    assert_eq!(native.candidates_seen, xla.candidates_seen);
+    assert_eq!(native.ops_ok, xla.ops_ok);
+}

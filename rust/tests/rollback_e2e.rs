@@ -1,0 +1,78 @@
+//! End-to-end rollback tests: the FullRestore recovery path (freeze →
+//! window-log/snapshot restore → resume) and the NotifyClients task
+//! abort-restart path, both triggered by real detected violations.
+
+use optikv::client::consistency::ConsistencyCfg;
+use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+use optikv::exp::runner::run;
+use optikv::rollback::recovery::RecoveryPolicy;
+use optikv::sim::SEC;
+
+fn violating_cfg(recovery: RecoveryPolicy, seed: u64) -> ExpConfig {
+    let mut cfg = ExpConfig::new(
+        "rollback-e2e",
+        ConsistencyCfg::n3r1w1(),
+        AppKind::Conjunctive { n_preds: 5, n_conjuncts: 3, beta: 0.2, put_pct: 0.5 },
+    );
+    cfg.n_clients = 6;
+    cfg.duration = 40 * SEC;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.recovery = recovery;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn full_restore_recovers_and_system_continues() {
+    let res = run(&violating_cfg(RecoveryPolicy::FullRestore, 51));
+    assert!(res.violations_detected > 0, "violations occur");
+    assert!(res.recoveries > 0, "controller ran recoveries");
+    // the system keeps making progress after stop-the-world restores
+    assert!(res.ops_ok > 200, "ops_ok={}", res.ops_ok);
+    // rate limiting: recoveries are far fewer than violations
+    assert!(res.recoveries as usize <= res.violations_detected);
+}
+
+#[test]
+fn notify_clients_is_cheaper_than_full_restore() {
+    let notify = run(&violating_cfg(RecoveryPolicy::NotifyClients, 53));
+    let full = run(&violating_cfg(RecoveryPolicy::FullRestore, 53));
+    assert!(notify.ops_ok > 0 && full.ops_ok > 0);
+    // freeze/restore pauses every server; client-side restart does not
+    assert!(
+        notify.app_tps >= full.app_tps * 0.95,
+        "notify ({:.0}) should not lose to full restore ({:.0})",
+        notify.app_tps,
+        full.app_tps
+    );
+}
+
+#[test]
+fn recovery_none_just_records() {
+    let res = run(&violating_cfg(RecoveryPolicy::None, 55));
+    assert!(res.violations_detected > 0);
+    assert_eq!(res.recoveries, 0);
+}
+
+#[test]
+fn coloring_task_restart_on_violation() {
+    // eventual consistency + tight contention: aborted tasks restart and
+    // the run still completes tasks
+    let mut cfg = ExpConfig::new(
+        "rollback-coloring",
+        ConsistencyCfg::n3r1w1(),
+        AppKind::Coloring { nodes: 150, edges_per_node: 3, task_size: 5, loop_forever: true },
+    );
+    cfg.n_clients = 6;
+    cfg.duration = 90 * SEC;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.recovery = RecoveryPolicy::NotifyClients;
+    cfg.seed = 57;
+    let res = run(&cfg);
+    assert!(res.metrics.borrow().tasks_completed > 0);
+    assert!(res.ops_ok > 500);
+    // if violations were detected, restarts must have happened
+    if res.violations_detected > 0 {
+        assert!(res.restarts > 0, "violations must trigger task restarts");
+    }
+}

@@ -1,0 +1,247 @@
+//! Integration tests of the store substrate through the full DES:
+//! quorum semantics, consistency models, replica convergence/divergence,
+//! timeouts and the serial second round under message loss.
+
+use optikv::client::actor::ClientActor;
+use optikv::client::app::{AppOp, OpOutcome, ScriptApp};
+use optikv::client::consistency::{ClientTiming, ConsistencyCfg};
+use optikv::clock::hvc::EPS_INF;
+use optikv::metrics::throughput::MetricsHub;
+use optikv::sim::des::Sim;
+use optikv::sim::net::TopologyBuilder;
+use optikv::sim::{ms, ProcId, SEC};
+use optikv::store::server::{ServerActor, ServerCfg};
+use optikv::store::value::{Interner, Value};
+
+/// Assemble S servers + `scripts.len()` clients on a 3-region topology.
+/// Returns (sim, client proc ids).
+fn build(
+    s: usize,
+    consistency: ConsistencyCfg,
+    scripts: Vec<Vec<AppOp>>,
+    inter_ms: f64,
+    drop_prob: f64,
+    seed: u64,
+) -> (Sim, Vec<ProcId>) {
+    let c = scripts.len();
+    let mut tb = TopologyBuilder::new();
+    for i in 0..s {
+        tb.add_machine_proc(i as u8 % 3, 2);
+    }
+    for i in 0..c {
+        tb.add_machine_proc(i as u8 % 3, 2);
+    }
+    let (topo, threads) =
+        tb.build(optikv::sim::net::Topology::local_lab(inter_ms), drop_prob);
+    let metrics = MetricsHub::new(s, c);
+    let mut sim = Sim::new(topo, &threads, seed, 0.5, EPS_INF);
+    for i in 0..s {
+        sim.add_actor(Box::new(ServerActor::new(
+            i as u16,
+            s,
+            None,
+            ServerCfg::default(),
+            metrics.clone(),
+            None,
+        )));
+    }
+    let server_ids: Vec<ProcId> = (0..s as u32).map(ProcId).collect();
+    let mut client_ids = Vec::new();
+    for (i, script) in scripts.into_iter().enumerate() {
+        let id = sim.add_actor(Box::new(ClientActor::new(
+            i as u32,
+            server_ids.clone(),
+            consistency,
+            ClientTiming::default(),
+            Box::new(ScriptApp::new(script)),
+            metrics.clone(),
+        )));
+        client_ids.push(id);
+    }
+    (sim, client_ids)
+}
+
+fn outcomes(sim: &mut Sim, id: ProcId) -> Vec<OpOutcome> {
+    sim.actor_mut(id)
+        .as_any()
+        .unwrap()
+        .downcast_mut::<ClientActor>()
+        .map(|_c| ())
+        .unwrap();
+    // outcomes live in the ScriptApp; we can't reach through ClientActor's
+    // Box<dyn AppLogic> without another hook, so tests assert via ops_ok
+    // counters and follow-up reads instead.
+    Vec::new()
+}
+
+fn client_stats(sim: &mut Sim, id: ProcId) -> (u64, u64) {
+    let c = sim
+        .actor_mut(id)
+        .as_any()
+        .unwrap()
+        .downcast_mut::<ClientActor>()
+        .unwrap();
+    (c.ops_ok, c.ops_failed)
+}
+
+#[test]
+fn put_then_get_round_trip_sequential() {
+    let interner = Interner::new();
+    let k = interner.borrow_mut().intern("k");
+    let script = vec![
+        AppOp::Put(k, Value::Int(41)),
+        AppOp::Put(k, Value::Int(42)),
+        AppOp::Get(k),
+    ];
+    let (mut sim, ids) = build(3, ConsistencyCfg::n3r2w2(), vec![script], 50.0, 0.0, 1);
+    sim.run_until(30 * SEC);
+    let (ok, failed) = client_stats(&mut sim, ids[0]);
+    assert_eq!(ok, 3, "all three ops succeed");
+    assert_eq!(failed, 0);
+    let _ = outcomes(&mut sim, ids[0]);
+}
+
+#[test]
+fn eventual_is_faster_than_sequential() {
+    let interner = Interner::new();
+    let k = interner.borrow_mut().intern("k");
+    let script: Vec<AppOp> = (0..50)
+        .map(|i| AppOp::Put(k, Value::Int(i)))
+        .collect();
+    let run = |cfg: ConsistencyCfg| {
+        let (mut sim, ids) = build(3, cfg, vec![script.clone()], 100.0, 0.0, 3);
+        sim.run_until(200 * SEC);
+        let (ok, _) = client_stats(&mut sim, ids[0]);
+        assert_eq!(ok, 50);
+        sim.now() // completion bounded by run_until; compare via events instead
+    };
+    // compare op latency via throughput over fixed horizon instead:
+    let count_done = |cfg: ConsistencyCfg, horizon_s: u64| {
+        let script: Vec<AppOp> = (0..10_000).map(|i| AppOp::Put(k, Value::Int(i))).collect();
+        let (mut sim, ids) = build(3, cfg, vec![script], 100.0, 0.0, 3);
+        sim.run_until(horizon_s * SEC);
+        client_stats(&mut sim, ids[0]).0
+    };
+    let ev = count_done(ConsistencyCfg::n3r1w1(), 60);
+    let seq = count_done(ConsistencyCfg::n3r1w3(), 60);
+    assert!(
+        ev as f64 > seq as f64 * 1.2,
+        "eventual ({ev}) should clearly beat sequential ({seq}) at 100 ms inter-region"
+    );
+    let _ = run;
+}
+
+#[test]
+fn sequential_read_sees_latest_write_across_clients() {
+    // client 0 writes (W=3: all replicas), then client 1 reads (R=1):
+    // R+W>N ⇒ the read must return the written value
+    let interner = Interner::new();
+    let k = interner.borrow_mut().intern("shared");
+    let w_script = vec![AppOp::Put(k, Value::Int(7))];
+    let r_script = vec![
+        AppOp::Get(k), // may race the write — don't assert on it
+    ];
+    let (mut sim, _ids) = build(
+        3,
+        ConsistencyCfg::n3r1w3(),
+        vec![w_script, r_script],
+        50.0,
+        0.0,
+        5,
+    );
+    sim.run_until(30 * SEC);
+    // check replica convergence directly: all 3 servers hold the value
+    for sidx in 0..3u32 {
+        let srv = sim
+            .actor_mut(ProcId(sidx))
+            .as_any()
+            .unwrap()
+            .downcast_mut::<ServerActor>()
+            .unwrap();
+        let vals = srv.table().sibling_values(k);
+        assert_eq!(vals, vec![Value::Int(7)], "server {sidx} converged");
+    }
+}
+
+#[test]
+fn eventual_write_still_replicates_asynchronously() {
+    // W=1: the client returns after one ack, but the parallel-phase sends
+    // reach every replica eventually (no loss here)
+    let interner = Interner::new();
+    let k = interner.borrow_mut().intern("x");
+    let script = vec![AppOp::Put(k, Value::Int(9))];
+    let (mut sim, _) = build(3, ConsistencyCfg::n3r1w1(), vec![script], 100.0, 0.0, 9);
+    sim.run_until(30 * SEC);
+    for sidx in 0..3u32 {
+        let srv = sim
+            .actor_mut(ProcId(sidx))
+            .as_any()
+            .unwrap()
+            .downcast_mut::<ServerActor>()
+            .unwrap();
+        assert_eq!(srv.table().sibling_values(k), vec![Value::Int(9)]);
+    }
+}
+
+#[test]
+fn message_loss_triggers_second_round_and_still_succeeds() {
+    let interner = Interner::new();
+    let k = interner.borrow_mut().intern("lossy");
+    let script: Vec<AppOp> = (0..20).map(|i| AppOp::Put(k, Value::Int(i))).collect();
+    // 20% loss: round 1 often misses the W=3 quorum; the serial second
+    // round must recover most ops
+    let (mut sim, ids) = build(3, ConsistencyCfg::n3r1w3(), vec![script], 20.0, 0.2, 11);
+    sim.run_until(120 * SEC);
+    let (ok, failed) = client_stats(&mut sim, ids[0]);
+    assert_eq!(ok + failed, 20, "every op completed or failed");
+    // a single round at 20% loss passes all-3-acks only ~26% of the time;
+    // the serial second round should lift success well above that
+    assert!(ok >= 8, "second round recovers ops (ok={ok})");
+    assert!(failed > 0, "at this loss rate some ops do fail");
+}
+
+#[test]
+fn heavy_loss_hurts_sequential_far_more_than_eventual() {
+    // 50% loss: W=3 needs all three replicas to ack within two rounds
+    // (~8% per op); W=1 needs any one (~70%). This is the availability
+    // side of the paper's motivation.
+    let interner = Interner::new();
+    let k = interner.borrow_mut().intern("part");
+    let script: Vec<AppOp> = (0..10).map(|i| AppOp::Put(k, Value::Int(i))).collect();
+    let (mut sim, ids) = build(3, ConsistencyCfg::n3r1w3(), vec![script.clone()], 20.0, 0.5, 13);
+    sim.run_until(200 * SEC);
+    let (ok_seq, failed_seq) = client_stats(&mut sim, ids[0]);
+    let (mut sim2, ids2) = build(3, ConsistencyCfg::n3r1w1(), vec![script], 20.0, 0.5, 13);
+    sim2.run_until(200 * SEC);
+    let (ok_ev, _) = client_stats(&mut sim2, ids2[0]);
+    assert!(failed_seq > 0, "heavy loss must fail some W=3 ops");
+    assert!(
+        ok_ev >= ok_seq + 3,
+        "W=1 ({ok_ev}/10) should far out-survive W=3 ({ok_seq}/10)"
+    );
+}
+
+#[test]
+fn concurrent_writers_create_siblings_under_eventual() {
+    let interner = Interner::new();
+    let k = interner.borrow_mut().intern("contested");
+    // two clients write different values "simultaneously" with W=1
+    let s0 = vec![AppOp::Put(k, Value::Str("A".into()))];
+    let s1 = vec![AppOp::Put(k, Value::Str("B".into()))];
+    let (mut sim, _) = build(3, ConsistencyCfg::n3r1w1(), vec![s0, s1], 100.0, 0.0, 17);
+    sim.run_until(30 * SEC);
+    // at least one replica must hold both sibling versions
+    let mut saw_siblings = false;
+    for sidx in 0..3u32 {
+        let srv = sim
+            .actor_mut(ProcId(sidx))
+            .as_any()
+            .unwrap()
+            .downcast_mut::<ServerActor>()
+            .unwrap();
+        if srv.table().sibling_values(k).len() == 2 {
+            saw_siblings = true;
+        }
+    }
+    assert!(saw_siblings, "independent vector-clock writes must coexist as siblings");
+}

@@ -1,0 +1,122 @@
+//! Differential test: the PJRT-executed Pallas/JAX kernels must agree
+//! with the scalar Rust backend on every verdict. Skipped (with a notice)
+//! when `artifacts/` has not been built yet.
+
+use optikv::clock::hvc::{Hvc, HvcInterval, Millis, EPS_INF};
+use optikv::runtime::accel::{Accel, NativeAccel, PairQuery};
+use optikv::runtime::pjrt::XlaAccel;
+use optikv::util::rng::Rng;
+
+fn artifacts_available() -> Option<XlaAccel> {
+    let dir = XlaAccel::default_dir();
+    match XlaAccel::load(&dir) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not available ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn random_interval(rng: &mut Rng, d: usize, eps_floor: bool) -> HvcInterval {
+    let owner = rng.below(d as u64) as u16;
+    let base = rng.range(0, 2_000) as i64;
+    let mut sv: Vec<Millis> = (0..d).map(|_| base + rng.range(0, 40) as i64).collect();
+    // some entries at the ε=∞ floor (unknown remote clocks)
+    if eps_floor {
+        for (j, x) in sv.iter_mut().enumerate() {
+            if j != owner as usize && rng.chance(0.3) {
+                *x = (base as i64) - EPS_INF;
+            }
+        }
+    }
+    // owner component is the process's own (max) physical time
+    let own_max = *sv.iter().max().unwrap();
+    sv[owner as usize] = own_max;
+    let mut ev = sv.clone();
+    for x in &mut ev {
+        if *x > -(1 << 40) {
+            *x += rng.range(0, 60) as i64;
+        }
+    }
+    ev[owner as usize] = *ev.iter().max().unwrap();
+    HvcInterval::new(Hvc { owner, v: sv }, Hvc { owner, v: ev })
+}
+
+#[test]
+fn xla_matches_native_on_random_batches() {
+    let Some(mut xla) = artifacts_available() else { return };
+    let mut native = NativeAccel::new();
+    let mut rng = Rng::new(0xD1FF);
+    for case in 0..40 {
+        let d = 1 + (case % 8);
+        let n = 1 + rng.below(300) as usize; // exercises padding + chunking
+        let eps: Millis = match case % 4 {
+            0 => 0,
+            1 => 5,
+            2 => 60,
+            _ => EPS_INF,
+        };
+        let with_floors = case % 3 == 0;
+        let ivs: Vec<(HvcInterval, HvcInterval)> = (0..n)
+            .map(|_| {
+                (
+                    random_interval(&mut rng, d, with_floors),
+                    random_interval(&mut rng, d, with_floors),
+                )
+            })
+            .collect();
+        let pairs: Vec<PairQuery> = ivs.iter().map(|(a, b)| PairQuery { a, b }).collect();
+        let nv = native.pair_verdicts(&pairs, eps);
+        let xv = xla.pair_verdicts(&pairs, eps);
+        assert_eq!(nv.len(), xv.len());
+        for (i, (a, b)) in nv.iter().zip(xv.iter()).enumerate() {
+            assert_eq!(
+                a, b,
+                "case {case} pair {i} (eps={eps}): native={a:?} xla={b:?}\n  a={:?}\n  b={:?}",
+                pairs[i].a, pairs[i].b
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_handles_oversized_batches_by_chunking() {
+    let Some(mut xla) = artifacts_available() else { return };
+    let mut native = NativeAccel::new();
+    let mut rng = Rng::new(7);
+    let ivs: Vec<(HvcInterval, HvcInterval)> = (0..700)
+        .map(|_| (random_interval(&mut rng, 5, false), random_interval(&mut rng, 5, false)))
+        .collect();
+    let pairs: Vec<PairQuery> = ivs.iter().map(|(a, b)| PairQuery { a, b }).collect();
+    let nv = native.pair_verdicts(&pairs, 10);
+    let xv = xla.pair_verdicts(&pairs, 10);
+    assert_eq!(nv, xv);
+    assert!(xla.calls >= 3, "700 pairs at B=256 needs >= 3 executions");
+}
+
+#[test]
+fn xla_verdicts_known_cases() {
+    let Some(mut xla) = artifacts_available() else { return };
+    let iv = |owner: u16, s: &[Millis], e: &[Millis]| {
+        HvcInterval::new(Hvc { owner, v: s.to_vec() }, Hvc { owner, v: e.to_vec() })
+    };
+    let ivs = [
+        iv(0, &[10, 0], &[20, 0]),
+        iv(1, &[15, 15], &[15, 25]),
+        iv(0, &[10, 5], &[20, 5]),
+        iv(1, &[25, 40], &[25, 50]),
+    ];
+    let pairs = vec![
+        // overlap → concurrent
+        PairQuery { a: &ivs[0], b: &ivs[1] },
+        // clear precedence at eps=5
+        PairQuery { a: &ivs[2], b: &ivs[3] },
+        // reversed
+        PairQuery { a: &ivs[3], b: &ivs[2] },
+    ];
+    use optikv::clock::hvc::IntervalOrd::*;
+    assert_eq!(xla.pair_verdicts(&pairs, 5), vec![Concurrent, Before, After]);
+    // with eps = ∞ nothing is ever ordered
+    assert_eq!(xla.pair_verdicts(&pairs, EPS_INF), vec![Concurrent, Concurrent, Concurrent]);
+}
