@@ -13,9 +13,26 @@ use std::time::Instant;
 
 use optikv::clock::hvc::{Hvc, HvcInterval, IntervalOrd, Millis, EPS_INF};
 use optikv::runtime::accel::{Accel, NativeAccel, PairQuery};
-use optikv::runtime::pjrt::XlaAccel;
 use optikv::util::rng::Rng;
 use optikv::util::stats::Table;
+
+/// ns/pair on the XLA backend, when compiled in and artifacts exist.
+#[cfg(feature = "accel")]
+fn xla_ns_per_pair(pairs: &[PairQuery<'_>], batch: usize) -> Option<f64> {
+    use optikv::runtime::pjrt::XlaAccel;
+    let mut x = XlaAccel::load(&XlaAccel::default_dir()).ok()?;
+    // warm up the executable once
+    let _ = x.pair_verdicts(pairs, 10);
+    let xi = (2_000 / batch).max(3) as u64;
+    Some(time_it(xi, || {
+        std::hint::black_box(x.pair_verdicts(pairs, 10));
+    }) / batch as f64)
+}
+
+#[cfg(not(feature = "accel"))]
+fn xla_ns_per_pair(_pairs: &[PairQuery<'_>], _batch: usize) -> Option<f64> {
+    None
+}
 
 fn time_it<F: FnMut()>(iters: u64, mut f: F) -> f64 {
     let t0 = Instant::now();
@@ -56,7 +73,7 @@ fn main() {
     println!("interval_verdict(d=5):   {:>9.1} ns", t_verdict * 1e9);
 
     // ---- backend crossover ------------------------------------------------
-    let xla = XlaAccel::load(&XlaAccel::default_dir());
+    let mut saw_xla = false;
     let mut t = Table::new(&["batch", "native ns/pair", "xla ns/pair", "xla/native"]);
     for &batch in &[1usize, 8, 64, 256, 1024, 4096] {
         let ivs: Vec<(HvcInterval, HvcInterval)> = (0..batch)
@@ -68,18 +85,8 @@ fn main() {
         let tn = time_it(iters, || {
             std::hint::black_box(native.pair_verdicts(&pairs, 10));
         }) / batch as f64;
-        let tx = match &xla {
-            Ok(_) => {
-                let mut x = XlaAccel::load(&XlaAccel::default_dir()).unwrap();
-                // warm up the executable once
-                let _ = x.pair_verdicts(&pairs, 10);
-                let xi = (2_000 / batch).max(3) as u64;
-                Some(time_it(xi, || {
-                    std::hint::black_box(x.pair_verdicts(&pairs, 10));
-                }) / batch as f64)
-            }
-            Err(_) => None,
-        };
+        let tx = xla_ns_per_pair(&pairs, batch);
+        saw_xla |= tx.is_some();
         t.row(&[
             batch.to_string(),
             format!("{:.1}", tn * 1e9),
@@ -88,8 +95,8 @@ fn main() {
         ]);
     }
     println!("\n{}", t.render());
-    if xla.is_err() {
-        println!("(xla columns unavailable: run `make artifacts`)");
+    if !saw_xla {
+        println!("(xla columns unavailable: build with --features accel and run `make artifacts`)");
     }
 
     // ---- eps sweep (verdict mix) ------------------------------------------

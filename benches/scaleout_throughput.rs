@@ -1,0 +1,49 @@
+//! Scale-out curve — aggregate throughput vs cluster size at fixed N = 3
+//! (the property the seed architecture could not measure: cluster size was
+//! hard-wired to the replication factor). Offered load and monitored
+//! keyspace grow with the cluster (5 clients and 2 predicates per server),
+//! so ideal scaling is linear in S.
+//!
+//! `BENCH_SCALE=1.0 cargo bench --bench scaleout_throughput` for long runs.
+
+use optikv::exp::runner::run;
+use optikv::exp::scenarios::{scaleout_conjunctive, SCALEOUT_SIZES};
+use optikv::metrics::report::{bench_scale, bench_seed};
+use optikv::util::stats::Table;
+
+fn main() {
+    let scale = bench_scale(0.1);
+    let seed = bench_seed();
+    println!("# scale-out — app/server throughput vs cluster size, N=3R1W1 (scale {scale})\n");
+
+    let mut t = Table::new(&[
+        "servers",
+        "clients",
+        "app ops/s",
+        "server ops/s",
+        "speedup vs S=3",
+        "violations",
+    ]);
+    let mut base_tps = 0.0f64;
+    for &s in &SCALEOUT_SIZES {
+        let cfg = scaleout_conjunctive(s, scale, seed);
+        let res = run(&cfg);
+        if s == SCALEOUT_SIZES[0] {
+            base_tps = res.app_tps;
+        }
+        t.row(&[
+            s.to_string(),
+            cfg.n_clients.to_string(),
+            format!("{:.0}", res.app_tps),
+            format!("{:.0}", res.server_tps),
+            if base_tps > 0.0 {
+                format!("{:.2}x", res.app_tps / base_tps)
+            } else {
+                "—".into()
+            },
+            res.violations_detected.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(per-key quorum fan-out stays at N=3 replicas regardless of cluster size)");
+}

@@ -1,6 +1,10 @@
 //! The Voldemort-style client actor: executes application operations
 //! against the replicated store with N/R/W quorum semantics (§II-B):
 //!
+//! * routing — each operation resolves the key's N-server preference
+//!   list on the consistent-hash ring ([`crate::store::ring`]); cluster
+//!   size and N are independent, so only the key's replica set is
+//!   contacted, never the whole cluster;
 //! * parallel phase — send to all N preference-list servers, wait for
 //!   R (W) distinct acknowledgements with a timeout;
 //! * serial phase — on timeout, one more round to the servers that have
@@ -11,6 +15,8 @@
 //! The client also relays HVC causality between servers by piggy-backing
 //! the freshest server HVC it has seen onto every request.
 
+use std::rc::Rc;
+
 use crate::clock::hvc::Hvc;
 use crate::clock::vc::VectorClock;
 use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, OpOutcome};
@@ -20,6 +26,7 @@ use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{Msg, RollbackMsg};
 use crate::sim::{ProcId, Time};
 use crate::store::protocol::{ServerOp, ServerReply};
+use crate::store::ring::Router;
 use crate::store::value::{merge_siblings, Versioned};
 
 const TAG_WAKE: u64 = 0;
@@ -39,6 +46,11 @@ struct Inflight {
     app_op: AppOp,
     phase: Phase,
     req: u64,
+    /// the key's preference list (actor ids), resolved once per app op
+    targets: Vec<ProcId>,
+    /// servers that refused with WrongServer (deterministic: they will
+    /// never ack this key, so they are excluded from the serial round)
+    refused: Vec<ProcId>,
     /// distinct servers that answered (usable replies)
     replies: Vec<(ProcId, ServerReply)>,
     round: u8,
@@ -50,7 +62,10 @@ struct Inflight {
 pub struct ClientActor {
     /// index among clients (vector-clock node id, metrics row)
     pub idx: u32,
+    /// every server in the cluster, indexed by server index
     servers: Vec<ProcId>,
+    /// key → preference-list resolution (shared ring view)
+    router: Rc<Router>,
     cfg: ConsistencyCfg,
     timing: ClientTiming,
     app: Box<dyn AppLogic>,
@@ -73,15 +88,32 @@ impl ClientActor {
     pub fn new(
         idx: u32,
         servers: Vec<ProcId>,
+        router: Rc<Router>,
         cfg: ConsistencyCfg,
         timing: ClientTiming,
         app: Box<dyn AppLogic>,
         metrics: Metrics,
     ) -> Self {
-        assert_eq!(servers.len(), cfg.n, "preference list must have N servers");
+        assert!(
+            servers.len() >= cfg.n,
+            "cluster of {} servers cannot host N = {} replicas",
+            servers.len(),
+            cfg.n
+        );
+        assert_eq!(
+            servers.len(),
+            router.ring().n_servers(),
+            "server id table must cover every ring server"
+        );
+        assert_eq!(
+            router.ring().n_replicas(),
+            cfg.n,
+            "ring replication factor must match the consistency config"
+        );
         Self {
             idx,
             servers,
+            router,
             cfg,
             timing,
             app,
@@ -130,6 +162,15 @@ impl ClientActor {
         }
     }
 
+    /// Resolve the key's preference list to actor ids.
+    fn resolve_targets(&self, op: &AppOp) -> Vec<ProcId> {
+        self.router
+            .replicas(op.key())
+            .iter()
+            .map(|&s| self.servers[s as usize])
+            .collect()
+    }
+
     fn start_app_op(&mut self, ctx: &mut Ctx, op: AppOp) {
         let req = self.next_req;
         self.next_req += 1;
@@ -137,34 +178,38 @@ impl ClientActor {
             AppOp::Get(_) => Phase::Get,
             AppOp::Put(..) => Phase::GetVersion,
         };
+        let targets = self.resolve_targets(&op);
         let inflight = Inflight {
             app_op: op,
             phase,
             req,
+            targets: targets.clone(),
+            refused: Vec::new(),
             replies: Vec::new(),
             round: 1,
             started: ctx.now(),
             version: None,
         };
         let wire = self.wire_op(phase, &inflight);
-        let servers = self.servers.clone();
         self.inflight = Some(inflight);
-        self.broadcast(ctx, &servers, req, &wire);
+        self.broadcast(ctx, &targets, req, &wire);
         ctx.schedule(self.timing.timeout_round1, req);
     }
 
-    /// Move a PUT from the version phase to the write phase.
+    /// Move a PUT from the version phase to the write phase (same key ⇒
+    /// same preference list).
     fn start_put_phase(&mut self, ctx: &mut Ctx) {
         let req = self.next_req;
         self.next_req += 1;
         let inflight = self.inflight.as_mut().unwrap();
         inflight.phase = Phase::Put;
         inflight.req = req;
+        inflight.refused.clear();
         inflight.replies.clear();
         inflight.round = 1;
+        let targets = inflight.targets.clone();
         let wire = self.wire_op(Phase::Put, self.inflight.as_ref().unwrap());
-        let servers = self.servers.clone();
-        self.broadcast(ctx, &servers, req, &wire);
+        self.broadcast(ctx, &targets, req, &wire);
         ctx.schedule(self.timing.timeout_round1, req);
     }
 
@@ -260,7 +305,20 @@ impl ClientActor {
             return; // stale reply from a previous phase/op
         }
         if matches!(reply, ServerReply::Frozen) {
-            return; // does not count toward the quorum
+            return; // transient — the serial round may still succeed
+        }
+        if matches!(reply, ServerReply::WrongServer) {
+            // deterministic refusal: fail fast once the servers still able
+            // to ack cannot form the quorum
+            if !inflight.refused.contains(&from) {
+                inflight.refused.push(from);
+            }
+            let alive = inflight.targets.len() - inflight.refused.len();
+            let phase = inflight.phase;
+            if alive < self.required(phase) {
+                self.complete(ctx, OpOutcome::Failed);
+            }
+            return;
         }
         if inflight.replies.iter().any(|(s, _)| *s == from) {
             return; // duplicate (second-round overlap)
@@ -286,11 +344,12 @@ impl ClientActor {
             // serial second round: re-request from non-responders
             inflight.round = 2;
             let responded: Vec<ProcId> = inflight.replies.iter().map(|(s, _)| *s).collect();
-            let targets: Vec<ProcId> = self
-                .servers
+            let refused = inflight.refused.clone();
+            let targets: Vec<ProcId> = inflight
+                .targets
                 .iter()
                 .copied()
-                .filter(|s| !responded.contains(s))
+                .filter(|s| !responded.contains(s) && !refused.contains(s))
                 .collect();
             let phase = inflight.phase;
             let wire = self.wire_op(phase, self.inflight.as_ref().unwrap());
@@ -358,23 +417,33 @@ impl Actor for ClientActor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::store::value::Value;
+    use crate::store::ring::{Ring, Router};
+    use crate::store::value::{Interner, Value};
+
+    fn test_client(cluster: usize, cfg: ConsistencyCfg) -> ClientActor {
+        let interner = Interner::new();
+        let router = Router::new(Ring::new(cluster, cfg.n, 8, 1), interner);
+        ClientActor::new(
+            0,
+            (0..cluster as u32).map(ProcId).collect(),
+            router,
+            cfg,
+            ClientTiming::default(),
+            Box::new(crate::client::app::ScriptApp::new(vec![])),
+            crate::metrics::throughput::MetricsHub::new(cluster, 1),
+        )
+    }
 
     #[test]
     fn wire_op_mapping() {
         // phase/op translation is pure; exercised without a sim
-        let client = ClientActor::new(
-            0,
-            vec![ProcId(0), ProcId(1), ProcId(2)],
-            ConsistencyCfg::n3r1w1(),
-            ClientTiming::default(),
-            Box::new(crate::client::app::ScriptApp::new(vec![])),
-            crate::metrics::throughput::MetricsHub::new(3, 1),
-        );
+        let client = test_client(3, ConsistencyCfg::n3r1w1());
         let inf = Inflight {
             app_op: AppOp::Put(crate::store::value::KeyId(4), Value::Int(9)),
             phase: Phase::GetVersion,
             req: 1,
+            targets: vec![ProcId(0), ProcId(1), ProcId(2)],
+            refused: vec![],
             replies: vec![],
             round: 1,
             started: 0,
@@ -386,16 +455,29 @@ mod tests {
 
     #[test]
     fn required_quorums() {
-        let client = ClientActor::new(
-            0,
-            vec![ProcId(0), ProcId(1), ProcId(2)],
-            ConsistencyCfg::n3r2w2(),
-            ClientTiming::default(),
-            Box::new(crate::client::app::ScriptApp::new(vec![])),
-            crate::metrics::throughput::MetricsHub::new(3, 1),
-        );
+        let client = test_client(3, ConsistencyCfg::n3r2w2());
         assert_eq!(client.required(Phase::Get), 2);
         assert_eq!(client.required(Phase::GetVersion), 2);
         assert_eq!(client.required(Phase::Put), 2);
+    }
+
+    #[test]
+    fn targets_resolve_to_n_servers_in_a_larger_cluster() {
+        let interner = Interner::new();
+        let key = interner.borrow_mut().intern("x_0_0");
+        let cfg = ConsistencyCfg::n3r1w1();
+        let router = Router::new(Ring::new(12, cfg.n, 64, 1), interner);
+        let client = ClientActor::new(
+            0,
+            (0..12u32).map(ProcId).collect(),
+            router,
+            cfg,
+            ClientTiming::default(),
+            Box::new(crate::client::app::ScriptApp::new(vec![])),
+            crate::metrics::throughput::MetricsHub::new(12, 1),
+        );
+        let targets = client.resolve_targets(&AppOp::Get(key));
+        assert_eq!(targets.len(), 3, "N = 3 replicas out of 12 servers");
+        assert!(targets.iter().all(|p| p.0 < 12));
     }
 }

@@ -15,6 +15,12 @@
 //! conventions (§V "Automatic inference"), generating the mutual-exclusion
 //! predicate for an edge the first time any of its lock variables is
 //! touched.
+//!
+//! On a partitioned cluster the detector is ownership-aware: it caches
+//! and registers only the conjunct variables whose partition this server
+//! replicates (the ring's routing-tag convention co-locates all variables
+//! of one mutual-exclusion conjunct, so every conjunct the server emits
+//! candidates for is fully evaluable from owned state).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -24,8 +30,9 @@ use crate::clock::hvc::{Hvc, HvcInterval};
 use crate::detect::assign::monitor_index;
 use crate::detect::candidate::Candidate;
 use crate::predicate::infer;
-use crate::predicate::spec::{PredId, PredKind, Registry};
+use crate::predicate::spec::{PredId, PredKind, PredicateSpec, Registry};
 use crate::sim::{ProcId, Time};
+use crate::store::ring::Router;
 use crate::store::table::Table;
 use crate::store::value::{Interner, KeyId, Value};
 
@@ -44,8 +51,6 @@ struct ConjState {
 pub struct DetectorOutput {
     /// (destination monitor, candidate)
     pub candidates: Vec<(ProcId, Candidate)>,
-    /// (destination monitor, inferred predicate) registrations
-    pub registrations: Vec<(ProcId, PredId)>,
     /// conjunct evaluations performed (CPU cost accounting)
     pub checks: u32,
 }
@@ -54,6 +59,8 @@ pub struct LocalDetector {
     server_idx: u16,
     registry: Rc<RefCell<Registry>>,
     interner: Rc<RefCell<Interner>>,
+    /// partition ownership (shared ring view)
+    router: Rc<Router>,
     /// monitor actor ids, indexed by monitor number
     monitors: Vec<ProcId>,
     /// cache of relevant variables: var → sibling values (pre-PUT state)
@@ -73,6 +80,7 @@ impl LocalDetector {
         server_idx: u16,
         registry: Rc<RefCell<Registry>>,
         interner: Rc<RefCell<Interner>>,
+        router: Rc<Router>,
         monitors: Vec<ProcId>,
         infer_enabled: bool,
     ) -> Self {
@@ -80,6 +88,7 @@ impl LocalDetector {
             server_idx,
             registry,
             interner,
+            router,
             monitors,
             cache: HashMap::new(),
             states: HashMap::new(),
@@ -95,10 +104,18 @@ impl LocalDetector {
 
     /// Seed the cache for a predicate's variables from the current table
     /// (done at registration so pre-state values are always available).
+    /// Only variables whose partition this server replicates are cached —
+    /// the server never sees PUTs for the rest, so caching them would
+    /// only pin stale values.
     fn seed_pred_cache(&mut self, pred: PredId, table: &Table) {
-        let reg = self.registry.borrow();
-        let spec = reg.get(pred);
-        for var in spec.vars() {
+        let vars = {
+            let reg = self.registry.borrow();
+            reg.get(pred).vars()
+        };
+        for var in vars {
+            if !self.router.owns(self.server_idx, var) {
+                continue;
+            }
             self.cache
                 .entry(var)
                 .or_insert_with(|| table.sibling_values(var));
@@ -114,9 +131,11 @@ impl LocalDetector {
     }
 
     /// Inference hook: any request (GET or PUT) touching `key` may reveal a
-    /// lock variable whose edge predicate doesn't exist yet. Returns
-    /// registrations to forward to the owning monitors.
-    pub fn on_request_key(&mut self, key: KeyId, table: &Table) -> Vec<(ProcId, PredId)> {
+    /// lock variable whose edge predicate doesn't exist yet. The server
+    /// only routes owned keys here, so registration happens exactly at the
+    /// replicas of the edge's lock partition. Returns the registration
+    /// messages (spec included) to forward to the owning monitors.
+    pub fn on_request_key(&mut self, key: KeyId, table: &Table) -> Vec<(ProcId, PredicateSpec)> {
         if !self.infer_enabled {
             return Vec::new();
         }
@@ -133,7 +152,8 @@ impl LocalDetector {
         let id = self.registry.borrow_mut().add(spec);
         self.seed_pred_cache(id, table);
         let dst = self.monitor_of(&name);
-        vec![(dst, id)]
+        let spec = self.registry.borrow().get(id).clone();
+        vec![(dst, spec)]
     }
 
     /// Intercept a PUT that has just been applied to `table`. `hvc_now` is
@@ -294,7 +314,13 @@ impl LocalDetector {
 mod tests {
     use super::*;
     use crate::clock::vc::VectorClock;
-    use crate::predicate::spec::{Clause, Conjunct, Literal, PredicateSpec};
+    use crate::predicate::spec::{Clause, Conjunct, Literal};
+    use crate::store::ring::Ring;
+
+    /// A router where `n_servers` servers each replicate every key.
+    fn full_router(n_servers: usize, interner: &Rc<RefCell<Interner>>) -> Rc<Router> {
+        Router::full(n_servers, interner.clone())
+    }
 
     fn setup(kind: PredKind) -> (LocalDetector, Table, Rc<RefCell<Interner>>, PredId, KeyId, KeyId) {
         let interner = Interner::new();
@@ -317,10 +343,12 @@ mod tests {
             }],
         };
         let id = registry.borrow_mut().add(spec);
+        let router = full_router(1, &interner);
         let mut det = LocalDetector::new(
             0,
             registry,
             interner.clone(),
+            router,
             vec![ProcId(10), ProcId(11)],
             false,
         );
@@ -398,10 +426,12 @@ mod tests {
     fn inference_generates_edge_predicate_once() {
         let interner = Interner::new();
         let registry = Rc::new(RefCell::new(Registry::new()));
+        let router = full_router(1, &interner);
         let mut det = LocalDetector::new(
             0,
             registry.clone(),
             interner.clone(),
+            router,
             vec![ProcId(10), ProcId(11), ProcId(12)],
             true,
         );
@@ -425,13 +455,58 @@ mod tests {
         let (det_a, ..) = setup(PredKind::Linear);
         let interner = Interner::new();
         let registry = Rc::new(RefCell::new(Registry::new()));
+        let router = full_router(2, &interner);
         let det_b = LocalDetector::new(
             1,
             registry,
             interner,
+            router,
             vec![ProcId(10), ProcId(11)],
             false,
         );
         assert_eq!(det_a.monitor_of("me_1_2"), det_b.monitor_of("me_1_2"));
+    }
+
+    #[test]
+    fn cache_restricted_to_owned_partitions() {
+        // a 4-server / N=1 ring: each key lives on exactly one server, so
+        // a detector seeds (and later refreshes) only its own partition
+        let interner = Interner::new();
+        let registry = Rc::new(RefCell::new(Registry::new()));
+        let keys: Vec<KeyId> = (0..16)
+            .map(|i| interner.borrow_mut().intern(&format!("x_0_{i}")))
+            .collect();
+        let spec = PredicateSpec {
+            id: PredId(0),
+            name: "conj_0".into(),
+            kind: PredKind::Linear,
+            clauses: vec![Clause {
+                conjuncts: keys
+                    .iter()
+                    .map(|&v| Conjunct {
+                        literals: vec![Literal { var: v, value: Value::Int(1) }],
+                    })
+                    .collect(),
+            }],
+        };
+        registry.borrow_mut().add(spec);
+        let router = Router::new(Ring::new(4, 1, 16, 1), interner.clone());
+        let table = Table::new();
+        let mut total_cached = 0;
+        for s in 0..4u16 {
+            let mut det = LocalDetector::new(
+                s,
+                registry.clone(),
+                interner.clone(),
+                router.clone(),
+                vec![ProcId(10)],
+                false,
+            );
+            det.sync_registry(&table);
+            let owned = keys.iter().filter(|&&k| router.owns(s, k)).count();
+            assert_eq!(det.cache.len(), owned, "server {s} caches exactly its partitions");
+            total_cached += det.cache.len();
+        }
+        assert_eq!(total_cached, keys.len(), "partitions cover the keyspace once");
     }
 }

@@ -52,6 +52,17 @@ pub enum AccelKind {
 pub struct ExpConfig {
     pub name: String,
     pub consistency: ConsistencyCfg,
+    /// total servers in the cluster. Independent of the replication
+    /// factor N: the keyspace is partitioned over a consistent-hash ring
+    /// and each key replicates to its N-server preference list. Defaults
+    /// to N (the paper's deployments), where every server holds the full
+    /// keyspace and the historical behavior is reproduced exactly.
+    pub cluster_servers: usize,
+    /// virtual nodes per server on the partitioning ring
+    pub ring_vnodes: usize,
+    /// ring token-placement seed (independent of the workload seed so
+    /// varying `seed` re-randomizes the workload, not the partitioning)
+    pub ring_seed: u64,
     pub n_clients: usize,
     /// monitoring module enabled?
     pub monitors: bool,
@@ -81,6 +92,9 @@ impl ExpConfig {
         Self {
             name: name.to_string(),
             consistency,
+            cluster_servers: consistency.n,
+            ring_vnodes: crate::store::ring::DEFAULT_VNODES,
+            ring_seed: crate::store::ring::DEFAULT_RING_SEED,
             n_clients: 15,
             monitors: true,
             recovery: RecoveryPolicy::NotifyClients,
@@ -99,8 +113,29 @@ impl ExpConfig {
         }
     }
 
+    /// Scale the cluster out to `servers` total servers (N unchanged).
+    pub fn with_cluster_servers(mut self, servers: usize) -> Self {
+        assert!(
+            servers >= self.consistency.n,
+            "cluster of {servers} servers cannot host N = {} replicas",
+            self.consistency.n
+        );
+        self.cluster_servers = servers;
+        self
+    }
+
     pub fn n_servers(&self) -> usize {
-        self.consistency.n
+        self.cluster_servers
+    }
+
+    /// The partitioning ring this configuration describes.
+    pub fn build_ring(&self) -> crate::store::ring::Ring {
+        crate::store::ring::Ring::new(
+            self.cluster_servers,
+            self.consistency.n,
+            self.ring_vnodes,
+            self.ring_seed,
+        )
     }
 
     pub fn n_regions(&self) -> usize {
@@ -134,11 +169,38 @@ mod tests {
             ConsistencyCfg::n3r1w1(),
             AppKind::Conjunctive { n_preds: 10, n_conjuncts: 10, beta: 0.01, put_pct: 0.5 },
         );
-        assert_eq!(cfg.n_servers(), 3);
+        assert_eq!(cfg.n_servers(), 3, "cluster size defaults to N");
+        assert_eq!(cfg.cluster_servers, cfg.consistency.n);
         assert_eq!(cfg.server_threads, 2);
         assert_eq!(cfg.eps_ms, EPS_INF, "paper treats eps as infinity");
         assert_eq!(cfg.n_regions(), 3);
         assert_eq!(cfg.base_ms()[0][1], 38.0);
+    }
+
+    #[test]
+    fn cluster_servers_decoupled_from_n() {
+        let cfg = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Conjunctive { n_preds: 4, n_conjuncts: 4, beta: 0.01, put_pct: 0.5 },
+        )
+        .with_cluster_servers(12);
+        assert_eq!(cfg.n_servers(), 12);
+        assert_eq!(cfg.consistency.n, 3, "replication factor untouched");
+        let ring = cfg.build_ring();
+        assert_eq!(ring.n_servers(), 12);
+        assert_eq!(ring.n_replicas(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot host")]
+    fn cluster_smaller_than_n_rejected() {
+        let _ = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n5r1w1(),
+            AppKind::Conjunctive { n_preds: 1, n_conjuncts: 1, beta: 0.0, put_pct: 0.5 },
+        )
+        .with_cluster_servers(3);
     }
 
     #[test]

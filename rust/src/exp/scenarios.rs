@@ -171,6 +171,39 @@ pub enum LocalLabApp {
     SocialMedia,
 }
 
+/// The cluster sizes of the scale-out study (fixed N = 3).
+pub const SCALEOUT_SIZES: [usize; 4] = [3, 6, 12, 24];
+
+/// Scale-out preset: the conjunctive stress workload on a partitioned
+/// cluster of `cluster_servers` servers at fixed N3R1W1 (the journal
+/// version's Voldemort deployment shape: cluster size ≫ N). The offered
+/// load and the monitored keyspace both grow with the cluster — clients
+/// per server and predicates per server are held constant — so aggregate
+/// throughput measures how the store scales, not how a fixed workload is
+/// diluted.
+pub fn scaleout_conjunctive(cluster_servers: usize, scale: f64, seed: u64) -> ExpConfig {
+    assert!(cluster_servers >= 3, "the family fixes N = 3");
+    let mut cfg = ExpConfig::new(
+        &format!("scaleout-s{cluster_servers}-N3R1W1"),
+        ConsistencyCfg::n3r1w1(),
+        AppKind::Conjunctive {
+            n_preds: 2 * cluster_servers,
+            n_conjuncts: 6,
+            beta: 0.01,
+            put_pct: 0.5,
+        },
+    )
+    .with_cluster_servers(cluster_servers);
+    // keep servers the bottleneck: thin clients, 5 per server
+    cfg.n_clients = 5 * cluster_servers;
+    cfg.monitors = true;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.duration = dur(scale, 300);
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::with_think(1.0);
+    cfg
+}
+
 /// The paper's Table II consistency presets for N = 3 and N = 5.
 pub fn table2_n3() -> [ConsistencyCfg; 3] {
     [ConsistencyCfg::n3r1w3(), ConsistencyCfg::n3r2w2(), ConsistencyCfg::n3r1w1()]
@@ -215,6 +248,20 @@ mod tests {
         let t4 = local_lab(LocalLabApp::Weather, ConsistencyCfg::n3r2w2(), true, 50.0, 1.0, 1);
         assert_eq!(t4.topo, TopoKind::LocalLab { inter_ms: 50.0 });
         assert_eq!(t4.n_clients, 20);
+    }
+
+    #[test]
+    fn scaleout_family_fixes_n_and_grows_cluster() {
+        for s in SCALEOUT_SIZES {
+            let cfg = scaleout_conjunctive(s, 0.1, 1);
+            assert_eq!(cfg.n_servers(), s);
+            assert_eq!(cfg.consistency, ConsistencyCfg::n3r1w1(), "N fixed at 3");
+            assert_eq!(cfg.n_clients, 5 * s, "offered load scales with the cluster");
+            match cfg.app {
+                AppKind::Conjunctive { n_preds, .. } => assert_eq!(n_preds, 2 * s),
+                _ => panic!("wrong app"),
+            }
+        }
     }
 
     #[test]

@@ -8,13 +8,27 @@
 //! abort/restart tasks) when P is violated.
 //!
 //! Layers:
-//! * **L3 (this crate)** — the store, the Voldemort-style quorum client,
-//!   the monitoring module (local detectors + monitors), rollback, the
-//!   paper's three applications, and the deterministic discrete-event
-//!   simulator substituting for the paper's AWS/local-lab testbeds.
-//! * **L2/L1 (python/, build-time only)** — JAX + Pallas kernels for the
-//!   batched HVC-interval verdicts, AOT-lowered to HLO text and executed
-//!   from `runtime::pjrt` via the PJRT CPU client.
+//! * **L3 (this crate)** — the partitioned store (consistent-hash ring
+//!   with virtual nodes, per-key N-server preference lists; cluster size
+//!   is independent of the replication factor), the Voldemort-style
+//!   quorum client, the monitoring module (partition-aware local
+//!   detectors + monitors), rollback, the paper's three applications,
+//!   and the deterministic discrete-event simulator substituting for the
+//!   paper's AWS/local-lab testbeds.
+//! * **L2/L1 (python/, build-time only, cargo feature `accel`)** — JAX +
+//!   Pallas kernels for the batched HVC-interval verdicts, AOT-lowered to
+//!   HLO text and executed from `runtime::pjrt` via the PJRT CPU client.
+//!
+//! Data placement: every key routes to a position on the cluster ring
+//! ([`store::ring`]) and replicates to the N distinct servers walking
+//! clockwise from there. Servers store, window-log, snapshot and monitor
+//! only the partitions they own; clients resolve the preference list per
+//! operation and run the N/R/W quorum protocol against it. With
+//! `cluster_servers == N` (the default) every preference list is the
+//! whole cluster and the original full-replication deployment of the
+//! paper is reproduced exactly; with `cluster_servers > N` the store
+//! scales horizontally (`exp::scenarios::scaleout_conjunctive`,
+//! `benches/scaleout_throughput.rs`).
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured numbers.

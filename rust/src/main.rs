@@ -3,12 +3,14 @@
 //!
 //! ```text
 //! optikv run  --app <coloring|weather|conjunctive> --consistency N3R1W1
-//!             [--clients 15] [--duration-s 120] [--monitors true]
+//!             [--cluster-servers S] [--clients 15] [--duration-s 120]
+//!             [--monitors true]
 //!             [--topo aws-global|aws-regional|lab50|lab100]
 //!             [--recovery none|notify|restore] [--accel native|xla]
 //!             [--put-pct 50] [--scale 0.05] [--seed 42] [--eps-ms inf]
 //! optikv table2        — print the consistency presets
 //! optikv latency-demo  — quick Table-III style latency histogram
+//! optikv scaleout      — throughput vs cluster size at fixed N=3
 //! ```
 
 use optikv::client::consistency::ConsistencyCfg;
@@ -27,8 +29,9 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("table2") => cmd_table2(),
         Some("latency-demo") => cmd_latency_demo(&args),
+        Some("scaleout") => cmd_scaleout(&args),
         _ => {
-            eprintln!("usage: optikv <run|table2|latency-demo> [flags]  (see module docs)");
+            eprintln!("usage: optikv <run|table2|latency-demo|scaleout> [flags]  (see module docs)");
             std::process::exit(2);
         }
     }
@@ -62,7 +65,8 @@ fn cmd_run(args: &Args) {
             std::process::exit(2);
         }
     };
-    let mut cfg = ExpConfig::new("cli-run", consistency, app);
+    let mut cfg = ExpConfig::new("cli-run", consistency, app)
+        .with_cluster_servers(args.get_usize("cluster-servers", consistency.n));
     cfg.n_clients = args.get_usize("clients", 15);
     cfg.monitors = args.get_bool("monitors", true);
     cfg.duration = args.get_u64("duration-s", 120) * SEC;
@@ -153,4 +157,22 @@ fn cmd_latency_demo(args: &Args) {
         args.get_u64("seed", 42),
     ));
     println!("{}", report::latency_table(&res.detection_latencies_ms));
+}
+
+fn cmd_scaleout(args: &Args) {
+    let scale = args.get_f64("scale", 0.05);
+    let seed = args.get_u64("seed", 42);
+    let mut t = Table::new(&["servers", "clients", "app ops/s", "server ops/s", "violations"]);
+    for &s in &scenarios::SCALEOUT_SIZES {
+        let cfg = scenarios::scaleout_conjunctive(s, scale, seed);
+        let res = run(&cfg);
+        t.row(&[
+            s.to_string(),
+            cfg.n_clients.to_string(),
+            format!("{:.0}", res.app_tps),
+            format!("{:.0}", res.server_tps),
+            res.violations_detected.to_string(),
+        ]);
+    }
+    t.print();
 }

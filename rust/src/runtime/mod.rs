@@ -1,6 +1,18 @@
 //! The L3↔L2/L1 boundary: the `Accel` verdict interface, the native Rust
 //! reference backend, and the PJRT-backed XLA backend that executes the
 //! AOT-compiled Pallas/JAX kernels from `artifacts/`.
+//!
+//! The XLA path is gated behind the `accel` cargo feature: it needs the
+//! `xla` + `anyhow` crates and a PJRT CPU plugin, none of which exist in
+//! offline CI. Without the feature a stub with the same entry point
+//! compiles in its place and fails loudly if actually selected at
+//! runtime.
 
 pub mod accel;
+
+#[cfg(feature = "accel")]
+pub mod pjrt;
+
+#[cfg(not(feature = "accel"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;

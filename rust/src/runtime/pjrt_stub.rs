@@ -1,0 +1,19 @@
+//! Stub compiled in place of `runtime::pjrt` when the `accel` cargo
+//! feature is off. It keeps the crate (and everything selecting
+//! [`crate::exp::config::AccelKind::Native`]) building without the
+//! xla/anyhow crates or a PJRT toolchain; selecting the XLA backend at
+//! runtime fails with a rebuild hint instead of a link error.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::runtime::accel::Accel;
+
+/// Always panics: the binary was built without the `accel` feature.
+pub fn shared_xla_accel() -> Rc<RefCell<dyn Accel>> {
+    panic!(
+        "the XLA/PJRT verdict backend was not compiled in; rebuild with \
+         `cargo build --features accel` (requires the vendored xla + anyhow \
+         crates and `make artifacts`, see DESIGN.md)"
+    );
+}

@@ -1,7 +1,9 @@
 //! The Dynamo/Voldemort-style key-value store substrate: versioned
-//! values, server storage engine, wire protocol, and the server actor.
+//! values, the consistent-hash partitioning ring, server storage engine,
+//! wire protocol, and the server actor.
 
 pub mod protocol;
+pub mod ring;
 pub mod server;
 pub mod table;
 pub mod value;

@@ -37,4 +37,7 @@ pub enum ServerReply {
     PutAck,
     /// server is frozen for recovery — client treats as a miss
     Frozen,
+    /// the key's partition is not replicated on this server — the client
+    /// mis-routed (stale ring view); does not count toward any quorum
+    WrongServer,
 }

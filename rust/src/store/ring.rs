@@ -1,0 +1,269 @@
+//! The cluster partitioning layer: a consistent-hash ring with virtual
+//! nodes, per-key preference lists, and partition-ownership queries.
+//!
+//! Voldemort (and Dynamo before it) partitions the keyspace over a ring:
+//! every server owns many small arcs (virtual nodes), and a key's
+//! *preference list* is the first N distinct servers met walking clockwise
+//! from the key's hash position (§II of the paper; DeCandia et al. §4.2).
+//! Clients replicate to the preference list only, so cluster size and the
+//! replication factor N are independent — a 24-server cluster still
+//! writes each key to just N = 3 replicas, which is what makes the store
+//! scale horizontally.
+//!
+//! Two pieces live here:
+//!
+//! * [`Ring`] — the pure hash geometry: tokens, clockwise walks,
+//!   ownership. Deterministic in `(n_servers, n_replicas, vnodes, seed)`,
+//!   so every client and server derives the identical mapping without
+//!   coordination (the paper's deployments distribute the cluster.xml the
+//!   same way).
+//! * [`Router`] — the name-aware layer on top: it resolves `KeyId →
+//!   preference list` through the interner and applies the *routing-tag*
+//!   convention: the Peterson lock variables of one edge
+//!   (`flag_a_b_a`, `flag_a_b_b`, `turn_a_b`) all route by the edge tag,
+//!   so the variables of one mutual-exclusion conjunct always share a
+//!   replica set and the per-server local detectors keep seeing every
+//!   variable they must evaluate (the hash-tag idiom of Dynamo-family
+//!   stores). Resolved lists are memoized — the hot path is one HashMap
+//!   probe, not a ring walk.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::detect::assign::fnv1a;
+use crate::predicate::infer;
+use crate::store::value::{Interner, KeyId};
+
+/// Default number of virtual nodes per server. 64 keeps the per-server
+/// load within ~15% of uniform for the cluster sizes the scale-out
+/// scenarios use (imbalance of a vnode ring shrinks like 1/sqrt(vnodes)).
+pub const DEFAULT_VNODES: usize = 64;
+
+/// Default token-placement seed. Chosen (once, offline) so the shipped
+/// scale-out cluster sizes {3, 6, 12, 24} all balance within ~15% at
+/// [`DEFAULT_VNODES`]; any seed works correctness-wise.
+pub const DEFAULT_RING_SEED: u64 = 139;
+
+/// SplitMix64 finalizer — the ring's one hash primitive. Stable across
+/// processes and reconstructions (no RNG state involved).
+#[inline]
+pub fn mix64(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Position of a key (or routing tag) on the ring, from its name.
+/// Lock variables of one Peterson edge collapse to the edge tag so the
+/// whole lock co-locates; every other name hashes individually.
+pub fn route_hash(name: &str) -> u64 {
+    match infer::recognize(name) {
+        Some(e) => mix64(0xED6E_7A67 ^ mix64(e.a).wrapping_add(mix64(e.b ^ 0x5EED))),
+        None => mix64(fnv1a(name.as_bytes())),
+    }
+}
+
+/// Consistent-hash ring: `n_servers × vnodes` tokens on the u64 circle.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    n_servers: usize,
+    n_replicas: usize,
+    vnodes: usize,
+    seed: u64,
+    /// sorted (position, server)
+    tokens: Vec<(u64, u16)>,
+}
+
+impl Ring {
+    pub fn new(n_servers: usize, n_replicas: usize, vnodes: usize, seed: u64) -> Self {
+        assert!(n_servers >= 1, "ring needs at least one server");
+        assert!(
+            (1..=n_servers).contains(&n_replicas),
+            "replication factor {n_replicas} must be in 1..={n_servers}"
+        );
+        assert!(vnodes >= 1, "ring needs at least one vnode per server");
+        let mut tokens = Vec::with_capacity(n_servers * vnodes);
+        for s in 0..n_servers as u64 {
+            for v in 0..vnodes as u64 {
+                tokens.push((mix64(seed ^ mix64((s << 20) | v)), s as u16));
+            }
+        }
+        tokens.sort_unstable();
+        Self { n_servers, n_replicas, vnodes, seed, tokens }
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.n_servers
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.n_replicas
+    }
+
+    pub fn vnodes(&self) -> usize {
+        self.vnodes
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The preference list for a ring position: the first `n_replicas`
+    /// distinct servers walking clockwise from `hash`, primary first.
+    pub fn preference_list(&self, hash: u64) -> Vec<u16> {
+        let start = self.tokens.partition_point(|&(p, _)| p < hash);
+        let mut out = Vec::with_capacity(self.n_replicas);
+        for i in 0..self.tokens.len() {
+            let (_, s) = self.tokens[(start + i) % self.tokens.len()];
+            if !out.contains(&s) {
+                out.push(s);
+                if out.len() == self.n_replicas {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The server coordinating a position (head of the preference list).
+    pub fn primary(&self, hash: u64) -> u16 {
+        self.tokens[self.tokens.partition_point(|&(p, _)| p < hash) % self.tokens.len()].1
+    }
+
+    /// Partition-ownership query: does `server` replicate position `hash`?
+    pub fn owns(&self, server: u16, hash: u64) -> bool {
+        self.preference_list(hash).contains(&server)
+    }
+}
+
+/// Key-level router shared by the clients, servers and local detectors of
+/// one simulated cluster.
+pub struct Router {
+    ring: Ring,
+    interner: Rc<RefCell<Interner>>,
+    /// memoized `key → replica set` (ring and key names are immutable for
+    /// the lifetime of a run)
+    cache: RefCell<HashMap<KeyId, Rc<Vec<u16>>>>,
+}
+
+impl Router {
+    pub fn new(ring: Ring, interner: Rc<RefCell<Interner>>) -> Rc<Self> {
+        Rc::new(Self { ring, interner, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Full replication over `n_servers` (the paper's original deployment
+    /// shape, and the degenerate ring the tests use).
+    pub fn full(n_servers: usize, interner: Rc<RefCell<Interner>>) -> Rc<Self> {
+        Self::new(Ring::new(n_servers, n_servers, 1, DEFAULT_RING_SEED), interner)
+    }
+
+    pub fn ring(&self) -> &Ring {
+        &self.ring
+    }
+
+    /// The key's replica set, ascending by server index.
+    ///
+    /// The walk order (who is "primary") does not matter to the quorum
+    /// client — it contacts the whole list in parallel — so the list is
+    /// normalized to ascending order. This keeps the event schedule of a
+    /// `cluster_servers == N` run identical to the historical
+    /// full-replication code path, which broadcast to servers 0..N in
+    /// index order.
+    pub fn replicas(&self, key: KeyId) -> Rc<Vec<u16>> {
+        if let Some(r) = self.cache.borrow().get(&key) {
+            return Rc::clone(r);
+        }
+        let hash = {
+            let interner = self.interner.borrow();
+            route_hash(interner.name(key))
+        };
+        let mut list = self.ring.preference_list(hash);
+        list.sort_unstable();
+        let rc = Rc::new(list);
+        self.cache.borrow_mut().insert(key, Rc::clone(&rc));
+        rc
+    }
+
+    /// Partition-ownership query at key granularity.
+    pub fn owns(&self, server: u16, key: KeyId) -> bool {
+        self.replicas(key).contains(&server)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preference_list_n_distinct_in_range() {
+        let ring = Ring::new(8, 3, 16, 7);
+        for i in 0..500u64 {
+            let l = ring.preference_list(mix64(i));
+            assert_eq!(l.len(), 3);
+            let mut d = l.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 3, "replicas must be distinct: {l:?}");
+            assert!(l.iter().all(|&s| (s as usize) < 8));
+        }
+    }
+
+    #[test]
+    fn full_replication_when_n_equals_cluster() {
+        let ring = Ring::new(3, 3, 64, DEFAULT_RING_SEED);
+        for i in 0..100u64 {
+            let mut l = ring.preference_list(mix64(i ^ 0xC0FFEE));
+            l.sort_unstable();
+            assert_eq!(l, vec![0, 1, 2], "N == S puts every key everywhere");
+        }
+    }
+
+    #[test]
+    fn ownership_matches_preference_list() {
+        let ring = Ring::new(6, 3, 32, 1);
+        for i in 0..200u64 {
+            let h = mix64(i);
+            let l = ring.preference_list(h);
+            for s in 0..6u16 {
+                assert_eq!(ring.owns(s, h), l.contains(&s));
+            }
+            assert_eq!(ring.primary(h), l[0]);
+        }
+    }
+
+    #[test]
+    fn lock_variables_of_an_edge_colocate() {
+        let interner = Interner::new();
+        let (fa, fb, t, other) = {
+            let mut i = interner.borrow_mut();
+            (
+                i.intern("flag_3_17_3"),
+                i.intern("flag_3_17_17"),
+                i.intern("turn_3_17"),
+                i.intern("color_3"),
+            )
+        };
+        let router = Router::new(Ring::new(12, 3, 64, DEFAULT_RING_SEED), interner);
+        let ra = router.replicas(fa);
+        assert_eq!(*ra, *router.replicas(fb), "both flags share the replica set");
+        assert_eq!(*ra, *router.replicas(t), "turn co-locates with the flags");
+        // an unrelated key routes independently of the edge tag
+        assert_eq!(route_hash("color_3"), mix64(fnv1a(b"color_3")));
+        let _ = router.replicas(other);
+    }
+
+    #[test]
+    fn router_memoizes_and_sorts() {
+        let interner = Interner::new();
+        let k = interner.borrow_mut().intern("x_0_0");
+        let router = Router::new(Ring::new(9, 3, 64, 2), interner);
+        let a = router.replicas(k);
+        let b = router.replicas(k);
+        assert!(Rc::ptr_eq(&a, &b), "second lookup hits the memo");
+        let mut sorted = (*a).clone();
+        sorted.sort_unstable();
+        assert_eq!(*a, sorted, "replica sets are normalized ascending");
+    }
+}

@@ -3,6 +3,14 @@
 //! predicate detector (PUT interception per Fig. 4/5), the window-log and
 //! periodic snapshots for rollback, and honors freeze/restore/resume from
 //! the recovery controller.
+//!
+//! The server is *partition-aware*: it consults the cluster ring
+//! ([`crate::store::ring`]) and serves, stores, window-logs and snapshots
+//! only the keys whose preference list it belongs to. A mis-routed
+//! request is refused with [`ServerReply::WrongServer`] instead of
+//! silently widening the key's replica set.
+
+use std::rc::Rc;
 
 use crate::clock::hvc::Hvc;
 use crate::detect::local::LocalDetector;
@@ -13,6 +21,7 @@ use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{Msg, RollbackMsg};
 use crate::sim::{ProcId, Time, SEC};
 use crate::store::protocol::{ServerOp, ServerReply};
+use crate::store::ring::Router;
 use crate::store::table::Table;
 
 const TAG_SNAPSHOT: u64 = 1;
@@ -57,6 +66,8 @@ pub struct ServerActor {
     pub idx: u16,
     hvc: Hvc,
     table: Table,
+    /// partition ownership (shared ring view)
+    router: Rc<Router>,
     detector: Option<LocalDetector>,
     windowlog: WindowLog,
     snapshots: SnapshotStore,
@@ -66,22 +77,27 @@ pub struct ServerActor {
     controller: Option<ProcId>,
     /// stats
     pub reqs_served: u64,
+    pub reqs_refused: u64,
     pub puts_intercepted: u64,
 }
 
 impl ServerActor {
     pub fn new(
         idx: u16,
-        n_servers: usize,
+        router: Rc<Router>,
         detector: Option<LocalDetector>,
         cfg: ServerCfg,
         metrics: Metrics,
         controller: Option<ProcId>,
     ) -> Self {
+        // the HVC dimension is the cluster size — one entry per server
+        let n_servers = router.ring().n_servers();
+        assert!((idx as usize) < n_servers, "server index outside the ring");
         Self {
             idx,
             hvc: Hvc::new(idx, n_servers, 0, 0),
             table: Table::new(),
+            router,
             detector,
             windowlog: WindowLog::new(cfg.windowlog_ms, cfg.windowlog_max),
             snapshots: SnapshotStore::new(cfg.snapshots_keep),
@@ -90,6 +106,7 @@ impl ServerActor {
             metrics,
             controller,
             reqs_served: 0,
+            reqs_refused: 0,
             puts_intercepted: 0,
         }
     }
@@ -116,7 +133,20 @@ impl ServerActor {
             return;
         }
 
+        if !self.router.owns(self.idx, op.key()) {
+            // not a replica of this key's partition: refuse so the store
+            // never grows beyond the preference list
+            self.reqs_refused += 1;
+            ctx.send_after(50 * 1_000, from, Msg::Reply {
+                req,
+                reply: ServerReply::WrongServer,
+                hvc: self.hvc.clone(),
+            });
+            return;
+        }
+
         // inference hook fires on ANY request touching a lock variable
+        // this server owns (non-owners never see the key)
         let mut regs = Vec::new();
         if let Some(det) = self.detector.as_mut() {
             regs = det.on_request_key(op.key(), &self.table);
@@ -162,11 +192,7 @@ impl ServerActor {
             c.emitted_at = ctx.now() + delay;
             ctx.send_after(delay, dst, Msg::Candidate(Box::new(c)));
         }
-        for (dst, pred) in regs {
-            let spec = {
-                let det = self.detector.as_ref().unwrap();
-                det_registry_spec(det, pred)
-            };
+        for (dst, spec) in regs {
             ctx.send_after(delay, dst, Msg::RegisterPred(Box::new(spec)));
         }
     }
@@ -197,12 +223,6 @@ impl ServerActor {
             _ => {}
         }
     }
-}
-
-/// Spec lookup for registration forwarding (free function to dodge a
-/// double-borrow of `self`).
-fn det_registry_spec(det: &LocalDetector, pred: crate::predicate::spec::PredId) -> crate::predicate::spec::PredicateSpec {
-    det.registry().borrow().get(pred).clone()
 }
 
 impl Actor for ServerActor {

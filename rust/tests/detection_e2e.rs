@@ -121,6 +121,7 @@ fn gc_reclaims_inactive_predicates() {
     assert!(res.violations_detected > 0);
 }
 
+#[cfg(feature = "accel")]
 #[test]
 fn xla_backend_agrees_with_native_end_to_end() {
     use optikv::exp::config::AccelKind;

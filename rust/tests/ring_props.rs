@@ -1,0 +1,125 @@
+//! Property tests for the consistent-hash partitioning ring: preference
+//! lists are well-formed, the key→replica assignment is a pure function
+//! of the ring parameters (stable under reconstruction), and per-server
+//! load stays near-uniform at the default vnode count.
+
+use optikv::exp::scenarios::SCALEOUT_SIZES;
+use optikv::predicate::infer;
+use optikv::store::ring::{mix64, route_hash, Ring, DEFAULT_RING_SEED, DEFAULT_VNODES};
+use optikv::util::prop;
+
+#[test]
+fn prop_preference_lists_have_exactly_n_distinct_servers() {
+    prop::check_default("ring_pref_list_shape", |rng| {
+        let s = rng.range(1, 33) as usize;
+        let n = rng.range(1, (s + 1) as u64) as usize;
+        let vnodes = rng.range(1, 129) as usize;
+        let ring = Ring::new(s, n, vnodes, rng.next_u64());
+        for _ in 0..32 {
+            let h = rng.next_u64();
+            let list = ring.preference_list(h);
+            if list.len() != n {
+                return Err(format!("expected {n} replicas, got {list:?}"));
+            }
+            let mut d = list.clone();
+            d.sort_unstable();
+            d.dedup();
+            if d.len() != n {
+                return Err(format!("duplicate servers in {list:?}"));
+            }
+            if d.iter().any(|&x| x as usize >= s) {
+                return Err(format!("server out of range in {list:?} (cluster {s})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assignment_stable_under_reconstruction() {
+    prop::check_default("ring_reconstruction_stable", |rng| {
+        let s = rng.range(2, 25) as usize;
+        let n = rng.range(1, (s.min(5) + 1) as u64) as usize;
+        let vnodes = rng.range(1, 65) as usize;
+        let seed = rng.next_u64();
+        let a = Ring::new(s, n, vnodes, seed);
+        let b = Ring::new(s, n, vnodes, seed);
+        for _ in 0..64 {
+            let h = rng.next_u64();
+            if a.preference_list(h) != b.preference_list(h) {
+                return Err(format!("reconstruction moved the replicas of {h:#x}"));
+            }
+            if a.primary(h) != b.primary(h) {
+                return Err(format!("reconstruction moved the primary of {h:#x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ownership_consistent_with_preference_list() {
+    prop::check_default("ring_ownership_consistent", |rng| {
+        let s = rng.range(2, 17) as usize;
+        let n = rng.range(1, (s.min(4) + 1) as u64) as usize;
+        let ring = Ring::new(s, n, 16, rng.next_u64());
+        for _ in 0..16 {
+            let h = rng.next_u64();
+            let list = ring.preference_list(h);
+            for srv in 0..s as u16 {
+                if ring.owns(srv, h) != list.contains(&srv) {
+                    return Err(format!("owns({srv}) disagrees with {list:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn load_balanced_within_15pct_at_default_vnodes() {
+    // the shipped default seed keeps replica-set load within ~15% of
+    // uniform for every scale-out cluster size (vnode rings concentrate
+    // like 1/sqrt(vnodes); the default seed was picked to sit comfortably
+    // inside the bound at 64 vnodes)
+    for &s in &SCALEOUT_SIZES {
+        let n = 3;
+        let ring = Ring::new(s, n, DEFAULT_VNODES, DEFAULT_RING_SEED);
+        let n_keys = 20_000u64;
+        let mut counts = vec![0u64; s];
+        for i in 0..n_keys {
+            for srv in ring.preference_list(mix64(0xBA5E ^ i)) {
+                counts[srv as usize] += 1;
+            }
+        }
+        let mean = (n_keys * n as u64) as f64 / s as f64;
+        for (srv, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - mean).abs() / mean;
+            assert!(
+                dev <= 0.15,
+                "cluster {s}: server {srv} carries {c} of mean {mean:.0} ({:.1}% off)",
+                dev * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_lock_variables_route_together() {
+    prop::check_default("ring_lock_colocation", |rng| {
+        let a = rng.range(0, 1_000);
+        let b = rng.range(a + 1, a + 1_000);
+        let fa = route_hash(&infer::flag_name(a, b, a));
+        let fb = route_hash(&infer::flag_name(a, b, b));
+        let t = route_hash(&infer::turn_name(a, b));
+        if fa != fb || fa != t {
+            return Err(format!("edge ({a},{b}) lock vars route apart"));
+        }
+        // a neighboring edge must not collapse onto the same tag
+        let other = route_hash(&infer::turn_name(a, b + 1));
+        if other == fa {
+            return Err(format!("edges ({a},{b}) and ({a},{})) collide", b + 1));
+        }
+        Ok(())
+    });
+}

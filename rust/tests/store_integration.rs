@@ -1,6 +1,10 @@
 //! Integration tests of the store substrate through the full DES:
 //! quorum semantics, consistency models, replica convergence/divergence,
-//! timeouts and the serial second round under message loss.
+//! timeouts and the serial second round under message loss, and the
+//! partitioned (cluster > N) routing path.
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use optikv::client::actor::ClientActor;
 use optikv::client::app::{AppOp, OpOutcome, ScriptApp};
@@ -10,22 +14,30 @@ use optikv::metrics::throughput::MetricsHub;
 use optikv::sim::des::Sim;
 use optikv::sim::net::TopologyBuilder;
 use optikv::sim::{ms, ProcId, SEC};
+use optikv::store::ring::{Ring, Router, DEFAULT_RING_SEED};
 use optikv::store::server::{ServerActor, ServerCfg};
 use optikv::store::value::{Interner, Value};
 
-/// Assemble S servers + `scripts.len()` clients on a 3-region topology.
+/// Assemble `cluster` servers + `scripts.len()` clients on a 3-region
+/// topology, replicating each key to `consistency.n` of them. The
+/// interner must be the one the scripts' keys were interned through.
 /// Returns (sim, client proc ids).
 fn build(
-    s: usize,
+    cluster: usize,
     consistency: ConsistencyCfg,
+    interner: &Rc<RefCell<Interner>>,
     scripts: Vec<Vec<AppOp>>,
     inter_ms: f64,
     drop_prob: f64,
     seed: u64,
 ) -> (Sim, Vec<ProcId>) {
     let c = scripts.len();
+    let router = Router::new(
+        Ring::new(cluster, consistency.n, 64, DEFAULT_RING_SEED),
+        interner.clone(),
+    );
     let mut tb = TopologyBuilder::new();
-    for i in 0..s {
+    for i in 0..cluster {
         tb.add_machine_proc(i as u8 % 3, 2);
     }
     for i in 0..c {
@@ -33,24 +45,25 @@ fn build(
     }
     let (topo, threads) =
         tb.build(optikv::sim::net::Topology::local_lab(inter_ms), drop_prob);
-    let metrics = MetricsHub::new(s, c);
+    let metrics = MetricsHub::new(cluster, c);
     let mut sim = Sim::new(topo, &threads, seed, 0.5, EPS_INF);
-    for i in 0..s {
+    for i in 0..cluster {
         sim.add_actor(Box::new(ServerActor::new(
             i as u16,
-            s,
+            router.clone(),
             None,
             ServerCfg::default(),
             metrics.clone(),
             None,
         )));
     }
-    let server_ids: Vec<ProcId> = (0..s as u32).map(ProcId).collect();
+    let server_ids: Vec<ProcId> = (0..cluster as u32).map(ProcId).collect();
     let mut client_ids = Vec::new();
     for (i, script) in scripts.into_iter().enumerate() {
         let id = sim.add_actor(Box::new(ClientActor::new(
             i as u32,
             server_ids.clone(),
+            router.clone(),
             consistency,
             ClientTiming::default(),
             Box::new(ScriptApp::new(script)),
@@ -93,7 +106,7 @@ fn put_then_get_round_trip_sequential() {
         AppOp::Put(k, Value::Int(42)),
         AppOp::Get(k),
     ];
-    let (mut sim, ids) = build(3, ConsistencyCfg::n3r2w2(), vec![script], 50.0, 0.0, 1);
+    let (mut sim, ids) = build(3, ConsistencyCfg::n3r2w2(), &interner, vec![script], 50.0, 0.0, 1);
     sim.run_until(30 * SEC);
     let (ok, failed) = client_stats(&mut sim, ids[0]);
     assert_eq!(ok, 3, "all three ops succeed");
@@ -109,7 +122,7 @@ fn eventual_is_faster_than_sequential() {
         .map(|i| AppOp::Put(k, Value::Int(i)))
         .collect();
     let run = |cfg: ConsistencyCfg| {
-        let (mut sim, ids) = build(3, cfg, vec![script.clone()], 100.0, 0.0, 3);
+        let (mut sim, ids) = build(3, cfg, &interner, vec![script.clone()], 100.0, 0.0, 3);
         sim.run_until(200 * SEC);
         let (ok, _) = client_stats(&mut sim, ids[0]);
         assert_eq!(ok, 50);
@@ -118,7 +131,7 @@ fn eventual_is_faster_than_sequential() {
     // compare op latency via throughput over fixed horizon instead:
     let count_done = |cfg: ConsistencyCfg, horizon_s: u64| {
         let script: Vec<AppOp> = (0..10_000).map(|i| AppOp::Put(k, Value::Int(i))).collect();
-        let (mut sim, ids) = build(3, cfg, vec![script], 100.0, 0.0, 3);
+        let (mut sim, ids) = build(3, cfg, &interner, vec![script], 100.0, 0.0, 3);
         sim.run_until(horizon_s * SEC);
         client_stats(&mut sim, ids[0]).0
     };
@@ -144,6 +157,7 @@ fn sequential_read_sees_latest_write_across_clients() {
     let (mut sim, _ids) = build(
         3,
         ConsistencyCfg::n3r1w3(),
+        &interner,
         vec![w_script, r_script],
         50.0,
         0.0,
@@ -170,7 +184,7 @@ fn eventual_write_still_replicates_asynchronously() {
     let interner = Interner::new();
     let k = interner.borrow_mut().intern("x");
     let script = vec![AppOp::Put(k, Value::Int(9))];
-    let (mut sim, _) = build(3, ConsistencyCfg::n3r1w1(), vec![script], 100.0, 0.0, 9);
+    let (mut sim, _) = build(3, ConsistencyCfg::n3r1w1(), &interner, vec![script], 100.0, 0.0, 9);
     sim.run_until(30 * SEC);
     for sidx in 0..3u32 {
         let srv = sim
@@ -190,7 +204,7 @@ fn message_loss_triggers_second_round_and_still_succeeds() {
     let script: Vec<AppOp> = (0..20).map(|i| AppOp::Put(k, Value::Int(i))).collect();
     // 20% loss: round 1 often misses the W=3 quorum; the serial second
     // round must recover most ops
-    let (mut sim, ids) = build(3, ConsistencyCfg::n3r1w3(), vec![script], 20.0, 0.2, 11);
+    let (mut sim, ids) = build(3, ConsistencyCfg::n3r1w3(), &interner, vec![script], 20.0, 0.2, 11);
     sim.run_until(120 * SEC);
     let (ok, failed) = client_stats(&mut sim, ids[0]);
     assert_eq!(ok + failed, 20, "every op completed or failed");
@@ -208,10 +222,10 @@ fn heavy_loss_hurts_sequential_far_more_than_eventual() {
     let interner = Interner::new();
     let k = interner.borrow_mut().intern("part");
     let script: Vec<AppOp> = (0..10).map(|i| AppOp::Put(k, Value::Int(i))).collect();
-    let (mut sim, ids) = build(3, ConsistencyCfg::n3r1w3(), vec![script.clone()], 20.0, 0.5, 13);
+    let (mut sim, ids) = build(3, ConsistencyCfg::n3r1w3(), &interner, vec![script.clone()], 20.0, 0.5, 13);
     sim.run_until(200 * SEC);
     let (ok_seq, failed_seq) = client_stats(&mut sim, ids[0]);
-    let (mut sim2, ids2) = build(3, ConsistencyCfg::n3r1w1(), vec![script], 20.0, 0.5, 13);
+    let (mut sim2, ids2) = build(3, ConsistencyCfg::n3r1w1(), &interner, vec![script], 20.0, 0.5, 13);
     sim2.run_until(200 * SEC);
     let (ok_ev, _) = client_stats(&mut sim2, ids2[0]);
     assert!(failed_seq > 0, "heavy loss must fail some W=3 ops");
@@ -228,7 +242,7 @@ fn concurrent_writers_create_siblings_under_eventual() {
     // two clients write different values "simultaneously" with W=1
     let s0 = vec![AppOp::Put(k, Value::Str("A".into()))];
     let s1 = vec![AppOp::Put(k, Value::Str("B".into()))];
-    let (mut sim, _) = build(3, ConsistencyCfg::n3r1w1(), vec![s0, s1], 100.0, 0.0, 17);
+    let (mut sim, _) = build(3, ConsistencyCfg::n3r1w1(), &interner, vec![s0, s1], 100.0, 0.0, 17);
     sim.run_until(30 * SEC);
     // at least one replica must hold both sibling versions
     let mut saw_siblings = false;
@@ -244,4 +258,156 @@ fn concurrent_writers_create_siblings_under_eventual() {
         }
     }
     assert!(saw_siblings, "independent vector-clock writes must coexist as siblings");
+}
+
+// ---------------------------------------------------------------------------
+// partitioned cluster (cluster_servers > N)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn partitioned_cluster_stores_keys_only_on_their_replicas() {
+    let interner = Interner::new();
+    let keys: Vec<_> = (0..12)
+        .map(|i| interner.borrow_mut().intern(&format!("part_{i}")))
+        .collect();
+    let script: Vec<AppOp> = keys.iter().map(|&k| AppOp::Put(k, Value::Int(7))).collect();
+    let consistency = ConsistencyCfg::n3r1w1();
+    let router = Router::new(
+        Ring::new(6, consistency.n, 64, DEFAULT_RING_SEED),
+        interner.clone(),
+    );
+    let (mut sim, ids) = build(6, consistency, &interner, vec![script], 20.0, 0.0, 31);
+    sim.run_until(60 * SEC);
+    let (ok, failed) = client_stats(&mut sim, ids[0]);
+    assert_eq!(ok, 12, "all writes reach their quorums");
+    assert_eq!(failed, 0);
+    for &k in &keys {
+        let replicas = router.replicas(k);
+        for sidx in 0..6u32 {
+            let srv = sim
+                .actor_mut(ProcId(sidx))
+                .as_any()
+                .unwrap()
+                .downcast_mut::<ServerActor>()
+                .unwrap();
+            let present = !srv.table().sibling_values(k).is_empty();
+            let owner = replicas.contains(&(sidx as u16));
+            assert_eq!(
+                present, owner,
+                "key must live exactly on its preference list (server {sidx})"
+            );
+        }
+    }
+    // well-routed clients are never refused
+    for sidx in 0..6u32 {
+        let srv = sim
+            .actor_mut(ProcId(sidx))
+            .as_any()
+            .unwrap()
+            .downcast_mut::<ServerActor>()
+            .unwrap();
+        assert_eq!(srv.reqs_refused, 0, "server {sidx} saw only owned keys");
+    }
+}
+
+#[test]
+fn misrouted_requests_are_refused() {
+    // a client with a stale ring view (different token seed) mis-routes
+    // some keys; owners answer, non-owners refuse with WrongServer
+    let interner = Interner::new();
+    let keys: Vec<_> = (0..16)
+        .map(|i| interner.borrow_mut().intern(&format!("stale_{i}")))
+        .collect();
+    let consistency = ConsistencyCfg::n3r1w1();
+    let good = Router::new(
+        Ring::new(6, consistency.n, 64, DEFAULT_RING_SEED),
+        interner.clone(),
+    );
+    let stale = Router::new(Ring::new(6, consistency.n, 64, 0xBAD_5EED), interner.clone());
+    // at least one key must actually be routed differently by the two views
+    assert!(
+        keys.iter().any(|&k| *good.replicas(k) != *stale.replicas(k)),
+        "seeds happen to agree; pick another stale seed"
+    );
+    let mut tb = TopologyBuilder::new();
+    for i in 0..6 {
+        tb.add_machine_proc(i as u8 % 3, 2);
+    }
+    tb.add_machine_proc(0, 2); // client
+    let (topo, threads) = tb.build(optikv::sim::net::Topology::local_lab(20.0), 0.0);
+    let metrics = MetricsHub::new(6, 1);
+    let mut sim = Sim::new(topo, &threads, 7, 0.5, EPS_INF);
+    for i in 0..6 {
+        sim.add_actor(Box::new(ServerActor::new(
+            i as u16,
+            good.clone(),
+            None,
+            ServerCfg::default(),
+            metrics.clone(),
+            None,
+        )));
+    }
+    let script: Vec<AppOp> = keys.iter().map(|&k| AppOp::Put(k, Value::Int(1))).collect();
+    let client = sim.add_actor(Box::new(ClientActor::new(
+        0,
+        (0..6u32).map(ProcId).collect(),
+        stale,
+        consistency,
+        ClientTiming::default(),
+        Box::new(ScriptApp::new(script)),
+        metrics.clone(),
+    )));
+    sim.run_until(120 * SEC);
+    let refused: u64 = (0..6u32)
+        .map(|sidx| {
+            sim.actor_mut(ProcId(sidx))
+                .as_any()
+                .unwrap()
+                .downcast_mut::<ServerActor>()
+                .unwrap()
+                .reqs_refused
+        })
+        .sum();
+    assert!(refused > 0, "stale routing must hit WrongServer refusals");
+    let (ok, failed) = client_stats(&mut sim, client);
+    assert_eq!(ok + failed, 16, "every op completed or failed cleanly");
+}
+
+// ---------------------------------------------------------------------------
+// regression: cluster_servers == N reproduces full replication exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cluster_eq_n_reproduces_full_replication_bit_identically() {
+    // With cluster_servers == N every preference list is the whole (sorted)
+    // server set, so the ring must be behaviorally inert: two runs with
+    // wildly different ring geometry (vnodes, token seed) must produce the
+    // same event schedule, op counts and violation counts as each other —
+    // i.e. the partitioned code path reproduces the historical
+    // full-replication behavior for every pre-existing scenario.
+    use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+    use optikv::exp::runner::run;
+    let mk = |vnodes: usize, ring_seed: u64| {
+        let mut cfg = ExpConfig::new(
+            "regress-full-replication",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Conjunctive { n_preds: 4, n_conjuncts: 3, beta: 0.2, put_pct: 0.5 },
+        );
+        cfg.n_clients = 6;
+        cfg.duration = 20 * SEC;
+        cfg.topo = TopoKind::AwsRegional { zones: 3 };
+        cfg.ring_vnodes = vnodes;
+        cfg.ring_seed = ring_seed;
+        cfg
+    };
+    let a = run(&mk(64, DEFAULT_RING_SEED));
+    let b = run(&mk(1, 0xDEAD_BEEF));
+    assert_eq!(a.ops_ok, b.ops_ok);
+    assert_eq!(a.ops_failed, b.ops_failed);
+    assert_eq!(a.violations_detected, b.violations_detected);
+    assert_eq!(a.candidates_seen, b.candidates_seen);
+    assert_eq!(a.pairs_checked, b.pairs_checked);
+    assert_eq!(a.app_tps, b.app_tps);
+    assert_eq!(a.server_tps, b.server_tps);
+    assert_eq!(a.sim_stats.events, b.sim_stats.events, "identical event schedules");
 }

@@ -1,6 +1,9 @@
 //! Differential test: the PJRT-executed Pallas/JAX kernels must agree
 //! with the scalar Rust backend on every verdict. Skipped (with a notice)
-//! when `artifacts/` has not been built yet.
+//! when `artifacts/` has not been built yet. The whole suite requires the
+//! `accel` cargo feature (xla + anyhow crates, PJRT CPU plugin).
+
+#![cfg(feature = "accel")]
 
 use optikv::clock::hvc::{Hvc, HvcInterval, Millis, EPS_INF};
 use optikv::runtime::accel::{Accel, NativeAccel, PairQuery};
