@@ -10,6 +10,13 @@
 //!
 //! High-degree nodes (degree > q, §VI-A) are pre-colored lock-free by
 //! their owners in a preprocessing pass; their edges need no predicates.
+//!
+//! When the client pipeline is enabled (`pipeline_depth > 1`) the app
+//! *scatter-gathers*: all `deg(v)` neighbor reads of a node go out as one
+//! [`AppAction::Batch`] wave instead of `deg(v)` sequential round trips,
+//! and the task's deferred color writes commit as one wave. Lock
+//! acquisition stays strictly sequential — the globally sorted
+//! acquire order is what guarantees deadlock freedom.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -17,7 +24,7 @@ use std::rc::Rc;
 
 use crate::apps::graph::Graph;
 use crate::apps::peterson::{LockStep, MeOracleRef, PetersonLock};
-use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, OpOutcome};
+use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, LastResult, OpOutcome};
 use crate::clock::hvc::Millis;
 use crate::metrics::throughput::Metrics;
 use crate::sim::Time;
@@ -78,19 +85,35 @@ enum Phase {
     /// pre-coloring own high-degree nodes: reading neighbor `nj` of prep
     /// node `pi`
     PrepRead { pi: usize, nj: usize, used: Vec<i64> },
+    /// pipelined variant: all neighbor reads of prep node `pi` in flight
+    PrepWave { pi: usize },
     PrepWrite { pi: usize },
     TaskStart,
     /// acquiring lock `li` for node `ni` of the current task
     Lock { ni: usize, li: usize },
     /// reading neighbor `nj` of node `ni`
     ReadNbr { ni: usize, nj: usize, used: Vec<i64> },
+    /// pipelined variant: all neighbor reads of node `ni` in flight
+    ReadWave { ni: usize },
     /// releasing lock `li` after the color was chosen (deferred)
     Release { ni: usize, li: usize },
     /// committing deferred color `ci` of the task
     Commit { ci: usize },
+    /// pipelined variant: the task's deferred writes commit as one wave
+    CommitWave,
     /// releasing engaged locks after an abort, index into `locks`
     AbortRelease { li: usize },
     Done,
+}
+
+/// Colors observed by a completed scatter-gather read wave.
+fn used_from_wave(wave: &[(AppOp, OpOutcome)]) -> Vec<i64> {
+    wave.iter()
+        .filter_map(|(_, o)| match o {
+            OpOutcome::GetOk(sibs) => resolve(sibs).and_then(|v| v.value.as_int()),
+            _ => None,
+        })
+        .collect()
 }
 
 pub struct ColoringApp {
@@ -108,6 +131,8 @@ pub struct ColoringApp {
     pending: Vec<(u32, i64)>,
     restart_pending: bool,
     task_started: Time,
+    /// scatter-gather reads/commits (latched from `AppEnv::pipelined`)
+    batch: bool,
     /// cached key ids
     color_keys: HashMap<u32, KeyId>,
     /// stats
@@ -135,6 +160,7 @@ impl ColoringApp {
             pending: Vec::new(),
             restart_pending: false,
             task_started: 0,
+            batch: false,
             color_keys: HashMap::new(),
             nodes_colored: 0,
             tasks_done: 0,
@@ -170,18 +196,39 @@ impl ColoringApp {
     }
 
     /// Start processing node `ni` of the current task.
-    fn begin_node(&mut self, ni: usize) -> AppAction {
+    fn begin_node(&mut self, ni: usize, now: Time) -> AppAction {
         let v = self.tasks[self.ti][ni];
         self.locks = self.locks_for(v);
         if self.locks.is_empty() {
-            self.phase = Phase::ReadNbr { ni, nj: 0, used: Vec::new() };
-            self.issue_read(ni, 0)
+            self.start_reads(ni, now)
         } else {
             self.phase = Phase::Lock { ni, li: 0 };
             match self.locks[0].acquire() {
                 LockStep::Do(op) => AppAction::Op(op),
                 _ => unreachable!(),
             }
+        }
+    }
+
+    /// Issue the neighbor reads of node `ni`: one scatter-gather wave on a
+    /// pipelined client, one GET at a time otherwise.
+    fn start_reads(&mut self, ni: usize, now: Time) -> AppAction {
+        if self.batch {
+            let v = self.tasks[self.ti][ni];
+            let nbrs = self.sh.graph.neighbors(v).to_vec();
+            if nbrs.is_empty() {
+                return self.finish_node(ni, Vec::new(), now);
+            }
+            let mut ops = Vec::with_capacity(nbrs.len());
+            for u in nbrs {
+                let key = self.ckey(u);
+                ops.push(AppOp::Get(key));
+            }
+            self.phase = Phase::ReadWave { ni };
+            AppAction::Batch(ops)
+        } else {
+            self.phase = Phase::ReadNbr { ni, nj: 0, used: Vec::new() };
+            self.issue_read(ni, 0)
         }
     }
 
@@ -222,14 +269,24 @@ impl ColoringApp {
     fn after_release(&mut self, ni: usize, now: Time) -> AppAction {
         let task_len = self.tasks[self.ti].len();
         if ni + 1 < task_len {
-            self.begin_node(ni + 1)
+            self.begin_node(ni + 1, now)
+        } else if self.batch {
+            // commit every deferred update of the task as one wave — the
+            // writes are independent (distinct nodes, locks released)
+            let pending = self.pending.clone();
+            let mut ops = Vec::with_capacity(pending.len());
+            for (v, c) in pending {
+                let key = self.ckey(v);
+                ops.push(AppOp::Put(key, Value::Int(c)));
+            }
+            self.phase = Phase::CommitWave;
+            AppAction::Batch(ops)
         } else {
-            // task read phase done → commit deferred updates
+            // task read phase done → commit deferred updates one by one
             self.phase = Phase::Commit { ci: 0 };
             let (v, _) = self.pending[0];
             let key = self.ckey(v);
             let val = self.pending[0].1;
-            let _ = now;
             AppAction::Op(AppOp::Put(key, Value::Int(val)))
         }
     }
@@ -263,7 +320,7 @@ impl ColoringApp {
             self.phase = Phase::Done;
             return AppAction::Done;
         }
-        self.begin_node(0)
+        self.begin_node(0, now)
     }
 
     /// Begin (or continue) prep: color own high-degree nodes lock-free.
@@ -277,6 +334,16 @@ impl ColoringApp {
             self.phase = Phase::PrepWrite { pi };
             let key = self.ckey(v);
             return AppAction::Op(AppOp::Put(key, Value::Int(0)));
+        }
+        if self.batch {
+            let nbrs = self.sh.graph.neighbors(v).to_vec();
+            let mut ops = Vec::with_capacity(nbrs.len());
+            for u in nbrs {
+                let key = self.ckey(u);
+                ops.push(AppOp::Get(key));
+            }
+            self.phase = Phase::PrepWave { pi };
+            return AppAction::Batch(ops);
         }
         self.phase = Phase::PrepRead { pi, nj: 0, used: Vec::new() };
         let key = self.ckey(self.sh.graph.neighbors(v)[0]);
@@ -319,12 +386,17 @@ impl AppLogic for ColoringApp {
         "social_media_analysis"
     }
 
-    fn next(&mut self, env: &mut AppEnv, last: Option<(AppOp, OpOutcome)>) -> AppAction {
+    fn next(&mut self, env: &mut AppEnv, last: Option<LastResult>) -> AppAction {
         let now = env.now;
+        self.batch = env.pipelined();
         if self.restart_pending {
             return self.handle_abort(now);
         }
-        let outcome = last.map(|(_, o)| o);
+        let (outcome, wave) = match last {
+            Some(LastResult::Op(_, o)) => (Some(o), Vec::new()),
+            Some(LastResult::Batch(pairs)) => (None, pairs),
+            None => (None, Vec::new()),
+        };
 
         match std::mem::replace(&mut self.phase, Phase::Done) {
             Phase::Init => {
@@ -350,6 +422,14 @@ impl AppLogic for ColoringApp {
                     self.phase = Phase::PrepWrite { pi };
                     AppAction::Op(AppOp::Put(key, Value::Int(color)))
                 }
+            }
+            Phase::PrepWave { pi } => {
+                let used = used_from_wave(&wave);
+                let color = mex(&used);
+                let v = self.prep[pi];
+                let key = self.ckey(v);
+                self.phase = Phase::PrepWrite { pi };
+                AppAction::Op(AppOp::Put(key, Value::Int(color)))
             }
             Phase::PrepWrite { pi } => {
                 self.nodes_colored += 1;
@@ -378,8 +458,7 @@ impl AppLogic for ColoringApp {
                                 _ => unreachable!(),
                             }
                         } else {
-                            self.phase = Phase::ReadNbr { ni, nj: 0, used: Vec::new() };
-                            self.issue_read(ni, 0)
+                            self.start_reads(ni, now)
                         }
                     }
                     LockStep::Released => unreachable!(),
@@ -399,6 +478,10 @@ impl AppLogic for ColoringApp {
                 } else {
                     self.finish_node(ni, used, now)
                 }
+            }
+            Phase::ReadWave { ni } => {
+                let used = used_from_wave(&wave);
+                self.finish_node(ni, used, now)
             }
             Phase::Release { ni, li } => {
                 let out = outcome.expect("release outcome");
@@ -432,6 +515,7 @@ impl AppLogic for ColoringApp {
                     self.finish_task(now)
                 }
             }
+            Phase::CommitWave => self.finish_task(now),
             Phase::AbortRelease { li } => {
                 let out = outcome.expect("abort release outcome");
                 match self.locks[li].on_result(&out) {
@@ -467,7 +551,11 @@ impl AppLogic for ColoringApp {
     fn on_violation(&mut self, _env: &mut AppEnv, _t_violate_ms: Millis) -> bool {
         if matches!(
             self.phase,
-            Phase::Done | Phase::Init | Phase::PrepRead { .. } | Phase::PrepWrite { .. }
+            Phase::Done
+                | Phase::Init
+                | Phase::PrepRead { .. }
+                | Phase::PrepWave { .. }
+                | Phase::PrepWrite { .. }
         ) {
             // prep is lock-free and Done has nothing to abort
             return false;
@@ -502,32 +590,53 @@ mod tests {
         (sh, interner)
     }
 
+    /// Apply one op to an in-memory map, producing a perfect outcome.
+    fn exec(op: &AppOp, store: &mut HashMap<KeyId, Value>) -> OpOutcome {
+        match op {
+            AppOp::Get(k) => OpOutcome::GetOk(match store.get(k) {
+                Some(v) => vec![crate::store::value::Versioned::new(
+                    crate::clock::vc::VectorClock::new().incremented(0),
+                    v.clone(),
+                )],
+                None => vec![],
+            }),
+            AppOp::Put(k, v) => {
+                store.insert(*k, v.clone());
+                OpOutcome::PutOk
+            }
+        }
+    }
+
     /// Pure driver: run the app against an in-memory map (no sim), feeding
-    /// perfect outcomes. Exercises the whole state machine.
-    fn drive_to_completion(app: &mut ColoringApp, store: &mut HashMap<KeyId, Value>) -> usize {
+    /// perfect outcomes — single ops and batch waves alike. Exercises the
+    /// whole state machine at the given pipeline width.
+    fn drive_to_completion(
+        app: &mut ColoringApp,
+        store: &mut HashMap<KeyId, Value>,
+        pipeline: usize,
+    ) -> usize {
         let mut rng = Rng::new(1);
-        let mut env = AppEnv { now: 0, client_idx: app.client, rng: &mut rng };
-        let mut last: Option<(AppOp, OpOutcome)> = None;
+        let mut env = AppEnv { now: 0, client_idx: app.client, pipeline, rng: &mut rng };
+        let mut last: Option<LastResult> = None;
         let mut steps = 0;
         loop {
             steps += 1;
             assert!(steps < 1_000_000, "app did not terminate");
             match app.next(&mut env, last.take()) {
                 AppAction::Op(op) => {
-                    let outcome = match &op {
-                        AppOp::Get(k) => OpOutcome::GetOk(match store.get(k) {
-                            Some(v) => vec![crate::store::value::Versioned::new(
-                                crate::clock::vc::VectorClock::new().incremented(0),
-                                v.clone(),
-                            )],
-                            None => vec![],
-                        }),
-                        AppOp::Put(k, v) => {
-                            store.insert(*k, v.clone());
-                            OpOutcome::PutOk
-                        }
-                    };
-                    last = Some((op, outcome));
+                    let outcome = exec(&op, store);
+                    last = Some(LastResult::Op(op, outcome));
+                }
+                AppAction::Batch(ops) => {
+                    assert!(!ops.is_empty(), "batches must be non-empty");
+                    let pairs: Vec<(AppOp, OpOutcome)> = ops
+                        .into_iter()
+                        .map(|op| {
+                            let o = exec(&op, store);
+                            (op, o)
+                        })
+                        .collect();
+                    last = Some(LastResult::Batch(pairs));
                 }
                 AppAction::Sleep(_) => {
                     last = None;
@@ -543,7 +652,7 @@ mod tests {
         let graph = sh.graph.clone();
         let mut app = ColoringApp::new(sh, 0);
         let mut store: HashMap<KeyId, Value> = HashMap::new();
-        drive_to_completion(&mut app, &mut store);
+        drive_to_completion(&mut app, &mut store, 1);
         // every node colored, and it is a proper coloring
         let mut colors = vec![-1i64; graph.n];
         for v in 0..graph.n as u32 {
@@ -556,6 +665,33 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_client_colors_whole_graph_properly() {
+        // the batch paths (prep waves, read waves, commit waves) must
+        // produce the same kind of proper coloring the serial paths do
+        let (sh, interner) = setup(1);
+        let graph = sh.graph.clone();
+        let mut app = ColoringApp::new(sh, 0);
+        let mut store: HashMap<KeyId, Value> = HashMap::new();
+        let steps = drive_to_completion(&mut app, &mut store, 8);
+        let mut colors = vec![-1i64; graph.n];
+        for v in 0..graph.n as u32 {
+            let key = color_key(&mut interner.borrow_mut(), v);
+            colors[v as usize] = store.get(&key).and_then(|x| x.as_int()).expect("colored");
+        }
+        for (a, b) in graph.edges() {
+            assert_ne!(colors[a as usize], colors[b as usize], "edge ({a},{b}) conflict");
+        }
+        // scatter-gather needs far fewer app turns than one-op-at-a-time
+        let mut serial_app = ColoringApp::new(setup(1).0, 0);
+        let mut serial_store: HashMap<KeyId, Value> = HashMap::new();
+        let serial_steps = drive_to_completion(&mut serial_app, &mut serial_store, 1);
+        assert!(
+            steps * 2 < serial_steps,
+            "batched run took {steps} turns vs {serial_steps} serial"
+        );
+    }
+
+    #[test]
     fn two_sequential_clients_color_properly() {
         // run client 0 to completion, then client 1 (no concurrency ⇒ the
         // result must be a proper coloring)
@@ -564,8 +700,8 @@ mod tests {
         let mut store: HashMap<KeyId, Value> = HashMap::new();
         let mut app0 = ColoringApp::new(sh.clone(), 0);
         let mut app1 = ColoringApp::new(sh, 1);
-        drive_to_completion(&mut app0, &mut store);
-        drive_to_completion(&mut app1, &mut store);
+        drive_to_completion(&mut app0, &mut store, 1);
+        drive_to_completion(&mut app1, &mut store, 1);
         for (a, b) in graph.edges() {
             let ka = color_key(&mut interner.borrow_mut(), a);
             let kb = color_key(&mut interner.borrow_mut(), b);
@@ -622,7 +758,7 @@ mod tests {
         let mut store: HashMap<KeyId, Value> = HashMap::new();
         let mut rng = Rng::new(1);
         // step a few ops into the first task
-        let mut env = AppEnv { now: 0, client_idx: 0, rng: &mut rng };
+        let mut env = AppEnv { now: 0, client_idx: 0, pipeline: 1, rng: &mut rng };
         let mut last = None;
         // step until we are inside a regular (locked) task, past the
         // lock-free prep phase where violations are ignored
@@ -632,20 +768,18 @@ mod tests {
         ) {
             match app.next(&mut env, last.take()) {
                 AppAction::Op(op) => {
-                    let outcome = match &op {
-                        AppOp::Get(k) => OpOutcome::GetOk(match store.get(k) {
-                            Some(v) => vec![crate::store::value::Versioned::new(
-                                crate::clock::vc::VectorClock::new().incremented(0),
-                                v.clone(),
-                            )],
-                            None => vec![],
-                        }),
-                        AppOp::Put(k, v) => {
-                            store.insert(*k, v.clone());
-                            OpOutcome::PutOk
-                        }
-                    };
-                    last = Some((op, outcome));
+                    let outcome = exec(&op, &mut store);
+                    last = Some(LastResult::Op(op, outcome));
+                }
+                AppAction::Batch(ops) => {
+                    let pairs: Vec<(AppOp, OpOutcome)> = ops
+                        .into_iter()
+                        .map(|op| {
+                            let o = exec(&op, &mut store);
+                            (op, o)
+                        })
+                        .collect();
+                    last = Some(LastResult::Batch(pairs));
                 }
                 AppAction::Sleep(_) => last = None,
                 AppAction::Done => break,
@@ -653,7 +787,7 @@ mod tests {
         }
         assert!(app.on_violation(&mut env, 123), "mid-task violation aborts");
         // restart path: drive to completion still works
-        drive_to_completion(&mut app, &mut store);
+        drive_to_completion(&mut app, &mut store, 1);
         assert!(metrics.borrow().tasks_aborted >= 1);
         assert!(app.tasks_done > 0);
     }

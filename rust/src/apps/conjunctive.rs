@@ -7,11 +7,15 @@
 //! stresses the monitors.
 //!
 //! `put_pct` mixes in extra GETs exactly like Weather Monitoring.
+//!
+//! Every op of a cycle (the flip PUT and its extra GETs) touches an
+//! independent variable, so on a pipelined client (`pipeline_depth > 1`)
+//! the whole cycle goes out as one [`AppAction::Batch`] wave.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, OpOutcome};
+use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, LastResult};
 use crate::predicate::spec::{Clause, Conjunct, Literal, PredId, PredKind, PredicateSpec, Registry};
 use crate::store::value::{Interner, KeyId, Value};
 
@@ -109,9 +113,10 @@ impl ConjunctiveApp {
         self.sh.vars[k][i]
     }
 
-    fn issue_flip(&mut self, env: &mut AppEnv) -> AppAction {
+    /// The flip PUT of the next cycle (None once `max_flips` is reached).
+    fn flip_op(&mut self, env: &mut AppEnv) -> Option<AppOp> {
         if self.max_flips > 0 && self.flips >= self.max_flips {
-            return AppAction::Done;
+            return None;
         }
         let truth = env.rng.chance(self.sh.beta);
         if truth {
@@ -120,13 +125,25 @@ impl ConjunctiveApp {
         self.flips += 1;
         let var = self.my_var(self.k);
         self.k = (self.k + 1) % self.sh.n_preds;
-        AppAction::Op(AppOp::Put(var, Value::Int(truth as i64)))
+        Some(AppOp::Put(var, Value::Int(truth as i64)))
+    }
+
+    fn extra_get_op(&mut self, env: &mut AppEnv) -> AppOp {
+        let k = env.rng.below(self.sh.n_preds as u64) as usize;
+        let i = env.rng.below(self.sh.n_conjuncts as u64) as usize;
+        AppOp::Get(self.sh.vars[k][i])
+    }
+
+    fn issue_flip(&mut self, env: &mut AppEnv) -> AppAction {
+        match self.flip_op(env) {
+            Some(op) => AppAction::Op(op),
+            None => AppAction::Done,
+        }
     }
 
     fn issue_extra_get(&mut self, env: &mut AppEnv) -> AppAction {
-        let k = env.rng.below(self.sh.n_preds as u64) as usize;
-        let i = env.rng.below(self.sh.n_conjuncts as u64) as usize;
-        AppAction::Op(AppOp::Get(self.sh.vars[k][i]))
+        let op = self.extra_get_op(env);
+        AppAction::Op(op)
     }
 }
 
@@ -135,7 +152,24 @@ impl AppLogic for ConjunctiveApp {
         "conjunctive"
     }
 
-    fn next(&mut self, env: &mut AppEnv, _last: Option<(AppOp, OpOutcome)>) -> AppAction {
+    fn next(&mut self, env: &mut AppEnv, _last: Option<LastResult>) -> AppAction {
+        if env.pipelined() {
+            // the flip and its extra GETs touch independent variables:
+            // overlap the whole cycle as one wave
+            let Some(flip) = self.flip_op(env) else { return AppAction::Done };
+            let extras = self.sh.extra_gets();
+            if extras == 0 {
+                return AppAction::Op(flip);
+            }
+            let mut ops = Vec::with_capacity(1 + extras);
+            ops.push(flip);
+            for _ in 0..extras {
+                let get = self.extra_get_op(env);
+                ops.push(get);
+            }
+            self.phase = Phase::Flip;
+            return AppAction::Batch(ops);
+        }
         match self.phase {
             Phase::Flip => {
                 let extras = self.sh.extra_gets();
@@ -154,6 +188,7 @@ impl AppLogic for ConjunctiveApp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::client::app::OpOutcome;
     use crate::util::rng::Rng;
 
     fn setup(n_preds: usize, m: usize, beta: f64, put_pct: f64) -> (ConjunctiveShared, Rc<RefCell<Registry>>) {
@@ -195,14 +230,14 @@ mod tests {
         let (mut gets, mut puts) = (0, 0);
         let mut last = None;
         loop {
-            let mut env = AppEnv { now: 0, client_idx: 1, rng: &mut rng };
+            let mut env = AppEnv { now: 0, client_idx: 1, pipeline: 1, rng: &mut rng };
             match app.next(&mut env, last.take()) {
                 AppAction::Op(op) => {
                     match &op {
                         AppOp::Get(_) => gets += 1,
                         AppOp::Put(..) => puts += 1,
                     }
-                    last = Some((op, OpOutcome::PutOk));
+                    last = Some(LastResult::Op(op, OpOutcome::PutOk));
                 }
                 AppAction::Sleep(_) => last = None,
                 AppAction::Done => break,
@@ -219,15 +254,59 @@ mod tests {
         let mut rng = Rng::new(9);
         let mut last = None;
         loop {
-            let mut env = AppEnv { now: 0, client_idx: 0, rng: &mut rng };
+            let mut env = AppEnv { now: 0, client_idx: 0, pipeline: 1, rng: &mut rng };
             match app.next(&mut env, last.take()) {
-                AppAction::Op(op) => last = Some((op, OpOutcome::PutOk)),
+                AppAction::Op(op) => last = Some(LastResult::Op(op, OpOutcome::PutOk)),
                 AppAction::Sleep(_) => last = None,
                 AppAction::Done => break,
             }
         }
         let rate = app.trues_set as f64 / app.flips as f64;
         assert!((rate - 0.2).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn pipelined_cycles_batch_the_flip_with_its_extras() {
+        // put_pct = 0.25 ⇒ 3 extra GETs: a pipelined client ships the
+        // whole cycle as one 4-op wave, preserving the op mix
+        let (sh, _) = setup(3, 4, 0.5, 0.25);
+        let mut app = ConjunctiveApp::new(sh, 1, 40);
+        let mut rng = Rng::new(3);
+        let (mut gets, mut puts, mut waves) = (0, 0, 0);
+        let mut last = None;
+        loop {
+            let mut env = AppEnv { now: 0, client_idx: 1, pipeline: 4, rng: &mut rng };
+            match app.next(&mut env, last.take()) {
+                AppAction::Batch(ops) => {
+                    waves += 1;
+                    assert_eq!(ops.len(), 4, "flip + 3 extras per wave");
+                    assert!(matches!(ops[0], AppOp::Put(..)), "the flip leads the wave");
+                    let pairs: Vec<(AppOp, OpOutcome)> = ops
+                        .into_iter()
+                        .map(|op| {
+                            match &op {
+                                AppOp::Get(_) => gets += 1,
+                                AppOp::Put(..) => puts += 1,
+                            }
+                            (op, OpOutcome::PutOk)
+                        })
+                        .collect();
+                    last = Some(LastResult::Batch(pairs));
+                }
+                AppAction::Op(op) => {
+                    match &op {
+                        AppOp::Get(_) => gets += 1,
+                        AppOp::Put(..) => puts += 1,
+                    }
+                    last = Some(LastResult::Op(op, OpOutcome::PutOk));
+                }
+                AppAction::Sleep(_) => last = None,
+                AppAction::Done => break,
+            }
+        }
+        assert_eq!(puts, 40);
+        assert_eq!(gets, 120);
+        assert_eq!(waves, 40, "every cycle travels as one wave");
     }
 
     #[test]
@@ -238,11 +317,11 @@ mod tests {
         let mut keys = Vec::new();
         let mut last = None;
         loop {
-            let mut env = AppEnv { now: 0, client_idx: 2, rng: &mut rng };
+            let mut env = AppEnv { now: 0, client_idx: 2, pipeline: 1, rng: &mut rng };
             match app.next(&mut env, last.take()) {
                 AppAction::Op(op) => {
                     keys.push(op.key());
-                    last = Some((op, OpOutcome::PutOk));
+                    last = Some(LastResult::Op(op, OpOutcome::PutOk));
                 }
                 AppAction::Sleep(_) => last = None,
                 AppAction::Done => break,

@@ -7,6 +7,11 @@
 //! Nodes on a strip boundary are updated under Peterson edge locks for
 //! their cross-client edges, so the monitors watch one mutual-exclusion
 //! predicate per boundary edge (inferred from the lock variable names).
+//!
+//! On a pipelined client (`pipeline_depth > 1`) the per-update neighbor
+//! reads go out as one scatter-gather [`AppAction::Batch`] wave instead
+//! of `reads_per_update` sequential round trips; lock steps stay
+//! sequential (the Peterson protocol orders them).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -14,7 +19,7 @@ use std::rc::Rc;
 
 use crate::apps::graph::Graph;
 use crate::apps::peterson::{LockStep, MeOracleRef, PetersonLock};
-use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, OpOutcome};
+use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, LastResult, OpOutcome};
 use crate::clock::hvc::Millis;
 use crate::store::value::{Interner, KeyId, Value};
 
@@ -61,6 +66,8 @@ enum Phase {
     Lock { li: usize },
     /// reading neighbor sample `k` of `reads` for the current node
     Read { k: usize, acc: i64 },
+    /// pipelined variant: all neighbor samples of the update in flight
+    ReadWave,
     Write,
     Release { li: usize },
     AbortRelease { li: usize },
@@ -74,6 +81,8 @@ pub struct WeatherApp {
     phase: Phase,
     locks: Vec<PetersonLock>,
     state_keys: HashMap<u32, KeyId>,
+    /// scatter-gather reads (latched from `AppEnv::pipelined`)
+    batch: bool,
     restart_pending: bool,
     /// stop after this many node updates (0 = run forever)
     pub max_updates: u64,
@@ -93,6 +102,7 @@ impl WeatherApp {
             phase: Phase::Init,
             locks: Vec::new(),
             state_keys: HashMap::new(),
+            batch: false,
             restart_pending: false,
             max_updates,
             updates_done: 0,
@@ -154,18 +164,35 @@ impl WeatherApp {
             self.phase = Phase::Write;
             return self.issue_write(env, 0);
         }
+        if self.batch {
+            // scatter-gather: sample every neighbor read up front and
+            // issue the whole wave at once
+            let mut ops = Vec::with_capacity(reads);
+            for _ in 0..reads {
+                let u = self.sample_neighbor(env);
+                let key = self.skey(u);
+                ops.push(AppOp::Get(key));
+            }
+            self.phase = Phase::ReadWave;
+            return AppAction::Batch(ops);
+        }
         self.phase = Phase::Read { k: 0, acc: 0 };
         self.issue_read(env)
     }
 
-    fn issue_read(&mut self, env: &mut AppEnv) -> AppAction {
+    /// One random neighbor of the current node (itself when isolated).
+    fn sample_neighbor(&self, env: &mut AppEnv) -> u32 {
         let v = self.cur_node();
         let nbrs = self.sh.graph.neighbors(v);
-        let u = if nbrs.is_empty() {
+        if nbrs.is_empty() {
             v
         } else {
             nbrs[env.rng.below(nbrs.len() as u64) as usize]
-        };
+        }
+    }
+
+    fn issue_read(&mut self, env: &mut AppEnv) -> AppAction {
+        let u = self.sample_neighbor(env);
         let key = self.skey(u);
         AppAction::Op(AppOp::Get(key))
     }
@@ -219,14 +246,19 @@ impl AppLogic for WeatherApp {
         "weather_monitoring"
     }
 
-    fn next(&mut self, env: &mut AppEnv, last: Option<(AppOp, OpOutcome)>) -> AppAction {
+    fn next(&mut self, env: &mut AppEnv, last: Option<LastResult>) -> AppAction {
+        self.batch = env.pipelined();
         if self.restart_pending {
             return self.handle_abort(env);
         }
         if self.my_nodes.is_empty() {
             return AppAction::Done;
         }
-        let outcome = last.map(|(_, o)| o);
+        let (outcome, wave) = match last {
+            Some(LastResult::Op(_, o)) => (Some(o), Vec::new()),
+            Some(LastResult::Batch(pairs)) => (None, pairs),
+            None => (None, Vec::new()),
+        };
         match std::mem::replace(&mut self.phase, Phase::Init) {
             Phase::Init => self.begin_node(env),
             Phase::Lock { li } => {
@@ -270,6 +302,22 @@ impl AppLogic for WeatherApp {
                     self.phase = Phase::Write;
                     self.issue_write(env, acc)
                 }
+            }
+            Phase::ReadWave => {
+                // gather: fold the samples in submission order, exactly as
+                // the sequential path smooths them
+                let mut acc = 0i64;
+                for (_, o) in &wave {
+                    if let OpOutcome::GetOk(sibs) = o {
+                        if let Some(x) =
+                            crate::store::value::resolve(sibs).and_then(|v| v.value.as_int())
+                        {
+                            acc = (acc + x) / 2; // running smooth
+                        }
+                    }
+                }
+                self.phase = Phase::Write;
+                self.issue_write(env, acc)
             }
             Phase::Write => {
                 if self.locks.is_empty() {
@@ -342,7 +390,10 @@ impl AppLogic for WeatherApp {
     }
 
     fn on_violation(&mut self, _env: &mut AppEnv, _t_violate_ms: Millis) -> bool {
-        if matches!(self.phase, Phase::Lock { .. } | Phase::Read { .. } | Phase::Write) {
+        if matches!(
+            self.phase,
+            Phase::Lock { .. } | Phase::Read { .. } | Phase::ReadWave | Phase::Write
+        ) {
             self.restart_pending = true;
             true
         } else {
@@ -376,39 +427,73 @@ mod tests {
         assert_eq!(setup(1.0, 2, false).reads_per_update(), 0);
     }
 
+    /// Drive the app with perfect outcomes at the given pipeline width;
+    /// returns (gets, puts, largest batch seen).
+    fn drive(app: &mut WeatherApp, pipeline: usize, rng_seed: u64) -> (u32, u32, usize) {
+        let mut rng = Rng::new(rng_seed);
+        let mut gets = 0u32;
+        let mut puts = 0u32;
+        let mut max_wave = 0usize;
+        let mut count = |op: &AppOp| match op {
+            AppOp::Get(_) => {
+                gets += 1;
+                OpOutcome::GetOk(vec![])
+            }
+            AppOp::Put(..) => {
+                puts += 1;
+                OpOutcome::PutOk
+            }
+        };
+        let mut last: Option<LastResult> = None;
+        loop {
+            let mut env = AppEnv { now: 0, client_idx: 0, pipeline, rng: &mut rng };
+            match app.next(&mut env, last.take()) {
+                AppAction::Op(op) => {
+                    let out = count(&op);
+                    last = Some(LastResult::Op(op, out));
+                }
+                AppAction::Batch(ops) => {
+                    max_wave = max_wave.max(ops.len());
+                    let pairs: Vec<(AppOp, OpOutcome)> = ops
+                        .into_iter()
+                        .map(|op| {
+                            let o = count(&op);
+                            (op, o)
+                        })
+                        .collect();
+                    last = Some(LastResult::Batch(pairs));
+                }
+                AppAction::Sleep(_) => last = None,
+                AppAction::Done => break,
+            }
+        }
+        (gets, puts, max_wave)
+    }
+
     #[test]
     fn interior_updates_hit_put_ratio() {
         // single client → no boundary, no locks: ops are exactly
         // reads_per_update GETs + 1 PUT per update
         let sh = setup(0.5, 1, true);
         let mut app = WeatherApp::new(sh, 0, 50);
-        let mut rng = Rng::new(5);
-        let mut gets = 0u32;
-        let mut puts = 0u32;
-        let mut last: Option<(AppOp, OpOutcome)> = None;
-        loop {
-            let mut env = AppEnv { now: 0, client_idx: 0, rng: &mut rng };
-            match app.next(&mut env, last.take()) {
-                AppAction::Op(op) => {
-                    let out = match &op {
-                        AppOp::Get(_) => {
-                            gets += 1;
-                            OpOutcome::GetOk(vec![])
-                        }
-                        AppOp::Put(..) => {
-                            puts += 1;
-                            OpOutcome::PutOk
-                        }
-                    };
-                    last = Some((op, out));
-                }
-                AppAction::Sleep(_) => last = None,
-                AppAction::Done => break,
-            }
-        }
+        let (gets, puts, max_wave) = drive(&mut app, 1, 5);
         assert_eq!(puts, 50);
         assert_eq!(gets, 50, "put_pct=0.5 ⇒ 1 read per write");
         assert_eq!(app.updates_done, 50);
+        assert_eq!(max_wave, 0, "serial clients never see batches");
+    }
+
+    #[test]
+    fn pipelined_updates_scatter_reads_and_keep_the_mix() {
+        // put_pct = 0.25 ⇒ 3 reads per write; a pipelined client issues
+        // them as one wave, with the same total op mix
+        let sh = setup(0.25, 1, true);
+        let mut app = WeatherApp::new(sh, 0, 40);
+        let (gets, puts, max_wave) = drive(&mut app, 8, 5);
+        assert_eq!(puts, 40);
+        assert_eq!(gets, 120, "3 reads per write, batched or not");
+        assert_eq!(max_wave, 3, "all reads of an update travel in one wave");
+        assert_eq!(app.updates_done, 40);
     }
 
     #[test]

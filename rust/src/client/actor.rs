@@ -1,33 +1,39 @@
-//! The Voldemort-style client actor: executes application operations
-//! against the replicated store with N/R/W quorum semantics (§II-B):
+//! The Voldemort-style client actor, rebuilt as a thin *multiplexer* over
+//! the transport-agnostic quorum engine ([`crate::client::quorum`]):
 //!
 //! * routing — each operation resolves the key's N-server preference
 //!   list on the consistent-hash ring ([`crate::store::ring`]); cluster
 //!   size and N are independent, so only the key's replica set is
 //!   contacted, never the whole cluster;
-//! * parallel phase — send to all N preference-list servers, wait for
-//!   R (W) distinct acknowledgements with a timeout;
-//! * serial phase — on timeout, one more round to the servers that have
-//!   not responded; if the quorum is still not met, the op fails;
-//! * an application PUT is GET_VERSION (quorum R) + PUT (quorum W) with
-//!   the merged, incremented vector clock (§VI-A).
+//! * quorum protocol — every operation is a [`QuorumCall`] (parallel
+//!   phase, serial second round, GET_VERSION → PUT chaining); the actor
+//!   only turns [`QuorumStep`]s into wire messages and timers;
+//! * pipelining — up to `pipeline_depth` calls run concurrently, keyed
+//!   by wire request id. The app hands the actor either single ops
+//!   (closed loop) or [`AppAction::Batch`] waves whose operations are
+//!   scattered across the open slots and gathered into one
+//!   [`LastResult::Batch`]. `pipeline_depth = 1` reproduces the
+//!   historical serial client event-for-event;
+//! * broadcast payloads are shared: one `Rc<ServerOp>` serves all N
+//!   replicas of a fan-out instead of N deep clones of the value and its
+//!   vector clock.
 //!
 //! The client also relays HVC causality between servers by piggy-backing
 //! the freshest server HVC it has seen onto every request.
 
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 
-use crate::clock::hvc::Hvc;
-use crate::clock::vc::VectorClock;
-use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, OpOutcome};
+use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, LastResult, OpOutcome};
 use crate::client::consistency::{ClientTiming, ConsistencyCfg};
+use crate::client::quorum::{QuorumCall, QuorumStep};
+use crate::clock::hvc::Hvc;
 use crate::metrics::throughput::Metrics;
 use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{Msg, RollbackMsg};
-use crate::sim::{ProcId, Time};
+use crate::sim::ProcId;
 use crate::store::protocol::{ServerOp, ServerReply};
 use crate::store::ring::Router;
-use crate::store::value::{merge_siblings, Versioned};
 
 const TAG_WAKE: u64 = 0;
 /// think timers carry a generation in the low bits so timers from before
@@ -35,28 +41,17 @@ const TAG_WAKE: u64 = 0;
 /// request-timeout tags, which are small integers)
 const THINK_FLAG: u64 = 1 << 63;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Phase {
-    Get,
-    GetVersion,
-    Put,
-}
-
-struct Inflight {
-    app_op: AppOp,
-    phase: Phase,
-    req: u64,
-    /// the key's preference list (actor ids), resolved once per app op
-    targets: Vec<ProcId>,
-    /// servers that refused with WrongServer (deterministic: they will
-    /// never ack this key, so they are excluded from the serial round)
-    refused: Vec<ProcId>,
-    /// distinct servers that answered (usable replies)
-    replies: Vec<(ProcId, ServerReply)>,
-    round: u8,
-    started: Time,
-    /// merged version for the PUT phase
-    version: Option<VectorClock>,
+/// One in-progress app action: the scatter-gather bookkeeping of a single
+/// `Op` (a wave of one) or a `Batch` wave.
+struct Wave {
+    /// deliver as `LastResult::Op` rather than `Batch`
+    single: bool,
+    /// not-yet-issued operations, in submission order
+    pending: VecDeque<(usize, AppOp)>,
+    /// slot → completed (op, outcome)
+    results: Vec<Option<(AppOp, OpOutcome)>>,
+    /// calls currently multiplexed in `ClientActor::calls`
+    inflight: usize,
 }
 
 pub struct ClientActor {
@@ -68,10 +63,15 @@ pub struct ClientActor {
     router: Rc<Router>,
     cfg: ConsistencyCfg,
     timing: ClientTiming,
+    /// max concurrent quorum calls (1 = the paper's serial client)
+    depth: usize,
     app: Box<dyn AppLogic>,
-    inflight: Option<Inflight>,
-    /// op waiting out the client think time
-    stashed: Option<AppOp>,
+    /// open quorum calls, keyed by their *current* wire request id
+    calls: HashMap<u64, (usize, QuorumCall)>,
+    /// the app action being executed
+    wave: Option<Wave>,
+    /// wave waiting out the client think time
+    stashed: Option<(bool, Vec<AppOp>)>,
     /// think-timer generation (stale timers are ignored)
     think_seq: u64,
     next_req: u64,
@@ -85,15 +85,18 @@ pub struct ClientActor {
 }
 
 impl ClientActor {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         idx: u32,
         servers: Vec<ProcId>,
         router: Rc<Router>,
         cfg: ConsistencyCfg,
         timing: ClientTiming,
+        pipeline_depth: usize,
         app: Box<dyn AppLogic>,
         metrics: Metrics,
     ) -> Self {
+        assert!(pipeline_depth >= 1, "pipeline depth must be at least 1");
         assert!(
             servers.len() >= cfg.n,
             "cluster of {} servers cannot host N = {} replicas",
@@ -116,8 +119,10 @@ impl ClientActor {
             router,
             cfg,
             timing,
+            depth: pipeline_depth,
             app,
-            inflight: None,
+            calls: HashMap::new(),
+            wave: None,
             stashed: None,
             think_seq: 0,
             next_req: 1,
@@ -143,22 +148,11 @@ impl ClientActor {
         }
     }
 
-    fn broadcast(&mut self, ctx: &mut Ctx, targets: &[ProcId], req: u64, op: &ServerOp) {
+    /// Fan a wire op out to `targets`, sharing one payload allocation.
+    fn broadcast(&mut self, ctx: &mut Ctx, targets: &[ProcId], req: u64, op: ServerOp) {
+        let op = Rc::new(op);
         for &s in targets {
-            ctx.send(s, Msg::Request { req, op: op.clone(), hvc: self.seen_hvc.clone() });
-        }
-    }
-
-    fn wire_op(&self, phase: Phase, inflight: &Inflight) -> ServerOp {
-        match (phase, &inflight.app_op) {
-            (Phase::Get, AppOp::Get(k)) => ServerOp::Get(*k),
-            (Phase::GetVersion, AppOp::Put(k, _)) => ServerOp::GetVersion(*k),
-            (Phase::Put, AppOp::Put(k, v)) => ServerOp::Put {
-                key: *k,
-                version: inflight.version.clone().expect("version merged"),
-                value: v.clone(),
-            },
-            _ => unreachable!("phase/op mismatch"),
+            ctx.send(s, Msg::Request { req, op: Rc::clone(&op), hvc: self.seen_hvc.clone() });
         }
     }
 
@@ -171,57 +165,57 @@ impl ClientActor {
             .collect()
     }
 
-    fn start_app_op(&mut self, ctx: &mut Ctx, op: AppOp) {
-        let req = self.next_req;
-        self.next_req += 1;
-        let phase = match op {
-            AppOp::Get(_) => Phase::Get,
-            AppOp::Put(..) => Phase::GetVersion,
-        };
-        let targets = self.resolve_targets(&op);
-        let inflight = Inflight {
-            app_op: op,
-            phase,
-            req,
-            targets: targets.clone(),
-            refused: Vec::new(),
-            replies: Vec::new(),
-            round: 1,
-            started: ctx.now(),
-            version: None,
-        };
-        let wire = self.wire_op(phase, &inflight);
-        self.inflight = Some(inflight);
-        self.broadcast(ctx, &targets, req, &wire);
-        ctx.schedule(self.timing.timeout_round1, req);
-    }
-
-    /// Move a PUT from the version phase to the write phase (same key ⇒
-    /// same preference list).
-    fn start_put_phase(&mut self, ctx: &mut Ctx) {
-        let req = self.next_req;
-        self.next_req += 1;
-        let inflight = self.inflight.as_mut().unwrap();
-        inflight.phase = Phase::Put;
-        inflight.req = req;
-        inflight.refused.clear();
-        inflight.replies.clear();
-        inflight.round = 1;
-        let targets = inflight.targets.clone();
-        let wire = self.wire_op(Phase::Put, self.inflight.as_ref().unwrap());
-        self.broadcast(ctx, &targets, req, &wire);
-        ctx.schedule(self.timing.timeout_round1, req);
-    }
-
-    fn required(&self, phase: Phase) -> usize {
-        match phase {
-            Phase::Get | Phase::GetVersion => self.cfg.r,
-            Phase::Put => self.cfg.w,
+    /// Execute one engine step: send + arm the round timer, or finish.
+    fn apply_step(&mut self, ctx: &mut Ctx, key: u64, step: QuorumStep) {
+        match step {
+            QuorumStep::Wait => {}
+            QuorumStep::Send { req, to, op, round } => {
+                if req != key {
+                    // GET_VERSION → PUT switched to a fresh request id
+                    let call = self.calls.remove(&key).expect("re-keyed call");
+                    self.calls.insert(req, call);
+                }
+                self.broadcast(ctx, &to, req, op);
+                let timeout = if round == 1 {
+                    self.timing.timeout_round1
+                } else {
+                    self.timing.timeout_round2
+                };
+                ctx.schedule(timeout, req);
+            }
+            QuorumStep::Done(outcome) => {
+                let (slot, call) = self.calls.remove(&key).expect("finished call");
+                self.finish_call(ctx, slot, call, outcome);
+            }
         }
     }
 
-    fn complete(&mut self, ctx: &mut Ctx, outcome: OpOutcome) {
-        let inflight = self.inflight.take().expect("inflight");
+    /// Issue queued wave operations into free pipeline slots.
+    fn pump(&mut self, ctx: &mut Ctx) {
+        loop {
+            let (slot, op) = {
+                let Some(w) = self.wave.as_mut() else { return };
+                if w.inflight >= self.depth {
+                    return;
+                }
+                match w.pending.pop_front() {
+                    Some(next) => {
+                        w.inflight += 1;
+                        next
+                    }
+                    None => return,
+                }
+            };
+            let req = self.next_req;
+            self.next_req += 1;
+            let targets = self.resolve_targets(&op);
+            let (call, step) = QuorumCall::new(self.idx, self.cfg, op, req, targets, ctx.now());
+            self.calls.insert(req, (slot, call));
+            self.apply_step(ctx, req, step);
+        }
+    }
+
+    fn finish_call(&mut self, ctx: &mut Ctx, slot: usize, call: QuorumCall, outcome: OpOutcome) {
         match &outcome {
             OpOutcome::Failed => {
                 self.ops_failed += 1;
@@ -229,135 +223,92 @@ impl ClientActor {
             }
             _ => {
                 self.ops_ok += 1;
-                let latency = ctx.now() - inflight.started;
+                let latency = ctx.now() - call.started;
                 self.metrics.borrow_mut().record_app(self.idx as usize, ctx.now(), latency);
             }
         }
-        self.advance(ctx, Some((inflight.app_op, outcome)));
+        let complete = {
+            let w = self.wave.as_mut().expect("wave behind every call");
+            w.inflight -= 1;
+            w.results[slot] = Some((call.app_op, outcome));
+            w.inflight == 0 && w.pending.is_empty()
+        };
+        if complete {
+            let w = self.wave.take().expect("wave present");
+            let mut pairs: Vec<(AppOp, OpOutcome)> =
+                w.results.into_iter().map(|r| r.expect("every slot gathered")).collect();
+            let last = if w.single {
+                let (op, out) = pairs.pop().expect("single-op wave");
+                LastResult::Op(op, out)
+            } else {
+                LastResult::Batch(pairs)
+            };
+            self.advance(ctx, Some(last));
+        } else {
+            self.pump(ctx);
+        }
     }
 
-    fn advance(&mut self, ctx: &mut Ctx, last: Option<(AppOp, OpOutcome)>) {
+    fn advance(&mut self, ctx: &mut Ctx, last: Option<LastResult>) {
         let now = ctx.now();
         let idx = self.idx;
+        let depth = self.depth;
         let action = {
-            let mut env = AppEnv { now, client_idx: idx, rng: ctx.rng() };
+            let mut env = AppEnv { now, client_idx: idx, pipeline: depth, rng: ctx.rng() };
             self.app.next(&mut env, last)
         };
         match action {
-            AppAction::Op(op) => {
-                if self.timing.think > 0 {
-                    // model client-side processing between operations
-                    self.stashed = Some(op);
-                    self.think_seq += 1;
-                    ctx.schedule(self.timing.think, THINK_FLAG | self.think_seq);
-                } else {
-                    self.start_app_op(ctx, op);
-                }
+            AppAction::Op(op) => self.schedule_wave(ctx, true, vec![op]),
+            AppAction::Batch(ops) => {
+                assert!(!ops.is_empty(), "apps must not emit empty batches");
+                self.schedule_wave(ctx, false, ops);
             }
             AppAction::Sleep(d) => ctx.schedule(d, TAG_WAKE),
             AppAction::Done => self.done = true,
         }
     }
 
-    fn try_finish_phase(&mut self, ctx: &mut Ctx) {
-        let inflight = self.inflight.as_ref().unwrap();
-        let needed = self.required(inflight.phase);
-        if inflight.replies.len() < needed {
-            return;
+    fn schedule_wave(&mut self, ctx: &mut Ctx, single: bool, ops: Vec<AppOp>) {
+        if self.timing.think > 0 {
+            // model client-side processing between waves
+            self.stashed = Some((single, ops));
+            self.think_seq += 1;
+            ctx.schedule(self.timing.think, THINK_FLAG | self.think_seq);
+        } else {
+            self.start_wave(ctx, single, ops);
         }
-        match inflight.phase {
-            Phase::Get => {
-                let lists: Vec<Vec<Versioned>> = inflight
-                    .replies
-                    .iter()
-                    .filter_map(|(_, r)| match r {
-                        ServerReply::Values(v) => Some(v.clone()),
-                        _ => None,
-                    })
-                    .collect();
-                let merged = merge_siblings(lists);
-                self.complete(ctx, OpOutcome::GetOk(merged));
-            }
-            Phase::GetVersion => {
-                // merge every returned version; the write's version must
-                // dominate everything the read quorum has seen
-                let mut merged = VectorClock::new();
-                for (_, r) in &inflight.replies {
-                    if let ServerReply::Versions(vs) = r {
-                        for v in vs {
-                            merged = merged.merge(v);
-                        }
-                    }
-                }
-                merged.increment(self.idx);
-                self.inflight.as_mut().unwrap().version = Some(merged);
-                self.start_put_phase(ctx);
-            }
-            Phase::Put => {
-                self.complete(ctx, OpOutcome::PutOk);
-            }
-        }
+    }
+
+    fn start_wave(&mut self, ctx: &mut Ctx, single: bool, ops: Vec<AppOp>) {
+        let n = ops.len();
+        self.wave = Some(Wave {
+            single,
+            pending: ops.into_iter().enumerate().collect(),
+            results: (0..n).map(|_| None).collect(),
+            inflight: 0,
+        });
+        self.pump(ctx);
     }
 
     fn on_reply(&mut self, ctx: &mut Ctx, from: ProcId, req: u64, reply: ServerReply) {
-        let Some(inflight) = self.inflight.as_mut() else { return };
-        if inflight.req != req {
-            return; // stale reply from a previous phase/op
-        }
-        if matches!(reply, ServerReply::Frozen) {
-            return; // transient — the serial round may still succeed
-        }
-        if matches!(reply, ServerReply::WrongServer) {
-            // deterministic refusal: fail fast once the servers still able
-            // to ack cannot form the quorum
-            if !inflight.refused.contains(&from) {
-                inflight.refused.push(from);
-            }
-            let alive = inflight.targets.len() - inflight.refused.len();
-            let phase = inflight.phase;
-            if alive < self.required(phase) {
-                self.complete(ctx, OpOutcome::Failed);
-            }
-            return;
-        }
-        if inflight.replies.iter().any(|(s, _)| *s == from) {
-            return; // duplicate (second-round overlap)
-        }
-        inflight.replies.push((from, reply));
-        self.try_finish_phase(ctx);
+        let Some((_, call)) = self.calls.get_mut(&req) else {
+            return; // stale reply from a completed or aborted call
+        };
+        let next_req = &mut self.next_req;
+        let step = call.on_reply(from, req, reply, || {
+            let r = *next_req;
+            *next_req += 1;
+            r
+        });
+        self.apply_step(ctx, req, step);
     }
 
     fn on_timeout(&mut self, ctx: &mut Ctx, req: u64) {
-        let (cur_req, n_replies, phase, round) = match self.inflight.as_ref() {
-            Some(i) => (i.req, i.replies.len(), i.phase, i.round),
-            None => return,
-        };
-        if cur_req != req {
+        let Some((_, call)) = self.calls.get_mut(&req) else {
             return; // stale timer
-        }
-        if n_replies >= self.required(phase) {
-            return; // already finished (defensive)
-        }
-        let inflight = self.inflight.as_mut().unwrap();
-        let _ = round;
-        if inflight.round == 1 {
-            // serial second round: re-request from non-responders
-            inflight.round = 2;
-            let responded: Vec<ProcId> = inflight.replies.iter().map(|(s, _)| *s).collect();
-            let refused = inflight.refused.clone();
-            let targets: Vec<ProcId> = inflight
-                .targets
-                .iter()
-                .copied()
-                .filter(|s| !responded.contains(s) && !refused.contains(s))
-                .collect();
-            let phase = inflight.phase;
-            let wire = self.wire_op(phase, self.inflight.as_ref().unwrap());
-            self.broadcast(ctx, &targets, req, &wire);
-            ctx.schedule(self.timing.timeout_round2, req);
-        } else {
-            self.complete(ctx, OpOutcome::Failed);
-        }
+        };
+        let step = call.on_timeout(req);
+        self.apply_step(ctx, req, step);
     }
 }
 
@@ -376,12 +327,15 @@ impl Actor for ClientActor {
                 let abort = {
                     let now = ctx.now();
                     let idx = self.idx;
-                    let mut env = AppEnv { now, client_idx: idx, rng: ctx.rng() };
+                    let depth = self.depth;
+                    let mut env = AppEnv { now, client_idx: idx, pipeline: depth, rng: ctx.rng() };
                     self.app.on_violation(&mut env, t_violate_ms)
                 };
                 if abort && !self.done {
                     self.restarts += 1;
-                    self.inflight = None; // outstanding replies/timers go stale
+                    // outstanding replies/timers go stale with their calls
+                    self.calls.clear();
+                    self.wave = None;
                     self.stashed = None;
                     self.think_seq += 1; // pending think timers go stale too
                     self.advance(ctx, None);
@@ -394,14 +348,17 @@ impl Actor for ClientActor {
     fn on_timer(&mut self, ctx: &mut Ctx, tag: u64) {
         if tag & THINK_FLAG != 0 {
             if (tag & !THINK_FLAG) == self.think_seq {
-                if let Some(op) = self.stashed.take() {
+                if let Some((single, ops)) = self.stashed.take() {
                     if !self.done {
-                        self.start_app_op(ctx, op);
+                        self.start_wave(ctx, single, ops);
                     }
                 }
             }
         } else if tag == TAG_WAKE {
-            if !self.done && self.inflight.is_none() {
+            // a wake is stale if a wave is running OR one is parked behind
+            // a think timer (e.g. an abort re-planned the next wave while
+            // an old Sleep(0) was still queued)
+            if !self.done && self.wave.is_none() && self.stashed.is_none() {
                 self.advance(ctx, None);
             }
         } else {
@@ -418,9 +375,9 @@ impl Actor for ClientActor {
 mod tests {
     use super::*;
     use crate::store::ring::{Ring, Router};
-    use crate::store::value::{Interner, Value};
+    use crate::store::value::Interner;
 
-    fn test_client(cluster: usize, cfg: ConsistencyCfg) -> ClientActor {
+    fn test_client(cluster: usize, cfg: ConsistencyCfg, depth: usize) -> ClientActor {
         let interner = Interner::new();
         let router = Router::new(Ring::new(cluster, cfg.n, 8, 1), interner);
         ClientActor::new(
@@ -429,36 +386,10 @@ mod tests {
             router,
             cfg,
             ClientTiming::default(),
+            depth,
             Box::new(crate::client::app::ScriptApp::new(vec![])),
             crate::metrics::throughput::MetricsHub::new(cluster, 1),
         )
-    }
-
-    #[test]
-    fn wire_op_mapping() {
-        // phase/op translation is pure; exercised without a sim
-        let client = test_client(3, ConsistencyCfg::n3r1w1());
-        let inf = Inflight {
-            app_op: AppOp::Put(crate::store::value::KeyId(4), Value::Int(9)),
-            phase: Phase::GetVersion,
-            req: 1,
-            targets: vec![ProcId(0), ProcId(1), ProcId(2)],
-            refused: vec![],
-            replies: vec![],
-            round: 1,
-            started: 0,
-            version: Some(VectorClock::new().incremented(0)),
-        };
-        assert!(matches!(client.wire_op(Phase::GetVersion, &inf), ServerOp::GetVersion(_)));
-        assert!(matches!(client.wire_op(Phase::Put, &inf), ServerOp::Put { .. }));
-    }
-
-    #[test]
-    fn required_quorums() {
-        let client = test_client(3, ConsistencyCfg::n3r2w2());
-        assert_eq!(client.required(Phase::Get), 2);
-        assert_eq!(client.required(Phase::GetVersion), 2);
-        assert_eq!(client.required(Phase::Put), 2);
     }
 
     #[test]
@@ -473,11 +404,41 @@ mod tests {
             router,
             cfg,
             ClientTiming::default(),
+            1,
             Box::new(crate::client::app::ScriptApp::new(vec![])),
             crate::metrics::throughput::MetricsHub::new(12, 1),
         );
         let targets = client.resolve_targets(&AppOp::Get(key));
         assert_eq!(targets.len(), 3, "N = 3 replicas out of 12 servers");
         assert!(targets.iter().all(|p| p.0 < 12));
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline depth")]
+    fn zero_depth_rejected() {
+        let _ = test_client(3, ConsistencyCfg::n3r1w1(), 0);
+    }
+
+    #[test]
+    fn wave_bookkeeping_shapes() {
+        // pure structure check: a batch wave gathers slots in submission
+        // order regardless of completion order
+        let mut w = Wave {
+            single: false,
+            pending: VecDeque::new(),
+            results: vec![None, None],
+            inflight: 2,
+        };
+        w.results[1] = Some((AppOp::Get(crate::store::value::KeyId(2)), OpOutcome::PutOk));
+        w.inflight -= 1;
+        w.results[0] = Some((AppOp::Get(crate::store::value::KeyId(1)), OpOutcome::PutOk));
+        w.inflight -= 1;
+        assert_eq!(w.inflight, 0);
+        let keys: Vec<u32> = w
+            .results
+            .into_iter()
+            .map(|r| r.unwrap().0.key().0)
+            .collect();
+        assert_eq!(keys, vec![1, 2], "gather preserves submission order");
     }
 }

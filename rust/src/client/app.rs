@@ -1,6 +1,8 @@
-//! The application interface: apps are state machines that the client
-//! actor drives one store operation at a time (closed loop, as in the
-//! paper's client processes).
+//! The application interface: apps are state machines the client actor
+//! drives through store operations — one at a time (closed loop, as in
+//! the paper's client processes), or, when the client pipeline is enabled
+//! (`pipeline_depth > 1`), a *batch* of independent operations issued as
+//! one scatter-gather wave.
 
 use crate::clock::hvc::Millis;
 use crate::sim::Time;
@@ -43,9 +45,36 @@ impl OpOutcome {
 /// What the app wants next.
 #[derive(Debug, Clone)]
 pub enum AppAction {
+    /// one operation, result delivered as [`LastResult::Op`]
     Op(AppOp),
+    /// independent operations issued concurrently (scatter), with every
+    /// outcome delivered together as [`LastResult::Batch`] once the last
+    /// one completes (gather). Must be non-empty. With `pipeline_depth`
+    /// = 1 the wave degrades gracefully to sequential issue, so apps
+    /// should only emit batches when `AppEnv::pipelined()` says the
+    /// client can exploit them.
+    Batch(Vec<AppOp>),
     Sleep(Time),
     Done,
+}
+
+/// The completed previous action, fed back into [`AppLogic::next`].
+#[derive(Debug, Clone)]
+pub enum LastResult {
+    /// outcome of an [`AppAction::Op`]
+    Op(AppOp, OpOutcome),
+    /// outcomes of an [`AppAction::Batch`], in submission order
+    Batch(Vec<(AppOp, OpOutcome)>),
+}
+
+impl LastResult {
+    /// All `(op, outcome)` pairs, whatever the action shape was.
+    pub fn into_pairs(self) -> Vec<(AppOp, OpOutcome)> {
+        match self {
+            LastResult::Op(op, out) => vec![(op, out)],
+            LastResult::Batch(pairs) => pairs,
+        }
+    }
 }
 
 /// Ambient facilities passed into app callbacks.
@@ -53,16 +82,28 @@ pub struct AppEnv<'a> {
     pub rng: &'a mut Rng,
     pub now: Time,
     pub client_idx: u32,
+    /// the client's `pipeline_depth`: how many quorum calls it can keep
+    /// in flight. 1 = the paper's serial closed-loop client.
+    pub pipeline: usize,
+}
+
+impl AppEnv<'_> {
+    /// Can the client overlap independent operations? Apps use this to
+    /// choose between the serial paths (which reproduce the paper's
+    /// closed-loop runs exactly) and scatter-gather batches.
+    pub fn pipelined(&self) -> bool {
+        self.pipeline > 1
+    }
 }
 
 pub trait AppLogic {
-    /// Called with the outcome of the previous op (None on first call /
+    /// Called with the result of the previous action (None on first call /
     /// after a restart) — returns the next action.
-    fn next(&mut self, env: &mut AppEnv, last: Option<(AppOp, OpOutcome)>) -> AppAction;
+    fn next(&mut self, env: &mut AppEnv, last: Option<LastResult>) -> AppAction;
 
     /// A violation was reported (rollback controller broadcast). Return
-    /// true to abort the in-flight op and restart via `next(None)` — the
-    /// paper's task abort-and-restart recovery for graph apps.
+    /// true to abort the in-flight action and restart via `next(None)` —
+    /// the paper's task abort-and-restart recovery for graph apps.
     fn on_violation(&mut self, _env: &mut AppEnv, _t_violate_ms: Millis) -> bool {
         false
     }
@@ -87,9 +128,9 @@ impl ScriptApp {
 }
 
 impl AppLogic for ScriptApp {
-    fn next(&mut self, _env: &mut AppEnv, last: Option<(AppOp, OpOutcome)>) -> AppAction {
-        if let Some((_, outcome)) = last {
-            self.outcomes.push(outcome);
+    fn next(&mut self, _env: &mut AppEnv, last: Option<LastResult>) -> AppAction {
+        if let Some(res) = last {
+            self.outcomes.extend(res.into_pairs().into_iter().map(|(_, o)| o));
         }
         if self.pos < self.script.len() {
             let op = self.script[self.pos].clone();

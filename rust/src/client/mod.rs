@@ -1,6 +1,18 @@
-//! The store client: N/R/W quorum engine (client-side replication, as in
-//! Voldemort), consistency presets (Table II), and the app interface.
+//! The store client, split into three layers:
+//!
+//! * [`quorum`] — the transport-agnostic N/R/W quorum engine: one
+//!   [`quorum::QuorumCall`] per application operation, every transition a
+//!   pure function (broadcast → parallel phase → serial round 2 →
+//!   success/fail, `WrongServer` fast-fail, duplicate/stale dedup);
+//! * [`actor`] — the thin multiplexer that runs up to `pipeline_depth`
+//!   concurrent calls keyed by request id, turns engine steps into wire
+//!   messages/timers, and drives the application;
+//! * [`app`] — the application interface: closed-loop single ops plus
+//!   [`app::AppAction::Batch`] scatter-gather waves for pipelined runs.
+//!
+//! [`consistency`] holds the N/R/W presets (Table II) and client timing.
 
 pub mod actor;
 pub mod app;
 pub mod consistency;
+pub mod quorum;

@@ -1,0 +1,456 @@
+//! The N/R/W quorum state machine, extracted from the client actor as a
+//! *transport-agnostic* engine (§II-B, §VI-A):
+//!
+//! * **parallel phase** — broadcast to the key's whole preference list,
+//!   wait for R (GET / GET_VERSION) or W (PUT) distinct acknowledgements;
+//! * **serial phase** — on timeout, one more round to the servers that
+//!   have not responded; if the quorum is still not met, the op fails;
+//! * an application PUT is GET_VERSION (quorum R) followed by PUT
+//!   (quorum W) with the merged, incremented vector clock (§VI-A);
+//! * `WrongServer` refusals are deterministic, so the call *fast-fails*
+//!   the moment the servers still able to ack cannot form a quorum;
+//! * duplicate replies (first-round stragglers overlapping the serial
+//!   round) and stale replies/timers from a previous request id are
+//!   ignored.
+//!
+//! Every transition is a pure function from `(state, event)` to
+//! `(state', QuorumStep)` — no simulator context, no message sending, no
+//! timers. The client actor ([`crate::client::actor`]) is the transport:
+//! it turns [`QuorumStep::Send`] into wire messages plus a timeout timer
+//! and multiplexes up to `pipeline_depth` concurrent calls. This split is
+//! what the transport-free unit tests below exercise.
+
+use crate::client::app::{AppOp, OpOutcome};
+use crate::client::consistency::ConsistencyCfg;
+use crate::clock::vc::VectorClock;
+use crate::sim::{ProcId, Time};
+use crate::store::protocol::{ServerOp, ServerReply};
+use crate::store::value::{merge_siblings, Versioned};
+
+/// Which wire operation the call is currently waiting on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuorumPhase {
+    Get,
+    GetVersion,
+    Put,
+}
+
+/// What the transport must do after feeding an event into the engine.
+#[derive(Debug)]
+pub enum QuorumStep {
+    /// nothing to do — keep waiting for replies or the timer
+    Wait,
+    /// send `op` to every server in `to` under request id `req` and arm
+    /// the round-`round` timeout (round 1 = parallel phase, round 2 =
+    /// serial phase)
+    Send { req: u64, to: Vec<ProcId>, op: ServerOp, round: u8 },
+    /// the call is finished; the engine holds no further state for it
+    Done(OpOutcome),
+}
+
+/// One application operation moving through the quorum protocol.
+///
+/// An `AppOp::Get` is a single `Get` phase; an `AppOp::Put` chains
+/// `GetVersion` (quorum R) into `Put` (quorum W), consuming a fresh
+/// request id for the write phase so late version replies cannot be
+/// mistaken for write acks.
+pub struct QuorumCall {
+    /// the vector-clock node id stamped into merged write versions
+    client_idx: u32,
+    cfg: ConsistencyCfg,
+    /// the application-level operation this call executes
+    pub app_op: AppOp,
+    phase: QuorumPhase,
+    /// current wire request id (changes at the GET_VERSION → PUT switch)
+    req: u64,
+    /// the key's preference list, resolved once by the transport
+    targets: Vec<ProcId>,
+    /// servers that refused with WrongServer (deterministic: they will
+    /// never ack this key, so they are excluded from the serial round)
+    refused: Vec<ProcId>,
+    /// distinct servers that answered (usable replies), in arrival order
+    replies: Vec<(ProcId, ServerReply)>,
+    round: u8,
+    /// when the transport issued the call (for latency metrics)
+    pub started: Time,
+    /// merged version for the PUT phase
+    version: Option<VectorClock>,
+}
+
+impl QuorumCall {
+    /// Begin a call: returns the engine plus the round-1 broadcast.
+    pub fn new(
+        client_idx: u32,
+        cfg: ConsistencyCfg,
+        app_op: AppOp,
+        req: u64,
+        targets: Vec<ProcId>,
+        started: Time,
+    ) -> (Self, QuorumStep) {
+        let phase = match app_op {
+            AppOp::Get(_) => QuorumPhase::Get,
+            AppOp::Put(..) => QuorumPhase::GetVersion,
+        };
+        let call = Self {
+            client_idx,
+            cfg,
+            app_op,
+            phase,
+            req,
+            targets,
+            refused: Vec::new(),
+            replies: Vec::new(),
+            round: 1,
+            started,
+            version: None,
+        };
+        let step = QuorumStep::Send {
+            req,
+            to: call.targets.clone(),
+            op: call.wire_op(),
+            round: 1,
+        };
+        (call, step)
+    }
+
+    pub fn req(&self) -> u64 {
+        self.req
+    }
+
+    pub fn phase(&self) -> QuorumPhase {
+        self.phase
+    }
+
+    /// Acks required to finish the current phase.
+    fn required(&self) -> usize {
+        match self.phase {
+            QuorumPhase::Get | QuorumPhase::GetVersion => self.cfg.r,
+            QuorumPhase::Put => self.cfg.w,
+        }
+    }
+
+    /// The wire operation of the current phase.
+    fn wire_op(&self) -> ServerOp {
+        match (self.phase, &self.app_op) {
+            (QuorumPhase::Get, AppOp::Get(k)) => ServerOp::Get(*k),
+            (QuorumPhase::GetVersion, AppOp::Put(k, _)) => ServerOp::GetVersion(*k),
+            (QuorumPhase::Put, AppOp::Put(k, v)) => ServerOp::Put {
+                key: *k,
+                version: self.version.clone().expect("version merged"),
+                value: v.clone(),
+            },
+            _ => unreachable!("phase/op mismatch"),
+        }
+    }
+
+    /// A reply arrived. `next_req` allocates the write-phase request id
+    /// and is invoked only at the GET_VERSION → PUT transition.
+    pub fn on_reply(
+        &mut self,
+        from: ProcId,
+        req: u64,
+        reply: ServerReply,
+        next_req: impl FnOnce() -> u64,
+    ) -> QuorumStep {
+        if self.req != req {
+            return QuorumStep::Wait; // stale reply from a previous phase
+        }
+        if matches!(reply, ServerReply::Frozen) {
+            return QuorumStep::Wait; // transient — the serial round may still succeed
+        }
+        if matches!(reply, ServerReply::WrongServer) {
+            // deterministic refusal: fail fast once the servers still able
+            // to ack cannot form the quorum
+            if !self.refused.contains(&from) {
+                self.refused.push(from);
+            }
+            let alive = self.targets.len() - self.refused.len();
+            if alive < self.required() {
+                return QuorumStep::Done(OpOutcome::Failed);
+            }
+            return QuorumStep::Wait;
+        }
+        if self.replies.iter().any(|(s, _)| *s == from) {
+            return QuorumStep::Wait; // duplicate (second-round overlap)
+        }
+        self.replies.push((from, reply));
+        if self.replies.len() < self.required() {
+            return QuorumStep::Wait;
+        }
+        match self.phase {
+            QuorumPhase::Get => {
+                let lists: Vec<Vec<Versioned>> = self
+                    .replies
+                    .iter()
+                    .filter_map(|(_, r)| match r {
+                        ServerReply::Values(v) => Some(v.clone()),
+                        _ => None,
+                    })
+                    .collect();
+                QuorumStep::Done(OpOutcome::GetOk(merge_siblings(lists)))
+            }
+            QuorumPhase::GetVersion => {
+                // merge every returned version; the write's version must
+                // dominate everything the read quorum has seen
+                let mut merged = VectorClock::new();
+                for (_, r) in &self.replies {
+                    if let ServerReply::Versions(vs) = r {
+                        for v in vs {
+                            merged = merged.merge(v);
+                        }
+                    }
+                }
+                merged.increment(self.client_idx);
+                self.version = Some(merged);
+                // write phase under a fresh request id (same key ⇒ same
+                // preference list)
+                self.phase = QuorumPhase::Put;
+                self.req = next_req();
+                self.refused.clear();
+                self.replies.clear();
+                self.round = 1;
+                QuorumStep::Send {
+                    req: self.req,
+                    to: self.targets.clone(),
+                    op: self.wire_op(),
+                    round: 1,
+                }
+            }
+            QuorumPhase::Put => QuorumStep::Done(OpOutcome::PutOk),
+        }
+    }
+
+    /// The round timer fired.
+    pub fn on_timeout(&mut self, req: u64) -> QuorumStep {
+        if self.req != req {
+            return QuorumStep::Wait; // stale timer
+        }
+        if self.replies.len() >= self.required() {
+            return QuorumStep::Wait; // already finished (defensive)
+        }
+        if self.round == 1 {
+            // serial second round: re-request from non-responders
+            self.round = 2;
+            let to: Vec<ProcId> = self
+                .targets
+                .iter()
+                .copied()
+                .filter(|s| {
+                    !self.replies.iter().any(|(r, _)| r == s) && !self.refused.contains(s)
+                })
+                .collect();
+            QuorumStep::Send { req: self.req, to, op: self.wire_op(), round: 2 }
+        } else {
+            QuorumStep::Done(OpOutcome::Failed)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::value::{KeyId, Value};
+
+    fn targets(n: usize) -> Vec<ProcId> {
+        (0..n as u32).map(ProcId).collect()
+    }
+
+    fn values_reply(v: i64, node: u32) -> ServerReply {
+        ServerReply::Values(vec![Versioned::new(
+            VectorClock::new().incremented(node),
+            Value::Int(v),
+        )])
+    }
+
+    fn no_req() -> u64 {
+        panic!("next_req must not be called here")
+    }
+
+    #[test]
+    fn get_completes_at_r_distinct_replies() {
+        let cfg = ConsistencyCfg::n3r2w2();
+        let (mut call, step) =
+            QuorumCall::new(0, cfg, AppOp::Get(KeyId(1)), 1, targets(3), 0);
+        match step {
+            QuorumStep::Send { req: 1, ref to, op: ServerOp::Get(_), round: 1 } => {
+                assert_eq!(to.len(), 3, "parallel phase hits the whole preference list");
+            }
+            other => panic!("unexpected step {other:?}"),
+        }
+        assert!(matches!(
+            call.on_reply(ProcId(0), 1, values_reply(5, 7), no_req),
+            QuorumStep::Wait
+        ));
+        match call.on_reply(ProcId(2), 1, values_reply(5, 7), no_req) {
+            QuorumStep::Done(OpOutcome::GetOk(sibs)) => assert_eq!(sibs.len(), 1),
+            other => panic!("unexpected step {other:?}"),
+        }
+    }
+
+    #[test]
+    fn put_chains_version_then_write_under_fresh_req() {
+        let cfg = ConsistencyCfg::n3r1w3();
+        let (mut call, _) =
+            QuorumCall::new(4, cfg, AppOp::Put(KeyId(2), Value::Int(9)), 1, targets(3), 0);
+        assert_eq!(call.phase(), QuorumPhase::GetVersion);
+        let step = call.on_reply(
+            ProcId(1),
+            1,
+            ServerReply::Versions(vec![VectorClock::new().incremented(0)]),
+            || 2,
+        );
+        match step {
+            QuorumStep::Send { req: 2, ref to, op: ServerOp::Put { ref version, .. }, round: 1 } => {
+                assert_eq!(to.len(), 3);
+                // merged version dominates the read and carries our entry
+                assert_eq!(version.get(0), 1);
+                assert_eq!(version.get(4), 1);
+            }
+            other => panic!("unexpected step {other:?}"),
+        }
+        assert_eq!(call.req(), 2);
+        assert_eq!(call.phase(), QuorumPhase::Put);
+        // late version replies under the old request id are stale
+        assert!(matches!(
+            call.on_reply(ProcId(0), 1, ServerReply::Versions(vec![]), no_req),
+            QuorumStep::Wait
+        ));
+        // W = 3: two acks wait, the third finishes
+        assert!(matches!(
+            call.on_reply(ProcId(0), 2, ServerReply::PutAck, no_req),
+            QuorumStep::Wait
+        ));
+        assert!(matches!(
+            call.on_reply(ProcId(1), 2, ServerReply::PutAck, no_req),
+            QuorumStep::Wait
+        ));
+        assert!(matches!(
+            call.on_reply(ProcId(2), 2, ServerReply::PutAck, no_req),
+            QuorumStep::Done(OpOutcome::PutOk)
+        ));
+    }
+
+    #[test]
+    fn serial_round_retries_only_non_responders() {
+        let cfg = ConsistencyCfg::n3r1w3();
+        let (mut call, _) =
+            QuorumCall::new(0, cfg, AppOp::Put(KeyId(3), Value::Int(1)), 1, targets(3), 0);
+        let _ = call.on_reply(ProcId(0), 1, ServerReply::Versions(vec![]), || 2);
+        // write phase: only server 1 acks in round 1
+        let _ = call.on_reply(ProcId(1), 2, ServerReply::PutAck, no_req);
+        match call.on_timeout(2) {
+            QuorumStep::Send { req: 2, ref to, round: 2, .. } => {
+                assert_eq!(*to, vec![ProcId(0), ProcId(2)], "responders are not re-asked");
+            }
+            other => panic!("unexpected step {other:?}"),
+        }
+        // stragglers from both rounds land; quorum completes
+        let _ = call.on_reply(ProcId(0), 2, ServerReply::PutAck, no_req);
+        assert!(matches!(
+            call.on_reply(ProcId(2), 2, ServerReply::PutAck, no_req),
+            QuorumStep::Done(OpOutcome::PutOk)
+        ));
+    }
+
+    #[test]
+    fn second_timeout_fails_the_call() {
+        let cfg = ConsistencyCfg::n3r2w2();
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(4)), 7, targets(3), 0);
+        assert!(matches!(call.on_timeout(7), QuorumStep::Send { round: 2, .. }));
+        assert!(matches!(
+            call.on_timeout(7),
+            QuorumStep::Done(OpOutcome::Failed)
+        ));
+    }
+
+    #[test]
+    fn wrong_server_fast_fails_once_quorum_impossible() {
+        let cfg = ConsistencyCfg::n3r2w2();
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(5)), 1, targets(3), 0);
+        // one refusal leaves 2 ≥ R=2 alive — keep going
+        assert!(matches!(
+            call.on_reply(ProcId(0), 1, ServerReply::WrongServer, no_req),
+            QuorumStep::Wait
+        ));
+        // the same server refusing again is not double-counted
+        assert!(matches!(
+            call.on_reply(ProcId(0), 1, ServerReply::WrongServer, no_req),
+            QuorumStep::Wait
+        ));
+        // a second distinct refusal leaves 1 < R=2 — fail immediately,
+        // without waiting out both timeout rounds
+        assert!(matches!(
+            call.on_reply(ProcId(1), 1, ServerReply::WrongServer, no_req),
+            QuorumStep::Done(OpOutcome::Failed)
+        ));
+    }
+
+    #[test]
+    fn refused_servers_are_excluded_from_the_serial_round() {
+        let cfg = ConsistencyCfg::n3r2w2();
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(6)), 1, targets(3), 0);
+        let _ = call.on_reply(ProcId(1), 1, ServerReply::WrongServer, no_req);
+        match call.on_timeout(1) {
+            QuorumStep::Send { ref to, round: 2, .. } => {
+                assert_eq!(*to, vec![ProcId(0), ProcId(2)], "refusers are never re-asked");
+            }
+            other => panic!("unexpected step {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_replies_from_round_overlap_are_deduped() {
+        let cfg = ConsistencyCfg::n3r2w2();
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(7)), 1, targets(3), 0);
+        let _ = call.on_reply(ProcId(0), 1, values_reply(1, 0), no_req);
+        // round-2 re-send overlaps a straggling first answer: same server
+        // must not count twice toward R = 2
+        assert!(matches!(
+            call.on_reply(ProcId(0), 1, values_reply(1, 0), no_req),
+            QuorumStep::Wait
+        ));
+        assert!(matches!(
+            call.on_reply(ProcId(2), 1, values_reply(1, 0), no_req),
+            QuorumStep::Done(OpOutcome::GetOk(_))
+        ));
+    }
+
+    #[test]
+    fn frozen_replies_do_not_count_toward_the_quorum() {
+        let cfg = ConsistencyCfg::n3r1w1();
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(8)), 1, targets(3), 0);
+        assert!(matches!(
+            call.on_reply(ProcId(0), 1, ServerReply::Frozen, no_req),
+            QuorumStep::Wait
+        ));
+        assert!(matches!(
+            call.on_reply(ProcId(0), 1, values_reply(2, 0), no_req),
+            QuorumStep::Done(OpOutcome::GetOk(_))
+        ));
+    }
+
+    #[test]
+    fn stale_request_ids_are_ignored() {
+        let cfg = ConsistencyCfg::n3r1w1();
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(9)), 5, targets(3), 0);
+        assert!(matches!(
+            call.on_reply(ProcId(0), 4, values_reply(1, 0), no_req),
+            QuorumStep::Wait
+        ));
+        assert!(matches!(call.on_timeout(4), QuorumStep::Wait));
+        // the real reply still completes
+        assert!(matches!(
+            call.on_reply(ProcId(0), 5, values_reply(1, 0), no_req),
+            QuorumStep::Done(OpOutcome::GetOk(_))
+        ));
+    }
+
+    #[test]
+    fn late_quorum_timer_is_a_noop() {
+        let cfg = ConsistencyCfg::n3r1w1();
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(10)), 1, targets(3), 0);
+        let _ = call.on_reply(ProcId(1), 1, values_reply(3, 1), no_req);
+        // quorum already met when the round-1 timer fires (defensive)
+        assert!(matches!(call.on_timeout(1), QuorumStep::Wait));
+    }
+}

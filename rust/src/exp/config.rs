@@ -64,6 +64,11 @@ pub struct ExpConfig {
     /// varying `seed` re-randomizes the workload, not the partitioning)
     pub ring_seed: u64,
     pub n_clients: usize,
+    /// max quorum calls a client keeps in flight. 1 (the default)
+    /// reproduces the paper's serial closed-loop client bit-identically;
+    /// larger depths let the apps scatter-gather independent operations
+    /// ([`crate::client::app::AppAction::Batch`]).
+    pub pipeline_depth: usize,
     /// monitoring module enabled?
     pub monitors: bool,
     pub recovery: RecoveryPolicy,
@@ -96,6 +101,7 @@ impl ExpConfig {
             ring_vnodes: crate::store::ring::DEFAULT_VNODES,
             ring_seed: crate::store::ring::DEFAULT_RING_SEED,
             n_clients: 15,
+            pipeline_depth: 1,
             monitors: true,
             recovery: RecoveryPolicy::NotifyClients,
             topo: TopoKind::AwsGlobal,
@@ -111,6 +117,13 @@ impl ExpConfig {
             drop_prob: 0.0,
             accel: AccelKind::Native,
         }
+    }
+
+    /// Let every client keep up to `depth` quorum calls in flight.
+    pub fn with_pipeline_depth(mut self, depth: usize) -> Self {
+        assert!(depth >= 1, "pipeline depth must be at least 1");
+        self.pipeline_depth = depth;
+        self
     }
 
     /// Scale the cluster out to `servers` total servers (N unchanged).
@@ -171,6 +184,7 @@ mod tests {
         );
         assert_eq!(cfg.n_servers(), 3, "cluster size defaults to N");
         assert_eq!(cfg.cluster_servers, cfg.consistency.n);
+        assert_eq!(cfg.pipeline_depth, 1, "the paper's client is serial");
         assert_eq!(cfg.server_threads, 2);
         assert_eq!(cfg.eps_ms, EPS_INF, "paper treats eps as infinity");
         assert_eq!(cfg.n_regions(), 3);
@@ -190,6 +204,28 @@ mod tests {
         let ring = cfg.build_ring();
         assert_eq!(ring.n_servers(), 12);
         assert_eq!(ring.n_replicas(), 3);
+    }
+
+    #[test]
+    fn pipeline_depth_builder() {
+        let cfg = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Conjunctive { n_preds: 1, n_conjuncts: 1, beta: 0.0, put_pct: 0.5 },
+        )
+        .with_pipeline_depth(8);
+        assert_eq!(cfg.pipeline_depth, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline depth")]
+    fn zero_pipeline_depth_rejected() {
+        let _ = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Conjunctive { n_preds: 1, n_conjuncts: 1, beta: 0.0, put_pct: 0.5 },
+        )
+        .with_pipeline_depth(0);
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub struct ExpResult {
     pub app_tps: f64,
     /// stable-phase aggregated throughput, server perspective (ops/s)
     pub server_tps: f64,
+    /// client-perspective op latency percentiles (ms) — the axis a
+    /// pipeline-depth sweep trades against throughput
+    pub lat_p50_ms: f64,
+    pub lat_p99_ms: f64,
     pub violations_detected: usize,
     pub actual_me_violations: usize,
     /// detection latencies (ms) of every reported violation
@@ -182,6 +186,7 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
             router.clone(),
             cfg.consistency,
             cfg.timing,
+            cfg.pipeline_depth,
             app,
             metrics.clone(),
         )));
@@ -205,6 +210,10 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
             m.violations.len(),
             m.violations.iter().map(|v| v.detection_latency_ms()).collect::<Vec<f64>>(),
         )
+    };
+    let (lat_p50_ms, lat_p99_ms) = {
+        let ps = metrics.borrow().op_latency_percentiles_ms(&[50.0, 99.0]);
+        (ps[0], ps[1])
     };
     let mut candidates_seen = 0;
     let mut pairs_checked = 0;
@@ -244,6 +253,8 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
         oracle,
         app_tps,
         server_tps,
+        lat_p50_ms,
+        lat_p99_ms,
         violations_detected,
         actual_me_violations,
         detection_latencies_ms,
@@ -308,6 +319,39 @@ mod tests {
         assert_eq!(a.ops_ok, b.ops_ok);
         assert_eq!(a.violations_detected, b.violations_detected);
         assert_eq!(a.app_tps, b.app_tps);
+    }
+
+    #[test]
+    fn depth_one_reproduces_the_serial_client_run_for_run() {
+        // `pipeline_depth = 1` is the paper's closed-loop client: setting
+        // the knob explicitly must change nothing about the default run —
+        // same ops, same violations, same throughput, same event schedule
+        let a = run(&small_conj(ConsistencyCfg::n3r1w1(), true));
+        let b = run(&small_conj(ConsistencyCfg::n3r1w1(), true).with_pipeline_depth(1));
+        assert_eq!(a.ops_ok, b.ops_ok);
+        assert_eq!(a.ops_failed, b.ops_failed);
+        assert_eq!(a.violations_detected, b.violations_detected);
+        assert_eq!(a.app_tps, b.app_tps);
+        assert_eq!(a.sim_stats.events, b.sim_stats.events, "identical event schedules");
+    }
+
+    #[test]
+    fn pipelined_run_overlaps_ops_and_still_detects() {
+        let res = run(&small_conj(ConsistencyCfg::n3r1w1(), true).with_pipeline_depth(4));
+        assert!(res.ops_ok > 100, "clients made progress: {}", res.ops_ok);
+        assert!(res.candidates_seen > 0, "candidates still flow when pipelined");
+        assert!(res.violations_detected > 0, "detection survives op overlap");
+    }
+
+    #[test]
+    fn pipelined_deterministic_under_seed() {
+        let mk = || small_conj(ConsistencyCfg::n3r1w1(), true).with_pipeline_depth(4);
+        let a = run(&mk());
+        let b = run(&mk());
+        assert_eq!(a.ops_ok, b.ops_ok);
+        assert_eq!(a.violations_detected, b.violations_detected);
+        assert_eq!(a.app_tps, b.app_tps);
+        assert_eq!(a.sim_stats.events, b.sim_stats.events);
     }
 
     #[test]

@@ -204,6 +204,40 @@ pub fn scaleout_conjunctive(cluster_servers: usize, scale: f64, seed: u64) -> Ex
     cfg
 }
 
+/// The depths the pipeline sweep exercises (1 = the paper's serial
+/// closed-loop client).
+pub const PIPELINE_DEPTHS: [usize; 4] = [1, 2, 4, 8];
+
+/// Pipeline depth sweep: Social Media Analysis coloring with *thin*
+/// clients (no think time) on the AWS global topology, N3R1W1, so the
+/// round-trip latency of the `deg(v)` neighbor reads — not client-side
+/// compute — bounds throughput. At depth 1 this is the serial client;
+/// deeper clients scatter-gather each node's reads (and each task's
+/// deferred commits) in one wave. Few clients, so the sweep measures the
+/// *per-client* pipeline win rather than aggregate server scaling (that
+/// axis is `scaleout_conjunctive`).
+pub fn pipeline_coloring(depth: usize, n_clients: usize, scale: f64, seed: u64) -> ExpConfig {
+    assert!(n_clients >= 1);
+    let mut cfg = ExpConfig::new(
+        &format!("pipeline-d{depth}-c{n_clients}-coloring"),
+        ConsistencyCfg::n3r1w1(),
+        AppKind::Coloring {
+            nodes: ((8_000.0 * scale) as usize).max(240),
+            edges_per_node: 3,
+            task_size: 10,
+            loop_forever: true,
+        },
+    )
+    .with_pipeline_depth(depth);
+    cfg.n_clients = n_clients;
+    cfg.monitors = true;
+    cfg.topo = TopoKind::AwsGlobal;
+    cfg.duration = dur(scale, 120);
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::default(); // thin clients: latency-bound
+    cfg
+}
+
 /// The paper's Table II consistency presets for N = 3 and N = 5.
 pub fn table2_n3() -> [ConsistencyCfg; 3] {
     [ConsistencyCfg::n3r1w3(), ConsistencyCfg::n3r2w2(), ConsistencyCfg::n3r1w1()]
@@ -261,6 +295,20 @@ mod tests {
                 AppKind::Conjunctive { n_preds, .. } => assert_eq!(n_preds, 2 * s),
                 _ => panic!("wrong app"),
             }
+        }
+    }
+
+    #[test]
+    fn pipeline_family_varies_only_the_depth() {
+        let base = pipeline_coloring(1, 1, 0.05, 7);
+        assert_eq!(base.pipeline_depth, 1);
+        for &d in &PIPELINE_DEPTHS {
+            let cfg = pipeline_coloring(d, 1, 0.05, 7);
+            assert_eq!(cfg.pipeline_depth, d);
+            assert_eq!(cfg.seed, base.seed, "same workload across the sweep");
+            assert_eq!(cfg.app, base.app);
+            assert_eq!(cfg.n_clients, base.n_clients);
+            assert_eq!(cfg.timing.think, 0, "thin clients: latency-bound");
         }
     }
 

@@ -19,6 +19,15 @@
 //!   Pallas kernels for the batched HVC-interval verdicts, AOT-lowered to
 //!   HLO text and executed from `runtime::pjrt` via the PJRT CPU client.
 //!
+//! The client stack is pipelined: a transport-agnostic N/R/W quorum
+//! engine ([`client::quorum`], pure transition functions) under a thin
+//! multiplexing actor ([`client::actor`]) that keeps up to
+//! `pipeline_depth` calls in flight and lets applications scatter-gather
+//! independent operations ([`client::app::AppAction::Batch`]). Depth 1 —
+//! the default — reproduces the paper's serial closed-loop client
+//! event-for-event; quorum broadcasts share one `Rc<ServerOp>` payload
+//! across all N replicas.
+//!
 //! Data placement: every key routes to a position on the cluster ring
 //! ([`store::ring`]) and replicates to the N distinct servers walking
 //! clockwise from there. Servers store, window-log, snapshot and monitor

@@ -4,13 +4,14 @@
 //! ```text
 //! optikv run  --app <coloring|weather|conjunctive> --consistency N3R1W1
 //!             [--cluster-servers S] [--clients 15] [--duration-s 120]
-//!             [--monitors true]
+//!             [--monitors true] [--pipeline-depth 1]
 //!             [--topo aws-global|aws-regional|lab50|lab100]
 //!             [--recovery none|notify|restore] [--accel native|xla]
 //!             [--put-pct 50] [--scale 0.05] [--seed 42] [--eps-ms inf]
 //! optikv table2        — print the consistency presets
 //! optikv latency-demo  — quick Table-III style latency histogram
 //! optikv scaleout      — throughput vs cluster size at fixed N=3
+//! optikv pipeline      — throughput/latency vs client pipeline depth
 //! ```
 
 use optikv::client::consistency::ConsistencyCfg;
@@ -30,8 +31,11 @@ fn main() {
         Some("table2") => cmd_table2(),
         Some("latency-demo") => cmd_latency_demo(&args),
         Some("scaleout") => cmd_scaleout(&args),
+        Some("pipeline") => cmd_pipeline(&args),
         _ => {
-            eprintln!("usage: optikv <run|table2|latency-demo|scaleout> [flags]  (see module docs)");
+            eprintln!(
+                "usage: optikv <run|table2|latency-demo|scaleout|pipeline> [flags]  (see module docs)"
+            );
             std::process::exit(2);
         }
     }
@@ -66,7 +70,8 @@ fn cmd_run(args: &Args) {
         }
     };
     let mut cfg = ExpConfig::new("cli-run", consistency, app)
-        .with_cluster_servers(args.get_usize("cluster-servers", consistency.n));
+        .with_cluster_servers(args.get_usize("cluster-servers", consistency.n))
+        .with_pipeline_depth(args.get_usize("pipeline-depth", 1));
     cfg.n_clients = args.get_usize("clients", 15);
     cfg.monitors = args.get_bool("monitors", true);
     cfg.duration = args.get_u64("duration-s", 120) * SEC;
@@ -172,6 +177,25 @@ fn cmd_scaleout(args: &Args) {
             format!("{:.0}", res.app_tps),
             format!("{:.0}", res.server_tps),
             res.violations_detected.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_pipeline(args: &Args) {
+    let scale = args.get_f64("scale", 0.05);
+    let seed = args.get_u64("seed", 42);
+    let clients = args.get_usize("clients", 1);
+    let mut t =
+        Table::new(&["depth", "app ops/s", "op p50 (ms)", "op p99 (ms)", "ok"]);
+    for &d in &scenarios::PIPELINE_DEPTHS {
+        let res = run(&scenarios::pipeline_coloring(d, clients, scale, seed));
+        t.row(&[
+            d.to_string(),
+            format!("{:.0}", res.app_tps),
+            format!("{:.1}", res.lat_p50_ms),
+            format!("{:.1}", res.lat_p99_ms),
+            res.ops_ok.to_string(),
         ]);
     }
     t.print();

@@ -133,6 +133,35 @@ impl MetricsHub {
     pub fn total_server_ops(&self) -> u64 {
         self.server_ops.iter().flat_map(|s| s.iter()).sum()
     }
+
+    /// Client-perspective op latency percentiles in ms (each p in
+    /// 0..=100), sharing one sorted copy of the samples. 0.0 entries when
+    /// no sample was recorded. This is what makes a pipeline depth sweep
+    /// interpretable: deeper pipelines trade per-op latency (queueing in
+    /// the client) for wave throughput.
+    pub fn op_latency_percentiles_ms(&self, ps: &[f64]) -> Vec<f64> {
+        let mut ms: Vec<f64> = self
+            .op_latencies
+            .iter()
+            .map(|&l| l as f64 / crate::sim::MS as f64)
+            .collect();
+        ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter()
+            .map(|&p| {
+                if ms.is_empty() {
+                    0.0
+                } else {
+                    let rank = ((p / 100.0) * (ms.len() as f64 - 1.0)).round() as usize;
+                    ms[rank.min(ms.len() - 1)]
+                }
+            })
+            .collect()
+    }
+
+    /// Single-percentile convenience over [`Self::op_latency_percentiles_ms`].
+    pub fn op_latency_percentile_ms(&self, p: f64) -> f64 {
+        self.op_latency_percentiles_ms(&[p])[0]
+    }
 }
 
 /// Mean of the stable phase of a throughput series: drop the first
@@ -171,6 +200,23 @@ mod tests {
         assert_eq!(m.app_series(), vec![1.0, 0.0, 1.0]);
         assert_eq!(m.total_app_ops(), 2);
         assert_eq!(m.total_server_ops(), 3);
+    }
+
+    #[test]
+    fn latency_percentiles_from_samples() {
+        let m = MetricsHub::new(1, 1);
+        {
+            let mut m = m.borrow_mut();
+            for i in 1..=100u64 {
+                m.record_app(0, i * MS, i * MS);
+            }
+        }
+        let m = m.borrow();
+        let p50 = m.op_latency_percentile_ms(50.0);
+        assert!((49.0..=51.0).contains(&p50), "p50={p50}");
+        let p99 = m.op_latency_percentile_ms(99.0);
+        assert!((98.0..=100.0).contains(&p99), "p99={p99}");
+        assert_eq!(MetricsHub::new(1, 1).borrow().op_latency_percentile_ms(50.0), 0.0);
     }
 
     #[test]

@@ -324,7 +324,7 @@ mod tests {
             if self.remaining > 0 {
                 ctx.send(
                     self.peer,
-                    Msg::Request { req: self.remaining as u64, op: ServerOp::Get(crate::store::value::KeyId(0)), hvc: None },
+                    Msg::Request { req: self.remaining as u64, op: Rc::new(ServerOp::Get(crate::store::value::KeyId(0))), hvc: None },
                 );
             }
         }
@@ -339,7 +339,7 @@ mod tests {
                     if self.remaining > 0 {
                         ctx.send(
                             self.peer,
-                            Msg::Request { req: self.remaining as u64, op: ServerOp::Get(crate::store::value::KeyId(0)), hvc: None },
+                            Msg::Request { req: self.remaining as u64, op: Rc::new(ServerOp::Get(crate::store::value::KeyId(0))), hvc: None },
                         );
                     }
                 }

@@ -3,6 +3,8 @@
 //! rollback control, and predicate registration (for predicates inferred
 //! at runtime from variable names).
 
+use std::rc::Rc;
+
 use crate::clock::hvc::{Hvc, Millis};
 use crate::detect::candidate::{Candidate, ViolationReport};
 use crate::predicate::spec::PredicateSpec;
@@ -33,8 +35,10 @@ pub enum RollbackMsg {
 pub enum Msg {
     /// client → server. The client piggy-backs the freshest HVC it has
     /// observed (clients relay causality between servers; the HVC dimension
-    /// stays = #servers).
-    Request { req: u64, op: ServerOp, hvc: Option<Hvc> },
+    /// stays = #servers). The payload is `Rc`-shared: a quorum broadcast
+    /// fans one allocation out to all N replicas instead of deep-cloning
+    /// the value and its vector clock per target.
+    Request { req: u64, op: Rc<ServerOp>, hvc: Option<Hvc> },
     /// server → client.
     Reply { req: u64, reply: ServerReply, hvc: Hvc },
     /// local predicate detector (on a server) → monitor.

@@ -115,7 +115,7 @@ impl ServerActor {
         &self.table
     }
 
-    fn handle_request(&mut self, ctx: &mut Ctx, from: ProcId, req: u64, op: ServerOp, piggy: Option<Hvc>) {
+    fn handle_request(&mut self, ctx: &mut Ctx, from: ProcId, req: u64, op: Rc<ServerOp>, piggy: Option<Hvc>) {
         let pt = ctx.pt_ms();
         let eps = ctx.eps_ms();
         match &piggy {
@@ -155,18 +155,21 @@ impl ServerActor {
         let mut svc;
         let reply;
         let mut cands = Vec::new();
-        match op {
+        match &*op {
             ServerOp::Get(key) => {
                 svc = self.cfg.svc_get;
-                reply = ServerReply::Values(self.table.get(key).to_vec());
+                reply = ServerReply::Values(self.table.get(*key).to_vec());
             }
             ServerOp::GetVersion(key) => {
                 svc = self.cfg.svc_get_version;
-                reply = ServerReply::Versions(self.table.versions(key));
+                reply = ServerReply::Versions(self.table.versions(*key));
             }
             ServerOp::Put { key, version, value } => {
+                // the broadcast shares one payload across replicas; clone
+                // only here, where this replica applies the write
+                let key = *key;
                 svc = self.cfg.svc_put;
-                let (prev, changed) = self.table.put(key, version, value);
+                let (prev, changed) = self.table.put(key, version.clone(), value.clone());
                 if changed {
                     self.windowlog.append(pt, key, prev);
                     if let Some(det) = self.detector.as_mut() {

@@ -37,6 +37,20 @@ fn conjunctive_violations_detected_with_bounded_latency() {
 }
 
 #[test]
+fn detection_holds_on_pipelined_clients() {
+    // pipeline_depth = 4: conjunctive clients overlap each flip with its
+    // extra GETs; the monitors must keep detecting with bounded latency
+    let res = run(&conj_cfg(ConsistencyCfg::n3r1w1(), 0.15, 21).with_pipeline_depth(4));
+    assert!(res.violations_detected >= 5, "got {}", res.violations_detected);
+    let over_5s = res
+        .detection_latencies_ms
+        .iter()
+        .filter(|&&l| l > 5_000.0)
+        .count();
+    assert_eq!(over_5s, 0, "latencies: {:?}", res.detection_latencies_ms);
+}
+
+#[test]
 fn beta_zero_means_no_violations() {
     let res = run(&conj_cfg(ConsistencyCfg::n3r1w1(), 0.0, 23));
     assert_eq!(res.violations_detected, 0);

@@ -34,6 +34,16 @@ fn full_restore_recovers_and_system_continues() {
 }
 
 #[test]
+fn full_restore_recovers_on_pipelined_clients() {
+    // depth 4: overlapped ops go stale wholesale when the controller
+    // freezes/restores; the system must keep recovering and progressing
+    let res = run(&violating_cfg(RecoveryPolicy::FullRestore, 51).with_pipeline_depth(4));
+    assert!(res.violations_detected > 0, "violations occur");
+    assert!(res.recoveries > 0, "controller ran recoveries");
+    assert!(res.ops_ok > 200, "ops_ok={}", res.ops_ok);
+}
+
+#[test]
 fn notify_clients_is_cheaper_than_full_restore() {
     let notify = run(&violating_cfg(RecoveryPolicy::NotifyClients, 53));
     let full = run(&violating_cfg(RecoveryPolicy::FullRestore, 53));

@@ -13,7 +13,7 @@ use optikv::clock::hvc::EPS_INF;
 use optikv::metrics::throughput::MetricsHub;
 use optikv::sim::des::Sim;
 use optikv::sim::net::TopologyBuilder;
-use optikv::sim::{ms, ProcId, SEC};
+use optikv::sim::{ProcId, SEC};
 use optikv::store::ring::{Ring, Router, DEFAULT_RING_SEED};
 use optikv::store::server::{ServerActor, ServerCfg};
 use optikv::store::value::{Interner, Value};
@@ -30,6 +30,21 @@ fn build(
     inter_ms: f64,
     drop_prob: f64,
     seed: u64,
+) -> (Sim, Vec<ProcId>) {
+    build_with_depth(cluster, consistency, interner, scripts, inter_ms, drop_prob, seed, 1)
+}
+
+/// `build` with an explicit client pipeline depth.
+#[allow(clippy::too_many_arguments)]
+fn build_with_depth(
+    cluster: usize,
+    consistency: ConsistencyCfg,
+    interner: &Rc<RefCell<Interner>>,
+    scripts: Vec<Vec<AppOp>>,
+    inter_ms: f64,
+    drop_prob: f64,
+    seed: u64,
+    depth: usize,
 ) -> (Sim, Vec<ProcId>) {
     let c = scripts.len();
     let router = Router::new(
@@ -66,6 +81,7 @@ fn build(
             router.clone(),
             consistency,
             ClientTiming::default(),
+            depth,
             Box::new(ScriptApp::new(script)),
             metrics.clone(),
         )));
@@ -354,6 +370,7 @@ fn misrouted_requests_are_refused() {
         stale,
         consistency,
         ClientTiming::default(),
+        1,
         Box::new(ScriptApp::new(script)),
         metrics.clone(),
     )));
@@ -371,6 +388,48 @@ fn misrouted_requests_are_refused() {
     assert!(refused > 0, "stale routing must hit WrongServer refusals");
     let (ok, failed) = client_stats(&mut sim, client);
     assert_eq!(ok + failed, 16, "every op completed or failed cleanly");
+}
+
+// ---------------------------------------------------------------------------
+// regression: the pipelined multiplexer reduces to the serial client
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serial_apps_make_pipeline_depth_inert() {
+    // A closed-loop app (ScriptApp emits one op at a time) can never have
+    // two calls in flight, so the multiplexer at ANY depth must reproduce
+    // the serial client's event schedule exactly. This is the
+    // `pipeline_depth = 1 ≡ historical serial client` regression: the
+    // depth-1 code path IS this code path.
+    let mk = |depth: usize| {
+        let interner = Interner::new();
+        let k = interner.borrow_mut().intern("serial");
+        let j = interner.borrow_mut().intern("serial2");
+        let script: Vec<AppOp> = (0..30)
+            .flat_map(|i| [AppOp::Put(k, Value::Int(i)), AppOp::Get(j)])
+            .collect();
+        build_with_depth(
+            3,
+            ConsistencyCfg::n3r2w2(),
+            &interner,
+            vec![script],
+            50.0,
+            0.1, // loss: exercise the serial second round too
+            77,
+            depth,
+        )
+    };
+    let (mut a, ids_a) = mk(1);
+    let (mut b, ids_b) = mk(8);
+    a.run_until(120 * SEC);
+    b.run_until(120 * SEC);
+    assert_eq!(
+        client_stats(&mut a, ids_a[0]),
+        client_stats(&mut b, ids_b[0]),
+        "same ops succeed/fail at every depth"
+    );
+    assert_eq!(a.stats().events, b.stats().events, "identical event schedules");
+    assert_eq!(a.stats().sent, b.stats().sent, "identical wire traffic");
 }
 
 // ---------------------------------------------------------------------------
