@@ -1,0 +1,82 @@
+//! Fault recovery — throughput dip and recovery time around a network
+//! partition heal, plus the crash-churn re-sync cost.
+//!
+//! The partition study runs `scenarios::partition_coloring`: the AWS
+//! global topology with region 2 cut off for the middle third of the
+//! run. We report the stable application throughput before the cut,
+//! during it, and after the heal, and the recovery time — how many
+//! 1-second windows after the heal it takes the aggregate to climb back
+//! to 90 % of the pre-cut mean.
+//!
+//! `BENCH_SCALE=1.0 cargo bench --bench fault_recovery` for long runs.
+
+use optikv::exp::runner::run;
+use optikv::exp::scenarios::{crash_churn_conjunctive, partition_coloring};
+use optikv::metrics::report::{bench_scale, bench_seed, detection_cdf_summary};
+use optikv::sim::SEC;
+use optikv::util::stats::{mean, Table};
+
+fn main() {
+    let scale = bench_scale(0.1);
+    let seed = bench_seed();
+    println!("# fault recovery — partition dip/heal and crash-churn re-sync (scale {scale})\n");
+
+    let cfg = partition_coloring(scale, seed);
+    let d_secs = (cfg.duration / SEC) as usize;
+    let (cut_from, cut_until) = (d_secs / 3, 2 * d_secs / 3);
+    let res = run(&cfg);
+    let series = res.metrics.borrow().app_series();
+
+    // window the series around the partition (skip the warmup quarter of
+    // the pre-cut phase and the final, possibly partial, window)
+    let len = series.len();
+    let slice = |a: usize, b: usize| -> Vec<f64> {
+        let (a, b) = (a.min(len), b.min(len));
+        series[a..b.max(a)].to_vec()
+    };
+    let pre = slice(cut_from / 4, cut_from);
+    let during = slice(cut_from, cut_until);
+    let post = slice(cut_until, len.saturating_sub(1));
+    let (pre_tps, during_tps, post_tps) = (mean(&pre), mean(&during), mean(&post));
+    let recovery_s = post
+        .iter()
+        .position(|&x| x >= 0.9 * pre_tps)
+        .map(|w| format!("{w} s"))
+        .unwrap_or_else(|| "not within run".into());
+
+    let mut t = Table::new(&["phase", "windows", "app ops/s", "vs pre-cut"]);
+    let pct = |x: f64| {
+        if pre_tps > 0.0 {
+            format!("{:+.1}%", (x - pre_tps) / pre_tps * 100.0)
+        } else {
+            "—".into()
+        }
+    };
+    t.row(&["pre-cut".into(), pre.len().to_string(), format!("{pre_tps:.1}"), "—".into()]);
+    t.row(&[
+        "partitioned".into(),
+        during.len().to_string(),
+        format!("{during_tps:.1}"),
+        pct(during_tps),
+    ]);
+    t.row(&["healed".into(), post.len().to_string(), format!("{post_tps:.1}"), pct(post_tps)]);
+    println!("{}", t.render());
+    println!(
+        "recovery to 90% of pre-cut throughput: {recovery_s} after heal | \
+         failed ops {} | msgs cut {} | violations {}",
+        res.ops_failed, res.sim_stats.fault_dropped, res.violations_detected
+    );
+    print!("{}", detection_cdf_summary(&res.detection_cdf));
+
+    println!("\n# crash churn — volatile-state loss and peer re-sync\n");
+    let res = run(&crash_churn_conjunctive(scale, seed));
+    println!(
+        "{}: app {:.1} ops/s | crashes {} | re-syncs {} | versions merged {} | violations {}",
+        res.name,
+        res.app_tps,
+        res.crashes,
+        res.resyncs,
+        res.resync_keys,
+        res.violations_detected
+    );
+}

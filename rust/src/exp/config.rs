@@ -5,6 +5,7 @@
 use crate::client::consistency::{ClientTiming, ConsistencyCfg};
 use crate::clock::hvc::{Millis, EPS_INF};
 use crate::detect::monitor::MonitorCfg;
+use crate::faults::plan::FaultPlan;
 use crate::rollback::recovery::RecoveryPolicy;
 use crate::sim::{Time, SEC};
 use crate::store::server::ServerCfg;
@@ -89,6 +90,10 @@ pub struct ExpConfig {
     pub timing: ClientTiming,
     pub drop_prob: f64,
     pub accel: AccelKind,
+    /// declarative fault schedule (partitions, crash/restart, slow nodes,
+    /// drop bursts — [`crate::faults`]). [`FaultPlan::none()`], the
+    /// default, reproduces fault-free runs event-for-event.
+    pub fault_plan: FaultPlan,
 }
 
 impl ExpConfig {
@@ -116,7 +121,14 @@ impl ExpConfig {
             timing: ClientTiming::default(),
             drop_prob: 0.0,
             accel: AccelKind::Native,
+            fault_plan: FaultPlan::none(),
         }
+    }
+
+    /// Attach a fault schedule to the run.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = plan;
+        self
     }
 
     /// Let every client keep up to `depth` quorum calls in flight.
@@ -189,6 +201,24 @@ mod tests {
         assert_eq!(cfg.eps_ms, EPS_INF, "paper treats eps as infinity");
         assert_eq!(cfg.n_regions(), 3);
         assert_eq!(cfg.base_ms()[0][1], 38.0);
+        assert!(cfg.fault_plan.is_none(), "fault-free by default");
+    }
+
+    #[test]
+    fn fault_plan_builder() {
+        use crate::faults::plan::FaultEvent;
+        let plan = FaultPlan::none().with(FaultEvent::Crash {
+            server: 1,
+            at: 10 * SEC,
+            restart_after: 5 * SEC,
+        });
+        let cfg = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Conjunctive { n_preds: 1, n_conjuncts: 1, beta: 0.0, put_pct: 0.5 },
+        )
+        .with_fault_plan(plan.clone());
+        assert_eq!(cfg.fault_plan, plan);
     }
 
     #[test]

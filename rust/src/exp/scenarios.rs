@@ -7,6 +7,7 @@
 
 use crate::client::consistency::{ClientTiming, ConsistencyCfg};
 use crate::exp::config::{AppKind, ExpConfig, TopoKind};
+use crate::faults::plan::{FaultEvent, FaultPlan};
 use crate::sim::{Time, SEC};
 
 fn dur(scale: f64, full_secs: u64) -> Time {
@@ -238,6 +239,112 @@ pub fn pipeline_coloring(depth: usize, n_clients: usize, scale: f64, seed: u64) 
     cfg
 }
 
+/// Partition study: the coloring workload on the AWS global topology
+/// with one region (Frankfurt, region 2) cut off for the middle third of
+/// the run. N3R1W2 keeps reads optimistic (R = 1: every group still
+/// reads) while W = 2 makes writes from the isolated region time out
+/// their quorum — so the run exhibits the full §VI story: quorum
+/// timeouts during the cut, continued optimistic progress in the
+/// majority group, violations from cross-partition divergence, and
+/// post-heal recovery.
+pub fn partition_coloring(scale: f64, seed: u64) -> ExpConfig {
+    let d = dur(scale, 300);
+    let mut cfg = ExpConfig::new(
+        "partition-coloring-N3R1W2",
+        ConsistencyCfg::new(3, 1, 2),
+        AppKind::Coloring {
+            nodes: ((10_000.0 * scale) as usize).max(240),
+            edges_per_node: 3,
+            task_size: 10,
+            loop_forever: true,
+        },
+    )
+    .with_fault_plan(FaultPlan::none().with(FaultEvent::Partition {
+        groups: vec![vec![0, 1], vec![2]],
+        from: d / 3,
+        until: 2 * d / 3,
+    }));
+    cfg.n_clients = 9; // 3 per region: every group keeps clients
+    cfg.monitors = true;
+    cfg.topo = TopoKind::AwsGlobal;
+    cfg.duration = d;
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::with_think(15.0);
+    cfg
+}
+
+/// Crash-churn study: the conjunctive stress workload while servers
+/// crash, lose their volatile state, restart and re-sync from their
+/// preference-list peers. Recovery stays `NotifyClients` — a crashed
+/// server cannot ack a stop-the-world freeze, so `FullRestore` would
+/// stall (documented in DESIGN.md §7).
+pub fn crash_churn_conjunctive(scale: f64, seed: u64) -> ExpConfig {
+    let d = dur(scale, 300);
+    let mut cfg = ExpConfig::new(
+        "crash-churn-conjunctive-N3R1W1",
+        ConsistencyCfg::n3r1w1(),
+        AppKind::Conjunctive { n_preds: 10, n_conjuncts: 6, beta: 0.05, put_pct: 0.5 },
+    )
+    .with_fault_plan(
+        FaultPlan::none()
+            .with(FaultEvent::Crash { server: 1, at: d / 4, restart_after: d / 10 })
+            .with(FaultEvent::Crash { server: 2, at: 3 * d / 5, restart_after: d / 10 }),
+    );
+    cfg.n_clients = 9;
+    cfg.monitors = true;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.duration = d;
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::with_think(2.5);
+    cfg
+}
+
+/// Detection-latency CDF sweep (§VI / Table III): the conjunctive
+/// workload under a degraded-but-connected plan — a slow node and a
+/// drop burst on the machine link between servers 0 and 1 (which thins
+/// the server-0 ↔ monitor-1 / server-1 ↔ monitor-0 candidate paths as
+/// well as any re-sync chunks). Detection stays robust because every
+/// onset is emitted by all N replica servers, so each violation has
+/// candidate copies on un-bursted paths — exactly the redundancy the
+/// paper's monitors rely on. `regional = true` is the one-region /
+/// 5-AZ deployment (paper: 99.9 % of violations detected < 50 ms);
+/// `false` is the Ohio/Oregon/Frankfurt global one (< 5 s).
+///
+/// The CDF's *shape* is set by the topology (candidate hop + batching),
+/// not by the predicate parameters — m and β only set the statistical
+/// weight. The paper's 600 s runs use m = 10, β = 1 %; here m = 3,
+/// β = 10 % keeps the violation population dense enough that short
+/// CI-scale runs still have a meaningful p99.9.
+pub fn detection_cdf_faulted(regional: bool, scale: f64, seed: u64) -> ExpConfig {
+    let d = dur(scale, 300);
+    let mut cfg = ExpConfig::new(
+        if regional { "detect-cdf-regional" } else { "detect-cdf-global" },
+        ConsistencyCfg::n3r1w1(),
+        AppKind::Conjunctive { n_preds: 10, n_conjuncts: 3, beta: 0.1, put_pct: 0.5 },
+    )
+    .with_fault_plan(
+        FaultPlan::none()
+            .with(FaultEvent::SlowNode { proc: 2, factor: 3.0, from: d / 4, until: d / 2 })
+            .with(FaultEvent::DropBurst {
+                link: (0, 1),
+                prob: 0.2,
+                from: d / 2,
+                until: 3 * d / 4,
+            }),
+    );
+    cfg.n_clients = 9;
+    cfg.monitors = true;
+    cfg.topo = if regional {
+        TopoKind::AwsRegional { zones: 5 }
+    } else {
+        TopoKind::AwsGlobal
+    };
+    cfg.duration = d;
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::with_think(2.5);
+    cfg
+}
+
 /// The paper's Table II consistency presets for N = 3 and N = 5.
 pub fn table2_n3() -> [ConsistencyCfg; 3] {
     [ConsistencyCfg::n3r1w3(), ConsistencyCfg::n3r2w2(), ConsistencyCfg::n3r1w1()]
@@ -310,6 +417,39 @@ mod tests {
             assert_eq!(cfg.n_clients, base.n_clients);
             assert_eq!(cfg.timing.think, 0, "thin clients: latency-bound");
         }
+    }
+
+    #[test]
+    fn fault_families_carry_valid_plans() {
+        let p = partition_coloring(0.1, 1);
+        assert!(!p.fault_plan.is_none());
+        assert!(p.fault_plan.validate(p.n_servers(), p.n_regions()).is_ok());
+        match &p.fault_plan.events[0] {
+            FaultEvent::Partition { groups, from, until } => {
+                assert_eq!(groups.len(), 2);
+                assert!(from < until);
+                assert!(*until <= p.duration, "heal happens inside the run");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(p.consistency, ConsistencyCfg::new(3, 1, 2), "W=2 makes cuts visible");
+
+        let c = crash_churn_conjunctive(0.1, 1);
+        assert!(c.fault_plan.validate(c.n_servers(), c.n_regions()).is_ok());
+        assert_eq!(c.fault_plan.events.len(), 2, "two crash/restart cycles");
+        assert_eq!(
+            c.recovery,
+            crate::rollback::recovery::RecoveryPolicy::NotifyClients,
+            "FullRestore would stall on a crashed server"
+        );
+
+        for regional in [true, false] {
+            let dcfg = detection_cdf_faulted(regional, 0.1, 1);
+            assert!(dcfg.fault_plan.validate(dcfg.n_servers(), dcfg.n_regions()).is_ok());
+            assert!(dcfg.monitors);
+        }
+        assert_eq!(detection_cdf_faulted(true, 0.1, 1).n_regions(), 5);
+        assert_eq!(detection_cdf_faulted(false, 0.1, 1).n_regions(), 3);
     }
 
     #[test]

@@ -1,0 +1,35 @@
+//! Fault injection: declarative, seed-deterministic schedules of network
+//! partitions, crash/restart cycles, slow nodes and drop bursts, consumed
+//! by the DES as a timeline of reachability transitions.
+//!
+//! The paper's premise is CAP — keep executing optimistically *through*
+//! network partitions and replica failures, monitor the correctness
+//! predicate, and roll back when it is violated (§I, §VI). An i.i.d.
+//! per-message drop probability cannot express any of that: a partition
+//! is a *correlated*, *time-bounded* cut of the reachability graph, and a
+//! crash is a replica that loses volatile state and must re-sync from its
+//! preference-list peers on rejoin (Dynamo §4.6 hinted handoff / replica
+//! synchronization). This module supplies the missing vocabulary:
+//!
+//! * [`plan::FaultPlan`] — the *role-level* schedule an experiment
+//!   declares: typed [`plan::FaultEvent`]s addressing servers by index and
+//!   the topology by region, with virtual-time windows. Pure data —
+//!   cloneable, comparable, parseable from a compact CLI DSL.
+//! * [`state::Timeline`] + [`state::FaultState`] — the *proc-level*
+//!   lowering the experiment runner derives from a plan plus the actor
+//!   layout: a sorted list of [`state::Change`] transitions the simulator
+//!   applies between events, and the time-varying reachability view the
+//!   network consults on every send (partitioned or crashed endpoint ⇒
+//!   the message is dropped, feeding the quorum timeout path in
+//!   [`crate::client::quorum`]).
+//!
+//! Everything is deterministic: the same seed and the same plan replay
+//! the identical transition schedule, and [`plan::FaultPlan::none()`]
+//! (the default) leaves the simulator's behaviour untouched event-for-
+//! event — the empty timeline adds no heap events and no RNG draws.
+
+pub mod plan;
+pub mod state;
+
+pub use plan::{FaultEvent, FaultPlan};
+pub use state::{lower, Change, FaultHook, FaultState, Timeline};

@@ -1,0 +1,380 @@
+//! The declarative fault schedule: typed events over role-level targets
+//! (server indices, topology regions) with virtual-time windows.
+//!
+//! A [`FaultPlan`] is plain data — the experiment configuration carries
+//! one ([`crate::exp::config::ExpConfig::fault_plan`]), the runner lowers
+//! it against the actor layout ([`crate::faults::state::lower`]), and the
+//! CLI parses one from a compact DSL ([`FaultPlan::parse`]).
+
+use crate::sim::{Time, SEC};
+
+/// One scheduled fault. Times are virtual (ns); windows are `[from,
+/// until)`. Servers are addressed by their cluster index, partitions by
+/// *region* groups (every proc of a region — servers, their co-located
+/// monitors, clients — moves together, which is what a real inter-DC cut
+/// does).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// Split the topology into isolated region groups for the window.
+    /// Regions not named in any group stay mutually connected in an
+    /// implicit rest-group. Messages crossing group boundaries are
+    /// dropped; intra-group traffic is untouched.
+    Partition { groups: Vec<Vec<u8>>, from: Time, until: Time },
+    /// Crash server `server` at `at`: it loses all volatile state
+    /// (table, window-log, snapshots) and neither receives nor sends.
+    /// After `restart_after` (0 = never) it restarts empty and re-syncs
+    /// its owned partitions from live preference-list peers before
+    /// serving again.
+    Crash { server: u16, at: Time, restart_after: Time },
+    /// Multiply the network latency of every message to or from server
+    /// `proc` by `factor` during the window (a degraded NIC / noisy
+    /// neighbour; the paper's §VI-C proxy model only jitters, it never
+    /// degrades a single node).
+    SlowNode { proc: u16, factor: f64, from: Time, until: Time },
+    /// Extra i.i.d. drop probability on the (symmetric) *machine* link
+    /// between the machines of servers `link.0` and `link.1` during the
+    /// window — a flaky cable rather than a full cut. Machine
+    /// granularity means the burst hits every message between the two
+    /// boxes: server↔server re-sync chunks and candidate traffic to the
+    /// co-located monitors.
+    DropBurst { link: (u16, u16), prob: f64, from: Time, until: Time },
+}
+
+/// A schedule of [`FaultEvent`]s. The default, [`FaultPlan::none()`],
+/// is the empty schedule and is guaranteed inert.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: reproduces fault-free runs event-for-event.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Builder-style push.
+    pub fn with(mut self, ev: FaultEvent) -> Self {
+        self.events.push(ev);
+        self
+    }
+
+    /// Sanity-check the plan against a deployment shape. Returns the
+    /// first problem found, if any.
+    ///
+    /// Besides per-event shape checks, overlapping windows on the same
+    /// target are rejected: the runtime state keeps one slow factor per
+    /// proc and one up/down bit per server, so `slow:2x4@10-30` plus
+    /// `slow:2x2@20-40` (or two overlapping crash lifetimes of one
+    /// server) would silently mis-model — fail loudly at plan time
+    /// instead. Overlapping `DropBurst`s compose and are allowed.
+    pub fn validate(&self, n_servers: usize, n_regions: usize) -> Result<(), String> {
+        // (target, from, until) windows that must stay pairwise disjoint
+        let mut slow_windows: Vec<(u16, Time, Time)> = Vec::new();
+        let mut crash_windows: Vec<(u16, Time, Time)> = Vec::new();
+        for ev in &self.events {
+            match ev {
+                FaultEvent::Partition { groups, from, until } => {
+                    if from >= until {
+                        return Err(format!("partition window [{from}, {until}) is empty"));
+                    }
+                    // NB: one listed group + the implicit rest-group is a
+                    // valid two-way cut, so groups.len() == 1 is allowed.
+                    let mut seen = vec![false; n_regions];
+                    for g in groups {
+                        if g.is_empty() {
+                            return Err("partition group must not be empty".into());
+                        }
+                        for &r in g {
+                            if r as usize >= n_regions {
+                                return Err(format!(
+                                    "partition names region {r} but the topology has {n_regions}"
+                                ));
+                            }
+                            if seen[r as usize] {
+                                return Err(format!("region {r} appears in two partition groups"));
+                            }
+                            seen[r as usize] = true;
+                        }
+                    }
+                }
+                FaultEvent::Crash { server, at, restart_after } => {
+                    if *server as usize >= n_servers {
+                        return Err(format!(
+                            "crash names server {server} but the cluster has {n_servers}"
+                        ));
+                    }
+                    let until = if *restart_after > 0 { *at + *restart_after } else { Time::MAX };
+                    crash_windows.push((*server, *at, until));
+                }
+                FaultEvent::SlowNode { proc, factor, from, until } => {
+                    if *proc as usize >= n_servers {
+                        return Err(format!(
+                            "slow-node names server {proc} but the cluster has {n_servers}"
+                        ));
+                    }
+                    if *factor < 1.0 {
+                        return Err(format!("slow-node factor {factor} must be >= 1"));
+                    }
+                    if from >= until {
+                        return Err(format!("slow-node window [{from}, {until}) is empty"));
+                    }
+                    slow_windows.push((*proc, *from, *until));
+                }
+                FaultEvent::DropBurst { link, prob, from, until } => {
+                    if link.0 as usize >= n_servers || link.1 as usize >= n_servers {
+                        return Err(format!(
+                            "drop-burst link {:?} outside the {n_servers}-server cluster",
+                            link
+                        ));
+                    }
+                    if !(0.0..=1.0).contains(prob) {
+                        return Err(format!("drop-burst probability {prob} outside [0, 1]"));
+                    }
+                    if from >= until {
+                        return Err(format!("drop-burst window [{from}, {until}) is empty"));
+                    }
+                }
+            }
+        }
+        for (kind, windows) in [("slow-node", &slow_windows), ("crash", &crash_windows)] {
+            for (i, &(t, f1, u1)) in windows.iter().enumerate() {
+                for &(t2, f2, u2) in &windows[i + 1..] {
+                    if t == t2 && f1 < u2 && f2 < u1 {
+                        return Err(format!(
+                            "overlapping {kind} windows on server {t} \
+                             ([{f1}, {u1}) and [{f2}, {u2})) are not modeled"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI DSL: `;`-separated events, windows in (fractional)
+    /// seconds of virtual time.
+    ///
+    /// ```text
+    /// partition:0,1|2@10-40      regions {0,1} vs {2} from 10 s to 40 s
+    /// crash:1@20+15              crash server 1 at 20 s, restart 15 s later
+    /// crash:1@20                 crash server 1 at 20 s, never restart
+    /// slow:2x4@10-30             server 2's links 4x slower from 10 s to 30 s
+    /// burst:0-1:0.3@5-25         30 % loss on link 0<->1 from 5 s to 25 s
+    /// ```
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut plan = FaultPlan::none();
+        for item in s.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind, body) =
+                item.split_once(':').ok_or_else(|| format!("`{item}`: expected kind:spec"))?;
+            plan.events.push(match kind {
+                "partition" => parse_partition(body)?,
+                "crash" => parse_crash(body)?,
+                "slow" => parse_slow(body)?,
+                "burst" => parse_burst(body)?,
+                other => return Err(format!("unknown fault kind `{other}`")),
+            });
+        }
+        Ok(plan)
+    }
+}
+
+fn secs(s: &str) -> Result<Time, String> {
+    let x: f64 = s.trim().parse().map_err(|_| format!("bad time `{s}` (seconds)"))?;
+    if x < 0.0 {
+        return Err(format!("negative time `{s}`"));
+    }
+    Ok((x * SEC as f64) as Time)
+}
+
+/// `spec@from-until` → (spec, from, until).
+fn window(body: &str) -> Result<(&str, Time, Time), String> {
+    let (spec, win) =
+        body.split_once('@').ok_or_else(|| format!("`{body}`: expected spec@from-until"))?;
+    let (a, b) =
+        win.split_once('-').ok_or_else(|| format!("`{win}`: expected from-until seconds"))?;
+    Ok((spec, secs(a)?, secs(b)?))
+}
+
+fn parse_partition(body: &str) -> Result<FaultEvent, String> {
+    let (spec, from, until) = window(body)?;
+    let mut groups = Vec::new();
+    for g in spec.split('|') {
+        let mut regions = Vec::new();
+        for r in g.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            regions.push(r.parse::<u8>().map_err(|_| format!("bad region `{r}`"))?);
+        }
+        if regions.is_empty() {
+            return Err(format!("`{spec}`: empty partition group"));
+        }
+        groups.push(regions);
+    }
+    Ok(FaultEvent::Partition { groups, from, until })
+}
+
+fn parse_crash(body: &str) -> Result<FaultEvent, String> {
+    let (srv, when) =
+        body.split_once('@').ok_or_else(|| format!("`{body}`: expected server@at[+restart]"))?;
+    let server = srv.trim().parse::<u16>().map_err(|_| format!("bad server `{srv}`"))?;
+    let (at, restart_after) = match when.split_once('+') {
+        Some((a, r)) => (secs(a)?, secs(r)?),
+        None => (secs(when)?, 0),
+    };
+    Ok(FaultEvent::Crash { server, at, restart_after })
+}
+
+fn parse_slow(body: &str) -> Result<FaultEvent, String> {
+    let (spec, from, until) = window(body)?;
+    let (p, f) = spec.split_once('x').ok_or_else(|| format!("`{spec}`: expected proc x factor"))?;
+    let proc = p.trim().parse::<u16>().map_err(|_| format!("bad server `{p}`"))?;
+    let factor = f.trim().parse::<f64>().map_err(|_| format!("bad factor `{f}`"))?;
+    Ok(FaultEvent::SlowNode { proc, factor, from, until })
+}
+
+fn parse_burst(body: &str) -> Result<FaultEvent, String> {
+    let (spec, from, until) = window(body)?;
+    let (link, prob) =
+        spec.rsplit_once(':').ok_or_else(|| format!("`{spec}`: expected a-b:prob"))?;
+    let (a, b) = link.split_once('-').ok_or_else(|| format!("`{link}`: expected a-b link"))?;
+    Ok(FaultEvent::DropBurst {
+        link: (
+            a.trim().parse().map_err(|_| format!("bad server `{a}`"))?,
+            b.trim().parse().map_err(|_| format!("bad server `{b}`"))?,
+        ),
+        prob: prob.trim().parse().map_err(|_| format!("bad probability `{prob}`"))?,
+        from,
+        until,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_empty_and_inert_by_construction() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        assert_eq!(p, FaultPlan::default());
+        assert!(p.validate(3, 3).is_ok());
+    }
+
+    #[test]
+    fn parse_full_dsl() {
+        let p = FaultPlan::parse(
+            "partition:0,1|2@10-40; crash:1@20+15; slow:2x4@10-30; burst:0-1:0.3@5-25",
+        )
+        .unwrap();
+        assert_eq!(p.events.len(), 4);
+        assert_eq!(
+            p.events[0],
+            FaultEvent::Partition {
+                groups: vec![vec![0, 1], vec![2]],
+                from: 10 * SEC,
+                until: 40 * SEC
+            }
+        );
+        assert_eq!(
+            p.events[1],
+            FaultEvent::Crash { server: 1, at: 20 * SEC, restart_after: 15 * SEC }
+        );
+        assert_eq!(
+            p.events[2],
+            FaultEvent::SlowNode { proc: 2, factor: 4.0, from: 10 * SEC, until: 30 * SEC }
+        );
+        assert_eq!(
+            p.events[3],
+            FaultEvent::DropBurst { link: (0, 1), prob: 0.3, from: 5 * SEC, until: 25 * SEC }
+        );
+        assert!(p.validate(3, 3).is_ok());
+    }
+
+    #[test]
+    fn parse_crash_without_restart() {
+        let p = FaultPlan::parse("crash:2@7.5").unwrap();
+        assert_eq!(
+            p.events[0],
+            FaultEvent::Crash { server: 2, at: (7.5 * SEC as f64) as Time, restart_after: 0 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("partition:0,1@10").is_err(), "missing window end");
+        assert!(FaultPlan::parse("crash:x@3").is_err(), "bad server");
+        assert!(FaultPlan::parse("meteor:1@2-3").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("slow:1@0-1").is_err(), "missing factor");
+        assert!(FaultPlan::parse("burst:0-1@5-25").is_err(), "missing probability");
+        // a sub-1 factor parses but fails shape validation
+        let p = FaultPlan::parse("slow:1x0.5@0-1").unwrap();
+        assert!(p.validate(3, 3).is_err());
+    }
+
+    #[test]
+    fn validate_catches_shape_errors() {
+        let bad_region = FaultPlan::none().with(FaultEvent::Partition {
+            groups: vec![vec![0], vec![7]],
+            from: 0,
+            until: SEC,
+        });
+        assert!(bad_region.validate(3, 3).is_err());
+
+        let dup_region = FaultPlan::none().with(FaultEvent::Partition {
+            groups: vec![vec![0, 1], vec![1]],
+            from: 0,
+            until: SEC,
+        });
+        assert!(dup_region.validate(3, 3).is_err());
+
+        let bad_server =
+            FaultPlan::none().with(FaultEvent::Crash { server: 5, at: 0, restart_after: 0 });
+        assert!(bad_server.validate(3, 3).is_err());
+
+        let empty_window = FaultPlan::none().with(FaultEvent::SlowNode {
+            proc: 0,
+            factor: 2.0,
+            from: SEC,
+            until: SEC,
+        });
+        assert!(empty_window.validate(3, 3).is_err());
+
+        let bad_prob = FaultPlan::none().with(FaultEvent::DropBurst {
+            link: (0, 1),
+            prob: 1.5,
+            from: 0,
+            until: SEC,
+        });
+        assert!(bad_prob.validate(3, 3).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_overlapping_windows_on_one_target() {
+        // one slow factor per proc: overlapping windows would mis-model
+        let slow_overlap = FaultPlan::parse("slow:2x4@10-30;slow:2x2@20-40").unwrap();
+        assert!(slow_overlap.validate(3, 3).is_err());
+        let slow_disjoint = FaultPlan::parse("slow:2x4@10-30;slow:2x2@30-40").unwrap();
+        assert!(slow_disjoint.validate(3, 3).is_ok());
+        let slow_two_procs = FaultPlan::parse("slow:1x4@10-30;slow:2x2@20-40").unwrap();
+        assert!(slow_two_procs.validate(3, 3).is_ok());
+
+        // one up/down bit per server: a second crash inside the first's
+        // down window (incl. a never-restarting one) is rejected
+        let crash_overlap = FaultPlan::parse("crash:1@10+20;crash:1@15+5").unwrap();
+        assert!(crash_overlap.validate(3, 3).is_err());
+        let crash_after_dead = FaultPlan::parse("crash:1@10;crash:1@50+5").unwrap();
+        assert!(crash_after_dead.validate(3, 3).is_err(), "never-restarts stays down");
+        let crash_sequential = FaultPlan::parse("crash:1@10+5;crash:1@30+5").unwrap();
+        assert!(crash_sequential.validate(3, 3).is_ok());
+        let crash_two_servers = FaultPlan::parse("crash:1@10+20;crash:2@15+5").unwrap();
+        assert!(crash_two_servers.validate(3, 3).is_ok());
+
+        // bursts compose — overlap on the same link is fine
+        let burst_overlap =
+            FaultPlan::parse("burst:0-1:0.3@5-25;burst:0-1:0.2@10-30").unwrap();
+        assert!(burst_overlap.validate(3, 3).is_ok());
+    }
+}

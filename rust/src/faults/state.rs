@@ -1,0 +1,428 @@
+//! Proc-level fault machinery: the lowered transition [`Timeline`] the
+//! simulator consumes between events, and the time-varying [`FaultState`]
+//! reachability view the network consults on every send.
+//!
+//! [`lower`] translates a role-level [`FaultPlan`] into [`Change`]s using
+//! the experiment runner's actor layout (servers are procs `0..s`; every
+//! proc has a region). The timeline is sorted by time with plan order
+//! breaking ties, so the same plan always replays the same schedule.
+
+use crate::faults::plan::{FaultEvent, FaultPlan};
+use crate::sim::{ProcId, Time};
+
+/// Lifecycle notification delivered to an actor when a fault transition
+/// targets it directly (see [`crate::sim::des::Actor::on_fault`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultHook {
+    /// The process just lost all volatile state and is down.
+    Crash,
+    /// The process is back up (empty) and may start recovery.
+    Restart,
+}
+
+/// One lowered transition of the fault state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Change {
+    /// Activate partition `id`: `group_of[p]` is proc `p`'s side of the cut.
+    PartitionStart { id: usize, group_of: Vec<u8> },
+    PartitionEnd { id: usize },
+    Crash { proc: u32 },
+    Restart { proc: u32 },
+    SlowStart { proc: u32, factor: f64 },
+    SlowEnd { proc: u32 },
+    /// `a`/`b` are *machine* indices (the runner lays servers out on
+    /// machines `0..s`, so a server index is its machine index)
+    BurstStart { a: u32, b: u32, prob: f64 },
+    BurstEnd { a: u32, b: u32 },
+}
+
+/// Time-sorted transition schedule (a cursor over lowered changes).
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    /// sorted ascending by time; ties keep lowering order
+    changes: Vec<(Time, Change)>,
+    cursor: usize,
+}
+
+impl Timeline {
+    pub fn new(mut changes: Vec<(Time, Change)>) -> Self {
+        changes.sort_by_key(|&(t, _)| t); // stable: ties keep plan order
+        Self { changes, cursor: 0 }
+    }
+
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.changes.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.changes.len()
+    }
+
+    /// Time of the next unapplied transition.
+    pub fn peek_at(&self) -> Option<Time> {
+        self.changes.get(self.cursor).map(|&(t, _)| t)
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, Change)> {
+        let item = self.changes.get(self.cursor).cloned();
+        if item.is_some() {
+            self.cursor += 1;
+        }
+        item
+    }
+}
+
+/// Lower a role-level plan against an actor layout. `region_of` is the
+/// topology's per-proc region table; servers occupy procs `0..n_servers`
+/// (the runner's layout invariant); `n_regions` is the topology's
+/// *configured* region count — regions may exist without any proc in a
+/// small deployment, and a plan naming one must still lower cleanly
+/// (its group simply contains no procs). Panics on a plan that fails
+/// [`FaultPlan::validate`] — experiment construction is the right time
+/// to find out.
+pub fn lower(plan: &FaultPlan, region_of: &[u8], n_servers: usize, n_regions: usize) -> Timeline {
+    let n_regions =
+        n_regions.max(region_of.iter().copied().max().map_or(1, |m| m as usize + 1));
+    if let Err(e) = plan.validate(n_servers, n_regions) {
+        panic!("invalid fault plan: {e}");
+    }
+    let mut changes = Vec::new();
+    let mut next_partition = 0usize;
+    for ev in &plan.events {
+        match ev {
+            FaultEvent::Partition { groups, from, until } => {
+                // region → group id; unlisted regions share the rest-group
+                let rest = groups.len() as u8;
+                let mut group_of_region = vec![rest; n_regions];
+                for (gi, g) in groups.iter().enumerate() {
+                    for &r in g {
+                        group_of_region[r as usize] = gi as u8;
+                    }
+                }
+                let group_of: Vec<u8> =
+                    region_of.iter().map(|&r| group_of_region[r as usize]).collect();
+                let id = next_partition;
+                next_partition += 1;
+                changes.push((*from, Change::PartitionStart { id, group_of }));
+                changes.push((*until, Change::PartitionEnd { id }));
+            }
+            FaultEvent::Crash { server, at, restart_after } => {
+                let proc = *server as u32; // layout: server i is proc i
+                changes.push((*at, Change::Crash { proc }));
+                if *restart_after > 0 {
+                    changes.push((*at + *restart_after, Change::Restart { proc }));
+                }
+            }
+            FaultEvent::SlowNode { proc, factor, from, until } => {
+                let proc = *proc as u32;
+                changes.push((*from, Change::SlowStart { proc, factor: *factor }));
+                changes.push((*until, Change::SlowEnd { proc }));
+            }
+            FaultEvent::DropBurst { link, prob, from, until } => {
+                let (a, b) = (link.0 as u32, link.1 as u32);
+                changes.push((*from, Change::BurstStart { a, b, prob: *prob }));
+                changes.push((*until, Change::BurstEnd { a, b }));
+            }
+        }
+    }
+    Timeline::new(changes)
+}
+
+/// The current reachability view. Consulted on every [`crate::sim::des::
+/// Ctx::send_after`]; [`FaultState::quiet`] keeps the fault-free fast
+/// path allocation- and branch-cheap.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    /// active partitions: (id, per-proc group)
+    partitions: Vec<(usize, Vec<u8>)>,
+    crashed: Vec<bool>,
+    crashed_n: usize,
+    /// per-proc latency multiplier (1.0 = nominal)
+    slow: Vec<f64>,
+    slow_n: usize,
+    /// active link bursts: (a, b, extra drop probability)
+    bursts: Vec<(u32, u32, f64)>,
+}
+
+impl FaultState {
+    pub fn new(n_procs: usize) -> Self {
+        Self {
+            partitions: Vec::new(),
+            crashed: vec![false; n_procs],
+            crashed_n: 0,
+            slow: vec![1.0; n_procs],
+            slow_n: 0,
+            bursts: Vec::new(),
+        }
+    }
+
+    /// No fault currently active — sends can skip every check.
+    #[inline]
+    pub fn quiet(&self) -> bool {
+        self.partitions.is_empty()
+            && self.crashed_n == 0
+            && self.slow_n == 0
+            && self.bursts.is_empty()
+    }
+
+    pub fn is_crashed(&self, p: ProcId) -> bool {
+        self.crashed[p.idx()]
+    }
+
+    /// Can a message travel `src → dst` right now? False when either
+    /// endpoint is crashed or any active partition separates them.
+    pub fn reachable(&self, src: ProcId, dst: ProcId) -> bool {
+        if self.crashed[src.idx()] || self.crashed[dst.idx()] {
+            return false;
+        }
+        self.partitions.iter().all(|(_, g)| g[src.idx()] == g[dst.idx()])
+    }
+
+    /// Latency multiplier for a message between `src` and `dst` (the
+    /// slower endpoint dominates).
+    pub fn latency_factor(&self, src: ProcId, dst: ProcId) -> f64 {
+        self.slow[src.idx()].max(self.slow[dst.idx()])
+    }
+
+    /// Extra drop probability from active bursts on the (symmetric)
+    /// link between two *machines*; overlapping bursts drop
+    /// independently. Machine granularity is what makes a burst
+    /// physical: the link between server machines a and b carries not
+    /// just server↔server re-sync chunks but every message between
+    /// their co-located processes (e.g. server a → monitor b candidate
+    /// traffic).
+    pub fn burst_prob(&self, src_machine: u32, dst_machine: u32) -> f64 {
+        let (s, d) = (src_machine, dst_machine);
+        let mut keep = 1.0;
+        for &(a, b, p) in &self.bursts {
+            if (a == s && b == d) || (a == d && b == s) {
+                keep *= 1.0 - p;
+            }
+        }
+        1.0 - keep
+    }
+
+    /// Apply one transition; returns the actor hook to dispatch, if the
+    /// change targets a process directly.
+    pub fn apply(&mut self, ch: &Change) -> Option<(u32, FaultHook)> {
+        match ch {
+            Change::PartitionStart { id, group_of } => {
+                debug_assert_eq!(group_of.len(), self.crashed.len());
+                self.partitions.push((*id, group_of.clone()));
+                None
+            }
+            Change::PartitionEnd { id } => {
+                self.partitions.retain(|(pid, _)| pid != id);
+                None
+            }
+            Change::Crash { proc } => {
+                if !self.crashed[*proc as usize] {
+                    self.crashed[*proc as usize] = true;
+                    self.crashed_n += 1;
+                }
+                Some((*proc, FaultHook::Crash))
+            }
+            Change::Restart { proc } => {
+                if self.crashed[*proc as usize] {
+                    self.crashed[*proc as usize] = false;
+                    self.crashed_n -= 1;
+                }
+                Some((*proc, FaultHook::Restart))
+            }
+            Change::SlowStart { proc, factor } => {
+                if self.slow[*proc as usize] == 1.0 && *factor != 1.0 {
+                    self.slow_n += 1;
+                }
+                self.slow[*proc as usize] = *factor;
+                None
+            }
+            Change::SlowEnd { proc } => {
+                if self.slow[*proc as usize] != 1.0 {
+                    self.slow_n -= 1;
+                }
+                self.slow[*proc as usize] = 1.0;
+                None
+            }
+            Change::BurstStart { a, b, prob } => {
+                self.bursts.push((*a, *b, *prob));
+                None
+            }
+            Change::BurstEnd { a, b } => {
+                // end the oldest matching burst; links are symmetric, so
+                // match either orientation (windows are well-nested in
+                // practice; plans rarely overlap the same link)
+                if let Some(i) = self.bursts.iter().position(|&(x, y, _)| {
+                    (x, y) == (*a, *b) || (x, y) == (*b, *a)
+                }) {
+                    self.bursts.remove(i);
+                }
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SEC;
+
+    fn pid(i: u32) -> ProcId {
+        ProcId(i)
+    }
+
+    #[test]
+    fn empty_timeline_is_quiet_forever() {
+        let t = Timeline::empty();
+        assert!(t.is_empty());
+        assert_eq!(t.peek_at(), None);
+        let s = FaultState::new(4);
+        assert!(s.quiet());
+        assert!(s.reachable(pid(0), pid(3)));
+        assert_eq!(s.latency_factor(pid(0), pid(1)), 1.0);
+        assert_eq!(s.burst_prob(0, 1), 0.0);
+    }
+
+    #[test]
+    fn lower_partition_by_region() {
+        // procs: servers 0,1,2 in regions 0,1,2; clients 3,4 in 0,1
+        let region_of = vec![0u8, 1, 2, 0, 1];
+        let plan = FaultPlan::none().with(FaultEvent::Partition {
+            groups: vec![vec![0, 1], vec![2]],
+            from: 10 * SEC,
+            until: 20 * SEC,
+        });
+        let mut t = lower(&plan, &region_of, 3, 3);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.peek_at(), Some(10 * SEC));
+
+        let mut s = FaultState::new(5);
+        let (_, start) = t.pop().unwrap();
+        assert!(s.apply(&start).is_none());
+        assert!(!s.quiet());
+        // within group {0,1}: servers 0,1 and clients 3,4 all connected
+        assert!(s.reachable(pid(0), pid(1)));
+        assert!(s.reachable(pid(0), pid(4)));
+        // across the cut: region 2 isolated
+        assert!(!s.reachable(pid(0), pid(2)));
+        assert!(!s.reachable(pid(2), pid(3)));
+        let (at, end) = t.pop().unwrap();
+        assert_eq!(at, 20 * SEC);
+        s.apply(&end);
+        assert!(s.quiet());
+        assert!(s.reachable(pid(0), pid(2)));
+        assert_eq!(t.pop(), None);
+    }
+
+    #[test]
+    fn lower_rest_group_connects_unlisted_regions() {
+        let region_of = vec![0u8, 1, 2];
+        let plan = FaultPlan::none().with(FaultEvent::Partition {
+            groups: vec![vec![0]],
+            from: 0,
+            until: SEC,
+        });
+        let mut t = lower(&plan, &region_of, 3, 3);
+        let mut s = FaultState::new(3);
+        let (_, ch) = t.pop().unwrap();
+        s.apply(&ch);
+        assert!(!s.reachable(pid(0), pid(1)), "listed region cut off");
+        assert!(s.reachable(pid(1), pid(2)), "unlisted regions stay connected");
+    }
+
+    #[test]
+    fn crash_restart_hooks_and_reachability() {
+        let region_of = vec![0u8, 0, 0];
+        let plan = FaultPlan::none().with(FaultEvent::Crash {
+            server: 1,
+            at: 5 * SEC,
+            restart_after: 3 * SEC,
+        });
+        let mut t = lower(&plan, &region_of, 3, 3);
+        let mut s = FaultState::new(3);
+        let (at, crash) = t.pop().unwrap();
+        assert_eq!(at, 5 * SEC);
+        assert_eq!(s.apply(&crash), Some((1, FaultHook::Crash)));
+        assert!(s.is_crashed(pid(1)));
+        assert!(!s.reachable(pid(0), pid(1)));
+        assert!(!s.reachable(pid(1), pid(2)));
+        assert!(s.reachable(pid(0), pid(2)), "others unaffected");
+        let (at, restart) = t.pop().unwrap();
+        assert_eq!(at, 8 * SEC);
+        assert_eq!(s.apply(&restart), Some((1, FaultHook::Restart)));
+        assert!(s.quiet());
+        assert!(s.reachable(pid(0), pid(1)));
+    }
+
+    #[test]
+    fn crash_without_restart_stays_down() {
+        let plan =
+            FaultPlan::none().with(FaultEvent::Crash { server: 0, at: SEC, restart_after: 0 });
+        let t = lower(&plan, &[0u8, 0], 2, 1);
+        assert_eq!(t.len(), 1, "no restart transition scheduled");
+    }
+
+    #[test]
+    fn slow_node_scales_both_directions() {
+        let mut s = FaultState::new(3);
+        s.apply(&Change::SlowStart { proc: 1, factor: 4.0 });
+        assert!(!s.quiet());
+        assert_eq!(s.latency_factor(pid(0), pid(1)), 4.0);
+        assert_eq!(s.latency_factor(pid(1), pid(2)), 4.0);
+        assert_eq!(s.latency_factor(pid(0), pid(2)), 1.0);
+        assert!(s.reachable(pid(0), pid(1)), "slow is not partitioned");
+        s.apply(&Change::SlowEnd { proc: 1 });
+        assert!(s.quiet());
+    }
+
+    #[test]
+    fn bursts_are_symmetric_and_compose() {
+        let mut s = FaultState::new(3);
+        s.apply(&Change::BurstStart { a: 0, b: 1, prob: 0.5 });
+        assert_eq!(s.burst_prob(0, 1), 0.5);
+        assert_eq!(s.burst_prob(1, 0), 0.5);
+        assert_eq!(s.burst_prob(0, 2), 0.0);
+        // starting the reverse orientation composes independently...
+        s.apply(&Change::BurstStart { a: 1, b: 0, prob: 0.5 });
+        assert!((s.burst_prob(0, 1) - 0.75).abs() < 1e-12, "independent drops");
+        // ...and ending twice clears both, regardless of orientation
+        s.apply(&Change::BurstEnd { a: 0, b: 1 });
+        s.apply(&Change::BurstEnd { a: 0, b: 1 });
+        assert!(s.quiet());
+    }
+
+    #[test]
+    fn overlapping_partitions_must_all_agree() {
+        let mut s = FaultState::new(4);
+        s.apply(&Change::PartitionStart { id: 0, group_of: vec![0, 0, 1, 1] });
+        s.apply(&Change::PartitionStart { id: 1, group_of: vec![0, 1, 0, 1] });
+        assert!(!s.reachable(pid(0), pid(1)), "cut by partition 1");
+        assert!(!s.reachable(pid(0), pid(2)), "cut by partition 0");
+        assert!(!s.reachable(pid(0), pid(3)));
+        s.apply(&Change::PartitionEnd { id: 1 });
+        assert!(s.reachable(pid(0), pid(1)));
+        assert!(!s.reachable(pid(0), pid(2)));
+    }
+
+    #[test]
+    fn timeline_sorts_stable_by_time() {
+        let mut t = Timeline::new(vec![
+            (2 * SEC, Change::Crash { proc: 0 }),
+            (SEC, Change::SlowStart { proc: 1, factor: 2.0 }),
+            (SEC, Change::SlowStart { proc: 2, factor: 3.0 }),
+        ]);
+        assert_eq!(t.pop().unwrap().0, SEC);
+        match t.pop().unwrap() {
+            (at, Change::SlowStart { proc, .. }) => {
+                assert_eq!(at, SEC);
+                assert_eq!(proc, 2, "equal times keep insertion order");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(t.pop().unwrap().0, 2 * SEC);
+    }
+}

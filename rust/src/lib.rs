@@ -39,6 +39,15 @@
 //! scales horizontally (`exp::scenarios::scaleout_conjunctive`,
 //! `benches/scaleout_throughput.rs`).
 //!
+//! Fault injection: experiments carry a declarative, seed-deterministic
+//! [`faults::FaultPlan`] — network partitions by region group, server
+//! crash/restart cycles with peer re-sync, slow nodes, drop bursts —
+//! lowered to a transition timeline the simulator applies between
+//! events. The detect-rollback machinery is thereby exercised under the
+//! CAP conditions that justify it (§VI), and the violation detection-
+//! latency CDF becomes a reproducible artifact
+//! ([`exp::runner::ExpResult::detection_cdf`]).
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured numbers.
 
@@ -47,6 +56,7 @@ pub mod client;
 pub mod clock;
 pub mod detect;
 pub mod exp;
+pub mod faults;
 pub mod metrics;
 pub mod predicate;
 pub mod rollback;

@@ -8,16 +8,24 @@
 //!             [--topo aws-global|aws-regional|lab50|lab100]
 //!             [--recovery none|notify|restore] [--accel native|xla]
 //!             [--put-pct 50] [--scale 0.05] [--seed 42] [--eps-ms inf]
+//!             [--fault-plan "partition:0,1|2@10-40;crash:1@20+15"]
 //! optikv table2        — print the consistency presets
 //! optikv latency-demo  — quick Table-III style latency histogram
 //! optikv scaleout      — throughput vs cluster size at fixed N=3
 //! optikv pipeline      — throughput/latency vs client pipeline depth
+//! optikv faults        — partition / crash-churn / detection-CDF demos
 //! ```
+//!
+//! Fault-plan DSL (windows in virtual seconds): `partition:0,1|2@10-40`
+//! cuts region group {0,1} from {2}; `crash:1@20+15` crashes server 1 at
+//! 20 s and restarts it 15 s later; `slow:2x4@10-30` makes server 2's
+//! links 4× slower; `burst:0-1:0.3@5-25` adds 30 % loss on link 0↔1.
 
 use optikv::client::consistency::ConsistencyCfg;
 use optikv::exp::config::{AccelKind, AppKind, ExpConfig, TopoKind};
 use optikv::exp::runner::run;
 use optikv::exp::scenarios;
+use optikv::faults::FaultPlan;
 use optikv::metrics::report;
 use optikv::rollback::recovery::RecoveryPolicy;
 use optikv::sim::SEC;
@@ -32,9 +40,10 @@ fn main() {
         Some("latency-demo") => cmd_latency_demo(&args),
         Some("scaleout") => cmd_scaleout(&args),
         Some("pipeline") => cmd_pipeline(&args),
+        Some("faults") => cmd_faults(&args),
         _ => {
             eprintln!(
-                "usage: optikv <run|table2|latency-demo|scaleout|pipeline> [flags]  (see module docs)"
+                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults> [flags]  (see module docs)"
             );
             std::process::exit(2);
         }
@@ -108,6 +117,20 @@ fn cmd_run(args: &Args) {
             cfg.eps_ms = e.parse().expect("bad --eps-ms");
         }
     }
+    if let Some(spec) = args.get("fault-plan") {
+        let plan = match FaultPlan::parse(spec) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("bad --fault-plan: {e}");
+                std::process::exit(2);
+            }
+        };
+        if let Err(e) = plan.validate(cfg.n_servers(), cfg.n_regions()) {
+            eprintln!("bad --fault-plan: {e}");
+            std::process::exit(2);
+        }
+        cfg.fault_plan = plan;
+    }
 
     eprintln!(
         "running `{}` on {} ({} clients, {:?}, monitors={}) ...",
@@ -136,6 +159,17 @@ fn cmd_run(args: &Args) {
             stats::percentile(&res.detection_latencies_ms, 99.0),
             stats::max(&res.detection_latencies_ms)
         );
+    }
+    if res.sim_stats.fault_transitions > 0 {
+        println!(
+            "faults: {} transitions, {} msgs cut, {} crashes, {} re-syncs ({} versions merged)",
+            res.sim_stats.fault_transitions,
+            res.sim_stats.fault_dropped,
+            res.crashes,
+            res.resyncs,
+            res.resync_keys,
+        );
+        print!("{}", report::detection_cdf_summary(&res.detection_cdf));
     }
 }
 
@@ -180,6 +214,36 @@ fn cmd_scaleout(args: &Args) {
         ]);
     }
     t.print();
+}
+
+fn cmd_faults(args: &Args) {
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", 42);
+
+    println!("== partition (AWS global, region 2 cut for the middle third) ==");
+    let res = run(&scenarios::partition_coloring(scale, seed));
+    println!("{}", report::summarize(&res));
+    println!(
+        "failed ops {} | restarts {} | msgs cut by faults {}",
+        res.ops_failed, res.restarts, res.sim_stats.fault_dropped
+    );
+    print!("{}", report::detection_cdf_summary(&res.detection_cdf));
+
+    println!("\n== crash churn (two crash/restart + peer re-sync cycles) ==");
+    let res = run(&scenarios::crash_churn_conjunctive(scale, seed));
+    println!("{}", report::summarize(&res));
+    println!(
+        "crashes {} | re-syncs {} | versions merged back {}",
+        res.crashes, res.resyncs, res.resync_keys
+    );
+
+    for regional in [true, false] {
+        let label = if regional { "regional (5 AZ)" } else { "global (3 regions)" };
+        println!("\n== detection-latency CDF, {label}, degraded network ==");
+        let res = run(&scenarios::detection_cdf_faulted(regional, scale, seed));
+        println!("{}", report::summarize(&res));
+        print!("{}", report::detection_cdf_summary(&res.detection_cdf));
+    }
 }
 
 fn cmd_pipeline(args: &Args) {

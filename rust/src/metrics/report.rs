@@ -3,7 +3,7 @@
 //! summary blocks.
 
 use crate::exp::runner::ExpResult;
-use crate::util::stats::{self, Histogram, Table};
+use crate::util::stats::{self, Cdf, Histogram, Table};
 
 /// Benefit of `ours` over `baseline` in percent ((ours - base) / base).
 pub fn benefit_pct(ours: f64, baseline: f64) -> f64 {
@@ -65,6 +65,29 @@ pub fn latency_table(lat_ms: &[f64]) -> String {
     out
 }
 
+/// Render the violation detection-latency CDF: the quantile ladder plus
+/// the two §VI headline fractions (under 50 ms — the regional claim —
+/// and under 5 s — the global one).
+pub fn detection_cdf_summary(cdf: &Cdf) -> String {
+    if cdf.is_empty() {
+        return "detection-latency CDF: no violations detected\n".to_string();
+    }
+    let mut t = Table::new(&["Quantile", "Detection latency (ms)"]);
+    for (label, q) in
+        [("p50", 0.5), ("p90", 0.9), ("p99", 0.99), ("p99.9", 0.999), ("max", 1.0)]
+    {
+        t.row(&[label.to_string(), format!("{:.2}", cdf.quantile(q))]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "n={}  P[≤ 50 ms]={:.3}  P[≤ 5 s]={:.3}\n",
+        cdf.len(),
+        cdf.fraction_le(50.0),
+        cdf.fraction_le(5_000.0),
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +108,16 @@ mod tests {
         // bucket boundaries of the paper's Table III
         assert!(s.contains("0 - 50"));
         assert!(s.contains("10,000 - 17,000"));
+    }
+
+    #[test]
+    fn cdf_summary_renders() {
+        let cdf = Cdf::new((1..=100).map(|i| i as f64).collect());
+        let s = detection_cdf_summary(&cdf);
+        assert!(s.contains("p99.9"));
+        assert!(s.contains("n=100"));
+        assert!(s.contains("P[≤ 50 ms]=0.500"));
+        let empty = detection_cdf_summary(&Cdf::default());
+        assert!(empty.contains("no violations"));
     }
 }

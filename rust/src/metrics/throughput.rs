@@ -140,22 +140,14 @@ impl MetricsHub {
     /// interpretable: deeper pipelines trade per-op latency (queueing in
     /// the client) for wave throughput.
     pub fn op_latency_percentiles_ms(&self, ps: &[f64]) -> Vec<f64> {
-        let mut ms: Vec<f64> = self
+        let ms: Vec<f64> = self
             .op_latencies
             .iter()
             .map(|&l| l as f64 / crate::sim::MS as f64)
             .collect();
-        ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        ps.iter()
-            .map(|&p| {
-                if ms.is_empty() {
-                    0.0
-                } else {
-                    let rank = ((p / 100.0) * (ms.len() as f64 - 1.0)).round() as usize;
-                    ms[rank.min(ms.len() - 1)]
-                }
-            })
-            .collect()
+        // one shared rank convention for every percentile in the crate
+        let cdf = crate::util::stats::Cdf::new(ms);
+        ps.iter().map(|&p| cdf.quantile(p / 100.0)).collect()
     }
 
     /// Single-percentile convenience over [`Self::op_latency_percentiles_ms`].

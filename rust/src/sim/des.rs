@@ -5,6 +5,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::clock::hvc::Millis;
+use crate::faults::state::{FaultHook, FaultState, Timeline};
 use crate::sim::clockmodel::ClockModel;
 use crate::sim::machine::Machines;
 use crate::sim::msg::{Msg, MsgClass, N_MSG_CLASSES};
@@ -20,6 +21,12 @@ pub trait Actor {
     fn on_msg(&mut self, ctx: &mut Ctx, from: ProcId, msg: Msg);
     /// A self-scheduled timer fired.
     fn on_timer(&mut self, _ctx: &mut Ctx, _tag: u64) {}
+    /// A fault transition targeted this process directly (crash /
+    /// restart from the installed [`Timeline`]). Timers and in-flight
+    /// messages keep being *delivered* to a crashed actor — a real
+    /// process cannot intercept the network — so actors that can crash
+    /// must gate their handlers on the lifecycle state this hook sets.
+    fn on_fault(&mut self, _ctx: &mut Ctx, _hook: FaultHook) {}
     /// Downcast hook so the experiment runner can pull stats after a run.
     fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
         None
@@ -64,6 +71,11 @@ pub struct SimStats {
     pub sent: [u64; N_MSG_CLASSES],
     pub dropped: [u64; N_MSG_CLASSES],
     pub events: u64,
+    /// messages dropped by the fault model (partition cut, crashed
+    /// endpoint, drop burst) — a subset of `dropped`
+    pub fault_dropped: u64,
+    /// fault-state transitions applied from the installed timeline
+    pub fault_transitions: u64,
 }
 
 impl SimStats {
@@ -89,6 +101,9 @@ pub struct SimCore {
     pub stats: SimStats,
     /// HVC ε (ms) — global config, read by servers/monitors via ctx
     pub eps_ms: Millis,
+    /// time-varying reachability view ([`crate::faults`]); quiet unless
+    /// a fault timeline is installed and a window is active
+    pub faults: FaultState,
 }
 
 /// Per-dispatch context handed to actors.
@@ -128,14 +143,51 @@ impl<'a> Ctx<'a> {
 
     /// Send after holding the message locally for `delay` ns (e.g. a reply
     /// leaving only once the CPU finished the request).
+    ///
+    /// The fault view is consulted first: a partitioned or crashed
+    /// endpoint silently loses the message (feeding the quorum timeout
+    /// path in the client), an active drop burst loses it with extra
+    /// probability, and a slow node stretches its delivery latency. With
+    /// no active fault none of these checks consumes an RNG draw, so a
+    /// run under `FaultPlan::none()` is bit-identical to the pre-fault
+    /// code path.
     pub fn send_after(&mut self, delay: Time, dst: ProcId, msg: Msg) {
         let class = msg.class() as usize;
         self.core.stats.sent[class] += 1;
-        if self.core.topo.drops(&mut self.core.rng_net) {
+        if !self.core.faults.quiet() {
+            if !self.core.faults.reachable(self.self_id, dst) {
+                self.core.stats.dropped[class] += 1;
+                self.core.stats.fault_dropped += 1;
+                return;
+            }
+            // bursts are per machine-pair: the link between two server
+            // machines carries candidate traffic to their co-located
+            // monitors, not just server↔server re-sync chunks
+            let burst = self.core.faults.burst_prob(
+                self.core.topo.machine_of[self.self_id.idx()],
+                self.core.topo.machine_of[dst.idx()],
+            );
+            if burst > 0.0 && self.core.rng_net.chance(burst) {
+                self.core.stats.dropped[class] += 1;
+                self.core.stats.fault_dropped += 1;
+                return;
+            }
+        }
+        if self.core.topo.drops(self.self_id, dst, &mut self.core.rng_net) {
             self.core.stats.dropped[class] += 1;
             return;
         }
-        let lat = self.core.topo.latency(self.self_id, dst, &mut self.core.rng_net);
+        let mut lat = self.core.topo.latency(self.self_id, dst, &mut self.core.rng_net);
+        if !self.core.faults.quiet() {
+            // a degraded NIC slows the node's *network* links only —
+            // same-machine loopback is exempt, mirroring the loss model
+            let same_machine = self.core.topo.machine_of[self.self_id.idx()]
+                == self.core.topo.machine_of[dst.idx()];
+            let factor = self.core.faults.latency_factor(self.self_id, dst);
+            if factor != 1.0 && !same_machine {
+                lat = (lat as f64 * factor) as Time;
+            }
+        }
         let at = self.core.now + delay + lat;
         self.core.push(at, dst, EvKind::Msg { from: self.self_id, msg });
     }
@@ -182,6 +234,8 @@ pub struct Sim {
     core: SimCore,
     actors: Vec<Option<Box<dyn Actor>>>,
     started: bool,
+    /// lowered fault schedule; empty unless installed
+    timeline: Timeline,
 }
 
 impl Sim {
@@ -206,10 +260,18 @@ impl Sim {
                 rng_actors,
                 stats: SimStats::default(),
                 eps_ms,
+                faults: FaultState::new(n),
             },
             actors: Vec::new(),
             started: false,
+            timeline: Timeline::empty(),
         }
+    }
+
+    /// Install a lowered fault schedule ([`crate::faults::lower`]). The
+    /// empty timeline (the default) leaves every run untouched.
+    pub fn install_faults(&mut self, timeline: Timeline) {
+        self.timeline = timeline;
     }
 
     /// Register the next actor; ids must line up with the topology's
@@ -247,6 +309,33 @@ impl Sim {
         self.actors[idx] = Some(actor);
     }
 
+    /// Apply the next due fault transition and, for crash/restart,
+    /// deliver the lifecycle hook to the targeted actor (the restart
+    /// hook is where a server launches its peer re-sync).
+    fn apply_next_fault(&mut self) {
+        let (_, change) = self.timeline.pop().expect("fault transition due");
+        self.core.stats.fault_transitions += 1;
+        if let Some((proc, hook)) = self.core.faults.apply(&change) {
+            let idx = proc as usize;
+            let mut actor =
+                self.actors[idx].take().unwrap_or_else(|| panic!("actor {idx} missing"));
+            let mut ctx = Ctx { core: &mut self.core, self_id: ProcId(proc) };
+            actor.on_fault(&mut ctx, hook);
+            self.actors[idx] = Some(actor);
+        }
+    }
+
+    /// Is the next thing to happen a fault transition (rather than a
+    /// heap event)? Transitions win ties so a cut at time T affects
+    /// messages sent at T.
+    fn fault_due(&self) -> Option<Time> {
+        let next_fault = self.timeline.peek_at()?;
+        match self.core.heap.peek() {
+            Some(Reverse(ev)) if ev.at < next_fault => None,
+            _ => Some(next_fault),
+        }
+    }
+
     fn start_all(&mut self) {
         if self.started {
             return;
@@ -269,6 +358,14 @@ impl Sim {
     pub fn run_until(&mut self, until: Time) {
         self.start_all();
         loop {
+            if let Some(at) = self.fault_due() {
+                if at > until {
+                    break;
+                }
+                self.core.now = at;
+                self.apply_next_fault();
+                continue;
+            }
             let next_at = match self.core.heap.peek() {
                 Some(Reverse(ev)) => ev.at,
                 None => break,
@@ -287,7 +384,16 @@ impl Sim {
     /// Drain every queued event (until the system goes quiet).
     pub fn run_to_quiescence(&mut self, hard_cap: Time) {
         self.start_all();
-        while let Some(Reverse(ev)) = self.core.heap.pop() {
+        loop {
+            if let Some(at) = self.fault_due() {
+                if at > hard_cap {
+                    break;
+                }
+                self.core.now = at;
+                self.apply_next_fault();
+                continue;
+            }
+            let Some(Reverse(ev)) = self.core.heap.pop() else { break };
             if ev.at > hard_cap {
                 break;
             }
@@ -418,5 +524,34 @@ mod tests {
         assert_eq!(sim.stats().sent_class(MsgClass::Request), 5);
         assert_eq!(sim.stats().sent_class(MsgClass::Reply), 5);
         assert!(sim.stats().events >= 10);
+    }
+
+    #[test]
+    fn installed_partition_cuts_the_ping_pong() {
+        use crate::faults::state::Change;
+        // cut the two procs apart just after the first round trip; the
+        // pinger has no retransmit, so the chain stalls at the cut
+        let (mut sim, log) = two_proc_sim(1);
+        sim.install_faults(Timeline::new(vec![(
+            25 * MS,
+            Change::PartitionStart { id: 0, group_of: vec![0, 1] },
+        )]));
+        sim.run_until(10 * SEC);
+        let n = log.borrow().len();
+        assert!(n < 5, "the cut must stall the exchange (got {n} round trips)");
+        assert!(sim.stats().fault_dropped > 0, "a message crossed the cut");
+        assert_eq!(sim.stats().fault_transitions, 1);
+    }
+
+    #[test]
+    fn empty_timeline_is_bit_identical_to_no_timeline() {
+        let (mut a, la) = two_proc_sim(11);
+        let (mut b, lb) = two_proc_sim(11);
+        b.install_faults(Timeline::empty());
+        a.run_until(SEC);
+        b.run_until(SEC);
+        assert_eq!(*la.borrow(), *lb.borrow());
+        assert_eq!(a.stats().events, b.stats().events);
+        assert_eq!(b.stats().fault_dropped, 0);
     }
 }

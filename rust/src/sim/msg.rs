@@ -9,6 +9,7 @@ use crate::clock::hvc::{Hvc, Millis};
 use crate::detect::candidate::{Candidate, ViolationReport};
 use crate::predicate::spec::PredicateSpec;
 use crate::store::protocol::{ServerOp, ServerReply};
+use crate::store::value::{KeyId, Versioned};
 
 /// Rollback / recovery control messages (controller ↔ servers/clients).
 #[derive(Debug, Clone)]
@@ -28,6 +29,21 @@ pub enum RollbackMsg {
     RestoredAck { epoch: u64, from_window_log: bool },
     /// controller → servers and clients: resume computation.
     Resume { epoch: u64 },
+}
+
+/// Crash-recovery re-sync (restarting server ↔ live preference-list
+/// peers, [`crate::faults`]): a replica that restarts after a crash has
+/// lost all volatile state and catches up on the partitions it owns
+/// before serving again (Dynamo-style replica synchronization).
+#[derive(Debug, Clone)]
+pub enum SyncMsg {
+    /// restarting server `server` → every peer: send me your copies of
+    /// the keys I own. `epoch` guards against stale chunks from an
+    /// earlier recovery.
+    Request { epoch: u64, server: u16 },
+    /// peer → restarting server: sibling lists of the shared keys,
+    /// sorted by key id so the merge order is deterministic.
+    Chunk { epoch: u64, data: Vec<(KeyId, Vec<Versioned>)> },
 }
 
 /// Everything that travels between actors.
@@ -50,6 +66,8 @@ pub enum Msg {
     /// server → monitor: a predicate inferred at runtime from variable
     /// naming conventions (§V "Automatic inference").
     RegisterPred(Box<PredicateSpec>),
+    /// crash-recovery re-sync between servers.
+    Sync(Box<SyncMsg>),
 }
 
 impl Msg {
@@ -62,6 +80,7 @@ impl Msg {
             Msg::Violation(_) => MsgClass::Violation,
             Msg::Rollback(_) => MsgClass::Rollback,
             Msg::RegisterPred(_) => MsgClass::Register,
+            Msg::Sync(_) => MsgClass::Sync,
         }
     }
 }
@@ -74,6 +93,7 @@ pub enum MsgClass {
     Violation = 3,
     Rollback = 4,
     Register = 5,
+    Sync = 6,
 }
 
-pub const N_MSG_CLASSES: usize = 6;
+pub const N_MSG_CLASSES: usize = 7;

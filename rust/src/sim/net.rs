@@ -84,9 +84,22 @@ impl Topology {
         ms(base * (1.0 + sample * self.jitter_frac))
     }
 
-    /// Should this message be dropped?
-    pub fn drops(&self, rng: &mut Rng) -> bool {
-        self.drop_prob > 0.0 && rng.chance(self.drop_prob)
+    /// Should this message be dropped by the i.i.d. loss model?
+    ///
+    /// Same-machine (loopback) traffic — a server and its co-located
+    /// monitor — is exempt: loopback loss is physically implausible, and
+    /// dropping candidate messages on the server→monitor hop would
+    /// silently skew the monitoring-overhead numbers. Loopback also
+    /// consumes no RNG draw, so the loss stream over real links is
+    /// unaffected by how much loopback chatter a run generates.
+    pub fn drops(&self, src: ProcId, dst: ProcId, rng: &mut Rng) -> bool {
+        if self.drop_prob <= 0.0 {
+            return false;
+        }
+        if src == dst || self.machine_of[src.idx()] == self.machine_of[dst.idx()] {
+            return false;
+        }
+        rng.chance(self.drop_prob)
     }
 
     pub fn n_procs(&self) -> usize {
@@ -202,7 +215,27 @@ mod tests {
         let mut topo = Topology::flat(2, 1.0);
         topo.drop_prob = 0.5;
         let mut rng = Rng::new(9);
-        let drops = (0..10_000).filter(|_| topo.drops(&mut rng)).count();
+        let drops = (0..10_000)
+            .filter(|_| topo.drops(ProcId(0), ProcId(1), &mut rng))
+            .count();
         assert!((4_500..5_500).contains(&drops));
+    }
+
+    #[test]
+    fn loopback_never_drops() {
+        let mut b = TopologyBuilder::new();
+        let (_s0, m0) = b.add_machine_proc(0, 2);
+        let mon = b.add_colocated_proc(m0);
+        let (s1, _) = b.add_machine_proc(0, 2);
+        let (mut topo, _) = b.build(Topology::aws_regional(1), 0.0);
+        topo.drop_prob = 1.0; // certain loss on real links
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            assert!(
+                !topo.drops(ProcId(0), ProcId(mon), &mut rng),
+                "co-located traffic is exempt from i.i.d. loss"
+            );
+        }
+        assert!(topo.drops(ProcId(0), ProcId(s1), &mut rng), "real links still drop");
     }
 }

@@ -9,22 +9,39 @@
 //! only the keys whose preference list it belongs to. A mis-routed
 //! request is refused with [`ServerReply::WrongServer`] instead of
 //! silently widening the key's replica set.
+//!
+//! Crash/restart lifecycle ([`crate::faults`]): a [`FaultHook::Crash`]
+//! wipes all volatile state (table, window-log, snapshots, HVC) and the
+//! server goes dark — in-flight messages and timers are still delivered
+//! but ignored. On [`FaultHook::Restart`] it comes back empty, asks every
+//! peer for its copies of the keys it owns ([`SyncMsg::Request`]), merges
+//! the returned sibling lists under normal vector-clock semantics, and
+//! only then serves again (requests during catch-up get the transient
+//! [`ServerReply::Frozen`]). A peer that never answers is covered by the
+//! `resync_timeout`, after which the server serves with what it has —
+//! availability over completeness, the Dynamo trade.
 
 use std::rc::Rc;
 
-use crate::clock::hvc::Hvc;
+use crate::clock::hvc::{Hvc, EPS_INF};
 use crate::detect::local::LocalDetector;
+use crate::faults::state::FaultHook;
 use crate::metrics::throughput::Metrics;
 use crate::rollback::snapshot::SnapshotStore;
 use crate::rollback::windowlog::WindowLog;
 use crate::sim::des::{Actor, Ctx};
-use crate::sim::msg::{Msg, RollbackMsg};
+use crate::sim::msg::{Msg, RollbackMsg, SyncMsg};
 use crate::sim::{ProcId, Time, SEC};
 use crate::store::protocol::{ServerOp, ServerReply};
 use crate::store::ring::Router;
 use crate::store::table::Table;
+use crate::store::value::{KeyId, Versioned};
 
 const TAG_SNAPSHOT: u64 = 1;
+/// re-sync timeout timers carry the sync epoch in the low bits so a
+/// leftover timer from an earlier recovery cannot cut a later one short
+/// (mirrors the client's think-timer generation scheme)
+const RESYNC_FLAG: u64 = 1 << 62;
 
 /// Server cost/behaviour knobs (virtual CPU times; calibrated so the
 /// simulated service times sit in the paper's "a few ms per request"
@@ -44,6 +61,9 @@ pub struct ServerCfg {
     pub windowlog_ms: i64,
     pub windowlog_max: usize,
     pub snapshots_keep: usize,
+    /// how long a restarting server waits for peer re-sync chunks before
+    /// serving with whatever it has recovered
+    pub resync_timeout: Time,
 }
 
 impl Default for ServerCfg {
@@ -58,6 +78,7 @@ impl Default for ServerCfg {
             windowlog_ms: 600_000, // Retroscope's ~10 minutes
             windowlog_max: 2_000_000,
             snapshots_keep: 8,
+            resync_timeout: 2 * SEC,
         }
     }
 }
@@ -75,10 +96,23 @@ pub struct ServerActor {
     cfg: ServerCfg,
     metrics: Metrics,
     controller: Option<ProcId>,
+    /// actor ids of every server in the cluster (incl. self), for
+    /// crash-recovery re-sync
+    peers: Vec<ProcId>,
+    /// crash/restart lifecycle ([`crate::faults`])
+    crashed: bool,
+    /// restarted but still catching up from peers
+    recovering: bool,
+    sync_epoch: u64,
+    sync_pending: usize,
     /// stats
     pub reqs_served: u64,
     pub reqs_refused: u64,
     pub puts_intercepted: u64,
+    pub crashes: u64,
+    pub resyncs: u64,
+    /// sibling versions merged back during re-syncs
+    pub resync_keys: u64,
 }
 
 impl ServerActor {
@@ -89,10 +123,15 @@ impl ServerActor {
         cfg: ServerCfg,
         metrics: Metrics,
         controller: Option<ProcId>,
+        peers: Vec<ProcId>,
     ) -> Self {
         // the HVC dimension is the cluster size — one entry per server
         let n_servers = router.ring().n_servers();
         assert!((idx as usize) < n_servers, "server index outside the ring");
+        assert!(
+            peers.is_empty() || peers.len() == n_servers,
+            "peer table must name every ring server (or be empty to opt out of re-sync)"
+        );
         Self {
             idx,
             hvc: Hvc::new(idx, n_servers, 0, 0),
@@ -105,9 +144,17 @@ impl ServerActor {
             cfg,
             metrics,
             controller,
+            peers,
+            crashed: false,
+            recovering: false,
+            sync_epoch: 0,
+            sync_pending: 0,
             reqs_served: 0,
             reqs_refused: 0,
             puts_intercepted: 0,
+            crashes: 0,
+            resyncs: 0,
+            resync_keys: 0,
         }
     }
 
@@ -123,8 +170,9 @@ impl ServerActor {
             None => self.hvc.tick(pt, eps),
         }
 
-        if self.frozen.is_some() {
-            // frozen for recovery: refuse (client treats as a miss)
+        if self.frozen.is_some() || self.recovering {
+            // frozen for rollback, or catching up after a restart:
+            // refuse transiently (client treats as a miss)
             ctx.send_after(50 * 1_000, from, Msg::Reply {
                 req,
                 reply: ServerReply::Frozen,
@@ -200,6 +248,93 @@ impl ServerActor {
         }
     }
 
+    /// Begin catch-up after a restart: ask every peer for its copies of
+    /// the keys this server owns, then serve once all chunks arrived (or
+    /// the re-sync timeout expired).
+    fn begin_resync(&mut self, ctx: &mut Ctx) {
+        self.sync_epoch += 1;
+        self.recovering = true;
+        let me = ctx.self_id;
+        let targets: Vec<ProcId> = self.peers.iter().copied().filter(|&p| p != me).collect();
+        self.sync_pending = targets.len();
+        if targets.is_empty() {
+            self.finish_resync();
+            return;
+        }
+        let epoch = self.sync_epoch;
+        let server = self.idx;
+        for &p in &targets {
+            ctx.send(p, Msg::Sync(Box::new(SyncMsg::Request { epoch, server })));
+        }
+        ctx.schedule(self.cfg.resync_timeout, RESYNC_FLAG | epoch);
+    }
+
+    fn finish_resync(&mut self) {
+        self.recovering = false;
+        self.resyncs += 1;
+        // the detector's cache (and, via reseed, the inferred registry)
+        // must reflect the recovered state, exactly as after a rollback
+        if let Some(det) = self.detector.as_mut() {
+            det.reseed(&self.table);
+        }
+    }
+
+    fn handle_sync(&mut self, ctx: &mut Ctx, from: ProcId, msg: SyncMsg) {
+        match msg {
+            SyncMsg::Request { epoch, server } => {
+                if self.recovering {
+                    return; // mid-catch-up ourselves: cannot help
+                }
+                // every key we hold that the restarting server owns,
+                // sorted so the merge order is deterministic
+                let mut data: Vec<(KeyId, Vec<Versioned>)> = self
+                    .table
+                    .iter()
+                    .filter(|(k, _)| self.router.owns(server, **k))
+                    .map(|(k, v)| (*k, v.clone()))
+                    .collect();
+                data.sort_unstable_by_key(|(k, _)| k.0);
+                // reading + serializing the chunk costs CPU like a snapshot
+                let cost = 50 * 1_000 + data.len() as u64 * 200;
+                let delay = ctx.cpu_delay(cost);
+                ctx.send_after(delay, from, Msg::Sync(Box::new(SyncMsg::Chunk { epoch, data })));
+            }
+            SyncMsg::Chunk { epoch, data } => {
+                if epoch != self.sync_epoch {
+                    return; // stale chunk from an earlier recovery
+                }
+                let pt = ctx.pt_ms();
+                let mut merged_any = false;
+                for (key, siblings) in data {
+                    for v in siblings {
+                        let (prev, changed) = self.table.put(key, v.version, v.value);
+                        if changed {
+                            merged_any = true;
+                            self.resync_keys += 1;
+                            self.windowlog.append(pt, key, prev);
+                        }
+                    }
+                }
+                if self.recovering {
+                    self.sync_pending = self.sync_pending.saturating_sub(1);
+                    if self.sync_pending == 0 {
+                        self.finish_resync(); // reseeds the detector
+                    }
+                } else if merged_any {
+                    // straggler chunk after a timeout-based finish: the
+                    // merge above bypassed the PUT interception path, so
+                    // the detector's value cache must be refreshed or it
+                    // would evaluate conjuncts against stale state
+                    if let Some(det) = self.detector.as_mut() {
+                        det.reseed(&self.table);
+                    }
+                }
+                // late chunks still merge (vector clocks make the merge
+                // idempotent) — the hinted-handoff flavour of repair
+            }
+        }
+    }
+
     fn handle_rollback(&mut self, ctx: &mut Ctx, from: ProcId, msg: RollbackMsg) {
         match msg {
             RollbackMsg::Freeze { epoch } => {
@@ -240,20 +375,62 @@ impl Actor for ServerActor {
     }
 
     fn on_msg(&mut self, ctx: &mut Ctx, from: ProcId, msg: Msg) {
+        if self.crashed {
+            return; // a dead process sees nothing
+        }
         match msg {
             Msg::Request { req, op, hvc } => self.handle_request(ctx, from, req, op, hvc),
             Msg::Rollback(rb) => self.handle_rollback(ctx, from, rb),
+            Msg::Sync(s) => self.handle_sync(ctx, from, *s),
             _ => {}
         }
     }
 
     fn on_timer(&mut self, ctx: &mut Ctx, tag: u64) {
         if tag == TAG_SNAPSHOT {
-            self.snapshots.take(ctx.pt_ms(), &self.table);
-            // snapshotting costs CPU proportional to table size
-            let cost = 50 * 1_000 + (self.table.len() as u64) * 150;
-            ctx.cpu(cost);
+            // keep the snapshot beat through a crash so it resumes after
+            // the restart; just skip the work while down or catching up
+            if !self.crashed && !self.recovering {
+                self.snapshots.take(ctx.pt_ms(), &self.table);
+                // snapshotting costs CPU proportional to table size
+                let cost = 50 * 1_000 + (self.table.len() as u64) * 150;
+                ctx.cpu(cost);
+            }
             ctx.schedule(self.cfg.snapshot_period, TAG_SNAPSHOT);
+        } else if tag & RESYNC_FLAG != 0 {
+            let stale = (tag & !RESYNC_FLAG) != self.sync_epoch;
+            if !stale && !self.crashed && self.recovering {
+                // some peer never answered (crashed or partitioned away):
+                // serve with what we have — availability over completeness
+                self.finish_resync();
+            }
+        }
+    }
+
+    fn on_fault(&mut self, ctx: &mut Ctx, hook: FaultHook) {
+        match hook {
+            FaultHook::Crash => {
+                self.crashed = true;
+                self.recovering = false;
+                self.frozen = None;
+                self.crashes += 1;
+                // all volatile state is gone
+                self.table = Table::new();
+                self.windowlog = WindowLog::new(self.cfg.windowlog_ms, self.cfg.windowlog_max);
+                self.snapshots = SnapshotStore::new(self.cfg.snapshots_keep);
+                let n_servers = self.router.ring().n_servers();
+                self.hvc = Hvc::new(self.idx, n_servers, 0, 0);
+            }
+            FaultHook::Restart => {
+                self.crashed = false;
+                // a fresh HVC that claims nothing about remote processes
+                // (entries floored far in the past, as at cold start)
+                let n_servers = self.router.ring().n_servers();
+                self.hvc = Hvc::new(self.idx, n_servers, ctx.pt_ms(), EPS_INF);
+                // with an empty peer table (unit-test rigs) this is an
+                // immediate no-op re-sync and the server serves right away
+                self.begin_resync(ctx);
+            }
         }
     }
 

@@ -30,15 +30,11 @@ pub fn cv(xs: &[f64]) -> f64 {
     }
 }
 
-/// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy. One
+/// implementation shared with [`Cdf::quantile`] so the two can never
+/// disagree about rank conventions.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    Cdf::new(xs.to_vec()).quantile(p / 100.0)
 }
 
 pub fn min(xs: &[f64]) -> f64 {
@@ -98,6 +94,61 @@ impl Histogram {
         }
         out.push((format!(">= {}", fmt_num(lo)), self.counts[self.bounds.len()], self.fraction(self.bounds.len()) * 100.0));
         out
+    }
+}
+
+/// Empirical CDF over a sample set: a sorted copy supporting quantile
+/// and tail-fraction queries. This is how the violation detection-
+/// latency distributions of §VI become a queryable artifact
+/// ([`crate::exp::runner::ExpResult::detection_cdf`]) rather than a
+/// printed histogram.
+#[derive(Debug, Clone, Default)]
+pub struct Cdf {
+    /// ascending
+    xs: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn new(mut xs: Vec<f64>) -> Self {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { xs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Quantile by nearest rank, `q` in `[0, 1]` (e.g. 0.999 for p99.9).
+    /// 0.0 on an empty sample set.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0)) * (self.xs.len() as f64 - 1.0)).round() as usize;
+        self.xs[rank.min(self.xs.len() - 1)]
+    }
+
+    /// Empirical `P[X <= x]`; 0.0 on an empty sample set.
+    pub fn fraction_le(&self, x: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let n_le = self.xs.partition_point(|&v| v <= x);
+        n_le as f64 / self.xs.len() as f64
+    }
+
+    /// The (x, F(x)) step points, one per sample.
+    pub fn points(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+        let n = self.xs.len();
+        self.xs.iter().enumerate().map(move |(i, &x)| (x, (i + 1) as f64 / n as f64))
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.last().copied().unwrap_or(0.0)
     }
 }
 
@@ -226,5 +277,30 @@ mod tests {
     #[test]
     fn cv_zero_mean() {
         assert_eq!(cv(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn cdf_quantiles_and_fractions() {
+        let c = Cdf::new((1..=1000).map(|i| i as f64).rev().collect());
+        assert_eq!(c.len(), 1000);
+        assert_eq!(c.quantile(0.0), 1.0);
+        assert_eq!(c.quantile(1.0), 1000.0);
+        assert_eq!(c.max(), 1000.0);
+        let p999 = c.quantile(0.999);
+        assert!((999.0..=1000.0).contains(&p999), "p99.9={p999}");
+        assert!((c.fraction_le(500.0) - 0.5).abs() < 1e-9);
+        assert_eq!(c.fraction_le(0.5), 0.0);
+        assert_eq!(c.fraction_le(2000.0), 1.0);
+        let pts: Vec<_> = c.points().take(2).collect();
+        assert_eq!(pts[0], (1.0, 0.001));
+    }
+
+    #[test]
+    fn cdf_empty_is_zero() {
+        let c = Cdf::default();
+        assert!(c.is_empty());
+        assert_eq!(c.quantile(0.5), 0.0);
+        assert_eq!(c.fraction_le(1.0), 0.0);
+        assert_eq!(c.max(), 0.0);
     }
 }

@@ -1,0 +1,201 @@
+//! End-to-end tests of the fault-injection subsystem through the full
+//! experiment runner: the `FaultPlan::none()` inertness regression, a
+//! partition exercising quorum timeouts / optimistic progress /
+//! detection / post-heal recovery, crash-restart with peer re-sync,
+//! schedule determinism, and the §VI detection-latency CDF shape.
+
+use optikv::client::consistency::ConsistencyCfg;
+use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+use optikv::exp::runner::{run, ExpResult};
+use optikv::exp::scenarios;
+use optikv::faults::{FaultEvent, FaultPlan};
+use optikv::sim::SEC;
+
+fn small_conj(consistency: ConsistencyCfg) -> ExpConfig {
+    let mut cfg = ExpConfig::new(
+        "faults-e2e",
+        consistency,
+        AppKind::Conjunctive { n_preds: 4, n_conjuncts: 3, beta: 0.2, put_pct: 0.5 },
+    );
+    cfg.n_clients = 6;
+    cfg.monitors = true;
+    cfg.duration = 40 * SEC;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg
+}
+
+fn fingerprint(r: &ExpResult) -> (u64, u64, usize, u64, f64) {
+    (r.ops_ok, r.ops_failed, r.violations_detected, r.sim_stats.events, r.app_tps)
+}
+
+// ---------------------------------------------------------------------------
+// regression: the empty plan (and a plan that never activates) is inert
+// ---------------------------------------------------------------------------
+
+#[test]
+fn none_plan_reproduces_the_fault_free_run_event_for_event() {
+    let base = run(&small_conj(ConsistencyCfg::n3r1w1()));
+    let explicit_none =
+        run(&small_conj(ConsistencyCfg::n3r1w1()).with_fault_plan(FaultPlan::none()));
+    assert_eq!(fingerprint(&base), fingerprint(&explicit_none));
+
+    // a plan whose first window opens after the run ends must be inert
+    // too: installing the subsystem costs nothing until a fault fires
+    let dormant = run(&small_conj(ConsistencyCfg::n3r1w1()).with_fault_plan(
+        FaultPlan::none().with(FaultEvent::Partition {
+            groups: vec![vec![0], vec![1, 2]],
+            from: 400 * SEC,
+            until: 500 * SEC,
+        }),
+    ));
+    assert_eq!(fingerprint(&base), fingerprint(&dormant), "dormant plan changed the run");
+    assert_eq!(dormant.sim_stats.fault_dropped, 0);
+    assert_eq!(dormant.sim_stats.fault_transitions, 0, "no window opened inside the run");
+    assert_eq!(base.crashes, 0);
+    assert_eq!(base.resyncs, 0);
+}
+
+// ---------------------------------------------------------------------------
+// partition: timeouts, optimistic progress, detection, post-heal recovery
+// ---------------------------------------------------------------------------
+
+/// N3R1W2 under a partition isolating region 0 for [15 s, 25 s):
+/// * clients in region 0 can reach only server 0 → W = 2 writes run the
+///   serial round and fail → quorum timeouts;
+/// * R = 1 reads and majority-side writes keep succeeding → optimistic
+///   progress continues;
+/// * replicas diverge across the cut → violations keep being detected;
+/// * after the heal, failed ops stop and throughput returns.
+fn partitioned_cfg() -> ExpConfig {
+    small_conj(ConsistencyCfg::new(3, 1, 2)).with_fault_plan(FaultPlan::none().with(
+        FaultEvent::Partition {
+            groups: vec![vec![0], vec![1, 2]],
+            from: 15 * SEC,
+            until: 25 * SEC,
+        },
+    ))
+}
+
+#[test]
+fn partition_shows_timeouts_progress_detection_and_heal() {
+    let res = run(&partitioned_cfg());
+    assert!(res.sim_stats.fault_transitions == 2, "cut + heal applied");
+    assert!(res.sim_stats.fault_dropped > 0, "messages crossed the cut and were lost");
+    assert!(res.ops_failed > 0, "isolated-region W=2 writes must time out");
+    assert!(res.ops_ok > 100, "optimistic progress continues: {}", res.ops_ok);
+    assert!(res.violations_detected > 0, "detection survives the partition");
+
+    // post-heal recovery: the last windows of the run serve again at a
+    // healthy clip (compare against the pre-cut stable mean)
+    let series = res.metrics.borrow().app_series();
+    assert!(series.len() > 30, "closed-loop clients ran past the heal: {}", series.len());
+    let window_mean = |a: usize, b: usize| -> f64 {
+        let (a, b) = (a.min(series.len()), b.min(series.len()));
+        let w = &series[a..b.max(a)];
+        w.iter().sum::<f64>() / w.len().max(1) as f64
+    };
+    let pre = window_mean(5, 15);
+    let post = window_mean(30, 39);
+    assert!(
+        post > 0.5 * pre,
+        "post-heal throughput must recover (pre {pre:.1} vs post {post:.1})"
+    );
+
+    // the baseline without the plan sees none of this
+    let base = run(&small_conj(ConsistencyCfg::new(3, 1, 2)));
+    assert_eq!(base.sim_stats.fault_dropped, 0);
+    assert!(res.ops_ok < base.ops_ok, "the cut costs throughput");
+}
+
+#[test]
+fn same_seed_and_plan_reproduce_an_identical_schedule() {
+    let a = run(&partitioned_cfg());
+    let b = run(&partitioned_cfg());
+    assert_eq!(fingerprint(&a), fingerprint(&b));
+    assert_eq!(a.sim_stats.fault_dropped, b.sim_stats.fault_dropped);
+    assert_eq!(a.sim_stats.fault_transitions, b.sim_stats.fault_transitions);
+    assert_eq!(a.detection_latencies_ms, b.detection_latencies_ms);
+}
+
+// ---------------------------------------------------------------------------
+// crash / restart: volatile-state loss and peer re-sync
+// ---------------------------------------------------------------------------
+
+#[test]
+fn crash_restart_resyncs_from_preference_list_peers() {
+    let cfg = small_conj(ConsistencyCfg::n3r1w1()).with_fault_plan(FaultPlan::none().with(
+        FaultEvent::Crash { server: 1, at: 15 * SEC, restart_after: 5 * SEC },
+    ));
+    let res = run(&cfg);
+    assert_eq!(res.crashes, 1);
+    assert_eq!(res.resyncs, 1, "the restarting server completed catch-up");
+    assert!(
+        res.resync_keys > 0,
+        "peers transferred owned partitions back ({} versions)",
+        res.resync_keys
+    );
+    assert!(res.sim_stats.fault_dropped > 0, "messages to the dead server were lost");
+    assert!(res.ops_ok > 100, "R1W1 tolerates a single crashed replica");
+    assert!(res.violations_detected > 0, "detection keeps working through the churn");
+}
+
+#[test]
+fn crash_without_restart_stays_dark_but_the_cluster_serves() {
+    let cfg = small_conj(ConsistencyCfg::n3r1w1()).with_fault_plan(
+        FaultPlan::none().with(FaultEvent::Crash { server: 2, at: 10 * SEC, restart_after: 0 }),
+    );
+    let res = run(&cfg);
+    assert_eq!(res.crashes, 1);
+    assert_eq!(res.resyncs, 0, "no restart, no re-sync");
+    assert!(res.ops_ok > 100, "two live replicas keep serving R1W1");
+}
+
+// ---------------------------------------------------------------------------
+// detection-latency CDF (§VI): regional < 50 ms, global < 5 s at p99.9
+// ---------------------------------------------------------------------------
+
+#[test]
+fn detection_cdf_regional_p999_under_50ms() {
+    let res = run(&scenarios::detection_cdf_faulted(true, 0.1, 42));
+    assert!(
+        res.detection_cdf.len() >= 10,
+        "need a population to talk about p99.9 (got {})",
+        res.detection_cdf.len()
+    );
+    let p999 = res.detection_cdf.quantile(0.999);
+    assert!(
+        p999 < 50.0,
+        "paper §VI: regional p99.9 detection latency < 50 ms, got {p999:.2} ms"
+    );
+}
+
+#[test]
+fn detection_cdf_global_p999_under_5s() {
+    let res = run(&scenarios::detection_cdf_faulted(false, 0.1, 42));
+    assert!(
+        res.detection_cdf.len() >= 10,
+        "need a population to talk about p99.9 (got {})",
+        res.detection_cdf.len()
+    );
+    let p999 = res.detection_cdf.quantile(0.999);
+    assert!(
+        p999 < 5_000.0,
+        "paper §VI: global p99.9 detection latency < 5 s, got {p999:.2} ms"
+    );
+    // the CDF field matches the raw latency list it was built from
+    assert_eq!(res.detection_cdf.len(), res.detection_latencies_ms.len());
+}
+
+#[test]
+fn fault_scenarios_run_end_to_end() {
+    // the shipped partition scenario exercises the whole §VI story in one
+    // run; small scale keeps this inside test budgets
+    let res = run(&scenarios::partition_coloring(0.07, 42));
+    assert!(res.ops_ok > 0, "progress under the cut");
+    assert!(res.sim_stats.fault_dropped > 0, "the cut actually cut");
+
+    let res = run(&scenarios::crash_churn_conjunctive(0.07, 42));
+    assert_eq!(res.crashes, 2, "both scheduled crashes fired");
+    assert_eq!(res.resyncs, 2, "both restarts caught up from peers");
+    assert!(res.ops_ok > 0);
+}

@@ -62,6 +62,7 @@ fn build_with_depth(
         tb.build(optikv::sim::net::Topology::local_lab(inter_ms), drop_prob);
     let metrics = MetricsHub::new(cluster, c);
     let mut sim = Sim::new(topo, &threads, seed, 0.5, EPS_INF);
+    let server_ids: Vec<ProcId> = (0..cluster as u32).map(ProcId).collect();
     for i in 0..cluster {
         sim.add_actor(Box::new(ServerActor::new(
             i as u16,
@@ -70,9 +71,9 @@ fn build_with_depth(
             ServerCfg::default(),
             metrics.clone(),
             None,
+            server_ids.clone(),
         )));
     }
-    let server_ids: Vec<ProcId> = (0..cluster as u32).map(ProcId).collect();
     let mut client_ids = Vec::new();
     for (i, script) in scripts.into_iter().enumerate() {
         let id = sim.add_actor(Box::new(ClientActor::new(
@@ -361,6 +362,7 @@ fn misrouted_requests_are_refused() {
             ServerCfg::default(),
             metrics.clone(),
             None,
+            (0..6u32).map(ProcId).collect(),
         )));
     }
     let script: Vec<AppOp> = keys.iter().map(|&k| AppOp::Put(k, Value::Int(1))).collect();
