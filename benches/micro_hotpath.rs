@@ -1,6 +1,7 @@
 //! Micro/ablation benches of the hot paths (wall-clock, not virtual time):
 //!
 //! * HVC compare and the 3-case interval verdict (the innermost op);
+//! * inline vs heap-spilled `HvcVec` representations (clone + tick);
 //! * native vs XLA(PJRT/Pallas) verdict backends across batch sizes —
 //!   the dispatch-overhead crossover the DESIGN.md ablation calls for;
 //! * local-detector PUT interception (relevant vs irrelevant keys);
@@ -8,10 +9,21 @@
 //! * DES event throughput (events/s of the full simulator).
 //!
 //! Plain `harness = false` main (criterion is unavailable offline).
+//!
+//! ## `perf` mode
+//!
+//! `cargo bench --bench micro_hotpath -- perf` switches to the perf
+//! harness ([`optikv::exp::perfjson`]): it runs the fixed scenario
+//! matrix and writes `BENCH_hotpath.json` — the trajectory file every
+//! future perf PR is judged against. `--rows serial,faulted` subsets
+//! the matrix (CI smoke runs just `serial`); `--out PATH` or
+//! `$PERF_OUT` redirects; `$BENCH_SCALE` / `$BENCH_SEED` as usual.
 
 use std::time::Instant;
 
-use optikv::clock::hvc::{Hvc, HvcInterval, IntervalOrd, Millis, EPS_INF};
+use optikv::clock::hvc::{set_force_spill, Hvc, HvcInterval, IntervalOrd, Millis, EPS_INF};
+use optikv::exp::perfjson;
+use optikv::metrics::report;
 use optikv::runtime::accel::{Accel, NativeAccel, PairQuery};
 use optikv::util::rng::Rng;
 use optikv::util::stats::Table;
@@ -52,10 +64,73 @@ fn random_interval(rng: &mut Rng, d: usize) -> HvcInterval {
         *x += rng.range(0, 60) as i64;
     }
     ev[owner as usize] = *ev.iter().max().unwrap();
-    HvcInterval::new(Hvc { owner, v: sv }, Hvc { owner, v: ev })
+    HvcInterval::new(Hvc::from_vec(owner, sv), Hvc::from_vec(owner, ev))
+}
+
+/// `perf` mode: run the scenario matrix and write `BENCH_hotpath.json`.
+fn run_perf(args: &[String]) {
+    let scale = report::bench_scale(0.05);
+    let seed = report::bench_seed();
+    let rows: Vec<&str> = match args.iter().position(|a| a == "--rows") {
+        Some(i) => args
+            .get(i + 1)
+            .expect("--rows needs a comma-separated list")
+            .split(',')
+            .collect(),
+        None => perfjson::MATRIX.to_vec(),
+    };
+    let out_path = match args.iter().position(|a| a == "--out") {
+        Some(i) => args.get(i + 1).expect("--out needs a path").clone(),
+        None => std::env::var("PERF_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into()),
+    };
+
+    println!("# perf harness — scale {scale}, seed {seed}, rows {rows:?}\n");
+    let mut t = Table::new(&[
+        "row",
+        "events",
+        "wall s",
+        "events/s",
+        "sent bytes",
+        "pairs chk/chg",
+        "win peak",
+        "ops ok",
+        "viol",
+    ]);
+    let mut measured = Vec::new();
+    for row in rows {
+        let r = perfjson::run_row(row, scale, seed);
+        t.row(&[
+            r.name.clone(),
+            r.events.to_string(),
+            format!("{:.2}", r.wall_s),
+            format!("{:.0}", r.events_per_sec),
+            r.sent_bytes_proxy.to_string(),
+            format!("{}/{}", r.pairs_checked, r.pairs_charged),
+            r.window_peak.to_string(),
+            r.ops_ok.to_string(),
+            r.violations.to_string(),
+        ]);
+        measured.push(r);
+    }
+    println!("{}", t.render());
+    let json = perfjson::to_json(
+        &measured,
+        scale,
+        seed,
+        true,
+        "measured by `cargo bench --bench micro_hotpath -- perf`",
+    );
+    perfjson::write_json(std::path::Path::new(&out_path), &json)
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("wrote {out_path}");
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "perf") {
+        run_perf(&args);
+        return;
+    }
     let mut rng = Rng::new(1);
 
     println!("# micro_hotpath — wall-clock timings\n");
@@ -71,6 +146,30 @@ fn main() {
     });
     println!("hvc_compare(d=5):        {:>9.1} ns", t_cmp * 1e9);
     println!("interval_verdict(d=5):   {:>9.1} ns", t_verdict * 1e9);
+
+    // ---- HvcVec representations ------------------------------------------
+    // clone + tick of a dim-5 clock: the per-message cost the inline
+    // representation removes (and what a spill adds back at S > 8)
+    let h_inline = Hvc::new(0, 5, 1_000, 10);
+    set_force_spill(true);
+    let h_spill = Hvc::new(0, 5, 1_000, 10);
+    set_force_spill(false);
+    let t_inline = time_it(2_000_000, || {
+        let mut c = h_inline.clone();
+        c.tick(1_001, 10);
+        std::hint::black_box(&c);
+    });
+    let t_spill = time_it(2_000_000, || {
+        let mut c = h_spill.clone();
+        c.tick(1_001, 10);
+        std::hint::black_box(&c);
+    });
+    println!("hvc_clone+tick inline:   {:>9.1} ns", t_inline * 1e9);
+    println!(
+        "hvc_clone+tick spilled:  {:>9.1} ns ({:.1}x)",
+        t_spill * 1e9,
+        t_spill / t_inline
+    );
 
     // ---- backend crossover ------------------------------------------------
     let mut saw_xla = false;

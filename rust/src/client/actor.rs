@@ -75,7 +75,10 @@ pub struct ClientActor {
     /// think-timer generation (stale timers are ignored)
     think_seq: u64,
     next_req: u64,
-    seen_hvc: Option<Hvc>,
+    /// freshest server HVC observed, `Rc`-shared into every outgoing
+    /// request (one refcount bump per replica instead of a vector clone)
+    /// and merged copy-on-write as replies arrive
+    seen_hvc: Option<Rc<Hvc>>,
     metrics: Metrics,
     done: bool,
     /// stats
@@ -135,10 +138,11 @@ impl ClientActor {
         }
     }
 
-    fn merge_seen(&mut self, h: &Hvc) {
+    fn merge_seen(&mut self, h: &Rc<Hvc>) {
         match &mut self.seen_hvc {
-            None => self.seen_hvc = Some(h.clone()),
+            None => self.seen_hvc = Some(Rc::clone(h)),
             Some(s) => {
+                let s = Rc::make_mut(s);
                 for (a, b) in s.v.iter_mut().zip(h.v.iter()) {
                     if *b > *a {
                         *a = *b;

@@ -196,7 +196,7 @@ impl QuorumCall {
                 for (_, r) in &self.replies {
                     if let ServerReply::Versions(vs) = r {
                         for v in vs {
-                            merged = merged.merge(v);
+                            merged.merge_from(v);
                         }
                     }
                 }

@@ -11,14 +11,226 @@
 //! Clock values are milliseconds (`i64`); the monitors and the AOT kernels
 //! operate at this granularity. Coarsening only errs toward "concurrent",
 //! the paper's safe direction (no missed violations).
+//!
+//! ## Hot-path representation
+//!
+//! The vector itself is an [`HvcVec`] — a hand-rolled small-vector with
+//! inline capacity for [`HVC_INLINE_CAP`] servers, spilling to the heap
+//! only for larger clusters (the scale-out S=24 scenarios). At the
+//! paper's deployment sizes (N = 3/5) a clock clone is a stack copy, no
+//! allocation. On top of that, [`HvcInterval`] endpoints are `Rc<Hvc>`
+//! snapshots: the server's clock is shared into messages and candidate
+//! intervals by reference count, and mutated copy-on-write
+//! (`Rc::make_mut`) at the next tick — see `store/server.rs`. Both are
+//! pure representation changes: every comparison is by value, so same
+//! seed ⇒ the same event schedule (pinned by
+//! `store_integration::clock_representation_is_observationally_pure`).
 
 use std::cmp::Ordering;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 
 /// Physical time in milliseconds.
 pub type Millis = i64;
 
 /// Sentinel for "ε = ∞" (pure vector-clock behaviour).
 pub const EPS_INF: Millis = i64::MAX / 4;
+
+/// Inline capacity of [`HvcVec`]: clock vectors of up to this many
+/// servers live on the stack; larger clusters spill to the heap.
+pub const HVC_INLINE_CAP: usize = 8;
+
+/// Test/bench hook: force every newly built [`HvcVec`] onto the heap —
+/// the pre-optimization `Vec<Millis>` representation. The purity
+/// regression runs the same seed inline vs spilled and pins identical
+/// schedules; the micro bench uses it to time the representations
+/// side by side. Mixed representations are safe (all comparisons are by
+/// value), so flipping this mid-run only changes where bytes live.
+pub fn set_force_spill(on: bool) {
+    FORCE_SPILL.store(on, AtomicOrdering::Relaxed);
+}
+
+static FORCE_SPILL: AtomicBool = AtomicBool::new(false);
+
+#[inline]
+fn spills(n: usize) -> bool {
+    n > HVC_INLINE_CAP || FORCE_SPILL.load(AtomicOrdering::Relaxed)
+}
+
+/// A hand-rolled small-vector of clock entries: inline storage for
+/// dimensions up to [`HVC_INLINE_CAP`], heap spill above (no external
+/// small-vector dependency — offline builds). Equality and hashing are
+/// by *value*, never by representation, so an inline and a spilled
+/// vector holding the same entries are indistinguishable.
+#[derive(Debug, Clone)]
+pub enum HvcVec {
+    Inline { len: u8, buf: [Millis; HVC_INLINE_CAP] },
+    Heap(Vec<Millis>),
+}
+
+impl HvcVec {
+    pub fn new() -> Self {
+        if spills(0) {
+            HvcVec::Heap(Vec::new())
+        } else {
+            HvcVec::Inline { len: 0, buf: [0; HVC_INLINE_CAP] }
+        }
+    }
+
+    /// `n` copies of `x` (the floor-fill constructor of [`Hvc::new`]).
+    pub fn from_elem(x: Millis, n: usize) -> Self {
+        if spills(n) {
+            HvcVec::Heap(vec![x; n])
+        } else {
+            let mut buf = [0; HVC_INLINE_CAP];
+            buf[..n].fill(x);
+            HvcVec::Inline { len: n as u8, buf }
+        }
+    }
+
+    pub fn from_vec(v: Vec<Millis>) -> Self {
+        if spills(v.len()) {
+            HvcVec::Heap(v)
+        } else {
+            let mut buf = [0; HVC_INLINE_CAP];
+            buf[..v.len()].copy_from_slice(&v);
+            HvcVec::Inline { len: v.len() as u8, buf }
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            HvcVec::Inline { len, .. } => *len as usize,
+            HvcVec::Heap(v) => v.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Is this vector heap-spilled (dim > [`HVC_INLINE_CAP`] or forced)?
+    pub fn spilled(&self) -> bool {
+        matches!(self, HvcVec::Heap(_))
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[Millis] {
+        match self {
+            HvcVec::Inline { len, buf } => &buf[..*len as usize],
+            HvcVec::Heap(v) => v,
+        }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [Millis] {
+        match self {
+            HvcVec::Inline { len, buf } => &mut buf[..*len as usize],
+            HvcVec::Heap(v) => v,
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> Option<&Millis> {
+        self.as_slice().get(i)
+    }
+
+    #[inline]
+    pub fn iter(&self) -> std::slice::Iter<'_, Millis> {
+        self.as_slice().iter()
+    }
+
+    #[inline]
+    pub fn iter_mut(&mut self) -> std::slice::IterMut<'_, Millis> {
+        self.as_mut_slice().iter_mut()
+    }
+
+    pub fn push(&mut self, x: Millis) {
+        match self {
+            HvcVec::Inline { len, buf } => {
+                let n = *len as usize;
+                if n < HVC_INLINE_CAP {
+                    buf[n] = x;
+                    *len += 1;
+                } else {
+                    let mut v = buf.to_vec();
+                    v.push(x);
+                    *self = HvcVec::Heap(v);
+                }
+            }
+            HvcVec::Heap(v) => v.push(x),
+        }
+    }
+}
+
+impl Default for HvcVec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl From<Vec<Millis>> for HvcVec {
+    fn from(v: Vec<Millis>) -> Self {
+        Self::from_vec(v)
+    }
+}
+
+impl FromIterator<Millis> for HvcVec {
+    fn from_iter<I: IntoIterator<Item = Millis>>(it: I) -> Self {
+        let mut out = HvcVec::new();
+        for x in it {
+            out.push(x);
+        }
+        out
+    }
+}
+
+impl std::ops::Index<usize> for HvcVec {
+    type Output = Millis;
+    #[inline]
+    fn index(&self, i: usize) -> &Millis {
+        &self.as_slice()[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for HvcVec {
+    #[inline]
+    fn index_mut(&mut self, i: usize) -> &mut Millis {
+        &mut self.as_mut_slice()[i]
+    }
+}
+
+impl<'a> IntoIterator for &'a HvcVec {
+    type Item = &'a Millis;
+    type IntoIter = std::slice::Iter<'a, Millis>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a mut HvcVec {
+    type Item = &'a mut Millis;
+    type IntoIter = std::slice::IterMut<'a, Millis>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter_mut()
+    }
+}
+
+impl PartialEq for HvcVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for HvcVec {}
+
+impl std::hash::Hash for HvcVec {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.as_slice().hash(state);
+    }
+}
 
 /// Comparison result for HVC vectors.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,7 +246,7 @@ pub struct Hvc {
     /// owning process index (a server id in this system)
     pub owner: u16,
     /// dense vector, one entry per process, in ms
-    pub v: Vec<Millis>,
+    pub v: HvcVec,
 }
 
 impl Hvc {
@@ -42,9 +254,14 @@ impl Hvc {
     /// with all remote entries at the `pt - eps` floor.
     pub fn new(owner: u16, n: usize, pt: Millis, eps: Millis) -> Self {
         let floor = pt.saturating_sub(eps);
-        let mut v = vec![floor; n];
+        let mut v = HvcVec::from_elem(floor, n);
         v[owner as usize] = pt;
         Self { owner, v }
+    }
+
+    /// A clock over an explicit entry vector (tests/benches).
+    pub fn from_vec(owner: u16, v: Vec<Millis>) -> Self {
+        Self { owner, v: HvcVec::from_vec(v) }
     }
 
     #[inline]
@@ -53,7 +270,8 @@ impl Hvc {
     }
 
     /// Advance on a local event / message *send* at physical time `pt`:
-    /// `v[i] = pt`, `v[j] = max(v[j], pt - eps)`.
+    /// `v[i] = pt`, `v[j] = max(v[j], pt - eps)`. The own entry reduces
+    /// to a plain `max` — it stays monotone even if the OS clock stalls.
     pub fn tick(&mut self, pt: Millis, eps: Millis) {
         let floor = pt.saturating_sub(eps);
         for x in &mut self.v {
@@ -62,14 +280,7 @@ impl Hvc {
             }
         }
         let i = self.owner as usize;
-        if self.v[i] < pt {
-            self.v[i] = pt;
-        } else {
-            // physical clock must appear monotone at its own index even if
-            // the OS clock stalls: bump by one ms-step equivalent (0 keeps
-            // the old value, which is still monotone)
-            self.v[i] = self.v[i].max(pt);
-        }
+        self.v[i] = self.v[i].max(pt);
     }
 
     /// Merge a piggy-backed clock on message *receive* at physical time
@@ -143,10 +354,15 @@ impl Hvc {
 
 /// An HVC interval `[start, end]` on a server — the time span attached to a
 /// candidate sent to a monitor (the local predicate held throughout it).
+///
+/// Endpoints are `Rc<Hvc>` snapshots shared with the emitting server's
+/// clock history (copy-on-tick keeps them immutable); cloning a candidate
+/// or building a point interval `[now, now]` bumps reference counts
+/// instead of copying clock vectors.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HvcInterval {
-    pub start: Hvc,
-    pub end: Hvc,
+    pub start: Rc<Hvc>,
+    pub end: Rc<Hvc>,
 }
 
 /// Verdict of the paper's 3-case interval causality rule.
@@ -161,7 +377,8 @@ pub enum IntervalOrd {
 }
 
 impl HvcInterval {
-    pub fn new(start: Hvc, end: Hvc) -> Self {
+    pub fn new(start: impl Into<Rc<Hvc>>, end: impl Into<Rc<Hvc>>) -> Self {
+        let (start, end) = (start.into(), end.into());
         debug_assert_eq!(start.owner, end.owner);
         Self { start, end }
     }
@@ -213,8 +430,13 @@ mod tests {
     use crate::util::prop;
     use crate::util::rng::Rng;
 
+    /// Tests that toggle or assert the process-global spill flag must
+    /// hold this lock — cargo's parallel test threads would otherwise
+    /// race a toggling test against a representation assertion.
+    static SPILL_FLAG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     fn hvc(owner: u16, v: &[Millis]) -> Hvc {
-        Hvc { owner, v: v.to_vec() }
+        Hvc::from_vec(owner, v.to_vec())
     }
 
     #[test]
@@ -242,6 +464,65 @@ mod tests {
         assert_eq!(a.v[0], 106);
         assert_eq!(a.v[1], 104); // learned from b
         assert!(matches!(before.compare(&a), HvcOrd::Before));
+    }
+
+    #[test]
+    fn tick_own_entry_monotone_through_clock_stall() {
+        // the OS clock standing still (or stepping back) must not move
+        // the own entry backwards — the old two-arm branch and the `max`
+        // it folded into agree on this
+        let mut a = Hvc::new(0, 2, 100, 10);
+        a.tick(90, 10);
+        assert_eq!(a.v[0], 100, "own entry never regresses");
+        a.tick(100, 10);
+        assert_eq!(a.v[0], 100);
+        a.tick(101, 10);
+        assert_eq!(a.v[0], 101);
+    }
+
+    #[test]
+    fn inline_and_spilled_representations_are_equal() {
+        let _guard = SPILL_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dims = [1usize, 2, 7, 8, 9, 16];
+        for &n in &dims {
+            let inline = Hvc::new(0, n, 500, 20);
+            set_force_spill(true);
+            let spilled = Hvc::new(0, n, 500, 20);
+            set_force_spill(false);
+            assert_eq!(inline, spilled, "value equality across representations (n={n})");
+            assert_eq!(inline.compare(&spilled), HvcOrd::Equal);
+            if n > HVC_INLINE_CAP {
+                assert!(inline.v.spilled(), "dim {n} must spill");
+            } else {
+                assert!(!inline.v.spilled(), "dim {n} stays inline");
+                assert!(spilled.v.spilled(), "force hook spills dim {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn hvcvec_push_spills_past_inline_cap() {
+        let _guard = SPILL_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut v = HvcVec::new();
+        for i in 0..HVC_INLINE_CAP as i64 {
+            v.push(i);
+        }
+        assert!(!v.spilled());
+        v.push(99);
+        assert!(v.spilled());
+        assert_eq!(v.len(), HVC_INLINE_CAP + 1);
+        let expect: Vec<Millis> = (0..HVC_INLINE_CAP as i64).chain([99]).collect();
+        assert_eq!(v.as_slice(), &expect[..]);
+        // hashing is representation-independent too
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let h = |x: &HvcVec| {
+            let mut s = DefaultHasher::new();
+            x.hash(&mut s);
+            s.finish()
+        };
+        let w = HvcVec::from_vec(expect);
+        assert_eq!(h(&v), h(&w));
     }
 
     #[test]
@@ -287,7 +568,7 @@ mod tests {
     fn random_hvc(rng: &mut Rng, owner: u16, n: usize) -> Hvc {
         let base = rng.range(0, 1000) as i64;
         let v = (0..n).map(|_| base + rng.range(0, 50) as i64).collect();
-        Hvc { owner, v }
+        Hvc::from_vec(owner, v)
     }
 
     fn random_interval(rng: &mut Rng, n: usize) -> HvcInterval {

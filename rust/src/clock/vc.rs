@@ -46,6 +46,22 @@ impl VectorClock {
         self
     }
 
+    /// Pointwise max, in place — the hot-path variant: the quorum
+    /// engine folds every GET_VERSION reply into one accumulator
+    /// without allocating a fresh clock per merge.
+    pub fn merge_from(&mut self, other: &Self) {
+        for &(node, cnt) in other.entries() {
+            match self.entries.binary_search_by_key(&node, |e| e.0) {
+                Ok(i) => {
+                    if self.entries[i].1 < cnt {
+                        self.entries[i].1 = cnt;
+                    }
+                }
+                Err(i) => self.entries.insert(i, (node, cnt)),
+            }
+        }
+    }
+
     /// Pointwise max.
     pub fn merge(&self, other: &Self) -> Self {
         let mut out = Vec::with_capacity(self.entries.len().max(other.entries.len()));
@@ -224,6 +240,12 @@ mod tests {
             let m = a.merge(&b);
             if !m.dominates(&a) || !m.dominates(&b) {
                 return Err(format!("merge not upper bound: a={a:?} b={b:?} m={m:?}"));
+            }
+            // the in-place variant must agree exactly
+            let mut m2 = a.clone();
+            m2.merge_from(&b);
+            if m2 != m {
+                return Err(format!("merge_from disagrees: {m:?} vs {m2:?}"));
             }
             // least: every component equals max of inputs
             for &(n, v) in m.entries() {

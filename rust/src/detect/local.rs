@@ -39,8 +39,10 @@ use crate::store::value::{Interner, KeyId, Value};
 /// Per-(pred, clause, conjunct) tracking state.
 #[derive(Debug, Clone)]
 struct ConjState {
-    /// HVC when the current state epoch began (start of candidate interval)
-    since: Hvc,
+    /// HVC when the current state epoch began (start of candidate
+    /// interval) — an `Rc` snapshot of the server clock at that moment;
+    /// candidate emission bumps the refcount instead of cloning vectors
+    since: Rc<Hvc>,
     /// truth of the conjunct during the current epoch
     truth: bool,
 }
@@ -157,8 +159,9 @@ impl LocalDetector {
     }
 
     /// Intercept a PUT that has just been applied to `table`. `hvc_now` is
-    /// the server's HVC after receiving the request.
-    pub fn on_put(&mut self, key: KeyId, table: &Table, hvc_now: &Hvc, now: Time) -> DetectorOutput {
+    /// the server's HVC after receiving the request (an `Rc` snapshot —
+    /// the server mutates its clock copy-on-write, so holding it is free).
+    pub fn on_put(&mut self, key: KeyId, table: &Table, hvc_now: &Rc<Hvc>, now: Time) -> DetectorOutput {
         let mut out = DetectorOutput::default();
 
         // fast path: variable not relevant to any predicate
@@ -184,9 +187,9 @@ impl LocalDetector {
             let state = self
                 .states
                 .entry((pred, clause, conjunct))
-                .or_insert_with(|| ConjState { since: hvc_now.clone(), truth: false });
+                .or_insert_with(|| ConjState { since: Rc::clone(hvc_now), truth: false });
             let pre_truth = state.truth;
-            let since = state.since.clone();
+            let since = Rc::clone(&state.since);
 
             // pre-state values of the conjunct's variables (from the cache)
             let pre_values: Vec<(KeyId, Value)> = conj
@@ -218,7 +221,7 @@ impl LocalDetector {
                     conjunct,
                     server: ProcId(u32::MAX), // filled by the server actor
                     seq: self.seq,
-                    interval: HvcInterval::new(since, hvc_now.clone()),
+                    interval: HvcInterval::new(since, Rc::clone(hvc_now)),
                     values: pre_values,
                     truth: pre_truth,
                     emitted_at: now,
@@ -266,7 +269,8 @@ impl LocalDetector {
                     conjunct,
                     server: ProcId(u32::MAX),
                     seq: self.seq,
-                    interval: HvcInterval::new(hvc_now.clone(), hvc_now.clone()),
+                    // point interval: both endpoints share one snapshot
+                    interval: HvcInterval::new(Rc::clone(hvc_now), Rc::clone(hvc_now)),
                     values: post_values,
                     truth: true,
                     emitted_at: now,
@@ -278,7 +282,7 @@ impl LocalDetector {
             }
             let state = self.states.get_mut(&(pred, clause, conjunct)).unwrap();
             state.truth = post_truth;
-            state.since = hvc_now.clone();
+            state.since = Rc::clone(hvc_now);
         }
         out
     }
@@ -357,8 +361,8 @@ mod tests {
         (det, table, interner, id, x, y)
     }
 
-    fn hvc(t: i64) -> Hvc {
-        Hvc { owner: 0, v: vec![t, 0] }
+    fn hvc(t: i64) -> Rc<Hvc> {
+        Rc::new(Hvc::from_vec(0, vec![t, 0]))
     }
 
     fn put(table: &mut Table, det: &mut LocalDetector, key: KeyId, val: i64, t: i64, n: u64) -> DetectorOutput {

@@ -20,6 +20,29 @@
 //!   dispatched to the batched backend (`runtime::accel`) — the XLA/Pallas
 //!   path — instead of one comparison at a time.
 //!
+//! ## Indexed windows (hot path)
+//!
+//! Search windows are kept **sorted by the interval's physical end**
+//! (`end_pt_ms`, ties by arrival). That buys two things wall-clock:
+//! retirement drains a sorted prefix instead of scanning every entry,
+//! and pairing a new candidate binary-searches to the overlap split —
+//! everything past it is *certified* Concurrent by an exact O(1)
+//! physical-overlap test ([`physically_entangled`]), so the O(d) vector
+//! verdict runs only on the physically separable boundary cases.
+//! Honest complexity: the per-candidate scan stays O(W) — the
+//! concurrent set it must hand to the DFS is itself Θ(W) at the
+//! paper's ε = ∞, so sub-linear output is impossible — but the
+//! expensive part drops from O(W·d) vector comparisons to
+//! O(boundary·d), which is zero at ε = ∞. Two
+//! counters keep the optimization observationally pure: `pairs_checked`
+//! counts verdicts actually computed (it drops, and is the perf-harness
+//! metric), while `pairs_charged` counts the pairs of the *modeled*
+//! linear scan and keeps driving the virtual CPU cost — so the event
+//! schedule is bit-identical to the pre-index code. The DFS iterates
+//! matches in arrival order for the same reason: the witness tuple
+//! consumed for a violation must not depend on the index. DESIGN.md
+//! §"Hot-path cost model" has the exactness argument.
+//!
 //! Monitors keep running after reporting (violations may recur), GC
 //! predicates with no recent activity (§V "Handling a large number of
 //! predicates"), and account their CPU on the machine they share with a
@@ -42,7 +65,9 @@ const TAG_BATCH: u64 = 1;
 const TAG_GC: u64 = 2;
 
 /// CPU cost model for monitor work (virtual time charged on the shared
-/// machine). Calibrated in EXPERIMENTS.md §Perf.
+/// machine). Calibrated in EXPERIMENTS.md §Perf. `per_pair` is charged
+/// per *modeled* pair (`pairs_charged`), independent of how many
+/// verdicts the indexed search actually computes.
 #[derive(Debug, Clone)]
 pub struct MonitorCost {
     /// per candidate ingested
@@ -84,16 +109,36 @@ impl Default for MonitorCfg {
     }
 }
 
-/// Search state for one clause: a window of admitted candidates per conjunct.
+/// One admitted candidate plus its arrival stamp. Windows sort by
+/// `cand.end_pt_ms()` (ties by `arr`); the DFS re-sorts matches by `arr`
+/// so the search visits them in the order the historical linear scan did.
+#[derive(Debug)]
+struct WinEntry {
+    arr: u64,
+    cand: Candidate,
+}
+
+/// Search state for one clause: a window of admitted candidates per
+/// conjunct, sorted by interval end.
 #[derive(Debug, Default)]
 struct ClauseState {
-    windows: Vec<Vec<Candidate>>,
+    windows: Vec<Vec<WinEntry>>,
 }
 
 #[derive(Debug)]
 struct PredState {
     last_activity: Time,
     clauses: Vec<ClauseState>,
+}
+
+/// Pair accounting for one search (see module docs).
+#[derive(Debug, Default)]
+struct PairStats {
+    /// interval verdicts actually computed (accel work)
+    checked: u64,
+    /// pairs of the modeled linear scan — drives the CPU cost model,
+    /// bit-identical to the pre-index algorithm's `pairs_checked`
+    charged: u64,
 }
 
 pub struct MonitorActor {
@@ -106,10 +151,18 @@ pub struct MonitorActor {
     states: HashMap<PredId, PredState>,
     pending: Vec<Candidate>,
     batch_scheduled: bool,
+    /// monotone arrival stamp for window entries
+    arr_seq: u64,
     /// stats
     pub candidates_seen: u64,
     pub violations_found: u64,
+    /// interval verdicts actually computed by the indexed search
     pub pairs_checked: u64,
+    /// modeled linear-scan pairs (drives the virtual CPU cost; equals
+    /// the historical `pairs_checked` exactly)
+    pub pairs_charged: u64,
+    /// largest single search window observed
+    pub window_peak: usize,
     pub gc_evicted: u64,
 }
 
@@ -132,9 +185,12 @@ impl MonitorActor {
             states: HashMap::new(),
             pending: Vec::new(),
             batch_scheduled: false,
+            arr_seq: 0,
             candidates_seen: 0,
             violations_found: 0,
             pairs_checked: 0,
+            pairs_charged: 0,
+            window_peak: 0,
             gc_evicted: 0,
         }
     }
@@ -159,13 +215,14 @@ impl MonitorActor {
     /// if a pairwise-concurrent tuple covering all conjuncts now exists.
     fn search(&mut self, cand: &Candidate, eps: Millis) -> Option<Vec<Candidate>> {
         let accel = self.accel.clone();
-        let mut pairs_checked = 0u64;
+        let mut stats = PairStats::default();
         let result = {
             let st = self.states.get(&cand.pred).unwrap();
             let cs = &st.clauses[cand.clause as usize];
-            search_clause(&accel, &mut pairs_checked, cs, cand, eps)
+            search_clause(&accel, &mut stats, cs, cand, eps)
         };
-        self.pairs_checked += pairs_checked;
+        self.pairs_checked += stats.checked;
+        self.pairs_charged += stats.charged;
         result
     }
 
@@ -216,13 +273,18 @@ impl MonitorActor {
             }
         };
 
-        // retire stale candidates of this predicate (physical-time window)
+        // retire stale candidates of this predicate: the windows are
+        // sorted by interval end, so staleness is a prefix drain rather
+        // than a full-window retain scan
         let horizon = cand.end_pt_ms() - self.cfg.retire_window_ms;
         {
             let st = self.states.get_mut(&cand.pred).unwrap();
             for cs in &mut st.clauses {
                 for win in &mut cs.windows {
-                    win.retain(|o| o.end_pt_ms() >= horizon);
+                    let cut = win.partition_point(|e| e.cand.end_pt_ms() < horizon);
+                    if cut > 0 {
+                        win.drain(..cut);
+                    }
                 }
             }
         }
@@ -240,7 +302,7 @@ impl MonitorActor {
                     let cs = &mut st.clauses[cand.clause as usize];
                     for w in &witnesses {
                         let win = &mut cs.windows[w.conjunct as usize];
-                        win.retain(|o| !(o.server == w.server && o.seq == w.seq));
+                        win.retain(|e| !(e.cand.server == w.server && e.cand.seq == w.seq));
                     }
                 }
                 self.violations_found += 1;
@@ -254,9 +316,19 @@ impl MonitorActor {
                 ))
             }
             None => {
+                let arr = self.arr_seq;
+                self.arr_seq += 1;
                 let st = self.states.get_mut(&cand.pred).unwrap();
                 let cs = &mut st.clauses[cand.clause as usize];
-                cs.windows[cand.conjunct as usize].push(cand);
+                let win = &mut cs.windows[cand.conjunct as usize];
+                // sorted insert by (end_pt, arrival): partition_point on
+                // `<=` lands after every equal end, so arrival stamps
+                // stay ascending within a tie group
+                let pos = win.partition_point(|e| e.cand.end_pt_ms() <= cand.end_pt_ms());
+                win.insert(pos, WinEntry { arr, cand });
+                if win.len() > self.window_peak {
+                    self.window_peak = win.len();
+                }
                 None
             }
         }
@@ -270,7 +342,7 @@ impl MonitorActor {
         let eps = ctx.eps_ms();
         let pending = std::mem::take(&mut self.pending);
         let n = pending.len() as u64;
-        let pairs_before = self.pairs_checked;
+        let pairs_before = self.pairs_charged;
         let mut reports = Vec::new();
         for cand in pending {
             if let Some(rep) = self.process(cand, ctx.now(), eps, ctx.self_id) {
@@ -278,8 +350,10 @@ impl MonitorActor {
             }
         }
         // charge the CPU for this batch on the shared machine; results
-        // leave once the computation "finishes"
-        let pairs = self.pairs_checked - pairs_before;
+        // leave once the computation "finishes". The charge is per
+        // *modeled* pair, so the indexed search changes wall-clock cost
+        // only — never the event schedule.
+        let pairs = self.pairs_charged - pairs_before;
         let cost = self.cfg.cost.per_batch
             + self.cfg.cost.per_candidate * n
             + self.cfg.cost.per_pair * pairs;
@@ -313,12 +387,26 @@ impl MonitorActor {
     }
 }
 
+/// Exact O(1) "must be Concurrent" certificate: the 3-case rule can only
+/// return Before/After when one interval's physical end precedes the
+/// other's physical start by more than ε (rule 2's separation test is a
+/// *necessary* condition for any ordering); when both orderings are
+/// physically impossible the verdict is Concurrent no matter what the
+/// clock vectors say. Uses the same saturating arithmetic as
+/// [`crate::clock::hvc::HvcInterval::verdict`], so the two can never
+/// disagree at the i64 boundaries.
+#[inline]
+fn physically_entangled(a: &Candidate, b: &Candidate, eps: Millis) -> bool {
+    a.end_pt_ms() > b.start_pt_ms().saturating_sub(eps)
+        && b.end_pt_ms() > a.start_pt_ms().saturating_sub(eps)
+}
+
 /// Clause-level tuple search (free function so candidate windows stay
 /// borrowed while the accel runs; queries borrow intervals — no clock
 /// clones on the hot path).
 fn search_clause(
     accel: &Rc<RefCell<dyn Accel>>,
-    pairs_checked: &mut u64,
+    stats: &mut PairStats,
     cs: &ClauseState,
     cand: &Candidate,
     eps: Millis,
@@ -330,8 +418,12 @@ fn search_clause(
     }
 
     // compatibility lists: candidates of every other conjunct that are
-    // concurrent with `cand` — one batched accel call per conjunct
-    let mut compat: Vec<Vec<&Candidate>> = Vec::with_capacity(n_conjuncts);
+    // concurrent with `cand`. The window is sorted by interval end, so a
+    // binary search splits off the prefix that ends early enough to
+    // possibly order before `cand`; everything past the split only needs
+    // the O(1) start-side half of the certificate, and full vector
+    // verdicts run on the physically separable leftovers alone.
+    let mut compat: Vec<Vec<&WinEntry>> = Vec::with_capacity(n_conjuncts);
     for (j, win) in cs.windows.iter().enumerate() {
         if j == cand.conjunct as usize {
             compat.push(Vec::new());
@@ -340,27 +432,53 @@ fn search_clause(
         if win.is_empty() {
             return None; // some conjunct has no active candidate
         }
-        let queries: Vec<PairQuery> = win
-            .iter()
-            .map(|o| PairQuery { a: &cand.interval, b: &o.interval })
+        stats.charged += win.len() as u64; // the modeled scan visits all
+        let sep = cand.start_pt_ms().saturating_sub(eps);
+        let lo = win.partition_point(|e| e.cand.end_pt_ms() <= sep);
+        debug_assert!(
+            win[..lo].iter().all(|e| !physically_entangled(&e.cand, cand, eps)),
+            "prefix below the split must be physically separable"
+        );
+        let need: Vec<usize> = (0..win.len())
+            .filter(|&i| i < lo || !physically_entangled(&win[i].cand, cand, eps))
             .collect();
-        *pairs_checked += queries.len() as u64;
-        let verdicts = accel.borrow_mut().pair_verdicts(&queries, eps);
-        let ok: Vec<&Candidate> = win
-            .iter()
-            .zip(verdicts)
-            .filter(|(_, v)| *v == IntervalOrd::Concurrent)
-            .map(|(o, _)| o)
-            .collect();
+        let verdicts = if need.is_empty() {
+            Vec::new()
+        } else {
+            stats.checked += need.len() as u64;
+            let queries: Vec<PairQuery> = need
+                .iter()
+                .map(|&i| PairQuery { a: &cand.interval, b: &win[i].cand.interval })
+                .collect();
+            accel.borrow_mut().pair_verdicts(&queries, eps)
+        };
+        let mut ok: Vec<&WinEntry> = Vec::with_capacity(win.len());
+        let mut vi = 0;
+        for (i, e) in win.iter().enumerate() {
+            let concurrent = if vi < need.len() && need[vi] == i {
+                let v = verdicts[vi];
+                vi += 1;
+                v == IntervalOrd::Concurrent
+            } else {
+                true // certified by physical overlap
+            };
+            if concurrent {
+                ok.push(e);
+            }
+        }
         if ok.is_empty() {
             return None;
         }
+        // the DFS must try matches in arrival order — the order the
+        // historical linear scan produced them — or a different witness
+        // tuple could be consumed and the schedule would fork
+        ok.sort_unstable_by_key(|e| e.arr);
         compat.push(ok);
     }
 
     // DFS over the compatibility lists for a pairwise-concurrent tuple
     let mut chosen: Vec<&Candidate> = vec![cand];
-    if dfs(accel, pairs_checked, &compat, cand.conjunct as usize, 0, &mut chosen, eps) {
+    if dfs(accel, stats, &compat, cand.conjunct as usize, 0, &mut chosen, eps) {
         Some(chosen.into_iter().cloned().collect())
     } else {
         None
@@ -370,8 +488,8 @@ fn search_clause(
 #[allow(clippy::too_many_arguments)]
 fn dfs<'a>(
     accel: &Rc<RefCell<dyn Accel>>,
-    pairs_checked: &mut u64,
-    compat: &[Vec<&'a Candidate>],
+    stats: &mut PairStats,
+    compat: &[Vec<&'a WinEntry>],
     skip: usize,
     j: usize,
     chosen: &mut Vec<&'a Candidate>,
@@ -381,26 +499,35 @@ fn dfs<'a>(
         return true;
     }
     if j == skip {
-        return dfs(accel, pairs_checked, compat, skip, j + 1, chosen, eps);
+        return dfs(accel, stats, compat, skip, j + 1, chosen, eps);
     }
-    'next: for &o in &compat[j] {
+    'next: for &e in &compat[j] {
+        let o = &e.cand;
         // o is already concurrent with the seed; check the rest
         // (chosen[0] is the seed, skip it)
-        let queries: Vec<PairQuery> = chosen[1..]
-            .iter()
-            .map(|c| PairQuery { a: &c.interval, b: &o.interval })
-            .collect();
-        if !queries.is_empty() {
-            *pairs_checked += queries.len() as u64;
-            let verdicts = accel.borrow_mut().pair_verdicts(&queries, eps);
-            for v in verdicts {
-                if v != IntervalOrd::Concurrent {
-                    continue 'next;
+        if chosen.len() > 1 {
+            stats.charged += (chosen.len() - 1) as u64;
+            let need: Vec<&Candidate> = chosen[1..]
+                .iter()
+                .copied()
+                .filter(|c| !physically_entangled(c, o, eps))
+                .collect();
+            if !need.is_empty() {
+                stats.checked += need.len() as u64;
+                let queries: Vec<PairQuery> = need
+                    .iter()
+                    .map(|c| PairQuery { a: &c.interval, b: &o.interval })
+                    .collect();
+                let verdicts = accel.borrow_mut().pair_verdicts(&queries, eps);
+                for v in verdicts {
+                    if v != IntervalOrd::Concurrent {
+                        continue 'next;
+                    }
                 }
             }
         }
         chosen.push(o);
-        if dfs(accel, pairs_checked, compat, skip, j + 1, chosen, eps) {
+        if dfs(accel, stats, compat, skip, j + 1, chosen, eps) {
             return true;
         }
         chosen.pop();
@@ -454,6 +581,7 @@ mod tests {
     use crate::predicate::spec::{Clause, Conjunct, Literal, PredicateSpec};
     use crate::runtime::accel::NativeAccel;
     use crate::store::value::{Interner, Value};
+    use crate::util::rng::Rng;
 
     fn me_registry() -> (Rc<RefCell<Registry>>, PredId) {
         let interner = Interner::new();
@@ -479,7 +607,7 @@ mod tests {
         let mk = |t: i64| {
             let mut v = vec![t - 1; dim];
             v[server as usize] = t;
-            Hvc { owner: server, v }
+            Hvc::from_vec(server, v)
         };
         Candidate {
             pred,
@@ -587,6 +715,23 @@ mod tests {
         mon.process(cand(id, 0, 0, 99, 100_000, 100_010, true), 0, 2, ProcId(9));
         let st = mon.states.get(&id).unwrap();
         assert!(st.clauses[0].windows[0].len() <= 2, "old candidates retired");
+        assert!(mon.window_peak >= 50, "peak tracked before retirement");
+    }
+
+    #[test]
+    fn windows_stay_sorted_by_interval_end() {
+        let (reg, id) = me_registry();
+        let mut mon = monitor(reg);
+        // out-of-order ends from two interleaved servers
+        for (seq, (s, e)) in [(100, 300), (120, 180), (90, 400), (200, 250)].iter().enumerate() {
+            mon.process(cand(id, 0, 0, seq as u64, *s, *e, true), 0, 2, ProcId(9));
+        }
+        let st = mon.states.get(&id).unwrap();
+        let ends: Vec<i64> =
+            st.clauses[0].windows[0].iter().map(|w| w.cand.end_pt_ms()).collect();
+        let mut sorted = ends.clone();
+        sorted.sort_unstable();
+        assert_eq!(ends, sorted, "window index invariant");
     }
 
     #[test]
@@ -624,5 +769,227 @@ mod tests {
         let r = mon.process(cand(id, 2, 0, 1, 200, 280, true), 0, 2, ProcId(9));
         assert!(r.is_some(), "three pairwise-overlapping intervals");
         assert_eq!(r.unwrap().witnesses.len(), 3);
+    }
+
+    #[test]
+    fn prop_certificate_never_contradicts_the_verdict() {
+        // physically_entangled(a, b, ε) must imply Concurrent under the
+        // full 3-case rule — the exactness of the fast path
+        crate::util::prop::check_default("entangled_implies_concurrent", |rng| {
+            let dim = rng.range(2, 6) as usize;
+            let mk = |rng: &mut Rng, base: i64| {
+                let server = rng.below(dim as u64) as u16;
+                let s = base + rng.range(0, 200) as i64;
+                let e = s + rng.range(0, 100) as i64;
+                let mut mkh = |t: i64| {
+                    let v = (0..dim).map(|_| t - rng.range(0, 30) as i64).collect::<Vec<_>>();
+                    let mut h = Hvc::from_vec(server, v);
+                    h.v[server as usize] = t;
+                    h
+                };
+                Candidate {
+                    pred: PredId(0),
+                    clause: 0,
+                    conjunct: 0,
+                    server: ProcId(server as u32),
+                    seq: 0,
+                    interval: HvcInterval::new(mkh(s), mkh(e)),
+                    values: vec![],
+                    truth: true,
+                    emitted_at: 0,
+                }
+            };
+            let base_a = rng.range(0, 500) as i64;
+            let a = mk(rng, base_a);
+            let base_b = rng.range(0, 500) as i64;
+            let b = mk(rng, base_b);
+            let eps = [0, 2, 25, crate::clock::hvc::EPS_INF][rng.below(4) as usize];
+            if physically_entangled(&a, &b, eps)
+                && HvcInterval::verdict(&a.interval, &b.interval, eps) != IntervalOrd::Concurrent
+            {
+                return Err(format!(
+                    "certificate contradicted the rule: a={:?} b={:?} eps={eps}",
+                    a.interval, b.interval
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// Reference implementation of the pre-index monitor: arrival-order
+    /// windows, full-window retain retirement, a verdict for every pair.
+    /// The indexed monitor must agree on every outcome, witness set, and
+    /// `pairs_charged` (= this reference's pair count).
+    struct RefMonitor {
+        windows: Vec<Vec<Candidate>>,
+        retire_ms: Millis,
+        pairs: u64,
+    }
+
+    impl RefMonitor {
+        fn new(n_conjuncts: usize, retire_ms: Millis) -> Self {
+            Self { windows: vec![Vec::new(); n_conjuncts], retire_ms, pairs: 0 }
+        }
+
+        fn process(&mut self, cand: &Candidate, eps: Millis) -> Option<Vec<Candidate>> {
+            let horizon = cand.end_pt_ms() - self.retire_ms;
+            for win in &mut self.windows {
+                win.retain(|o| o.end_pt_ms() >= horizon);
+            }
+            if !cand.truth {
+                return None;
+            }
+            let mut pairs = 0u64;
+            let found = self.search(cand, eps, &mut pairs);
+            self.pairs += pairs;
+            match found {
+                Some(witnesses) => {
+                    for w in &witnesses {
+                        self.windows[w.conjunct as usize]
+                            .retain(|o| !(o.server == w.server && o.seq == w.seq));
+                    }
+                    Some(witnesses)
+                }
+                None => {
+                    self.windows[cand.conjunct as usize].push(cand.clone());
+                    None
+                }
+            }
+        }
+
+        fn search(&self, cand: &Candidate, eps: Millis, pairs: &mut u64) -> Option<Vec<Candidate>> {
+            if self.windows.len() == 1 {
+                return Some(vec![cand.clone()]);
+            }
+            let mut compat: Vec<Vec<&Candidate>> = Vec::new();
+            for (j, win) in self.windows.iter().enumerate() {
+                if j == cand.conjunct as usize {
+                    compat.push(Vec::new());
+                    continue;
+                }
+                if win.is_empty() {
+                    return None;
+                }
+                *pairs += win.len() as u64;
+                let ok: Vec<&Candidate> = win
+                    .iter()
+                    .filter(|o| {
+                        HvcInterval::verdict(&cand.interval, &o.interval, eps)
+                            == IntervalOrd::Concurrent
+                    })
+                    .collect();
+                if ok.is_empty() {
+                    return None;
+                }
+                compat.push(ok);
+            }
+            let mut chosen: Vec<&Candidate> = vec![cand];
+            if Self::dfs(&compat, cand.conjunct as usize, 0, &mut chosen, eps, pairs) {
+                Some(chosen.into_iter().cloned().collect())
+            } else {
+                None
+            }
+        }
+
+        fn dfs<'a>(
+            compat: &[Vec<&'a Candidate>],
+            skip: usize,
+            j: usize,
+            chosen: &mut Vec<&'a Candidate>,
+            eps: Millis,
+            pairs: &mut u64,
+        ) -> bool {
+            if j >= compat.len() {
+                return true;
+            }
+            if j == skip {
+                return Self::dfs(compat, skip, j + 1, chosen, eps, pairs);
+            }
+            'next: for &o in &compat[j] {
+                if chosen.len() > 1 {
+                    *pairs += (chosen.len() - 1) as u64;
+                    for c in &chosen[1..] {
+                        if HvcInterval::verdict(&c.interval, &o.interval, eps)
+                            != IntervalOrd::Concurrent
+                        {
+                            continue 'next;
+                        }
+                    }
+                }
+                chosen.push(o);
+                if Self::dfs(compat, skip, j + 1, chosen, eps, pairs) {
+                    return true;
+                }
+                chosen.pop();
+            }
+            false
+        }
+    }
+
+    #[test]
+    fn indexed_search_matches_the_bruteforce_reference() {
+        // randomized differential run: the indexed monitor and the
+        // pre-index reference must report the same violations with the
+        // same witnesses, and `pairs_charged` must equal the reference's
+        // pair count exactly (schedule purity) while `pairs_checked`
+        // does strictly less verdict work
+        for (case, eps) in [0i64, 3, 40, crate::clock::hvc::EPS_INF].into_iter().enumerate() {
+            let interner = Interner::new();
+            let registry = Rc::new(RefCell::new(Registry::new()));
+            let n_conjuncts = 3usize;
+            let conjs = (0..n_conjuncts)
+                .map(|i| {
+                    let v = interner.borrow_mut().intern(&format!("d{i}"));
+                    Conjunct { literals: vec![Literal { var: v, value: Value::Bool(true) }] }
+                })
+                .collect();
+            let spec = PredicateSpec {
+                id: PredId(0),
+                name: "diff".into(),
+                kind: PredKind::Linear,
+                clauses: vec![Clause { conjuncts: conjs }],
+            };
+            let id = registry.borrow_mut().add(spec);
+            let mut mon = monitor(registry);
+            mon.cfg.retire_window_ms = 150;
+            let mut reference = RefMonitor::new(n_conjuncts, 150);
+
+            let mut rng = Rng::new(0xC0FFEE + case as u64);
+            let mut t = 100i64;
+            for seq in 0..400u64 {
+                t += rng.range(0, 30) as i64;
+                let conjunct = rng.below(n_conjuncts as u64) as u16;
+                let server = rng.below(2) as u16;
+                let len = rng.range(0, 120) as i64;
+                let truth = rng.chance(0.8);
+                let c = cand(id, conjunct, server, seq, t, t + len, truth);
+                let got = mon.process(c.clone(), 0, eps, ProcId(9));
+                let want = reference.process(&c, eps);
+                match (&got, &want) {
+                    (None, None) => {}
+                    (Some(g), Some(w)) => {
+                        let key = |c: &Candidate| (c.conjunct, c.server, c.seq);
+                        let gk: Vec<_> = g.witnesses.iter().map(key).collect();
+                        let wk: Vec<_> = w.iter().map(key).collect();
+                        assert_eq!(gk, wk, "witness tuples diverged at seq {seq} (eps {eps})");
+                    }
+                    _ => panic!("outcome diverged at seq {seq} (eps {eps}): {got:?} vs {want:?}"),
+                }
+            }
+            assert_eq!(
+                mon.pairs_charged, reference.pairs,
+                "charged pairs must replicate the linear scan exactly (eps {eps})"
+            );
+            assert!(
+                mon.pairs_checked <= mon.pairs_charged,
+                "the index can never do more verdict work than the scan"
+            );
+            if eps == crate::clock::hvc::EPS_INF {
+                assert_eq!(
+                    mon.pairs_checked, 0,
+                    "with ε = ∞ every pair is certified — zero verdicts"
+                );
+            }
+        }
     }
 }

@@ -1,7 +1,8 @@
 //! Experiment assembly: configuration, the runner that wires topology +
-//! actors + shared state into a `Sim`, and the per-figure/table scenario
-//! presets.
+//! actors + shared state into a `Sim`, the per-figure/table scenario
+//! presets, and the perf harness behind `BENCH_hotpath.json`.
 
 pub mod config;
+pub mod perfjson;
 pub mod runner;
 pub mod scenarios;

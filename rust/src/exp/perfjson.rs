@@ -1,0 +1,219 @@
+//! The perf harness behind `BENCH_hotpath.json`: a fixed scenario matrix
+//! run wall-clock, with the hot-path counters every future perf PR is
+//! judged against.
+//!
+//! The matrix pins the four shapes that stress different hot paths:
+//!
+//! | row            | stresses                                          |
+//! |----------------|---------------------------------------------------|
+//! | `serial`       | the paper's closed-loop client (clock layer)      |
+//! | `pipelined-d8` | depth-8 scatter-gather (request fan-out, Rc share)|
+//! | `scaleout-s24` | 24-server ring, spilled HVCs (dim > inline cap)   |
+//! | `faulted`      | crash/restart + re-sync (fault view on every send)|
+//!
+//! Per row the JSON records `events_per_sec` (DES wall-clock throughput
+//! — the headline trajectory number), `sent_bytes_proxy` (nominal bytes
+//! over all messages, [`crate::sim::des::MSG_CLASS_BYTES`] — the
+//! allocation/traffic proxy), `pairs_checked` vs `pairs_charged` (real
+//! vs modeled monitor verdict work) and `window_peak`. Virtual-time
+//! results (ops, violations) ride along so a perf regression that
+//! *changes behavior* is immediately visible in the same file.
+//!
+//! Entry point: `cargo bench --bench micro_hotpath -- perf`
+//! (`--rows serial,faulted` to subset, `--out PATH` / `$PERF_OUT` to
+//! redirect; `$BENCH_SCALE` / `$BENCH_SEED` as everywhere else). CI's
+//! `perf-smoke` job runs the smallest row on every push and uploads the
+//! artifact, so the emitter can never silently rot.
+
+use std::time::Instant;
+
+use crate::client::consistency::ConsistencyCfg;
+use crate::exp::config::ExpConfig;
+use crate::exp::{runner, scenarios};
+
+/// The fixed matrix, smallest row first (CI smoke runs `MATRIX[0]`).
+pub const MATRIX: [&str; 4] = ["serial", "pipelined-d8", "scaleout-s24", "faulted"];
+
+/// One measured matrix row.
+#[derive(Debug, Clone)]
+pub struct PerfRow {
+    pub name: String,
+    /// DES events dispatched
+    pub events: u64,
+    /// wall-clock seconds for the whole run
+    pub wall_s: f64,
+    /// events / wall_s — the headline trajectory number
+    pub events_per_sec: f64,
+    pub sent_total: u64,
+    /// nominal bytes over all sent messages (allocation proxy)
+    pub sent_bytes_proxy: u64,
+    /// interval verdicts actually computed by the indexed monitor
+    pub pairs_checked: u64,
+    /// modeled linear-scan pairs (the virtual CPU charge)
+    pub pairs_charged: u64,
+    /// largest per-conjunct search window observed
+    pub window_peak: usize,
+    pub candidates_seen: u64,
+    pub ops_ok: u64,
+    pub violations: usize,
+}
+
+/// The configuration behind a matrix row. Panics on an unknown name so a
+/// typo in `--rows` fails loudly instead of silently measuring nothing.
+pub fn matrix_cfg(row: &str, scale: f64, seed: u64) -> ExpConfig {
+    match row {
+        // the paper's serial closed-loop client on the conjunctive
+        // stress workload — the pure clock-layer hot path
+        "serial" => scenarios::conjunctive_regional(ConsistencyCfg::n3r1w1(), true, scale, seed),
+        // depth-8 scatter-gather coloring: request fan-out dominates
+        "pipelined-d8" => scenarios::pipeline_coloring(8, 4, scale, seed),
+        // 24-server ring: HVC dimension 24 > HVC_INLINE_CAP, the heap
+        // spill path, plus partitioned routing
+        "scaleout-s24" => scenarios::scaleout_conjunctive(24, scale, seed),
+        // crash/restart churn: the fault view sits on every send
+        "faulted" => scenarios::crash_churn_conjunctive(scale, seed),
+        other => panic!("unknown perf matrix row {other:?} (rows: {MATRIX:?})"),
+    }
+}
+
+/// Run one row wall-clock.
+pub fn run_row(row: &str, scale: f64, seed: u64) -> PerfRow {
+    let cfg = matrix_cfg(row, scale, seed);
+    let t0 = Instant::now();
+    let res = runner::run(&cfg);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let events = res.sim_stats.events;
+    PerfRow {
+        name: row.to_string(),
+        events,
+        wall_s,
+        events_per_sec: if wall_s > 0.0 { events as f64 / wall_s } else { 0.0 },
+        sent_total: res.sim_stats.sent_total(),
+        sent_bytes_proxy: res.sim_stats.sent_bytes_proxy(),
+        pairs_checked: res.pairs_checked,
+        pairs_charged: res.pairs_charged,
+        window_peak: res.window_peak,
+        candidates_seen: res.candidates_seen,
+        ops_ok: res.ops_ok,
+        violations: res.violations_detected,
+    }
+}
+
+/// Run the given rows (subset of [`MATRIX`]) in order.
+pub fn run_matrix(rows: &[&str], scale: f64, seed: u64) -> Vec<PerfRow> {
+    rows.iter().map(|r| run_row(r, scale, seed)).collect()
+}
+
+fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Serialize rows to the `BENCH_hotpath.json` schema (no JSON crate —
+/// offline builds; the schema is flat enough for a hand-rolled writer).
+pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenance: &str) -> String {
+    let mut o = String::new();
+    o.push_str("{\n");
+    o.push_str("  \"schema\": 1,\n");
+    o.push_str("  \"bench\": \"hotpath\",\n");
+    o.push_str(&format!("  \"scale\": {scale},\n"));
+    o.push_str(&format!("  \"seed\": {seed},\n"));
+    o.push_str(&format!("  \"measured\": {measured},\n"));
+    o.push_str("  \"provenance\": ");
+    push_json_str(&mut o, provenance);
+    o.push_str(",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        o.push_str("    {\"name\": ");
+        push_json_str(&mut o, &r.name);
+        o.push_str(&format!(
+            ", \"events\": {}, \"wall_s\": {:.4}, \"events_per_sec\": {:.1}, \
+             \"sent_total\": {}, \"sent_bytes_proxy\": {}, \"pairs_checked\": {}, \
+             \"pairs_charged\": {}, \"window_peak\": {}, \"candidates_seen\": {}, \
+             \"ops_ok\": {}, \"violations\": {}}}",
+            r.events,
+            r.wall_s,
+            r.events_per_sec,
+            r.sent_total,
+            r.sent_bytes_proxy,
+            r.pairs_checked,
+            r.pairs_charged,
+            r.window_peak,
+            r.candidates_seen,
+            r.ops_ok,
+            r.violations,
+        ));
+        o.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    o.push_str("  ]\n}\n");
+    o
+}
+
+/// Write the JSON next to wherever the harness runs (repo root under
+/// `cargo bench`).
+pub fn write_json(path: &std::path::Path, json: &str) -> std::io::Result<()> {
+    std::fs::write(path, json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_rows_resolve_to_their_scenarios() {
+        let serial = matrix_cfg("serial", 0.05, 7);
+        assert_eq!(serial.pipeline_depth, 1);
+        assert_eq!(serial.n_servers(), 3);
+        let piped = matrix_cfg("pipelined-d8", 0.05, 7);
+        assert_eq!(piped.pipeline_depth, 8);
+        let scaled = matrix_cfg("scaleout-s24", 0.05, 7);
+        assert_eq!(scaled.n_servers(), 24, "spills past HVC_INLINE_CAP");
+        let faulted = matrix_cfg("faulted", 0.05, 7);
+        assert!(!faulted.fault_plan.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown perf matrix row")]
+    fn unknown_row_fails_loudly() {
+        let _ = matrix_cfg("seriall", 0.05, 7);
+    }
+
+    #[test]
+    fn serial_row_runs_and_serializes() {
+        // smallest row at the test scale: end-to-end emitter check
+        let row = run_row("serial", 0.01, 7);
+        assert!(row.events > 0, "the run dispatched events");
+        assert!(row.events_per_sec > 0.0);
+        assert!(row.sent_bytes_proxy > row.sent_total, "proxy weighs bytes, not messages");
+        assert!(row.pairs_checked <= row.pairs_charged);
+        let json = to_json(&[row], 0.01, 7, true, "unit-test");
+        for key in [
+            "\"schema\": 1",
+            "\"measured\": true",
+            "\"name\": \"serial\"",
+            "\"events_per_sec\"",
+            "\"sent_bytes_proxy\"",
+            "\"pairs_charged\"",
+            "\"window_peak\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        // trailing-comma hygiene for single-row output
+        assert!(!json.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn json_escapes_strings() {
+        let mut s = String::new();
+        push_json_str(&mut s, "a\"b\\c\nd");
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\"");
+    }
+}

@@ -61,7 +61,7 @@ mod tests {
     use crate::clock::hvc::Hvc;
 
     fn interval(owner: u16, s: &[Millis], e: &[Millis]) -> HvcInterval {
-        HvcInterval::new(Hvc { owner, v: s.to_vec() }, Hvc { owner, v: e.to_vec() })
+        HvcInterval::new(Hvc::from_vec(owner, s.to_vec()), Hvc::from_vec(owner, e.to_vec()))
     }
 
     #[test]

@@ -78,12 +78,38 @@ pub struct SimStats {
     pub fault_transitions: u64,
 }
 
+/// Nominal serialized size per message class (bytes). This is an
+/// *allocation/traffic proxy* for the perf harness (`exp/perfjson`), not
+/// a wire protocol: requests/replies count their headers plus a typical
+/// single-version payload, candidates and violations their clock
+/// intervals and witness sets, sync chunks a small key batch. The values
+/// only need to be stable across runs so `sent_bytes_proxy` trends are
+/// comparable PR-over-PR.
+pub const MSG_CLASS_BYTES: [u64; N_MSG_CLASSES] = [
+    96,    // Request: op + key + version clock + piggy-backed HVC ref
+    120,   // Reply: status + sibling list (typical single version) + HVC
+    256,   // Candidate: HVC interval + partial state values
+    512,   // Violation: witness set (several candidates)
+    32,    // Rollback control
+    192,   // RegisterPred: predicate spec
+    1_024, // Sync: re-sync chunk (key batch)
+];
+
 impl SimStats {
     pub fn sent_total(&self) -> u64 {
         self.sent.iter().sum()
     }
     pub fn sent_class(&self, c: MsgClass) -> u64 {
         self.sent[c as usize]
+    }
+    /// Total nominal bytes sent ([`MSG_CLASS_BYTES`] per class) — the
+    /// perf harness's allocation proxy.
+    pub fn sent_bytes_proxy(&self) -> u64 {
+        self.sent
+            .iter()
+            .zip(MSG_CLASS_BYTES.iter())
+            .map(|(n, b)| n * b)
+            .sum()
     }
 }
 
@@ -437,7 +463,7 @@ mod tests {
         fn on_msg(&mut self, ctx: &mut Ctx, from: ProcId, msg: Msg) {
             match msg {
                 Msg::Request { req, .. } => {
-                    ctx.send(from, Msg::Reply { req, reply: ServerReply::PutAck, hvc: crate::clock::hvc::Hvc::new(0, 1, ctx.pt_ms(), 0) });
+                    ctx.send(from, Msg::Reply { req, reply: ServerReply::PutAck, hvc: Rc::new(crate::clock::hvc::Hvc::new(0, 1, ctx.pt_ms(), 0)) });
                 }
                 Msg::Reply { req, .. } => {
                     self.log.borrow_mut().push((ctx.now(), req));

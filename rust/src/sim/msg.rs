@@ -51,12 +51,15 @@ pub enum SyncMsg {
 pub enum Msg {
     /// client → server. The client piggy-backs the freshest HVC it has
     /// observed (clients relay causality between servers; the HVC dimension
-    /// stays = #servers). The payload is `Rc`-shared: a quorum broadcast
-    /// fans one allocation out to all N replicas instead of deep-cloning
-    /// the value and its vector clock per target.
-    Request { req: u64, op: Rc<ServerOp>, hvc: Option<Hvc> },
-    /// server → client.
-    Reply { req: u64, reply: ServerReply, hvc: Hvc },
+    /// stays = #servers). Both the payload and the clock are `Rc`-shared:
+    /// a quorum broadcast fans one allocation out to all N replicas
+    /// instead of deep-cloning the value, its vector clock, and the
+    /// piggy-backed HVC per target.
+    Request { req: u64, op: Rc<ServerOp>, hvc: Option<Rc<Hvc>> },
+    /// server → client. The HVC is an `Rc` snapshot of the server's
+    /// clock; the server mutates its clock copy-on-write
+    /// (`Rc::make_mut`), so a reply no longer deep-clones the vector.
+    Reply { req: u64, reply: ServerReply, hvc: Rc<Hvc> },
     /// local predicate detector (on a server) → monitor.
     Candidate(Box<Candidate>),
     /// monitor → rollback controller (and anyone subscribed).

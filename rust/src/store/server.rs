@@ -85,7 +85,11 @@ impl Default for ServerCfg {
 
 pub struct ServerActor {
     pub idx: u16,
-    hvc: Hvc,
+    /// the server's clock, shared into replies and candidate intervals
+    /// by reference count and mutated copy-on-write (`Rc::make_mut`):
+    /// a tick only copies the vector while an in-flight message still
+    /// holds the previous snapshot
+    hvc: Rc<Hvc>,
     table: Table,
     /// partition ownership (shared ring view)
     router: Rc<Router>,
@@ -134,7 +138,7 @@ impl ServerActor {
         );
         Self {
             idx,
-            hvc: Hvc::new(idx, n_servers, 0, 0),
+            hvc: Rc::new(Hvc::new(idx, n_servers, 0, 0)),
             table: Table::new(),
             router,
             detector,
@@ -162,12 +166,14 @@ impl ServerActor {
         &self.table
     }
 
-    fn handle_request(&mut self, ctx: &mut Ctx, from: ProcId, req: u64, op: Rc<ServerOp>, piggy: Option<Hvc>) {
+    fn handle_request(&mut self, ctx: &mut Ctx, from: ProcId, req: u64, op: Rc<ServerOp>, piggy: Option<Rc<Hvc>>) {
         let pt = ctx.pt_ms();
         let eps = ctx.eps_ms();
+        // copy-on-tick: make_mut clones the clock only if a reply or a
+        // candidate interval still references the previous snapshot
         match &piggy {
-            Some(h) => self.hvc.recv(h, pt, eps),
-            None => self.hvc.tick(pt, eps),
+            Some(h) => Rc::make_mut(&mut self.hvc).recv(h, pt, eps),
+            None => Rc::make_mut(&mut self.hvc).tick(pt, eps),
         }
 
         if self.frozen.is_some() || self.recovering {
@@ -176,7 +182,7 @@ impl ServerActor {
             ctx.send_after(50 * 1_000, from, Msg::Reply {
                 req,
                 reply: ServerReply::Frozen,
-                hvc: self.hvc.clone(),
+                hvc: Rc::clone(&self.hvc),
             });
             return;
         }
@@ -188,7 +194,7 @@ impl ServerActor {
             ctx.send_after(50 * 1_000, from, Msg::Reply {
                 req,
                 reply: ServerReply::WrongServer,
-                hvc: self.hvc.clone(),
+                hvc: Rc::clone(&self.hvc),
             });
             return;
         }
@@ -236,7 +242,7 @@ impl ServerActor {
         self.reqs_served += 1;
         self.metrics.borrow_mut().record_server(self.idx as usize, ctx.now());
 
-        ctx.send_after(delay, from, Msg::Reply { req, reply, hvc: self.hvc.clone() });
+        ctx.send_after(delay, from, Msg::Reply { req, reply, hvc: Rc::clone(&self.hvc) });
         let me = ctx.self_id;
         for (dst, mut c) in cands {
             c.server = me;
@@ -419,14 +425,14 @@ impl Actor for ServerActor {
                 self.windowlog = WindowLog::new(self.cfg.windowlog_ms, self.cfg.windowlog_max);
                 self.snapshots = SnapshotStore::new(self.cfg.snapshots_keep);
                 let n_servers = self.router.ring().n_servers();
-                self.hvc = Hvc::new(self.idx, n_servers, 0, 0);
+                self.hvc = Rc::new(Hvc::new(self.idx, n_servers, 0, 0));
             }
             FaultHook::Restart => {
                 self.crashed = false;
                 // a fresh HVC that claims nothing about remote processes
                 // (entries floored far in the past, as at cold start)
                 let n_servers = self.router.ring().n_servers();
-                self.hvc = Hvc::new(self.idx, n_servers, ctx.pt_ms(), EPS_INF);
+                self.hvc = Rc::new(Hvc::new(self.idx, n_servers, ctx.pt_ms(), EPS_INF));
                 // with an empty peer table (unit-test rigs) this is an
                 // immediate no-op re-sync and the server serves right away
                 self.begin_resync(ctx);

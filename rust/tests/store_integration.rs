@@ -468,7 +468,105 @@ fn cluster_eq_n_reproduces_full_replication_bit_identically() {
     assert_eq!(a.violations_detected, b.violations_detected);
     assert_eq!(a.candidates_seen, b.candidates_seen);
     assert_eq!(a.pairs_checked, b.pairs_checked);
+    assert_eq!(a.pairs_charged, b.pairs_charged);
     assert_eq!(a.app_tps, b.app_tps);
     assert_eq!(a.server_tps, b.server_tps);
     assert_eq!(a.sim_stats.events, b.sim_stats.events, "identical event schedules");
+}
+
+// ---------------------------------------------------------------------------
+// regression: the clock representation is observationally pure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn clock_representation_is_observationally_pure() {
+    // The inline HvcVec representation must be a pure re-encoding of the
+    // historical heap Vec<Millis>: forcing every clock onto the heap
+    // (the pre-optimization layout, via the test hook) has to reproduce
+    // the exact same runs — event counts, per-class wire traffic, app
+    // outcomes, violation timings — for all three workloads at pipeline
+    // depth 1 and 8, same seed.
+    use optikv::clock::hvc::set_force_spill;
+    use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+    use optikv::exp::runner::{run, ExpResult};
+
+    #[derive(Debug, PartialEq)]
+    struct Digest {
+        events: u64,
+        sent: Vec<u64>,
+        dropped: Vec<u64>,
+        ops_ok: u64,
+        ops_failed: u64,
+        violations: usize,
+        candidates: u64,
+        pairs_checked: u64,
+        pairs_charged: u64,
+        app_tps_bits: u64,
+        server_tps_bits: u64,
+        /// the app event log: the per-bucket completion series
+        app_series_bits: Vec<u64>,
+        detection_ms_bits: Vec<u64>,
+    }
+
+    fn digest(r: &ExpResult) -> Digest {
+        Digest {
+            events: r.sim_stats.events,
+            sent: r.sim_stats.sent.to_vec(),
+            dropped: r.sim_stats.dropped.to_vec(),
+            ops_ok: r.ops_ok,
+            ops_failed: r.ops_failed,
+            violations: r.violations_detected,
+            candidates: r.candidates_seen,
+            pairs_checked: r.pairs_checked,
+            pairs_charged: r.pairs_charged,
+            app_tps_bits: r.app_tps.to_bits(),
+            server_tps_bits: r.server_tps.to_bits(),
+            app_series_bits: r.metrics.borrow().app_series().iter().map(|x| x.to_bits()).collect(),
+            detection_ms_bits: r.detection_latencies_ms.iter().map(|x| x.to_bits()).collect(),
+        }
+    }
+
+    let apps: [(&str, AppKind, u64); 3] = [
+        (
+            "conjunctive",
+            AppKind::Conjunctive { n_preds: 4, n_conjuncts: 3, beta: 0.2, put_pct: 0.5 },
+            20,
+        ),
+        (
+            "coloring",
+            AppKind::Coloring { nodes: 120, edges_per_node: 3, task_size: 5, loop_forever: false },
+            60,
+        ),
+        (
+            "weather",
+            AppKind::Weather { grid_w: 10, grid_h: 10, put_pct: 0.5, use_locks: true },
+            30,
+        ),
+    ];
+    for (name, app, dur_s) in apps {
+        for depth in [1usize, 8] {
+            let mk = || {
+                let mut cfg = ExpConfig::new(
+                    &format!("purity-{name}-d{depth}"),
+                    ConsistencyCfg::n3r1w1(),
+                    app.clone(),
+                )
+                .with_pipeline_depth(depth);
+                cfg.n_clients = 6;
+                cfg.duration = dur_s * SEC;
+                cfg.topo = TopoKind::AwsRegional { zones: 3 };
+                cfg
+            };
+            set_force_spill(false);
+            let inline = run(&mk());
+            set_force_spill(true);
+            let spilled = run(&mk());
+            set_force_spill(false);
+            assert_eq!(
+                digest(&inline),
+                digest(&spilled),
+                "representation leaked into the schedule ({name}, depth {depth})"
+            );
+        }
+    }
 }

@@ -43,7 +43,7 @@ fn random_interval(rng: &mut Rng, d: usize, eps_floor: bool) -> HvcInterval {
         }
     }
     ev[owner as usize] = *ev.iter().max().unwrap();
-    HvcInterval::new(Hvc { owner, v: sv }, Hvc { owner, v: ev })
+    HvcInterval::new(Hvc::from_vec(owner, sv), Hvc::from_vec(owner, ev))
 }
 
 #[test]
@@ -102,7 +102,7 @@ fn xla_handles_oversized_batches_by_chunking() {
 fn xla_verdicts_known_cases() {
     let Some(mut xla) = artifacts_available() else { return };
     let iv = |owner: u16, s: &[Millis], e: &[Millis]| {
-        HvcInterval::new(Hvc { owner, v: s.to_vec() }, Hvc { owner, v: e.to_vec() })
+        HvcInterval::new(Hvc::from_vec(owner, s.to_vec()), Hvc::from_vec(owner, e.to_vec()))
     };
     let ivs = [
         iv(0, &[10, 0], &[20, 0]),
