@@ -1,0 +1,74 @@
+//! Adaptive benefit — the hysteresis controller vs the two static pins
+//! on the fault-phased scenario (`scenarios::adaptive_conjunctive`).
+//!
+//! The run has three phases: healthy, *bad* (region 2 partitioned off,
+//! so the eventual mode's W = 2 writes from that region expire), and
+//! healed. Per phase we report the aggregate application throughput of
+//! each run; the claim under test is that the adaptive run tracks the
+//! best static mode in every phase (within the noise of the switch
+//! transients), ends with ≥ 1 eventual→sequential→eventual round trip,
+//! and lands within 5 % of the best static pin overall.
+//!
+//! `BENCH_SCALE=1.0 cargo bench --bench adaptive_benefit` for long runs.
+
+use optikv::adapt::round_trips;
+use optikv::exp::runner::{run, ExpResult};
+use optikv::exp::scenarios::{adaptive_conjunctive, AdaptRun};
+use optikv::metrics::report::{bench_scale, bench_seed, benefit_pct, mode_timeline_summary};
+use optikv::sim::SEC;
+use optikv::util::stats::{mean, Table};
+
+fn main() {
+    let scale = bench_scale(0.2);
+    let seed = bench_seed();
+    println!("# adaptive consistency vs static pins (scale {scale})\n");
+
+    let probe = adaptive_conjunctive(AdaptRun::Adaptive, scale, seed);
+    let d_secs = (probe.duration / SEC) as usize;
+    // the scenario cuts region 2 off for the middle fifth of the run
+    let (cut_from, cut_until) = (2 * d_secs / 5, 3 * d_secs / 5);
+
+    let runs: Vec<(AdaptRun, ExpResult)> =
+        [AdaptRun::StaticEventual, AdaptRun::StaticSequential, AdaptRun::Adaptive]
+            .into_iter()
+            .map(|k| (k, run(&adaptive_conjunctive(k, scale, seed))))
+            .collect();
+
+    let phase = |r: &ExpResult, a: usize, b: usize| -> f64 {
+        let series = r.metrics.borrow().app_series();
+        let (a, b) = (a.min(series.len()), b.min(series.len()));
+        mean(&series[a..b.max(a)])
+    };
+
+    let mut t = Table::new(&[
+        "run",
+        "overall ops/s",
+        "healthy ops/s",
+        "bad-phase ops/s",
+        "healed ops/s",
+        "timeouts",
+        "switches",
+    ]);
+    for (kind, res) in &runs {
+        t.row(&[
+            kind.label().to_string(),
+            format!("{:.1}", res.app_tps),
+            // skip the warmup quarter of the healthy phase
+            format!("{:.1}", phase(res, cut_from / 4, cut_from)),
+            format!("{:.1}", phase(res, cut_from, cut_until)),
+            format!("{:.1}", phase(res, cut_until, d_secs.saturating_sub(1))),
+            res.quorum_timeouts.to_string(),
+            res.mode_switches.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let adaptive = &runs[2].1;
+    let best_static = runs[0].1.app_tps.max(runs[1].1.app_tps);
+    print!("{}", mode_timeline_summary(adaptive));
+    println!(
+        "adaptive vs best static overall: {:+.1}% (acceptance: >= -5%) | round trips: {}",
+        benefit_pct(adaptive.app_tps, best_static),
+        round_trips(&adaptive.mode_timeline),
+    );
+}

@@ -1,0 +1,287 @@
+//! The `AdaptController` actor: one per deployment (co-located with the
+//! control plane in region 0), ticking once per signal window.
+//!
+//! Per tick it (1) closes a [`WinSample`] — polling op / timeout /
+//! latency deltas from the shared metrics hub and folding in the
+//! violation & stall samples pushed by the rollback controller since the
+//! last tick — (2) asks the [`Policy`] for the target [`Mode`], and (3)
+//! on a change runs the epoch protocol: bump the consistency epoch,
+//! record it on the mode timeline, and announce the new quorum config to
+//! every client. Clients ack the epoch they run under; the controller
+//! re-announces to un-acked clients each tick, so an announce lost to a
+//! partition converges after heal instead of wedging the protocol.
+
+use crate::adapt::policy::{Mode, Policy};
+use crate::adapt::signals::{SignalWindow, WinSample};
+use crate::adapt::AdaptCfg;
+use crate::client::consistency::ConsistencyCfg;
+use crate::metrics::throughput::{Metrics, OP_LATENCY_SAMPLE_CAP};
+use crate::sim::des::{Actor, Ctx};
+use crate::sim::msg::{AdaptMsg, Msg};
+use crate::sim::{ProcId, Time, MS};
+use crate::util::stats::Cdf;
+
+const TAG_TICK: u64 = 1;
+
+/// One entry of the mode timeline: from `from` onwards the cluster was
+/// asked to run `cfg` under consistency epoch `epoch`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModeSpan {
+    pub from: Time,
+    pub epoch: u64,
+    pub cfg: ConsistencyCfg,
+}
+
+impl ModeSpan {
+    pub fn label(&self) -> &'static str {
+        self.cfg.model_name()
+    }
+}
+
+/// Count completed eventual → sequential → eventual excursions on a
+/// timeline (the acceptance artifact of the fault-phased scenarios).
+pub fn round_trips(timeline: &[ModeSpan]) -> usize {
+    let mut n = 0;
+    let mut armed = false; // saw eventual → sequential
+    for w in timeline.windows(2) {
+        let (a, b) = (w[0].cfg.is_sequential(), w[1].cfg.is_sequential());
+        match (a, b) {
+            (false, true) => armed = true,
+            (true, false) if armed => {
+                n += 1;
+                armed = false;
+            }
+            _ => {}
+        }
+    }
+    n
+}
+
+pub struct AdaptController {
+    clients: Vec<ProcId>,
+    metrics: Metrics,
+    policy: Box<dyn Policy>,
+    eventual: ConsistencyCfg,
+    sequential: ConsistencyCfg,
+    window: Time,
+    win: SignalWindow,
+    mode: Mode,
+    /// highest epoch each client has acked (index = client idx)
+    acked: Vec<u64>,
+    // metrics-hub delta cursors
+    seen_ops: u64,
+    seen_timeouts: u64,
+    seen_lat: usize,
+    /// last computed op-latency p99 — carried forward once the hub's
+    /// sample buffer saturates ([`OP_LATENCY_SAMPLE_CAP`]), so an armed
+    /// latency pair does not decay to a permanently "calm" 0
+    last_lat_p99: f64,
+    // push accumulators for the currently-open window
+    cur_violations: u64,
+    cur_detect_ms_sum: f64,
+    cur_detect_n: u64,
+    cur_stall_ms: f64,
+    /// current consistency epoch (0 = the starting config)
+    pub epoch: u64,
+    /// announce times and configs, starting with the initial mode
+    pub timeline: Vec<ModeSpan>,
+    /// completed mode changes announced
+    pub switches: u64,
+    /// announce messages sent (incl. re-announces to un-acked clients)
+    pub announces_sent: u64,
+}
+
+impl AdaptController {
+    pub fn new(
+        clients: Vec<ProcId>,
+        metrics: Metrics,
+        cfg: &AdaptCfg,
+        starting: ConsistencyCfg,
+    ) -> Self {
+        cfg.validate(starting).expect("adapt config must validate against the experiment");
+        assert!(cfg.enabled(), "a static adapt config deploys no controller");
+        let mode = if starting == cfg.sequential { Mode::Sequential } else { Mode::Eventual };
+        let n_clients = clients.len();
+        Self {
+            clients,
+            metrics,
+            policy: cfg.policy.build(),
+            eventual: cfg.eventual,
+            sequential: cfg.sequential,
+            window: cfg.window,
+            win: SignalWindow::new(cfg.windows_kept),
+            mode,
+            acked: vec![0; n_clients],
+            seen_ops: 0,
+            seen_timeouts: 0,
+            seen_lat: 0,
+            last_lat_p99: 0.0,
+            cur_violations: 0,
+            cur_detect_ms_sum: 0.0,
+            cur_detect_n: 0,
+            cur_stall_ms: 0.0,
+            epoch: 0,
+            timeline: Vec::new(),
+            switches: 0,
+            announces_sent: 0,
+        }
+    }
+
+    fn mode_cfg(&self, mode: Mode) -> ConsistencyCfg {
+        match mode {
+            Mode::Eventual => self.eventual,
+            Mode::Sequential => self.sequential,
+        }
+    }
+
+    /// Close the open window: hub deltas + pushed samples.
+    fn close_window(&mut self) -> WinSample {
+        let (ops_total, timeouts_total, lat_p99_ms) = {
+            let m = self.metrics.borrow();
+            let ops = m.total_app_ops();
+            let timeouts = m.quorum_timeouts;
+            let new = &m.op_latencies[self.seen_lat.min(m.op_latencies.len())..];
+            let lat = if !new.is_empty() {
+                let p =
+                    Cdf::new(new.iter().map(|&l| l as f64 / MS as f64).collect()).quantile(0.99);
+                self.last_lat_p99 = p;
+                p
+            } else if m.op_latencies.len() >= OP_LATENCY_SAMPLE_CAP {
+                // sampling stopped, not the cluster: keep the estimate
+                self.last_lat_p99
+            } else {
+                0.0 // genuinely idle window
+            };
+            self.seen_lat = m.op_latencies.len();
+            (ops, timeouts, lat)
+        };
+        let sample = WinSample {
+            ops: ops_total - self.seen_ops,
+            timeouts: timeouts_total - self.seen_timeouts,
+            violations: self.cur_violations,
+            stall_ms: self.cur_stall_ms,
+            lat_p99_ms,
+            detect_ms_sum: self.cur_detect_ms_sum,
+            detect_n: self.cur_detect_n,
+            span_ms: self.window as f64 / MS as f64,
+        };
+        self.seen_ops = ops_total;
+        self.seen_timeouts = timeouts_total;
+        self.cur_violations = 0;
+        self.cur_detect_ms_sum = 0.0;
+        self.cur_detect_n = 0;
+        self.cur_stall_ms = 0.0;
+        sample
+    }
+
+    /// Announce the current epoch to every client that has not acked it.
+    /// Converged clusters send nothing — this doubles as the retransmit
+    /// path for announces lost to partitions or crashes.
+    fn announce_unacked(&mut self, ctx: &mut Ctx) {
+        if self.epoch == 0 {
+            return; // epoch 0 is the starting config — nothing to announce
+        }
+        let cfg = self.mode_cfg(self.mode);
+        let epoch = self.epoch;
+        for (i, &c) in self.clients.iter().enumerate() {
+            if self.acked[i] < epoch {
+                ctx.send(c, Msg::Adapt(AdaptMsg::Announce { epoch, cfg }));
+                self.announces_sent += 1;
+            }
+        }
+    }
+}
+
+impl Actor for AdaptController {
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        self.timeline.push(ModeSpan { from: 0, epoch: 0, cfg: self.mode_cfg(self.mode) });
+        ctx.schedule(self.window, TAG_TICK);
+    }
+
+    fn on_msg(&mut self, _ctx: &mut Ctx, _from: ProcId, msg: Msg) {
+        match msg {
+            Msg::Adapt(AdaptMsg::Ack { epoch, client }) => {
+                if let Some(a) = self.acked.get_mut(client as usize) {
+                    *a = (*a).max(epoch);
+                }
+            }
+            Msg::Adapt(AdaptMsg::ViolationSeen { detection_ms }) => {
+                self.cur_violations += 1;
+                self.cur_detect_ms_sum += detection_ms.max(0.0);
+                self.cur_detect_n += 1;
+            }
+            Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms }) => {
+                self.cur_stall_ms += stall_ms.max(0.0);
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, tag: u64) {
+        if tag != TAG_TICK {
+            return;
+        }
+        let sample = self.close_window();
+        self.win.push(sample);
+        let stats = self.win.stats();
+        let decision = self.policy.decide(&stats, self.mode);
+        if decision != self.mode {
+            self.mode = decision;
+            self.epoch += 1;
+            self.switches += 1;
+            self.timeline.push(ModeSpan {
+                from: ctx.now(),
+                epoch: self.epoch,
+                cfg: self.mode_cfg(decision),
+            });
+        }
+        self.announce_unacked(ctx);
+        ctx.schedule(self.window, TAG_TICK);
+    }
+
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(from: Time, epoch: u64, seq: bool) -> ModeSpan {
+        ModeSpan {
+            from,
+            epoch,
+            cfg: if seq { ConsistencyCfg::n3r2w2() } else { ConsistencyCfg::n3r1w1() },
+        }
+    }
+
+    #[test]
+    fn round_trip_counting() {
+        assert_eq!(round_trips(&[]), 0);
+        assert_eq!(round_trips(&[span(0, 0, false)]), 0);
+        assert_eq!(round_trips(&[span(0, 0, false), span(1, 1, true)]), 0, "no return yet");
+        assert_eq!(
+            round_trips(&[span(0, 0, false), span(1, 1, true), span(2, 2, false)]),
+            1
+        );
+        assert_eq!(
+            round_trips(&[
+                span(0, 0, false),
+                span(1, 1, true),
+                span(2, 2, false),
+                span(3, 3, true),
+                span(4, 4, false),
+            ]),
+            2
+        );
+        // starting sequential: the first drop to eventual is not a round trip
+        assert_eq!(round_trips(&[span(0, 0, true), span(1, 1, false)]), 0);
+    }
+
+    #[test]
+    fn mode_span_labels() {
+        assert_eq!(span(0, 0, true).label(), "sequential");
+        assert_eq!(span(0, 0, false).label(), "eventual");
+    }
+}

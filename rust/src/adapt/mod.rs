@@ -1,0 +1,236 @@
+//! Adaptive consistency: a runtime controller that moves the whole
+//! cluster between *eventual* and *sequential* quorum configurations.
+//!
+//! The paper's benefit claim — optimistic execution beats sequential
+//! consistency by 50–80% — holds **when violations are rare and
+//! rollbacks cheap**. The journal version (Nguyen et al., 1909.01980)
+//! observes that under contention or bad networks the rollback cost can
+//! erase the benefit, and PCAP (Rahman et al., 1509.02464) shows the
+//! consistency/latency knob can be turned adaptively at runtime. This
+//! module closes that loop:
+//!
+//! * [`signals`] — sliding windows over live signals the system already
+//!   produces: violation notifications and rollback stall time (pushed by
+//!   the rollback controller), client op-latency percentiles and
+//!   quorum-timeout counts (polled from the shared metrics hub).
+//! * [`policy`] — a pluggable [`policy::Policy`] deciding the target
+//!   [`policy::Mode`] per window. [`policy::HysteresisPolicy`] trips to
+//!   sequential when any armed signal crosses its high threshold and
+//!   returns to eventual only after `hold_windows` consecutive calm
+//!   windows below the low thresholds; [`policy::StaticPolicy`] never
+//!   moves (and, being the default, is not even deployed — see below).
+//! * [`controller`] — the [`controller::AdaptController`] actor driving
+//!   the **epoch-based reconfiguration protocol**: on a mode change it
+//!   bumps the consistency epoch and announces the new quorum config to
+//!   every client ([`crate::sim::msg::AdaptMsg`]); clients finish
+//!   in-flight [`crate::client::quorum::QuorumCall`]s under their issue
+//!   epoch and open new calls under the announced one. Announces are
+//!   re-sent each window until acked, so clients cut off by a partition
+//!   converge after heal. N is pinned across modes — only R/W move — so
+//!   the placement ring never changes.
+//!
+//! **Inertness discipline** (same as `pipeline_depth = 1` and
+//! `FaultPlan::none()`): with [`AdaptCfg::static_default`] — the
+//! [`crate::exp::config::ExpConfig`] default — the runner deploys *no*
+//! adapt actor, no signal messages flow, and every run is bit-identical
+//! to the pre-adapt code path (regression-pinned in
+//! `rust/tests/adaptive_e2e.rs`).
+
+pub mod controller;
+pub mod policy;
+pub mod signals;
+
+use crate::client::consistency::ConsistencyCfg;
+use crate::sim::{Time, SEC};
+
+pub use controller::{round_trips, AdaptController, ModeSpan};
+pub use policy::{HysteresisCfg, Mode, Policy, PolicyKind};
+pub use signals::{SignalWindow, WinSample, WindowStats};
+
+/// Experiment-level adaptive-consistency configuration, carried by
+/// [`crate::exp::config::ExpConfig::adapt`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptCfg {
+    pub policy: PolicyKind,
+    /// the quorum config of [`Mode::Eventual`]
+    pub eventual: ConsistencyCfg,
+    /// the quorum config of [`Mode::Sequential`]
+    pub sequential: ConsistencyCfg,
+    /// signal-window length (virtual time)
+    pub window: Time,
+    /// sliding windows aggregated per decision
+    pub windows_kept: usize,
+}
+
+impl AdaptCfg {
+    /// The inert default: a static policy, so the runner deploys no
+    /// controller at all and existing runs reproduce bit-identically.
+    pub fn static_default() -> Self {
+        Self {
+            policy: PolicyKind::Static,
+            eventual: ConsistencyCfg::n3r1w1(),
+            sequential: ConsistencyCfg::n3r2w2(),
+            window: SEC,
+            windows_kept: 3,
+        }
+    }
+
+    /// An active hysteresis controller between the two given configs.
+    pub fn hysteresis(
+        h: HysteresisCfg,
+        eventual: ConsistencyCfg,
+        sequential: ConsistencyCfg,
+    ) -> Self {
+        Self {
+            policy: PolicyKind::Hysteresis(h),
+            eventual,
+            sequential,
+            window: SEC,
+            windows_kept: 3,
+        }
+    }
+
+    /// Does this config deploy a live controller?
+    pub fn enabled(&self) -> bool {
+        !matches!(self.policy, PolicyKind::Static)
+    }
+
+    /// Shape-check against the experiment's starting consistency. Only
+    /// meaningful when [`Self::enabled`]; a static config is always fine.
+    pub fn validate(&self, starting: ConsistencyCfg) -> Result<(), String> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        if !self.eventual.is_eventual() {
+            return Err(format!("{} is not an eventual config", self.eventual.label()));
+        }
+        if !self.sequential.is_sequential() {
+            return Err(format!("{} is not a sequential config", self.sequential.label()));
+        }
+        if self.eventual.n != self.sequential.n {
+            return Err(format!(
+                "modes must share N (ring is fixed): {} vs {}",
+                self.eventual.label(),
+                self.sequential.label()
+            ));
+        }
+        if starting != self.eventual && starting != self.sequential {
+            return Err(format!(
+                "starting consistency {} is neither mode ({} / {})",
+                starting.label(),
+                self.eventual.label(),
+                self.sequential.label()
+            ));
+        }
+        if self.window == 0 || self.windows_kept == 0 {
+            return Err("signal window and windows_kept must be positive".into());
+        }
+        if let PolicyKind::Hysteresis(h) = &self.policy {
+            // every pair must satisfy lo <= hi or hysteresis inverts into
+            // an oscillator: a signal sitting between the bounds would be
+            // simultaneously "hot" (escalate) and "calm" (release) and
+            // the controller would flap every hold_windows + 1 ticks.
+            // This also catches the half-armed trap of setting only a hi
+            // bound on a disarmed (inf, inf) pair.
+            for (name, hi, lo) in [
+                ("viol_per_kop", h.viol_per_kop_hi, h.viol_per_kop_lo),
+                ("timeouts_per_sec", h.timeouts_per_sec_hi, h.timeouts_per_sec_lo),
+                ("stall_frac", h.stall_frac_hi, h.stall_frac_lo),
+                ("lat_p99_ms", h.lat_p99_ms_hi, h.lat_p99_ms_lo),
+                ("detect_ms", h.detect_ms_hi, h.detect_ms_lo),
+            ] {
+                if lo > hi || lo.is_nan() || hi.is_nan() {
+                    return Err(format!(
+                        "{name} thresholds must satisfy lo <= hi (got lo {lo}, hi {hi})"
+                    ));
+                }
+            }
+            if h.hold_windows == 0 {
+                return Err("hold_windows must be at least 1".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for AdaptCfg {
+    fn default() -> Self {
+        Self::static_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_default_is_inert() {
+        let a = AdaptCfg::static_default();
+        assert!(!a.enabled());
+        assert_eq!(a, AdaptCfg::default());
+        // static configs validate against anything
+        assert!(a.validate(ConsistencyCfg::n5r1w5()).is_ok());
+    }
+
+    #[test]
+    fn hysteresis_validates_mode_shapes() {
+        let ok = AdaptCfg::hysteresis(
+            HysteresisCfg::default(),
+            ConsistencyCfg::new(3, 1, 2),
+            ConsistencyCfg::n3r2w2(),
+        );
+        assert!(ok.enabled());
+        assert!(ok.validate(ConsistencyCfg::new(3, 1, 2)).is_ok());
+        assert!(ok.validate(ConsistencyCfg::n3r2w2()).is_ok(), "may start sequential");
+        assert!(
+            ok.validate(ConsistencyCfg::n3r1w1()).is_err(),
+            "starting config must be one of the two modes"
+        );
+
+        let swapped = AdaptCfg::hysteresis(
+            HysteresisCfg::default(),
+            ConsistencyCfg::n3r2w2(),
+            ConsistencyCfg::n3r1w1(),
+        );
+        assert!(swapped.validate(ConsistencyCfg::n3r2w2()).is_err());
+
+        let n_mismatch = AdaptCfg::hysteresis(
+            HysteresisCfg::default(),
+            ConsistencyCfg::n3r1w1(),
+            ConsistencyCfg::n5r3w3(),
+        );
+        assert!(n_mismatch.validate(ConsistencyCfg::n3r1w1()).is_err());
+    }
+
+    #[test]
+    fn hysteresis_validates_threshold_coherence() {
+        let start = ConsistencyCfg::n3r1w1();
+        let modes = (ConsistencyCfg::n3r1w1(), ConsistencyCfg::n3r2w2());
+
+        // inverted pair: lo above hi would make the policy oscillate
+        let inverted = HysteresisCfg {
+            timeouts_per_sec_hi: 0.5,
+            timeouts_per_sec_lo: 2.0,
+            ..HysteresisCfg::default()
+        };
+        let cfg = AdaptCfg::hysteresis(inverted, modes.0, modes.1);
+        assert!(cfg.validate(start).is_err());
+
+        // half-armed trap: hi set on a disarmed (inf, inf) pair leaves
+        // lo = inf > hi
+        let half = HysteresisCfg { stall_frac_hi: 0.2, ..HysteresisCfg::disarmed() };
+        let cfg = AdaptCfg::hysteresis(half, modes.0, modes.1);
+        assert!(cfg.validate(start).is_err());
+
+        // a zero hold would release on the first calm window
+        let zero_hold = HysteresisCfg { hold_windows: 0, ..HysteresisCfg::default() };
+        let cfg = AdaptCfg::hysteresis(zero_hold, modes.0, modes.1);
+        assert!(cfg.validate(start).is_err());
+
+        // fully-armed and fully-disarmed defaults both pass
+        let cfg = AdaptCfg::hysteresis(HysteresisCfg::default(), modes.0, modes.1);
+        assert!(cfg.validate(start).is_ok());
+        let cfg = AdaptCfg::hysteresis(HysteresisCfg::disarmed(), modes.0, modes.1);
+        assert!(cfg.validate(start).is_ok());
+    }
+}

@@ -1,0 +1,317 @@
+//! Pluggable mode-selection policies. A policy sees one aggregated
+//! [`WindowStats`] per signal window and returns the [`Mode`] the
+//! cluster should run; the [`crate::adapt::controller::AdaptController`]
+//! turns mode *changes* into epoch switches.
+
+use crate::adapt::signals::WindowStats;
+
+/// The two operating points of the tradeoff (Table II): optimistic
+/// execution under eventual consistency with detect-rollback, or
+/// pessimistic execution under (quorum-)sequential consistency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Eventual,
+    Sequential,
+}
+
+impl Mode {
+    pub fn label(self) -> &'static str {
+        match self {
+            Mode::Eventual => "eventual",
+            Mode::Sequential => "sequential",
+        }
+    }
+}
+
+/// One decision per signal window. Policies may keep internal state
+/// (streak counters); they must be deterministic functions of the
+/// sample sequence so adaptive runs replay under a seed.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+    fn decide(&mut self, w: &WindowStats, current: Mode) -> Mode;
+}
+
+/// Never moves: the cluster stays in whatever mode it started in. This
+/// reproduces today's static-`ConsistencyCfg` behavior — and because it
+/// is the default, the experiment runner does not even deploy a
+/// controller for it ([`crate::adapt::AdaptCfg::enabled`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StaticPolicy;
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(&mut self, _w: &WindowStats, current: Mode) -> Mode {
+        current
+    }
+}
+
+/// Hysteresis thresholds. Each signal is an independent (hi, lo) pair:
+/// the policy escalates to sequential when *any* armed signal exceeds
+/// its `hi`, and de-escalates only after [`Self::hold_windows`]
+/// consecutive windows with *every* signal below its `lo`. The gap
+/// between `hi` and `lo` plus the hold is what prevents flapping on a
+/// signal that hovers near the threshold.
+///
+/// A pair is disarmed by setting both bounds to `f64::INFINITY` (it then
+/// never escalates and never blocks de-escalation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HysteresisCfg {
+    pub viol_per_kop_hi: f64,
+    pub viol_per_kop_lo: f64,
+    pub timeouts_per_sec_hi: f64,
+    pub timeouts_per_sec_lo: f64,
+    pub stall_frac_hi: f64,
+    pub stall_frac_lo: f64,
+    pub lat_p99_ms_hi: f64,
+    pub lat_p99_ms_lo: f64,
+    /// mean violation detection latency (ms) over the window — a slow
+    /// detector widens the rollback window, which is the other half of
+    /// the "rollbacks cheap" premise
+    pub detect_ms_hi: f64,
+    pub detect_ms_lo: f64,
+    /// consecutive calm windows required before returning to eventual
+    pub hold_windows: usize,
+}
+
+impl Default for HysteresisCfg {
+    fn default() -> Self {
+        Self {
+            // "violations are rare": a handful per kop is the premise
+            // breaking down
+            viol_per_kop_hi: 5.0,
+            viol_per_kop_lo: 1.0,
+            // expired quorum rounds signal an unhealthy network
+            timeouts_per_sec_hi: 0.5,
+            timeouts_per_sec_lo: 0.05,
+            // a quarter of wall-time frozen for rollback erases the
+            // optimistic win
+            stall_frac_hi: 0.25,
+            stall_frac_lo: 0.02,
+            // latency pairs ship disarmed: absolute op-latency and
+            // detection-latency bounds are deployment-specific (regional
+            // detection is ~ms, global ~s — §VI), scenarios arm them
+            // explicitly
+            lat_p99_ms_hi: f64::INFINITY,
+            lat_p99_ms_lo: f64::INFINITY,
+            detect_ms_hi: f64::INFINITY,
+            detect_ms_lo: f64::INFINITY,
+            hold_windows: 5,
+        }
+    }
+}
+
+impl HysteresisCfg {
+    /// A copy with every pair disarmed — callers arm just the signals
+    /// their scenario reasons about.
+    pub fn disarmed() -> Self {
+        Self {
+            viol_per_kop_hi: f64::INFINITY,
+            viol_per_kop_lo: f64::INFINITY,
+            timeouts_per_sec_hi: f64::INFINITY,
+            timeouts_per_sec_lo: f64::INFINITY,
+            stall_frac_hi: f64::INFINITY,
+            stall_frac_lo: f64::INFINITY,
+            lat_p99_ms_hi: f64::INFINITY,
+            lat_p99_ms_lo: f64::INFINITY,
+            detect_ms_hi: f64::INFINITY,
+            detect_ms_lo: f64::INFINITY,
+            ..Self::default()
+        }
+    }
+}
+
+/// Threshold hysteresis over the sliding-window signals.
+#[derive(Debug)]
+pub struct HysteresisPolicy {
+    cfg: HysteresisCfg,
+    calm_streak: usize,
+}
+
+impl HysteresisPolicy {
+    pub fn new(cfg: HysteresisCfg) -> Self {
+        Self { cfg, calm_streak: 0 }
+    }
+
+    fn hot(&self, w: &WindowStats) -> bool {
+        w.viol_per_kop() > self.cfg.viol_per_kop_hi
+            || w.timeouts_per_sec() > self.cfg.timeouts_per_sec_hi
+            || w.stall_frac() > self.cfg.stall_frac_hi
+            || w.lat_p99_ms > self.cfg.lat_p99_ms_hi
+            || w.detect_mean_ms() > self.cfg.detect_ms_hi
+    }
+
+    fn calm(&self, w: &WindowStats) -> bool {
+        w.viol_per_kop() < self.cfg.viol_per_kop_lo
+            && w.timeouts_per_sec() < self.cfg.timeouts_per_sec_lo
+            && w.stall_frac() < self.cfg.stall_frac_lo
+            && w.lat_p99_ms < self.cfg.lat_p99_ms_lo
+            && w.detect_mean_ms() < self.cfg.detect_ms_lo
+    }
+}
+
+impl Policy for HysteresisPolicy {
+    fn name(&self) -> &'static str {
+        "hysteresis"
+    }
+
+    fn decide(&mut self, w: &WindowStats, current: Mode) -> Mode {
+        match current {
+            Mode::Eventual => {
+                if self.hot(w) {
+                    self.calm_streak = 0;
+                    Mode::Sequential
+                } else {
+                    Mode::Eventual
+                }
+            }
+            Mode::Sequential => {
+                if self.calm(w) {
+                    self.calm_streak += 1;
+                    if self.calm_streak >= self.cfg.hold_windows {
+                        self.calm_streak = 0;
+                        return Mode::Eventual;
+                    }
+                } else {
+                    self.calm_streak = 0;
+                }
+                Mode::Sequential
+            }
+        }
+    }
+}
+
+/// Cloneable policy selector carried by experiment configs; built into a
+/// live [`Policy`] by the runner.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    /// today's behavior — no controller is deployed at all
+    Static,
+    Hysteresis(HysteresisCfg),
+}
+
+impl PolicyKind {
+    pub fn build(&self) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Static => Box::new(StaticPolicy),
+            PolicyKind::Hysteresis(h) => Box::new(HysteresisPolicy::new(h.clone())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(ops: u64, violations: u64, timeouts: u64, stall_ms: f64) -> WindowStats {
+        WindowStats { ops, violations, timeouts, stall_ms, span_ms: 1_000.0, ..Default::default() }
+    }
+
+    #[test]
+    fn static_policy_never_moves() {
+        let mut p = StaticPolicy;
+        let storm = stats(10, 500, 500, 900.0);
+        assert_eq!(p.decide(&storm, Mode::Eventual), Mode::Eventual);
+        assert_eq!(p.decide(&storm, Mode::Sequential), Mode::Sequential);
+    }
+
+    #[test]
+    fn hysteresis_escalates_on_any_hot_signal() {
+        let cfg = HysteresisCfg::default();
+        // violations: > 5 per kop
+        let mut p = HysteresisPolicy::new(cfg.clone());
+        assert_eq!(p.decide(&stats(1_000, 6, 0, 0.0), Mode::Eventual), Mode::Sequential);
+        // timeouts: > 0.5 per s
+        let mut p = HysteresisPolicy::new(cfg.clone());
+        assert_eq!(p.decide(&stats(1_000, 0, 1, 0.0), Mode::Eventual), Mode::Sequential);
+        // stall: > 25 % of the window
+        let mut p = HysteresisPolicy::new(cfg.clone());
+        assert_eq!(p.decide(&stats(1_000, 0, 0, 300.0), Mode::Eventual), Mode::Sequential);
+        // all below hi: stays
+        let mut p = HysteresisPolicy::new(cfg);
+        assert_eq!(p.decide(&stats(1_000, 4, 0, 100.0), Mode::Eventual), Mode::Eventual);
+    }
+
+    #[test]
+    fn hysteresis_holds_before_deescalating() {
+        let cfg = HysteresisCfg { hold_windows: 3, ..HysteresisCfg::default() };
+        let mut p = HysteresisPolicy::new(cfg);
+        let calm = stats(1_000, 0, 0, 0.0);
+        assert_eq!(p.decide(&calm, Mode::Sequential), Mode::Sequential, "calm 1");
+        assert_eq!(p.decide(&calm, Mode::Sequential), Mode::Sequential, "calm 2");
+        assert_eq!(p.decide(&calm, Mode::Sequential), Mode::Eventual, "calm 3 releases");
+    }
+
+    #[test]
+    fn a_noisy_window_resets_the_calm_streak() {
+        let cfg = HysteresisCfg { hold_windows: 2, ..HysteresisCfg::default() };
+        let mut p = HysteresisPolicy::new(cfg);
+        let calm = stats(1_000, 0, 0, 0.0);
+        // 3 violations/kop is below hi (5) but above lo (1): not calm
+        let murky = stats(1_000, 3, 0, 0.0);
+        assert_eq!(p.decide(&calm, Mode::Sequential), Mode::Sequential);
+        assert_eq!(p.decide(&murky, Mode::Sequential), Mode::Sequential, "streak reset");
+        assert_eq!(p.decide(&calm, Mode::Sequential), Mode::Sequential);
+        assert_eq!(p.decide(&calm, Mode::Sequential), Mode::Eventual);
+    }
+
+    #[test]
+    fn band_between_lo_and_hi_is_sticky_both_ways() {
+        // the anti-flap property: a signal hovering between lo and hi
+        // neither escalates nor de-escalates
+        let cfg = HysteresisCfg { hold_windows: 1, ..HysteresisCfg::default() };
+        let murky = stats(1_000, 3, 0, 0.0);
+        let mut p = HysteresisPolicy::new(cfg.clone());
+        assert_eq!(p.decide(&murky, Mode::Eventual), Mode::Eventual);
+        let mut p = HysteresisPolicy::new(cfg);
+        assert_eq!(p.decide(&murky, Mode::Sequential), Mode::Sequential);
+    }
+
+    #[test]
+    fn disarmed_pairs_never_fire_or_block() {
+        let mut armed_only_timeouts = HysteresisCfg::disarmed();
+        armed_only_timeouts.timeouts_per_sec_hi = 0.5;
+        armed_only_timeouts.timeouts_per_sec_lo = 0.05;
+        armed_only_timeouts.hold_windows = 1;
+        let mut p = HysteresisPolicy::new(armed_only_timeouts);
+        // a violation storm does not escalate (pair disarmed) ...
+        assert_eq!(p.decide(&stats(10, 500, 0, 0.0), Mode::Eventual), Mode::Eventual);
+        // ... timeouts do ...
+        assert_eq!(p.decide(&stats(10, 500, 5, 0.0), Mode::Eventual), Mode::Sequential);
+        // ... and the storm does not block the release once timeouts stop
+        assert_eq!(p.decide(&stats(10, 500, 0, 0.0), Mode::Sequential), Mode::Eventual);
+    }
+
+    #[test]
+    fn armed_detection_latency_pair_escalates_and_releases() {
+        let mut cfg = HysteresisCfg::disarmed();
+        cfg.detect_ms_hi = 100.0;
+        cfg.detect_ms_lo = 20.0;
+        cfg.hold_windows = 1;
+        let mut p = HysteresisPolicy::new(cfg);
+        let slow_detect = WindowStats {
+            ops: 1_000,
+            violations: 4,
+            detect_ms_sum: 800.0,
+            detect_n: 4,
+            span_ms: 1_000.0,
+            ..Default::default()
+        };
+        assert_eq!(slow_detect.detect_mean_ms(), 200.0);
+        assert_eq!(p.decide(&slow_detect, Mode::Eventual), Mode::Sequential);
+        // a violation-free window has nothing slow to detect: calm
+        let quiet = WindowStats { ops: 1_000, span_ms: 1_000.0, ..Default::default() };
+        assert_eq!(p.decide(&quiet, Mode::Sequential), Mode::Eventual);
+    }
+
+    #[test]
+    fn policy_kind_builds_the_right_impl() {
+        assert_eq!(PolicyKind::Static.build().name(), "static");
+        assert_eq!(
+            PolicyKind::Hysteresis(HysteresisCfg::default()).build().name(),
+            "hysteresis"
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! Sliding-window aggregation of the live signals the adapt controller
+//! ingests. Nothing here is new instrumentation: violations and rollback
+//! stalls are pushed by the rollback controller
+//! ([`crate::sim::msg::AdaptMsg`]), op counts / quorum timeouts / op
+//! latencies already live in the shared
+//! [`crate::metrics::throughput::MetricsHub`] and are polled as deltas
+//! once per window tick.
+
+use std::collections::VecDeque;
+
+/// One closed signal window.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WinSample {
+    /// successful app ops completed in the window
+    pub ops: u64,
+    /// quorum rounds that expired client-side in the window
+    pub timeouts: u64,
+    /// violation reports forwarded by the rollback controller
+    pub violations: u64,
+    /// total server-freeze time of recoveries that *finished* in the
+    /// window (ms)
+    pub stall_ms: f64,
+    /// p99 of the op-latency samples recorded in the window (ms; 0 when
+    /// no sample landed)
+    pub lat_p99_ms: f64,
+    /// sum / count of detection-latency samples (ms)
+    pub detect_ms_sum: f64,
+    pub detect_n: u64,
+    /// window length (ms of virtual time)
+    pub span_ms: f64,
+}
+
+/// The last `keep` windows, aggregated for the policy.
+#[derive(Debug)]
+pub struct SignalWindow {
+    keep: usize,
+    samples: VecDeque<WinSample>,
+}
+
+impl SignalWindow {
+    pub fn new(keep: usize) -> Self {
+        assert!(keep >= 1, "must keep at least one window");
+        Self { keep, samples: VecDeque::with_capacity(keep + 1) }
+    }
+
+    pub fn push(&mut self, s: WinSample) {
+        self.samples.push_back(s);
+        while self.samples.len() > self.keep {
+            self.samples.pop_front();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Aggregate stats over the kept windows.
+    pub fn stats(&self) -> WindowStats {
+        let mut w = WindowStats::default();
+        for s in &self.samples {
+            w.ops += s.ops;
+            w.timeouts += s.timeouts;
+            w.violations += s.violations;
+            w.stall_ms += s.stall_ms;
+            w.detect_ms_sum += s.detect_ms_sum;
+            w.detect_n += s.detect_n;
+            w.span_ms += s.span_ms;
+            // the freshest non-empty latency estimate wins: an idle tail
+            // window must not erase a hot percentile mid-decision
+            if s.lat_p99_ms > 0.0 {
+                w.lat_p99_ms = s.lat_p99_ms;
+            }
+        }
+        w
+    }
+}
+
+/// What a [`crate::adapt::policy::Policy`] decides on.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WindowStats {
+    pub ops: u64,
+    pub timeouts: u64,
+    pub violations: u64,
+    pub stall_ms: f64,
+    pub lat_p99_ms: f64,
+    pub detect_ms_sum: f64,
+    pub detect_n: u64,
+    pub span_ms: f64,
+}
+
+impl WindowStats {
+    /// Violations per 1000 successful ops (the paper's "violations are
+    /// rare" premise, normalized by offered load).
+    pub fn viol_per_kop(&self) -> f64 {
+        self.violations as f64 * 1_000.0 / self.ops.max(1) as f64
+    }
+
+    /// Expired quorum rounds per second of virtual time.
+    pub fn timeouts_per_sec(&self) -> f64 {
+        if self.span_ms <= 0.0 {
+            return 0.0;
+        }
+        self.timeouts as f64 * 1_000.0 / self.span_ms
+    }
+
+    /// Fraction of the window the cluster sat frozen for rollback.
+    pub fn stall_frac(&self) -> f64 {
+        if self.span_ms <= 0.0 {
+            return 0.0;
+        }
+        (self.stall_ms / self.span_ms).min(1.0)
+    }
+
+    /// Mean detection latency of the window's violation samples (ms).
+    pub fn detect_mean_ms(&self) -> f64 {
+        if self.detect_n == 0 {
+            return 0.0;
+        }
+        self.detect_ms_sum / self.detect_n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(ops: u64, timeouts: u64, violations: u64, stall_ms: f64) -> WinSample {
+        WinSample { ops, timeouts, violations, stall_ms, span_ms: 1_000.0, ..WinSample::default() }
+    }
+
+    #[test]
+    fn window_evicts_oldest() {
+        let mut w = SignalWindow::new(3);
+        for i in 0..5u64 {
+            w.push(sample(i, 0, 0, 0.0));
+        }
+        assert_eq!(w.len(), 3);
+        // kept windows are the last three: ops 2 + 3 + 4
+        assert_eq!(w.stats().ops, 9);
+        assert_eq!(w.stats().span_ms, 3_000.0);
+    }
+
+    #[test]
+    fn rates_normalize_by_span_and_load() {
+        let mut w = SignalWindow::new(4);
+        w.push(sample(500, 3, 1, 100.0));
+        w.push(sample(500, 1, 1, 150.0));
+        let s = w.stats();
+        assert_eq!(s.viol_per_kop(), 2.0, "2 violations per 1000 ops");
+        assert_eq!(s.timeouts_per_sec(), 2.0, "4 timeouts over 2 s");
+        assert!((s.stall_frac() - 0.125).abs() < 1e-12, "250 ms frozen of 2 s");
+    }
+
+    #[test]
+    fn empty_and_zero_guards() {
+        let w = SignalWindow::new(2);
+        assert!(w.is_empty());
+        let s = w.stats();
+        assert_eq!(s.viol_per_kop(), 0.0);
+        assert_eq!(s.timeouts_per_sec(), 0.0);
+        assert_eq!(s.stall_frac(), 0.0);
+        assert_eq!(s.detect_mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn latest_nonzero_latency_wins() {
+        let mut w = SignalWindow::new(3);
+        w.push(WinSample { lat_p99_ms: 40.0, span_ms: 1_000.0, ..WinSample::default() });
+        w.push(WinSample { lat_p99_ms: 90.0, span_ms: 1_000.0, ..WinSample::default() });
+        w.push(WinSample { lat_p99_ms: 0.0, span_ms: 1_000.0, ..WinSample::default() });
+        assert_eq!(w.stats().lat_p99_ms, 90.0, "idle window must not erase the estimate");
+    }
+
+    #[test]
+    fn detection_mean() {
+        let mut w = SignalWindow::new(2);
+        w.push(WinSample {
+            detect_ms_sum: 30.0,
+            detect_n: 2,
+            span_ms: 1_000.0,
+            ..WinSample::default()
+        });
+        w.push(WinSample {
+            detect_ms_sum: 10.0,
+            detect_n: 2,
+            span_ms: 1_000.0,
+            ..WinSample::default()
+        });
+        assert_eq!(w.stats().detect_mean_ms(), 10.0);
+    }
+}

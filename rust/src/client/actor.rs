@@ -30,7 +30,7 @@ use crate::client::quorum::{QuorumCall, QuorumStep};
 use crate::clock::hvc::Hvc;
 use crate::metrics::throughput::Metrics;
 use crate::sim::des::{Actor, Ctx};
-use crate::sim::msg::{Msg, RollbackMsg};
+use crate::sim::msg::{AdaptMsg, Msg, RollbackMsg};
 use crate::sim::ProcId;
 use crate::store::protocol::{ServerOp, ServerReply};
 use crate::store::ring::Router;
@@ -61,7 +61,15 @@ pub struct ClientActor {
     servers: Vec<ProcId>,
     /// key → preference-list resolution (shared ring view)
     router: Rc<Router>,
+    /// the quorum configuration for *newly opened* calls. Mutable at
+    /// runtime: an [`AdaptMsg::Announce`] adopts the announced config for
+    /// every call issued from that point on, while in-flight calls finish
+    /// under the config/epoch they were issued with (each call owns its
+    /// copy; replies to completed calls are dropped by the dedup path).
     cfg: ConsistencyCfg,
+    /// current consistency epoch ([`crate::adapt`]); 0 until the adapt
+    /// controller announces a switch
+    epoch: u64,
     timing: ClientTiming,
     /// max concurrent quorum calls (1 = the paper's serial client)
     depth: usize,
@@ -121,6 +129,7 @@ impl ClientActor {
             servers,
             router,
             cfg,
+            epoch: 0,
             timing,
             depth: pipeline_depth,
             app,
@@ -213,7 +222,8 @@ impl ClientActor {
             let req = self.next_req;
             self.next_req += 1;
             let targets = self.resolve_targets(&op);
-            let (call, step) = QuorumCall::new(self.idx, self.cfg, op, req, targets, ctx.now());
+            let (call, step) =
+                QuorumCall::new(self.idx, self.cfg, op, req, targets, ctx.now(), self.epoch);
             self.calls.insert(req, (slot, call));
             self.apply_step(ctx, req, step);
         }
@@ -312,7 +322,33 @@ impl ClientActor {
             return; // stale timer
         };
         let step = call.on_timeout(req);
+        // an expired quorum round is a live signal the adapt controller
+        // watches ([`crate::adapt::signals`]): count the serial-round
+        // fallback and the final timeout failure, not stale timers
+        if matches!(
+            step,
+            QuorumStep::Send { round: 2, .. } | QuorumStep::Done(OpOutcome::Failed)
+        ) {
+            self.metrics.borrow_mut().quorum_timeouts += 1;
+        }
         self.apply_step(ctx, req, step);
+    }
+
+    /// Adopt an announced consistency epoch: calls opened from now on use
+    /// `cfg`; calls already in flight are untouched (each carries the
+    /// config of its issue epoch). Returns whether the epoch advanced —
+    /// duplicates and stale re-announces are idempotent no-ops.
+    fn apply_announce(&mut self, epoch: u64, cfg: ConsistencyCfg) -> bool {
+        if epoch <= self.epoch {
+            return false;
+        }
+        assert_eq!(
+            cfg.n, self.cfg.n,
+            "an epoch switch cannot change the replication factor (ring is fixed)"
+        );
+        self.epoch = epoch;
+        self.cfg = cfg;
+        true
     }
 }
 
@@ -326,6 +362,13 @@ impl Actor for ClientActor {
             Msg::Reply { req, reply, hvc } => {
                 self.merge_seen(&hvc);
                 self.on_reply(ctx, from, req, reply);
+            }
+            Msg::Adapt(AdaptMsg::Announce { epoch, cfg }) => {
+                self.apply_announce(epoch, cfg);
+                // always ack the freshest epoch this client runs under,
+                // so duplicate/stale announces still converge the
+                // controller's view
+                ctx.send(from, Msg::Adapt(AdaptMsg::Ack { epoch: self.epoch, client: self.idx }));
             }
             Msg::Rollback(RollbackMsg::Notify { t_violate_ms, .. }) => {
                 let abort = {
@@ -421,6 +464,59 @@ mod tests {
     #[should_panic(expected = "pipeline depth")]
     fn zero_depth_rejected() {
         let _ = test_client(3, ConsistencyCfg::n3r1w1(), 0);
+    }
+
+    #[test]
+    fn announce_switches_new_calls_but_not_inflight_ones() {
+        // issue a call under the starting config (R = 2), then announce a
+        // switch to R = 1: the client's config moves, but the in-flight
+        // call still needs two distinct replies to complete
+        let mut client = test_client(3, ConsistencyCfg::n3r2w2(), 1);
+        let (call, _) = QuorumCall::new(
+            0,
+            client.cfg,
+            AppOp::Get(crate::store::value::KeyId(1)),
+            1,
+            (0..3).map(ProcId).collect(),
+            0,
+            client.epoch,
+        );
+        client.calls.insert(1, (0, call));
+
+        assert!(client.apply_announce(1, ConsistencyCfg::new(3, 1, 2)));
+        assert_eq!(client.epoch, 1);
+        assert_eq!(client.cfg, ConsistencyCfg::new(3, 1, 2));
+
+        {
+            // the parked call still carries its issue-epoch quorum sizes
+            let (_, call) = client.calls.get_mut(&1).unwrap();
+            assert_eq!(call.epoch, 0);
+            assert!(matches!(
+                call.on_reply(
+                    ProcId(0),
+                    1,
+                    crate::store::protocol::ServerReply::Values(vec![]),
+                    || panic!("no re-key")
+                ),
+                crate::client::quorum::QuorumStep::Wait
+            ));
+        }
+
+        // duplicate and stale announces are no-ops
+        assert!(!client.apply_announce(1, ConsistencyCfg::n3r2w2()));
+        assert!(!client.apply_announce(0, ConsistencyCfg::n3r2w2()));
+        assert_eq!(client.cfg, ConsistencyCfg::new(3, 1, 2));
+
+        // a newer epoch moves the config again
+        assert!(client.apply_announce(2, ConsistencyCfg::n3r2w2()));
+        assert_eq!(client.epoch, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "replication factor")]
+    fn announce_cannot_change_n() {
+        let mut client = test_client(3, ConsistencyCfg::n3r1w1(), 1);
+        client.apply_announce(1, ConsistencyCfg::n5r1w1());
     }
 
     #[test]

@@ -39,7 +39,13 @@ impl ConsistencyCfg {
         Self::new(5, 1, 1)
     }
 
-    /// Parse e.g. "N3R1W3" (case-insensitive).
+    /// Parse e.g. "N3R1W3" (case-insensitive). Malformed input — tokens
+    /// out of order (`N3W2R2`), missing digits, empty segments — returns
+    /// `None`. The explicit ordering guard keeps the digit slices
+    /// well-formed by construction: without it, a reordered input would
+    /// build the inverted range `s[r_pos + 1..w_pos]` (reachable from the
+    /// CLI `--consistency` flag) and only a parse failure on the N
+    /// segment happened to stop evaluation before the slice panicked.
     pub fn parse(s: &str) -> Option<Self> {
         let s = s.to_ascii_uppercase();
         let bytes = s.as_bytes();
@@ -48,6 +54,9 @@ impl ConsistencyCfg {
         }
         let r_pos = s.find('R')?;
         let w_pos = s.find('W')?;
+        if !(0 < r_pos && r_pos < w_pos) {
+            return None; // reordered tokens, e.g. "N3W2R2"
+        }
         let n: usize = s[1..r_pos].parse().ok()?;
         let r: usize = s[r_pos + 1..w_pos].parse().ok()?;
         let w: usize = s[w_pos + 1..].parse().ok()?;
@@ -137,6 +146,29 @@ mod tests {
         assert_eq!(ConsistencyCfg::parse("n3r2w2"), Some(ConsistencyCfg::n3r2w2()));
         assert_eq!(ConsistencyCfg::parse("bogus"), None);
         assert_eq!(ConsistencyCfg::parse("N3R4W1"), None, "r > n rejected");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_without_panicking() {
+        // reordered tokens (the CLI-reachable inverted-range case)
+        assert_eq!(ConsistencyCfg::parse("N3W2R2"), None);
+        assert_eq!(ConsistencyCfg::parse("n3w1r1"), None);
+        assert_eq!(ConsistencyCfg::parse("NW2R2"), None);
+        // missing digits in each segment
+        assert_eq!(ConsistencyCfg::parse("NR1W1"), None);
+        assert_eq!(ConsistencyCfg::parse("N3RW1"), None);
+        assert_eq!(ConsistencyCfg::parse("N3R1W"), None);
+        // empty / truncated / junk segments
+        assert_eq!(ConsistencyCfg::parse(""), None);
+        assert_eq!(ConsistencyCfg::parse("N"), None);
+        assert_eq!(ConsistencyCfg::parse("N3"), None);
+        assert_eq!(ConsistencyCfg::parse("N3R1"), None);
+        assert_eq!(ConsistencyCfg::parse("RW"), None);
+        assert_eq!(ConsistencyCfg::parse("N3R1W1x"), None);
+        assert_eq!(ConsistencyCfg::parse("N-3R1W1"), None);
+        // zeros fail the >= 1 shape checks
+        assert_eq!(ConsistencyCfg::parse("N0R0W0"), None);
+        assert_eq!(ConsistencyCfg::parse("N3R0W1"), None);
     }
 
     #[test]

@@ -58,6 +58,11 @@ pub struct QuorumCall {
     /// the vector-clock node id stamped into merged write versions
     client_idx: u32,
     cfg: ConsistencyCfg,
+    /// the consistency epoch this call was issued under
+    /// ([`crate::adapt`]): an epoch switch announced mid-call never
+    /// changes `cfg` — the call completes with the quorum sizes of its
+    /// issue epoch, and only calls opened afterwards use the new config
+    pub epoch: u64,
     /// the application-level operation this call executes
     pub app_op: AppOp,
     phase: QuorumPhase,
@@ -86,6 +91,7 @@ impl QuorumCall {
         req: u64,
         targets: Vec<ProcId>,
         started: Time,
+        epoch: u64,
     ) -> (Self, QuorumStep) {
         let phase = match app_op {
             AppOp::Get(_) => QuorumPhase::Get,
@@ -94,6 +100,7 @@ impl QuorumCall {
         let call = Self {
             client_idx,
             cfg,
+            epoch,
             app_op,
             phase,
             req,
@@ -270,7 +277,7 @@ mod tests {
     fn get_completes_at_r_distinct_replies() {
         let cfg = ConsistencyCfg::n3r2w2();
         let (mut call, step) =
-            QuorumCall::new(0, cfg, AppOp::Get(KeyId(1)), 1, targets(3), 0);
+            QuorumCall::new(0, cfg, AppOp::Get(KeyId(1)), 1, targets(3), 0, 0);
         match step {
             QuorumStep::Send { req: 1, ref to, op: ServerOp::Get(_), round: 1 } => {
                 assert_eq!(to.len(), 3, "parallel phase hits the whole preference list");
@@ -291,7 +298,7 @@ mod tests {
     fn put_chains_version_then_write_under_fresh_req() {
         let cfg = ConsistencyCfg::n3r1w3();
         let (mut call, _) =
-            QuorumCall::new(4, cfg, AppOp::Put(KeyId(2), Value::Int(9)), 1, targets(3), 0);
+            QuorumCall::new(4, cfg, AppOp::Put(KeyId(2), Value::Int(9)), 1, targets(3), 0, 0);
         assert_eq!(call.phase(), QuorumPhase::GetVersion);
         let step = call.on_reply(
             ProcId(1),
@@ -334,7 +341,7 @@ mod tests {
     fn serial_round_retries_only_non_responders() {
         let cfg = ConsistencyCfg::n3r1w3();
         let (mut call, _) =
-            QuorumCall::new(0, cfg, AppOp::Put(KeyId(3), Value::Int(1)), 1, targets(3), 0);
+            QuorumCall::new(0, cfg, AppOp::Put(KeyId(3), Value::Int(1)), 1, targets(3), 0, 0);
         let _ = call.on_reply(ProcId(0), 1, ServerReply::Versions(vec![]), || 2);
         // write phase: only server 1 acks in round 1
         let _ = call.on_reply(ProcId(1), 2, ServerReply::PutAck, no_req);
@@ -355,7 +362,7 @@ mod tests {
     #[test]
     fn second_timeout_fails_the_call() {
         let cfg = ConsistencyCfg::n3r2w2();
-        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(4)), 7, targets(3), 0);
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(4)), 7, targets(3), 0, 0);
         assert!(matches!(call.on_timeout(7), QuorumStep::Send { round: 2, .. }));
         assert!(matches!(
             call.on_timeout(7),
@@ -366,7 +373,7 @@ mod tests {
     #[test]
     fn wrong_server_fast_fails_once_quorum_impossible() {
         let cfg = ConsistencyCfg::n3r2w2();
-        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(5)), 1, targets(3), 0);
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(5)), 1, targets(3), 0, 0);
         // one refusal leaves 2 ≥ R=2 alive — keep going
         assert!(matches!(
             call.on_reply(ProcId(0), 1, ServerReply::WrongServer, no_req),
@@ -388,7 +395,7 @@ mod tests {
     #[test]
     fn refused_servers_are_excluded_from_the_serial_round() {
         let cfg = ConsistencyCfg::n3r2w2();
-        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(6)), 1, targets(3), 0);
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(6)), 1, targets(3), 0, 0);
         let _ = call.on_reply(ProcId(1), 1, ServerReply::WrongServer, no_req);
         match call.on_timeout(1) {
             QuorumStep::Send { ref to, round: 2, .. } => {
@@ -401,7 +408,7 @@ mod tests {
     #[test]
     fn duplicate_replies_from_round_overlap_are_deduped() {
         let cfg = ConsistencyCfg::n3r2w2();
-        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(7)), 1, targets(3), 0);
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(7)), 1, targets(3), 0, 0);
         let _ = call.on_reply(ProcId(0), 1, values_reply(1, 0), no_req);
         // round-2 re-send overlaps a straggling first answer: same server
         // must not count twice toward R = 2
@@ -418,7 +425,7 @@ mod tests {
     #[test]
     fn frozen_replies_do_not_count_toward_the_quorum() {
         let cfg = ConsistencyCfg::n3r1w1();
-        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(8)), 1, targets(3), 0);
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(8)), 1, targets(3), 0, 0);
         assert!(matches!(
             call.on_reply(ProcId(0), 1, ServerReply::Frozen, no_req),
             QuorumStep::Wait
@@ -432,7 +439,7 @@ mod tests {
     #[test]
     fn stale_request_ids_are_ignored() {
         let cfg = ConsistencyCfg::n3r1w1();
-        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(9)), 5, targets(3), 0);
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(9)), 5, targets(3), 0, 0);
         assert!(matches!(
             call.on_reply(ProcId(0), 4, values_reply(1, 0), no_req),
             QuorumStep::Wait
@@ -446,9 +453,27 @@ mod tests {
     }
 
     #[test]
+    fn a_call_keeps_its_issue_epoch_quorum_sizes() {
+        // epoch discipline ([`crate::adapt`]): the call was issued under
+        // epoch 3 / R=2 — whatever config the client adopts afterwards,
+        // THIS call still needs two distinct replies to complete
+        let cfg = ConsistencyCfg::n3r2w2();
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(11)), 1, targets(3), 0, 3);
+        assert_eq!(call.epoch, 3);
+        assert!(matches!(
+            call.on_reply(ProcId(0), 1, values_reply(1, 0), no_req),
+            QuorumStep::Wait
+        ));
+        assert!(matches!(
+            call.on_reply(ProcId(2), 1, values_reply(1, 0), no_req),
+            QuorumStep::Done(OpOutcome::GetOk(_))
+        ));
+    }
+
+    #[test]
     fn late_quorum_timer_is_a_noop() {
         let cfg = ConsistencyCfg::n3r1w1();
-        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(10)), 1, targets(3), 0);
+        let (mut call, _) = QuorumCall::new(0, cfg, AppOp::Get(KeyId(10)), 1, targets(3), 0, 0);
         let _ = call.on_reply(ProcId(1), 1, values_reply(3, 1), no_req);
         // quorum already met when the round-1 timer fires (defensive)
         assert!(matches!(call.on_timeout(1), QuorumStep::Wait));

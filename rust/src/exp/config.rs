@@ -2,6 +2,7 @@
 //! consistency, app, monitoring, recovery), mirroring the parameters the
 //! paper varies in §VI.
 
+use crate::adapt::AdaptCfg;
 use crate::client::consistency::{ClientTiming, ConsistencyCfg};
 use crate::clock::hvc::{Millis, EPS_INF};
 use crate::detect::monitor::MonitorCfg;
@@ -94,6 +95,11 @@ pub struct ExpConfig {
     /// drop bursts — [`crate::faults`]). [`FaultPlan::none()`], the
     /// default, reproduces fault-free runs event-for-event.
     pub fault_plan: FaultPlan,
+    /// adaptive-consistency controller ([`crate::adapt`]). The default
+    /// ([`AdaptCfg::static_default`]) deploys no controller and
+    /// reproduces pre-adapt runs bit-identically; `consistency` is then
+    /// the (only) mode of the whole run.
+    pub adapt: AdaptCfg,
 }
 
 impl ExpConfig {
@@ -122,12 +128,24 @@ impl ExpConfig {
             drop_prob: 0.0,
             accel: AccelKind::Native,
             fault_plan: FaultPlan::none(),
+            adapt: AdaptCfg::static_default(),
         }
     }
 
     /// Attach a fault schedule to the run.
     pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
         self.fault_plan = plan;
+        self
+    }
+
+    /// Deploy an adaptive-consistency controller. `consistency` stays the
+    /// starting mode and must be one of the two configs the controller
+    /// switches between.
+    pub fn with_adapt(mut self, adapt: AdaptCfg) -> Self {
+        if let Err(e) = adapt.validate(self.consistency) {
+            panic!("bad adapt config: {e}");
+        }
+        self.adapt = adapt;
         self
     }
 
@@ -202,6 +220,39 @@ mod tests {
         assert_eq!(cfg.n_regions(), 3);
         assert_eq!(cfg.base_ms()[0][1], 38.0);
         assert!(cfg.fault_plan.is_none(), "fault-free by default");
+        assert!(!cfg.adapt.enabled(), "static consistency by default");
+    }
+
+    #[test]
+    fn adapt_builder_validates_modes() {
+        use crate::adapt::{AdaptCfg, HysteresisCfg};
+        let cfg = ExpConfig::new(
+            "t",
+            ConsistencyCfg::new(3, 1, 2),
+            AppKind::Conjunctive { n_preds: 1, n_conjuncts: 1, beta: 0.0, put_pct: 0.5 },
+        )
+        .with_adapt(AdaptCfg::hysteresis(
+            HysteresisCfg::default(),
+            ConsistencyCfg::new(3, 1, 2),
+            ConsistencyCfg::n3r2w2(),
+        ));
+        assert!(cfg.adapt.enabled());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad adapt config")]
+    fn adapt_builder_rejects_foreign_starting_mode() {
+        use crate::adapt::{AdaptCfg, HysteresisCfg};
+        let _ = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Conjunctive { n_preds: 1, n_conjuncts: 1, beta: 0.0, put_pct: 0.5 },
+        )
+        .with_adapt(AdaptCfg::hysteresis(
+            HysteresisCfg::default(),
+            ConsistencyCfg::new(3, 1, 2),
+            ConsistencyCfg::n3r2w2(),
+        ));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 use std::cell::RefCell;
 use std::rc::Rc;
 
+use crate::adapt::{AdaptController, ModeSpan};
 use crate::apps::coloring::{ColoringApp, ColoringShared};
 use crate::apps::conjunctive::{ConjunctiveApp, ConjunctiveShared};
 use crate::apps::graph::Graph;
@@ -67,12 +68,22 @@ pub struct ExpResult {
     pub ops_ok: u64,
     pub ops_failed: u64,
     pub restarts: u64,
+    /// quorum rounds that expired client-side (serial-round fallbacks +
+    /// timeout failures) — the liveness signal the adapt controller polls
+    pub quorum_timeouts: u64,
     /// controller stats
     pub recoveries: u64,
     /// fault-injection stats (aggregated over servers)
     pub crashes: u64,
     pub resyncs: u64,
     pub resync_keys: u64,
+    /// adaptive-consistency artifacts ([`crate::adapt`]): the announced
+    /// mode timeline (a single span covering the whole run when no
+    /// controller is deployed), the number of epoch switches, and the
+    /// stable throughput of each mode over the windows it fully covered
+    pub mode_timeline: Vec<ModeSpan>,
+    pub mode_switches: u64,
+    pub per_mode_tps: Vec<(String, f64)>,
 }
 
 /// Run one experiment to completion.
@@ -81,11 +92,14 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
     let c = cfg.n_clients;
     let n_regions = cfg.n_regions() as u8;
 
-    // ---- actor id layout: servers | monitors | clients | controller ----
+    // ---- actor id layout: servers | monitors | clients | controller
+    //      [| adapt controller — only when an active policy deploys one,
+    //      so static-policy runs keep the exact pre-adapt layout] ----
     let server_ids: Vec<ProcId> = (0..s as u32).map(ProcId).collect();
     let monitor_ids: Vec<ProcId> = (s as u32..2 * s as u32).map(ProcId).collect();
     let client_ids: Vec<ProcId> = (2 * s as u32..(2 * s + c) as u32).map(ProcId).collect();
     let controller_id = ProcId((2 * s + c) as u32);
+    let adapt_id = cfg.adapt.enabled().then(|| ProcId((2 * s + c + 1) as u32));
 
     // ---- topology ----
     let mut tb = TopologyBuilder::new();
@@ -102,6 +116,9 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
         tb.add_machine_proc(i as u8 % n_regions, 2);
     }
     tb.add_machine_proc(0, 2); // controller
+    if adapt_id.is_some() {
+        tb.add_machine_proc(0, 2); // adapt controller, beside the control plane
+    }
     let (topo, threads) = tb.build(cfg.base_ms(), cfg.drop_prob);
 
     // ---- fault schedule: lower the role-level plan onto this layout ----
@@ -214,12 +231,18 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
             metrics.clone(),
         )));
     }
-    sim.add_actor(Box::new(ControllerActor::new(
-        server_ids.clone(),
-        client_ids.clone(),
-        cfg.recovery,
-        metrics.clone(),
-    )));
+    sim.add_actor(Box::new(
+        ControllerActor::new(server_ids.clone(), client_ids.clone(), cfg.recovery, metrics.clone())
+            .with_adapt(adapt_id),
+    ));
+    if adapt_id.is_some() {
+        sim.add_actor(Box::new(AdaptController::new(
+            client_ids.clone(),
+            metrics.clone(),
+            &cfg.adapt,
+            cfg.consistency,
+        )));
+    }
 
     // ---- run ----
     sim.install_faults(fault_timeline);
@@ -281,6 +304,21 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
         .and_then(|a| a.downcast_mut::<ControllerActor>())
         .map(|ctl| ctl.recoveries)
         .unwrap_or(0);
+    let (mode_timeline, mode_switches) = match adapt_id {
+        Some(id) => sim
+            .actor_mut(id)
+            .as_any()
+            .and_then(|a| a.downcast_mut::<AdaptController>())
+            .map(|ad| (ad.timeline.clone(), ad.switches))
+            .expect("adapt controller present when enabled"),
+        // no controller deployed: the whole run is one static span
+        None => (vec![ModeSpan { from: 0, epoch: 0, cfg: cfg.consistency }], 0),
+    };
+    let per_mode_tps = {
+        let m = metrics.borrow();
+        per_mode_throughput(&mode_timeline, &m.app_series(), m.window)
+    };
+    let quorum_timeouts = metrics.borrow().quorum_timeouts;
 
     let active_preds_peak = metrics.borrow().active_preds_peak;
     let actual_me_violations = oracle.borrow().actual_violations.len();
@@ -307,11 +345,48 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
         ops_ok,
         ops_failed,
         restarts,
+        quorum_timeouts,
         recoveries,
         crashes,
         resyncs,
         resync_keys,
+        mode_timeline,
+        mode_switches,
+        per_mode_tps,
     }
+}
+
+/// Mean app throughput per consistency mode: every full metrics window
+/// is attributed to the mode span that covers it entirely (windows that
+/// straddle a switch are skipped, as are the warm-up window and the
+/// final, possibly partial one). Returned in first-seen order.
+fn per_mode_throughput(
+    timeline: &[ModeSpan],
+    series: &[f64],
+    window: crate::sim::Time,
+) -> Vec<(String, f64)> {
+    let mut acc: Vec<(String, f64, u64)> = Vec::new();
+    if timeline.is_empty() || series.len() < 3 {
+        return Vec::new();
+    }
+    for (i, &v) in series.iter().enumerate().take(series.len() - 1).skip(1) {
+        let (ws, we) = (i as crate::sim::Time * window, (i + 1) as crate::sim::Time * window);
+        let Some(k) = timeline.iter().rposition(|sp| sp.from <= ws) else { continue };
+        if let Some(next) = timeline.get(k + 1) {
+            if next.from < we {
+                continue; // the mode changed inside this window
+            }
+        }
+        let label = timeline[k].label();
+        match acc.iter_mut().find(|(l, _, _)| l.as_str() == label) {
+            Some((_, sum, n)) => {
+                *sum += v;
+                *n += 1;
+            }
+            None => acc.push((label.to_string(), v, 1)),
+        }
+    }
+    acc.into_iter().map(|(l, sum, n)| (l, sum / n.max(1) as f64)).collect()
 }
 
 #[cfg(test)]
@@ -331,6 +406,33 @@ mod tests {
         cfg.duration = 20 * SEC;
         cfg.topo = crate::exp::config::TopoKind::AwsRegional { zones: 3 };
         cfg
+    }
+
+    #[test]
+    fn per_mode_throughput_attributes_full_windows() {
+        use crate::sim::SEC;
+        let tl = vec![
+            ModeSpan { from: 0, epoch: 0, cfg: ConsistencyCfg::n3r1w1() },
+            ModeSpan { from: 3 * SEC + SEC / 2, epoch: 1, cfg: ConsistencyCfg::n3r2w2() },
+            ModeSpan { from: 6 * SEC, epoch: 2, cfg: ConsistencyCfg::n3r1w1() },
+        ];
+        // windows:   0    1    2    3*   4    5    6    7    8(last)
+        // * = straddles the 3.5 s switch; 0 is warm-up; 8 is partial
+        let series = vec![10.0, 100.0, 100.0, 55.0, 40.0, 40.0, 100.0, 100.0, 12.0];
+        let tps = per_mode_throughput(&tl, &series, SEC);
+        assert_eq!(tps.len(), 2);
+        assert_eq!(tps[0].0, "eventual");
+        assert_eq!(tps[0].1, 100.0, "windows 1, 2, 6, 7");
+        assert_eq!(tps[1].0, "sequential");
+        assert_eq!(tps[1].1, 40.0, "windows 4, 5");
+
+        // static single-span timeline: everything but the trim is one mode
+        let single = vec![ModeSpan { from: 0, epoch: 0, cfg: ConsistencyCfg::n3r1w1() }];
+        let tps = per_mode_throughput(&single, &[7.0; 5], SEC);
+        assert_eq!(tps, vec![("eventual".to_string(), 7.0)]);
+
+        assert!(per_mode_throughput(&single, &[1.0, 2.0], SEC).is_empty(), "too short");
+        assert!(per_mode_throughput(&[], &[7.0; 5], SEC).is_empty());
     }
 
     #[test]

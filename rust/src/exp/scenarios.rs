@@ -5,6 +5,7 @@
 //! workload and duration proportionally so benches finish in CI time while
 //! preserving the *shape* of the results (who wins, by what factor).
 
+use crate::adapt::{AdaptCfg, HysteresisCfg};
 use crate::client::consistency::{ClientTiming, ConsistencyCfg};
 use crate::exp::config::{AppKind, ExpConfig, TopoKind};
 use crate::faults::plan::{FaultEvent, FaultPlan};
@@ -345,6 +346,94 @@ pub fn detection_cdf_faulted(regional: bool, scale: f64, seed: u64) -> ExpConfig
     cfg
 }
 
+/// How to pin (or not pin) the consistency mode of the adaptive-benefit
+/// scenario: the hysteresis controller, or one of the two static
+/// baselines it must beat phase-by-phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptRun {
+    Adaptive,
+    StaticEventual,
+    StaticSequential,
+}
+
+impl AdaptRun {
+    pub fn label(self) -> &'static str {
+        match self {
+            AdaptRun::Adaptive => "adaptive",
+            AdaptRun::StaticEventual => "static-eventual",
+            AdaptRun::StaticSequential => "static-sequential",
+        }
+    }
+}
+
+/// The eventual-mode quorum config of [`adaptive_conjunctive`]: R1 keeps
+/// reads optimistic, W2 makes a partitioned region's writes surface as
+/// quorum timeouts — the signal the hysteresis controller watches.
+pub fn adaptive_eventual_mode() -> ConsistencyCfg {
+    ConsistencyCfg::new(3, 1, 2)
+}
+
+/// Adaptive-consistency study: the conjunctive stress workload on a
+/// 3-zone regional cluster whose middle phase is *bad* by fault plan —
+/// region 2 (one server, three clients) is cut off for the middle fifth
+/// of the run. Under the eventual mode (N3R1W2) the cut region's writes
+/// miss their W = 2 quorum and expire, so the controller's
+/// timeouts-per-second signal spikes deterministically; the hysteresis
+/// policy drops the cluster to sequential (N3R2W2) and — after the heal
+/// quiets the signal for `hold_windows` consecutive windows — returns it
+/// to eventual. Only the timeout pair is armed: the conjunctive
+/// workload's β-driven violation rate is mode-independent statistical
+/// background here (the violation and stall pairs carry the paper's
+/// premise in scenarios where rollback is the cost driver, and are
+/// exercised at policy level).
+///
+/// The regional topology keeps the sequential mode's quorum penalty in
+/// the ~10 % band, so the adaptive run's excursion costs well under the
+/// 5 % acceptance envelope vs the best static pin while still
+/// demonstrating a full eventual → sequential → eventual round trip.
+pub fn adaptive_conjunctive(run: AdaptRun, scale: f64, seed: u64) -> ExpConfig {
+    let d = dur(scale, 300);
+    let eventual = adaptive_eventual_mode();
+    let sequential = ConsistencyCfg::n3r2w2();
+    let consistency = match run {
+        AdaptRun::StaticSequential => sequential,
+        _ => eventual,
+    };
+    let mut cfg = ExpConfig::new(
+        &format!("adaptive-conjunctive-{}", run.label()),
+        consistency,
+        AppKind::Conjunctive { n_preds: 8, n_conjuncts: 3, beta: 0.01, put_pct: 0.5 },
+    )
+    .with_fault_plan(FaultPlan::none().with(FaultEvent::Partition {
+        groups: vec![vec![0, 1], vec![2]],
+        from: 2 * d / 5,
+        until: 3 * d / 5,
+    }));
+    if run == AdaptRun::Adaptive {
+        let hysteresis = HysteresisCfg {
+            timeouts_per_sec_hi: 0.5,
+            timeouts_per_sec_lo: 0.05,
+            // the cut keeps the signal hot continuously, so a short hold
+            // cannot flap; it lets CI-scale runs finish the round trip
+            // with seconds to spare (the default, 5, suits long runs)
+            hold_windows: 2,
+            ..HysteresisCfg::disarmed()
+        };
+        cfg = cfg.with_adapt(AdaptCfg::hysteresis(hysteresis, eventual, sequential));
+    }
+    cfg.n_clients = 9; // 3 per zone: the cut group keeps offering load
+    cfg.monitors = true;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.duration = d;
+    cfg.seed = seed;
+    // think-time-dominated clients: the sequential mode's extra quorum
+    // round trips stay a sub-10 % per-op penalty, so the adaptive run's
+    // excursion costs a low single-digit percent of overall throughput —
+    // the acceptance envelope is adaptive >= best static - 5 %
+    cfg.timing = ClientTiming::with_think(15.0);
+    cfg
+}
+
 /// The paper's Table II consistency presets for N = 3 and N = 5.
 pub fn table2_n3() -> [ConsistencyCfg; 3] {
     [ConsistencyCfg::n3r1w3(), ConsistencyCfg::n3r2w2(), ConsistencyCfg::n3r1w1()]
@@ -450,6 +539,48 @@ mod tests {
         }
         assert_eq!(detection_cdf_faulted(true, 0.1, 1).n_regions(), 5);
         assert_eq!(detection_cdf_faulted(false, 0.1, 1).n_regions(), 3);
+    }
+
+    #[test]
+    fn adaptive_family_varies_only_the_policy_and_start_mode() {
+        let ad = adaptive_conjunctive(AdaptRun::Adaptive, 0.1, 7);
+        let ev = adaptive_conjunctive(AdaptRun::StaticEventual, 0.1, 7);
+        let seq = adaptive_conjunctive(AdaptRun::StaticSequential, 0.1, 7);
+
+        assert!(ad.adapt.enabled());
+        assert!(!ev.adapt.enabled() && !seq.adapt.enabled());
+        assert_eq!(ad.consistency, adaptive_eventual_mode());
+        assert_eq!(ev.consistency, adaptive_eventual_mode());
+        assert_eq!(seq.consistency, ConsistencyCfg::n3r2w2());
+        assert!(ad.consistency.is_eventual() && seq.consistency.is_sequential());
+
+        // same workload, topology, faults and seed across the family
+        for other in [&ev, &seq] {
+            assert_eq!(ad.app, other.app);
+            assert_eq!(ad.fault_plan, other.fault_plan);
+            assert_eq!(ad.seed, other.seed);
+            assert_eq!(ad.n_clients, other.n_clients);
+            assert_eq!(ad.duration, other.duration);
+        }
+
+        // the bad phase sits strictly inside the run and heals before it ends
+        assert!(ad.fault_plan.validate(ad.n_servers(), ad.n_regions()).is_ok());
+        match &ad.fault_plan.events[0] {
+            FaultEvent::Partition { from, until, .. } => {
+                assert!(0 < *from && from < until && *until < ad.duration);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // the armed signal pair matches the scenario's fault mechanism
+        match &ad.adapt.policy {
+            crate::adapt::PolicyKind::Hysteresis(h) => {
+                assert!(h.timeouts_per_sec_hi.is_finite());
+                assert!(h.timeouts_per_sec_lo < h.timeouts_per_sec_hi);
+                assert!(h.viol_per_kop_hi.is_infinite(), "β background stays disarmed");
+            }
+            other => panic!("unexpected policy {other:?}"),
+        }
     }
 
     #[test]

@@ -48,9 +48,20 @@
 //! latency CDF becomes a reproducible artifact
 //! ([`exp::runner::ExpResult::detection_cdf`]).
 //!
+//! Adaptive consistency: a runtime [`adapt::AdaptController`] watches
+//! the live signals the system already produces (violation reports,
+//! rollback stall time, quorum timeouts, op-latency percentiles) over
+//! sliding windows and, through a pluggable [`adapt::Policy`], drives an
+//! epoch-based reconfiguration protocol that switches the whole cluster
+//! between eventual and sequential quorum configurations mid-run —
+//! answering the paper's deployment question of *when* to run
+//! optimistically. The default static policy deploys no controller and
+//! reproduces every pre-adapt run bit-identically.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured numbers.
 
+pub mod adapt;
 pub mod apps;
 pub mod client;
 pub mod clock;

@@ -14,6 +14,9 @@
 //! optikv scaleout      — throughput vs cluster size at fixed N=3
 //! optikv pipeline      — throughput/latency vs client pipeline depth
 //! optikv faults        — partition / crash-churn / detection-CDF demos
+//! optikv adapt         — adaptive consistency vs the static pins on the
+//!                        fault-phased scenario (mode timeline + per-mode
+//!                        throughput)
 //! ```
 //!
 //! Fault-plan DSL (windows in virtual seconds): `partition:0,1|2@10-40`
@@ -41,9 +44,10 @@ fn main() {
         Some("scaleout") => cmd_scaleout(&args),
         Some("pipeline") => cmd_pipeline(&args),
         Some("faults") => cmd_faults(&args),
+        Some("adapt") => cmd_adapt(&args),
         _ => {
             eprintln!(
-                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults> [flags]  (see module docs)"
+                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults|adapt> [flags]  (see module docs)"
             );
             std::process::exit(2);
         }
@@ -243,6 +247,46 @@ fn cmd_faults(args: &Args) {
         let res = run(&scenarios::detection_cdf_faulted(regional, scale, seed));
         println!("{}", report::summarize(&res));
         print!("{}", report::detection_cdf_summary(&res.detection_cdf));
+    }
+}
+
+fn cmd_adapt(args: &Args) {
+    use optikv::exp::scenarios::AdaptRun;
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", 42);
+
+    let mut t = Table::new(&["run", "app ops/s", "ok", "failed", "timeouts", "switches"]);
+    let mut adaptive_tps = 0.0;
+    let mut best_static: f64 = 0.0;
+    let mut round_trips = 0;
+    for run_kind in [AdaptRun::StaticEventual, AdaptRun::StaticSequential, AdaptRun::Adaptive] {
+        let res = run(&scenarios::adaptive_conjunctive(run_kind, scale, seed));
+        t.row(&[
+            run_kind.label().to_string(),
+            format!("{:.0}", res.app_tps),
+            res.ops_ok.to_string(),
+            res.ops_failed.to_string(),
+            res.quorum_timeouts.to_string(),
+            res.mode_switches.to_string(),
+        ]);
+        match run_kind {
+            AdaptRun::Adaptive => {
+                adaptive_tps = res.app_tps;
+                round_trips = optikv::adapt::round_trips(&res.mode_timeline);
+                print!("{}", report::mode_timeline_summary(&res));
+            }
+            _ => best_static = best_static.max(res.app_tps),
+        }
+    }
+    t.print();
+    println!(
+        "adaptive vs best static: {:+.1}% ({} eventual→sequential→eventual round trips)",
+        report::benefit_pct(adaptive_tps, best_static),
+        round_trips,
+    );
+    if round_trips == 0 {
+        eprintln!("adaptive-smoke FAILED: no mode round trip");
+        std::process::exit(1);
     }
 }
 

@@ -88,6 +88,34 @@ pub fn detection_cdf_summary(cdf: &Cdf) -> String {
     out
 }
 
+/// Render the adaptive-consistency artifacts: the announced mode
+/// timeline (seconds, epoch, config, model) and each mode's stable
+/// throughput over the windows it fully covered.
+pub fn mode_timeline_summary(r: &ExpResult) -> String {
+    if r.mode_switches == 0 && r.mode_timeline.len() <= 1 {
+        return "mode timeline: static (no switches)\n".to_string();
+    }
+    let mut t = Table::new(&["From (s)", "Epoch", "Config", "Model"]);
+    for sp in &r.mode_timeline {
+        t.row(&[
+            format!("{:.1}", sp.from as f64 / crate::sim::SEC as f64),
+            sp.epoch.to_string(),
+            sp.cfg.label(),
+            sp.label().to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "switches={}  round-trips={}\n",
+        r.mode_switches,
+        crate::adapt::round_trips(&r.mode_timeline),
+    ));
+    for (label, tps) in &r.per_mode_tps {
+        out.push_str(&format!("  {label:<12} {tps:>8.1} ops/s (full windows)\n"));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -44,8 +44,16 @@ pub struct MetricsHub {
     server_ops: Vec<Vec<u64>>,
     /// successful app ops per client per window
     app_ops: Vec<Vec<u64>>,
+    /// running total of the buckets above — kept so per-tick pollers
+    /// (the adapt controller) read it O(1) instead of re-summing every
+    /// window bucket of every client each signal tick
+    app_ops_recorded: u64,
     /// failed app ops per client
     pub app_failures: Vec<u64>,
+    /// quorum rounds that expired client-side (serial-round fallbacks and
+    /// timeout failures) — a liveness signal the adaptive-consistency
+    /// controller polls ([`crate::adapt::signals`])
+    pub quorum_timeouts: u64,
     pub violations: Vec<ViolationRecord>,
     /// candidates received across monitors
     pub candidates_received: u64,
@@ -62,13 +70,21 @@ pub struct MetricsHub {
 
 pub type Metrics = Rc<RefCell<MetricsHub>>;
 
+/// Cap on retained per-op latency samples. Consumers polling
+/// [`MetricsHub::op_latencies`] incrementally (the adapt controller)
+/// check against this to distinguish "no ops completed" from "the
+/// buffer saturated and sampling stopped".
+pub const OP_LATENCY_SAMPLE_CAP: usize = 1_000_000;
+
 impl MetricsHub {
     pub fn new(n_servers: usize, n_clients: usize) -> Metrics {
         Rc::new(RefCell::new(Self {
             window: SEC,
             server_ops: vec![Vec::new(); n_servers],
             app_ops: vec![Vec::new(); n_clients],
+            app_ops_recorded: 0,
             app_failures: vec![0; n_clients],
+            quorum_timeouts: 0,
             violations: Vec::new(),
             candidates_received: 0,
             active_preds_peak: 0,
@@ -93,7 +109,8 @@ impl MetricsHub {
 
     pub fn record_app(&mut self, client_idx: usize, t: Time, latency: Time) {
         Self::bump(&mut self.app_ops[client_idx], self.window, t);
-        if self.op_latencies.len() < 1_000_000 {
+        self.app_ops_recorded += 1;
+        if self.op_latencies.len() < OP_LATENCY_SAMPLE_CAP {
             self.op_latencies.push(latency);
         }
     }
@@ -127,7 +144,7 @@ impl MetricsHub {
     }
 
     pub fn total_app_ops(&self) -> u64 {
-        self.app_ops.iter().flat_map(|s| s.iter()).sum()
+        self.app_ops_recorded
     }
 
     pub fn total_server_ops(&self) -> u64 {

@@ -12,8 +12,8 @@
 
 use crate::metrics::throughput::Metrics;
 use crate::sim::des::{Actor, Ctx};
-use crate::sim::msg::{Msg, RollbackMsg};
-use crate::sim::{ms, ProcId, Time};
+use crate::sim::msg::{AdaptMsg, Msg, RollbackMsg};
+use crate::sim::{ms, ProcId, Time, MS};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RecoveryPolicy {
@@ -39,6 +39,13 @@ pub struct ControllerActor {
     min_gap: Time,
     last_recovery: Time,
     pending_t_violate: i64,
+    /// when the current FullRestore freeze began (stall accounting)
+    freeze_started: Time,
+    /// the adaptive-consistency controller, if one is deployed
+    /// ([`crate::adapt`]): every violation report and every finished
+    /// recovery is forwarded as a signal sample. `None` (the default)
+    /// emits nothing and reproduces the pre-adapt controller exactly.
+    adapt: Option<ProcId>,
     metrics: Metrics,
     /// stats
     pub violations_received: u64,
@@ -63,12 +70,20 @@ impl ControllerActor {
             min_gap: ms(1_000.0),
             last_recovery: 0,
             pending_t_violate: 0,
+            freeze_started: 0,
+            adapt: None,
             metrics,
             violations_received: 0,
             recoveries: 0,
             window_log_restores: 0,
             snapshot_restores: 0,
         }
+    }
+
+    /// Wire the adaptive-consistency controller as a signal sink.
+    pub fn with_adapt(mut self, adapt: Option<ProcId>) -> Self {
+        self.adapt = adapt;
+        self
     }
 
     fn notify_clients(&mut self, ctx: &mut Ctx, t_violate_ms: i64) {
@@ -85,10 +100,17 @@ impl ControllerActor {
             RecoveryPolicy::None => {}
             RecoveryPolicy::NotifyClients => {
                 self.notify_clients(ctx, t_violate_ms);
+                // notify-only recovery never freezes the servers: the
+                // stall sample is 0, but the adapt controller still sees
+                // that a recovery happened
+                if let Some(a) = self.adapt {
+                    ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms: 0.0 }));
+                }
             }
             RecoveryPolicy::FullRestore => {
                 self.state = State::Freezing { acks: 0 };
                 self.pending_t_violate = t_violate_ms;
+                self.freeze_started = ctx.now();
                 for &s in &self.servers {
                     ctx.send(s, Msg::Rollback(RollbackMsg::Freeze { epoch: self.epoch }));
                 }
@@ -103,6 +125,18 @@ impl Actor for ControllerActor {
             Msg::Violation(rep) => {
                 self.violations_received += 1;
                 let _ = &self.metrics; // violation metrics recorded by monitors
+                if let Some(a) = self.adapt {
+                    // forward every report (even ones suppressed below) —
+                    // the violation *rate* is the adapt signal, not the
+                    // recovery rate. The latency sample uses the monitor's
+                    // detection instant, matching
+                    // `ViolationRecord::detection_latency_ms` — not this
+                    // actor's receipt time, which would add the Violation
+                    // message's transit delay
+                    let detection_ms =
+                        (rep.detected_at / MS) as f64 - rep.t_occurred_ms as f64;
+                    ctx.send(a, Msg::Adapt(AdaptMsg::ViolationSeen { detection_ms }));
+                }
                 let busy = self.state != State::Idle;
                 let too_soon = ctx.now() < self.last_recovery + self.min_gap && self.recoveries > 0;
                 if self.policy != RecoveryPolicy::None && !busy && !too_soon {
@@ -139,6 +173,13 @@ impl Actor for ControllerActor {
                         }
                         let t = self.pending_t_violate;
                         self.notify_clients(ctx, t);
+                        if let Some(a) = self.adapt {
+                            // how long the cluster sat frozen for this
+                            // restore — the rollback-cost signal
+                            let stall_ms =
+                                (ctx.now() - self.freeze_started) as f64 / MS as f64;
+                            ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms }));
+                        }
                     } else {
                         self.state = State::Restoring { acks };
                     }

@@ -93,6 +93,7 @@ pub const MSG_CLASS_BYTES: [u64; N_MSG_CLASSES] = [
     32,    // Rollback control
     192,   // RegisterPred: predicate spec
     1_024, // Sync: re-sync chunk (key batch)
+    40,    // Adapt: epoch announce/ack or a signal sample
 ];
 
 impl SimStats {

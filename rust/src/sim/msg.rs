@@ -5,6 +5,7 @@
 
 use std::rc::Rc;
 
+use crate::client::consistency::ConsistencyCfg;
 use crate::clock::hvc::{Hvc, Millis};
 use crate::detect::candidate::{Candidate, ViolationReport};
 use crate::predicate::spec::PredicateSpec;
@@ -46,6 +47,30 @@ pub enum SyncMsg {
     Chunk { epoch: u64, data: Vec<(KeyId, Vec<Versioned>)> },
 }
 
+/// Adaptive-consistency control plane ([`crate::adapt`]): the epoch
+/// protocol that moves the whole cluster between quorum configurations
+/// at runtime, plus the signal feed from the rollback controller.
+#[derive(Debug, Clone)]
+pub enum AdaptMsg {
+    /// adapt controller → every client: consistency epoch `epoch` begins —
+    /// open new quorum calls under `cfg`. In-flight calls finish under the
+    /// epoch they were issued in (each [`crate::client::quorum::QuorumCall`]
+    /// carries its own config), and the announce is re-sent each signal
+    /// window until acked so clients cut off by a partition converge
+    /// after heal.
+    Announce { epoch: u64, cfg: ConsistencyCfg },
+    /// client → adapt controller: `client` now issues under `epoch` (a
+    /// client that already runs a newer epoch re-acks that newer one, so
+    /// duplicate announces are idempotent).
+    Ack { epoch: u64, client: u32 },
+    /// rollback controller → adapt controller: one violation report was
+    /// received; `detection_ms` is its detection latency sample.
+    ViolationSeen { detection_ms: f64 },
+    /// rollback controller → adapt controller: a recovery finished;
+    /// servers sat frozen for `stall_ms` (0 for notify-only recovery).
+    RecoveryDone { stall_ms: f64 },
+}
+
 /// Everything that travels between actors.
 #[derive(Debug, Clone)]
 pub enum Msg {
@@ -71,6 +96,8 @@ pub enum Msg {
     RegisterPred(Box<PredicateSpec>),
     /// crash-recovery re-sync between servers.
     Sync(Box<SyncMsg>),
+    /// adaptive-consistency control plane (epoch switches and signals).
+    Adapt(AdaptMsg),
 }
 
 impl Msg {
@@ -84,6 +111,7 @@ impl Msg {
             Msg::Rollback(_) => MsgClass::Rollback,
             Msg::RegisterPred(_) => MsgClass::Register,
             Msg::Sync(_) => MsgClass::Sync,
+            Msg::Adapt(_) => MsgClass::Adapt,
         }
     }
 }
@@ -97,6 +125,7 @@ pub enum MsgClass {
     Rollback = 4,
     Register = 5,
     Sync = 6,
+    Adapt = 7,
 }
 
-pub const N_MSG_CLASSES: usize = 7;
+pub const N_MSG_CLASSES: usize = 8;

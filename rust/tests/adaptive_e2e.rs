@@ -1,0 +1,204 @@
+//! End-to-end tests for the adaptive-consistency subsystem
+//! ([`optikv::adapt`]): static-policy inertness (the PR's regression
+//! pin), the fault-phased round trip with its throughput acceptance
+//! envelope, same-seed determinism of the adaptive schedule, and epoch
+//! switches interleaving with rollback freezes.
+
+use optikv::adapt::{round_trips, AdaptCfg};
+use optikv::client::consistency::ConsistencyCfg;
+use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+use optikv::exp::runner::{run, ExpResult};
+use optikv::exp::scenarios::{adaptive_conjunctive, adaptive_eventual_mode, AdaptRun};
+use optikv::rollback::recovery::RecoveryPolicy;
+use optikv::sim::msg::MsgClass;
+use optikv::sim::SEC;
+
+fn small_conj(consistency: ConsistencyCfg) -> ExpConfig {
+    let mut cfg = ExpConfig::new(
+        "adapt-inert",
+        consistency,
+        AppKind::Conjunctive { n_preds: 4, n_conjuncts: 3, beta: 0.2, put_pct: 0.5 },
+    );
+    cfg.n_clients = 6;
+    cfg.duration = 20 * SEC;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg
+}
+
+/// Everything observable a schedule change would perturb.
+#[derive(Debug, PartialEq)]
+struct Digest {
+    events: u64,
+    sent: Vec<u64>,
+    dropped: Vec<u64>,
+    ops_ok: u64,
+    ops_failed: u64,
+    quorum_timeouts: u64,
+    violations: usize,
+    candidates: u64,
+    app_tps_bits: u64,
+    server_tps_bits: u64,
+    app_series_bits: Vec<u64>,
+    detection_ms_bits: Vec<u64>,
+}
+
+fn digest(r: &ExpResult) -> Digest {
+    Digest {
+        events: r.sim_stats.events,
+        sent: r.sim_stats.sent.to_vec(),
+        dropped: r.sim_stats.dropped.to_vec(),
+        ops_ok: r.ops_ok,
+        ops_failed: r.ops_failed,
+        quorum_timeouts: r.quorum_timeouts,
+        violations: r.violations_detected,
+        candidates: r.candidates_seen,
+        app_tps_bits: r.app_tps.to_bits(),
+        server_tps_bits: r.server_tps.to_bits(),
+        app_series_bits: r.metrics.borrow().app_series().iter().map(|x| x.to_bits()).collect(),
+        detection_ms_bits: r.detection_latencies_ms.iter().map(|x| x.to_bits()).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// regression pin: the static policy (the default) is inert
+// ---------------------------------------------------------------------------
+
+#[test]
+fn static_policy_is_bit_identical_and_silent() {
+    // The default ExpConfig carries `AdaptCfg::static_default()`; setting
+    // it explicitly must change nothing — no adapt actor is deployed, no
+    // adapt message is ever sent, and the event schedule is identical.
+    // (This is the `pipeline_depth = 1` / `FaultPlan::none()` discipline
+    // for the adapt knob.)
+    for consistency in [ConsistencyCfg::n3r1w1(), ConsistencyCfg::n3r2w2()] {
+        let implicit = run(&small_conj(consistency));
+        let explicit = run(&small_conj(consistency).with_adapt(AdaptCfg::static_default()));
+        assert_eq!(
+            digest(&implicit),
+            digest(&explicit),
+            "explicit static adapt config must be inert ({})",
+            consistency.label()
+        );
+        for r in [&implicit, &explicit] {
+            assert_eq!(
+                r.sim_stats.sent_class(MsgClass::Adapt),
+                0,
+                "no adapt traffic without a controller"
+            );
+            assert_eq!(r.mode_switches, 0);
+            assert_eq!(r.mode_timeline.len(), 1, "one static span covers the run");
+            assert_eq!(r.mode_timeline[0].cfg, consistency);
+            assert_eq!(r.mode_timeline[0].epoch, 0);
+            assert_eq!(r.per_mode_tps.len(), 1, "a single mode was ever active");
+            assert_eq!(r.per_mode_tps[0].0, consistency.model_name());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the fault-phased scenario: round trip + throughput acceptance envelope
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hysteresis_round_trips_and_stays_within_the_static_envelope() {
+    let scale = 0.1;
+    let seed = 42;
+    let adaptive = run(&adaptive_conjunctive(AdaptRun::Adaptive, scale, seed));
+    let st_ev = run(&adaptive_conjunctive(AdaptRun::StaticEventual, scale, seed));
+    let st_seq = run(&adaptive_conjunctive(AdaptRun::StaticSequential, scale, seed));
+
+    // the partition makes W = 2 writes from the cut region expire: the
+    // signal the controller trips on must actually exist
+    assert!(st_ev.quorum_timeouts > 0, "the cut must surface as quorum timeouts");
+    assert!(st_ev.ops_failed > 0, "cut-region writes fail under the eventual pin");
+
+    // mode timeline: starts eventual, drops to sequential during the bad
+    // phase, returns to eventual after heal
+    assert_eq!(adaptive.mode_timeline[0].cfg, adaptive_eventual_mode());
+    assert!(
+        adaptive.mode_switches >= 2,
+        "up- and down-switch expected, got {} (timeline {:?})",
+        adaptive.mode_switches,
+        adaptive.mode_timeline
+    );
+    assert!(
+        round_trips(&adaptive.mode_timeline) >= 1,
+        "eventual→sequential→eventual round trip expected: {:?}",
+        adaptive.mode_timeline
+    );
+    let last = adaptive.mode_timeline.last().unwrap();
+    assert!(last.cfg.is_eventual(), "the cluster ends back in the eventual mode");
+    assert!(
+        adaptive.sim_stats.sent_class(MsgClass::Adapt) > 0,
+        "announce/ack traffic flowed"
+    );
+
+    // epochs on the timeline are strictly increasing from 0
+    for (i, sp) in adaptive.mode_timeline.iter().enumerate() {
+        assert_eq!(sp.epoch, i as u64, "epochs advance one switch at a time");
+    }
+
+    // both modes accumulated fully-covered windows
+    let labels: Vec<&str> = adaptive.per_mode_tps.iter().map(|(l, _)| l.as_str()).collect();
+    assert!(labels.contains(&"eventual") && labels.contains(&"sequential"), "{labels:?}");
+
+    // the acceptance envelope: adaptive >= max(static pins) - 5 %
+    let best_static = st_ev.app_tps.max(st_seq.app_tps);
+    assert!(
+        adaptive.app_tps >= best_static * 0.95,
+        "adaptive ({:.1} ops/s) fell below best static ({:.1} ops/s) - 5%",
+        adaptive.app_tps,
+        best_static
+    );
+}
+
+// ---------------------------------------------------------------------------
+// determinism: the adaptive schedule replays under a seed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adaptive_schedule_is_deterministic_under_seed() {
+    let mk = || adaptive_conjunctive(AdaptRun::Adaptive, 0.1, 7);
+    let a = run(&mk());
+    let b = run(&mk());
+    assert_eq!(digest(&a), digest(&b));
+    assert_eq!(a.mode_timeline, b.mode_timeline, "identical switch times and epochs");
+    assert_eq!(a.mode_switches, b.mode_switches);
+    assert_eq!(a.per_mode_tps, b.per_mode_tps);
+}
+
+// ---------------------------------------------------------------------------
+// epoch switches interleaving with rollback freezes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn switches_stay_sound_while_rollback_freezes_are_active() {
+    // FullRestore + a hot violation rate (β = 0.2): recoveries freeze the
+    // servers from early in the run. When the partition opens, a freeze
+    // eventually targets the unreachable server and wedges the rollback
+    // controller mid-recovery (the documented FullRestore-under-partition
+    // behavior, DESIGN.md §7) — with servers frozen, every quorum round
+    // expires, the timeout signal saturates, and the adapt controller
+    // announces its switch *while the freeze is active*. The protocol
+    // must stay sound: clients (which never freeze) ack the epoch, the
+    // schedule replays under the seed, and nothing deadlocks or panics.
+    let mk = || {
+        let mut cfg = adaptive_conjunctive(AdaptRun::Adaptive, 0.1, 11);
+        cfg.app = AppKind::Conjunctive { n_preds: 8, n_conjuncts: 3, beta: 0.2, put_pct: 0.5 };
+        cfg.recovery = RecoveryPolicy::FullRestore;
+        cfg
+    };
+    let res = run(&mk());
+    assert!(res.recoveries >= 1, "freezes happened");
+    assert!(res.mode_switches >= 1, "a switch was announced during the degraded phase");
+    assert!(res.ops_ok > 100, "pre-cut progress exists: {}", res.ops_ok);
+    assert!(res.ops_failed > 0, "frozen/unreachable servers fail quorums");
+    assert!(
+        res.sim_stats.sent_class(MsgClass::Adapt) > 0,
+        "announces and acks flowed while servers were frozen"
+    );
+
+    let again = run(&mk());
+    assert_eq!(digest(&res), digest(&again));
+    assert_eq!(res.mode_timeline, again.mode_timeline);
+}
