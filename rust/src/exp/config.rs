@@ -8,6 +8,7 @@ use crate::clock::hvc::{Millis, EPS_INF};
 use crate::detect::monitor::MonitorCfg;
 use crate::faults::plan::FaultPlan;
 use crate::rollback::recovery::RecoveryPolicy;
+use crate::sim::des::SchedKind;
 use crate::sim::{Time, SEC};
 use crate::store::server::ServerCfg;
 
@@ -100,6 +101,15 @@ pub struct ExpConfig {
     /// reproduces pre-adapt runs bit-identically; `consistency` is then
     /// the (only) mode of the whole run.
     pub adapt: AdaptCfg,
+    /// event-loop shards for the merged-order sharded engine
+    /// ([`crate::sim::des::Sim::new_sharded`]). 0 (the default) keeps
+    /// the legacy single event queue; any `k ≥ 1` partitions the event
+    /// set into `min(k, servers)` ring-block shards and runs the
+    /// window/barrier protocol — results are bit-identical to 0 at
+    /// every value by construction.
+    pub shards: usize,
+    /// pending-event scheduler backing each shard's queue
+    pub sched: SchedKind,
 }
 
 impl ExpConfig {
@@ -129,7 +139,21 @@ impl ExpConfig {
             accel: AccelKind::Native,
             fault_plan: FaultPlan::none(),
             adapt: AdaptCfg::static_default(),
+            shards: 0,
+            sched: SchedKind::Heap,
         }
+    }
+
+    /// Run on the merged-order sharded engine with `k` shards.
+    pub fn with_shards(mut self, k: usize) -> Self {
+        self.shards = k;
+        self
+    }
+
+    /// Pick the pending-event scheduler (heap or calendar queue).
+    pub fn with_sched(mut self, sched: SchedKind) -> Self {
+        self.sched = sched;
+        self
     }
 
     /// Attach a fault schedule to the run.
@@ -221,6 +245,21 @@ mod tests {
         assert_eq!(cfg.base_ms()[0][1], 38.0);
         assert!(cfg.fault_plan.is_none(), "fault-free by default");
         assert!(!cfg.adapt.enabled(), "static consistency by default");
+        assert_eq!(cfg.shards, 0, "legacy single event queue by default");
+        assert_eq!(cfg.sched, SchedKind::Heap);
+    }
+
+    #[test]
+    fn shard_builders() {
+        let cfg = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Conjunctive { n_preds: 1, n_conjuncts: 1, beta: 0.0, put_pct: 0.5 },
+        )
+        .with_shards(4)
+        .with_sched(SchedKind::Calendar);
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.sched, SchedKind::Calendar);
     }
 
     #[test]

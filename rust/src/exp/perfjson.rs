@@ -2,14 +2,25 @@
 //! run wall-clock, with the hot-path counters every future perf PR is
 //! judged against.
 //!
-//! The matrix pins the four shapes that stress different hot paths:
+//! The matrix pins the shapes that stress different hot paths:
 //!
-//! | row            | stresses                                          |
-//! |----------------|---------------------------------------------------|
-//! | `serial`       | the paper's closed-loop client (clock layer)      |
-//! | `pipelined-d8` | depth-8 scatter-gather (request fan-out, Rc share)|
-//! | `scaleout-s24` | 24-server ring, spilled HVCs (dim > inline cap)   |
-//! | `faulted`      | crash/restart + re-sync (fault view on every send)|
+//! | row                    | stresses                                          |
+//! |------------------------|---------------------------------------------------|
+//! | `serial`               | the paper's closed-loop client (clock layer)      |
+//! | `pipelined-d8`         | depth-8 scatter-gather (request fan-out, Rc share)|
+//! | `scaleout-s24`         | 24-server ring, spilled HVCs (dim > inline cap)   |
+//! | `scaleout-s24-shards{2,4,8}` | the threaded window/barrier engine ([`crate::sim::shard`]) |
+//! | `faulted`              | crash/restart + re-sync (fault view on every send)|
+//!
+//! The `shards{k}` rows run the threaded engine's demo mill
+//! ([`crate::sim::shard::run_demo`]) with the `scaleout-s24`
+//! communication shape (24 servers / 120 closed-loop clients / 3
+//! zones) on `k` worker threads — an *engine* benchmark of the
+//! conservative parallel event loop, not the full monitoring stack
+//! (which shares state through `Rc` and runs under the merged-order
+//! sharded engine instead; see the module doc of [`crate::sim::shard`]).
+//! They add `shards`, `barriers` and `imbalance` (max/mean − 1 of the
+//! per-shard event counts) columns; serial rows carry zeros there.
 //!
 //! Per row the JSON records `events_per_sec` (DES wall-clock throughput
 //! — the headline trajectory number), `sent_bytes_proxy` (nominal bytes
@@ -30,9 +41,20 @@ use std::time::Instant;
 use crate::client::consistency::ConsistencyCfg;
 use crate::exp::config::ExpConfig;
 use crate::exp::{runner, scenarios};
+use crate::sim::des::SchedKind;
+use crate::sim::shard::{run_demo, DemoSpec};
+use crate::sim::{Time, SEC};
 
 /// The fixed matrix, smallest row first (CI smoke runs `MATRIX[0]`).
-pub const MATRIX: [&str; 4] = ["serial", "pipelined-d8", "scaleout-s24", "faulted"];
+pub const MATRIX: [&str; 7] = [
+    "serial",
+    "pipelined-d8",
+    "scaleout-s24",
+    "scaleout-s24-shards2",
+    "scaleout-s24-shards4",
+    "scaleout-s24-shards8",
+    "faulted",
+];
 
 /// One measured matrix row.
 #[derive(Debug, Clone)]
@@ -56,6 +78,31 @@ pub struct PerfRow {
     pub candidates_seen: u64,
     pub ops_ok: u64,
     pub violations: usize,
+    /// worker threads (0 = serial single-queue engine)
+    pub shards: usize,
+    /// window barriers executed by the sharded engine
+    pub barriers: u64,
+    /// per-shard event imbalance, max/mean − 1 (0 when not sharded)
+    pub imbalance: f64,
+}
+
+/// Parse the shard count out of a `scaleout-s24-shards{k}` row name.
+pub fn sharded_row_shards(row: &str) -> Option<usize> {
+    row.strip_prefix("scaleout-s24-shards").and_then(|k| k.parse().ok())
+}
+
+/// max/mean − 1 over per-shard event counts: 0 = perfectly balanced.
+pub fn imbalance(per_shard: &[u64]) -> f64 {
+    if per_shard.is_empty() {
+        return 0.0;
+    }
+    let total: u64 = per_shard.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mean = total as f64 / per_shard.len() as f64;
+    let max = *per_shard.iter().max().unwrap() as f64;
+    max / mean - 1.0
 }
 
 /// The configuration behind a matrix row. Panics on an unknown name so a
@@ -78,6 +125,9 @@ pub fn matrix_cfg(row: &str, scale: f64, seed: u64) -> ExpConfig {
 
 /// Run one row wall-clock.
 pub fn run_row(row: &str, scale: f64, seed: u64) -> PerfRow {
+    if let Some(k) = sharded_row_shards(row) {
+        return run_sharded_row(row, k, scale, seed);
+    }
     let cfg = matrix_cfg(row, scale, seed);
     let t0 = Instant::now();
     let res = runner::run(&cfg);
@@ -96,6 +146,41 @@ pub fn run_row(row: &str, scale: f64, seed: u64) -> PerfRow {
         candidates_seen: res.candidates_seen,
         ops_ok: res.ops_ok,
         violations: res.violations_detected,
+        shards: 0,
+        barriers: res.barriers,
+        imbalance: imbalance(&res.shard_events),
+    }
+}
+
+/// Run a `scaleout-s24-shards{k}` row: the threaded engine's demo mill
+/// with the scale-out communication shape on `k` worker threads.
+fn run_sharded_row(row: &str, shards: usize, scale: f64, seed: u64) -> PerfRow {
+    let spec = DemoSpec::s24(seed);
+    // same virtual-duration scaling as the matrix scenarios, floored so
+    // tiny smoke scales still amortize thread startup over real work
+    let virt_s = (60.0 * scale).max(5.0);
+    let until = (virt_s * SEC as f64) as Time;
+    let t0 = Instant::now();
+    let res = run_demo(&spec, shards, until, SchedKind::Heap);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let events = res.stats.events;
+    PerfRow {
+        name: row.to_string(),
+        events,
+        wall_s,
+        events_per_sec: if wall_s > 0.0 { events as f64 / wall_s } else { 0.0 },
+        sent_total: res.stats.sent_total(),
+        sent_bytes_proxy: res.stats.sent_bytes_proxy(),
+        // the demo mill runs no monitors: verdict columns stay zero
+        pairs_checked: 0,
+        pairs_charged: 0,
+        window_peak: 0,
+        candidates_seen: 0,
+        ops_ok: res.ops,
+        violations: 0,
+        shards,
+        barriers: res.barriers,
+        imbalance: imbalance(&res.per_shard_events),
     }
 }
 
@@ -123,7 +208,7 @@ fn push_json_str(out: &mut String, s: &str) {
 pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenance: &str) -> String {
     let mut o = String::new();
     o.push_str("{\n");
-    o.push_str("  \"schema\": 1,\n");
+    o.push_str("  \"schema\": 2,\n");
     o.push_str("  \"bench\": \"hotpath\",\n");
     o.push_str(&format!("  \"scale\": {scale},\n"));
     o.push_str(&format!("  \"seed\": {seed},\n"));
@@ -138,7 +223,8 @@ pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenan
             ", \"events\": {}, \"wall_s\": {:.4}, \"events_per_sec\": {:.1}, \
              \"sent_total\": {}, \"sent_bytes_proxy\": {}, \"pairs_checked\": {}, \
              \"pairs_charged\": {}, \"window_peak\": {}, \"candidates_seen\": {}, \
-             \"ops_ok\": {}, \"violations\": {}}}",
+             \"ops_ok\": {}, \"violations\": {}, \"shards\": {}, \"barriers\": {}, \
+             \"imbalance\": {:.4}}}",
             r.events,
             r.wall_s,
             r.events_per_sec,
@@ -150,6 +236,9 @@ pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenan
             r.candidates_seen,
             r.ops_ok,
             r.violations,
+            r.shards,
+            r.barriers,
+            r.imbalance,
         ));
         o.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -181,6 +270,40 @@ mod tests {
     }
 
     #[test]
+    fn sharded_row_names_parse() {
+        assert_eq!(sharded_row_shards("scaleout-s24-shards2"), Some(2));
+        assert_eq!(sharded_row_shards("scaleout-s24-shards8"), Some(8));
+        assert_eq!(sharded_row_shards("scaleout-s24"), None);
+        assert_eq!(sharded_row_shards("serial"), None);
+        for row in MATRIX {
+            // every sharded matrix row must parse (a rename here must
+            // update the parser, and vice versa)
+            if row.contains("shards") {
+                assert!(sharded_row_shards(row).is_some(), "{row}");
+            }
+        }
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        assert_eq!(imbalance(&[]), 0.0);
+        assert_eq!(imbalance(&[0, 0]), 0.0);
+        assert_eq!(imbalance(&[100, 100, 100, 100]), 0.0, "balanced");
+        assert!((imbalance(&[150, 50]) - 0.5).abs() < 1e-12, "max 150 / mean 100");
+    }
+
+    #[test]
+    fn sharded_row_runs_the_threaded_demo() {
+        let row = run_row("scaleout-s24-shards2", 0.01, 7);
+        assert_eq!(row.shards, 2);
+        assert!(row.events > 0);
+        assert!(row.barriers > 0, "the window protocol ran");
+        assert!(row.ops_ok > 0, "the demo mill turned");
+        assert!(row.imbalance >= 0.0);
+        assert_eq!(row.pairs_charged, 0, "no monitors in the engine bench");
+    }
+
+    #[test]
     #[should_panic(expected = "unknown perf matrix row")]
     fn unknown_row_fails_loudly() {
         let _ = matrix_cfg("seriall", 0.05, 7);
@@ -196,13 +319,16 @@ mod tests {
         assert!(row.pairs_checked <= row.pairs_charged);
         let json = to_json(&[row], 0.01, 7, true, "unit-test");
         for key in [
-            "\"schema\": 1",
+            "\"schema\": 2",
             "\"measured\": true",
             "\"name\": \"serial\"",
             "\"events_per_sec\"",
             "\"sent_bytes_proxy\"",
             "\"pairs_charged\"",
             "\"window_peak\"",
+            "\"shards\": 0",
+            "\"barriers\": 0",
+            "\"imbalance\": 0.0000",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }

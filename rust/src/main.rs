@@ -17,6 +17,9 @@
 //! optikv adapt         — adaptive consistency vs the static pins on the
 //!                        fault-phased scenario (mode timeline + per-mode
 //!                        throughput)
+//! optikv shards        — sharded-engine smoke: merged-order runs must be
+//!                        bit-identical to serial at every shard count
+//!                        (exit 1 otherwise), plus a threaded scaling sweep
 //! ```
 //!
 //! Fault-plan DSL (windows in virtual seconds): `partition:0,1|2@10-40`
@@ -45,9 +48,10 @@ fn main() {
         Some("pipeline") => cmd_pipeline(&args),
         Some("faults") => cmd_faults(&args),
         Some("adapt") => cmd_adapt(&args),
+        Some("shards") => cmd_shards(&args),
         _ => {
             eprintln!(
-                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults|adapt> [flags]  (see module docs)"
+                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults|adapt|shards> [flags]  (see module docs)"
             );
             std::process::exit(2);
         }
@@ -288,6 +292,77 @@ fn cmd_adapt(args: &Args) {
         eprintln!("adaptive-smoke FAILED: no mode round trip");
         std::process::exit(1);
     }
+}
+
+fn cmd_shards(args: &Args) {
+    use optikv::sim::des::SchedKind;
+    use optikv::sim::shard::{run_demo, DemoSpec};
+    let scale = args.get_f64("scale", 0.05);
+    let seed = args.get_u64("seed", 42);
+
+    // -- merged-order engine: bit-identical to serial at every shard count --
+    println!("== merged-order sharded engine vs serial (scaleout, 6 servers) ==");
+    let digest = |res: &optikv::exp::runner::ExpResult| {
+        (
+            res.sim_stats.events,
+            res.sim_stats.sent,
+            res.ops_ok,
+            res.violations_detected,
+            res.app_tps.to_bits(),
+        )
+    };
+    let serial = run(&scenarios::scaleout_conjunctive(6, scale, seed));
+    let want = digest(&serial);
+    let mut t = Table::new(&["shards", "events", "ops ok", "violations", "barriers", "identical"]);
+    t.row(&[
+        "serial".into(),
+        serial.sim_stats.events.to_string(),
+        serial.ops_ok.to_string(),
+        serial.violations_detected.to_string(),
+        "-".into(),
+        "-".into(),
+    ]);
+    let mut all_ok = true;
+    for shards in [1usize, 2, 4] {
+        let res = run(&scenarios::scaleout_conjunctive(6, scale, seed).with_shards(shards));
+        let ok = digest(&res) == want;
+        all_ok &= ok;
+        t.row(&[
+            shards.to_string(),
+            res.sim_stats.events.to_string(),
+            res.ops_ok.to_string(),
+            res.violations_detected.to_string(),
+            res.barriers.to_string(),
+            if ok { "yes".into() } else { "NO".to_string() },
+        ]);
+    }
+    t.print();
+    if !all_ok {
+        eprintln!("shards-smoke FAILED: a sharded run diverged from the serial schedule");
+        std::process::exit(1);
+    }
+
+    // -- threaded engine: scaling sweep on the demo mill --------------------
+    println!("\n== threaded engine — scaleout-s24 demo mill, 5 virtual s ==");
+    let until = 5 * SEC;
+    let mut t = Table::new(&["shards", "events", "wall s", "events/s", "speedup", "barriers"]);
+    let mut base: Option<f64> = None;
+    for shards in [1usize, 2, 4, 8] {
+        let t0 = std::time::Instant::now();
+        let r = run_demo(&DemoSpec::s24(seed), shards, until, SchedKind::Heap);
+        let wall = t0.elapsed().as_secs_f64();
+        let eps = r.stats.events as f64 / wall;
+        let b = *base.get_or_insert(eps);
+        t.row(&[
+            shards.to_string(),
+            r.stats.events.to_string(),
+            format!("{wall:.2}"),
+            format!("{eps:.0}"),
+            format!("{:.2}x", eps / b),
+            r.barriers.to_string(),
+        ]);
+    }
+    t.print();
 }
 
 fn cmd_pipeline(args: &Args) {

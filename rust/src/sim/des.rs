@@ -1,15 +1,44 @@
-//! The discrete-event executor: a binary heap of timestamped events,
-//! actors dispatched one event at a time, deterministic under a seed.
+//! The discrete-event executor: timestamped events dispatched to actors
+//! one at a time, deterministic under a seed.
+//!
+//! Three engines share this file, all driving the same actors through
+//! the same [`Ctx`]:
+//!
+//! * **single-queue** ([`Sim::new`]) — the historical serial loop: one
+//!   priority queue, one global sequence counter, one network RNG
+//!   stream.
+//! * **merged-order sharded** ([`Sim::new_sharded`]) — the event set is
+//!   partitioned into per-shard queues with cross-shard sends staged in
+//!   outboxes and exchanged at conservative window barriers
+//!   (`W` = minimum cross-shard latency, see
+//!   [`crate::sim::shard::ShardPlan`]). The shards are *driven in
+//!   globally-merged `(at, seq)` order*, so every run is bit-identical
+//!   to the single-queue engine at every shard count — this engine
+//!   exists to execute (and regression-pin) the exact window/barrier/
+//!   outbox protocol the threaded engine runs concurrently.
+//! * **worker shard** ([`Sim::new_worker`]) — one shard of the threaded
+//!   engine ([`crate::sim::shard::run_threaded`]): hosts only the actors
+//!   its plan assigns to it, runs windows on command
+//!   ([`Sim::run_window`]), and trades cross-shard sends as owned wire
+//!   envelopes ([`crate::sim::shard::WireEv`]). Determinism here comes
+//!   from per-origin sequence counters and per-sender network RNG
+//!   streams, both keyed by process id — invariant under the thread
+//!   schedule *and* under the shard count.
+//!
+//! Either queue flavor ([`SchedKind`]) can back any engine: the binary
+//! heap or the calendar queue ([`crate::sim::calendar`]).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::clock::hvc::Millis;
 use crate::faults::state::{FaultHook, FaultState, Timeline};
+use crate::sim::calendar::{CalendarQueue, Keyed};
 use crate::sim::clockmodel::ClockModel;
 use crate::sim::machine::Machines;
-use crate::sim::msg::{Msg, MsgClass, N_MSG_CLASSES};
+use crate::sim::msg::{Msg, MsgClass, WireMsg, N_MSG_CLASSES};
 use crate::sim::net::Topology;
+use crate::sim::shard::{ShardPlan, WireEv};
 use crate::sim::{ProcId, Time};
 use crate::util::rng::Rng;
 
@@ -65,6 +94,23 @@ impl Ord for Ev {
     }
 }
 
+impl Keyed for Ev {
+    fn key(&self) -> (Time, u64) {
+        (self.at, self.seq)
+    }
+}
+
+/// Which scheduler structure backs an event queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedKind {
+    /// `BinaryHeap` — O(log n) push/pop, the historical default.
+    #[default]
+    Heap,
+    /// Calendar queue ([`crate::sim::calendar`]) — O(1) amortized under
+    /// the DES hold model.
+    Calendar,
+}
+
 /// Message-traffic counters.
 #[derive(Debug, Clone, Default)]
 pub struct SimStats {
@@ -112,6 +158,183 @@ impl SimStats {
             .map(|(n, b)| n * b)
             .sum()
     }
+
+    /// Deterministic merge of per-shard worker stats (the threaded
+    /// engine): traffic and event counters sum — a message is sent (and
+    /// possibly dropped) on exactly one shard, the sender's, and
+    /// dispatched on exactly one, the receiver's. `fault_transitions`
+    /// takes the max instead: every worker applies the *whole* timeline
+    /// to keep its reachability view current, so summing would count
+    /// each transition once per shard.
+    pub fn merge(&mut self, other: &SimStats) {
+        for c in 0..N_MSG_CLASSES {
+            self.sent[c] += other.sent[c];
+            self.dropped[c] += other.dropped[c];
+        }
+        self.events += other.events;
+        self.fault_dropped += other.fault_dropped;
+        self.fault_transitions = self.fault_transitions.max(other.fault_transitions);
+    }
+}
+
+/// One event queue, behind either scheduler ([`SchedKind`]).
+enum EventQueue {
+    Heap(BinaryHeap<Reverse<Ev>>),
+    Calendar(CalendarQueue<Ev>),
+}
+
+impl EventQueue {
+    fn new(kind: SchedKind) -> Self {
+        match kind {
+            SchedKind::Heap => EventQueue::Heap(BinaryHeap::new()),
+            SchedKind::Calendar => EventQueue::Calendar(CalendarQueue::new()),
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, ev: Ev) {
+        match self {
+            EventQueue::Heap(h) => h.push(Reverse(ev)),
+            EventQueue::Calendar(c) => c.push(ev),
+        }
+    }
+
+    #[inline]
+    fn peek_key(&self) -> Option<(Time, u64)> {
+        match self {
+            EventQueue::Heap(h) => h.peek().map(|Reverse(ev)| (ev.at, ev.seq)),
+            EventQueue::Calendar(c) => c.peek_key(),
+        }
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<Ev> {
+        match self {
+            EventQueue::Heap(h) => h.pop().map(|Reverse(ev)| ev),
+            EventQueue::Calendar(c) => c.pop(),
+        }
+    }
+}
+
+/// The event queues of the merged-order sharded engine: one intra-shard
+/// queue per shard plus the cross-shard outboxes exchanged at window
+/// barriers.
+struct ShardQueues {
+    shard_of: Vec<u32>,
+    queues: Vec<EventQueue>,
+    /// staged cross-shard sends, delivered into the destination queue at
+    /// the next barrier — their delivery times are `>= horizon` (the
+    /// lookahead argument), so staging them cannot change the merged
+    /// dispatch order
+    outboxes: Vec<Vec<Ev>>,
+    /// conservative lookahead `W` = minimum cross-shard one-way latency
+    lookahead: Time,
+    /// end (exclusive) of the window being processed; 0 between windows
+    horizon: Time,
+    barriers: u64,
+    shard_events: Vec<u64>,
+}
+
+impl ShardQueues {
+    fn flush_outboxes(&mut self) {
+        for k in 0..self.outboxes.len() {
+            for ev in std::mem::take(&mut self.outboxes[k]) {
+                self.queues[k].push(ev);
+            }
+        }
+    }
+
+    fn peek_key(&self) -> Option<(Time, u64)> {
+        self.queues.iter().filter_map(|q| q.peek_key()).min()
+    }
+
+    /// Pop the globally-minimal queued event, with its shard index.
+    fn pop_min(&mut self) -> Option<(usize, Ev)> {
+        let k = (0..self.queues.len())
+            .filter_map(|k| self.queues[k].peek_key().map(|key| (key, k)))
+            .min()?
+            .1;
+        Some((k, self.queues[k].pop().expect("peeked queue non-empty")))
+    }
+}
+
+enum Queues {
+    Single(EventQueue),
+    Sharded(ShardQueues),
+}
+
+impl Queues {
+    #[inline]
+    fn push(&mut self, ev: Ev, src: ProcId) {
+        match self {
+            Queues::Single(q) => q.push(ev),
+            Queues::Sharded(sq) => {
+                let sk = sq.shard_of[src.idx()] as usize;
+                let dk = sq.shard_of[ev.dst.idx()] as usize;
+                if sk != dk {
+                    debug_assert!(
+                        ev.at >= sq.horizon,
+                        "cross-shard event inside the window: lookahead violated"
+                    );
+                    sq.outboxes[dk].push(ev);
+                } else {
+                    sq.queues[dk].push(ev);
+                }
+            }
+        }
+    }
+
+    /// Timestamp of the earliest *queued* event (staged outbox events are
+    /// excluded: they are `>= horizon`, outside any window in progress,
+    /// and every barrier flushes the outboxes first).
+    #[inline]
+    fn peek_at(&self) -> Option<Time> {
+        match self {
+            Queues::Single(q) => q.peek_key().map(|(at, _)| at),
+            Queues::Sharded(sq) => sq.peek_key().map(|(at, _)| at),
+        }
+    }
+
+    #[inline]
+    fn pop_min(&mut self) -> Option<Ev> {
+        match self {
+            Queues::Single(q) => q.pop(),
+            Queues::Sharded(sq) => {
+                let (k, ev) = sq.pop_min()?;
+                sq.shard_events[k] += 1;
+                Some(ev)
+            }
+        }
+    }
+
+    /// Barrier half of the window protocol: move staged cross-shard
+    /// sends into their destination queues. No-op for the single queue.
+    fn flush(&mut self) {
+        if let Queues::Sharded(sq) = self {
+            sq.flush_outboxes();
+        }
+    }
+}
+
+/// Origin-tagged sequence layout of the threaded engine: the high bits
+/// carry the origin process, the low bits its private counter, so
+/// `(at, seq)` is a total order that no thread schedule and no shard
+/// count can perturb. 2^40 events per origin and 2^24 processes are both
+/// far beyond any run this simulator does.
+pub const ORIGIN_SEQ_SHIFT: u32 = 40;
+
+/// Worker-side state of the threaded engine: which processes this shard
+/// hosts, the per-origin sequence counters and per-sender network RNG
+/// streams that make the schedule reproducible, and the outbox of wire
+/// envelopes bound for other shards at the next barrier.
+struct ShardExec {
+    shard_of: Vec<u32>,
+    my_shard: u32,
+    origin_seq: Vec<u64>,
+    rng_net: Vec<Rng>,
+    outbox: Vec<WireEv>,
+    /// end (exclusive) of the window being processed
+    horizon: Time,
 }
 
 /// Everything the actors share; split from the actor table so an actor can
@@ -119,7 +342,7 @@ impl SimStats {
 pub struct SimCore {
     now: Time,
     seq: u64,
-    heap: BinaryHeap<Reverse<Ev>>,
+    queues: Queues,
     pub topo: Topology,
     pub clocks: ClockModel,
     pub machines: Machines,
@@ -131,6 +354,8 @@ pub struct SimCore {
     /// time-varying reachability view ([`crate::faults`]); quiet unless
     /// a fault timeline is installed and a window is active
     pub faults: FaultState,
+    /// present only on worker shards of the threaded engine
+    exec: Option<Box<ShardExec>>,
 }
 
 /// Per-dispatch context handed to actors.
@@ -178,52 +403,60 @@ impl<'a> Ctx<'a> {
     /// no active fault none of these checks consumes an RNG draw, so a
     /// run under `FaultPlan::none()` is bit-identical to the pre-fault
     /// code path.
+    ///
+    /// The network RNG is the single global stream on the serial and
+    /// merged-order engines, and the *per-sender* stream of `self_id` on
+    /// a threaded worker — same draw sites, different stream handle.
     pub fn send_after(&mut self, delay: Time, dst: ProcId, msg: Msg) {
+        let core = &mut *self.core;
+        let src = self.self_id;
         let class = msg.class() as usize;
-        self.core.stats.sent[class] += 1;
-        if !self.core.faults.quiet() {
-            if !self.core.faults.reachable(self.self_id, dst) {
-                self.core.stats.dropped[class] += 1;
-                self.core.stats.fault_dropped += 1;
+        core.stats.sent[class] += 1;
+        let rng = match &mut core.exec {
+            Some(ex) => &mut ex.rng_net[src.idx()],
+            None => &mut core.rng_net,
+        };
+        if !core.faults.quiet() {
+            if !core.faults.reachable(src, dst) {
+                core.stats.dropped[class] += 1;
+                core.stats.fault_dropped += 1;
                 return;
             }
             // bursts are per machine-pair: the link between two server
             // machines carries candidate traffic to their co-located
             // monitors, not just server↔server re-sync chunks
-            let burst = self.core.faults.burst_prob(
-                self.core.topo.machine_of[self.self_id.idx()],
-                self.core.topo.machine_of[dst.idx()],
-            );
-            if burst > 0.0 && self.core.rng_net.chance(burst) {
-                self.core.stats.dropped[class] += 1;
-                self.core.stats.fault_dropped += 1;
+            let burst = core
+                .faults
+                .burst_prob(core.topo.machine_of[src.idx()], core.topo.machine_of[dst.idx()]);
+            if burst > 0.0 && rng.chance(burst) {
+                core.stats.dropped[class] += 1;
+                core.stats.fault_dropped += 1;
                 return;
             }
         }
-        if self.core.topo.drops(self.self_id, dst, &mut self.core.rng_net) {
-            self.core.stats.dropped[class] += 1;
+        if core.topo.drops(src, dst, rng) {
+            core.stats.dropped[class] += 1;
             return;
         }
-        let mut lat = self.core.topo.latency(self.self_id, dst, &mut self.core.rng_net);
-        if !self.core.faults.quiet() {
+        let mut lat = core.topo.latency(src, dst, rng);
+        if !core.faults.quiet() {
             // a degraded NIC slows the node's *network* links only —
             // same-machine loopback is exempt, mirroring the loss model
-            let same_machine = self.core.topo.machine_of[self.self_id.idx()]
-                == self.core.topo.machine_of[dst.idx()];
-            let factor = self.core.faults.latency_factor(self.self_id, dst);
+            let same_machine = core.topo.machine_of[src.idx()] == core.topo.machine_of[dst.idx()];
+            let factor = core.faults.latency_factor(src, dst);
             if factor != 1.0 && !same_machine {
                 lat = (lat as f64 * factor) as Time;
             }
         }
-        let at = self.core.now + delay + lat;
-        self.core.push(at, dst, EvKind::Msg { from: self.self_id, msg });
+        let at = core.now + delay + lat;
+        core.push_from(at, src, dst, EvKind::Msg { from: src, msg });
     }
 
     /// Schedule a timer for this actor.
     pub fn schedule(&mut self, delay: Time, tag: u64) {
         let at = self.core.now + delay;
         let dst = self.self_id;
-        self.core.push(at, dst, EvKind::Timer { tag });
+        self.core.push_from(at, dst, dst, EvKind::Timer { tag });
     }
 
     /// Claim `svc` ns of CPU on this actor's machine (FIFO across all
@@ -249,10 +482,45 @@ impl<'a> Ctx<'a> {
 }
 
 impl SimCore {
-    fn push(&mut self, at: Time, dst: ProcId, kind: EvKind) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Reverse(Ev { at, seq, dst, kind }));
+    /// Next event sequence number for an event originated by `origin`:
+    /// the single global counter, or (on a threaded worker) the origin's
+    /// private counter tagged with its process id — identical total
+    /// order no matter which shard hosts `origin`.
+    fn next_seq(&mut self, origin: ProcId) -> u64 {
+        match &mut self.exec {
+            Some(ex) => {
+                let c = &mut ex.origin_seq[origin.idx()];
+                let seq = ((origin.0 as u64) << ORIGIN_SEQ_SHIFT) | *c;
+                *c += 1;
+                seq
+            }
+            None => {
+                let seq = self.seq;
+                self.seq += 1;
+                seq
+            }
+        }
+    }
+
+    /// Enqueue an event originated by `src` for `dst`. On a threaded
+    /// worker, a cross-shard destination diverts the event into the wire
+    /// outbox instead (timers never cross: their dst is their origin).
+    fn push_from(&mut self, at: Time, src: ProcId, dst: ProcId, kind: EvKind) {
+        let seq = self.next_seq(src);
+        if let Some(ex) = &mut self.exec {
+            if ex.shard_of[dst.idx()] != ex.my_shard {
+                debug_assert!(
+                    at >= ex.horizon,
+                    "cross-shard event inside the window: lookahead violated"
+                );
+                let EvKind::Msg { from, msg } = kind else {
+                    unreachable!("timers never cross shards")
+                };
+                ex.outbox.push(WireEv { at, seq, dst, from, msg: WireMsg::from_msg(msg) });
+                return;
+            }
+        }
+        self.queues.push(Ev { at, seq, dst, kind }, src);
     }
 }
 
@@ -279,7 +547,7 @@ impl Sim {
             core: SimCore {
                 now: 0,
                 seq: 0,
-                heap: BinaryHeap::new(),
+                queues: Queues::Single(EventQueue::new(SchedKind::Heap)),
                 topo,
                 clocks,
                 machines: Machines::new(thread_counts),
@@ -288,11 +556,75 @@ impl Sim {
                 stats: SimStats::default(),
                 eps_ms,
                 faults: FaultState::new(n),
+                exec: None,
             },
             actors: Vec::new(),
             started: false,
             timeline: Timeline::empty(),
         }
+    }
+
+    /// The merged-order sharded engine: identical seeding, RNG streams
+    /// and global `(at, seq)` dispatch order as [`Sim::new`] — results
+    /// are bit-identical at every shard count by construction — but the
+    /// run executes the full window/barrier/outbox protocol of the
+    /// conservative parallel engine and reports its telemetry
+    /// ([`Sim::barriers`], [`Sim::shard_events`]).
+    pub fn new_sharded(
+        topo: Topology,
+        thread_counts: &[usize],
+        seed: u64,
+        skew_max_ms: f64,
+        eps_ms: Millis,
+        plan: &ShardPlan,
+        sched: SchedKind,
+    ) -> Self {
+        let mut sim = Self::new(topo, thread_counts, seed, skew_max_ms, eps_ms);
+        assert_eq!(plan.shard_of.len(), sim.core.topo.n_procs(), "plan must cover every process");
+        sim.core.queues = Queues::Sharded(ShardQueues {
+            shard_of: plan.shard_of.clone(),
+            queues: (0..plan.n_shards).map(|_| EventQueue::new(sched)).collect(),
+            outboxes: vec![Vec::new(); plan.n_shards],
+            lookahead: plan.lookahead,
+            horizon: 0,
+            barriers: 0,
+            shard_events: vec![0; plan.n_shards],
+        });
+        sim
+    }
+
+    /// One worker shard of the threaded engine
+    /// ([`crate::sim::shard::run_threaded`]). The worker sees the whole
+    /// topology (latencies and reachability need every process) but
+    /// hosts only the actors registered via [`Sim::add_actor_at`].
+    /// Seeding matches [`Sim::new`] exactly for clocks and actor
+    /// streams; network randomness moves to per-*sender* streams
+    /// (`Rng::stream(seed, 0xBEEF_0000 + sender)`) so each draw sequence
+    /// is owned by exactly one shard — whichever one hosts the sender —
+    /// and the composite schedule is invariant under the shard count.
+    pub fn new_worker(
+        topo: Topology,
+        thread_counts: &[usize],
+        seed: u64,
+        skew_max_ms: f64,
+        eps_ms: Millis,
+        plan: &ShardPlan,
+        my_shard: u32,
+        sched: SchedKind,
+    ) -> Self {
+        let n = topo.n_procs();
+        assert_eq!(plan.shard_of.len(), n, "plan must cover every process");
+        let mut sim = Self::new(topo, thread_counts, seed, skew_max_ms, eps_ms);
+        sim.core.queues = Queues::Single(EventQueue::new(sched));
+        sim.core.exec = Some(Box::new(ShardExec {
+            shard_of: plan.shard_of.clone(),
+            my_shard,
+            origin_seq: vec![0; n],
+            rng_net: (0..n).map(|i| Rng::stream(seed, 0xBEEF_0000 + i as u64)).collect(),
+            outbox: Vec::new(),
+            horizon: 0,
+        }));
+        sim
     }
 
     /// Install a lowered fault schedule ([`crate::faults::lower`]). The
@@ -313,6 +645,17 @@ impl Sim {
         id
     }
 
+    /// Register an actor at an explicit process id (worker shards host a
+    /// sparse subset of the topology's processes).
+    pub fn add_actor_at(&mut self, id: ProcId, actor: Box<dyn Actor>) {
+        assert!(id.idx() < self.core.topo.n_procs(), "id within topology");
+        if self.actors.len() <= id.idx() {
+            self.actors.resize_with(self.core.topo.n_procs(), || None);
+        }
+        assert!(self.actors[id.idx()].is_none(), "actor {id:?} registered twice");
+        self.actors[id.idx()] = Some(actor);
+    }
+
     pub fn now(&self) -> Time {
         self.core.now
     }
@@ -323,6 +666,25 @@ impl Sim {
 
     pub fn machines(&self) -> &Machines {
         &self.core.machines
+    }
+
+    /// Window barriers executed by the merged-order sharded engine
+    /// (0 on the single-queue engine; the threaded engine counts
+    /// barriers in its coordinator).
+    pub fn barriers(&self) -> u64 {
+        match &self.core.queues {
+            Queues::Sharded(sq) => sq.barriers,
+            Queues::Single(_) => 0,
+        }
+    }
+
+    /// Events dispatched per shard by the merged-order sharded engine
+    /// (empty on the single-queue engine) — the imbalance telemetry.
+    pub fn shard_events(&self) -> Vec<u64> {
+        match &self.core.queues {
+            Queues::Sharded(sq) => sq.shard_events.clone(),
+            Queues::Single(_) => Vec::new(),
+        }
     }
 
     fn dispatch(&mut self, ev: Ev) {
@@ -338,12 +700,23 @@ impl Sim {
 
     /// Apply the next due fault transition and, for crash/restart,
     /// deliver the lifecycle hook to the targeted actor (the restart
-    /// hook is where a server launches its peer re-sync).
+    /// hook is where a server launches its peer re-sync). On a worker
+    /// shard the targeted actor may live elsewhere: the reachability
+    /// state still updates (every worker tracks the whole fault view),
+    /// only the hook delivery is skipped — the owning shard delivers it.
     fn apply_next_fault(&mut self) {
         let (_, change) = self.timeline.pop().expect("fault transition due");
         self.core.stats.fault_transitions += 1;
         if let Some((proc, hook)) = self.core.faults.apply(&change) {
             let idx = proc as usize;
+            let foreign = self
+                .core
+                .exec
+                .as_ref()
+                .is_some_and(|ex| ex.shard_of[idx] != ex.my_shard);
+            if foreign {
+                return;
+            }
             let mut actor =
                 self.actors[idx].take().unwrap_or_else(|| panic!("actor {idx} missing"));
             let mut ctx = Ctx { core: &mut self.core, self_id: ProcId(proc) };
@@ -353,12 +726,12 @@ impl Sim {
     }
 
     /// Is the next thing to happen a fault transition (rather than a
-    /// heap event)? Transitions win ties so a cut at time T affects
+    /// queued event)? Transitions win ties so a cut at time T affects
     /// messages sent at T.
     fn fault_due(&self) -> Option<Time> {
         let next_fault = self.timeline.peek_at()?;
-        match self.core.heap.peek() {
-            Some(Reverse(ev)) if ev.at < next_fault => None,
+        match self.core.queues.peek_at() {
+            Some(at) if at < next_fault => None,
             _ => Some(next_fault),
         }
     }
@@ -368,42 +741,87 @@ impl Sim {
             return;
         }
         self.started = true;
-        assert_eq!(
-            self.actors.len(),
-            self.core.topo.n_procs(),
-            "actor count must match topology"
-        );
+        if self.core.exec.is_some() {
+            // worker shards host a sparse actor subset
+            self.actors.resize_with(self.core.topo.n_procs(), || None);
+        } else {
+            assert_eq!(
+                self.actors.len(),
+                self.core.topo.n_procs(),
+                "actor count must match topology"
+            );
+        }
         for i in 0..self.actors.len() {
-            let mut actor = self.actors[i].take().unwrap();
+            let Some(mut actor) = self.actors[i].take() else { continue };
             let mut ctx = Ctx { core: &mut self.core, self_id: ProcId(i as u32) };
             actor.on_start(&mut ctx);
             self.actors[i] = Some(actor);
         }
     }
 
-    /// Run until virtual time `until` (events at t > until stay queued).
-    pub fn run_until(&mut self, until: Time) {
-        self.start_all();
+    /// Process every pending event and fault transition with
+    /// `at < horizon` and `at <= until`, in merged `(at, seq)` order,
+    /// fault transitions winning timestamp ties. With
+    /// `horizon = Time::MAX` this *is* the historical serial loop.
+    fn drain_window(&mut self, horizon: Time, until: Time) {
         loop {
             if let Some(at) = self.fault_due() {
-                if at > until {
+                if at >= horizon || at > until {
                     break;
                 }
                 self.core.now = at;
                 self.apply_next_fault();
                 continue;
             }
-            let next_at = match self.core.heap.peek() {
-                Some(Reverse(ev)) => ev.at,
+            let next_at = match self.core.queues.peek_at() {
+                Some(at) => at,
                 None => break,
             };
-            if next_at > until {
+            if next_at >= horizon || next_at > until {
                 break;
             }
-            let Reverse(ev) = self.core.heap.pop().unwrap();
+            let ev = self.core.queues.pop_min().expect("peeked queue non-empty");
             self.core.now = ev.at;
             self.core.stats.events += 1;
             self.dispatch(ev);
+        }
+    }
+
+    /// The conservative window loop of the merged-order sharded engine:
+    /// each barrier flushes the cross-shard outboxes, anchors the next
+    /// window at the globally-minimal pending timestamp `t`, and drains
+    /// `[t, t + W)`. Every window processes at least the anchoring item
+    /// (`W > 0`), so the loop terminates.
+    fn run_windows(&mut self, until: Time) {
+        loop {
+            self.core.queues.flush();
+            let next = match (self.core.queues.peek_at(), self.timeline.peek_at()) {
+                (Some(e), Some(f)) => e.min(f),
+                (Some(e), None) => e,
+                (None, Some(f)) => f,
+                (None, None) => break,
+            };
+            if next > until {
+                break;
+            }
+            let Queues::Sharded(sq) = &mut self.core.queues else {
+                unreachable!("run_windows drives the sharded queues")
+            };
+            let horizon = next.saturating_add(sq.lookahead);
+            sq.barriers += 1;
+            sq.horizon = horizon;
+            self.drain_window(horizon, until);
+            let Queues::Sharded(sq) = &mut self.core.queues else { unreachable!() };
+            sq.horizon = 0;
+        }
+    }
+
+    /// Run until virtual time `until` (events at t > until stay queued).
+    pub fn run_until(&mut self, until: Time) {
+        self.start_all();
+        match &self.core.queues {
+            Queues::Single(_) => self.drain_window(Time::MAX, until),
+            Queues::Sharded(_) => self.run_windows(until),
         }
         self.core.now = until;
     }
@@ -412,6 +830,7 @@ impl Sim {
     pub fn run_to_quiescence(&mut self, hard_cap: Time) {
         self.start_all();
         loop {
+            self.core.queues.flush();
             if let Some(at) = self.fault_due() {
                 if at > hard_cap {
                     break;
@@ -420,7 +839,7 @@ impl Sim {
                 self.apply_next_fault();
                 continue;
             }
-            let Some(Reverse(ev)) = self.core.heap.pop() else { break };
+            let Some(ev) = self.core.queues.pop_min() else { break };
             if ev.at > hard_cap {
                 break;
             }
@@ -428,6 +847,64 @@ impl Sim {
             self.core.stats.events += 1;
             self.dispatch(ev);
         }
+    }
+
+    // --- worker-shard protocol (driven by `crate::sim::shard`) ---
+
+    /// Threaded-engine face of start-up: deliver `on_start` to the
+    /// hosted actors. Cross-shard sends made during start-up land in the
+    /// outbox like any others.
+    pub fn prime(&mut self) {
+        self.start_all();
+    }
+
+    /// Run one conservative window: process every local event and fault
+    /// transition with `at < horizon` (clamped to `until`), staging
+    /// cross-shard sends for the next barrier. [`Sim::prime`] first.
+    pub fn run_window(&mut self, horizon: Time, until: Time) {
+        debug_assert!(self.started, "prime() before run_window()");
+        if let Some(ex) = &mut self.core.exec {
+            ex.horizon = horizon;
+        }
+        self.drain_window(horizon, until);
+    }
+
+    /// Accept a cross-shard wire envelope; the sender's shard already
+    /// assigned its `(at, seq)` key.
+    pub fn ingest(&mut self, ev: WireEv) {
+        let WireEv { at, seq, dst, from, msg } = ev;
+        debug_assert!(
+            self.core
+                .exec
+                .as_ref()
+                .is_some_and(|ex| ex.shard_of[dst.idx()] == ex.my_shard),
+            "envelope routed to the wrong shard"
+        );
+        self.core.queues.push(Ev { at, seq, dst, kind: EvKind::Msg { from, msg: msg.into_msg() } }, dst);
+    }
+
+    /// Take the staged cross-shard envelopes (the barrier exchange).
+    pub fn drain_outbox(&mut self) -> Vec<WireEv> {
+        match &mut self.core.exec {
+            Some(ex) => std::mem::take(&mut ex.outbox),
+            None => Vec::new(),
+        }
+    }
+
+    /// Earliest pending local work (queued event or fault transition) —
+    /// the coordinator anchors the next window at the minimum across
+    /// shards.
+    pub fn next_pending_at(&self) -> Option<Time> {
+        match (self.core.queues.peek_at(), self.timeline.peek_at()) {
+            (Some(e), Some(f)) => Some(e.min(f)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Threaded-engine epilogue: pin virtual time to the run end
+    /// (mirrors the tail of [`Sim::run_until`]) before extraction.
+    pub fn finish(&mut self, until: Time) {
+        self.core.now = until;
     }
 
     /// Direct (test-only) access to an actor.
@@ -484,6 +961,18 @@ mod tests {
     fn two_proc_sim(seed: u64) -> (Sim, Rc<RefCell<Vec<(Time, u64)>>>) {
         let topo = Topology::flat(2, 10.0);
         let mut sim = Sim::new(topo, &[1, 1], seed, 0.0, 0);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        sim.add_actor(Box::new(Pinger { peer: ProcId(1), remaining: 5, log: log.clone() }));
+        sim.add_actor(Box::new(Pinger { peer: ProcId(0), remaining: 0, log: log.clone() }));
+        (sim, log)
+    }
+
+    /// The same pair under the merged-order sharded engine, one pinger
+    /// per shard.
+    fn two_proc_sharded(seed: u64, sched: SchedKind) -> (Sim, Rc<RefCell<Vec<(Time, u64)>>>) {
+        let topo = Topology::flat(2, 10.0);
+        let plan = ShardPlan::build(&topo, vec![0, 1]).unwrap();
+        let mut sim = Sim::new_sharded(topo, &[1, 1], seed, 0.0, 0, &plan, sched);
         let log = Rc::new(RefCell::new(Vec::new()));
         sim.add_actor(Box::new(Pinger { peer: ProcId(1), remaining: 5, log: log.clone() }));
         sim.add_actor(Box::new(Pinger { peer: ProcId(0), remaining: 0, log: log.clone() }));
@@ -580,5 +1069,136 @@ mod tests {
         assert_eq!(*la.borrow(), *lb.borrow());
         assert_eq!(a.stats().events, b.stats().events);
         assert_eq!(b.stats().fault_dropped, 0);
+    }
+
+    #[test]
+    fn sharded_matches_serial_bit_for_bit() {
+        for sched in [SchedKind::Heap, SchedKind::Calendar] {
+            let (mut a, la) = two_proc_sim(42);
+            let (mut b, lb) = two_proc_sharded(42, sched);
+            a.run_until(SEC);
+            b.run_until(SEC);
+            assert_eq!(*la.borrow(), *lb.borrow(), "sched {sched:?}");
+            assert_eq!(a.stats().events, b.stats().events);
+            assert_eq!(a.stats().sent, b.stats().sent);
+            assert!(b.barriers() > 0, "windows actually ran");
+            assert_eq!(b.shard_events().iter().sum::<u64>(), b.stats().events);
+        }
+    }
+
+    #[test]
+    fn sharded_faulted_matches_serial() {
+        use crate::faults::state::Change;
+        let cut = || {
+            Timeline::new(vec![(
+                25 * MS,
+                Change::PartitionStart { id: 0, group_of: vec![0, 1] },
+            )])
+        };
+        let (mut a, la) = two_proc_sim(7);
+        a.install_faults(cut());
+        let (mut b, lb) = two_proc_sharded(7, SchedKind::Heap);
+        b.install_faults(cut());
+        a.run_until(10 * SEC);
+        b.run_until(10 * SEC);
+        assert_eq!(*la.borrow(), *lb.borrow());
+        assert_eq!(a.stats().fault_dropped, b.stats().fault_dropped);
+        assert_eq!(a.stats().fault_transitions, b.stats().fault_transitions);
+    }
+
+    #[test]
+    fn worker_pair_reproduces_the_exchange() {
+        // Drive the two-shard worker protocol by hand: each worker hosts
+        // one pinger; the coordinator loop below is the minimal version
+        // of `shard::run_threaded` (in-thread, no channels).
+        let mk_worker = |shard: u32, log: &Rc<RefCell<Vec<(Time, u64)>>>| {
+            let topo = Topology::flat(2, 10.0);
+            let plan = ShardPlan::build(&topo, vec![0, 1]).unwrap();
+            let mut sim =
+                Sim::new_worker(topo, &[1, 1], 9, 0.0, 0, &plan, shard, SchedKind::Heap);
+            let id = ProcId(shard);
+            let peer = ProcId(1 - shard);
+            let remaining = if shard == 0 { 5 } else { 0 };
+            sim.add_actor_at(id, Box::new(Pinger { peer, remaining, log: log.clone() }));
+            sim
+        };
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let mut w: Vec<Sim> = (0..2).map(|s| mk_worker(s, &log)).collect();
+        let plan = ShardPlan::build(&Topology::flat(2, 10.0), vec![0, 1]).unwrap();
+        let until = SEC;
+        for s in &mut w {
+            s.prime();
+        }
+        let mut pending: Vec<Vec<WireEv>> = vec![Vec::new(), Vec::new()];
+        let mut route = |pending: &mut Vec<Vec<WireEv>>, evs: Vec<WireEv>| {
+            for ev in evs {
+                pending[plan.shard_of[ev.dst.idx()] as usize].push(ev);
+            }
+        };
+        for s in &mut w {
+            let out = s.drain_outbox();
+            route(&mut pending, out);
+        }
+        loop {
+            let mut t: Option<Time> = None;
+            for s in &w {
+                t = match (t, s.next_pending_at()) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+            }
+            for p in &pending {
+                for ev in p {
+                    t = Some(t.map_or(ev.at, |a| a.min(ev.at)));
+                }
+            }
+            let Some(t) = t else { break };
+            if t > until {
+                break;
+            }
+            let horizon = t.saturating_add(plan.lookahead);
+            for (k, s) in w.iter_mut().enumerate() {
+                for ev in std::mem::take(&mut pending[k]) {
+                    s.ingest(ev);
+                }
+                s.run_window(horizon, until);
+            }
+            for s in &mut w {
+                let out = s.drain_outbox();
+                route(&mut pending, out);
+            }
+        }
+        for s in &mut w {
+            s.finish(until);
+        }
+        // the exchange completed with the serial round-trip structure
+        let log = log.borrow();
+        assert_eq!(log.len(), 5);
+        assert!(log[0].0 >= 20 * MS);
+        for pair in log.windows(2) {
+            assert!(pair[1].0 > pair[0].0);
+        }
+        let events: u64 = w.iter().map(|s| s.stats().events).sum();
+        assert_eq!(events, 10, "5 requests + 5 replies dispatched across the two shards");
+    }
+
+    #[test]
+    fn stats_merge_is_componentwise() {
+        let mut a = SimStats::default();
+        a.sent[0] = 3;
+        a.dropped[1] = 1;
+        a.events = 10;
+        a.fault_dropped = 1;
+        a.fault_transitions = 4;
+        let mut b = SimStats::default();
+        b.sent[0] = 2;
+        b.events = 7;
+        b.fault_transitions = 4;
+        a.merge(&b);
+        assert_eq!(a.sent[0], 5);
+        assert_eq!(a.dropped[1], 1);
+        assert_eq!(a.events, 17);
+        assert_eq!(a.fault_dropped, 1);
+        assert_eq!(a.fault_transitions, 4, "max, not sum: both applied the same timeline");
     }
 }

@@ -58,6 +58,21 @@ impl Machines {
         self.busy[machine]
     }
 
+    /// Merge the per-shard worker copies of the threaded engine
+    /// ([`crate::sim::shard`]). The shard co-location rule guarantees
+    /// each machine's CPU is claimed by exactly one shard, so for every
+    /// machine one copy holds all the work and the others are untouched
+    /// zeros — take the busier copy wholesale, per machine.
+    pub fn merge(&mut self, other: &Machines) {
+        assert_eq!(self.threads.len(), other.threads.len(), "same topology");
+        for m in 0..self.threads.len() {
+            if other.busy[m] > self.busy[m] {
+                self.busy[m] = other.busy[m];
+                self.threads[m].clone_from(&other.threads[m]);
+            }
+        }
+    }
+
     /// Utilization of a machine over `[0, horizon]`.
     pub fn utilization(&self, machine: usize, horizon: Time) -> f64 {
         if horizon == 0 {
@@ -105,6 +120,20 @@ mod tests {
         m.claim(0, 0, 1_000); // monitor batch on thread B
         let d = m.claim(0, 10, 100); // server request must wait
         assert_eq!(d, 1_100);
+    }
+
+    #[test]
+    fn merge_takes_each_machine_from_its_owning_shard() {
+        // two machines, each worked by a different shard's copy
+        let mut a = Machines::new(&[2, 2]);
+        let mut b = Machines::new(&[2, 2]);
+        a.claim(0, 0, 500);
+        b.claim(1, 0, 300);
+        b.claim(1, 0, 200);
+        a.merge(&b);
+        assert_eq!(a.busy_ns(0), 500);
+        assert_eq!(a.busy_ns(1), 500);
+        assert_eq!(a.earliest_start(1, 0), 200, "thread state follows the busy copy");
     }
 
     #[test]

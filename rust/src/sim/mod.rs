@@ -1,18 +1,27 @@
 //! Deterministic discrete-event simulator (DES).
 //!
-//! Single-threaded, virtual-time executor over a set of actors (servers,
-//! clients, monitors, the rollback controller). Substitutes for the
-//! paper's AWS EC2 / local-lab deployments: network latencies follow the
-//! paper's own Gamma proxy model (§VI-C), per-process physical clocks have
-//! bounded skew (the HVC ε story), and each machine has a bounded number
-//! of CPU threads shared by a server and its co-located monitor (which is
+//! A virtual-time executor over a set of actors (servers, clients,
+//! monitors, the rollback controller). Substitutes for the paper's AWS
+//! EC2 / local-lab deployments: network latencies follow the paper's own
+//! Gamma proxy model (§VI-C), per-process physical clocks have bounded
+//! skew (the HVC ε story), and each machine has a bounded number of CPU
+//! threads shared by a server and its co-located monitor (which is
 //! exactly how the paper accounts monitoring overhead).
+//!
+//! The event loop comes in serial and sharded flavors ([`des`]): the
+//! merged-order sharded engine partitions the event set but keeps the
+//! serial dispatch order (bit-identical results at any shard count),
+//! and the threaded engine ([`shard`]) runs the same conservative
+//! window/barrier protocol for real on worker threads. [`calendar`]
+//! provides the O(1)-amortized alternative to the binary-heap scheduler.
 
+pub mod calendar;
 pub mod clockmodel;
 pub mod des;
 pub mod machine;
 pub mod msg;
 pub mod net;
+pub mod shard;
 
 /// Virtual time in nanoseconds.
 pub type Time = u64;

@@ -6,11 +6,12 @@
 use std::rc::Rc;
 
 use crate::client::consistency::ConsistencyCfg;
-use crate::clock::hvc::{Hvc, Millis};
+use crate::clock::hvc::{Hvc, HvcInterval, Millis};
 use crate::detect::candidate::{Candidate, ViolationReport};
-use crate::predicate::spec::PredicateSpec;
+use crate::predicate::spec::{PredId, PredicateSpec};
+use crate::sim::{ProcId, Time};
 use crate::store::protocol::{ServerOp, ServerReply};
-use crate::store::value::{KeyId, Versioned};
+use crate::store::value::{KeyId, Value, Versioned};
 
 /// Rollback / recovery control messages (controller ↔ servers/clients).
 #[derive(Debug, Clone)]
@@ -129,3 +130,241 @@ pub enum MsgClass {
 }
 
 pub const N_MSG_CLASSES: usize = 8;
+
+// ---------------------------------------------------------------------------
+// wire envelopes: the `Send` mirror of `Msg` for cross-shard exchange
+// ---------------------------------------------------------------------------
+
+/// Take a payload out of its `Rc` without cloning when this was the last
+/// handle (the common case for a message already popped off the event
+/// queue).
+fn unwrap_rc<T: Clone>(rc: Rc<T>) -> T {
+    Rc::try_unwrap(rc).unwrap_or_else(|rc| (*rc).clone())
+}
+
+/// [`Candidate`] with the interval endpoints owned instead of
+/// `Rc`-shared, so it can cross a thread boundary.
+#[derive(Debug, Clone)]
+pub struct WireCandidate {
+    pub pred: PredId,
+    pub clause: u16,
+    pub conjunct: u16,
+    pub server: ProcId,
+    pub seq: u64,
+    pub start: Hvc,
+    pub end: Hvc,
+    pub values: Vec<(KeyId, Value)>,
+    pub truth: bool,
+    pub emitted_at: Time,
+}
+
+impl From<Candidate> for WireCandidate {
+    fn from(c: Candidate) -> Self {
+        Self {
+            pred: c.pred,
+            clause: c.clause,
+            conjunct: c.conjunct,
+            server: c.server,
+            seq: c.seq,
+            start: unwrap_rc(c.interval.start),
+            end: unwrap_rc(c.interval.end),
+            values: c.values,
+            truth: c.truth,
+            emitted_at: c.emitted_at,
+        }
+    }
+}
+
+impl From<WireCandidate> for Candidate {
+    fn from(w: WireCandidate) -> Self {
+        Self {
+            pred: w.pred,
+            clause: w.clause,
+            conjunct: w.conjunct,
+            server: w.server,
+            seq: w.seq,
+            interval: HvcInterval::new(w.start, w.end),
+            values: w.values,
+            truth: w.truth,
+            emitted_at: w.emitted_at,
+        }
+    }
+}
+
+/// [`ViolationReport`] with owned witnesses.
+#[derive(Debug, Clone)]
+pub struct WireViolation {
+    pub pred: PredId,
+    pub pred_name: String,
+    pub clause: u16,
+    pub witnesses: Vec<WireCandidate>,
+    pub t_violate_ms: Millis,
+    pub t_occurred_ms: Millis,
+    pub detected_at: Time,
+    pub monitor: ProcId,
+}
+
+impl From<ViolationReport> for WireViolation {
+    fn from(v: ViolationReport) -> Self {
+        Self {
+            pred: v.pred,
+            pred_name: v.pred_name,
+            clause: v.clause,
+            witnesses: v.witnesses.into_iter().map(WireCandidate::from).collect(),
+            t_violate_ms: v.t_violate_ms,
+            t_occurred_ms: v.t_occurred_ms,
+            detected_at: v.detected_at,
+            monitor: v.monitor,
+        }
+    }
+}
+
+impl From<WireViolation> for ViolationReport {
+    fn from(w: WireViolation) -> Self {
+        Self {
+            pred: w.pred,
+            pred_name: w.pred_name,
+            clause: w.clause,
+            witnesses: w.witnesses.into_iter().map(Candidate::from).collect(),
+            t_violate_ms: w.t_violate_ms,
+            t_occurred_ms: w.t_occurred_ms,
+            detected_at: w.detected_at,
+            monitor: w.monitor,
+        }
+    }
+}
+
+/// Owned, `Send` mirror of [`Msg`] — the payload of a cross-shard wire
+/// envelope in the threaded engine ([`crate::sim::shard::WireEv`]).
+/// Only the `Rc`-shared payloads change representation (request ops,
+/// clock snapshots, candidate intervals get deep-copied out of their
+/// `Rc`); everything else crosses as-is. The receiving shard re-wraps
+/// with [`WireMsg::into_msg`], so actors see ordinary [`Msg`] values and
+/// cannot tell a cross-shard delivery from a local one. The `Rc` fan-out
+/// sharing a quorum broadcast enjoys *within* a shard is unaffected —
+/// only envelopes that actually cross shards pay the deep copy.
+#[derive(Debug, Clone)]
+pub enum WireMsg {
+    Request { req: u64, op: ServerOp, hvc: Option<Hvc> },
+    Reply { req: u64, reply: ServerReply, hvc: Hvc },
+    Candidate(Box<WireCandidate>),
+    Violation(Box<WireViolation>),
+    Rollback(RollbackMsg),
+    RegisterPred(Box<PredicateSpec>),
+    Sync(Box<SyncMsg>),
+    Adapt(AdaptMsg),
+}
+
+impl WireMsg {
+    pub fn from_msg(msg: Msg) -> Self {
+        match msg {
+            Msg::Request { req, op, hvc } => {
+                WireMsg::Request { req, op: unwrap_rc(op), hvc: hvc.map(unwrap_rc) }
+            }
+            Msg::Reply { req, reply, hvc } => WireMsg::Reply { req, reply, hvc: unwrap_rc(hvc) },
+            Msg::Candidate(c) => WireMsg::Candidate(Box::new(WireCandidate::from(*c))),
+            Msg::Violation(v) => WireMsg::Violation(Box::new(WireViolation::from(*v))),
+            Msg::Rollback(m) => WireMsg::Rollback(m),
+            Msg::RegisterPred(p) => WireMsg::RegisterPred(p),
+            Msg::Sync(s) => WireMsg::Sync(s),
+            Msg::Adapt(a) => WireMsg::Adapt(a),
+        }
+    }
+
+    pub fn into_msg(self) -> Msg {
+        match self {
+            WireMsg::Request { req, op, hvc } => {
+                Msg::Request { req, op: Rc::new(op), hvc: hvc.map(Rc::new) }
+            }
+            WireMsg::Reply { req, reply, hvc } => Msg::Reply { req, reply, hvc: Rc::new(hvc) },
+            WireMsg::Candidate(c) => Msg::Candidate(Box::new(Candidate::from(*c))),
+            WireMsg::Violation(v) => Msg::Violation(Box::new(ViolationReport::from(*v))),
+            WireMsg::Rollback(m) => Msg::Rollback(m),
+            WireMsg::RegisterPred(p) => Msg::RegisterPred(p),
+            WireMsg::Sync(s) => Msg::Sync(s),
+            WireMsg::Adapt(a) => Msg::Adapt(a),
+        }
+    }
+
+    /// Same coarse class labels as [`Msg::class`].
+    pub fn class(&self) -> MsgClass {
+        match self {
+            WireMsg::Request { .. } => MsgClass::Request,
+            WireMsg::Reply { .. } => MsgClass::Reply,
+            WireMsg::Candidate(_) => MsgClass::Candidate,
+            WireMsg::Violation(_) => MsgClass::Violation,
+            WireMsg::Rollback(_) => MsgClass::Rollback,
+            WireMsg::RegisterPred(_) => MsgClass::Register,
+            WireMsg::Sync(_) => MsgClass::Sync,
+            WireMsg::Adapt(_) => MsgClass::Adapt,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::hvc::Hvc;
+
+    /// The whole point of the mirror: it must be `Send` (compile-time).
+    #[test]
+    fn wire_msg_is_send() {
+        fn ok<T: Send + 'static>() {}
+        ok::<WireMsg>();
+        ok::<WireCandidate>();
+        ok::<WireViolation>();
+    }
+
+    #[test]
+    fn request_reply_round_trip() {
+        let hvc = Hvc::new(1, 3, 100, 5);
+        let msg = Msg::Request {
+            req: 42,
+            op: Rc::new(ServerOp::Get(KeyId(7))),
+            hvc: Some(Rc::new(hvc.clone())),
+        };
+        let class = msg.class();
+        let back = WireMsg::from_msg(msg).into_msg();
+        assert_eq!(back.class(), class);
+        match back {
+            Msg::Request { req, op, hvc: Some(h) } => {
+                assert_eq!(req, 42);
+                assert!(matches!(*op, ServerOp::Get(KeyId(7))));
+                assert_eq!(h.v, hvc.v);
+                assert_eq!(h.owner, hvc.owner);
+            }
+            other => panic!("wrong shape: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn candidate_round_trip_preserves_interval() {
+        let start = Hvc::from_vec(2, vec![10, 20, 30]);
+        let end = Hvc::from_vec(2, vec![15, 25, 35]);
+        let cand = Candidate {
+            pred: PredId(3),
+            clause: 1,
+            conjunct: 2,
+            server: ProcId(4),
+            seq: 99,
+            interval: HvcInterval::new(start, end),
+            values: vec![(KeyId(1), Value::Int(5))],
+            truth: true,
+            emitted_at: 1_000,
+        };
+        let (s_ms, e_ms) = (cand.start_pt_ms(), cand.end_pt_ms());
+        let msg = Msg::Candidate(Box::new(cand));
+        let back = WireMsg::from_msg(msg).into_msg();
+        match back {
+            Msg::Candidate(c) => {
+                assert_eq!(c.pred, PredId(3));
+                assert_eq!(c.server, ProcId(4));
+                assert_eq!(c.start_pt_ms(), s_ms);
+                assert_eq!(c.end_pt_ms(), e_ms);
+                assert_eq!(c.values, vec![(KeyId(1), Value::Int(5))]);
+            }
+            other => panic!("wrong shape: {other:?}"),
+        }
+    }
+}
+

@@ -105,6 +105,30 @@ impl Topology {
     pub fn n_procs(&self) -> usize {
         self.region_of.len()
     }
+
+    /// Minimum deterministic one-way latency (ns) over every process
+    /// pair that a partition `split` separates — the conservative
+    /// lookahead `W` of a sharded run ([`crate::sim::shard`]): the
+    /// Gamma jitter is *additive-only* (`latency ≥ ms(base)`, see
+    /// [`Topology::latency`]), so no message between different shards
+    /// can be delivered earlier than `send time + W`. Same-machine
+    /// pairs are excluded — they use the loopback constant, and the
+    /// shard planner rejects splits that separate co-located processes.
+    /// `None` when no cross-shard pair exists (a single shard).
+    pub fn min_cross_latency(&self, split: &[u32]) -> Option<Time> {
+        assert_eq!(split.len(), self.n_procs());
+        let mut best: Option<f64> = None;
+        for i in 0..self.n_procs() {
+            for j in 0..self.n_procs() {
+                if i == j || split[i] == split[j] || self.machine_of[i] == self.machine_of[j] {
+                    continue;
+                }
+                let base = self.base_ms[self.region_of[i] as usize][self.region_of[j] as usize];
+                best = Some(best.map_or(base, |b: f64| b.min(base)));
+            }
+        }
+        best.map(ms)
+    }
 }
 
 /// Builder used by the experiment runner: lay out servers, co-located
@@ -208,6 +232,35 @@ mod tests {
         assert!(r[0][1] < 2.0);
         let l = Topology::local_lab(100.0);
         assert_eq!(l[0][2], 100.0);
+    }
+
+    #[test]
+    fn min_cross_latency_is_the_smallest_separated_base() {
+        // 4 machine-per-process procs in regions 0,0,1,1 of local_lab(50):
+        // splitting by region leaves only 50 ms links across the cut;
+        // splitting within region 0 exposes the 1 ms intra-region link
+        let mut b = TopologyBuilder::new();
+        for r in [0u8, 0, 1, 1] {
+            b.add_machine_proc(r, 2);
+        }
+        let (topo, _) = b.build(Topology::local_lab(50.0), 0.0);
+        assert_eq!(topo.min_cross_latency(&[0, 0, 1, 1]), Some(ms(50.0)));
+        assert_eq!(topo.min_cross_latency(&[0, 1, 1, 1]), Some(ms(1.0)));
+        assert_eq!(topo.min_cross_latency(&[0, 0, 0, 0]), None, "single shard: no cross pair");
+    }
+
+    #[test]
+    fn min_cross_latency_skips_colocated_pairs() {
+        // a co-located pair split across shards must not contribute the
+        // loopback constant (the planner rejects such splits anyway)
+        let mut b = TopologyBuilder::new();
+        let (_s0, m0) = b.add_machine_proc(0, 2);
+        let mon = b.add_colocated_proc(m0);
+        let _ = b.add_machine_proc(0, 2);
+        let (topo, _) = b.build(Topology::aws_regional(1), 0.0);
+        let split = vec![0, 1, 1];
+        let w = topo.min_cross_latency(&split).unwrap();
+        assert_eq!(w, ms(0.25), "real-link base, not loopback (mon={mon})");
     }
 
     #[test]

@@ -1,0 +1,637 @@
+//! Parallel sharded simulation: the conservative time-window engine
+//! that runs shards of the event loop on worker threads.
+//!
+//! # Shard ownership
+//!
+//! A [`ShardPlan`] assigns every process to exactly one shard, under one
+//! hard rule: **co-located processes (same machine) share a shard**.
+//! Loopback traffic has no latency floor (a constant far below any
+//! cross-shard lookahead) and same-machine CPU claims share a FIFO
+//! queue, so a machine is indivisible. The experiment runner derives
+//! placements from contiguous ring blocks — a server, its co-located
+//! monitor, and the keys it serves land together — and the plan
+//! validator rejects anything that splits a machine.
+//!
+//! # Window protocol
+//!
+//! With lookahead `W` = the minimum deterministic one-way latency
+//! between any two processes on *different* shards
+//! ([`Topology::min_cross_latency`]), the coordinator repeats:
+//!
+//! 1. **anchor**: `t` = the minimum pending timestamp across all shards
+//!    (queued events, staged envelopes, fault transitions);
+//! 2. **window**: every worker processes its local events in
+//!    `[t, t + W)` freely — no communication;
+//! 3. **barrier**: workers hand their outboxes (cross-shard sends as
+//!    owned [`WireEv`] envelopes) to the coordinator, which routes them
+//!    for ingestion at the next window.
+//!
+//! This is safe because the Gamma jitter of the latency model is
+//! *additive-only*: a message sent at `s ∈ [t, t+W)` to another shard is
+//! delivered at `s + latency ≥ s + W ≥ t + W` — never inside the window
+//! that produced it, so no shard can miss an incoming event it should
+//! have processed before one it already did. Slow-node fault factors
+//! only stretch latencies (factor ≥ 1), and crash/partition/burst
+//! faults *drop* messages rather than accelerate them, so the bound
+//! survives fault injection.
+//!
+//! # Determinism
+//!
+//! Two mechanisms make same-seed runs bit-identical at any shard count
+//! and under any thread schedule, with no coordination:
+//!
+//! * **per-origin sequence numbers** — an event's tiebreak key is
+//!   `(origin << ORIGIN_SEQ_SHIFT) | per-origin counter`, assigned by
+//!   whichever shard hosts the origin. The (at, seq) total order is a
+//!   function of the workload, not of the schedule.
+//! * **per-sender network RNG streams** — every latency/drop draw for
+//!   messages sent by process `p` comes from `Rng::stream(seed,
+//!   0xBEEF_0000 + p)`, owned by `p`'s shard. Actor streams and clock
+//!   skews are seeded exactly as in the serial engine.
+//!
+//! The merged-order engine ([`crate::sim::des::Sim::new_sharded`]) runs
+//! this same window/barrier/outbox protocol *single-threaded in global
+//! merged order* with the serial engine's single RNG stream and global
+//! counter — which is why `shards = k` there is bit-identical to the
+//! pre-sharding serial runner for every `k`, the regression pin the
+//! determinism suite enforces.
+//!
+//! The threaded engine requires `Send` actors (built inside their worker
+//! thread); the full OptiKV stack shares state through `Rc` side
+//! channels and runs under the merged-order engine, while this module's
+//! [`run_demo`] workload — an open KV request/reply mill with the
+//! scale-out experiment's communication shape — exercises the threaded
+//! path and carries the perf rows.
+
+use std::sync::mpsc;
+
+use crate::clock::hvc::{Hvc, Millis};
+use crate::faults::state::Timeline;
+use crate::sim::des::{Actor, Ctx, SchedKind, Sim, SimStats};
+use crate::sim::machine::Machines;
+use crate::sim::msg::{Msg, WireMsg};
+use crate::sim::net::{Topology, TopologyBuilder};
+use crate::sim::{ProcId, Time, US};
+use crate::store::protocol::{ServerOp, ServerReply};
+use crate::store::value::KeyId;
+use std::rc::Rc;
+
+/// A cross-shard event envelope: the `(at, seq)` dispatch key assigned
+/// by the sender's shard plus an owned [`WireMsg`] payload.
+#[derive(Debug)]
+pub struct WireEv {
+    pub at: Time,
+    pub seq: u64,
+    pub dst: ProcId,
+    pub from: ProcId,
+    pub msg: WireMsg,
+}
+
+/// Process → shard assignment plus the conservative lookahead derived
+/// from the topology.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub shard_of: Vec<u32>,
+    pub n_shards: usize,
+    /// window width `W` (ns); `Time::MAX` when nothing can ever cross
+    /// shards (single shard ⇒ one unbounded window)
+    pub lookahead: Time,
+}
+
+impl ShardPlan {
+    /// Validate `shard_of` against `topo` and derive the lookahead.
+    /// Rejects: length mismatch, shard ids with no process (an idle
+    /// worker means a mis-built plan), splits that separate co-located
+    /// processes, and topologies whose minimum cross-shard base latency
+    /// is zero (no lookahead ⇒ no window to run).
+    pub fn build(topo: &Topology, shard_of: Vec<u32>) -> Result<Self, String> {
+        if shard_of.len() != topo.n_procs() {
+            return Err(format!(
+                "plan covers {} processes, topology has {}",
+                shard_of.len(),
+                topo.n_procs()
+            ));
+        }
+        let n_shards = match shard_of.iter().max() {
+            Some(&m) => m as usize + 1,
+            None => return Err("empty plan".into()),
+        };
+        let mut seen = vec![false; n_shards];
+        for &s in &shard_of {
+            seen[s as usize] = true;
+        }
+        if let Some(hole) = seen.iter().position(|&b| !b) {
+            return Err(format!("shard {hole} owns no process"));
+        }
+        for i in 0..shard_of.len() {
+            for j in (i + 1)..shard_of.len() {
+                if topo.machine_of[i] == topo.machine_of[j] && shard_of[i] != shard_of[j] {
+                    return Err(format!(
+                        "processes {i} and {j} share machine {} but land on shards {} and {}",
+                        topo.machine_of[i], shard_of[i], shard_of[j]
+                    ));
+                }
+            }
+        }
+        let lookahead = if n_shards == 1 {
+            Time::MAX
+        } else {
+            match topo.min_cross_latency(&shard_of) {
+                Some(0) => return Err("zero cross-shard base latency leaves no lookahead".into()),
+                Some(w) => w,
+                // partitioned but no link can carry a message between
+                // shards (disconnected base matrix): windows never close
+                None => Time::MAX,
+            }
+        };
+        Ok(Self { shard_of, n_shards, lookahead })
+    }
+
+    /// Everything on one shard (the trivial plan).
+    pub fn single(topo: &Topology) -> Self {
+        Self { shard_of: vec![0; topo.n_procs()], n_shards: 1, lookahead: Time::MAX }
+    }
+}
+
+/// Per-worker construction parameters (everything a worker thread needs
+/// to build its [`Sim`] locally — actors are `!Send`, so each worker
+/// builds its own).
+pub struct ThreadCfg {
+    pub topo: Topology,
+    pub threads: Vec<usize>,
+    pub seed: u64,
+    pub skew_ms: f64,
+    pub eps_ms: Millis,
+    pub sched: SchedKind,
+    pub timeline: Timeline,
+}
+
+enum ToWorker {
+    Prime,
+    Window { horizon: Time, until: Time, inbound: Vec<WireEv> },
+    Finish { until: Time },
+}
+
+struct Reply {
+    next_at: Option<Time>,
+    outbound: Vec<WireEv>,
+}
+
+struct Done<R> {
+    stats: SimStats,
+    machines: Machines,
+    result: R,
+}
+
+/// Result of a threaded run: merged stats plus the per-shard extraction
+/// results, in shard order (deterministic).
+pub struct ThreadedRun<R> {
+    pub results: Vec<R>,
+    pub stats: SimStats,
+    pub machines: Machines,
+    pub per_shard_events: Vec<u64>,
+    pub barriers: u64,
+    pub lookahead: Time,
+}
+
+/// Run `plan.n_shards` worker threads to `until` under the conservative
+/// window protocol. `build` runs once inside each worker thread to
+/// register that shard's actors (via [`Sim::add_actor_at`]); `extract`
+/// runs in-thread after the run to pull results out of them.
+pub fn run_threaded<R, B, X>(
+    cfg: &ThreadCfg,
+    plan: &ShardPlan,
+    until: Time,
+    build: &B,
+    extract: &X,
+) -> ThreadedRun<R>
+where
+    R: Send,
+    B: Fn(u32, &mut Sim) + Sync,
+    X: Fn(u32, &mut Sim) -> R + Sync,
+{
+    let k = plan.n_shards;
+    std::thread::scope(|scope| {
+        let mut to_tx = Vec::with_capacity(k);
+        let mut reply_rx = Vec::with_capacity(k);
+        let mut done_rx = Vec::with_capacity(k);
+        for shard in 0..k as u32 {
+            let (ttx, trx) = mpsc::channel::<ToWorker>();
+            let (rtx, rrx) = mpsc::channel::<Reply>();
+            let (dtx, drx) = mpsc::channel::<Done<R>>();
+            to_tx.push(ttx);
+            reply_rx.push(rrx);
+            done_rx.push(drx);
+            scope.spawn(move || {
+                let mut sim = Sim::new_worker(
+                    cfg.topo.clone(),
+                    &cfg.threads,
+                    cfg.seed,
+                    cfg.skew_ms,
+                    cfg.eps_ms,
+                    plan,
+                    shard,
+                    cfg.sched,
+                );
+                sim.install_faults(cfg.timeline.clone());
+                build(shard, &mut sim);
+                while let Ok(cmd) = trx.recv() {
+                    match cmd {
+                        ToWorker::Prime => sim.prime(),
+                        ToWorker::Window { horizon, until, inbound } => {
+                            for ev in inbound {
+                                sim.ingest(ev);
+                            }
+                            sim.run_window(horizon, until);
+                        }
+                        ToWorker::Finish { until } => {
+                            sim.finish(until);
+                            let stats = sim.stats().clone();
+                            let machines = sim.machines().clone();
+                            let result = extract(shard, &mut sim);
+                            let _ = dtx.send(Done { stats, machines, result });
+                            return;
+                        }
+                    }
+                    let _ = rtx.send(Reply {
+                        next_at: sim.next_pending_at(),
+                        outbound: sim.drain_outbox(),
+                    });
+                }
+            });
+        }
+
+        // coordinator: anchor → window → barrier, until quiet or `until`
+        let route = |pending: &mut Vec<Vec<WireEv>>, out: Vec<WireEv>| {
+            for ev in out {
+                pending[plan.shard_of[ev.dst.idx()] as usize].push(ev);
+            }
+        };
+        let mut pending: Vec<Vec<WireEv>> = (0..k).map(|_| Vec::new()).collect();
+        let mut next_at: Vec<Option<Time>> = vec![None; k];
+        let mut barriers = 0u64;
+        for tx in &to_tx {
+            tx.send(ToWorker::Prime).expect("worker alive");
+        }
+        for i in 0..k {
+            let r = reply_rx[i].recv().expect("worker alive");
+            next_at[i] = r.next_at;
+            route(&mut pending, r.outbound);
+        }
+        loop {
+            let mut t: Option<Time> = None;
+            for &na in &next_at {
+                t = match (t, na) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+            }
+            for p in &pending {
+                for ev in p {
+                    t = Some(t.map_or(ev.at, |a| a.min(ev.at)));
+                }
+            }
+            let Some(t) = t else { break };
+            if t > until {
+                break;
+            }
+            barriers += 1;
+            let horizon = t.saturating_add(plan.lookahead);
+            for (i, tx) in to_tx.iter().enumerate() {
+                tx.send(ToWorker::Window { horizon, until, inbound: std::mem::take(&mut pending[i]) })
+                    .expect("worker alive");
+            }
+            for i in 0..k {
+                let r = reply_rx[i].recv().expect("worker alive");
+                next_at[i] = r.next_at;
+                route(&mut pending, r.outbound);
+            }
+        }
+        for tx in &to_tx {
+            tx.send(ToWorker::Finish { until }).expect("worker alive");
+        }
+
+        let mut results = Vec::with_capacity(k);
+        let mut stats = SimStats::default();
+        let mut machines: Option<Machines> = None;
+        let mut per_shard_events = Vec::with_capacity(k);
+        for drx in &done_rx {
+            let d = drx.recv().expect("worker finished");
+            per_shard_events.push(d.stats.events);
+            stats.merge(&d.stats);
+            match &mut machines {
+                Some(m) => m.merge(&d.machines),
+                None => machines = Some(d.machines),
+            }
+            results.push(d.result);
+        }
+        ThreadedRun {
+            results,
+            stats,
+            machines: machines.expect("k >= 1"),
+            per_shard_events,
+            barriers,
+            lookahead: plan.lookahead,
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// demo workload: a Send-actor KV mill with the scale-out comm shape
+// ---------------------------------------------------------------------------
+
+/// Request/reply server for the threaded perf rows: charges a CPU
+/// service time per request and answers with a fresh HVC snapshot
+/// (plain data only, so it is constructible inside any worker thread).
+pub struct EchoServer {
+    pub id: u16,
+    pub dim: usize,
+    pub svc: Time,
+    pub served: u64,
+}
+
+impl Actor for EchoServer {
+    fn on_msg(&mut self, ctx: &mut Ctx, from: ProcId, msg: Msg) {
+        if let Msg::Request { req, .. } = msg {
+            self.served += 1;
+            let d = ctx.cpu_delay(self.svc);
+            let hvc = Rc::new(Hvc::new(self.id, self.dim, ctx.pt_ms(), 0));
+            ctx.send_after(d, from, Msg::Reply { req, reply: ServerReply::PutAck, hvc });
+        }
+    }
+
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+/// Closed-loop client: keeps `depth` requests in flight against
+/// uniformly random servers (drawn from its own actor RNG stream, so the
+/// request schedule is shard-count-invariant).
+pub struct LoadClient {
+    pub n_servers: u64,
+    pub n_keys: u64,
+    pub depth: u32,
+    pub next_req: u64,
+    pub ops_done: u64,
+}
+
+impl LoadClient {
+    fn fire(&mut self, ctx: &mut Ctx) {
+        let srv = ProcId(ctx.rng().below(self.n_servers) as u32);
+        let key = KeyId(ctx.rng().below(self.n_keys) as u32);
+        self.next_req += 1;
+        ctx.send(srv, Msg::Request { req: self.next_req, op: Rc::new(ServerOp::Get(key)), hvc: None });
+    }
+}
+
+impl Actor for LoadClient {
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        for _ in 0..self.depth {
+            self.fire(ctx);
+        }
+    }
+
+    fn on_msg(&mut self, ctx: &mut Ctx, _from: ProcId, msg: Msg) {
+        if let Msg::Reply { .. } = msg {
+            self.ops_done += 1;
+            self.fire(ctx);
+        }
+    }
+
+    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+/// Shape of a demo run. `s24()` mirrors the `scaleout-s24` perf row's
+/// communication profile: 24 servers, 120 closed-loop clients, 3 zones
+/// of the regional latency matrix.
+#[derive(Debug, Clone)]
+pub struct DemoSpec {
+    pub servers: usize,
+    pub clients: usize,
+    pub zones: usize,
+    pub depth: u32,
+    pub svc_us: u64,
+    pub seed: u64,
+}
+
+impl DemoSpec {
+    pub fn s24(seed: u64) -> Self {
+        Self { servers: 24, clients: 120, zones: 3, depth: 4, svc_us: 20, seed }
+    }
+}
+
+pub struct DemoResult {
+    pub stats: SimStats,
+    pub ops: u64,
+    pub per_shard_events: Vec<u64>,
+    pub barriers: u64,
+    pub lookahead: Time,
+}
+
+/// Every process on its own machine (2 threads), zone-striped — so any
+/// contiguous-block plan satisfies the co-location rule trivially.
+fn demo_layout(spec: &DemoSpec) -> (Topology, Vec<usize>) {
+    let mut tb = TopologyBuilder::new();
+    for i in 0..spec.servers {
+        tb.add_machine_proc((i % spec.zones) as u8, 2);
+    }
+    for j in 0..spec.clients {
+        tb.add_machine_proc((j % spec.zones) as u8, 2);
+    }
+    tb.build(Topology::aws_regional(spec.zones), 0.0)
+}
+
+/// Contiguous-block placement: servers into `k` ring blocks, clients
+/// into matching blocks.
+pub fn demo_plan(spec: &DemoSpec, topo: &Topology, shards: usize) -> ShardPlan {
+    let k = shards.clamp(1, spec.servers);
+    let mut shard_of = vec![0u32; spec.servers + spec.clients];
+    for (i, s) in shard_of.iter_mut().take(spec.servers).enumerate() {
+        *s = (i * k / spec.servers) as u32;
+    }
+    for j in 0..spec.clients {
+        shard_of[spec.servers + j] = (j * k / spec.clients) as u32;
+    }
+    ShardPlan::build(topo, shard_of).expect("machine-per-process layout always splits cleanly")
+}
+
+/// Run the demo mill on the threaded engine with `shards` workers.
+pub fn run_demo(spec: &DemoSpec, shards: usize, until: Time, sched: SchedKind) -> DemoResult {
+    let (topo, threads) = demo_layout(spec);
+    let plan = demo_plan(spec, &topo, shards);
+    let cfg = ThreadCfg {
+        topo,
+        threads,
+        seed: spec.seed,
+        skew_ms: 0.5,
+        eps_ms: 1,
+        sched,
+        timeline: Timeline::empty(),
+    };
+    let s_n = spec.servers;
+    let run = run_threaded(
+        &cfg,
+        &plan,
+        until,
+        &|shard, sim: &mut Sim| {
+            for i in 0..s_n {
+                if plan.shard_of[i] == shard {
+                    sim.add_actor_at(
+                        ProcId(i as u32),
+                        Box::new(EchoServer {
+                            id: i as u16,
+                            dim: s_n,
+                            svc: spec.svc_us * US,
+                            served: 0,
+                        }),
+                    );
+                }
+            }
+            for j in 0..spec.clients {
+                if plan.shard_of[s_n + j] == shard {
+                    sim.add_actor_at(
+                        ProcId((s_n + j) as u32),
+                        Box::new(LoadClient {
+                            n_servers: s_n as u64,
+                            n_keys: 4_096,
+                            depth: spec.depth,
+                            next_req: 0,
+                            ops_done: 0,
+                        }),
+                    );
+                }
+            }
+        },
+        &|shard, sim: &mut Sim| {
+            let mut ops = 0u64;
+            for j in 0..spec.clients {
+                if plan.shard_of[s_n + j] == shard {
+                    let any = sim
+                        .actor_mut(ProcId((s_n + j) as u32))
+                        .as_any()
+                        .expect("LoadClient downcasts");
+                    ops += any.downcast_mut::<LoadClient>().expect("is LoadClient").ops_done;
+                }
+            }
+            ops
+        },
+    );
+    DemoResult {
+        ops: run.results.iter().sum(),
+        stats: run.stats,
+        per_shard_events: run.per_shard_events,
+        barriers: run.barriers,
+        lookahead: run.lookahead,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ms, MS, SEC};
+
+    #[test]
+    fn plan_rejects_bad_shapes() {
+        let topo = Topology::flat(4, 10.0);
+        assert!(ShardPlan::build(&topo, vec![0, 1]).is_err(), "length mismatch");
+        assert!(ShardPlan::build(&topo, vec![0, 0, 2, 2]).is_err(), "shard 1 owns nothing");
+        assert!(ShardPlan::build(&topo, vec![0, 0, 1, 1]).is_ok());
+    }
+
+    #[test]
+    fn plan_rejects_split_machines() {
+        let mut tb = TopologyBuilder::new();
+        let (_s, m) = tb.add_machine_proc(0, 2);
+        tb.add_colocated_proc(m);
+        tb.add_machine_proc(0, 2);
+        let (topo, _) = tb.build(Topology::aws_regional(1), 0.0);
+        let err = ShardPlan::build(&topo, vec![0, 1, 1]).unwrap_err();
+        assert!(err.contains("share machine"), "{err}");
+        assert!(ShardPlan::build(&topo, vec![0, 0, 1]).is_ok());
+    }
+
+    #[test]
+    fn plan_lookahead_is_min_cross_base() {
+        let topo = Topology::flat(4, 10.0);
+        let plan = ShardPlan::build(&topo, vec![0, 0, 1, 1]).unwrap();
+        assert_eq!(plan.lookahead, ms(10.0));
+        assert_eq!(plan.n_shards, 2);
+        let single = ShardPlan::single(&topo);
+        assert_eq!(single.lookahead, Time::MAX, "one unbounded window");
+    }
+
+    #[test]
+    fn wire_types_are_send() {
+        fn ok<T: Send>() {}
+        ok::<WireEv>();
+        ok::<ThreadCfg>();
+        ok::<SimStats>();
+    }
+
+    fn tiny() -> DemoSpec {
+        DemoSpec { servers: 4, clients: 8, zones: 2, depth: 2, svc_us: 20, seed: 7 }
+    }
+
+    #[test]
+    fn demo_makes_progress_and_reports_telemetry() {
+        let spec = tiny();
+        let r = run_demo(&spec, 2, SEC, SchedKind::Heap);
+        assert!(r.ops > 100, "the mill turned: {} ops", r.ops);
+        assert!(r.stats.events > 2 * r.ops, "request+reply per op");
+        assert!(r.barriers > 0);
+        assert_eq!(r.per_shard_events.len(), 2);
+        assert!(r.per_shard_events.iter().all(|&e| e > 0), "both shards worked");
+        assert_eq!(r.lookahead, ms(0.25), "same-zone cross-shard pairs exist");
+    }
+
+    #[test]
+    fn demo_same_seed_reproduces() {
+        let spec = tiny();
+        let a = run_demo(&spec, 2, SEC, SchedKind::Heap);
+        let b = run_demo(&spec, 2, SEC, SchedKind::Heap);
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.stats.events, b.stats.events);
+        assert_eq!(a.stats.sent, b.stats.sent);
+        assert_eq!(a.per_shard_events, b.per_shard_events);
+        assert_eq!(a.barriers, b.barriers);
+    }
+
+    #[test]
+    fn demo_is_invariant_under_shard_count() {
+        // the headline determinism property of the threaded engine: the
+        // simulated outcome is a function of (spec, seed) only — shard
+        // count changes wall-clock, not results
+        let spec = tiny();
+        let runs: Vec<DemoResult> =
+            [1usize, 2, 4].iter().map(|&k| run_demo(&spec, k, SEC, SchedKind::Heap)).collect();
+        for r in &runs[1..] {
+            assert_eq!(r.ops, runs[0].ops);
+            assert_eq!(r.stats.events, runs[0].stats.events);
+            assert_eq!(r.stats.sent, runs[0].stats.sent);
+            assert_eq!(r.stats.dropped, runs[0].stats.dropped);
+        }
+        assert_eq!(runs[1].per_shard_events.iter().sum::<u64>(), runs[0].stats.events);
+    }
+
+    #[test]
+    fn demo_calendar_sched_matches_heap() {
+        let spec = tiny();
+        let h = run_demo(&spec, 2, SEC, SchedKind::Heap);
+        let c = run_demo(&spec, 2, SEC, SchedKind::Calendar);
+        assert_eq!(h.ops, c.ops);
+        assert_eq!(h.stats.events, c.stats.events);
+        assert_eq!(h.stats.sent, c.stats.sent);
+        assert_eq!(h.per_shard_events, c.per_shard_events);
+    }
+
+    #[test]
+    fn single_shard_demo_has_one_window() {
+        let spec = tiny();
+        let r = run_demo(&spec, 1, 500 * MS, SchedKind::Heap);
+        assert!(r.ops > 0);
+        assert_eq!(r.barriers, 1, "W = MAX ⇒ the whole run is one window");
+    }
+}

@@ -1,0 +1,174 @@
+//! Determinism suite for the sharded event loop ([`optikv::sim::des`],
+//! [`optikv::sim::shard`]):
+//!
+//! * the merged-order sharded engine is **bit-identical to the serial
+//!   engine at every shard count** — on all three workloads and under
+//!   fault injection (the PR's regression pin: `shards = 1` reproduces
+//!   the pre-change serial schedules event-for-event);
+//! * the calendar-queue scheduler produces the same schedules as the
+//!   binary heap;
+//! * the threaded engine's runs are a function of (workload, seed)
+//!   only: same-seed reproducible and invariant under the shard count.
+
+use optikv::client::consistency::ConsistencyCfg;
+use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+use optikv::exp::runner::{run, ExpResult};
+use optikv::exp::scenarios;
+use optikv::sim::des::SchedKind;
+use optikv::sim::shard::{run_demo, DemoSpec};
+use optikv::sim::SEC;
+
+/// Everything observable a schedule change would perturb. Deliberately
+/// excludes `barriers` / `shard_events` — those are engine telemetry
+/// that legitimately varies with the shard count.
+#[derive(Debug, PartialEq)]
+struct Digest {
+    events: u64,
+    sent: Vec<u64>,
+    dropped: Vec<u64>,
+    ops_ok: u64,
+    ops_failed: u64,
+    quorum_timeouts: u64,
+    violations: usize,
+    candidates: u64,
+    app_tps_bits: u64,
+    server_tps_bits: u64,
+    app_series_bits: Vec<u64>,
+    detection_ms_bits: Vec<u64>,
+}
+
+fn digest(r: &ExpResult) -> Digest {
+    Digest {
+        events: r.sim_stats.events,
+        sent: r.sim_stats.sent.to_vec(),
+        dropped: r.sim_stats.dropped.to_vec(),
+        ops_ok: r.ops_ok,
+        ops_failed: r.ops_failed,
+        quorum_timeouts: r.quorum_timeouts,
+        violations: r.violations_detected,
+        candidates: r.candidates_seen,
+        app_tps_bits: r.app_tps.to_bits(),
+        server_tps_bits: r.server_tps.to_bits(),
+        app_series_bits: r.metrics.borrow().app_series().iter().map(|x| x.to_bits()).collect(),
+        detection_ms_bits: r.detection_latencies_ms.iter().map(|x| x.to_bits()).collect(),
+    }
+}
+
+/// Assert the full digest is bit-identical between the serial engine and
+/// the merged-order sharded engine at each of `shard_counts`, and that
+/// the sharded runs actually exercised the window protocol.
+fn assert_shards_match_serial(mk: impl Fn() -> ExpConfig, shard_counts: &[usize]) {
+    let serial = run(&mk());
+    let want = digest(&serial);
+    assert_eq!(serial.barriers, 0, "serial engine runs no windows");
+    assert!(serial.shard_events.is_empty());
+    for &k in shard_counts {
+        let res = run(&mk().with_shards(k));
+        assert_eq!(digest(&res), want, "shards = {k} diverged from serial");
+        assert!(res.barriers > 0, "shards = {k} never hit a window barrier");
+        assert_eq!(
+            res.shard_events.iter().sum::<u64>(),
+            res.sim_stats.events,
+            "every event is attributed to exactly one shard"
+        );
+        if k > 1 {
+            assert!(
+                res.shard_events.iter().filter(|&&e| e > 0).count() > 1,
+                "shards = {k}: work actually spread across shards: {:?}",
+                res.shard_events
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the regression pin, on all three workloads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conjunctive_scaleout_is_bit_identical_at_every_shard_count() {
+    // 8 servers so 8 shards get a server block each; the full stack:
+    // partitioned routing, monitors, rollback controller
+    assert_shards_match_serial(|| scenarios::scaleout_conjunctive(8, 0.05, 42), &[1, 2, 4, 8]);
+}
+
+#[test]
+fn coloring_is_bit_identical_at_every_shard_count() {
+    let mk = || {
+        let mut cfg = ExpConfig::new(
+            "shard-coloring",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Coloring { nodes: 120, edges_per_node: 3, task_size: 5, loop_forever: true },
+        );
+        cfg.n_clients = 6;
+        cfg.duration = 20 * SEC;
+        cfg.topo = TopoKind::AwsRegional { zones: 3 };
+        cfg
+    };
+    // 3 servers: k clamps to 3, and asking for 4 must behave like 3
+    assert_shards_match_serial(mk, &[1, 2, 3, 4]);
+}
+
+#[test]
+fn weather_is_bit_identical_at_every_shard_count() {
+    let mk = || {
+        let mut cfg = ExpConfig::new(
+            "shard-weather",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::Weather { grid_w: 10, grid_h: 10, put_pct: 0.5, use_locks: true },
+        );
+        cfg.n_clients = 6;
+        cfg.duration = 20 * SEC;
+        cfg.topo = TopoKind::AwsRegional { zones: 3 };
+        cfg
+    };
+    assert_shards_match_serial(mk, &[1, 2, 3]);
+}
+
+#[test]
+fn faulted_run_is_bit_identical_at_every_shard_count() {
+    // crash/restart churn + peer re-sync: fault transitions interleave
+    // with window boundaries and must not reorder anything
+    assert_shards_match_serial(|| scenarios::crash_churn_conjunctive(0.05, 42), &[1, 2]);
+}
+
+// ---------------------------------------------------------------------------
+// scheduler structure: calendar queue == binary heap
+// ---------------------------------------------------------------------------
+
+#[test]
+fn calendar_queue_reproduces_heap_schedules() {
+    let mk = || scenarios::scaleout_conjunctive(6, 0.05, 42);
+    let serial = run(&mk());
+    let heap = run(&mk().with_shards(2).with_sched(SchedKind::Heap));
+    let cal = run(&mk().with_shards(2).with_sched(SchedKind::Calendar));
+    assert_eq!(digest(&heap), digest(&serial));
+    assert_eq!(digest(&cal), digest(&serial), "calendar queue changed the schedule");
+}
+
+// ---------------------------------------------------------------------------
+// the threaded engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn threaded_demo_is_reproducible_and_shard_count_invariant() {
+    let spec = DemoSpec::s24(42);
+    let until = 2 * SEC;
+    let base = run_demo(&spec, 1, until, SchedKind::Heap);
+    assert!(base.ops > 1_000, "the mill turned: {} ops", base.ops);
+    for k in [2usize, 4] {
+        let r = run_demo(&spec, k, until, SchedKind::Heap);
+        assert_eq!(r.ops, base.ops, "shards = {k}");
+        assert_eq!(r.stats.events, base.stats.events, "shards = {k}");
+        assert_eq!(r.stats.sent, base.stats.sent, "shards = {k}");
+        assert_eq!(r.stats.dropped, base.stats.dropped, "shards = {k}");
+        assert!(r.barriers > 0);
+        assert_eq!(r.per_shard_events.iter().sum::<u64>(), r.stats.events);
+        // and the same run again, bit-for-bit
+        let again = run_demo(&spec, k, until, SchedKind::Heap);
+        assert_eq!(again.ops, r.ops);
+        assert_eq!(again.stats.events, r.stats.events);
+        assert_eq!(again.per_shard_events, r.per_shard_events);
+        assert_eq!(again.barriers, r.barriers);
+    }
+}
