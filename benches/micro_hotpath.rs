@@ -9,8 +9,9 @@
 //! * DES event throughput (events/s of the full simulator);
 //! * binary-heap vs calendar-queue scheduler under the classic hold
 //!   model (pop-min + push-successor at steady-state occupancy);
-//! * the threaded sharded engine's scaling sweep (shards ∈ {1,2,4,8}
-//!   on the `scaleout-s24` demo mill).
+//! * the threaded sharded engine's scaling sweep: the full
+//!   `scaleout-s24` production stack at shards ∈ {1,2,4,8}, digest-
+//!   checked against the serial engine.
 //!
 //! Plain `harness = false` main (criterion is unavailable offline).
 //!
@@ -303,29 +304,45 @@ fn main() {
         );
     }
 
-    // ---- threaded sharded engine: scaling sweep ---------------------------
+    // ---- threaded engine: full-stack scaling sweep ------------------------
     {
-        use optikv::sim::des::SchedKind;
-        use optikv::sim::shard::{run_demo, DemoSpec};
-        use optikv::sim::SEC;
+        use optikv::exp::{runner, scenarios};
 
-        println!("\n# threaded sharded engine — scaleout-s24 demo mill, 5 virtual s\n");
-        let mut t = Table::new(&["shards", "events", "wall s", "events/s", "speedup", "barriers", "imbal"]);
-        let mut base_eps: Option<f64> = None;
+        println!("\n# threaded engine — full-stack scaleout (24 servers, monitors on)\n");
+        let mk = || scenarios::scaleout_conjunctive(24, 0.05, 7);
+        let mut t = Table::new(&[
+            "shards", "events", "wall s", "events/s", "speedup", "barriers", "imbal",
+        ]);
+        let t0 = Instant::now();
+        let serial = runner::run(&mk());
+        let wall = t0.elapsed().as_secs_f64();
+        let base_eps = serial.sim_stats.events as f64 / wall;
+        t.row(&[
+            "serial".into(),
+            serial.sim_stats.events.to_string(),
+            format!("{wall:.2}"),
+            format!("{base_eps:.0}"),
+            "1.00x".into(),
+            "-".into(),
+            "-".into(),
+        ]);
         for shards in [1usize, 2, 4, 8] {
             let t0 = Instant::now();
-            let r = run_demo(&DemoSpec::s24(7), shards, 5 * SEC, SchedKind::Heap);
+            let r = runner::run(&mk().with_shards(shards).with_threaded());
             let wall = t0.elapsed().as_secs_f64();
-            let eps = r.stats.events as f64 / wall;
-            let base = *base_eps.get_or_insert(eps);
+            assert_eq!(
+                r.sim_stats.events, serial.sim_stats.events,
+                "threaded run diverged from serial at shards={shards}"
+            );
+            let eps = r.sim_stats.events as f64 / wall;
             t.row(&[
                 shards.to_string(),
-                r.stats.events.to_string(),
+                r.sim_stats.events.to_string(),
                 format!("{wall:.2}"),
                 format!("{eps:.0}"),
-                format!("{:.2}x", eps / base),
+                format!("{:.2}x", eps / base_eps),
                 r.barriers.to_string(),
-                format!("{:.3}", perfjson::imbalance(&r.per_shard_events)),
+                format!("{:.3}", perfjson::imbalance(&r.shard_events)),
             ]);
         }
         println!("{}", t.render());

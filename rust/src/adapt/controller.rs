@@ -1,8 +1,8 @@
 //! The `AdaptController` actor: one per deployment (co-located with the
 //! control plane in region 0), ticking once per signal window.
 //!
-//! Per tick it (1) closes a [`WinSample`] — polling op / timeout /
-//! latency deltas from the shared metrics hub and folding in the
+//! Per tick it (1) closes a [`WinSample`] — folding the op / timeout /
+//! latency digests the clients push as [`AdaptMsg::Report`]s into the
 //! violation & stall samples pushed by the rollback controller since the
 //! last tick — (2) asks the [`Policy`] for the target [`Mode`], and (3)
 //! on a change runs the epoch protocol: bump the consistency epoch,
@@ -10,12 +10,17 @@
 //! every client. Clients ack the epoch they run under; the controller
 //! re-announces to un-acked clients each tick, so an announce lost to a
 //! partition converges after heal instead of wedging the protocol.
+//!
+//! Every signal arrives as a message; the controller reads no shared
+//! state. That is what lets it live on any shard of the threaded engine
+//! while the clients it governs live on others (client reports lag one
+//! report window behind the hub they also feed, which only shifts policy
+//! decisions by a bounded, deterministic delay).
 
 use crate::adapt::policy::{Mode, Policy};
 use crate::adapt::signals::{SignalWindow, WinSample};
 use crate::adapt::AdaptCfg;
 use crate::client::consistency::ConsistencyCfg;
-use crate::metrics::throughput::{Metrics, OP_LATENCY_SAMPLE_CAP};
 use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{AdaptMsg, Msg};
 use crate::sim::{ProcId, Time, MS};
@@ -59,7 +64,6 @@ pub fn round_trips(timeline: &[ModeSpan]) -> usize {
 
 pub struct AdaptController {
     clients: Vec<ProcId>,
-    metrics: Metrics,
     policy: Box<dyn Policy>,
     eventual: ConsistencyCfg,
     sequential: ConsistencyCfg,
@@ -68,15 +72,15 @@ pub struct AdaptController {
     mode: Mode,
     /// highest epoch each client has acked (index = client idx)
     acked: Vec<u64>,
-    // metrics-hub delta cursors
-    seen_ops: u64,
-    seen_timeouts: u64,
-    seen_lat: usize,
-    /// last computed op-latency p99 — carried forward once the hub's
-    /// sample buffer saturates ([`OP_LATENCY_SAMPLE_CAP`]), so an armed
-    /// latency pair does not decay to a permanently "calm" 0
+    /// last computed op-latency p99 — carried forward through windows
+    /// whose reports held ops but no latency samples (clients cap their
+    /// report payloads), so an armed latency pair does not decay to a
+    /// permanently "calm" 0
     last_lat_p99: f64,
     // push accumulators for the currently-open window
+    cur_ops: u64,
+    cur_timeouts: u64,
+    cur_lat: Vec<Time>,
     cur_violations: u64,
     cur_detect_ms_sum: f64,
     cur_detect_n: u64,
@@ -92,19 +96,13 @@ pub struct AdaptController {
 }
 
 impl AdaptController {
-    pub fn new(
-        clients: Vec<ProcId>,
-        metrics: Metrics,
-        cfg: &AdaptCfg,
-        starting: ConsistencyCfg,
-    ) -> Self {
+    pub fn new(clients: Vec<ProcId>, cfg: &AdaptCfg, starting: ConsistencyCfg) -> Self {
         cfg.validate(starting).expect("adapt config must validate against the experiment");
         assert!(cfg.enabled(), "a static adapt config deploys no controller");
         let mode = if starting == cfg.sequential { Mode::Sequential } else { Mode::Eventual };
         let n_clients = clients.len();
         Self {
             clients,
-            metrics,
             policy: cfg.policy.build(),
             eventual: cfg.eventual,
             sequential: cfg.sequential,
@@ -112,10 +110,10 @@ impl AdaptController {
             win: SignalWindow::new(cfg.windows_kept),
             mode,
             acked: vec![0; n_clients],
-            seen_ops: 0,
-            seen_timeouts: 0,
-            seen_lat: 0,
             last_lat_p99: 0.0,
+            cur_ops: 0,
+            cur_timeouts: 0,
+            cur_lat: Vec::new(),
             cur_violations: 0,
             cur_detect_ms_sum: 0.0,
             cur_detect_n: 0,
@@ -134,30 +132,23 @@ impl AdaptController {
         }
     }
 
-    /// Close the open window: hub deltas + pushed samples.
+    /// Close the open window over the samples pushed since the last tick.
     fn close_window(&mut self) -> WinSample {
-        let (ops_total, timeouts_total, lat_p99_ms) = {
-            let m = self.metrics.borrow();
-            let ops = m.total_app_ops();
-            let timeouts = m.quorum_timeouts;
-            let new = &m.op_latencies[self.seen_lat.min(m.op_latencies.len())..];
-            let lat = if !new.is_empty() {
-                let p =
-                    Cdf::new(new.iter().map(|&l| l as f64 / MS as f64).collect()).quantile(0.99);
-                self.last_lat_p99 = p;
-                p
-            } else if m.op_latencies.len() >= OP_LATENCY_SAMPLE_CAP {
-                // sampling stopped, not the cluster: keep the estimate
-                self.last_lat_p99
-            } else {
-                0.0 // genuinely idle window
-            };
-            self.seen_lat = m.op_latencies.len();
-            (ops, timeouts, lat)
+        let lat = std::mem::take(&mut self.cur_lat);
+        let lat_p99_ms = if !lat.is_empty() {
+            let p = Cdf::new(lat.iter().map(|&l| l as f64 / MS as f64).collect()).quantile(0.99);
+            self.last_lat_p99 = p;
+            p
+        } else if self.cur_ops > 0 {
+            // ops completed but their samples were capped away: keep the
+            // estimate rather than decay to a falsely calm 0
+            self.last_lat_p99
+        } else {
+            0.0 // genuinely idle window
         };
         let sample = WinSample {
-            ops: ops_total - self.seen_ops,
-            timeouts: timeouts_total - self.seen_timeouts,
+            ops: std::mem::take(&mut self.cur_ops),
+            timeouts: std::mem::take(&mut self.cur_timeouts),
             violations: self.cur_violations,
             stall_ms: self.cur_stall_ms,
             lat_p99_ms,
@@ -165,8 +156,6 @@ impl AdaptController {
             detect_n: self.cur_detect_n,
             span_ms: self.window as f64 / MS as f64,
         };
-        self.seen_ops = ops_total;
-        self.seen_timeouts = timeouts_total;
         self.cur_violations = 0;
         self.cur_detect_ms_sum = 0.0;
         self.cur_detect_n = 0;
@@ -204,6 +193,11 @@ impl Actor for AdaptController {
                 if let Some(a) = self.acked.get_mut(client as usize) {
                     *a = (*a).max(epoch);
                 }
+            }
+            Msg::Adapt(AdaptMsg::Report { ops, timeouts, mut lat, .. }) => {
+                self.cur_ops += ops;
+                self.cur_timeouts += timeouts;
+                self.cur_lat.append(&mut lat);
             }
             Msg::Adapt(AdaptMsg::ViolationSeen { detection_ms }) => {
                 self.cur_violations += 1;

@@ -51,14 +51,43 @@ impl ColoringShared {
         graph: Rc<Graph>,
         n_clients: usize,
         interner: Rc<RefCell<Interner>>,
+        registry: &Rc<RefCell<crate::predicate::spec::Registry>>,
         oracle: MeOracleRef,
         metrics: Metrics,
         task_size: usize,
         loop_forever: bool,
     ) -> Self {
-        let owner = Rc::new(crate::apps::graph::partition_nodes(graph.n, n_clients));
+        let owner: Rc<Vec<u32>> =
+            Rc::new(crate::apps::graph::partition_nodes(graph.n, n_clients));
         let q = graph.high_degree_threshold();
-        let hi_deg = Rc::new((0..graph.n as u32).map(|v| graph.degree(v) > q).collect());
+        let hi_deg: Rc<Vec<bool>> =
+            Rc::new((0..graph.n as u32).map(|v| graph.degree(v) > q).collect());
+        // Pre-freeze the key/predicate layout in canonical order: every
+        // color key in node order, then every lockable cross-client edge
+        // (both endpoints regular) in sorted order — lock variables and
+        // the edge's mutual-exclusion predicate. Run-time interning and
+        // inference then only ever *look up*, so KeyIds and PredIds are
+        // identical on every engine and every shard.
+        {
+            let mut int = interner.borrow_mut();
+            for v in 0..graph.n as u32 {
+                color_key(&mut int, v);
+            }
+            let mut reg = registry.borrow_mut();
+            for a in 0..graph.n as u32 {
+                if hi_deg[a as usize] {
+                    continue;
+                }
+                for &b in graph.neighbors(a) {
+                    if b <= a || hi_deg[b as usize] || owner[b as usize] == owner[a as usize] {
+                        continue;
+                    }
+                    let spec =
+                        crate::predicate::infer::edge_predicate(a as u64, b as u64, &mut int);
+                    reg.add(spec);
+                }
+            }
+        }
         Self { graph, owner, interner, oracle, metrics, hi_deg, task_size, loop_forever }
     }
 }
@@ -350,7 +379,7 @@ impl ColoringApp {
         AppAction::Op(AppOp::Get(key))
     }
 
-    fn handle_abort(&mut self, now: Time) -> AppAction {
+    fn handle_abort(&mut self, now: Time, seq: u64) -> AppAction {
         // release any engaged locks, then restart the current task
         self.restart_pending = false;
         self.tasks_aborted += 1;
@@ -359,7 +388,7 @@ impl ColoringApp {
         // oracle bookkeeping: we leave every CS we were in
         for l in &self.locks {
             if l.held() {
-                self.sh.oracle.borrow_mut().exit(l.edge(), self.client);
+                self.sh.oracle.borrow_mut().exit(l.edge(), self.client, now, seq);
             }
         }
         let engaged: Vec<usize> = self
@@ -388,9 +417,10 @@ impl AppLogic for ColoringApp {
 
     fn next(&mut self, env: &mut AppEnv, last: Option<LastResult>) -> AppAction {
         let now = env.now;
+        let seq = env.seq;
         self.batch = env.pipelined();
         if self.restart_pending {
-            return self.handle_abort(now);
+            return self.handle_abort(now, seq);
         }
         let (outcome, wave) = match last {
             Some(LastResult::Op(_, o)) => (Some(o), Vec::new()),
@@ -450,7 +480,7 @@ impl AppLogic for ColoringApp {
                         self.sh
                             .oracle
                             .borrow_mut()
-                            .enter(self.locks[li].edge(), self.client, now);
+                            .enter(self.locks[li].edge(), self.client, now, seq);
                         if li + 1 < self.locks.len() {
                             self.phase = Phase::Lock { ni, li: li + 1 };
                             match self.locks[li + 1].acquire() {
@@ -491,7 +521,10 @@ impl AppLogic for ColoringApp {
                         AppAction::Op(op)
                     }
                     LockStep::Released => {
-                        self.sh.oracle.borrow_mut().exit(self.locks[li].edge(), self.client);
+                        self.sh
+                            .oracle
+                            .borrow_mut()
+                            .exit(self.locks[li].edge(), self.client, now, seq);
                         if li + 1 < self.locks.len() {
                             self.phase = Phase::Release { ni, li: li + 1 };
                             match self.locks[li + 1].release() {
@@ -578,10 +611,12 @@ mod tests {
         let mut rng = Rng::new(11);
         let graph = Rc::new(Graph::powerlaw_cluster(60, 3, 0.3, &mut rng));
         let interner = Interner::new();
+        let registry = Rc::new(RefCell::new(crate::predicate::spec::Registry::new()));
         let sh = ColoringShared::new(
             graph,
             n_clients,
             interner.clone(),
+            &registry,
             MeOracle::new(),
             MetricsHub::new(1, n_clients),
             5,
@@ -616,7 +651,7 @@ mod tests {
         pipeline: usize,
     ) -> usize {
         let mut rng = Rng::new(1);
-        let mut env = AppEnv { now: 0, client_idx: app.client, pipeline, rng: &mut rng };
+        let mut env = AppEnv { now: 0, seq: 0, client_idx: app.client, pipeline, rng: &mut rng };
         let mut last: Option<LastResult> = None;
         let mut steps = 0;
         loop {
@@ -758,7 +793,7 @@ mod tests {
         let mut store: HashMap<KeyId, Value> = HashMap::new();
         let mut rng = Rng::new(1);
         // step a few ops into the first task
-        let mut env = AppEnv { now: 0, client_idx: 0, pipeline: 1, rng: &mut rng };
+        let mut env = AppEnv { now: 0, seq: 0, client_idx: 0, pipeline: 1, rng: &mut rng };
         let mut last = None;
         // step until we are inside a regular (locked) task, past the
         // lock-free prep phase where violations are ignored

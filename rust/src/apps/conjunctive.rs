@@ -230,7 +230,7 @@ mod tests {
         let (mut gets, mut puts) = (0, 0);
         let mut last = None;
         loop {
-            let mut env = AppEnv { now: 0, client_idx: 1, pipeline: 1, rng: &mut rng };
+            let mut env = AppEnv { now: 0, seq: 0, client_idx: 1, pipeline: 1, rng: &mut rng };
             match app.next(&mut env, last.take()) {
                 AppAction::Op(op) => {
                     match &op {
@@ -254,7 +254,7 @@ mod tests {
         let mut rng = Rng::new(9);
         let mut last = None;
         loop {
-            let mut env = AppEnv { now: 0, client_idx: 0, pipeline: 1, rng: &mut rng };
+            let mut env = AppEnv { now: 0, seq: 0, client_idx: 0, pipeline: 1, rng: &mut rng };
             match app.next(&mut env, last.take()) {
                 AppAction::Op(op) => last = Some(LastResult::Op(op, OpOutcome::PutOk)),
                 AppAction::Sleep(_) => last = None,
@@ -275,7 +275,7 @@ mod tests {
         let (mut gets, mut puts, mut waves) = (0, 0, 0);
         let mut last = None;
         loop {
-            let mut env = AppEnv { now: 0, client_idx: 1, pipeline: 4, rng: &mut rng };
+            let mut env = AppEnv { now: 0, seq: 0, client_idx: 1, pipeline: 4, rng: &mut rng };
             match app.next(&mut env, last.take()) {
                 AppAction::Batch(ops) => {
                     waves += 1;
@@ -317,7 +317,7 @@ mod tests {
         let mut keys = Vec::new();
         let mut last = None;
         loop {
-            let mut env = AppEnv { now: 0, client_idx: 2, pipeline: 1, rng: &mut rng };
+            let mut env = AppEnv { now: 0, seq: 0, client_idx: 2, pipeline: 1, rng: &mut rng };
             match app.next(&mut env, last.take()) {
                 AppAction::Op(op) => {
                     keys.push(op.key());

@@ -178,11 +178,27 @@ pub struct ActualViolation {
     pub at: Time,
 }
 
-#[derive(Debug, Default)]
+/// One critical-section boundary crossing, keyed by the `(at, seq)`
+/// dispatch key of the app step that crossed it
+/// ([`crate::sim::des::Ctx::event_seq`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LockEv {
+    pub key: (Time, u64),
+    pub edge: (u32, u32),
+    pub client: u32,
+    pub enter: bool,
+}
+
+/// The oracle is an **append-only log** of enter/exit events replayed on
+/// demand ([`MeOracle::violations`]). Logging instead of tracking live
+/// occupancy is what makes the threaded engine sound: two clients of one
+/// edge can live on different shards, so no single shard sees the whole
+/// occupancy — but per-shard logs concatenate and stable-sort by the
+/// engine-invariant dispatch key ([`MeOracle::merge`]) into exactly the
+/// event order a serial run would have observed.
+#[derive(Debug, Default, Clone)]
 pub struct MeOracle {
-    /// edge → (client, since) currently inside the CS
-    inside: HashMap<(u32, u32), Vec<(u32, Time)>>,
-    pub actual_violations: Vec<ActualViolation>,
+    log: Vec<LockEv>,
     pub entries: u64,
 }
 
@@ -193,21 +209,48 @@ impl MeOracle {
         Rc::new(RefCell::new(Self::default()))
     }
 
-    pub fn enter(&mut self, edge: (u32, u32), client: u32, now: Time) {
-        let occ = self.inside.entry(edge).or_default();
-        if let Some(&(other, _)) = occ.iter().find(|(c, _)| *c != client) {
-            self.actual_violations.push(ActualViolation { edge, clients: (other, client), at: now });
-        }
-        occ.push((client, now));
+    pub fn enter(&mut self, edge: (u32, u32), client: u32, now: Time, seq: u64) {
+        self.log.push(LockEv { key: (now, seq), edge, client, enter: true });
         self.entries += 1;
     }
 
-    pub fn exit(&mut self, edge: (u32, u32), client: u32) {
-        if let Some(occ) = self.inside.get_mut(&edge) {
-            if let Some(pos) = occ.iter().position(|(c, _)| *c == client) {
+    pub fn exit(&mut self, edge: (u32, u32), client: u32, now: Time, seq: u64) {
+        self.log.push(LockEv { key: (now, seq), edge, client, enter: false });
+    }
+
+    /// Fold another shard's log into this one, restoring global dispatch
+    /// order. The sort must be stable: several exits can share one
+    /// dispatch key (an abort releases every held lock in one step) and
+    /// same-key events always come from a single shard, whose log
+    /// already holds them in execution order.
+    pub fn merge(&mut self, other: &MeOracle) {
+        self.log.extend_from_slice(&other.log);
+        self.entries += other.entries;
+        self.log.sort_by_key(|e| e.key);
+    }
+
+    /// Replay the log: every enter that finds a *different* client
+    /// already inside the edge's critical section is an actual
+    /// mutual-exclusion breach.
+    pub fn violations(&self) -> Vec<ActualViolation> {
+        let mut inside: HashMap<(u32, u32), Vec<u32>> = HashMap::new();
+        let mut out = Vec::new();
+        for ev in &self.log {
+            let occ = inside.entry(ev.edge).or_default();
+            if ev.enter {
+                if let Some(&other) = occ.iter().find(|&&c| c != ev.client) {
+                    out.push(ActualViolation {
+                        edge: ev.edge,
+                        clients: (other, ev.client),
+                        at: ev.key.0,
+                    });
+                }
+                occ.push(ev.client);
+            } else if let Some(pos) = occ.iter().position(|&c| c == ev.client) {
                 occ.remove(pos);
             }
         }
+        out
     }
 }
 
@@ -331,19 +374,40 @@ mod tests {
         let oracle = MeOracle::new();
         {
             let mut o = oracle.borrow_mut();
-            o.enter((1, 2), 10, 100);
-            o.enter((1, 2), 11, 150); // overlap!
-            o.exit((1, 2), 10);
-            o.exit((1, 2), 11);
-            o.enter((1, 2), 10, 300); // clean re-entry
-            o.exit((1, 2), 10);
+            o.enter((1, 2), 10, 100, 1);
+            o.enter((1, 2), 11, 150, 2); // overlap!
+            o.exit((1, 2), 10, 160, 3);
+            o.exit((1, 2), 11, 170, 4);
+            o.enter((1, 2), 10, 300, 5); // clean re-entry
+            o.exit((1, 2), 10, 310, 6);
             // same client re-entering is not a violation
-            o.enter((3, 4), 10, 100);
-            o.enter((3, 4), 10, 110);
+            o.enter((3, 4), 10, 100, 7);
+            o.enter((3, 4), 10, 110, 8);
         }
         let o = oracle.borrow();
-        assert_eq!(o.actual_violations.len(), 1);
-        assert_eq!(o.actual_violations[0].clients, (10, 11));
-        assert_eq!(o.actual_violations[0].at, 150);
+        let v = o.violations();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].clients, (10, 11));
+        assert_eq!(v[0].at, 150);
+        assert_eq!(o.entries, 5);
+    }
+
+    #[test]
+    fn oracle_merge_restores_global_order() {
+        // Two shards each saw half of an overlapping pair; neither log
+        // alone contains a violation the replay could miss, but the
+        // merged log must expose the overlap in dispatch order.
+        let mut a = MeOracle::default();
+        a.enter((1, 2), 10, 100, 1);
+        a.exit((1, 2), 10, 200, 9);
+        let mut b = MeOracle::default();
+        b.enter((1, 2), 11, 150, 4); // lands between a's enter and exit
+        b.exit((1, 2), 11, 260, 12);
+        a.merge(&b);
+        let v = a.violations();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].clients, (10, 11));
+        assert_eq!(v[0].at, 150);
+        assert_eq!(a.entries, 2);
     }
 }

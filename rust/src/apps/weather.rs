@@ -40,12 +40,37 @@ impl WeatherShared {
         graph: Rc<Graph>,
         n_clients: usize,
         interner: Rc<RefCell<Interner>>,
+        registry: &Rc<RefCell<crate::predicate::spec::Registry>>,
         oracle: MeOracleRef,
         put_pct: f64,
         use_locks: bool,
     ) -> Self {
         assert!(put_pct > 0.0 && put_pct <= 1.0);
-        let owner = Rc::new(crate::apps::graph::partition_nodes(graph.n, n_clients));
+        let owner: Rc<Vec<u32>> =
+            Rc::new(crate::apps::graph::partition_nodes(graph.n, n_clients));
+        // Pre-freeze the key/predicate layout in canonical order (state
+        // keys by node, then boundary-edge lock variables + predicates),
+        // so run-time interning and inference only look up and the id
+        // spaces match on every engine and shard.
+        {
+            let mut int = interner.borrow_mut();
+            for v in 0..graph.n as u32 {
+                state_key(&mut int, v);
+            }
+            if use_locks {
+                let mut reg = registry.borrow_mut();
+                for a in 0..graph.n as u32 {
+                    for &b in graph.neighbors(a) {
+                        if b <= a || owner[b as usize] == owner[a as usize] {
+                            continue;
+                        }
+                        let spec =
+                            crate::predicate::infer::edge_predicate(a as u64, b as u64, &mut int);
+                        reg.add(spec);
+                    }
+                }
+            }
+        }
         Self { graph, owner, interner, oracle, put_pct, use_locks }
     }
 
@@ -219,7 +244,7 @@ impl WeatherApp {
         self.restart_pending = false;
         for l in &self.locks {
             if l.held() {
-                self.sh.oracle.borrow_mut().exit(l.edge(), self.client);
+                self.sh.oracle.borrow_mut().exit(l.edge(), self.client, env.now, env.seq);
             }
         }
         let engaged: Vec<usize> = self
@@ -272,7 +297,7 @@ impl AppLogic for WeatherApp {
                         self.sh
                             .oracle
                             .borrow_mut()
-                            .enter(self.locks[li].edge(), self.client, env.now);
+                            .enter(self.locks[li].edge(), self.client, env.now, env.seq);
                         if li + 1 < self.locks.len() {
                             self.phase = Phase::Lock { li: li + 1 };
                             match self.locks[li + 1].acquire() {
@@ -338,7 +363,10 @@ impl AppLogic for WeatherApp {
                         AppAction::Op(op)
                     }
                     LockStep::Released => {
-                        self.sh.oracle.borrow_mut().exit(self.locks[li].edge(), self.client);
+                        self.sh
+                            .oracle
+                            .borrow_mut()
+                            .exit(self.locks[li].edge(), self.client, env.now, env.seq);
                         if li + 1 < self.locks.len() {
                             self.phase = Phase::Release { li: li + 1 };
                             match self.locks[li + 1].release() {
@@ -410,10 +438,12 @@ mod tests {
 
     fn setup(put_pct: f64, n_clients: usize, use_locks: bool) -> WeatherShared {
         let graph = Rc::new(Graph::grid(8, 8));
+        let registry = Rc::new(RefCell::new(crate::predicate::spec::Registry::new()));
         WeatherShared::new(
             graph,
             n_clients,
             Interner::new(),
+            &registry,
             MeOracle::new(),
             put_pct,
             use_locks,
@@ -446,7 +476,7 @@ mod tests {
         };
         let mut last: Option<LastResult> = None;
         loop {
-            let mut env = AppEnv { now: 0, client_idx: 0, pipeline, rng: &mut rng };
+            let mut env = AppEnv { now: 0, seq: 0, client_idx: 0, pipeline, rng: &mut rng };
             match app.next(&mut env, last.take()) {
                 AppAction::Op(op) => {
                     let out = count(&op);

@@ -40,6 +40,11 @@ const TAG_WAKE: u64 = 0;
 /// an abort cannot issue ops early (flag bit distinguishes them from the
 /// request-timeout tags, which are small integers)
 const THINK_FLAG: u64 = 1 << 63;
+/// periodic adapt-report timer ([`ClientActor::with_adapt_reports`])
+const REPORT_FLAG: u64 = 1 << 62;
+/// latency samples carried per report (bounds the report payload the way
+/// the hub bounds its own sample buffer)
+const REPORT_LAT_CAP: usize = 4096;
 
 /// One in-progress app action: the scatter-gather bookkeeping of a single
 /// `Op` (a wave of one) or a `Batch` wave.
@@ -89,6 +94,15 @@ pub struct ClientActor {
     seen_hvc: Option<Rc<Hvc>>,
     metrics: Metrics,
     done: bool,
+    /// where and how often to push [`AdaptMsg::Report`] signal digests.
+    /// `None` (the default) sends nothing — a cluster without an adapt
+    /// controller stays bit-identical to one that never heard of adaptation.
+    adapt_report: Option<(ProcId, Time)>,
+    /// signals accumulated since the last report: ok ops, quorum-round
+    /// timeouts, and op latency samples
+    rep_ops: u64,
+    rep_timeouts: u64,
+    rep_lat: Vec<Time>,
     /// stats
     pub ops_ok: u64,
     pub ops_failed: u64,
@@ -141,10 +155,24 @@ impl ClientActor {
             seen_hvc: None,
             metrics,
             done: false,
+            adapt_report: None,
+            rep_ops: 0,
+            rep_timeouts: 0,
+            rep_lat: Vec::new(),
             ops_ok: 0,
             ops_failed: 0,
             restarts: 0,
         }
+    }
+
+    /// Push an [`AdaptMsg::Report`] of locally observed signals to `to`
+    /// every `window`. Only wired up when an adapt controller is deployed:
+    /// the controller cannot read the clients' metrics hub across shard
+    /// boundaries, so the signals travel as messages like everything else.
+    pub fn with_adapt_reports(mut self, to: ProcId, window: Time) -> Self {
+        assert!(window > 0, "report window must be positive");
+        self.adapt_report = Some((to, window));
+        self
     }
 
     fn merge_seen(&mut self, h: &Rc<Hvc>) {
@@ -239,6 +267,12 @@ impl ClientActor {
                 self.ops_ok += 1;
                 let latency = ctx.now() - call.started;
                 self.metrics.borrow_mut().record_app(self.idx as usize, ctx.now(), latency);
+                if self.adapt_report.is_some() {
+                    self.rep_ops += 1;
+                    if self.rep_lat.len() < REPORT_LAT_CAP {
+                        self.rep_lat.push(latency);
+                    }
+                }
             }
         }
         let complete = {
@@ -265,10 +299,11 @@ impl ClientActor {
 
     fn advance(&mut self, ctx: &mut Ctx, last: Option<LastResult>) {
         let now = ctx.now();
+        let seq = ctx.event_seq();
         let idx = self.idx;
         let depth = self.depth;
         let action = {
-            let mut env = AppEnv { now, client_idx: idx, pipeline: depth, rng: ctx.rng() };
+            let mut env = AppEnv { now, seq, client_idx: idx, pipeline: depth, rng: ctx.rng() };
             self.app.next(&mut env, last)
         };
         match action {
@@ -330,6 +365,9 @@ impl ClientActor {
             QuorumStep::Send { round: 2, .. } | QuorumStep::Done(OpOutcome::Failed)
         ) {
             self.metrics.borrow_mut().quorum_timeouts += 1;
+            if self.adapt_report.is_some() {
+                self.rep_timeouts += 1;
+            }
         }
         self.apply_step(ctx, req, step);
     }
@@ -354,6 +392,9 @@ impl ClientActor {
 
 impl Actor for ClientActor {
     fn on_start(&mut self, ctx: &mut Ctx) {
+        if let Some((_, window)) = self.adapt_report {
+            ctx.schedule(window, REPORT_FLAG);
+        }
         self.advance(ctx, None);
     }
 
@@ -373,9 +414,11 @@ impl Actor for ClientActor {
             Msg::Rollback(RollbackMsg::Notify { t_violate_ms, .. }) => {
                 let abort = {
                     let now = ctx.now();
+                    let seq = ctx.event_seq();
                     let idx = self.idx;
                     let depth = self.depth;
-                    let mut env = AppEnv { now, client_idx: idx, pipeline: depth, rng: ctx.rng() };
+                    let mut env =
+                        AppEnv { now, seq, client_idx: idx, pipeline: depth, rng: ctx.rng() };
                     self.app.on_violation(&mut env, t_violate_ms)
                 };
                 if abort && !self.done {
@@ -400,6 +443,17 @@ impl Actor for ClientActor {
                         self.start_wave(ctx, single, ops);
                     }
                 }
+            }
+        } else if tag == REPORT_FLAG {
+            if let Some((to, window)) = self.adapt_report {
+                let report = AdaptMsg::Report {
+                    client: self.idx,
+                    ops: std::mem::take(&mut self.rep_ops),
+                    timeouts: std::mem::take(&mut self.rep_timeouts),
+                    lat: std::mem::take(&mut self.rep_lat),
+                };
+                ctx.send(to, Msg::Adapt(report));
+                ctx.schedule(window, REPORT_FLAG);
             }
         } else if tag == TAG_WAKE {
             // a wake is stale if a wave is running OR one is parked behind

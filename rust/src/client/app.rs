@@ -81,6 +81,10 @@ impl LastResult {
 pub struct AppEnv<'a> {
     pub rng: &'a mut Rng,
     pub now: Time,
+    /// sequence key of the event being dispatched ([`crate::sim::des::Ctx::event_seq`]).
+    /// `(now, seq)` totally orders app steps across engines and shard
+    /// counts; apps stamp oracle log entries with it.
+    pub seq: u64,
     pub client_idx: u32,
     /// the client's `pipeline_depth`: how many quorum calls it can keep
     /// in flight. 1 = the paper's serial closed-loop client.

@@ -367,6 +367,8 @@ impl MonitorActor {
                 t_occurred_ms: rep.t_occurred_ms,
                 detected_at: rep.detected_at,
                 monitor: self.idx,
+                at: ctx.now(),
+                seq: ctx.event_seq(),
             });
             if let Some(ctl) = self.controller {
                 ctx.send_after(delay, ctl, Msg::Violation(Box::new(rep)));
@@ -549,9 +551,13 @@ impl Actor for MonitorActor {
                     ctx.schedule(self.cfg.batch_window, TAG_BATCH);
                 }
             }
-            Msg::RegisterPred(_) => {
-                // registry is shared in-process; the message models the
-                // control-plane traffic and its latency
+            Msg::RegisterPred(spec) => {
+                // the registry is shared per shard and usually pre-seeded at
+                // layout time; `add` is idempotent by name, so registering
+                // again only matters for ad-hoc worlds built without the
+                // pre-seeding pass. The message still models the
+                // control-plane traffic and its latency.
+                self.registry.borrow_mut().add(*spec);
             }
             _ => {}
         }

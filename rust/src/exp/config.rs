@@ -108,6 +108,11 @@ pub struct ExpConfig {
     /// window/barrier protocol — results are bit-identical to 0 at
     /// every value by construction.
     pub shards: usize,
+    /// run the shard plan on worker *threads*
+    /// ([`crate::sim::shard::run_threaded`]) instead of the merged-order
+    /// single-threaded engine. Requires `shards >= 1`; results are
+    /// bit-identical to both other engines at every shard count.
+    pub threaded: bool,
     /// pending-event scheduler backing each shard's queue
     pub sched: SchedKind,
 }
@@ -140,6 +145,7 @@ impl ExpConfig {
             fault_plan: FaultPlan::none(),
             adapt: AdaptCfg::static_default(),
             shards: 0,
+            threaded: false,
             sched: SchedKind::Heap,
         }
     }
@@ -147,6 +153,14 @@ impl ExpConfig {
     /// Run on the merged-order sharded engine with `k` shards.
     pub fn with_shards(mut self, k: usize) -> Self {
         self.shards = k;
+        self
+    }
+
+    /// Run the shard plan on worker threads (one per shard). Implies a
+    /// sharded run: set the shard count with [`Self::with_shards`] first
+    /// (a threaded run with `shards = 0` is rejected by the runner).
+    pub fn with_threaded(mut self) -> Self {
+        self.threaded = true;
         self
     }
 

@@ -9,17 +9,16 @@
 //! | `serial`               | the paper's closed-loop client (clock layer)      |
 //! | `pipelined-d8`         | depth-8 scatter-gather (request fan-out, Rc share)|
 //! | `scaleout-s24`         | 24-server ring, spilled HVCs (dim > inline cap)   |
-//! | `scaleout-s24-shards{2,4,8}` | the threaded window/barrier engine ([`crate::sim::shard`]) |
+//! | `scaleout-s24-shards{2,4,8}` | the **full stack on the threaded engine** ([`crate::sim::shard::run_threaded`]) |
 //! | `faulted`              | crash/restart + re-sync (fault view on every send)|
 //!
-//! The `shards{k}` rows run the threaded engine's demo mill
-//! ([`crate::sim::shard::run_demo`]) with the `scaleout-s24`
-//! communication shape (24 servers / 120 closed-loop clients / 3
-//! zones) on `k` worker threads — an *engine* benchmark of the
-//! conservative parallel event loop, not the full monitoring stack
-//! (which shares state through `Rc` and runs under the merged-order
-//! sharded engine instead; see the module doc of [`crate::sim::shard`]).
-//! They add `shards`, `barriers` and `imbalance` (max/mean − 1 of the
+//! The `shards{k}` rows run the *same* `scaleout-s24` deployment —
+//! servers, co-located monitors, closed-loop clients, rollback
+//! controller — on `k` worker threads under the conservative window
+//! protocol, bit-identical to the serial row by the engine's
+//! determinism contract. The sweep `serial → shards8` is therefore a
+//! true scaling curve of one workload, not an engine-only proxy. They
+//! add `shards`, `barriers` and `imbalance` (max/mean − 1 of the
 //! per-shard event counts) columns; serial rows carry zeros there.
 //!
 //! Per row the JSON records `events_per_sec` (DES wall-clock throughput
@@ -41,9 +40,6 @@ use std::time::Instant;
 use crate::client::consistency::ConsistencyCfg;
 use crate::exp::config::ExpConfig;
 use crate::exp::{runner, scenarios};
-use crate::sim::des::SchedKind;
-use crate::sim::shard::{run_demo, DemoSpec};
-use crate::sim::{Time, SEC};
 
 /// The fixed matrix, smallest row first (CI smoke runs `MATRIX[0]`).
 pub const MATRIX: [&str; 7] = [
@@ -119,15 +115,19 @@ pub fn matrix_cfg(row: &str, scale: f64, seed: u64) -> ExpConfig {
         "scaleout-s24" => scenarios::scaleout_conjunctive(24, scale, seed),
         // crash/restart churn: the fault view sits on every send
         "faulted" => scenarios::crash_churn_conjunctive(scale, seed),
-        other => panic!("unknown perf matrix row {other:?} (rows: {MATRIX:?})"),
+        other => match sharded_row_shards(other) {
+            // the scale-out deployment on the threaded engine
+            Some(k) => scenarios::scaleout_conjunctive(24, scale, seed)
+                .with_shards(k)
+                .with_threaded(),
+            None => panic!("unknown perf matrix row {other:?} (rows: {MATRIX:?})"),
+        },
     }
 }
 
 /// Run one row wall-clock.
 pub fn run_row(row: &str, scale: f64, seed: u64) -> PerfRow {
-    if let Some(k) = sharded_row_shards(row) {
-        return run_sharded_row(row, k, scale, seed);
-    }
+    let shards = sharded_row_shards(row).unwrap_or(0);
     let cfg = matrix_cfg(row, scale, seed);
     let t0 = Instant::now();
     let res = runner::run(&cfg);
@@ -146,41 +146,9 @@ pub fn run_row(row: &str, scale: f64, seed: u64) -> PerfRow {
         candidates_seen: res.candidates_seen,
         ops_ok: res.ops_ok,
         violations: res.violations_detected,
-        shards: 0,
-        barriers: res.barriers,
-        imbalance: imbalance(&res.shard_events),
-    }
-}
-
-/// Run a `scaleout-s24-shards{k}` row: the threaded engine's demo mill
-/// with the scale-out communication shape on `k` worker threads.
-fn run_sharded_row(row: &str, shards: usize, scale: f64, seed: u64) -> PerfRow {
-    let spec = DemoSpec::s24(seed);
-    // same virtual-duration scaling as the matrix scenarios, floored so
-    // tiny smoke scales still amortize thread startup over real work
-    let virt_s = (60.0 * scale).max(5.0);
-    let until = (virt_s * SEC as f64) as Time;
-    let t0 = Instant::now();
-    let res = run_demo(&spec, shards, until, SchedKind::Heap);
-    let wall_s = t0.elapsed().as_secs_f64();
-    let events = res.stats.events;
-    PerfRow {
-        name: row.to_string(),
-        events,
-        wall_s,
-        events_per_sec: if wall_s > 0.0 { events as f64 / wall_s } else { 0.0 },
-        sent_total: res.stats.sent_total(),
-        sent_bytes_proxy: res.stats.sent_bytes_proxy(),
-        // the demo mill runs no monitors: verdict columns stay zero
-        pairs_checked: 0,
-        pairs_charged: 0,
-        window_peak: 0,
-        candidates_seen: 0,
-        ops_ok: res.ops,
-        violations: 0,
         shards,
         barriers: res.barriers,
-        imbalance: imbalance(&res.per_shard_events),
+        imbalance: imbalance(&res.shard_events),
     }
 }
 
@@ -208,7 +176,7 @@ fn push_json_str(out: &mut String, s: &str) {
 pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenance: &str) -> String {
     let mut o = String::new();
     o.push_str("{\n");
-    o.push_str("  \"schema\": 2,\n");
+    o.push_str("  \"schema\": 3,\n");
     o.push_str("  \"bench\": \"hotpath\",\n");
     o.push_str(&format!("  \"scale\": {scale},\n"));
     o.push_str(&format!("  \"seed\": {seed},\n"));
@@ -267,6 +235,11 @@ mod tests {
         assert_eq!(scaled.n_servers(), 24, "spills past HVC_INLINE_CAP");
         let faulted = matrix_cfg("faulted", 0.05, 7);
         assert!(!faulted.fault_plan.is_none());
+        let sharded = matrix_cfg("scaleout-s24-shards4", 0.05, 7);
+        assert_eq!(sharded.n_servers(), 24, "same deployment as the serial scale-out row");
+        assert_eq!(sharded.shards, 4);
+        assert!(sharded.threaded, "shards rows run the threaded engine");
+        assert!(sharded.monitors, "the full stack, not an engine-only mill");
     }
 
     #[test]
@@ -293,14 +266,27 @@ mod tests {
     }
 
     #[test]
-    fn sharded_row_runs_the_threaded_demo() {
+    fn sharded_row_runs_the_full_stack_threaded() {
         let row = run_row("scaleout-s24-shards2", 0.01, 7);
         assert_eq!(row.shards, 2);
         assert!(row.events > 0);
         assert!(row.barriers > 0, "the window protocol ran");
-        assert!(row.ops_ok > 0, "the demo mill turned");
+        assert!(row.ops_ok > 0, "clients made progress");
         assert!(row.imbalance >= 0.0);
-        assert_eq!(row.pairs_charged, 0, "no monitors in the engine bench");
+        assert!(row.pairs_charged > 0, "monitors run on the threaded engine too");
+        assert!(row.candidates_seen > 0, "detection is part of the measured stack");
+    }
+
+    #[test]
+    fn sharded_row_matches_its_serial_twin() {
+        // the virtual-time behavior of a shards row must equal the
+        // serial scale-out row — the sweep varies only the engine
+        let serial = run_row("scaleout-s24", 0.01, 7);
+        let sharded = run_row("scaleout-s24-shards2", 0.01, 7);
+        assert_eq!(serial.events, sharded.events);
+        assert_eq!(serial.ops_ok, sharded.ops_ok);
+        assert_eq!(serial.violations, sharded.violations);
+        assert_eq!(serial.sent_total, sharded.sent_total);
     }
 
     #[test]
@@ -319,7 +305,7 @@ mod tests {
         assert!(row.pairs_checked <= row.pairs_charged);
         let json = to_json(&[row], 0.01, 7, true, "unit-test");
         for key in [
-            "\"schema\": 2",
+            "\"schema\": 3",
             "\"measured\": true",
             "\"name\": \"serial\"",
             "\"events_per_sec\"",

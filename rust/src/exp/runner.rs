@@ -2,6 +2,18 @@
 //! deployment — servers (with co-located monitors sharing the machine's
 //! CPU threads, as deployed in the paper), clients, and the rollback
 //! controller — runs it, and extracts the measurements.
+//!
+//! Three engines, one world. The same [`build_world`] constructor
+//! assembles the deployment for the single-queue engine, the
+//! merged-order sharded engine, and the threaded engine
+//! ([`crate::sim::shard::run_threaded`]). On a worker shard the
+//! constructor builds the *entire* shared state (interner, registry,
+//! ring, graphs — all deterministic from the config) and then registers
+//! only the actors the shard hosts; per-shard telemetry is pulled out as
+//! a [`Harvest`] and merged in shard order, which reproduces the
+//! single-queue extraction bit-for-bit (every metric cell is written by
+//! exactly one shard; logs carry `(at, seq)` stamps and merge by stable
+//! sort on that engine-invariant dispatch key).
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -23,8 +35,8 @@ use crate::rollback::recovery::ControllerActor;
 use crate::runtime::accel::{Accel, NativeAccel};
 use crate::sim::des::{Sim, SimStats};
 use crate::sim::net::{Topology, TopologyBuilder};
-use crate::sim::shard::ShardPlan;
-use crate::sim::ProcId;
+use crate::sim::shard::{run_threaded, ShardPlan, ThreadCfg};
+use crate::sim::{ProcId, Time};
 use crate::store::ring::Router;
 use crate::store::server::ServerActor;
 use crate::store::value::Interner;
@@ -70,7 +82,8 @@ pub struct ExpResult {
     pub ops_failed: u64,
     pub restarts: u64,
     /// quorum rounds that expired client-side (serial-round fallbacks +
-    /// timeout failures) — the liveness signal the adapt controller polls
+    /// timeout failures) — the liveness signal the adapt controller
+    /// consumes via client reports
     pub quorum_timeouts: u64,
     /// controller stats
     pub recoveries: u64,
@@ -85,11 +98,17 @@ pub struct ExpResult {
     pub mode_timeline: Vec<ModeSpan>,
     pub mode_switches: u64,
     pub per_mode_tps: Vec<(String, f64)>,
-    /// sharded-engine telemetry ([`crate::sim::des::Sim::new_sharded`]):
-    /// window barriers executed and events dispatched per shard (0 /
-    /// empty on the legacy single-queue engine)
+    /// sharded-engine telemetry ([`crate::sim::des::Sim::new_sharded`],
+    /// [`crate::sim::shard::run_threaded`]): window barriers executed and
+    /// events dispatched per shard (0 / empty on the single-queue engine)
     pub barriers: u64,
     pub shard_events: Vec<u64>,
+    /// conservative lookahead window `W` chosen by [`ShardPlan::build`]
+    /// (0 on the single-queue engine)
+    pub lookahead: Time,
+    /// actors hosted per shard under the plan (empty on the single-queue
+    /// engine)
+    pub shard_actors: Vec<usize>,
 }
 
 /// Ring-block shard placement for the runner's actor layout
@@ -111,46 +130,97 @@ fn shard_plan(topo: &Topology, s: usize, c: usize, shards: usize) -> ShardPlan {
     ShardPlan::build(topo, shard_of).expect("runner layout always yields a valid plan")
 }
 
-/// Run one experiment to completion.
-pub fn run(cfg: &ExpConfig) -> ExpResult {
-    let s = cfg.n_servers();
-    let c = cfg.n_clients;
+/// Actors hosted per shard — every topology process carries exactly one
+/// actor in the runner's layout, so this is a straight census of the
+/// plan's `shard_of` table.
+fn actor_counts(plan: &ShardPlan) -> Vec<usize> {
+    let mut counts = vec![0usize; plan.n_shards];
+    for &sh in &plan.shard_of {
+        counts[sh as usize] += 1;
+    }
+    counts
+}
+
+/// The actor id layout: servers | monitors | clients | controller
+/// [| adapt controller — only when an active policy deploys one, so
+/// static-policy runs keep the exact pre-adapt layout].
+struct Layout {
+    s: usize,
+    c: usize,
+    server_ids: Vec<ProcId>,
+    monitor_ids: Vec<ProcId>,
+    client_ids: Vec<ProcId>,
+    controller_id: ProcId,
+    adapt_id: Option<ProcId>,
+}
+
+impl Layout {
+    fn new(cfg: &ExpConfig) -> Self {
+        let s = cfg.n_servers();
+        let c = cfg.n_clients;
+        Self {
+            s,
+            c,
+            server_ids: (0..s as u32).map(ProcId).collect(),
+            monitor_ids: (s as u32..2 * s as u32).map(ProcId).collect(),
+            client_ids: (2 * s as u32..(2 * s + c) as u32).map(ProcId).collect(),
+            controller_id: ProcId((2 * s + c) as u32),
+            adapt_id: cfg.adapt.enabled().then(|| ProcId((2 * s + c + 1) as u32)),
+        }
+    }
+}
+
+/// Build the topology the layout maps onto (one machine per server with
+/// a co-located monitor process, one per client, control plane in
+/// region 0).
+fn build_topology(cfg: &ExpConfig, lay: &Layout) -> (Topology, Vec<usize>) {
     let n_regions = cfg.n_regions() as u8;
-
-    // ---- actor id layout: servers | monitors | clients | controller
-    //      [| adapt controller — only when an active policy deploys one,
-    //      so static-policy runs keep the exact pre-adapt layout] ----
-    let server_ids: Vec<ProcId> = (0..s as u32).map(ProcId).collect();
-    let monitor_ids: Vec<ProcId> = (s as u32..2 * s as u32).map(ProcId).collect();
-    let client_ids: Vec<ProcId> = (2 * s as u32..(2 * s + c) as u32).map(ProcId).collect();
-    let controller_id = ProcId((2 * s + c) as u32);
-    let adapt_id = cfg.adapt.enabled().then(|| ProcId((2 * s + c + 1) as u32));
-
-    // ---- topology ----
     let mut tb = TopologyBuilder::new();
     let mut server_machines = Vec::new();
-    for i in 0..s {
+    for i in 0..lay.s {
         let (_, m) = tb.add_machine_proc(i as u8 % n_regions, cfg.server_threads);
         server_machines.push(m);
     }
-    for i in 0..s {
+    for i in 0..lay.s {
         // monitor co-located with server i (shares CPU threads)
         tb.add_colocated_proc(server_machines[i]);
     }
-    for i in 0..c {
+    for i in 0..lay.c {
         tb.add_machine_proc(i as u8 % n_regions, 2);
     }
     tb.add_machine_proc(0, 2); // controller
-    if adapt_id.is_some() {
+    if lay.adapt_id.is_some() {
         tb.add_machine_proc(0, 2); // adapt controller, beside the control plane
     }
-    let (topo, threads) = tb.build(cfg.base_ms(), cfg.drop_prob);
+    tb.build(cfg.base_ms(), cfg.drop_prob)
+}
 
-    // ---- fault schedule: lower the role-level plan onto this layout ----
-    // (servers are procs 0..s — the id layout above — and partitions
-    // group whole regions, so the topology's region table is the map)
-    let fault_timeline =
-        crate::faults::lower(&cfg.fault_plan, &topo.region_of, s, cfg.n_regions());
+/// Does this run (or this worker shard of it) host process `id`?
+fn hosts(filter: Option<(&ShardPlan, u32)>, id: ProcId) -> bool {
+    filter.map_or(true, |(plan, shard)| plan.shard_of[id.idx()] == shard)
+}
+
+/// The world handles a run needs back after the event loop: the hub the
+/// hosted actors record into and the mutual-exclusion oracle log. On the
+/// threaded engine these are per-shard and merged afterwards.
+struct WorldHandles {
+    metrics: Metrics,
+    oracle: MeOracleRef,
+}
+
+/// Construct the deployment inside `sim`, registering only the actors
+/// `filter` hosts (all of them when `None`). Everything that must agree
+/// across shards — interned key ids, registered predicate ids, the ring,
+/// the graphs, per-client app state — is derived deterministically from
+/// `cfg` alone, and the app RNG stream is consumed identically whether
+/// or not a given client's actor is ultimately registered.
+fn build_world(
+    cfg: &ExpConfig,
+    lay: &Layout,
+    sim: &mut Sim,
+    filter: Option<(&ShardPlan, u32)>,
+) -> WorldHandles {
+    let (s, c) = (lay.s, lay.c);
 
     // ---- shared state ----
     let interner = Interner::new();
@@ -163,16 +233,19 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
         AccelKind::Xla => crate::runtime::pjrt::shared_xla_accel(),
     };
 
-    // ---- application construction ----
+    // ---- application construction (freezes the key space and pre-seeds
+    //      the registry in canonical order — see the Shared constructors) ----
     let mut app_rng = Rng::stream(cfg.seed, 0xA99);
     let mut apps: Vec<Box<dyn AppLogic>> = Vec::with_capacity(c);
     match &cfg.app {
         AppKind::Coloring { nodes, edges_per_node, task_size, loop_forever } => {
-            let graph = Rc::new(Graph::powerlaw_cluster(*nodes, *edges_per_node, 0.3, &mut app_rng));
+            let graph =
+                Rc::new(Graph::powerlaw_cluster(*nodes, *edges_per_node, 0.3, &mut app_rng));
             let sh = ColoringShared::new(
                 graph,
                 c,
                 interner.clone(),
+                &registry,
                 oracle.clone(),
                 metrics.clone(),
                 *task_size,
@@ -188,6 +261,7 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
                 graph,
                 c,
                 interner.clone(),
+                &registry,
                 oracle.clone(),
                 *put_pct,
                 *use_locks,
@@ -211,74 +285,234 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
         }
     }
 
-    // ---- simulation assembly ----
-    let mut sim = if cfg.shards == 0 {
-        Sim::new(topo, &threads, cfg.seed, cfg.skew_ms, cfg.eps_ms)
-    } else {
-        let plan = shard_plan(&topo, s, c, cfg.shards);
-        Sim::new_sharded(topo, &threads, cfg.seed, cfg.skew_ms, cfg.eps_ms, &plan, cfg.sched)
-    };
+    // ---- actor registration (sparse on worker shards) ----
     for i in 0..s {
+        let id = lay.server_ids[i];
+        if !hosts(filter, id) {
+            continue;
+        }
         let detector = cfg.monitors.then(|| {
             LocalDetector::new(
                 i as u16,
                 registry.clone(),
                 interner.clone(),
                 router.clone(),
-                monitor_ids.clone(),
+                lay.monitor_ids.clone(),
                 true, // naming-convention inference on
             )
         });
-        sim.add_actor(Box::new(ServerActor::new(
-            i as u16,
-            router.clone(),
-            detector,
-            cfg.server_cfg.clone(),
-            metrics.clone(),
-            Some(controller_id),
-            server_ids.clone(),
-        )));
+        sim.add_actor_at(
+            id,
+            Box::new(ServerActor::new(
+                i as u16,
+                router.clone(),
+                detector,
+                cfg.server_cfg.clone(),
+                metrics.clone(),
+                Some(lay.controller_id),
+                lay.server_ids.clone(),
+            )),
+        );
     }
     for i in 0..s {
-        sim.add_actor(Box::new(MonitorActor::new(
-            i as u16,
-            registry.clone(),
-            accel.clone(),
-            Some(controller_id),
-            cfg.monitor_cfg.clone(),
-            metrics.clone(),
-        )));
+        let id = lay.monitor_ids[i];
+        if !hosts(filter, id) {
+            continue;
+        }
+        sim.add_actor_at(
+            id,
+            Box::new(MonitorActor::new(
+                i as u16,
+                registry.clone(),
+                accel.clone(),
+                Some(lay.controller_id),
+                cfg.monitor_cfg.clone(),
+                metrics.clone(),
+            )),
+        );
     }
     for (i, app) in apps.into_iter().enumerate() {
-        sim.add_actor(Box::new(ClientActor::new(
+        let id = lay.client_ids[i];
+        if !hosts(filter, id) {
+            continue;
+        }
+        let mut client = ClientActor::new(
             i as u32,
-            server_ids.clone(),
+            lay.server_ids.clone(),
             router.clone(),
             cfg.consistency,
             cfg.timing,
             cfg.pipeline_depth,
             app,
             metrics.clone(),
-        )));
+        );
+        if let Some(adapt) = lay.adapt_id {
+            client = client.with_adapt_reports(adapt, cfg.adapt.window);
+        }
+        sim.add_actor_at(id, Box::new(client));
     }
-    sim.add_actor(Box::new(
-        ControllerActor::new(server_ids.clone(), client_ids.clone(), cfg.recovery, metrics.clone())
-            .with_adapt(adapt_id),
-    ));
-    if adapt_id.is_some() {
-        sim.add_actor(Box::new(AdaptController::new(
-            client_ids.clone(),
-            metrics.clone(),
-            &cfg.adapt,
-            cfg.consistency,
-        )));
+    if hosts(filter, lay.controller_id) {
+        sim.add_actor_at(
+            lay.controller_id,
+            Box::new(
+                ControllerActor::new(
+                    lay.server_ids.clone(),
+                    lay.client_ids.clone(),
+                    cfg.recovery,
+                    metrics.clone(),
+                )
+                .with_adapt(lay.adapt_id),
+            ),
+        );
+    }
+    if let Some(adapt) = lay.adapt_id {
+        if hosts(filter, adapt) {
+            sim.add_actor_at(
+                adapt,
+                Box::new(AdaptController::new(lay.client_ids.clone(), &cfg.adapt, cfg.consistency)),
+            );
+        }
     }
 
-    // ---- run ----
-    sim.install_faults(fault_timeline);
-    sim.run_until(cfg.duration);
+    WorldHandles { metrics, oracle }
+}
 
-    // ---- extraction ----
+/// Everything a run (or one worker shard of it) yields, as plain `Send`
+/// data. Harvests merge in shard order; the merged harvest of a threaded
+/// run is bit-identical to the single harvest of a merged-order run.
+struct Harvest {
+    metrics: MetricsHub,
+    oracle: MeOracle,
+    candidates_seen: u64,
+    pairs_checked: u64,
+    pairs_charged: u64,
+    window_peak: usize,
+    gc_evicted: u64,
+    ops_ok: u64,
+    ops_failed: u64,
+    restarts: u64,
+    crashes: u64,
+    resyncs: u64,
+    resync_keys: u64,
+    recoveries: u64,
+    /// mode timeline + switch count, from whichever shard hosts the
+    /// adapt controller (at most one does)
+    adapt: Option<(Vec<ModeSpan>, u64)>,
+}
+
+/// Pull the per-actor counters out of the hosted actors plus copies of
+/// the shared-state artifacts.
+fn harvest(
+    lay: &Layout,
+    sim: &mut Sim,
+    handles: &WorldHandles,
+    filter: Option<(&ShardPlan, u32)>,
+) -> Harvest {
+    let mut h = Harvest {
+        metrics: handles.metrics.borrow().clone(),
+        oracle: handles.oracle.borrow().clone(),
+        candidates_seen: 0,
+        pairs_checked: 0,
+        pairs_charged: 0,
+        window_peak: 0,
+        gc_evicted: 0,
+        ops_ok: 0,
+        ops_failed: 0,
+        restarts: 0,
+        crashes: 0,
+        resyncs: 0,
+        resync_keys: 0,
+        recoveries: 0,
+        adapt: None,
+    };
+    for &id in lay.monitor_ids.iter().filter(|&&id| hosts(filter, id)) {
+        if let Some(any) = sim.actor_mut(id).as_any() {
+            if let Some(mon) = any.downcast_mut::<MonitorActor>() {
+                h.candidates_seen += mon.candidates_seen;
+                h.pairs_checked += mon.pairs_checked;
+                h.pairs_charged += mon.pairs_charged;
+                h.window_peak = h.window_peak.max(mon.window_peak);
+                h.gc_evicted += mon.gc_evicted;
+            }
+        }
+    }
+    for &id in lay.client_ids.iter().filter(|&&id| hosts(filter, id)) {
+        if let Some(any) = sim.actor_mut(id).as_any() {
+            if let Some(cl) = any.downcast_mut::<ClientActor>() {
+                h.ops_ok += cl.ops_ok;
+                h.ops_failed += cl.ops_failed;
+                h.restarts += cl.restarts;
+            }
+        }
+    }
+    for &id in lay.server_ids.iter().filter(|&&id| hosts(filter, id)) {
+        if let Some(any) = sim.actor_mut(id).as_any() {
+            if let Some(sv) = any.downcast_mut::<ServerActor>() {
+                h.crashes += sv.crashes;
+                h.resyncs += sv.resyncs;
+                h.resync_keys += sv.resync_keys;
+            }
+        }
+    }
+    if hosts(filter, lay.controller_id) {
+        h.recoveries = sim
+            .actor_mut(lay.controller_id)
+            .as_any()
+            .and_then(|a| a.downcast_mut::<ControllerActor>())
+            .map(|ctl| ctl.recoveries)
+            .unwrap_or(0);
+    }
+    if let Some(id) = lay.adapt_id.filter(|&id| hosts(filter, id)) {
+        h.adapt = sim
+            .actor_mut(id)
+            .as_any()
+            .and_then(|a| a.downcast_mut::<AdaptController>())
+            .map(|ad| (ad.timeline.clone(), ad.switches));
+    }
+    h
+}
+
+/// Fold per-shard harvests (in shard order) into one. Counter merges are
+/// sums; the metrics hub and oracle merge by their own engine-invariant
+/// rules ([`MetricsHub::merge`], [`MeOracle::merge`]).
+fn merge_harvests(mut hs: Vec<Harvest>) -> Harvest {
+    let mut acc = hs.remove(0);
+    for h in hs {
+        acc.metrics.merge(&h.metrics);
+        acc.oracle.merge(&h.oracle);
+        acc.candidates_seen += h.candidates_seen;
+        acc.pairs_checked += h.pairs_checked;
+        acc.pairs_charged += h.pairs_charged;
+        acc.window_peak = acc.window_peak.max(h.window_peak);
+        acc.gc_evicted += h.gc_evicted;
+        acc.ops_ok += h.ops_ok;
+        acc.ops_failed += h.ops_failed;
+        acc.restarts += h.restarts;
+        acc.crashes += h.crashes;
+        acc.resyncs += h.resyncs;
+        acc.resync_keys += h.resync_keys;
+        acc.recoveries += h.recoveries;
+        if acc.adapt.is_none() {
+            acc.adapt = h.adapt;
+        }
+    }
+    acc
+}
+
+/// Telemetry the engine (not the world) produced.
+struct EngineRun {
+    sim_stats: SimStats,
+    barriers: u64,
+    shard_events: Vec<u64>,
+    lookahead: Time,
+    shard_actors: Vec<usize>,
+}
+
+/// Derive the [`ExpResult`] from a merged harvest — the single
+/// extraction path every engine funnels through.
+fn finalize(cfg: &ExpConfig, h: Harvest, engine: EngineRun) -> ExpResult {
+    let metrics: Metrics = Rc::new(RefCell::new(h.metrics));
+    let oracle: MeOracleRef = Rc::new(RefCell::new(h.oracle));
     let (app_tps, server_tps, violations_detected, detection_latencies_ms) = {
         let m = metrics.borrow();
         (
@@ -292,72 +526,25 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
         let ps = metrics.borrow().op_latency_percentiles_ms(&[50.0, 99.0]);
         (ps[0], ps[1])
     };
-    let mut candidates_seen = 0;
-    let mut pairs_checked = 0;
-    let mut pairs_charged = 0;
-    let mut window_peak = 0;
-    let mut gc_evicted = 0;
-    for &id in &monitor_ids {
-        if let Some(any) = sim.actor_mut(id).as_any() {
-            if let Some(mon) = any.downcast_mut::<MonitorActor>() {
-                candidates_seen += mon.candidates_seen;
-                pairs_checked += mon.pairs_checked;
-                pairs_charged += mon.pairs_charged;
-                window_peak = window_peak.max(mon.window_peak);
-                gc_evicted += mon.gc_evicted;
-            }
-        }
-    }
-    let (mut ops_ok, mut ops_failed, mut restarts) = (0, 0, 0);
-    for &id in &client_ids {
-        if let Some(any) = sim.actor_mut(id).as_any() {
-            if let Some(cl) = any.downcast_mut::<ClientActor>() {
-                ops_ok += cl.ops_ok;
-                ops_failed += cl.ops_failed;
-                restarts += cl.restarts;
-            }
-        }
-    }
-    let (mut crashes, mut resyncs, mut resync_keys) = (0, 0, 0);
-    for &id in &server_ids {
-        if let Some(any) = sim.actor_mut(id).as_any() {
-            if let Some(sv) = any.downcast_mut::<ServerActor>() {
-                crashes += sv.crashes;
-                resyncs += sv.resyncs;
-                resync_keys += sv.resync_keys;
-            }
-        }
-    }
-    let recoveries = sim
-        .actor_mut(controller_id)
-        .as_any()
-        .and_then(|a| a.downcast_mut::<ControllerActor>())
-        .map(|ctl| ctl.recoveries)
-        .unwrap_or(0);
-    let (mode_timeline, mode_switches) = match adapt_id {
-        Some(id) => sim
-            .actor_mut(id)
-            .as_any()
-            .and_then(|a| a.downcast_mut::<AdaptController>())
-            .map(|ad| (ad.timeline.clone(), ad.switches))
-            .expect("adapt controller present when enabled"),
+    let (mode_timeline, mode_switches) = h.adapt.unwrap_or_else(|| {
         // no controller deployed: the whole run is one static span
-        None => (vec![ModeSpan { from: 0, epoch: 0, cfg: cfg.consistency }], 0),
-    };
+        (vec![ModeSpan { from: 0, epoch: 0, cfg: cfg.consistency }], 0)
+    });
     let per_mode_tps = {
         let m = metrics.borrow();
         per_mode_throughput(&mode_timeline, &m.app_series(), m.window)
     };
     let quorum_timeouts = metrics.borrow().quorum_timeouts;
-
     let active_preds_peak = metrics.borrow().active_preds_peak;
-    let actual_me_violations = oracle.borrow().actual_violations.len();
+    let actual_me_violations = oracle.borrow().violations().len();
     let detection_cdf = Cdf::new(detection_latencies_ms.clone());
     ExpResult {
         name: cfg.name.clone(),
-        sim_stats: sim.stats().clone(),
-        barriers: sim.barriers(),
-        shard_events: sim.shard_events(),
+        sim_stats: engine.sim_stats,
+        barriers: engine.barriers,
+        shard_events: engine.shard_events,
+        lookahead: engine.lookahead,
+        shard_actors: engine.shard_actors,
         metrics,
         oracle,
         app_tps,
@@ -368,24 +555,106 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
         actual_me_violations,
         detection_latencies_ms,
         detection_cdf,
-        candidates_seen,
-        pairs_checked,
-        pairs_charged,
-        window_peak,
+        candidates_seen: h.candidates_seen,
+        pairs_checked: h.pairs_checked,
+        pairs_charged: h.pairs_charged,
+        window_peak: h.window_peak,
         active_preds_peak,
-        gc_evicted,
-        ops_ok,
-        ops_failed,
-        restarts,
+        gc_evicted: h.gc_evicted,
+        ops_ok: h.ops_ok,
+        ops_failed: h.ops_failed,
+        restarts: h.restarts,
         quorum_timeouts,
-        recoveries,
-        crashes,
-        resyncs,
-        resync_keys,
+        recoveries: h.recoveries,
+        crashes: h.crashes,
+        resyncs: h.resyncs,
+        resync_keys: h.resync_keys,
         mode_timeline,
         mode_switches,
         per_mode_tps,
     }
+}
+
+/// Run one experiment to completion on the engine the config selects:
+/// the single-queue engine (`shards == 0`), the merged-order sharded
+/// engine (`shards > 0`), or the threaded engine (`threaded` — worker
+/// threads under the conservative window protocol). All three produce
+/// bit-identical results.
+pub fn run(cfg: &ExpConfig) -> ExpResult {
+    let lay = Layout::new(cfg);
+    let (topo, threads) = build_topology(cfg, &lay);
+
+    // ---- fault schedule: lower the role-level plan onto this layout ----
+    // (servers are procs 0..s — the id layout above — and partitions
+    // group whole regions, so the topology's region table is the map)
+    let fault_timeline =
+        crate::faults::lower(&cfg.fault_plan, &topo.region_of, lay.s, cfg.n_regions());
+
+    if cfg.threaded {
+        assert!(cfg.shards > 0, "threaded runs need with_shards(k >= 1) before with_threaded()");
+        let plan = shard_plan(&topo, lay.s, lay.c, cfg.shards);
+        let shard_actors = actor_counts(&plan);
+        let tcfg = ThreadCfg {
+            topo,
+            threads,
+            seed: cfg.seed,
+            skew_ms: cfg.skew_ms,
+            eps_ms: cfg.eps_ms,
+            sched: cfg.sched,
+            timeline: fault_timeline,
+        };
+        let build = |shard: u32, sim: &mut Sim| {
+            let handles = build_world(cfg, &lay, sim, Some((&plan, shard)));
+            sim.set_blackboard(Box::new(handles));
+        };
+        let extract = |shard: u32, sim: &mut Sim| -> Harvest {
+            let handles = sim
+                .take_blackboard()
+                .expect("build stashed the world handles")
+                .downcast::<WorldHandles>()
+                .expect("blackboard holds this run's world handles");
+            harvest(&lay, sim, &handles, Some((&plan, shard)))
+        };
+        let tr = run_threaded(&tcfg, &plan, cfg.duration, &build, &extract);
+        let h = merge_harvests(tr.results);
+        return finalize(
+            cfg,
+            h,
+            EngineRun {
+                sim_stats: tr.stats,
+                barriers: tr.barriers,
+                shard_events: tr.per_shard_events,
+                lookahead: tr.lookahead,
+                shard_actors,
+            },
+        );
+    }
+
+    let (mut sim, plan_info) = if cfg.shards == 0 {
+        (Sim::new(topo, &threads, cfg.seed, cfg.skew_ms, cfg.eps_ms), None)
+    } else {
+        let plan = shard_plan(&topo, lay.s, lay.c, cfg.shards);
+        let info = (plan.lookahead, actor_counts(&plan));
+        let sim =
+            Sim::new_sharded(topo, &threads, cfg.seed, cfg.skew_ms, cfg.eps_ms, &plan, cfg.sched);
+        (sim, Some(info))
+    };
+    let handles = build_world(cfg, &lay, &mut sim, None);
+    sim.install_faults(fault_timeline);
+    sim.run_until(cfg.duration);
+    let h = harvest(&lay, &mut sim, &handles, None);
+    let (lookahead, shard_actors) = plan_info.unwrap_or((0, Vec::new()));
+    finalize(
+        cfg,
+        h,
+        EngineRun {
+            sim_stats: sim.stats().clone(),
+            barriers: sim.barriers(),
+            shard_events: sim.shard_events(),
+            lookahead,
+            shard_actors,
+        },
+    )
 }
 
 /// Mean app throughput per consistency mode: every full metrics window
@@ -567,6 +836,52 @@ mod tests {
         assert!(b.barriers > 0, "sharded engine ran the window protocol");
         assert_eq!(b.shard_events.len(), 2);
         assert_eq!(b.shard_events.iter().sum::<u64>(), b.sim_stats.events);
+        // the plan's choices are reported ([`ExpResult::lookahead`])
+        assert_eq!(a.lookahead, 0);
+        assert!(a.shard_actors.is_empty());
+        assert!(b.lookahead > 0, "cross-shard latency floors the window");
+        assert_eq!(b.shard_actors.len(), 2);
+        assert_eq!(b.shard_actors.iter().sum::<usize>(), 13, "2s + c + controller");
+    }
+
+    #[test]
+    fn threaded_engine_reproduces_serial_run() {
+        // the full-stack threaded engine: same world, worker threads under
+        // the conservative window protocol — bit-identical results
+        let a = run(&small_conj(ConsistencyCfg::n3r1w1(), true));
+        let b = run(&small_conj(ConsistencyCfg::n3r1w1(), true).with_shards(2).with_threaded());
+        assert_eq!(a.ops_ok, b.ops_ok);
+        assert_eq!(a.ops_failed, b.ops_failed);
+        assert_eq!(a.violations_detected, b.violations_detected);
+        assert_eq!(a.actual_me_violations, b.actual_me_violations);
+        assert_eq!(a.app_tps, b.app_tps);
+        assert_eq!(a.candidates_seen, b.candidates_seen);
+        assert_eq!(a.sim_stats.events, b.sim_stats.events, "identical event schedules");
+        assert!(b.barriers > 0, "coordinator ran window barriers");
+        assert_eq!(b.shard_events.len(), 2);
+        assert_eq!(b.shard_events.iter().sum::<u64>(), b.sim_stats.events);
+        assert!(b.lookahead > 0);
+        assert_eq!(b.shard_actors.iter().sum::<usize>(), 13);
+    }
+
+    #[test]
+    fn threaded_matches_merged_order_at_every_shard_count() {
+        for k in [1usize, 2, 3] {
+            let m = run(&small_conj(ConsistencyCfg::n3r1w1(), true).with_shards(k));
+            let t = run(&small_conj(ConsistencyCfg::n3r1w1(), true).with_shards(k).with_threaded());
+            assert_eq!(m.ops_ok, t.ops_ok, "shards={k}");
+            assert_eq!(m.violations_detected, t.violations_detected, "shards={k}");
+            assert_eq!(m.app_tps, t.app_tps, "shards={k}");
+            assert_eq!(m.sim_stats.events, t.sim_stats.events, "shards={k}");
+            assert_eq!(m.lookahead, t.lookahead, "shards={k}");
+            assert_eq!(m.shard_actors, t.shard_actors, "shards={k}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "threaded runs need with_shards")]
+    fn threaded_without_shards_is_rejected() {
+        run(&small_conj(ConsistencyCfg::n3r1w1(), true).with_threaded());
     }
 
     #[test]
@@ -594,7 +909,7 @@ mod tests {
         let res = run(&cfg);
         assert!(res.metrics.borrow().tasks_completed > 0, "tasks completed");
         assert!(res.ops_ok > 200);
-        // predicates were inferred on demand from lock variable names
+        // predicates were pre-registered from lock variable names
         assert!(res.active_preds_peak > 0, "inferred predicates monitored");
     }
 

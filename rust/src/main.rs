@@ -295,8 +295,6 @@ fn cmd_adapt(args: &Args) {
 }
 
 fn cmd_shards(args: &Args) {
-    use optikv::sim::des::SchedKind;
-    use optikv::sim::shard::{run_demo, DemoSpec};
     let scale = args.get_f64("scale", 0.05);
     let seed = args.get_u64("seed", 42);
 
@@ -342,27 +340,44 @@ fn cmd_shards(args: &Args) {
         std::process::exit(1);
     }
 
-    // -- threaded engine: scaling sweep on the demo mill --------------------
-    println!("\n== threaded engine — scaleout-s24 demo mill, 5 virtual s ==");
-    let until = 5 * SEC;
-    let mut t = Table::new(&["shards", "events", "wall s", "events/s", "speedup", "barriers"]);
+    // -- threaded engine: full-stack scaling sweep --------------------------
+    // the production deployment (24 servers, monitors, rollback) on worker
+    // threads; digests must match serial while wall-clock drops
+    println!("\n== threaded engine — full-stack scaleout, 24 servers ==");
+    let mk = || {
+        let mut cfg = scenarios::scaleout_conjunctive(24, scale, seed);
+        cfg.n_clients = 24;
+        cfg
+    };
+    let serial = run(&mk());
+    let want = digest(&serial);
+    let mut t =
+        Table::new(&["shards", "events", "wall s", "events/s", "speedup", "barriers", "identical"]);
     let mut base: Option<f64> = None;
+    let mut all_ok = true;
     for shards in [1usize, 2, 4, 8] {
         let t0 = std::time::Instant::now();
-        let r = run_demo(&DemoSpec::s24(seed), shards, until, SchedKind::Heap);
+        let res = run(&mk().with_shards(shards).with_threaded());
         let wall = t0.elapsed().as_secs_f64();
-        let eps = r.stats.events as f64 / wall;
+        let ok = digest(&res) == want;
+        all_ok &= ok;
+        let eps = res.sim_stats.events as f64 / wall;
         let b = *base.get_or_insert(eps);
         t.row(&[
             shards.to_string(),
-            r.stats.events.to_string(),
+            res.sim_stats.events.to_string(),
             format!("{wall:.2}"),
             format!("{eps:.0}"),
             format!("{:.2}x", eps / b),
-            r.barriers.to_string(),
+            res.barriers.to_string(),
+            if ok { "yes".into() } else { "NO".to_string() },
         ]);
     }
     t.print();
+    if !all_ok {
+        eprintln!("shards-smoke FAILED: a threaded run diverged from the serial schedule");
+        std::process::exit(1);
+    }
 }
 
 fn cmd_pipeline(args: &Args) {

@@ -27,6 +27,12 @@ pub struct ViolationRecord {
     pub t_occurred_ms: Millis,
     pub detected_at: Time,
     pub monitor: u16,
+    /// `(at, seq)` dispatch key of the monitor flush that recorded this
+    /// violation ([`crate::sim::des::Ctx::event_seq`]) — globally unique
+    /// and engine-invariant, so per-shard record lists of a threaded run
+    /// merge back into the exact global recording order
+    pub at: Time,
+    pub seq: u64,
 }
 
 impl ViolationRecord {
@@ -37,7 +43,7 @@ impl ViolationRecord {
     }
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct MetricsHub {
     pub window: Time,
     /// requests served per server per window
@@ -171,6 +177,56 @@ impl MetricsHub {
     pub fn op_latency_percentile_ms(&self, p: f64) -> f64 {
         self.op_latency_percentiles_ms(&[p])[0]
     }
+
+    /// Deterministic barrier-time merge of a per-shard hub into this one
+    /// (the threaded engine, shards merged in shard order):
+    ///
+    /// * per-process window series add element-wise — every process is
+    ///   hosted by exactly one shard, so for each row only one operand is
+    ///   non-zero and the merged counters are bit-exact;
+    /// * scalar counters add; `active_preds_peak` takes the max (each
+    ///   monitor's peak already lives on one shard, and the global peak
+    ///   of disjoint monitor populations is their max);
+    /// * sample vectors (`op_latencies`, `task_durations`) concatenate —
+    ///   every derived statistic is a multiset function (one shared
+    ///   [`crate::util::stats::Cdf`] rank convention), so sample order
+    ///   does not matter. `OP_LATENCY_SAMPLE_CAP` becomes per-shard
+    ///   under the merge; no workload approaches it;
+    /// * violation records concatenate and stable-sort by their
+    ///   `(at, seq)` dispatch key, reproducing the exact order a
+    ///   merged-order run records them in.
+    pub fn merge(&mut self, other: &MetricsHub) {
+        assert_eq!(self.window, other.window, "hubs must share a window size");
+        assert_eq!(self.server_ops.len(), other.server_ops.len());
+        assert_eq!(self.app_ops.len(), other.app_ops.len());
+        fn add_rows(dst: &mut [Vec<u64>], src: &[Vec<u64>]) {
+            for (d, s) in dst.iter_mut().zip(src) {
+                if d.len() < s.len() {
+                    d.resize(s.len(), 0);
+                }
+                for (x, y) in d.iter_mut().zip(s) {
+                    *x += y;
+                }
+            }
+        }
+        add_rows(&mut self.server_ops, &other.server_ops);
+        add_rows(&mut self.app_ops, &other.app_ops);
+        self.app_ops_recorded += other.app_ops_recorded;
+        for (d, s) in self.app_failures.iter_mut().zip(&other.app_failures) {
+            *d += s;
+        }
+        self.quorum_timeouts += other.quorum_timeouts;
+        self.candidates_received += other.candidates_received;
+        self.active_preds_peak = self.active_preds_peak.max(other.active_preds_peak);
+        self.tasks_completed += other.tasks_completed;
+        self.tasks_aborted += other.tasks_aborted;
+        self.task_durations.extend_from_slice(&other.task_durations);
+        self.op_latencies.extend_from_slice(&other.op_latencies);
+        self.violations.extend_from_slice(&other.violations);
+        // stable: entries recorded in one dispatch share a key and must
+        // keep their within-shard order
+        self.violations.sort_by_key(|v| (v.at, v.seq));
+    }
 }
 
 /// Mean of the stable phase of a throughput series: drop the first
@@ -242,19 +298,59 @@ mod tests {
         assert_eq!(stable_mean(&[], 0.25), 0.0);
     }
 
-    #[test]
-    fn violation_records() {
-        let m = MetricsHub::new(1, 1);
-        m.borrow_mut().record_violation(ViolationRecord {
+    fn rec(name: &str, at: Time, seq: u64) -> ViolationRecord {
+        ViolationRecord {
             pred: PredId(0),
-            name: "me_1_2".into(),
+            name: name.into(),
             t_violate_ms: 123,
             t_occurred_ms: 130,
             detected_at: 456 * MS,
             monitor: 0,
-        });
+            at,
+            seq,
+        }
+    }
+
+    #[test]
+    fn violation_records() {
+        let m = MetricsHub::new(1, 1);
+        m.borrow_mut().record_violation(rec("me_1_2", 456 * MS, 9));
         assert_eq!(m.borrow().violations.len(), 1);
         let lat = m.borrow().violations[0].detection_latency_ms();
         assert!((lat - 326.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_elementwise_and_orders_violations_by_dispatch_key() {
+        let a = MetricsHub::new(2, 2);
+        let b = MetricsHub::new(2, 2);
+        {
+            // shard a hosts server 0 / client 0; shard b the others
+            let mut a = a.borrow_mut();
+            a.record_server(0, 100 * MS);
+            a.record_app(0, 100 * MS, MS);
+            a.record_app_failure(0);
+            a.quorum_timeouts = 2;
+            a.active_preds_peak = 3;
+            a.record_violation(rec("late", 2_000 * MS, 5));
+        }
+        {
+            let mut b = b.borrow_mut();
+            b.record_server(1, 2_500 * MS);
+            b.record_app(1, 2_500 * MS, 2 * MS);
+            b.active_preds_peak = 5;
+            b.record_violation(rec("early", 1_000 * MS, 7));
+        }
+        let mut m = a.borrow().clone();
+        m.merge(&b.borrow());
+        assert_eq!(m.server_series(), vec![1.0, 0.0, 1.0]);
+        assert_eq!(m.app_series(), vec![1.0, 0.0, 1.0]);
+        assert_eq!(m.total_app_ops(), 2);
+        assert_eq!(m.app_failures, vec![1, 0]);
+        assert_eq!(m.quorum_timeouts, 2);
+        assert_eq!(m.active_preds_peak, 5, "max of disjoint monitor peaks");
+        assert_eq!(m.op_latencies.len(), 2);
+        let names: Vec<&str> = m.violations.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(names, vec!["early", "late"], "dispatch-key order, not shard order");
     }
 }

@@ -5,8 +5,7 @@
 //! the same [`Ctx`]:
 //!
 //! * **single-queue** ([`Sim::new`]) — the historical serial loop: one
-//!   priority queue, one global sequence counter, one network RNG
-//!   stream.
+//!   priority queue draining in `(at, seq)` order.
 //! * **merged-order sharded** ([`Sim::new_sharded`]) — the event set is
 //!   partitioned into per-shard queues with cross-shard sends staged in
 //!   outboxes and exchanged at conservative window barriers
@@ -20,10 +19,17 @@
 //!   engine ([`crate::sim::shard::run_threaded`]): hosts only the actors
 //!   its plan assigns to it, runs windows on command
 //!   ([`Sim::run_window`]), and trades cross-shard sends as owned wire
-//!   envelopes ([`crate::sim::shard::WireEv`]). Determinism here comes
-//!   from per-origin sequence counters and per-sender network RNG
-//!   streams, both keyed by process id — invariant under the thread
-//!   schedule *and* under the shard count.
+//!   envelopes ([`crate::sim::shard::WireEv`]).
+//!
+//! All three engines share **one determinism contract**: every event
+//! carries a sequence key composed from its origin process and that
+//! origin's private counter (`(origin << ORIGIN_SEQ_SHIFT) | counter`),
+//! and every network-latency draw comes from the *sender's* private RNG
+//! stream. Both are keyed by process id alone, so the composite
+//! `(at, seq)` schedule is a function of (topology, seed) — invariant
+//! under the engine choice, the shard count, and the thread schedule.
+//! This is what lets the full production stack run threaded and still
+//! produce bit-identical digests against the merged-order engine.
 //!
 //! Either queue flavor ([`SchedKind`]) can back any engine: the binary
 //! heap or the calendar queue ([`crate::sim::calendar`]).
@@ -316,23 +322,29 @@ impl Queues {
     }
 }
 
-/// Origin-tagged sequence layout of the threaded engine: the high bits
-/// carry the origin process, the low bits its private counter, so
-/// `(at, seq)` is a total order that no thread schedule and no shard
-/// count can perturb. 2^40 events per origin and 2^24 processes are both
-/// far beyond any run this simulator does.
+/// Origin-tagged sequence layout (all engines): the high bits carry the
+/// origin process, the low bits its private counter, so `(at, seq)` is a
+/// total order that no engine choice, thread schedule or shard count can
+/// perturb. 2^40 events per origin and 2^24 processes are both far
+/// beyond any run this simulator does.
 pub const ORIGIN_SEQ_SHIFT: u32 = 40;
 
+/// Cap on the pooled `Rc<ServerOp>` payloads recycled through
+/// [`Ctx::recycle_op`] / [`Sim::ingest`] — bounds the slab so an
+/// ingest-heavy run cannot hoard memory.
+const OP_POOL_CAP: usize = 256;
+
 /// Worker-side state of the threaded engine: which processes this shard
-/// hosts, the per-origin sequence counters and per-sender network RNG
-/// streams that make the schedule reproducible, and the outbox of wire
-/// envelopes bound for other shards at the next barrier.
+/// hosts and the outbox of wire envelopes bound for other shards at the
+/// next barrier (plus a spare buffer so the coordinator can recycle
+/// envelope vectors instead of allocating one per window).
 struct ShardExec {
     shard_of: Vec<u32>,
     my_shard: u32,
-    origin_seq: Vec<u64>,
-    rng_net: Vec<Rng>,
     outbox: Vec<WireEv>,
+    /// recycled envelope buffer handed back by the coordinator
+    /// ([`Sim::supply_outbox`]); swapped in at the next drain
+    outbox_spare: Vec<WireEv>,
     /// end (exclusive) of the window being processed
     horizon: Time,
 }
@@ -341,13 +353,25 @@ struct ShardExec {
 /// hold `&mut Ctx` while being itself borrowed.
 pub struct SimCore {
     now: Time,
-    seq: u64,
+    /// `(at, seq)` key of the event being dispatched — globally unique
+    /// and engine-invariant, exposed via [`Ctx::event_seq`] so shards
+    /// can stamp their side-channel logs for barrier-time merging
+    cur_seq: u64,
+    /// per-origin private counters composed into sequence keys
+    origin_seq: Vec<u64>,
     queues: Queues,
     pub topo: Topology,
     pub clocks: ClockModel,
     pub machines: Machines,
-    rng_net: Rng,
+    /// per-*sender* network RNG streams (`Rng::stream(seed, 0xBEEF_0000
+    /// + sender)`): each draw sequence is owned by exactly one shard —
+    /// whichever hosts the sender — on every engine
+    rng_net: Vec<Rng>,
     rng_actors: Vec<Rng>,
+    /// recycled `Rc<ServerOp>` payloads ([`Ctx::recycle_op`]); refilled
+    /// by the cross-shard ingest path so the envelope hot path reuses
+    /// allocations instead of hitting the global allocator per message
+    op_pool: Vec<std::rc::Rc<crate::store::protocol::ServerOp>>,
     pub stats: SimStats,
     /// HVC ε (ms) — global config, read by servers/monitors via ctx
     pub eps_ms: Millis,
@@ -387,6 +411,27 @@ impl<'a> Ctx<'a> {
         &mut self.core.rng_actors[self.self_id.idx()]
     }
 
+    /// The `(at, seq)` sequence component of the event being dispatched:
+    /// globally unique together with [`Ctx::now`], and identical across
+    /// engines and shard counts. Side-channel logs (the mutual-exclusion
+    /// oracle, violation records) key their entries on it so per-shard
+    /// logs merge back into the exact global dispatch order.
+    #[inline]
+    pub fn event_seq(&self) -> u64 {
+        self.core.cur_seq
+    }
+
+    /// Return a request payload to the per-shard slab once the server is
+    /// done with it. Only sole-owner `Rc`s are pooled (a broadcast's
+    /// payload is still shared by the client's in-flight call) and the
+    /// pool is bounded, so this is always safe to call.
+    #[inline]
+    pub fn recycle_op(&mut self, op: std::rc::Rc<crate::store::protocol::ServerOp>) {
+        if std::rc::Rc::strong_count(&op) == 1 && self.core.op_pool.len() < OP_POOL_CAP {
+            self.core.op_pool.push(op);
+        }
+    }
+
     /// Send a message: delivery at `now + net latency` (or never, if the
     /// loss model drops it).
     pub fn send(&mut self, dst: ProcId, msg: Msg) {
@@ -404,18 +449,15 @@ impl<'a> Ctx<'a> {
     /// run under `FaultPlan::none()` is bit-identical to the pre-fault
     /// code path.
     ///
-    /// The network RNG is the single global stream on the serial and
-    /// merged-order engines, and the *per-sender* stream of `self_id` on
-    /// a threaded worker — same draw sites, different stream handle.
+    /// Every latency/loss draw comes from the *per-sender* network RNG
+    /// stream of `self_id` — the same stream handle on every engine, so
+    /// the draw sequence is schedule- and shard-count-invariant.
     pub fn send_after(&mut self, delay: Time, dst: ProcId, msg: Msg) {
         let core = &mut *self.core;
         let src = self.self_id;
         let class = msg.class() as usize;
         core.stats.sent[class] += 1;
-        let rng = match &mut core.exec {
-            Some(ex) => &mut ex.rng_net[src.idx()],
-            None => &mut core.rng_net,
-        };
+        let rng = &mut core.rng_net[src.idx()];
         if !core.faults.quiet() {
             if !core.faults.reachable(src, dst) {
                 core.stats.dropped[class] += 1;
@@ -482,24 +524,15 @@ impl<'a> Ctx<'a> {
 }
 
 impl SimCore {
-    /// Next event sequence number for an event originated by `origin`:
-    /// the single global counter, or (on a threaded worker) the origin's
-    /// private counter tagged with its process id — identical total
-    /// order no matter which shard hosts `origin`.
+    /// Next event sequence key for an event originated by `origin`: the
+    /// origin's private counter tagged with its process id — the same
+    /// composition on every engine, so the total `(at, seq)` order is
+    /// identical no matter which engine (or shard) hosts `origin`.
     fn next_seq(&mut self, origin: ProcId) -> u64 {
-        match &mut self.exec {
-            Some(ex) => {
-                let c = &mut ex.origin_seq[origin.idx()];
-                let seq = ((origin.0 as u64) << ORIGIN_SEQ_SHIFT) | *c;
-                *c += 1;
-                seq
-            }
-            None => {
-                let seq = self.seq;
-                self.seq += 1;
-                seq
-            }
-        }
+        let c = &mut self.origin_seq[origin.idx()];
+        let seq = ((origin.0 as u64) << ORIGIN_SEQ_SHIFT) | *c;
+        *c += 1;
+        seq
     }
 
     /// Enqueue an event originated by `src` for `dst`. On a threaded
@@ -531,6 +564,11 @@ pub struct Sim {
     started: bool,
     /// lowered fault schedule; empty unless installed
     timeline: Timeline,
+    /// scratch slot for the threaded engine: the build closure runs and
+    /// finishes before the extract closure is called, yet both need the
+    /// same (non-`Send`) world handles — build stashes them here, extract
+    /// takes them back out. Never crosses a thread boundary.
+    blackboard: Option<Box<dyn std::any::Any>>,
 }
 
 impl Sim {
@@ -543,16 +581,19 @@ impl Sim {
             ClockModel::perfect(n)
         };
         let rng_actors = (0..n).map(|i| Rng::stream(seed, 0x1000 + i as u64)).collect();
+        let rng_net = (0..n).map(|i| Rng::stream(seed, 0xBEEF_0000 + i as u64)).collect();
         Self {
             core: SimCore {
                 now: 0,
-                seq: 0,
+                cur_seq: 0,
+                origin_seq: vec![0; n],
                 queues: Queues::Single(EventQueue::new(SchedKind::Heap)),
                 topo,
                 clocks,
                 machines: Machines::new(thread_counts),
-                rng_net: Rng::stream(seed, 0xFACE),
+                rng_net,
                 rng_actors,
+                op_pool: Vec::new(),
                 stats: SimStats::default(),
                 eps_ms,
                 faults: FaultState::new(n),
@@ -561,7 +602,20 @@ impl Sim {
             actors: Vec::new(),
             started: false,
             timeline: Timeline::empty(),
+            blackboard: None,
         }
+    }
+
+    /// Stash a value for a later phase of the same run (see the
+    /// `blackboard` field). Panics if a value is already stashed.
+    pub fn set_blackboard(&mut self, v: Box<dyn std::any::Any>) {
+        assert!(self.blackboard.is_none(), "blackboard already occupied");
+        self.blackboard = Some(v);
+    }
+
+    /// Take back the value stashed by [`Sim::set_blackboard`], if any.
+    pub fn take_blackboard(&mut self) -> Option<Box<dyn std::any::Any>> {
+        self.blackboard.take()
     }
 
     /// The merged-order sharded engine: identical seeding, RNG streams
@@ -597,11 +651,10 @@ impl Sim {
     /// ([`crate::sim::shard::run_threaded`]). The worker sees the whole
     /// topology (latencies and reachability need every process) but
     /// hosts only the actors registered via [`Sim::add_actor_at`].
-    /// Seeding matches [`Sim::new`] exactly for clocks and actor
-    /// streams; network randomness moves to per-*sender* streams
-    /// (`Rng::stream(seed, 0xBEEF_0000 + sender)`) so each draw sequence
-    /// is owned by exactly one shard — whichever one hosts the sender —
-    /// and the composite schedule is invariant under the shard count.
+    /// Seeding matches [`Sim::new`] exactly — per-origin sequence
+    /// counters and per-sender network streams are the contract of every
+    /// engine — so a worker's hosted slice of the schedule is the same
+    /// slice the merged-order engine computes.
     pub fn new_worker(
         topo: Topology,
         thread_counts: &[usize],
@@ -619,9 +672,8 @@ impl Sim {
         sim.core.exec = Some(Box::new(ShardExec {
             shard_of: plan.shard_of.clone(),
             my_shard,
-            origin_seq: vec![0; n],
-            rng_net: (0..n).map(|i| Rng::stream(seed, 0xBEEF_0000 + i as u64)).collect(),
             outbox: Vec::new(),
+            outbox_spare: Vec::new(),
             horizon: 0,
         }));
         sim
@@ -690,6 +742,7 @@ impl Sim {
     fn dispatch(&mut self, ev: Ev) {
         let idx = ev.dst.idx();
         let mut actor = self.actors[idx].take().unwrap_or_else(|| panic!("actor {idx} missing"));
+        self.core.cur_seq = ev.seq;
         let mut ctx = Ctx { core: &mut self.core, self_id: ev.dst };
         match ev.kind {
             EvKind::Msg { from, msg } => actor.on_msg(&mut ctx, from, msg),
@@ -870,8 +923,11 @@ impl Sim {
     }
 
     /// Accept a cross-shard wire envelope; the sender's shard already
-    /// assigned its `(at, seq)` key.
+    /// assigned its `(at, seq)` key. The hot `Request` path re-wraps its
+    /// payload into a pooled `Rc` ([`Ctx::recycle_op`]) instead of
+    /// allocating a fresh one per ingested message.
     pub fn ingest(&mut self, ev: WireEv) {
+        use std::rc::Rc;
         let WireEv { at, seq, dst, from, msg } = ev;
         debug_assert!(
             self.core
@@ -880,14 +936,38 @@ impl Sim {
                 .is_some_and(|ex| ex.shard_of[dst.idx()] == ex.my_shard),
             "envelope routed to the wrong shard"
         );
-        self.core.queues.push(Ev { at, seq, dst, kind: EvKind::Msg { from, msg: msg.into_msg() } }, dst);
+        let msg = match msg {
+            WireMsg::Request { req, op, hvc } => {
+                let op = match self.core.op_pool.pop() {
+                    Some(mut rc) => {
+                        *Rc::get_mut(&mut rc).expect("pooled Rc is sole-owned") = op;
+                        rc
+                    }
+                    None => Rc::new(op),
+                };
+                Msg::Request { req, op, hvc: hvc.map(Rc::new) }
+            }
+            other => other.into_msg(),
+        };
+        self.core.queues.push(Ev { at, seq, dst, kind: EvKind::Msg { from, msg } }, dst);
     }
 
-    /// Take the staged cross-shard envelopes (the barrier exchange).
+    /// Take the staged cross-shard envelopes (the barrier exchange). The
+    /// spare buffer recycled via [`Sim::supply_outbox`] becomes the new
+    /// outbox, so steady-state windows allocate no envelope vectors.
     pub fn drain_outbox(&mut self) -> Vec<WireEv> {
         match &mut self.core.exec {
-            Some(ex) => std::mem::take(&mut ex.outbox),
+            Some(ex) => std::mem::replace(&mut ex.outbox, std::mem::take(&mut ex.outbox_spare)),
             None => Vec::new(),
+        }
+    }
+
+    /// Hand a drained envelope buffer back for reuse (the coordinator's
+    /// half of the envelope free-list).
+    pub fn supply_outbox(&mut self, mut buf: Vec<WireEv>) {
+        buf.clear();
+        if let Some(ex) = &mut self.core.exec {
+            ex.outbox_spare = buf;
         }
     }
 

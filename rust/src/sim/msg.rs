@@ -70,6 +70,13 @@ pub enum AdaptMsg {
     /// rollback controller → adapt controller: a recovery finished;
     /// servers sat frozen for `stall_ms` (0 for notify-only recovery).
     RecoveryDone { stall_ms: f64 },
+    /// client → adapt controller, once per signal window: the client's
+    /// op / quorum-timeout counts and raw op-latency samples since its
+    /// last report. The controller aggregates these instead of polling a
+    /// shared metrics hub, so the signal path works unchanged when
+    /// clients and controller live on different shards of the threaded
+    /// engine. Sent only when an adapt controller is deployed.
+    Report { client: u32, ops: u64, timeouts: u64, lat: Vec<Time> },
 }
 
 /// Everything that travels between actors.

@@ -49,32 +49,54 @@
 //!   0xBEEF_0000 + p)`, owned by `p`'s shard. Actor streams and clock
 //!   skews are seeded exactly as in the serial engine.
 //!
-//! The merged-order engine ([`crate::sim::des::Sim::new_sharded`]) runs
-//! this same window/barrier/outbox protocol *single-threaded in global
-//! merged order* with the serial engine's single RNG stream and global
-//! counter — which is why `shards = k` there is bit-identical to the
-//! pre-sharding serial runner for every `k`, the regression pin the
-//! determinism suite enforces.
+//! Both mechanisms are shared by *all three* engines (see
+//! [`crate::sim::des`]): the merged-order engine runs this same
+//! window/barrier/outbox protocol single-threaded in global merged
+//! order with the identical sequence/RNG contract — which is why
+//! `shards = k` there is bit-identical to the serial runner for every
+//! `k`, and why a threaded run is bit-identical to both.
 //!
-//! The threaded engine requires `Send` actors (built inside their worker
-//! thread); the full OptiKV stack shares state through `Rc` side
-//! channels and runs under the merged-order engine, while this module's
-//! [`run_demo`] workload — an open KV request/reply mill with the
-//! scale-out experiment's communication shape — exercises the threaded
-//! path and carries the perf rows.
+//! # Running the full production stack threaded
+//!
+//! Actors need not be `Send`: the `build` closure handed to
+//! [`run_threaded`] executes *inside* each worker thread, so every
+//! worker deterministically rebuilds its own copy of the world from the
+//! experiment config and registers only its shard's actors. Shared
+//! `Rc<RefCell<…>>` side channels (interner, router, predicate
+//! registry, metrics hub, mutual-exclusion oracle) become **per-shard
+//! copies merged at barrier time**:
+//!
+//! * the key [`crate::store::value::Interner`] and the predicate
+//!   [`crate::predicate::spec::Registry`] are *pre-frozen at layout
+//!   time* — every key and inferred predicate is known from the config
+//!   and workload graph, so all shards carry identical id assignments
+//!   and nothing needs merging;
+//! * the [`crate::metrics::throughput::MetricsHub`] merges
+//!   element-wise (each per-proc series is written by exactly one
+//!   shard, so the merge is bit-exact);
+//! * the [`crate::apps::peterson::MeOracle`] is an append-only log of
+//!   lock enter/exit entries keyed by the engine-invariant `(at, seq)`
+//!   dispatch key ([`crate::sim::des::Ctx::event_seq`]); per-shard logs
+//!   concatenate and stable-sort back into the exact global dispatch
+//!   order before replay;
+//! * adaptive-consistency signals flow as ordinary messages
+//!   ([`crate::sim::msg::AdaptMsg::Report`]) instead of hub polling, so
+//!   the controller works unchanged across shard boundaries.
+//!
+//! Cross-shard envelope buffers are recycled through a free list
+//! ([`crate::sim::des::Sim::supply_outbox`]): the coordinator returns
+//! each drained inbound vector to the worker it came from, so
+//! steady-state barriers allocate no envelope vectors.
 
 use std::sync::mpsc;
 
-use crate::clock::hvc::{Hvc, Millis};
+use crate::clock::hvc::Millis;
 use crate::faults::state::Timeline;
-use crate::sim::des::{Actor, Ctx, SchedKind, Sim, SimStats};
+use crate::sim::des::{SchedKind, Sim, SimStats};
 use crate::sim::machine::Machines;
-use crate::sim::msg::{Msg, WireMsg};
-use crate::sim::net::{Topology, TopologyBuilder};
-use crate::sim::{ProcId, Time, US};
-use crate::store::protocol::{ServerOp, ServerReply};
-use crate::store::value::KeyId;
-use std::rc::Rc;
+use crate::sim::msg::WireMsg;
+use crate::sim::net::Topology;
+use crate::sim::{ProcId, Time};
 
 /// A cross-shard event envelope: the `(at, seq)` dispatch key assigned
 /// by the sender's shard plus an owned [`WireMsg`] payload.
@@ -238,10 +260,13 @@ where
                 while let Ok(cmd) = trx.recv() {
                     match cmd {
                         ToWorker::Prime => sim.prime(),
-                        ToWorker::Window { horizon, until, inbound } => {
-                            for ev in inbound {
+                        ToWorker::Window { horizon, until, mut inbound } => {
+                            for ev in inbound.drain(..) {
                                 sim.ingest(ev);
                             }
+                            // the emptied inbound vector becomes the next
+                            // outbox (envelope free list)
+                            sim.supply_outbox(inbound);
                             sim.run_window(horizon, until);
                         }
                         ToWorker::Finish { until } => {
@@ -261,13 +286,20 @@ where
             });
         }
 
-        // coordinator: anchor → window → barrier, until quiet or `until`
-        let route = |pending: &mut Vec<Vec<WireEv>>, out: Vec<WireEv>| {
-            for ev in out {
+        // coordinator: anchor → window → barrier, until quiet or `until`.
+        // Drained outbound vectors go on a free list and come back as the
+        // next barrier's inbound buffers, closing the envelope-recycling
+        // loop with the workers' `supply_outbox` half.
+        let route = |pending: &mut Vec<Vec<WireEv>>,
+                     free: &mut Vec<Vec<WireEv>>,
+                     mut out: Vec<WireEv>| {
+            for ev in out.drain(..) {
                 pending[plan.shard_of[ev.dst.idx()] as usize].push(ev);
             }
+            free.push(out);
         };
         let mut pending: Vec<Vec<WireEv>> = (0..k).map(|_| Vec::new()).collect();
+        let mut free: Vec<Vec<WireEv>> = Vec::new();
         let mut next_at: Vec<Option<Time>> = vec![None; k];
         let mut barriers = 0u64;
         for tx in &to_tx {
@@ -276,7 +308,7 @@ where
         for i in 0..k {
             let r = reply_rx[i].recv().expect("worker alive");
             next_at[i] = r.next_at;
-            route(&mut pending, r.outbound);
+            route(&mut pending, &mut free, r.outbound);
         }
         loop {
             let mut t: Option<Time> = None;
@@ -298,13 +330,14 @@ where
             barriers += 1;
             let horizon = t.saturating_add(plan.lookahead);
             for (i, tx) in to_tx.iter().enumerate() {
-                tx.send(ToWorker::Window { horizon, until, inbound: std::mem::take(&mut pending[i]) })
-                    .expect("worker alive");
+                let inbound =
+                    std::mem::replace(&mut pending[i], free.pop().unwrap_or_default());
+                tx.send(ToWorker::Window { horizon, until, inbound }).expect("worker alive");
             }
             for i in 0..k {
                 let r = reply_rx[i].recv().expect("worker alive");
                 next_at[i] = r.next_at;
-                route(&mut pending, r.outbound);
+                route(&mut pending, &mut free, r.outbound);
             }
         }
         for tx in &to_tx {
@@ -336,202 +369,11 @@ where
     })
 }
 
-// ---------------------------------------------------------------------------
-// demo workload: a Send-actor KV mill with the scale-out comm shape
-// ---------------------------------------------------------------------------
-
-/// Request/reply server for the threaded perf rows: charges a CPU
-/// service time per request and answers with a fresh HVC snapshot
-/// (plain data only, so it is constructible inside any worker thread).
-pub struct EchoServer {
-    pub id: u16,
-    pub dim: usize,
-    pub svc: Time,
-    pub served: u64,
-}
-
-impl Actor for EchoServer {
-    fn on_msg(&mut self, ctx: &mut Ctx, from: ProcId, msg: Msg) {
-        if let Msg::Request { req, .. } = msg {
-            self.served += 1;
-            let d = ctx.cpu_delay(self.svc);
-            let hvc = Rc::new(Hvc::new(self.id, self.dim, ctx.pt_ms(), 0));
-            ctx.send_after(d, from, Msg::Reply { req, reply: ServerReply::PutAck, hvc });
-        }
-    }
-
-    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
-        Some(self)
-    }
-}
-
-/// Closed-loop client: keeps `depth` requests in flight against
-/// uniformly random servers (drawn from its own actor RNG stream, so the
-/// request schedule is shard-count-invariant).
-pub struct LoadClient {
-    pub n_servers: u64,
-    pub n_keys: u64,
-    pub depth: u32,
-    pub next_req: u64,
-    pub ops_done: u64,
-}
-
-impl LoadClient {
-    fn fire(&mut self, ctx: &mut Ctx) {
-        let srv = ProcId(ctx.rng().below(self.n_servers) as u32);
-        let key = KeyId(ctx.rng().below(self.n_keys) as u32);
-        self.next_req += 1;
-        ctx.send(srv, Msg::Request { req: self.next_req, op: Rc::new(ServerOp::Get(key)), hvc: None });
-    }
-}
-
-impl Actor for LoadClient {
-    fn on_start(&mut self, ctx: &mut Ctx) {
-        for _ in 0..self.depth {
-            self.fire(ctx);
-        }
-    }
-
-    fn on_msg(&mut self, ctx: &mut Ctx, _from: ProcId, msg: Msg) {
-        if let Msg::Reply { .. } = msg {
-            self.ops_done += 1;
-            self.fire(ctx);
-        }
-    }
-
-    fn as_any(&mut self) -> Option<&mut dyn std::any::Any> {
-        Some(self)
-    }
-}
-
-/// Shape of a demo run. `s24()` mirrors the `scaleout-s24` perf row's
-/// communication profile: 24 servers, 120 closed-loop clients, 3 zones
-/// of the regional latency matrix.
-#[derive(Debug, Clone)]
-pub struct DemoSpec {
-    pub servers: usize,
-    pub clients: usize,
-    pub zones: usize,
-    pub depth: u32,
-    pub svc_us: u64,
-    pub seed: u64,
-}
-
-impl DemoSpec {
-    pub fn s24(seed: u64) -> Self {
-        Self { servers: 24, clients: 120, zones: 3, depth: 4, svc_us: 20, seed }
-    }
-}
-
-pub struct DemoResult {
-    pub stats: SimStats,
-    pub ops: u64,
-    pub per_shard_events: Vec<u64>,
-    pub barriers: u64,
-    pub lookahead: Time,
-}
-
-/// Every process on its own machine (2 threads), zone-striped — so any
-/// contiguous-block plan satisfies the co-location rule trivially.
-fn demo_layout(spec: &DemoSpec) -> (Topology, Vec<usize>) {
-    let mut tb = TopologyBuilder::new();
-    for i in 0..spec.servers {
-        tb.add_machine_proc((i % spec.zones) as u8, 2);
-    }
-    for j in 0..spec.clients {
-        tb.add_machine_proc((j % spec.zones) as u8, 2);
-    }
-    tb.build(Topology::aws_regional(spec.zones), 0.0)
-}
-
-/// Contiguous-block placement: servers into `k` ring blocks, clients
-/// into matching blocks.
-pub fn demo_plan(spec: &DemoSpec, topo: &Topology, shards: usize) -> ShardPlan {
-    let k = shards.clamp(1, spec.servers);
-    let mut shard_of = vec![0u32; spec.servers + spec.clients];
-    for (i, s) in shard_of.iter_mut().take(spec.servers).enumerate() {
-        *s = (i * k / spec.servers) as u32;
-    }
-    for j in 0..spec.clients {
-        shard_of[spec.servers + j] = (j * k / spec.clients) as u32;
-    }
-    ShardPlan::build(topo, shard_of).expect("machine-per-process layout always splits cleanly")
-}
-
-/// Run the demo mill on the threaded engine with `shards` workers.
-pub fn run_demo(spec: &DemoSpec, shards: usize, until: Time, sched: SchedKind) -> DemoResult {
-    let (topo, threads) = demo_layout(spec);
-    let plan = demo_plan(spec, &topo, shards);
-    let cfg = ThreadCfg {
-        topo,
-        threads,
-        seed: spec.seed,
-        skew_ms: 0.5,
-        eps_ms: 1,
-        sched,
-        timeline: Timeline::empty(),
-    };
-    let s_n = spec.servers;
-    let run = run_threaded(
-        &cfg,
-        &plan,
-        until,
-        &|shard, sim: &mut Sim| {
-            for i in 0..s_n {
-                if plan.shard_of[i] == shard {
-                    sim.add_actor_at(
-                        ProcId(i as u32),
-                        Box::new(EchoServer {
-                            id: i as u16,
-                            dim: s_n,
-                            svc: spec.svc_us * US,
-                            served: 0,
-                        }),
-                    );
-                }
-            }
-            for j in 0..spec.clients {
-                if plan.shard_of[s_n + j] == shard {
-                    sim.add_actor_at(
-                        ProcId((s_n + j) as u32),
-                        Box::new(LoadClient {
-                            n_servers: s_n as u64,
-                            n_keys: 4_096,
-                            depth: spec.depth,
-                            next_req: 0,
-                            ops_done: 0,
-                        }),
-                    );
-                }
-            }
-        },
-        &|shard, sim: &mut Sim| {
-            let mut ops = 0u64;
-            for j in 0..spec.clients {
-                if plan.shard_of[s_n + j] == shard {
-                    let any = sim
-                        .actor_mut(ProcId((s_n + j) as u32))
-                        .as_any()
-                        .expect("LoadClient downcasts");
-                    ops += any.downcast_mut::<LoadClient>().expect("is LoadClient").ops_done;
-                }
-            }
-            ops
-        },
-    );
-    DemoResult {
-        ops: run.results.iter().sum(),
-        stats: run.stats,
-        per_shard_events: run.per_shard_events,
-        barriers: run.barriers,
-        lookahead: run.lookahead,
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::{ms, MS, SEC};
+    use crate::sim::ms;
+    use crate::sim::net::TopologyBuilder;
 
     #[test]
     fn plan_rejects_bad_shapes() {
@@ -571,67 +413,4 @@ mod tests {
         ok::<SimStats>();
     }
 
-    fn tiny() -> DemoSpec {
-        DemoSpec { servers: 4, clients: 8, zones: 2, depth: 2, svc_us: 20, seed: 7 }
-    }
-
-    #[test]
-    fn demo_makes_progress_and_reports_telemetry() {
-        let spec = tiny();
-        let r = run_demo(&spec, 2, SEC, SchedKind::Heap);
-        assert!(r.ops > 100, "the mill turned: {} ops", r.ops);
-        assert!(r.stats.events > 2 * r.ops, "request+reply per op");
-        assert!(r.barriers > 0);
-        assert_eq!(r.per_shard_events.len(), 2);
-        assert!(r.per_shard_events.iter().all(|&e| e > 0), "both shards worked");
-        assert_eq!(r.lookahead, ms(0.25), "same-zone cross-shard pairs exist");
-    }
-
-    #[test]
-    fn demo_same_seed_reproduces() {
-        let spec = tiny();
-        let a = run_demo(&spec, 2, SEC, SchedKind::Heap);
-        let b = run_demo(&spec, 2, SEC, SchedKind::Heap);
-        assert_eq!(a.ops, b.ops);
-        assert_eq!(a.stats.events, b.stats.events);
-        assert_eq!(a.stats.sent, b.stats.sent);
-        assert_eq!(a.per_shard_events, b.per_shard_events);
-        assert_eq!(a.barriers, b.barriers);
-    }
-
-    #[test]
-    fn demo_is_invariant_under_shard_count() {
-        // the headline determinism property of the threaded engine: the
-        // simulated outcome is a function of (spec, seed) only — shard
-        // count changes wall-clock, not results
-        let spec = tiny();
-        let runs: Vec<DemoResult> =
-            [1usize, 2, 4].iter().map(|&k| run_demo(&spec, k, SEC, SchedKind::Heap)).collect();
-        for r in &runs[1..] {
-            assert_eq!(r.ops, runs[0].ops);
-            assert_eq!(r.stats.events, runs[0].stats.events);
-            assert_eq!(r.stats.sent, runs[0].stats.sent);
-            assert_eq!(r.stats.dropped, runs[0].stats.dropped);
-        }
-        assert_eq!(runs[1].per_shard_events.iter().sum::<u64>(), runs[0].stats.events);
-    }
-
-    #[test]
-    fn demo_calendar_sched_matches_heap() {
-        let spec = tiny();
-        let h = run_demo(&spec, 2, SEC, SchedKind::Heap);
-        let c = run_demo(&spec, 2, SEC, SchedKind::Calendar);
-        assert_eq!(h.ops, c.ops);
-        assert_eq!(h.stats.events, c.stats.events);
-        assert_eq!(h.stats.sent, c.stats.sent);
-        assert_eq!(h.per_shard_events, c.per_shard_events);
-    }
-
-    #[test]
-    fn single_shard_demo_has_one_window() {
-        let spec = tiny();
-        let r = run_demo(&spec, 1, 500 * MS, SchedKind::Heap);
-        assert!(r.ops > 0);
-        assert_eq!(r.barriers, 1, "W = MAX ⇒ the whole run is one window");
-    }
 }

@@ -252,6 +252,9 @@ impl ServerActor {
         for (dst, spec) in regs {
             ctx.send_after(delay, dst, Msg::RegisterPred(Box::new(spec)));
         }
+        // last replica to process the broadcast returns the payload
+        // allocation to the engine's pool for the next ingest
+        ctx.recycle_op(op);
     }
 
     /// Begin catch-up after a restart: ask every peer for its copies of

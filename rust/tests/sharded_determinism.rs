@@ -7,20 +7,22 @@
 //!   the pre-change serial schedules event-for-event);
 //! * the calendar-queue scheduler produces the same schedules as the
 //!   binary heap;
-//! * the threaded engine's runs are a function of (workload, seed)
-//!   only: same-seed reproducible and invariant under the shard count.
+//! * the **threaded engine runs the full production stack** — servers,
+//!   monitors, clients, rollback controller, fault injection, adaptive
+//!   consistency — and is bit-identical to the serial engine at every
+//!   shard count, including repeat runs of the same config.
 
 use optikv::client::consistency::ConsistencyCfg;
 use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
 use optikv::exp::runner::{run, ExpResult};
-use optikv::exp::scenarios;
+use optikv::exp::scenarios::{self, AdaptRun};
 use optikv::sim::des::SchedKind;
-use optikv::sim::shard::{run_demo, DemoSpec};
 use optikv::sim::SEC;
 
 /// Everything observable a schedule change would perturb. Deliberately
-/// excludes `barriers` / `shard_events` — those are engine telemetry
-/// that legitimately varies with the shard count.
+/// excludes `barriers` / `shard_events` / `lookahead` / `shard_actors` —
+/// those are engine telemetry that legitimately varies with the shard
+/// count.
 #[derive(Debug, PartialEq)]
 struct Digest {
     events: u64,
@@ -30,11 +32,18 @@ struct Digest {
     ops_failed: u64,
     quorum_timeouts: u64,
     violations: usize,
+    actual_violations: usize,
     candidates: u64,
+    recoveries: u64,
+    crashes: u64,
     app_tps_bits: u64,
     server_tps_bits: u64,
     app_series_bits: Vec<u64>,
     detection_ms_bits: Vec<u64>,
+    /// announced consistency epochs: (from, epoch, model label) — pins
+    /// the adapt controller's decisions, not just their count
+    mode_timeline: Vec<(u64, u64, String)>,
+    mode_switches: u64,
 }
 
 fn digest(r: &ExpResult) -> Digest {
@@ -46,11 +55,20 @@ fn digest(r: &ExpResult) -> Digest {
         ops_failed: r.ops_failed,
         quorum_timeouts: r.quorum_timeouts,
         violations: r.violations_detected,
+        actual_violations: r.actual_me_violations,
         candidates: r.candidates_seen,
+        recoveries: r.recoveries,
+        crashes: r.crashes,
         app_tps_bits: r.app_tps.to_bits(),
         server_tps_bits: r.server_tps.to_bits(),
         app_series_bits: r.metrics.borrow().app_series().iter().map(|x| x.to_bits()).collect(),
         detection_ms_bits: r.detection_latencies_ms.iter().map(|x| x.to_bits()).collect(),
+        mode_timeline: r
+            .mode_timeline
+            .iter()
+            .map(|sp| (sp.from, sp.epoch, sp.label().to_string()))
+            .collect(),
+        mode_switches: r.mode_switches,
     }
 }
 
@@ -78,6 +96,31 @@ fn assert_shards_match_serial(mk: impl Fn() -> ExpConfig, shard_counts: &[usize]
                 res.shard_events
             );
         }
+    }
+}
+
+/// Assert the full digest is bit-identical between the serial engine and
+/// the **threaded** engine (worker threads + conservative windows) at
+/// each of `shard_counts`.
+fn assert_threaded_matches_serial(mk: impl Fn() -> ExpConfig, shard_counts: &[usize]) {
+    let serial = run(&mk());
+    let want = digest(&serial);
+    for &k in shard_counts {
+        let res = run(&mk().with_shards(k).with_threaded());
+        assert_eq!(digest(&res), want, "threaded shards = {k} diverged from serial");
+        assert!(res.barriers > 0, "threaded shards = {k} ran no window barriers");
+        assert_eq!(
+            res.shard_events.iter().sum::<u64>(),
+            res.sim_stats.events,
+            "every event is attributed to exactly one worker"
+        );
+        assert!(res.lookahead > 0, "the plan reports its conservative window");
+        assert_eq!(res.shard_actors.len(), res.shard_events.len());
+        assert!(
+            res.shard_actors.iter().all(|&n| n > 0),
+            "every worker hosts at least one actor: {:?}",
+            res.shard_actors
+        );
     }
 }
 
@@ -147,28 +190,47 @@ fn calendar_queue_reproduces_heap_schedules() {
 }
 
 // ---------------------------------------------------------------------------
-// the threaded engine
+// the threaded engine: the full production stack on worker threads
 // ---------------------------------------------------------------------------
 
 #[test]
-fn threaded_demo_is_reproducible_and_shard_count_invariant() {
-    let spec = DemoSpec::s24(42);
-    let until = 2 * SEC;
-    let base = run_demo(&spec, 1, until, SchedKind::Heap);
-    assert!(base.ops > 1_000, "the mill turned: {} ops", base.ops);
-    for k in [2usize, 4] {
-        let r = run_demo(&spec, k, until, SchedKind::Heap);
-        assert_eq!(r.ops, base.ops, "shards = {k}");
-        assert_eq!(r.stats.events, base.stats.events, "shards = {k}");
-        assert_eq!(r.stats.sent, base.stats.sent, "shards = {k}");
-        assert_eq!(r.stats.dropped, base.stats.dropped, "shards = {k}");
-        assert!(r.barriers > 0);
-        assert_eq!(r.per_shard_events.iter().sum::<u64>(), r.stats.events);
-        // and the same run again, bit-for-bit
-        let again = run_demo(&spec, k, until, SchedKind::Heap);
-        assert_eq!(again.ops, r.ops);
-        assert_eq!(again.stats.events, r.stats.events);
-        assert_eq!(again.per_shard_events, r.per_shard_events);
-        assert_eq!(again.barriers, r.barriers);
-    }
+fn threaded_full_stack_is_bit_identical_at_every_shard_count() {
+    // 8 servers so 8 workers get a server block each — the whole
+    // production deployment on threads, digest-equal to serial
+    assert_threaded_matches_serial(
+        || scenarios::scaleout_conjunctive(8, 0.05, 42),
+        &[1, 2, 4, 8],
+    );
+}
+
+#[test]
+fn threaded_faulted_run_is_bit_identical() {
+    // crash/restart churn: every worker tracks the global fault view,
+    // only the owning worker delivers lifecycle hooks — digests agree
+    assert_threaded_matches_serial(|| scenarios::crash_churn_conjunctive(0.05, 42), &[1, 2]);
+}
+
+#[test]
+fn threaded_adaptive_run_is_bit_identical() {
+    // the adapt controller lives on worker 0, its clients everywhere:
+    // report/announce/ack traffic crosses shard boundaries and the
+    // announced mode timeline must still be bit-identical
+    assert_threaded_matches_serial(
+        || scenarios::adaptive_conjunctive(AdaptRun::Adaptive, 0.05, 42),
+        &[1, 2],
+    );
+}
+
+#[test]
+fn threaded_run_is_reproducible() {
+    // thread scheduling must leak nothing: the same config twice gives
+    // the same digest AND the same engine telemetry
+    let mk = || scenarios::scaleout_conjunctive(8, 0.05, 42).with_shards(4).with_threaded();
+    let a = run(&mk());
+    let b = run(&mk());
+    assert_eq!(digest(&a), digest(&b));
+    assert_eq!(a.barriers, b.barriers);
+    assert_eq!(a.shard_events, b.shard_events);
+    assert_eq!(a.lookahead, b.lookahead);
+    assert_eq!(a.shard_actors, b.shard_actors);
 }
