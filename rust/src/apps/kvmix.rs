@@ -1,0 +1,391 @@
+//! *KvMix*: a YCSB-style read/write-mix workload app driven by the
+//! [`crate::workload`] engine — the production-shaped counterpart to the
+//! paper's three fixed-graph applications.
+//!
+//! Each cycle the app draws a key rank from the configured popularity
+//! sampler ([`crate::workload::keyspace::KeySampler`]), flips a
+//! `put_pct` coin, and issues a GET or PUT on `kv_{rank}`. Writes to the
+//! first `guarded` ranks — the *hot set* — are **guarded**: the client
+//! raises its per-key occupancy flag `occ_{k}_{i}`, writes the value,
+//! then lowers the flag. The monitors watch one predicate per hot key,
+//!
+//! ```text
+//! kvmix_hot_k :  ∃ ring-adjacent clients i, j :  occ_k_i = 1 ∧ occ_k_j = 1
+//! ```
+//!
+//! so two neighbouring clients concurrently inside the same hot key's
+//! write window is a detected violation — exactly the mutual-exclusion-
+//! under-eventual-consistency shape of the paper's §VI apps, but with a
+//! violation rate governed by key skew instead of a β coin. Clauses
+//! pair only ring-adjacent clients (i, i+1 mod c), bounding monitor
+//! cost at c clauses per hot key instead of c² while keeping the
+//! detection probability monotone in contention.
+//!
+//! With a [`crate::workload::shape::LoadShape`] configured the app
+//! paces itself: after each cycle it sleeps `1/rate(now)`, so flash
+//! crowds and diurnal curves show up as real arrival-rate changes. No
+//! shape → no sleeps → the client's own think-time pacing rules, which
+//! is the inert default path.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, LastResult};
+use crate::metrics::throughput::MetricsHub;
+use crate::predicate::spec::{Clause, Conjunct, Literal, PredId, PredKind, PredicateSpec, Registry};
+use crate::store::value::{Interner, KeyId, Value};
+use crate::workload::keyspace::KeySampler;
+use crate::workload::shape::LoadShape;
+use crate::workload::WorkloadCfg;
+
+/// Keyspace, predicates and sampler shared by every kvmix client.
+#[derive(Clone)]
+pub struct KvMixShared {
+    pub interner: Rc<RefCell<Interner>>,
+    /// value keys `kv_{r}`, rank-indexed
+    pub kv: Rc<Vec<KeyId>>,
+    /// occupancy flags: `occ[k][i]` = client i's flag for hot key k
+    pub occ: Rc<Vec<Vec<KeyId>>>,
+    pub pred_ids: Rc<Vec<PredId>>,
+    pub sampler: Rc<KeySampler>,
+    pub shape: Option<Rc<LoadShape>>,
+    pub put_pct: f64,
+    pub n_clients: usize,
+    /// per-rank op counts flow into the hub (merged across shards like
+    /// every other counter), powering the contention stats in
+    /// [`crate::exp::runner::ExpResult`]
+    pub metrics: Rc<RefCell<MetricsHub>>,
+}
+
+impl KvMixShared {
+    /// Intern the keyspace, build the sampler, and register one
+    /// ring-adjacency predicate per guarded hot key. Deterministic: no
+    /// RNG, interning order is rank-major then client-major.
+    pub fn setup(
+        registry: &Rc<RefCell<Registry>>,
+        interner: Rc<RefCell<Interner>>,
+        wl: &WorkloadCfg,
+        n_clients: usize,
+        metrics: Rc<RefCell<MetricsHub>>,
+    ) -> Self {
+        assert!(wl.n_keys > 0 && wl.guarded <= wl.n_keys);
+        let kv: Vec<KeyId> =
+            (0..wl.n_keys).map(|r| interner.borrow_mut().intern(&format!("kv_{r}"))).collect();
+        let mut occ = Vec::with_capacity(wl.guarded);
+        let mut pred_ids = Vec::with_capacity(wl.guarded);
+        for k in 0..wl.guarded {
+            let flags: Vec<KeyId> = (0..n_clients)
+                .map(|i| interner.borrow_mut().intern(&format!("occ_{k}_{i}")))
+                .collect();
+            // ring-adjacent pairs; c = 2 collapses to the single pair
+            let mut clauses = Vec::new();
+            for i in 0..n_clients {
+                let j = (i + 1) % n_clients;
+                if j == i || (n_clients == 2 && i == 1) {
+                    continue;
+                }
+                clauses.push(Clause {
+                    conjuncts: [flags[i], flags[j]]
+                        .iter()
+                        .map(|&v| Conjunct {
+                            literals: vec![Literal { var: v, value: Value::Int(1) }],
+                        })
+                        .collect(),
+                });
+            }
+            if !clauses.is_empty() {
+                let spec = PredicateSpec {
+                    id: PredId(u32::MAX),
+                    name: format!("kvmix_hot_{k}"),
+                    kind: PredKind::Linear,
+                    clauses,
+                };
+                pred_ids.push(registry.borrow_mut().add(spec));
+            }
+            occ.push(flags);
+        }
+        Self {
+            interner,
+            kv: Rc::new(kv),
+            occ: Rc::new(occ),
+            pred_ids: Rc::new(pred_ids),
+            sampler: Rc::new(KeySampler::new(&wl.dist, wl.n_keys)),
+            shape: wl.shape.as_ref().map(|s| Rc::new(s.clone())),
+            put_pct: wl.put_pct,
+            n_clients,
+            metrics,
+        }
+    }
+}
+
+pub struct KvMixApp {
+    sh: KvMixShared,
+    client: u32,
+    /// remaining ops of the current cycle, issued back-to-front
+    pending: Vec<AppOp>,
+    /// pace (sleep) before opening the next cycle
+    need_pace: bool,
+    /// stop after this many cycles (0 = run until the clock stops us)
+    pub max_cycles: u64,
+    pub cycles: u64,
+    pub guarded_writes: u64,
+}
+
+impl KvMixApp {
+    pub fn new(sh: KvMixShared, client: u32, max_cycles: u64) -> Self {
+        Self {
+            sh,
+            client,
+            pending: Vec::new(),
+            need_pace: false,
+            max_cycles,
+            cycles: 0,
+            guarded_writes: 0,
+        }
+    }
+
+    /// Open a new cycle: exactly one sampler draw plus one mix coin, in
+    /// that order — the fixed draw pattern every engine replays.
+    fn open_cycle(&mut self, env: &mut AppEnv) -> AppAction {
+        if self.max_cycles > 0 && self.cycles >= self.max_cycles {
+            return AppAction::Done;
+        }
+        let r = self.sh.sampler.sample(env.rng);
+        let write = env.rng.chance(self.sh.put_pct);
+        self.cycles += 1;
+        self.need_pace = self.sh.shape.is_some();
+        self.sh.metrics.borrow_mut().bump_key(r);
+        let key = self.sh.kv[r];
+        if !write {
+            return AppAction::Op(AppOp::Get(key));
+        }
+        let val = Value::Int(self.cycles as i64);
+        if r < self.sh.occ.len() {
+            // guarded write: occupy → write → release. The occupancy
+            // window is what the hot-key predicates observe.
+            self.guarded_writes += 1;
+            let flag = self.sh.occ[r][self.client as usize % self.sh.n_clients];
+            let occupy = AppOp::Put(flag, Value::Int(1));
+            let put = AppOp::Put(key, val);
+            let release = AppOp::Put(flag, Value::Int(0));
+            if env.pipelined() {
+                // occupy and the value write are independent keys:
+                // overlap them, but the release must gather-wait so the
+                // occupancy window covers the write
+                self.pending.push(release);
+                return AppAction::Batch(vec![occupy, put]);
+            }
+            self.pending.push(release);
+            self.pending.push(put);
+            return AppAction::Op(occupy);
+        }
+        AppAction::Op(AppOp::Put(key, val))
+    }
+}
+
+impl AppLogic for KvMixApp {
+    fn name(&self) -> &'static str {
+        "kvmix"
+    }
+
+    fn next(&mut self, env: &mut AppEnv, _last: Option<LastResult>) -> AppAction {
+        if let Some(op) = self.pending.pop() {
+            return AppAction::Op(op);
+        }
+        if self.need_pace {
+            self.need_pace = false;
+            if let Some(shape) = &self.sh.shape {
+                return AppAction::Sleep(shape.gap_at(env.now));
+            }
+        }
+        self.open_cycle(env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::app::OpOutcome;
+    use crate::sim::SEC;
+    use crate::util::rng::Rng;
+    use crate::workload::keyspace::KeyDist;
+
+    fn setup(wl: &WorkloadCfg, n_clients: usize) -> (KvMixShared, Rc<RefCell<Registry>>) {
+        let registry = Rc::new(RefCell::new(Registry::new()));
+        let sh =
+            KvMixShared::setup(&registry, Interner::new(), wl, n_clients, MetricsHub::new(1, 1));
+        (sh, registry)
+    }
+
+    /// Drive the app serially, feeding PutOk/GetOk, collecting ops.
+    fn drive(app: &mut KvMixApp, seed: u64, pipeline: usize) -> (Vec<AppOp>, u64) {
+        let mut rng = Rng::new(seed);
+        let mut ops = Vec::new();
+        let mut sleeps = 0u64;
+        let mut last = None;
+        loop {
+            let mut env = AppEnv {
+                now: sleeps * SEC,
+                seq: 0,
+                client_idx: app.client,
+                pipeline,
+                rng: &mut rng,
+            };
+            match app.next(&mut env, last.take()) {
+                AppAction::Op(op) => {
+                    let out = match &op {
+                        AppOp::Get(_) => OpOutcome::GetOk(vec![]),
+                        AppOp::Put(..) => OpOutcome::PutOk,
+                    };
+                    ops.push(op.clone());
+                    last = Some(LastResult::Op(op, out));
+                }
+                AppAction::Batch(batch) => {
+                    let pairs: Vec<(AppOp, OpOutcome)> = batch
+                        .into_iter()
+                        .map(|op| {
+                            ops.push(op.clone());
+                            (op, OpOutcome::PutOk)
+                        })
+                        .collect();
+                    last = Some(LastResult::Batch(pairs));
+                }
+                AppAction::Sleep(_) => {
+                    sleeps += 1;
+                    last = None;
+                }
+                AppAction::Done => break,
+            }
+        }
+        (ops, sleeps)
+    }
+
+    #[test]
+    fn hot_key_predicates_pair_ring_neighbours() {
+        let wl = WorkloadCfg::uniform_default().with_keys(16, 3);
+        let (sh, registry) = setup(&wl, 5);
+        assert_eq!(registry.borrow().len(), 3, "one predicate per guarded key");
+        let reg = registry.borrow();
+        for &id in sh.pred_ids.iter() {
+            let spec = reg.get(id);
+            assert_eq!(spec.kind, PredKind::Linear);
+            assert_eq!(spec.clauses.len(), 5, "c ring-adjacent pairs for c = 5 clients");
+            for clause in &spec.clauses {
+                assert_eq!(clause.conjuncts.len(), 2, "pairwise contention clauses");
+            }
+        }
+        // flag occ_0_0 participates in predicate 0 (clauses (0,1) and (4,0))
+        let hits = reg.affected(sh.occ[0][0]).unwrap();
+        assert!(hits.iter().all(|h| h.0 == sh.pred_ids[0]));
+        assert_eq!(hits.len(), 2);
+    }
+
+    #[test]
+    fn two_clients_collapse_to_one_pair() {
+        let wl = WorkloadCfg::uniform_default().with_keys(8, 1);
+        let (_, registry) = setup(&wl, 2);
+        let reg = registry.borrow();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get(PredId(0)).clauses.len(), 1, "ring of 2 has a single edge");
+    }
+
+    #[test]
+    fn guarded_writes_bracket_the_value_with_occupancy() {
+        // put_pct = 1, all keys guarded: every cycle is occupy → write → release
+        let wl = WorkloadCfg::uniform_default().with_keys(2, 2).with_mix(1.0);
+        let (sh, _) = setup(&wl, 3);
+        let mut app = KvMixApp::new(sh.clone(), 1, 10);
+        let (ops, sleeps) = drive(&mut app, 7, 1);
+        assert_eq!(sleeps, 0, "no shape, no pacing");
+        assert_eq!(ops.len(), 30, "3 ops per guarded cycle");
+        assert_eq!(app.guarded_writes, 10);
+        for cycle in ops.chunks(3) {
+            let flag = cycle[0].key();
+            assert!(matches!(cycle[0], AppOp::Put(_, Value::Int(1))), "occupy first");
+            assert!(sh.kv.contains(&cycle[1].key()), "value write in the middle");
+            assert!(matches!(cycle[2], AppOp::Put(_, Value::Int(0))), "release last");
+            assert_eq!(cycle[2].key(), flag, "release lowers the same flag");
+        }
+    }
+
+    #[test]
+    fn pipelined_guarded_write_batches_occupy_with_value() {
+        let wl = WorkloadCfg::uniform_default().with_keys(2, 2).with_mix(1.0);
+        let (sh, _) = setup(&wl, 3);
+        let mut app = KvMixApp::new(sh, 0, 5);
+        let mut rng = Rng::new(3);
+        let mut env = AppEnv { now: 0, seq: 0, client_idx: 0, pipeline: 4, rng: &mut rng };
+        match app.next(&mut env, None) {
+            AppAction::Batch(ops) => {
+                assert_eq!(ops.len(), 2, "occupy + value overlap");
+                assert!(matches!(ops[0], AppOp::Put(_, Value::Int(1))));
+            }
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        // the release gathers after the wave
+        let mut env = AppEnv { now: 0, seq: 0, client_idx: 0, pipeline: 4, rng: &mut rng };
+        match app.next(&mut env, None) {
+            AppAction::Op(AppOp::Put(_, Value::Int(0))) => {}
+            other => panic!("expected the release, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mix_matches_put_pct_and_unguarded_ops_are_bare() {
+        let wl = WorkloadCfg::uniform_default().with_keys(64, 0).with_mix(0.25);
+        let (_, _registry) = setup(&wl, 4);
+        let (sh, _) = setup(&wl, 4);
+        let mut app = KvMixApp::new(sh, 2, 4000);
+        let (ops, _) = drive(&mut app, 11, 1);
+        assert_eq!(ops.len(), 4000, "no guarded keys: one op per cycle");
+        let puts = ops.iter().filter(|o| matches!(o, AppOp::Put(..))).count();
+        let frac = puts as f64 / ops.len() as f64;
+        assert!((frac - 0.25).abs() < 0.03, "put fraction {frac}");
+    }
+
+    #[test]
+    fn shape_paces_one_sleep_per_cycle() {
+        let wl = WorkloadCfg::uniform_default()
+            .with_keys(8, 0)
+            .with_mix(0.0)
+            .with_shape(LoadShape::constant(10.0, 100 * SEC));
+        let (sh, _) = setup(&wl, 2);
+        let mut app = KvMixApp::new(sh, 0, 20);
+        let (ops, sleeps) = drive(&mut app, 5, 1);
+        assert_eq!(ops.len(), 20);
+        assert_eq!(sleeps, 20, "one pacing sleep after every cycle");
+    }
+
+    #[test]
+    fn skewed_sampler_concentrates_traffic_and_counts_keys() {
+        let wl = WorkloadCfg::uniform_default()
+            .with_keys(32, 0)
+            .with_dist(KeyDist::Zipf { theta: 1.2 })
+            .with_mix(0.0);
+        let (sh, _) = setup(&wl, 2);
+        let mut app = KvMixApp::new(sh.clone(), 0, 3000);
+        let (ops, _) = drive(&mut app, 13, 1);
+        let hot = ops.iter().filter(|o| o.key() == sh.kv[0]).count();
+        assert!(hot > ops.len() / 5, "rank 0 dominates at theta = 1.2 ({hot})");
+        let key_ops = sh.metrics.borrow().key_ops().to_vec();
+        assert_eq!(key_ops.iter().sum::<u64>(), 3000, "every cycle counted");
+        assert_eq!(key_ops[0], hot as u64, "counts track sampled ranks");
+    }
+
+    #[test]
+    fn op_stream_is_seed_deterministic() {
+        let wl = WorkloadCfg::uniform_default()
+            .with_keys(16, 4)
+            .with_dist(KeyDist::Zipf { theta: 0.99 });
+        let (sh_a, _) = setup(&wl, 3);
+        let (sh_b, _) = setup(&wl, 3);
+        let mut a = KvMixApp::new(sh_a, 1, 200);
+        let mut b = KvMixApp::new(sh_b, 1, 200);
+        let (ops_a, _) = drive(&mut a, 21, 1);
+        let (ops_b, _) = drive(&mut b, 21, 1);
+        assert_eq!(ops_a.len(), ops_b.len());
+        for (x, y) in ops_a.iter().zip(&ops_b) {
+            assert_eq!(x.key(), y.key());
+        }
+    }
+}

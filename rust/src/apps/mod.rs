@@ -1,8 +1,10 @@
 //! The paper's three case-study applications (§VI-A) plus the graph
-//! substrate and the Peterson edge-lock protocol they share.
+//! substrate and the Peterson edge-lock protocol they share, and the
+//! production-traffic [`kvmix`] read/write-mix workload app.
 
 pub mod coloring;
 pub mod conjunctive;
 pub mod graph;
+pub mod kvmix;
 pub mod peterson;
 pub mod weather;

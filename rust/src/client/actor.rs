@@ -28,10 +28,11 @@ use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, LastResult, OpOutco
 use crate::client::consistency::{ClientTiming, ConsistencyCfg};
 use crate::client::quorum::{QuorumCall, QuorumStep};
 use crate::clock::hvc::Hvc;
+use crate::faults::state::FaultHook;
 use crate::metrics::throughput::Metrics;
 use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{AdaptMsg, Msg, RollbackMsg};
-use crate::sim::ProcId;
+use crate::sim::{ProcId, Time};
 use crate::store::protocol::{ServerOp, ServerReply};
 use crate::store::ring::Router;
 
@@ -94,6 +95,11 @@ pub struct ClientActor {
     seen_hvc: Option<Rc<Hvc>>,
     metrics: Metrics,
     done: bool,
+    /// false while churned out (workload [`crate::workload::churn`]
+    /// schedules lower to crash/restart hooks on client procs). Timers
+    /// and stragglers still *arrive* while inactive — a departed client
+    /// cannot intercept the network — so every handler gates on this.
+    active: bool,
     /// where and how often to push [`AdaptMsg::Report`] signal digests.
     /// `None` (the default) sends nothing — a cluster without an adapt
     /// controller stays bit-identical to one that never heard of adaptation.
@@ -107,6 +113,8 @@ pub struct ClientActor {
     pub ops_ok: u64,
     pub ops_failed: u64,
     pub restarts: u64,
+    /// churn rejoins completed (leave/rejoin cycles survived)
+    pub rejoins: u64,
 }
 
 impl ClientActor {
@@ -155,6 +163,7 @@ impl ClientActor {
             seen_hvc: None,
             metrics,
             done: false,
+            active: true,
             adapt_report: None,
             rep_ops: 0,
             rep_timeouts: 0,
@@ -162,6 +171,7 @@ impl ClientActor {
             ops_ok: 0,
             ops_failed: 0,
             restarts: 0,
+            rejoins: 0,
         }
     }
 
@@ -399,6 +409,9 @@ impl Actor for ClientActor {
     }
 
     fn on_msg(&mut self, ctx: &mut Ctx, from: ProcId, msg: Msg) {
+        if !self.active {
+            return; // stragglers delivered after the client left
+        }
         match msg {
             Msg::Reply { req, reply, hvc } => {
                 self.merge_seen(&hvc);
@@ -436,6 +449,17 @@ impl Actor for ClientActor {
     }
 
     fn on_timer(&mut self, ctx: &mut Ctx, tag: u64) {
+        if !self.active {
+            // keep the periodic report chain armed across the outage (it
+            // is the actor's own timer, not network traffic); everything
+            // else went stale when the client left
+            if tag == REPORT_FLAG {
+                if let Some((_, window)) = self.adapt_report {
+                    ctx.schedule(window, REPORT_FLAG);
+                }
+            }
+            return;
+        }
         if tag & THINK_FLAG != 0 {
             if (tag & !THINK_FLAG) == self.think_seq {
                 if let Some((single, ops)) = self.stashed.take() {
@@ -464,6 +488,33 @@ impl Actor for ClientActor {
             }
         } else {
             self.on_timeout(ctx, tag);
+        }
+    }
+
+    fn on_fault(&mut self, ctx: &mut Ctx, hook: FaultHook) {
+        match hook {
+            FaultHook::Crash => {
+                // the client left: in-flight calls, parked waves and
+                // accumulated report signals are volatile state
+                self.active = false;
+                self.calls.clear();
+                self.wave = None;
+                self.stashed = None;
+                self.think_seq += 1; // pending think timers go stale
+                self.rep_ops = 0;
+                self.rep_timeouts = 0;
+                self.rep_lat.clear();
+            }
+            FaultHook::Restart => {
+                if !self.active {
+                    self.rejoins += 1;
+                    self.active = true;
+                    if !self.done {
+                        // resume the closed loop from a fresh app step
+                        self.advance(ctx, None);
+                    }
+                }
+            }
         }
     }
 

@@ -11,6 +11,7 @@ use crate::rollback::recovery::RecoveryPolicy;
 use crate::sim::des::SchedKind;
 use crate::sim::{Time, SEC};
 use crate::store::server::ServerCfg;
+use crate::workload::WorkloadCfg;
 
 /// Which testbed to simulate.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,6 +41,10 @@ pub enum AppKind {
     Weather { grid_w: usize, grid_h: usize, put_pct: f64, use_locks: bool },
     /// Conjunctive stress / latency test
     Conjunctive { n_preds: usize, n_conjuncts: usize, beta: f64, put_pct: f64 },
+    /// Production-traffic read/write mix driven by the workload engine
+    /// ([`crate::apps::kvmix`]): key skew, guarded hot keys, load shapes
+    /// — the knobs live in [`ExpConfig::workload`]
+    KvMix,
 }
 
 /// Verdict backend for the monitors.
@@ -80,10 +85,21 @@ pub struct ExpConfig {
     pub seed: u64,
     /// virtual run length
     pub duration: Time,
-    /// HVC ε; the paper's experiments treat ε as ∞ (§III-A) — pure vector
-    /// clocks. Finite values are exercised in ablations.
+    /// HVC ε; the paper's experiments treat ε as ∞ (§III-A) — pure
+    /// vector clocks — and finite values are exercised in ablations.
+    /// Under a *skewed* workload ([`Self::workload`]) ε also bounds how
+    /// long two hot-key occupancy intervals can appear concurrent purely
+    /// due to clock uncertainty: a finite ε trims spurious overlap on
+    /// contended keys (fewer false candidates) at the cost of missing
+    /// genuinely concurrent windows shorter than ε, so skew sweeps pin
+    /// ε = ∞ to keep the violation-rate-vs-θ curve a property of the
+    /// traffic, not of the clock model.
     pub eps_ms: Millis,
-    /// physical clock skew bound of the simulated cluster
+    /// physical clock skew bound of the simulated cluster. Hot-key
+    /// contention windows (kvmix guarded writes) are O(one op RTT), so
+    /// `skew_ms` must stay well below the op latency for detected
+    /// violation counts under skewed workloads to track true contention;
+    /// the defaults (0.5 ms vs ≥ ms-scale RTTs) satisfy this.
     pub skew_ms: f64,
     /// Voldemort server threads per machine (paper: M5 instances run 2)
     pub server_threads: usize,
@@ -113,6 +129,11 @@ pub struct ExpConfig {
     /// single-threaded engine. Requires `shards >= 1`; results are
     /// bit-identical to both other engines at every shard count.
     pub threaded: bool,
+    /// production-traffic workload ([`crate::workload`]): key skew and
+    /// mix (consumed by [`AppKind::KvMix`]), load shape, client churn.
+    /// The default ([`WorkloadCfg::uniform_default`]) is inert and
+    /// reproduces pre-workload runs bit-identically.
+    pub workload: WorkloadCfg,
     /// pending-event scheduler backing each shard's queue
     pub sched: SchedKind,
 }
@@ -147,6 +168,7 @@ impl ExpConfig {
             shards: 0,
             threaded: false,
             sched: SchedKind::Heap,
+            workload: WorkloadCfg::uniform_default(),
         }
     }
 
@@ -184,6 +206,18 @@ impl ExpConfig {
             panic!("bad adapt config: {e}");
         }
         self.adapt = adapt;
+        self
+    }
+
+    /// Attach a production-traffic workload. Validated against the
+    /// run's client count and duration — experiment construction is the
+    /// right time to find out about a bad theta or an out-of-window
+    /// churn event.
+    pub fn with_workload(mut self, workload: WorkloadCfg) -> Self {
+        if let Err(e) = workload.validate(self.n_clients, self.duration) {
+            panic!("bad workload config: {e}");
+        }
+        self.workload = workload;
         self
     }
 
@@ -261,6 +295,60 @@ mod tests {
         assert!(!cfg.adapt.enabled(), "static consistency by default");
         assert_eq!(cfg.shards, 0, "legacy single event queue by default");
         assert_eq!(cfg.sched, SchedKind::Heap);
+        assert_eq!(cfg.workload, WorkloadCfg::uniform_default());
+        assert!(cfg.workload.is_inert(), "default workload perturbs nothing");
+    }
+
+    #[test]
+    fn workload_builder_validates_against_the_run() {
+        use crate::workload::keyspace::KeyDist;
+        let cfg = ExpConfig::new(
+            "t",
+            ConsistencyCfg::n3r1w1(),
+            AppKind::KvMix,
+        )
+        .with_workload(
+            WorkloadCfg::uniform_default()
+                .with_keys(128, 8)
+                .with_dist(KeyDist::Zipf { theta: 0.99 }),
+        );
+        assert_eq!(cfg.workload.n_keys, 128);
+        assert!(!matches!(cfg.workload.dist, KeyDist::Uniform));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad workload config")]
+    fn workload_builder_rejects_nonpositive_theta() {
+        use crate::workload::keyspace::KeyDist;
+        let _ = ExpConfig::new("t", ConsistencyCfg::n3r1w1(), AppKind::KvMix)
+            .with_workload(
+                WorkloadCfg::uniform_default().with_dist(KeyDist::Zipf { theta: 0.0 }),
+            );
+    }
+
+    #[test]
+    #[should_panic(expected = "bad workload config")]
+    fn workload_builder_rejects_churn_outside_duration() {
+        use crate::workload::churn::{ChurnEvent, ChurnPlan};
+        // default duration is 120 s: a leave at 200 s can never happen
+        let _ = ExpConfig::new("t", ConsistencyCfg::n3r1w1(), AppKind::KvMix)
+            .with_workload(WorkloadCfg::uniform_default().with_churn(
+                ChurnPlan::none().with(ChurnEvent {
+                    client: 0,
+                    at: 200 * SEC,
+                    rejoin_after: 0,
+                }),
+            ));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad workload config")]
+    fn workload_builder_rejects_empty_shape() {
+        let _ = ExpConfig::new("t", ConsistencyCfg::n3r1w1(), AppKind::KvMix)
+            .with_workload(
+                WorkloadCfg::uniform_default()
+                    .with_shape(crate::workload::shape::LoadShape::default()),
+            );
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! | `scaleout-s24`         | 24-server ring, spilled HVCs (dim > inline cap)   |
 //! | `scaleout-s24-shards{2,4,8}` | the **full stack on the threaded engine** ([`crate::sim::shard::run_threaded`]) |
 //! | `faulted`              | crash/restart + re-sync (fault view on every send)|
+//! | `kvmix-zipf{0.99,1.2}-s24` | the workload engine: alias-table draws + hot-key predicates on a 24-server ring |
+//! | `flashcrowd-s24`       | load-shape pacing + partition + adapt round trip  |
 //!
 //! The `shards{k}` rows run the *same* `scaleout-s24` deployment —
 //! servers, co-located monitors, closed-loop clients, rollback
@@ -42,7 +44,7 @@ use crate::exp::config::ExpConfig;
 use crate::exp::{runner, scenarios};
 
 /// The fixed matrix, smallest row first (CI smoke runs `MATRIX[0]`).
-pub const MATRIX: [&str; 7] = [
+pub const MATRIX: [&str; 10] = [
     "serial",
     "pipelined-d8",
     "scaleout-s24",
@@ -50,6 +52,9 @@ pub const MATRIX: [&str; 7] = [
     "scaleout-s24-shards4",
     "scaleout-s24-shards8",
     "faulted",
+    "kvmix-zipf0.99-s24",
+    "kvmix-zipf1.2-s24",
+    "flashcrowd-s24",
 ];
 
 /// One measured matrix row.
@@ -115,6 +120,22 @@ pub fn matrix_cfg(row: &str, scale: f64, seed: u64) -> ExpConfig {
         "scaleout-s24" => scenarios::scaleout_conjunctive(24, scale, seed),
         // crash/restart churn: the fault view sits on every send
         "faulted" => scenarios::crash_churn_conjunctive(scale, seed),
+        // the workload engine wall-clock: Zipf alias-table draws and
+        // guarded hot-key traffic on the 24-server partitioned ring
+        "kvmix-zipf0.99-s24" => {
+            scenarios::kvmix_skew(0.99, scenarios::AdaptRun::StaticEventual, scale, seed)
+                .with_cluster_servers(24)
+        }
+        "kvmix-zipf1.2-s24" => {
+            scenarios::kvmix_skew(1.2, scenarios::AdaptRun::StaticEventual, scale, seed)
+                .with_cluster_servers(24)
+        }
+        // shape pacing + mid-run partition + hysteresis round trip: the
+        // whole new-subsystem stack in one wall-clock row
+        "flashcrowd-s24" => {
+            scenarios::kvmix_flash_crowd(scenarios::AdaptRun::Adaptive, true, scale, seed)
+                .with_cluster_servers(24)
+        }
         other => match sharded_row_shards(other) {
             // the scale-out deployment on the threaded engine
             Some(k) => scenarios::scaleout_conjunctive(24, scale, seed)
@@ -176,7 +197,7 @@ fn push_json_str(out: &mut String, s: &str) {
 pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenance: &str) -> String {
     let mut o = String::new();
     o.push_str("{\n");
-    o.push_str("  \"schema\": 3,\n");
+    o.push_str("  \"schema\": 4,\n");
     o.push_str("  \"bench\": \"hotpath\",\n");
     o.push_str(&format!("  \"scale\": {scale},\n"));
     o.push_str(&format!("  \"seed\": {seed},\n"));
@@ -240,6 +261,14 @@ mod tests {
         assert_eq!(sharded.shards, 4);
         assert!(sharded.threaded, "shards rows run the threaded engine");
         assert!(sharded.monitors, "the full stack, not an engine-only mill");
+        let kvmix = matrix_cfg("kvmix-zipf1.2-s24", 0.05, 7);
+        assert_eq!(kvmix.n_servers(), 24);
+        assert_eq!(kvmix.app, crate::exp::config::AppKind::KvMix);
+        assert!(!kvmix.workload.is_inert(), "the skew rows exercise the sampler");
+        let fc = matrix_cfg("flashcrowd-s24", 0.05, 7);
+        assert_eq!(fc.n_servers(), 24);
+        assert!(fc.workload.shape.is_some(), "shape pacing is the point of the row");
+        assert!(fc.adapt.enabled() && !fc.fault_plan.is_none(), "full round-trip stack");
     }
 
     #[test]
@@ -305,7 +334,7 @@ mod tests {
         assert!(row.pairs_checked <= row.pairs_charged);
         let json = to_json(&[row], 0.01, 7, true, "unit-test");
         for key in [
-            "\"schema\": 3",
+            "\"schema\": 4",
             "\"measured\": true",
             "\"name\": \"serial\"",
             "\"events_per_sec\"",

@@ -22,6 +22,7 @@ use crate::adapt::{AdaptController, ModeSpan};
 use crate::apps::coloring::{ColoringApp, ColoringShared};
 use crate::apps::conjunctive::{ConjunctiveApp, ConjunctiveShared};
 use crate::apps::graph::Graph;
+use crate::apps::kvmix::{KvMixApp, KvMixShared};
 use crate::apps::peterson::{MeOracle, MeOracleRef};
 use crate::apps::weather::{WeatherApp, WeatherShared};
 use crate::client::actor::ClientActor;
@@ -42,6 +43,7 @@ use crate::store::server::ServerActor;
 use crate::store::value::Interner;
 use crate::util::rng::Rng;
 use crate::util::stats::Cdf;
+use crate::workload::shape::LoadShape;
 
 /// Everything a bench/example needs after a run.
 pub struct ExpResult {
@@ -81,6 +83,8 @@ pub struct ExpResult {
     pub ops_ok: u64,
     pub ops_failed: u64,
     pub restarts: u64,
+    /// churn leave/rejoin cycles completed by clients
+    pub rejoins: u64,
     /// quorum rounds that expired client-side (serial-round fallbacks +
     /// timeout failures) — the liveness signal the adapt controller
     /// consumes via client reports
@@ -109,6 +113,17 @@ pub struct ExpResult {
     /// actors hosted per shard under the plan (empty on the single-queue
     /// engine)
     pub shard_actors: Vec<usize>,
+    /// workload/contention stats ([`crate::workload`]): detected
+    /// violations per 1000 successful ops — the violation *rate* a skew
+    /// sweep plots against zipf θ
+    pub violations_per_kop: f64,
+    /// share of keyed ops on the hottest single rank (0 unless kvmix ran)
+    pub hot_key_share: f64,
+    /// smallest number of key ranks absorbing 90% of keyed traffic
+    pub keys_p90: usize,
+    /// stable throughput per load-shape phase (empty without a shape):
+    /// every full metrics window attributed to the segment covering it
+    pub phase_tps: Vec<(String, f64)>,
 }
 
 /// Ring-block shard placement for the runner's actor layout
@@ -283,6 +298,16 @@ fn build_world(
                 apps.push(Box::new(ConjunctiveApp::new(sh.clone(), i as u32, 0)));
             }
         }
+        AppKind::KvMix => {
+            // the workload engine's app: key space, samplers and hot-key
+            // predicates all derive from `cfg.workload` with no RNG draws,
+            // so every shard freezes the identical interner/registry state
+            let sh =
+                KvMixShared::setup(&registry, interner.clone(), &cfg.workload, c, metrics.clone());
+            for i in 0..c {
+                apps.push(Box::new(KvMixApp::new(sh.clone(), i as u32, 0)));
+            }
+        }
     }
 
     // ---- actor registration (sparse on worker shards) ----
@@ -391,6 +416,7 @@ struct Harvest {
     ops_ok: u64,
     ops_failed: u64,
     restarts: u64,
+    rejoins: u64,
     crashes: u64,
     resyncs: u64,
     resync_keys: u64,
@@ -419,6 +445,7 @@ fn harvest(
         ops_ok: 0,
         ops_failed: 0,
         restarts: 0,
+        rejoins: 0,
         crashes: 0,
         resyncs: 0,
         resync_keys: 0,
@@ -442,6 +469,7 @@ fn harvest(
                 h.ops_ok += cl.ops_ok;
                 h.ops_failed += cl.ops_failed;
                 h.restarts += cl.restarts;
+                h.rejoins += cl.rejoins;
             }
         }
     }
@@ -488,6 +516,7 @@ fn merge_harvests(mut hs: Vec<Harvest>) -> Harvest {
         acc.ops_ok += h.ops_ok;
         acc.ops_failed += h.ops_failed;
         acc.restarts += h.restarts;
+        acc.rejoins += h.rejoins;
         acc.crashes += h.crashes;
         acc.resyncs += h.resyncs;
         acc.resync_keys += h.resync_keys;
@@ -538,6 +567,22 @@ fn finalize(cfg: &ExpConfig, h: Harvest, engine: EngineRun) -> ExpResult {
     let active_preds_peak = metrics.borrow().active_preds_peak;
     let actual_me_violations = oracle.borrow().violations().len();
     let detection_cdf = Cdf::new(detection_latencies_ms.clone());
+    let violations_per_kop = if h.ops_ok == 0 {
+        0.0
+    } else {
+        violations_detected as f64 * 1000.0 / h.ops_ok as f64
+    };
+    let (hot_key_share, keys_p90) = {
+        let m = metrics.borrow();
+        (m.hot_key_share(), m.keys_covering(0.9))
+    };
+    let phase_tps = match &cfg.workload.shape {
+        None => Vec::new(),
+        Some(shape) => {
+            let m = metrics.borrow();
+            per_phase_throughput(shape, &m.app_series(), m.window)
+        }
+    };
     ExpResult {
         name: cfg.name.clone(),
         sim_stats: engine.sim_stats,
@@ -572,6 +617,11 @@ fn finalize(cfg: &ExpConfig, h: Harvest, engine: EngineRun) -> ExpResult {
         mode_timeline,
         mode_switches,
         per_mode_tps,
+        rejoins: h.rejoins,
+        violations_per_kop,
+        hot_key_share,
+        keys_p90,
+        phase_tps,
     }
 }
 
@@ -589,6 +639,14 @@ pub fn run(cfg: &ExpConfig) -> ExpResult {
     // group whole regions, so the topology's region table is the map)
     let fault_timeline =
         crate::faults::lower(&cfg.fault_plan, &topo.region_of, lay.s, cfg.n_regions());
+    // client churn rides the same timeline: leave/rejoin lowers onto
+    // crash/restart changes against the client procs (2s..2s+c), so every
+    // engine replays it through the one fault path it already has
+    let fault_timeline = if cfg.workload.churn.is_none() {
+        fault_timeline
+    } else {
+        fault_timeline.merged_with(cfg.workload.churn.lower(2 * lay.s as u32))
+    };
 
     if cfg.threaded {
         assert!(cfg.shards > 0, "threaded runs need with_shards(k >= 1) before with_threaded()");
@@ -685,6 +743,44 @@ fn per_mode_throughput(
                 *n += 1;
             }
             None => acc.push((label.to_string(), v, 1)),
+        }
+    }
+    acc.into_iter().map(|(l, sum, n)| (l, sum / n.max(1) as f64)).collect()
+}
+
+/// Mean app throughput per load-shape phase, the same full-window
+/// attribution as [`per_mode_throughput`]: a window counts toward the
+/// segment that covers it entirely (straddlers, the warm-up window and
+/// the final partial window are skipped). Labels are `{index}:{kind}` so
+/// repeated kinds — the flat/spike/flat of a flash crowd — stay distinct.
+fn per_phase_throughput(shape: &LoadShape, series: &[f64], window: Time) -> Vec<(String, f64)> {
+    let mut acc: Vec<(String, f64, u64)> = Vec::new();
+    if shape.segs.is_empty() || series.len() < 3 {
+        return Vec::new();
+    }
+    // segment start times, from cumulative durations
+    let mut starts = Vec::with_capacity(shape.segs.len());
+    let mut t: Time = 0;
+    for seg in &shape.segs {
+        starts.push(t);
+        t += seg.dur;
+    }
+    for (i, &v) in series.iter().enumerate().take(series.len() - 1).skip(1) {
+        let (ws, we) = (i as Time * window, (i + 1) as Time * window);
+        let Some(k) = starts.iter().rposition(|&from| from <= ws) else { continue };
+        // the shape's final rate holds past its end, so the last segment
+        // extends to the run's horizon; earlier segments end at the next
+        let seg_end = starts.get(k + 1).copied().unwrap_or(Time::MAX);
+        if seg_end < we {
+            continue; // the phase changed inside this window
+        }
+        let label = format!("{k}:{}", shape.segs[k].kind.label());
+        match acc.iter_mut().find(|(l, _, _)| *l == label) {
+            Some((_, sum, n)) => {
+                *sum += v;
+                *n += 1;
+            }
+            None => acc.push((label, v, 1)),
         }
     }
     acc.into_iter().map(|(l, sum, n)| (l, sum / n.max(1) as f64)).collect()
@@ -936,6 +1032,92 @@ mod tests {
         assert_eq!(a.ops_ok, b.ops_ok);
         assert_eq!(a.violations_detected, b.violations_detected);
         assert_eq!(a.app_tps, b.app_tps);
+    }
+
+    fn small_kvmix(theta: f64) -> ExpConfig {
+        use crate::workload::keyspace::KeyDist;
+        use crate::workload::WorkloadCfg;
+        let mut cfg = ExpConfig::new("kvmix-test", ConsistencyCfg::n3r1w1(), AppKind::KvMix);
+        cfg.n_clients = 8;
+        cfg.duration = 20 * SEC;
+        cfg.topo = crate::exp::config::TopoKind::AwsRegional { zones: 3 };
+        let mut wl = WorkloadCfg::uniform_default().with_keys(32, 4).with_mix(0.5);
+        if theta > 0.0 {
+            wl = wl.with_dist(KeyDist::Zipf { theta });
+        }
+        cfg.with_workload(wl)
+    }
+
+    #[test]
+    fn kvmix_skewed_run_detects_hot_key_contention() {
+        let res = run(&small_kvmix(1.2));
+        assert!(res.ops_ok > 100, "clients made progress: {}", res.ops_ok);
+        assert!(res.hot_key_share > 2.0 / 32.0, "rank 0 dominates: {}", res.hot_key_share);
+        assert!(res.keys_p90 < 32, "90% of skewed traffic on a strict subset of ranks");
+        assert!(res.candidates_seen > 0, "occupancy flags feed the monitors");
+        assert!(res.violations_detected > 0, "hot-key write overlap must be detected");
+        assert!(res.violations_per_kop > 0.0);
+    }
+
+    #[test]
+    fn kvmix_uniform_spreads_traffic() {
+        let res = run(&small_kvmix(0.0));
+        assert!(res.ops_ok > 100);
+        assert!(res.hot_key_share < 0.15, "no dominant rank under uniform: {}", res.hot_key_share);
+        assert!(res.keys_p90 > 16, "90% of uniform traffic needs most ranks: {}", res.keys_p90);
+    }
+
+    #[test]
+    fn kvmix_identical_on_all_three_engines() {
+        let a = run(&small_kvmix(1.2));
+        let b = run(&small_kvmix(1.2).with_shards(2));
+        let c = run(&small_kvmix(1.2).with_shards(2).with_threaded());
+        for r in [&b, &c] {
+            assert_eq!(a.ops_ok, r.ops_ok);
+            assert_eq!(a.violations_detected, r.violations_detected);
+            assert_eq!(a.app_tps, r.app_tps);
+            assert_eq!(a.sim_stats.events, r.sim_stats.events, "identical event schedules");
+            assert_eq!(a.hot_key_share, r.hot_key_share);
+            assert_eq!(a.keys_p90, r.keys_p90);
+        }
+    }
+
+    #[test]
+    fn kvmix_churn_lowers_to_leave_and_rejoin() {
+        use crate::workload::churn::{ChurnEvent, ChurnPlan};
+        let cfg = small_kvmix(1.2);
+        let wl = cfg.workload.clone().with_churn(
+            ChurnPlan::none().with(ChurnEvent { client: 2, at: 5 * SEC, rejoin_after: 5 * SEC }),
+        );
+        let cfg = cfg.with_workload(wl);
+        let res = run(&cfg);
+        assert_eq!(res.rejoins, 1, "the departed client came back");
+        assert!(res.ops_ok > 100, "the rest of the fleet kept going");
+        // determinism across engines survives the merged timeline
+        let t = run(&cfg.clone().with_shards(2).with_threaded());
+        assert_eq!(res.ops_ok, t.ops_ok);
+        assert_eq!(res.rejoins, t.rejoins);
+        assert_eq!(res.sim_stats.events, t.sim_stats.events);
+    }
+
+    #[test]
+    fn kvmix_flash_crowd_reports_per_phase_throughput() {
+        let cfg = small_kvmix(1.2);
+        let wl = cfg
+            .workload
+            .clone()
+            .with_shape(LoadShape::flash_crowd(5.0, 50.0, 5 * SEC, 5 * SEC, 20 * SEC));
+        let cfg = cfg.with_workload(wl);
+        let res = run(&cfg);
+        assert_eq!(res.phase_tps.len(), 3, "base / spike / base all covered: {:?}", res.phase_tps);
+        let tps_of = |label: &str| {
+            res.phase_tps.iter().find(|(l, _)| l.as_str() == label).map(|(_, v)| *v).unwrap()
+        };
+        assert!(
+            tps_of("1:flat") > 2.0 * tps_of("0:flat"),
+            "the spike phase carries the load: {:?}",
+            res.phase_tps
+        );
     }
 
     #[test]

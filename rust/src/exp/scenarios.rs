@@ -434,6 +434,159 @@ pub fn adaptive_conjunctive(run: AdaptRun, scale: f64, seed: u64) -> ExpConfig {
     cfg
 }
 
+/// The zipf exponents of the skew sweep (0 = uniform).
+pub const SKEW_THETAS: [f64; 4] = [0.0, 0.8, 0.99, 1.2];
+
+/// The workload-engine key space every kvmix scenario shares: 64 ranks,
+/// the first 8 guarded (occupancy-bracketed writes feeding the hot-key
+/// predicates), a 50/50 read/write mix. `theta = 0` is uniform.
+fn kvmix_workload(theta: f64) -> crate::workload::WorkloadCfg {
+    let wl = crate::workload::WorkloadCfg::uniform_default().with_keys(64, 8).with_mix(0.5);
+    if theta > 0.0 {
+        wl.with_dist(crate::workload::keyspace::KeyDist::Zipf { theta })
+    } else {
+        wl
+    }
+}
+
+fn theta_label(theta: f64) -> String {
+    if theta > 0.0 {
+        format!("zipf{theta}")
+    } else {
+        "uniform".to_string()
+    }
+}
+
+/// Skew sweep: the kvmix production-traffic workload on a 3-zone
+/// regional cluster, popularity skew as the independent variable. The
+/// violation *rate* (per kop) is monotone in θ — heavier skew
+/// concentrates guarded writes onto fewer hot keys, so ring-adjacent
+/// occupancy windows overlap more often per op. The adaptive variant
+/// arms the violation pair at the paper's "violations are rare" premise
+/// (escalate past 5/kop), so heavy skew drives the cluster sequential
+/// while light skew leaves it optimistic.
+pub fn kvmix_skew(theta: f64, run: AdaptRun, scale: f64, seed: u64) -> ExpConfig {
+    let eventual = ConsistencyCfg::n3r1w1();
+    let sequential = ConsistencyCfg::n3r2w2();
+    let consistency = match run {
+        AdaptRun::StaticSequential => sequential,
+        _ => eventual,
+    };
+    let mut cfg = ExpConfig::new(
+        &format!("kvmix-{}-{}", theta_label(theta), run.label()),
+        consistency,
+        AppKind::KvMix,
+    );
+    cfg.n_clients = 12;
+    cfg.monitors = true;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.duration = dur(scale, 300);
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::with_think(2.5);
+    if run == AdaptRun::Adaptive {
+        let hysteresis = HysteresisCfg {
+            viol_per_kop_hi: 5.0,
+            viol_per_kop_lo: 1.0,
+            hold_windows: 2,
+            ..HysteresisCfg::disarmed()
+        };
+        cfg = cfg.with_adapt(AdaptCfg::hysteresis(hysteresis, eventual, sequential));
+    }
+    cfg.with_workload(kvmix_workload(theta))
+}
+
+/// Flash crowd: kvmix under a load shape that multiplies the per-client
+/// arrival rate tenfold for the middle fifth of the run. With
+/// `partitioned = true` the spike coincides with a region cut — the
+/// composition the workload engine exists for — and the eventual mode is
+/// N3R1W2 so the cut region's writes surface as quorum timeouts, the
+/// deterministic signal the adaptive variant's hysteresis watches
+/// (violation background stays disarmed, as in [`adaptive_conjunctive`]):
+/// the controller escalates during the crisis and releases after the
+/// heal, a full round trip under flash-crowd traffic.
+pub fn kvmix_flash_crowd(run: AdaptRun, partitioned: bool, scale: f64, seed: u64) -> ExpConfig {
+    let d = dur(scale, 300);
+    let eventual = adaptive_eventual_mode();
+    let sequential = ConsistencyCfg::n3r2w2();
+    let consistency = match run {
+        AdaptRun::StaticSequential => sequential,
+        _ => eventual,
+    };
+    let mut cfg = ExpConfig::new(
+        &format!(
+            "kvmix-flashcrowd{}-{}",
+            if partitioned { "-part" } else { "" },
+            run.label()
+        ),
+        consistency,
+        AppKind::KvMix,
+    );
+    cfg.n_clients = 9; // 3 per zone: a cut group keeps offering load
+    cfg.monitors = true;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.duration = d;
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::with_think(2.5);
+    if partitioned {
+        cfg = cfg.with_fault_plan(FaultPlan::none().with(FaultEvent::Partition {
+            groups: vec![vec![0, 1], vec![2]],
+            from: 2 * d / 5,
+            until: 3 * d / 5,
+        }));
+    }
+    if run == AdaptRun::Adaptive {
+        let hysteresis = HysteresisCfg {
+            timeouts_per_sec_hi: 0.5,
+            timeouts_per_sec_lo: 0.05,
+            hold_windows: 2,
+            ..HysteresisCfg::disarmed()
+        };
+        cfg = cfg.with_adapt(AdaptCfg::hysteresis(hysteresis, eventual, sequential));
+    }
+    let wl = kvmix_workload(0.99)
+        .with_shape(crate::workload::shape::LoadShape::flash_crowd(5.0, 50.0, 2 * d / 5, d / 5, d));
+    cfg.with_workload(wl)
+}
+
+/// Client churn under skewed traffic: every 4th client leaves a third of
+/// the way in and rejoins a quarter-run later, lowered onto the same
+/// fault timeline the engines already replay. The adaptive variant keeps
+/// the timeout pair armed to demonstrate churn does *not* flap the
+/// controller — departed clients stop reporting, they don't time out.
+pub fn kvmix_churn(run: AdaptRun, scale: f64, seed: u64) -> ExpConfig {
+    use crate::workload::churn::ChurnPlan;
+    let d = dur(scale, 300);
+    let eventual = ConsistencyCfg::n3r1w1();
+    let sequential = ConsistencyCfg::n3r2w2();
+    let consistency = match run {
+        AdaptRun::StaticSequential => sequential,
+        _ => eventual,
+    };
+    let mut cfg = ExpConfig::new(
+        &format!("kvmix-churn-{}", run.label()),
+        consistency,
+        AppKind::KvMix,
+    );
+    cfg.n_clients = 12;
+    cfg.monitors = true;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.duration = d;
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::with_think(2.5);
+    if run == AdaptRun::Adaptive {
+        let hysteresis = HysteresisCfg {
+            timeouts_per_sec_hi: 0.5,
+            timeouts_per_sec_lo: 0.05,
+            hold_windows: 2,
+            ..HysteresisCfg::disarmed()
+        };
+        cfg = cfg.with_adapt(AdaptCfg::hysteresis(hysteresis, eventual, sequential));
+    }
+    cfg.with_workload(
+        kvmix_workload(0.99).with_churn(ChurnPlan::periodic(12, 4, d / 3, d / 4)),
+    )
+}
+
 /// The paper's Table II consistency presets for N = 3 and N = 5.
 pub fn table2_n3() -> [ConsistencyCfg; 3] {
     [ConsistencyCfg::n3r1w3(), ConsistencyCfg::n3r2w2(), ConsistencyCfg::n3r1w1()]
@@ -581,6 +734,49 @@ mod tests {
             }
             other => panic!("unexpected policy {other:?}"),
         }
+    }
+
+    #[test]
+    fn kvmix_families_compose_workload_faults_and_policy() {
+        for &theta in &SKEW_THETAS {
+            let cfg = kvmix_skew(theta, AdaptRun::StaticEventual, 0.1, 3);
+            assert_eq!(cfg.app, AppKind::KvMix);
+            assert_eq!(cfg.workload.n_keys, 64);
+            assert_eq!(cfg.workload.guarded, 8);
+            assert!(cfg.workload.validate(cfg.n_clients, cfg.duration).is_ok());
+            assert!(!cfg.adapt.enabled());
+        }
+        assert!(kvmix_skew(1.2, AdaptRun::Adaptive, 0.1, 3).adapt.enabled());
+        assert_eq!(
+            kvmix_skew(0.0, AdaptRun::StaticEventual, 0.1, 3).name,
+            "kvmix-uniform-static-eventual"
+        );
+        assert_eq!(
+            kvmix_skew(0.99, AdaptRun::StaticEventual, 0.1, 3).name,
+            "kvmix-zipf0.99-static-eventual"
+        );
+
+        let fc = kvmix_flash_crowd(AdaptRun::Adaptive, true, 0.1, 3);
+        assert!(fc.adapt.enabled());
+        assert!(!fc.fault_plan.is_none());
+        assert!(fc.fault_plan.validate(fc.n_servers(), fc.n_regions()).is_ok());
+        let shape = fc.workload.shape.as_ref().unwrap();
+        assert_eq!(shape.total_dur(), fc.duration, "the shape covers the run");
+        assert!(shape.rate_at(fc.duration / 2) > shape.rate_at(0), "spike in the middle");
+        match &fc.fault_plan.events[0] {
+            FaultEvent::Partition { from, until, .. } => {
+                assert_eq!(*from, 2 * fc.duration / 5, "the cut coincides with the spike");
+                assert_eq!(*until, 3 * fc.duration / 5);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // the unpartitioned variant is fault-free traffic shaping
+        assert!(kvmix_flash_crowd(AdaptRun::StaticEventual, false, 0.1, 3).fault_plan.is_none());
+
+        let ch = kvmix_churn(AdaptRun::StaticEventual, 0.1, 3);
+        assert_eq!(ch.workload.churn.events.len(), 3, "every 4th of 12 clients");
+        assert!(ch.workload.validate(ch.n_clients, ch.duration).is_ok());
+        assert!(kvmix_churn(AdaptRun::Adaptive, 0.1, 3).adapt.enabled());
     }
 
     #[test]

@@ -74,6 +74,18 @@ impl Timeline {
         }
         item
     }
+
+    /// Merge additional changes into an unconsumed timeline (e.g. the
+    /// workload engine's churn transitions joining a fault plan's).
+    /// Appended changes sort behind existing ones at equal times — the
+    /// stable re-sort keeps the original tie order — so composition
+    /// never reshuffles a plan's own schedule. Panics if replay already
+    /// started; composition happens at build time.
+    pub fn merged_with(mut self, extra: Vec<(Time, Change)>) -> Self {
+        assert_eq!(self.cursor, 0, "cannot merge into a partially-replayed timeline");
+        self.changes.extend(extra);
+        Self::new(self.changes)
+    }
 }
 
 /// Lower a role-level plan against an actor layout. `region_of` is the
@@ -424,5 +436,25 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         assert_eq!(t.pop().unwrap().0, 2 * SEC);
+    }
+
+    #[test]
+    fn merged_with_interleaves_and_keeps_tie_priority() {
+        let base = Timeline::new(vec![
+            (SEC, Change::Crash { proc: 0 }),
+            (3 * SEC, Change::Restart { proc: 0 }),
+        ]);
+        let mut t = base.merged_with(vec![
+            (2 * SEC, Change::Crash { proc: 7 }),
+            (SEC, Change::Crash { proc: 8 }),
+        ]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.pop().unwrap(), (SEC, Change::Crash { proc: 0 }), "base wins the tie");
+        assert_eq!(t.pop().unwrap(), (SEC, Change::Crash { proc: 8 }));
+        assert_eq!(t.pop().unwrap(), (2 * SEC, Change::Crash { proc: 7 }));
+        assert_eq!(t.pop().unwrap().0, 3 * SEC);
+        // merging nothing is the identity
+        let mut same = Timeline::empty().merged_with(vec![(SEC, Change::Crash { proc: 1 })]);
+        assert_eq!(same.pop().unwrap().0, SEC);
     }
 }

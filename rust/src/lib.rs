@@ -48,6 +48,15 @@
 //! latency CDF becomes a reproducible artifact
 //! ([`exp::runner::ExpResult::detection_cdf`]).
 //!
+//! Workload engine: experiments can swap the polite closed-loop traffic
+//! for production-shaped load via [`workload::WorkloadCfg`] — Zipf /
+//! hot-set key popularity (O(1) alias-table sampling), piecewise load
+//! curves (flash crowds, diurnal cycles), and client churn lowered onto
+//! the same fault timeline, consumed by the YCSB-style [`apps::kvmix`]
+//! read/write-mix app whose guarded hot keys turn skew into real
+//! mutual-exclusion violations. The `uniform_default()` workload is
+//! inert and reproduces every pre-workload run bit-identically.
+//!
 //! Adaptive consistency: a runtime [`adapt::AdaptController`] watches
 //! the live signals the system already produces (violation reports,
 //! rollback stall time, quorum timeouts, op-latency percentiles) over
@@ -75,3 +84,4 @@ pub mod runtime;
 pub mod sim;
 pub mod store;
 pub mod util;
+pub mod workload;

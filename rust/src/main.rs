@@ -20,6 +20,11 @@
 //! optikv shards        — sharded-engine smoke: merged-order runs must be
 //!                        bit-identical to serial at every shard count
 //!                        (exit 1 otherwise), plus a threaded scaling sweep
+//! optikv workload      — production-traffic engine smoke: skew sweep
+//!                        (violation rate must be monotone in zipf θ, exit 1
+//!                        otherwise), flash crowd under partition (adaptive
+//!                        round trip required), client churn (rejoins
+//!                        required)
 //! ```
 //!
 //! Fault-plan DSL (windows in virtual seconds): `partition:0,1|2@10-40`
@@ -49,9 +54,10 @@ fn main() {
         Some("faults") => cmd_faults(&args),
         Some("adapt") => cmd_adapt(&args),
         Some("shards") => cmd_shards(&args),
+        Some("workload") => cmd_workload(&args),
         _ => {
             eprintln!(
-                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults|adapt|shards> [flags]  (see module docs)"
+                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults|adapt|shards|workload> [flags]  (see module docs)"
             );
             std::process::exit(2);
         }
@@ -376,6 +382,69 @@ fn cmd_shards(args: &Args) {
     t.print();
     if !all_ok {
         eprintln!("shards-smoke FAILED: a threaded run diverged from the serial schedule");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_workload(args: &Args) {
+    use optikv::exp::scenarios::AdaptRun;
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", 42);
+
+    // -- skew sweep: the violation rate must be monotone in theta ----------
+    println!("== skew sweep (kvmix, static eventual) ==");
+    let mut t =
+        Table::new(&["theta", "app ops/s", "ok", "viol", "viol/kop", "hot share", "keys@90%"]);
+    let mut rates = Vec::new();
+    for &theta in &scenarios::SKEW_THETAS {
+        let res = run(&scenarios::kvmix_skew(theta, AdaptRun::StaticEventual, scale, seed));
+        t.row(&[
+            theta.to_string(),
+            format!("{:.0}", res.app_tps),
+            res.ops_ok.to_string(),
+            res.violations_detected.to_string(),
+            format!("{:.2}", res.violations_per_kop),
+            format!("{:.2}", res.hot_key_share),
+            res.keys_p90.to_string(),
+        ]);
+        rates.push(res.violations_per_kop);
+    }
+    t.print();
+    // tolerant monotonicity: small dips within 5% of the heaviest rate are
+    // sampling noise, but the curve must rise overall
+    let slack = rates.last().copied().unwrap_or(0.0).max(1e-9) * 0.05;
+    let non_decreasing = rates.windows(2).all(|w| w[1] + slack >= w[0]);
+    let rises = rates[rates.len() - 1] > rates[0];
+    if !(non_decreasing && rises) {
+        eprintln!("workload-smoke FAILED: violation rate not monotone in zipf theta: {rates:?}");
+        std::process::exit(1);
+    }
+
+    // -- flash crowd under partition: adaptive round trip ------------------
+    println!("\n== flash crowd under partition (adaptive hysteresis) ==");
+    let res = run(&scenarios::kvmix_flash_crowd(AdaptRun::Adaptive, true, scale, seed));
+    println!("{}", report::summarize(&res));
+    print!("{}", report::mode_timeline_summary(&res));
+    for (label, tps) in &res.phase_tps {
+        println!("phase {label}: {tps:.0} ops/s");
+    }
+    let round_trips = optikv::adapt::round_trips(&res.mode_timeline);
+    println!(
+        "mode switches {} | round trips {} | quorum timeouts {}",
+        res.mode_switches, round_trips, res.quorum_timeouts
+    );
+    if round_trips == 0 {
+        eprintln!("workload-smoke FAILED: no adaptive round trip under the flash crowd");
+        std::process::exit(1);
+    }
+
+    // -- churn: leave/rejoin lowered onto the fault timeline ---------------
+    println!("\n== client churn (every 4th client leaves and rejoins) ==");
+    let res = run(&scenarios::kvmix_churn(AdaptRun::StaticEventual, scale, seed));
+    println!("{}", report::summarize(&res));
+    println!("rejoins {} | msgs cut by faults {}", res.rejoins, res.sim_stats.fault_dropped);
+    if res.rejoins == 0 {
+        eprintln!("workload-smoke FAILED: churned clients never rejoined");
         std::process::exit(1);
     }
 }

@@ -72,6 +72,10 @@ pub struct MetricsHub {
     pub task_durations: Vec<u64>,
     /// per-op latency samples (ns), app perspective (sampled)
     pub op_latencies: Vec<u64>,
+    /// ops per key *rank* (kvmix workloads; empty otherwise) — grows on
+    /// demand, powering the contention stats in
+    /// [`crate::exp::runner::ExpResult`]
+    key_ops: Vec<u64>,
 }
 
 pub type Metrics = Rc<RefCell<MetricsHub>>;
@@ -98,6 +102,7 @@ impl MetricsHub {
             tasks_aborted: 0,
             task_durations: Vec::new(),
             op_latencies: Vec::new(),
+            key_ops: Vec::new(),
         }))
     }
 
@@ -123,6 +128,57 @@ impl MetricsHub {
 
     pub fn record_app_failure(&mut self, client_idx: usize) {
         self.app_failures[client_idx] += 1;
+    }
+
+    /// Count one op against key rank `rank` (kvmix cycles).
+    pub fn bump_key(&mut self, rank: usize) {
+        if self.key_ops.len() <= rank {
+            self.key_ops.resize(rank + 1, 0);
+        }
+        self.key_ops[rank] += 1;
+    }
+
+    /// Ops per key rank (empty unless a keyed workload ran).
+    pub fn key_ops(&self) -> &[u64] {
+        &self.key_ops
+    }
+
+    /// Share of keyed ops landing on the hottest single rank — the
+    /// headline contention number (1/n_keys under uniform, → p(rank 0)
+    /// under Zipf). 0.0 when no keyed workload ran.
+    pub fn hot_key_share(&self) -> f64 {
+        let total: u64 = self.key_ops.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        *self.key_ops.iter().max().unwrap() as f64 / total as f64
+    }
+
+    /// Smallest number of ranks covering fraction `q` of keyed traffic —
+    /// a per-key-percentile contention stat ("how few keys absorb 90%
+    /// of the load"). 0 when no keyed workload ran.
+    pub fn keys_covering(&self, q: f64) -> usize {
+        let total: u64 = self.key_ops.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let mut sorted = self.key_ops.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let target = total as f64 * q;
+        let mut acc = 0u64;
+        for (i, c) in sorted.iter().enumerate() {
+            acc += c;
+            if acc as f64 >= target {
+                return i + 1;
+            }
+        }
+        sorted.len()
+    }
+
+    /// One client's raw per-window op counts — the churn e2e asserts a
+    /// departed client's windows are empty while it is gone.
+    pub fn client_window_ops(&self, client_idx: usize) -> &[u64] {
+        &self.app_ops[client_idx]
     }
 
     pub fn record_violation(&mut self, rec: ViolationRecord) {
@@ -222,6 +278,13 @@ impl MetricsHub {
         self.tasks_aborted += other.tasks_aborted;
         self.task_durations.extend_from_slice(&other.task_durations);
         self.op_latencies.extend_from_slice(&other.op_latencies);
+        // per-rank counters add element-wise, like the window rows
+        if self.key_ops.len() < other.key_ops.len() {
+            self.key_ops.resize(other.key_ops.len(), 0);
+        }
+        for (d, s) in self.key_ops.iter_mut().zip(&other.key_ops) {
+            *d += s;
+        }
         self.violations.extend_from_slice(&other.violations);
         // stable: entries recorded in one dispatch share a key and must
         // keep their within-shard order
@@ -352,5 +415,32 @@ mod tests {
         assert_eq!(m.op_latencies.len(), 2);
         let names: Vec<&str> = m.violations.iter().map(|v| v.name.as_str()).collect();
         assert_eq!(names, vec!["early", "late"], "dispatch-key order, not shard order");
+    }
+
+    #[test]
+    fn key_ops_count_merge_and_summarize() {
+        let a = MetricsHub::new(1, 1);
+        {
+            let mut a = a.borrow_mut();
+            for _ in 0..8 {
+                a.bump_key(0);
+            }
+            a.bump_key(2);
+        }
+        let b = MetricsHub::new(1, 1);
+        {
+            let mut b = b.borrow_mut();
+            b.bump_key(0);
+            // ragged: shard b saw a higher rank than shard a
+            b.bump_key(3);
+        }
+        let mut m = a.borrow().clone();
+        m.merge(&b.borrow());
+        assert_eq!(m.key_ops(), &[9, 0, 1, 1]);
+        assert!((m.hot_key_share() - 9.0 / 11.0).abs() < 1e-12);
+        assert_eq!(m.keys_covering(0.8), 1, "rank 0 alone covers 80%");
+        assert_eq!(m.keys_covering(1.0), 3, "three ranks carry all traffic");
+        assert_eq!(MetricsHub::new(1, 1).borrow().hot_key_share(), 0.0);
+        assert_eq!(MetricsHub::new(1, 1).borrow().keys_covering(0.9), 0);
     }
 }

@@ -1,0 +1,199 @@
+//! Client churn: join/leave schedules lowered onto the fault timeline.
+//!
+//! Production clients come and go; the simulator already has exactly the
+//! machinery to express that — [`crate::faults::state::Change::Crash`] /
+//! [`Change::Restart`] target *any* proc, the network drops traffic to
+//! and from a crashed proc, and the owning shard dispatches the
+//! lifecycle hook to the actor. A [`ChurnPlan`] is therefore lowered to
+//! `Crash`/`Restart` changes on **client** procs and merged into the one
+//! fault [`crate::faults::state::Timeline`] the engines replay — churn
+//! composes with partitions and server crashes for free, on all three
+//! engines, because it is the same timeline.
+//!
+//! The client actor interprets the hooks as *leave* (drop in-flight
+//! calls, go quiet) and *rejoin* (resume the closed loop), mirroring how
+//! servers interpret them as crash/re-sync.
+
+use crate::faults::state::Change;
+use crate::sim::Time;
+
+/// One client's leave (and optional rejoin) window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnEvent {
+    /// client index `0..n_clients` (not a proc id — the runner maps it)
+    pub client: usize,
+    /// when the client leaves
+    pub at: Time,
+    /// how long it stays gone; `0` = never rejoins
+    pub rejoin_after: Time,
+}
+
+/// A seed-independent churn schedule (all times are virtual).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChurnPlan {
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnPlan {
+    /// No churn — contributes nothing to the fault timeline.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Builder sugar mirroring [`crate::faults::plan::FaultPlan::with`].
+    pub fn with(mut self, ev: ChurnEvent) -> Self {
+        self.events.push(ev);
+        self
+    }
+
+    /// Every `stride`-th client leaves at `at` and rejoins after `gone`.
+    pub fn periodic(n_clients: usize, stride: usize, at: Time, gone: Time) -> Self {
+        assert!(stride > 0);
+        Self {
+            events: (0..n_clients)
+                .step_by(stride)
+                .map(|client| ChurnEvent { client, at, rejoin_after: gone })
+                .collect(),
+        }
+    }
+
+    /// Reject schedules the run cannot honor: unknown client indices or
+    /// windows outside `[0, duration)`.
+    pub fn validate(&self, n_clients: usize, duration: Time) -> Result<(), String> {
+        for (i, ev) in self.events.iter().enumerate() {
+            if ev.client >= n_clients {
+                return Err(format!(
+                    "churn event {i}: client {} out of range (n_clients = {n_clients})",
+                    ev.client
+                ));
+            }
+            if ev.at >= duration {
+                return Err(format!(
+                    "churn event {i}: leave at {} is past the run duration {duration}",
+                    ev.at
+                ));
+            }
+            if ev.rejoin_after > 0 && ev.at + ev.rejoin_after >= duration {
+                return Err(format!(
+                    "churn event {i}: rejoin at {} is past the run duration {duration}",
+                    ev.at + ev.rejoin_after
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower to fault-timeline changes. `client_proc_base` is the proc
+    /// id of client 0 in the runner's layout (clients occupy
+    /// `base .. base + n_clients`). Scale is applied by the caller via
+    /// the times already stored in the plan.
+    pub fn lower(&self, client_proc_base: u32) -> Vec<(Time, Change)> {
+        let mut changes = Vec::with_capacity(self.events.len() * 2);
+        for ev in &self.events {
+            let proc = client_proc_base + ev.client as u32;
+            changes.push((ev.at, Change::Crash { proc }));
+            if ev.rejoin_after > 0 {
+                changes.push((ev.at + ev.rejoin_after, Change::Restart { proc }));
+            }
+        }
+        changes
+    }
+
+    /// Scale every event time by `scale` (experiment scaling).
+    pub fn scaled(&self, scale: f64) -> Self {
+        Self {
+            events: self
+                .events
+                .iter()
+                .map(|ev| ChurnEvent {
+                    client: ev.client,
+                    at: (ev.at as f64 * scale) as Time,
+                    rejoin_after: ((ev.rejoin_after as f64 * scale) as Time)
+                        .max(if ev.rejoin_after > 0 { 1 } else { 0 }),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SEC;
+
+    #[test]
+    fn none_is_inert() {
+        let p = ChurnPlan::none();
+        assert!(p.is_none());
+        assert!(p.validate(0, SEC).is_ok());
+        assert!(p.lower(10).is_empty());
+    }
+
+    #[test]
+    fn lower_maps_clients_onto_procs() {
+        let p = ChurnPlan::none()
+            .with(ChurnEvent { client: 0, at: 5 * SEC, rejoin_after: 10 * SEC })
+            .with(ChurnEvent { client: 3, at: 8 * SEC, rejoin_after: 0 });
+        assert!(p.validate(4, 60 * SEC).is_ok());
+        let ch = p.lower(6); // e.g. 3 servers + 3 monitors → clients at proc 6
+        assert_eq!(
+            ch,
+            vec![
+                (5 * SEC, Change::Crash { proc: 6 }),
+                (15 * SEC, Change::Restart { proc: 6 }),
+                (8 * SEC, Change::Crash { proc: 9 }), // no rejoin: stays gone
+            ]
+        );
+    }
+
+    #[test]
+    fn periodic_strides_the_client_set() {
+        let p = ChurnPlan::periodic(6, 2, 10 * SEC, 5 * SEC);
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(
+            p.events.iter().map(|e| e.client).collect::<Vec<_>>(),
+            vec![0, 2, 4]
+        );
+        assert!(p.validate(6, 60 * SEC).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_events() {
+        let bad_client = ChurnPlan::none().with(ChurnEvent {
+            client: 9,
+            at: SEC,
+            rejoin_after: 0,
+        });
+        assert!(bad_client.validate(4, 60 * SEC).is_err());
+        let late_leave = ChurnPlan::none().with(ChurnEvent {
+            client: 0,
+            at: 60 * SEC,
+            rejoin_after: 0,
+        });
+        assert!(late_leave.validate(4, 60 * SEC).is_err());
+        let late_rejoin = ChurnPlan::none().with(ChurnEvent {
+            client: 0,
+            at: 50 * SEC,
+            rejoin_after: 20 * SEC,
+        });
+        assert!(late_rejoin.validate(4, 60 * SEC).is_err());
+    }
+
+    #[test]
+    fn scaled_compresses_the_schedule() {
+        let p = ChurnPlan::none()
+            .with(ChurnEvent { client: 1, at: 10 * SEC, rejoin_after: 20 * SEC })
+            .scaled(0.1);
+        assert_eq!(p.events[0].at, SEC);
+        assert_eq!(p.events[0].rejoin_after, 2 * SEC);
+        // a tiny scale never turns a rejoin into "gone forever"
+        let tiny = ChurnPlan::none()
+            .with(ChurnEvent { client: 0, at: SEC, rejoin_after: SEC })
+            .scaled(1e-12);
+        assert_eq!(tiny.events[0].rejoin_after, 1);
+    }
+}

@@ -1,0 +1,311 @@
+//! Key-popularity samplers: which key does the next operation touch?
+//!
+//! Production KV traffic is skewed — a few keys absorb most operations
+//! (PCAP, 1509.02464 §V measures consistency–latency under exactly this
+//! knob). We model popularity over a rank space `0..n` with three
+//! distributions: uniform (the pre-workload default), Zipf with
+//! parameter θ (rank r gets weight `(r+1)^-θ`), and a hot-set split
+//! (a fixed fraction of traffic lands on the first `hot` ranks).
+//!
+//! Sampling must be O(1) **and** bit-reproducible across engines: the
+//! sharded runner replays the same per-client RNG streams on every
+//! worker, so a draw may not cost a data-dependent number of RNG calls
+//! beyond what rejection sampling already pins. We therefore build a
+//! Walker/Vose **alias table** once at setup (pure `f64` arithmetic,
+//! no RNG) and sample with exactly two draws: one `below(n)` column
+//! pick and one `f64()` coin. Uniform stays a single `below(n)` so the
+//! inert default consumes precisely the draws today's apps make.
+
+use crate::util::rng::Rng;
+
+/// Key-popularity distribution over ranks `0..n_keys`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum KeyDist {
+    /// Every rank equally likely — the inert default.
+    Uniform,
+    /// Zipf: rank `r` has weight `(r+1)^-theta`. `theta = 0` degenerates
+    /// to uniform weights (but still samples through the alias table);
+    /// production traces sit around `theta ∈ [0.99, 1.2]`.
+    Zipf { theta: f64 },
+    /// The first `hot` ranks share `hot_frac` of the mass uniformly;
+    /// the remaining ranks share the rest uniformly.
+    HotSet { hot: usize, hot_frac: f64 },
+}
+
+impl KeyDist {
+    /// Closed-form probability of each rank under this distribution —
+    /// the reference the alias table is pinned against in tests.
+    pub fn closed_form(&self, n: usize) -> Vec<f64> {
+        assert!(n > 0);
+        match self {
+            KeyDist::Uniform => vec![1.0 / n as f64; n],
+            KeyDist::Zipf { theta } => {
+                let w: Vec<f64> = (0..n).map(|r| ((r + 1) as f64).powf(-theta)).collect();
+                let h: f64 = w.iter().sum();
+                w.into_iter().map(|x| x / h).collect()
+            }
+            KeyDist::HotSet { hot, hot_frac } => {
+                let hot = (*hot).min(n);
+                if hot == 0 || hot == n {
+                    return vec![1.0 / n as f64; n];
+                }
+                let cold = n - hot;
+                (0..n)
+                    .map(|r| {
+                        if r < hot {
+                            hot_frac / hot as f64
+                        } else {
+                            (1.0 - hot_frac) / cold as f64
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Validation shared by [`crate::workload::WorkloadCfg::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            KeyDist::Uniform => Ok(()),
+            KeyDist::Zipf { theta } => {
+                if !theta.is_finite() || *theta <= 0.0 {
+                    Err(format!("zipf theta must be finite and > 0, got {theta}"))
+                } else {
+                    Ok(())
+                }
+            }
+            KeyDist::HotSet { hot, hot_frac } => {
+                if *hot == 0 {
+                    Err("hot-set needs at least one hot key".into())
+                } else if !(0.0..=1.0).contains(hot_frac) {
+                    Err(format!("hot_frac must be in [0, 1], got {hot_frac}"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+/// O(1) rank sampler: uniform fast path or a prebuilt alias table.
+#[derive(Debug, Clone)]
+pub struct KeySampler {
+    n: usize,
+    table: Option<AliasTable>,
+}
+
+/// Vose alias table: column `i` returns `i` with probability `prob[i]`,
+/// otherwise `alias[i]`.
+#[derive(Debug, Clone)]
+struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from (unnormalized) weights. Deterministic: the small/large
+    /// worklists are plain index-ordered stacks, no RNG, no float
+    /// comparison beyond the canonical `< 1.0` split.
+    fn build(weights: &[f64]) -> Self {
+        let n = weights.len();
+        let sum: f64 = weights.iter().sum();
+        assert!(sum > 0.0, "alias table needs positive total weight");
+        // scale so the mean column holds exactly 1.0
+        let mut scaled: Vec<f64> = weights.iter().map(|w| w * n as f64 / sum).collect();
+        let mut alias = vec![0u32; n];
+        let mut prob = vec![1.0f64; n];
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l as u32;
+            scaled[l] -= 1.0 - scaled[s];
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // float-drift leftovers on either list are full columns
+        for i in small.into_iter().chain(large) {
+            prob[i] = 1.0;
+            alias[i] = i as u32;
+        }
+        Self { prob, alias }
+    }
+
+    /// Reconstruct P(rank) from the table itself: column `i` contributes
+    /// `prob[i]/n` to rank `i` and `(1-prob[i])/n` to rank `alias[i]`.
+    /// Pure bookkeeping — no sampling noise — so tests can pin it
+    /// against the closed form at 1e-12.
+    fn mass(&self) -> Vec<f64> {
+        let n = self.prob.len();
+        let mut p = vec![0.0f64; n];
+        for i in 0..n {
+            p[i] += self.prob[i] / n as f64;
+            p[self.alias[i] as usize] += (1.0 - self.prob[i]) / n as f64;
+        }
+        p
+    }
+}
+
+impl KeySampler {
+    /// Build a sampler for `n` ranks. Uniform takes the no-table path
+    /// (one RNG draw per sample — identical to pre-workload apps).
+    pub fn new(dist: &KeyDist, n: usize) -> Self {
+        assert!(n > 0, "keyspace must be non-empty");
+        dist.validate().unwrap_or_else(|e| panic!("bad key distribution: {e}"));
+        let table = match dist {
+            KeyDist::Uniform => None,
+            _ => Some(AliasTable::build(&dist.closed_form(n))),
+        };
+        Self { n, table }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Draw one rank. Uniform: exactly one `below(n)`. Skewed: exactly
+    /// one `below(n)` plus one `f64()` — the draw count is input-
+    /// independent, which is what keeps sharded replays bit-identical.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let col = rng.below(self.n as u64) as usize;
+        match &self.table {
+            None => col,
+            Some(t) => {
+                if rng.f64() < t.prob[col] {
+                    col
+                } else {
+                    t.alias[col] as usize
+                }
+            }
+        }
+    }
+
+    /// Exact per-rank mass this sampler realizes (closed form for
+    /// uniform, alias-table reconstruction otherwise).
+    pub fn mass(&self) -> Vec<f64> {
+        match &self.table {
+            None => vec![1.0 / self.n as f64; self.n],
+            Some(t) => t.mass(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_mass_matches(dist: KeyDist, n: usize) {
+        let sampler = KeySampler::new(&dist, n);
+        let got = sampler.mass();
+        let want = dist.closed_form(n);
+        for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-12,
+                "{dist:?} n={n} rank {r}: table mass {g} vs closed form {w}"
+            );
+        }
+        let total: f64 = got.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "mass sums to {total}");
+    }
+
+    #[test]
+    fn alias_table_reproduces_zipf_closed_form_exactly() {
+        // no sampling noise: the alias table's reconstructed mass must
+        // equal the closed-form Zipf pmf to float precision
+        for theta in [0.5, 0.8, 0.99, 1.2, 2.0] {
+            assert_mass_matches(KeyDist::Zipf { theta }, 128);
+        }
+        assert_mass_matches(KeyDist::Zipf { theta: 0.99 }, 1);
+        assert_mass_matches(KeyDist::Zipf { theta: 1.2 }, 1000);
+    }
+
+    #[test]
+    fn alias_table_reproduces_hot_set_exactly() {
+        assert_mass_matches(KeyDist::HotSet { hot: 4, hot_frac: 0.9 }, 128);
+        assert_mass_matches(KeyDist::HotSet { hot: 1, hot_frac: 0.5 }, 16);
+        // degenerate all-hot collapses to uniform
+        assert_mass_matches(KeyDist::HotSet { hot: 16, hot_frac: 0.9 }, 16);
+    }
+
+    #[test]
+    fn zipf_mass_is_monotone_in_rank_and_theta() {
+        let low = KeyDist::Zipf { theta: 0.8 }.closed_form(64);
+        let high = KeyDist::Zipf { theta: 1.2 }.closed_form(64);
+        for r in 1..64 {
+            assert!(low[r] <= low[r - 1], "zipf decreasing in rank");
+        }
+        assert!(high[0] > low[0], "higher theta concentrates rank 0");
+        assert!(high[63] < low[63], "higher theta starves the tail");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_in_range() {
+        let s = KeySampler::new(&KeyDist::Zipf { theta: 0.99 }, 100);
+        let mut a = Rng::stream(42, 7);
+        let mut b = Rng::stream(42, 7);
+        for _ in 0..1000 {
+            let x = s.sample(&mut a);
+            assert_eq!(x, s.sample(&mut b), "same stream, same draws");
+            assert!(x < 100);
+        }
+    }
+
+    #[test]
+    fn uniform_sampler_draw_count_matches_raw_below() {
+        // the inert path must consume exactly the draws a bare
+        // `rng.below(n)` would — pin by comparing the stream positions
+        let s = KeySampler::new(&KeyDist::Uniform, 37);
+        let mut a = Rng::stream(9, 1);
+        let mut b = Rng::stream(9, 1);
+        for _ in 0..500 {
+            assert_eq!(s.sample(&mut a) as u64, b.below(37));
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "streams stayed in lockstep");
+    }
+
+    #[test]
+    fn skewed_sampling_lands_near_closed_form() {
+        // coarse empirical check that the table is wired the right way
+        // around (the exact pin is the mass test above)
+        let dist = KeyDist::Zipf { theta: 1.2 };
+        let s = KeySampler::new(&dist, 32);
+        let mut rng = Rng::stream(5, 3);
+        let mut counts = vec![0u64; 32];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[s.sample(&mut rng)] += 1;
+        }
+        let want = dist.closed_form(32);
+        for r in [0usize, 1, 2, 31] {
+            let got = counts[r] as f64 / n as f64;
+            assert!(
+                (got - want[r]).abs() < 0.01,
+                "rank {r}: sampled {got} vs closed {}",
+                want[r]
+            );
+        }
+        assert!(counts[0] > counts[31] * 10, "head dominates tail at theta=1.2");
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        assert!(KeyDist::Zipf { theta: 0.0 }.validate().is_err());
+        assert!(KeyDist::Zipf { theta: -1.0 }.validate().is_err());
+        assert!(KeyDist::Zipf { theta: f64::NAN }.validate().is_err());
+        assert!(KeyDist::HotSet { hot: 0, hot_frac: 0.5 }.validate().is_err());
+        assert!(KeyDist::HotSet { hot: 2, hot_frac: 1.5 }.validate().is_err());
+        assert!(KeyDist::Zipf { theta: 0.99 }.validate().is_ok());
+        assert!(KeyDist::Uniform.validate().is_ok());
+    }
+}

@@ -1,0 +1,205 @@
+//! Production-traffic workload engine: key skew, load shapes, client
+//! churn — the knobs the paper's fixed-graph experiments never vary.
+//!
+//! The paper measures optimistic execution under small static graphs
+//! with polite closed-loop clients (§VI). PCAP (1509.02464) shows the
+//! consistency–latency tradeoff is governed by key popularity, arrival
+//! rate and operation mix, and the journal version (1909.01980) warns
+//! that rollback cost can erase the optimistic benefit when contention
+//! concentrates violations on a few keys. This module generates that
+//! traffic deterministically:
+//!
+//! * [`keyspace`] — O(1) bit-reproducible rank samplers (uniform, Zipf
+//!   via a Walker/Vose alias table, hot-set).
+//! * [`shape`] — piecewise per-client load curves (flat, ramps, diurnal
+//!   sine, flash crowds) evaluated from the virtual clock.
+//! * [`churn`] — client join/leave schedules lowered to `Crash`/
+//!   `Restart` changes on client procs and merged into the fault
+//!   timeline, so "Black Friday during a regional partition with 20%
+//!   of clients flapping" is one scenario expression.
+//!
+//! The consumer is [`crate::apps::kvmix`], a YCSB-style read/write-mix
+//! app whose guarded hot keys generate real mutual-exclusion violations
+//! under skew. [`WorkloadCfg::uniform_default`] is **inert**: no churn,
+//! no shape, uniform keys — pinned bit-identical to pre-workload runs
+//! on all three engines by `tests/sharded_determinism.rs`.
+
+pub mod churn;
+pub mod keyspace;
+pub mod shape;
+
+use crate::sim::Time;
+use churn::ChurnPlan;
+use keyspace::KeyDist;
+use shape::LoadShape;
+
+/// Workload knobs carried by [`crate::exp::config::ExpConfig`]. The key/
+/// mix/shape fields are consumed only by the kvmix app; `churn` applies
+/// to any app (it lowers onto the fault timeline in the runner).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadCfg {
+    /// keyspace size (ranks `0..n_keys`, interned as `kv_{r}`)
+    pub n_keys: usize,
+    /// key-popularity distribution over ranks
+    pub dist: KeyDist,
+    /// fraction of kvmix cycles that write (YCSB-style mix knob)
+    pub put_pct: f64,
+    /// the first `guarded` ranks are contention-guarded hot keys:
+    /// writes to them take an occupancy flag that the monitor watches
+    /// for mutual-exclusion violations (how skew becomes violations)
+    pub guarded: usize,
+    /// target per-client op-rate curve; `None` = closed-loop pacing via
+    /// [`crate::client::actor::ClientTiming`] only (the inert path)
+    pub shape: Option<LoadShape>,
+    /// client leave/rejoin schedule; `ChurnPlan::none()` = inert
+    pub churn: ChurnPlan,
+}
+
+impl WorkloadCfg {
+    /// The inert default: uniform keys, balanced mix, a small guarded
+    /// hot set (only observable if the app is kvmix), no shape, no
+    /// churn. Every pre-workload scenario carries this and must stay
+    /// bit-identical to its pre-workload schedule.
+    pub fn uniform_default() -> Self {
+        Self {
+            n_keys: 64,
+            dist: KeyDist::Uniform,
+            put_pct: 0.5,
+            guarded: 4,
+            shape: None,
+            churn: ChurnPlan::none(),
+        }
+    }
+
+    /// True when nothing here can perturb a non-kvmix run.
+    pub fn is_inert(&self) -> bool {
+        self.shape.is_none() && self.churn.is_none()
+    }
+
+    pub fn with_keys(mut self, n_keys: usize, guarded: usize) -> Self {
+        self.n_keys = n_keys;
+        self.guarded = guarded;
+        self
+    }
+
+    pub fn with_dist(mut self, dist: KeyDist) -> Self {
+        self.dist = dist;
+        self
+    }
+
+    pub fn with_mix(mut self, put_pct: f64) -> Self {
+        self.put_pct = put_pct;
+        self
+    }
+
+    pub fn with_shape(mut self, shape: LoadShape) -> Self {
+        self.shape = Some(shape);
+        self
+    }
+
+    pub fn with_churn(mut self, churn: ChurnPlan) -> Self {
+        self.churn = churn;
+        self
+    }
+
+    /// Validate against the deployment it will run in. Called by
+    /// [`crate::exp::config::ExpConfig::with_workload`], which panics on
+    /// `Err` — experiment construction is the right time to find out.
+    pub fn validate(&self, n_clients: usize, duration: Time) -> Result<(), String> {
+        if self.n_keys == 0 {
+            return Err("n_keys must be positive".into());
+        }
+        if self.guarded > self.n_keys {
+            return Err(format!(
+                "guarded hot set ({}) larger than the keyspace ({})",
+                self.guarded, self.n_keys
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.put_pct) {
+            return Err(format!("put_pct must be in [0, 1], got {}", self.put_pct));
+        }
+        self.dist.validate()?;
+        if let Some(shape) = &self.shape {
+            shape.validate()?;
+        }
+        self.churn.validate(n_clients, duration)
+    }
+
+    /// Scale shape and churn timelines by the experiment scale factor.
+    pub fn scaled(&self, scale: f64) -> Self {
+        Self {
+            shape: self.shape.as_ref().map(|s| s.scaled(scale)),
+            churn: self.churn.scaled(scale),
+            ..self.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SEC;
+    use churn::ChurnEvent;
+
+    #[test]
+    fn uniform_default_is_inert_and_valid() {
+        let w = WorkloadCfg::uniform_default();
+        assert!(w.is_inert());
+        assert_eq!(w.dist, KeyDist::Uniform);
+        assert!(w.validate(15, 120 * SEC).is_ok());
+    }
+
+    #[test]
+    fn builders_compose() {
+        let w = WorkloadCfg::uniform_default()
+            .with_keys(128, 8)
+            .with_dist(KeyDist::Zipf { theta: 0.99 })
+            .with_mix(0.3)
+            .with_shape(LoadShape::constant(20.0, 60 * SEC))
+            .with_churn(ChurnPlan::periodic(8, 2, 10 * SEC, 5 * SEC));
+        assert!(!w.is_inert());
+        assert!(w.validate(8, 60 * SEC).is_ok());
+        assert_eq!(w.n_keys, 128);
+        assert_eq!(w.guarded, 8);
+    }
+
+    #[test]
+    fn validate_rejects_bad_workloads() {
+        let d = 60 * SEC;
+        assert!(WorkloadCfg::uniform_default().with_keys(0, 0).validate(4, d).is_err());
+        assert!(WorkloadCfg::uniform_default().with_keys(8, 9).validate(4, d).is_err());
+        assert!(WorkloadCfg::uniform_default().with_mix(1.5).validate(4, d).is_err());
+        assert!(WorkloadCfg::uniform_default()
+            .with_dist(KeyDist::Zipf { theta: -0.5 })
+            .validate(4, d)
+            .is_err());
+        assert!(WorkloadCfg::uniform_default()
+            .with_shape(LoadShape::default())
+            .validate(4, d)
+            .is_err());
+        assert!(WorkloadCfg::uniform_default()
+            .with_churn(ChurnPlan::none().with(ChurnEvent {
+                client: 99,
+                at: SEC,
+                rejoin_after: 0
+            }))
+            .validate(4, d)
+            .is_err());
+    }
+
+    #[test]
+    fn scaled_touches_only_timelines() {
+        let w = WorkloadCfg::uniform_default()
+            .with_dist(KeyDist::Zipf { theta: 1.2 })
+            .with_shape(LoadShape::constant(10.0, 100 * SEC))
+            .with_churn(ChurnPlan::none().with(ChurnEvent {
+                client: 0,
+                at: 50 * SEC,
+                rejoin_after: 10 * SEC,
+            }))
+            .scaled(0.1);
+        assert_eq!(w.dist, KeyDist::Zipf { theta: 1.2 });
+        assert_eq!(w.shape.as_ref().unwrap().total_dur(), 10 * SEC);
+        assert_eq!(w.churn.events[0].at, 5 * SEC);
+    }
+}

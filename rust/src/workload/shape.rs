@@ -1,0 +1,251 @@
+//! Piecewise load curves: how hard do clients push over the run?
+//!
+//! A [`LoadShape`] is a sequence of segments, each with a duration and a
+//! rate law (flat, linear ramp, diurnal sine). [`LoadShape::rate_at`]
+//! evaluates the target per-client op rate (ops/sec) at a virtual time —
+//! pure arithmetic on `(t, segments)`, no RNG, no state — so every
+//! engine and every shard computes the same pacing from the same clock.
+//!
+//! The kvmix app lowers the rate to think time: after each cycle it
+//! sleeps `1/rate` seconds. `shape = None` in
+//! [`crate::workload::WorkloadCfg`] skips pacing entirely and leaves the
+//! client's [`crate::client::actor::ClientTiming`] think-time draws as
+//! the only pacing — the inert default path.
+
+use crate::sim::{Time, SEC};
+
+/// Rate law of one segment. Rates are ops/sec per client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShapeKind {
+    /// Constant rate.
+    Flat { rate: f64 },
+    /// Linear ramp from `from` to `to` across the segment.
+    Ramp { from: f64, to: f64 },
+    /// `base + amp * sin(2π · elapsed/period)` — a compressed diurnal
+    /// cycle. `amp < base` keeps the rate positive.
+    Diurnal { base: f64, amp: f64, period: Time },
+}
+
+impl ShapeKind {
+    /// Short tag for per-phase labels ("flat"/"ramp"/"diurnal").
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShapeKind::Flat { .. } => "flat",
+            ShapeKind::Ramp { .. } => "ramp",
+            ShapeKind::Diurnal { .. } => "diurnal",
+        }
+    }
+}
+
+/// One segment: a rate law held for `dur` of virtual time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeSeg {
+    pub dur: Time,
+    pub kind: ShapeKind,
+}
+
+/// Piecewise load curve. Past the final segment the last instantaneous
+/// rate holds (so a run longer than the shape degrades gracefully).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct LoadShape {
+    pub segs: Vec<ShapeSeg>,
+}
+
+impl LoadShape {
+    /// A single flat segment covering `dur`.
+    pub fn constant(rate: f64, dur: Time) -> Self {
+        Self { segs: vec![ShapeSeg { dur, kind: ShapeKind::Flat { rate } }] }
+    }
+
+    /// Flash crowd: `base` until `spike_from`, `peak` for `spike_dur`,
+    /// then `base` again for the rest of `total`. "Black Friday" in
+    /// three segments.
+    pub fn flash_crowd(
+        base: f64,
+        peak: f64,
+        spike_from: Time,
+        spike_dur: Time,
+        total: Time,
+    ) -> Self {
+        assert!(spike_from + spike_dur <= total, "spike must fit inside the run");
+        Self {
+            segs: vec![
+                ShapeSeg { dur: spike_from, kind: ShapeKind::Flat { rate: base } },
+                ShapeSeg { dur: spike_dur, kind: ShapeKind::Flat { rate: peak } },
+                ShapeSeg {
+                    dur: total - spike_from - spike_dur,
+                    kind: ShapeKind::Flat { rate: base },
+                },
+            ],
+        }
+    }
+
+    /// One compressed day: a sine around `base` with amplitude `amp`.
+    pub fn diurnal(base: f64, amp: f64, period: Time, total: Time) -> Self {
+        Self { segs: vec![ShapeSeg { dur: total, kind: ShapeKind::Diurnal { base, amp, period } }] }
+    }
+
+    /// Target per-client rate (ops/sec) at virtual time `t`.
+    pub fn rate_at(&self, t: Time) -> f64 {
+        let mut start: Time = 0;
+        for (i, seg) in self.segs.iter().enumerate() {
+            let last = i + 1 == self.segs.len();
+            if t < start + seg.dur || last {
+                let elapsed = (t - start).min(seg.dur);
+                return Self::eval(&seg.kind, elapsed, seg.dur);
+            }
+            start += seg.dur;
+        }
+        0.0 // unreachable for validated (non-empty) shapes
+    }
+
+    fn eval(kind: &ShapeKind, elapsed: Time, dur: Time) -> f64 {
+        match kind {
+            ShapeKind::Flat { rate } => *rate,
+            ShapeKind::Ramp { from, to } => {
+                let frac = if dur == 0 { 1.0 } else { elapsed as f64 / dur as f64 };
+                from + (to - from) * frac
+            }
+            ShapeKind::Diurnal { base, amp, period } => {
+                let phase = 2.0 * std::f64::consts::PI * (elapsed as f64 / *period as f64);
+                base + amp * phase.sin()
+            }
+        }
+    }
+
+    /// Total duration covered by the segments.
+    pub fn total_dur(&self) -> Time {
+        self.segs.iter().map(|s| s.dur).sum()
+    }
+
+    /// Scale every segment duration by `scale` (experiment scaling) —
+    /// rates are per-client and stay put; only the timeline compresses.
+    pub fn scaled(&self, scale: f64) -> Self {
+        Self {
+            segs: self
+                .segs
+                .iter()
+                .map(|s| {
+                    let kind = match &s.kind {
+                        ShapeKind::Diurnal { base, amp, period } => ShapeKind::Diurnal {
+                            base: *base,
+                            amp: *amp,
+                            period: ((*period as f64 * scale) as Time).max(1),
+                        },
+                        k => k.clone(),
+                    };
+                    ShapeSeg { dur: ((s.dur as f64 * scale) as Time).max(1), kind }
+                })
+                .collect(),
+        }
+    }
+
+    /// Reject shapes the runner cannot pace by: no segments, zero-length
+    /// segments, or non-positive rates anywhere on the curve.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.segs.is_empty() {
+            return Err("load shape has no segments".into());
+        }
+        for (i, seg) in self.segs.iter().enumerate() {
+            if seg.dur == 0 {
+                return Err(format!("segment {i} has zero duration"));
+            }
+            let (lo, hi) = match &seg.kind {
+                ShapeKind::Flat { rate } => (*rate, *rate),
+                ShapeKind::Ramp { from, to } => (from.min(*to), from.max(*to)),
+                ShapeKind::Diurnal { base, amp, period } => {
+                    if *period == 0 {
+                        return Err(format!("segment {i}: diurnal period is zero"));
+                    }
+                    if *amp < 0.0 {
+                        return Err(format!("segment {i}: negative amplitude"));
+                    }
+                    (base - amp, base + amp)
+                }
+            };
+            if !(lo.is_finite() && hi.is_finite()) || lo <= 0.0 {
+                return Err(format!(
+                    "segment {i}: rate range [{lo}, {hi}] must be finite and positive"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Pacing gap for one cycle at rate `rate_at(t)`: `1/rate` seconds
+    /// in sim time, floored at 1 tick so a huge rate still advances.
+    pub fn gap_at(&self, t: Time) -> Time {
+        let rate = self.rate_at(t);
+        ((SEC as f64 / rate) as Time).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_and_flash_crowd_evaluate_piecewise() {
+        let s = LoadShape::flash_crowd(10.0, 80.0, 20 * SEC, 10 * SEC, 60 * SEC);
+        assert!(s.validate().is_ok());
+        assert_eq!(s.total_dur(), 60 * SEC);
+        assert_eq!(s.rate_at(0), 10.0);
+        assert_eq!(s.rate_at(19 * SEC), 10.0);
+        assert_eq!(s.rate_at(20 * SEC), 80.0, "spike starts");
+        assert_eq!(s.rate_at(29 * SEC), 80.0);
+        assert_eq!(s.rate_at(30 * SEC), 10.0, "spike ends");
+        assert_eq!(s.rate_at(10_000 * SEC), 10.0, "past the end: last rate holds");
+    }
+
+    #[test]
+    fn ramp_interpolates_linearly() {
+        let s = LoadShape {
+            segs: vec![ShapeSeg { dur: 10 * SEC, kind: ShapeKind::Ramp { from: 10.0, to: 30.0 } }],
+        };
+        assert!(s.validate().is_ok());
+        assert_eq!(s.rate_at(0), 10.0);
+        assert!((s.rate_at(5 * SEC) - 20.0).abs() < 1e-9);
+        assert!((s.rate_at(10 * SEC) - 30.0).abs() < 1e-9, "clamped at segment end");
+    }
+
+    #[test]
+    fn diurnal_oscillates_around_base() {
+        let s = LoadShape::diurnal(20.0, 10.0, 40 * SEC, 80 * SEC);
+        assert!(s.validate().is_ok());
+        assert!((s.rate_at(0) - 20.0).abs() < 1e-9);
+        assert!((s.rate_at(10 * SEC) - 30.0).abs() < 1e-9, "quarter period: peak");
+        assert!((s.rate_at(30 * SEC) - 10.0).abs() < 1e-9, "three quarters: trough");
+    }
+
+    #[test]
+    fn gap_is_inverse_rate() {
+        let s = LoadShape::constant(10.0, 60 * SEC);
+        assert_eq!(s.gap_at(0), SEC / 10);
+        let fast = LoadShape::constant(1e18, SEC);
+        assert_eq!(fast.gap_at(0), 1, "floored at one tick");
+    }
+
+    #[test]
+    fn scaled_compresses_durations_not_rates() {
+        let s = LoadShape::flash_crowd(10.0, 80.0, 20 * SEC, 10 * SEC, 60 * SEC).scaled(0.1);
+        assert_eq!(s.total_dur(), 6 * SEC);
+        assert_eq!(s.rate_at(0), 10.0, "rates untouched");
+        assert_eq!(s.rate_at(2 * SEC), 80.0, "spike scaled into place");
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_shapes() {
+        assert!(LoadShape::default().validate().is_err(), "no segments");
+        let zero_dur =
+            LoadShape { segs: vec![ShapeSeg { dur: 0, kind: ShapeKind::Flat { rate: 1.0 } }] };
+        assert!(zero_dur.validate().is_err());
+        assert!(LoadShape::constant(0.0, SEC).validate().is_err(), "zero rate");
+        assert!(LoadShape::constant(-5.0, SEC).validate().is_err());
+        let sag = LoadShape::diurnal(10.0, 10.0, 20 * SEC, 40 * SEC);
+        assert!(sag.validate().is_err(), "amplitude touches zero");
+        let ramp_to_zero = LoadShape {
+            segs: vec![ShapeSeg { dur: SEC, kind: ShapeKind::Ramp { from: 5.0, to: 0.0 } }],
+        };
+        assert!(ramp_to_zero.validate().is_err());
+    }
+}

@@ -30,6 +30,7 @@ struct Digest {
     dropped: Vec<u64>,
     ops_ok: u64,
     ops_failed: u64,
+    rejoins: u64,
     quorum_timeouts: u64,
     violations: usize,
     actual_violations: usize,
@@ -53,6 +54,7 @@ fn digest(r: &ExpResult) -> Digest {
         dropped: r.sim_stats.dropped.to_vec(),
         ops_ok: r.ops_ok,
         ops_failed: r.ops_failed,
+        rejoins: r.rejoins,
         quorum_timeouts: r.quorum_timeouts,
         violations: r.violations_detected,
         actual_violations: r.actual_me_violations,
@@ -218,6 +220,53 @@ fn threaded_adaptive_run_is_bit_identical() {
     assert_threaded_matches_serial(
         || scenarios::adaptive_conjunctive(AdaptRun::Adaptive, 0.05, 42),
         &[1, 2],
+    );
+}
+
+// ---------------------------------------------------------------------------
+// the workload engine: inert default, skewed traffic, churn, flash crowd
+// ---------------------------------------------------------------------------
+
+#[test]
+fn inert_workload_default_changes_nothing_and_stays_identical() {
+    // the regression pin for the workload subsystem: attaching the
+    // explicit uniform default must reproduce the plain run bit-for-bit
+    // (zero extra RNG draws, zero event changes), on every engine
+    let base = || scenarios::scaleout_conjunctive(8, 0.05, 42);
+    let with_default = || base().with_workload(optikv::workload::WorkloadCfg::uniform_default());
+    assert_eq!(
+        digest(&run(&base())),
+        digest(&run(&with_default())),
+        "uniform_default() must be inert"
+    );
+    assert_shards_match_serial(with_default, &[1, 4]);
+    assert_threaded_matches_serial(with_default, &[1, 4]);
+}
+
+#[test]
+fn kvmix_zipf_is_bit_identical_on_all_engines() {
+    // skewed production traffic: alias-table draws, guarded hot keys and
+    // per-key metrics all merge back to the serial schedule
+    let mk = || scenarios::kvmix_skew(1.2, AdaptRun::StaticEventual, 0.05, 42);
+    assert_shards_match_serial(mk, &[1, 2]);
+    assert_threaded_matches_serial(mk, &[1, 2]);
+}
+
+#[test]
+fn kvmix_churn_is_bit_identical_threaded() {
+    // client leave/rejoin rides the fault timeline: every worker replays
+    // the same merged schedule, only the owning shard delivers the hooks
+    let mk = || scenarios::kvmix_churn(AdaptRun::StaticEventual, 0.05, 42);
+    assert_threaded_matches_serial(mk, &[1, 2]);
+}
+
+#[test]
+fn kvmix_flash_crowd_adaptive_is_bit_identical_threaded() {
+    // the full composition — load shape + partition + hysteresis
+    // controller — still digest-equal across engines
+    assert_threaded_matches_serial(
+        || scenarios::kvmix_flash_crowd(AdaptRun::Adaptive, true, 0.05, 42),
+        &[2],
     );
 }
 

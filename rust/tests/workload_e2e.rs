@@ -1,0 +1,150 @@
+//! End-to-end tests for the production-traffic workload engine
+//! ([`optikv::workload`] + [`optikv::apps::kvmix`]):
+//!
+//! * **churn under server crash** — a client leave/rejoin schedule
+//!   composed with a server crash on the *same* fault timeline: the
+//!   departed client's per-window op counts go dark exactly while it is
+//!   gone, the rejoin is counted, and the whole composition is
+//!   bit-identical on the threaded engine;
+//! * **skew → violation rate** — the acceptance claim that the
+//!   mutual-exclusion violation rate (per kop) is monotone in the Zipf
+//!   parameter, checked at the sweep endpoints;
+//! * **flash crowd round trip** — the adaptive controller escalates to
+//!   sequential during the partitioned flash crowd and releases after
+//!   the heal (≥ 1 full round trip), with per-phase throughput
+//!   attribution reporting the spike.
+
+use optikv::adapt::round_trips;
+use optikv::client::consistency::{ClientTiming, ConsistencyCfg};
+use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+use optikv::exp::runner::{run, ExpResult};
+use optikv::exp::scenarios::{self, AdaptRun};
+use optikv::faults::plan::{FaultEvent, FaultPlan};
+use optikv::sim::{Time, SEC};
+use optikv::workload::churn::{ChurnEvent, ChurnPlan};
+use optikv::workload::keyspace::KeyDist;
+use optikv::workload::WorkloadCfg;
+
+/// Kvmix on the 3-zone regional cluster: client 2 leaves at 10 s and
+/// rejoins at 20 s; server 1 crashes at 12 s for 5 s. Leave/rejoin and
+/// crash/restart ride one merged timeline.
+fn churn_under_crash() -> ExpConfig {
+    let mut cfg = ExpConfig::new("wl-churn-crash", ConsistencyCfg::n3r1w1(), AppKind::KvMix)
+        .with_fault_plan(FaultPlan::none().with(FaultEvent::Crash {
+            server: 1,
+            at: 12 * SEC,
+            restart_after: 5 * SEC,
+        }));
+    cfg.n_clients = 8;
+    cfg.monitors = true;
+    cfg.duration = 40 * SEC;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.timing = ClientTiming::with_think(2.5);
+    let wl = WorkloadCfg::uniform_default()
+        .with_keys(32, 4)
+        .with_dist(KeyDist::Zipf { theta: 0.99 })
+        .with_churn(ChurnPlan::none().with(ChurnEvent {
+            client: 2,
+            at: 10 * SEC,
+            rejoin_after: 10 * SEC,
+        }));
+    cfg.with_workload(wl)
+}
+
+/// Sum of one client's per-window op counts over `[from, until)` sim
+/// seconds (window indices derived from the hub's window size).
+fn ops_between(res: &ExpResult, client: usize, from: Time, until: Time) -> u64 {
+    let m = res.metrics.borrow();
+    let (a, b) = ((from / m.window) as usize, (until / m.window) as usize);
+    let series = m.client_window_ops(client);
+    series.iter().take(b.min(series.len())).skip(a).sum()
+}
+
+#[test]
+fn departed_client_goes_dark_and_rejoins() {
+    let res = run(&churn_under_crash());
+
+    // the composition actually ran: app progress, a crossed cut, and
+    // both lifecycle arcs (client rejoin + server recovery)
+    assert!(res.ops_ok > 200, "progress under churn+crash: {}", res.ops_ok);
+    assert_eq!(res.rejoins, 1, "exactly one client rejoin");
+    assert!(res.crashes >= 1, "the server crash was delivered");
+    assert!(res.sim_stats.fault_dropped > 0, "in-flight messages hit a dead proc");
+
+    // client 2's windows: busy before the leave, dark while gone,
+    // busy again after the rejoin (skip a boundary window on each
+    // edge of the gap for in-flight straddlers)
+    assert!(ops_between(&res, 2, SEC, 10 * SEC) > 0, "active before leaving");
+    assert_eq!(
+        ops_between(&res, 2, 11 * SEC, 20 * SEC),
+        0,
+        "no ops complete while the client is gone"
+    );
+    assert!(ops_between(&res, 2, 21 * SEC, 40 * SEC) > 0, "active again after rejoining");
+
+    // an undisturbed client never goes dark mid-run
+    assert!(ops_between(&res, 3, 11 * SEC, 20 * SEC) > 0, "other clients keep running");
+}
+
+#[test]
+fn churn_under_crash_is_bit_identical_threaded() {
+    let serial = run(&churn_under_crash());
+    let threaded = run(&churn_under_crash().with_shards(2).with_threaded());
+    assert_eq!(serial.sim_stats.events, threaded.sim_stats.events);
+    assert_eq!(serial.ops_ok, threaded.ops_ok);
+    assert_eq!(serial.rejoins, threaded.rejoins);
+    assert_eq!(serial.violations_detected, threaded.violations_detected);
+    assert_eq!(serial.app_tps.to_bits(), threaded.app_tps.to_bits());
+    assert_eq!(
+        serial.metrics.borrow().key_ops(),
+        threaded.metrics.borrow().key_ops(),
+        "per-key traffic merges back to the serial counts"
+    );
+}
+
+#[test]
+fn violation_rate_is_monotone_in_skew() {
+    // the sweep endpoints: uniform traffic vs heavy skew. Heavier skew
+    // concentrates guarded writes on fewer hot keys, so the per-kop
+    // violation rate must rise (the CLI smoke gate checks the full
+    // sweep; this pins the endpoints in `cargo test`).
+    let uniform = run(&scenarios::kvmix_skew(0.0, AdaptRun::StaticEventual, 0.05, 42));
+    let skewed = run(&scenarios::kvmix_skew(1.2, AdaptRun::StaticEventual, 0.05, 42));
+    assert!(uniform.ops_ok > 100 && skewed.ops_ok > 100);
+    assert!(
+        skewed.violations_per_kop > uniform.violations_per_kop,
+        "zipf 1.2 must out-violate uniform: {} vs {}",
+        skewed.violations_per_kop,
+        uniform.violations_per_kop
+    );
+    // and the contention stats agree on where the traffic went
+    assert!(skewed.hot_key_share > uniform.hot_key_share);
+    assert!(skewed.keys_p90 < uniform.keys_p90);
+}
+
+#[test]
+fn flash_crowd_under_partition_round_trips_the_controller() {
+    let res = run(&scenarios::kvmix_flash_crowd(AdaptRun::Adaptive, true, 0.1, 42));
+    assert!(
+        round_trips(&res.mode_timeline) >= 1,
+        "escalate + release expected under the partitioned flash crowd: {:?}",
+        res.mode_timeline
+    );
+    assert!(res.mode_timeline.last().unwrap().cfg.is_eventual(), "ends optimistic");
+
+    // per-phase attribution sees the spike: the crowd phase carries
+    // more throughput than the pre-crowd baseline
+    let tps_of = |label: &str| -> f64 {
+        res.phase_tps
+            .iter()
+            .find(|(l, _)| l.as_str() == label)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("phase {label} missing: {:?}", res.phase_tps))
+    };
+    assert_eq!(res.phase_tps.len(), 3, "flat/flat/flat flash-crowd shape: {:?}", res.phase_tps);
+    assert!(
+        tps_of("1:flat") > tps_of("0:flat"),
+        "crowd phase outpaces baseline: {:?}",
+        res.phase_tps
+    );
+}
