@@ -91,6 +91,15 @@ pub struct ExpResult {
     pub quorum_timeouts: u64,
     /// controller stats
     pub recoveries: u64,
+    /// recovery phases that hit their ack deadline (a crashed owner
+    /// never answered; the controller decided on the live quorum)
+    pub recovery_ack_timeouts: u64,
+    /// recoveries abandoned for lack of even a live majority
+    pub recovery_aborts: u64,
+    /// recoveries that ran to completion
+    pub completed_recoveries: u64,
+    /// mean time-to-recover (ms) over completed recoveries (0 when none)
+    pub mean_recovery_ms: f64,
     /// fault-injection stats (aggregated over servers)
     pub crashes: u64,
     pub resyncs: u64,
@@ -421,6 +430,10 @@ struct Harvest {
     resyncs: u64,
     resync_keys: u64,
     recoveries: u64,
+    recovery_ack_timeouts: u64,
+    recovery_aborts: u64,
+    completed_recoveries: u64,
+    recovery_ms_total: f64,
     /// mode timeline + switch count, from whichever shard hosts the
     /// adapt controller (at most one does)
     adapt: Option<(Vec<ModeSpan>, u64)>,
@@ -450,6 +463,10 @@ fn harvest(
         resyncs: 0,
         resync_keys: 0,
         recoveries: 0,
+        recovery_ack_timeouts: 0,
+        recovery_aborts: 0,
+        completed_recoveries: 0,
+        recovery_ms_total: 0.0,
         adapt: None,
     };
     for &id in lay.monitor_ids.iter().filter(|&&id| hosts(filter, id)) {
@@ -483,12 +500,17 @@ fn harvest(
         }
     }
     if hosts(filter, lay.controller_id) {
-        h.recoveries = sim
+        if let Some(ctl) = sim
             .actor_mut(lay.controller_id)
             .as_any()
             .and_then(|a| a.downcast_mut::<ControllerActor>())
-            .map(|ctl| ctl.recoveries)
-            .unwrap_or(0);
+        {
+            h.recoveries = ctl.recoveries;
+            h.recovery_ack_timeouts = ctl.ack_timeouts;
+            h.recovery_aborts = ctl.aborted_recoveries;
+            h.completed_recoveries = ctl.completed_recoveries;
+            h.recovery_ms_total = ctl.recovery_ms_total;
+        }
     }
     if let Some(id) = lay.adapt_id.filter(|&id| hosts(filter, id)) {
         h.adapt = sim
@@ -521,6 +543,10 @@ fn merge_harvests(mut hs: Vec<Harvest>) -> Harvest {
         acc.resyncs += h.resyncs;
         acc.resync_keys += h.resync_keys;
         acc.recoveries += h.recoveries;
+        acc.recovery_ack_timeouts += h.recovery_ack_timeouts;
+        acc.recovery_aborts += h.recovery_aborts;
+        acc.completed_recoveries += h.completed_recoveries;
+        acc.recovery_ms_total += h.recovery_ms_total;
         if acc.adapt.is_none() {
             acc.adapt = h.adapt;
         }
@@ -611,6 +637,14 @@ fn finalize(cfg: &ExpConfig, h: Harvest, engine: EngineRun) -> ExpResult {
         restarts: h.restarts,
         quorum_timeouts,
         recoveries: h.recoveries,
+        recovery_ack_timeouts: h.recovery_ack_timeouts,
+        recovery_aborts: h.recovery_aborts,
+        completed_recoveries: h.completed_recoveries,
+        mean_recovery_ms: if h.completed_recoveries == 0 {
+            0.0
+        } else {
+            h.recovery_ms_total / h.completed_recoveries as f64
+        },
         crashes: h.crashes,
         resyncs: h.resyncs,
         resync_keys: h.resync_keys,

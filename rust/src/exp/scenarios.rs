@@ -276,9 +276,11 @@ pub fn partition_coloring(scale: f64, seed: u64) -> ExpConfig {
 
 /// Crash-churn study: the conjunctive stress workload while servers
 /// crash, lose their volatile state, restart and re-sync from their
-/// preference-list peers. Recovery stays `NotifyClients` — a crashed
-/// server cannot ack a stop-the-world freeze, so `FullRestore` would
-/// stall (documented in DESIGN.md §7).
+/// preference-list peers. Recovery is `FullRestore` — the controller's
+/// per-phase ack deadline decides on the live majority when a crashed
+/// server cannot ack the stop-the-world freeze, so the restore runs
+/// through the crash windows instead of wedging (the PR-3
+/// `NotifyClients` workaround, retired; see DESIGN.md §13).
 pub fn crash_churn_conjunctive(scale: f64, seed: u64) -> ExpConfig {
     let d = dur(scale, 300);
     let mut cfg = ExpConfig::new(
@@ -297,6 +299,7 @@ pub fn crash_churn_conjunctive(scale: f64, seed: u64) -> ExpConfig {
     cfg.duration = d;
     cfg.seed = seed;
     cfg.timing = ClientTiming::with_think(2.5);
+    cfg.recovery = crate::rollback::recovery::RecoveryPolicy::FullRestore;
     cfg
 }
 
@@ -681,8 +684,8 @@ mod tests {
         assert_eq!(c.fault_plan.events.len(), 2, "two crash/restart cycles");
         assert_eq!(
             c.recovery,
-            crate::rollback::recovery::RecoveryPolicy::NotifyClients,
-            "FullRestore would stall on a crashed server"
+            crate::rollback::recovery::RecoveryPolicy::FullRestore,
+            "the deadline-hardened controller restores through crashes"
         );
 
         for regional in [true, false] {

@@ -9,11 +9,29 @@
 //!   cut before `T_violate` (window-log if it reaches back far enough,
 //!   periodic snapshot otherwise), resume, and notify clients.
 //! * `None` — record only (the monitors-as-debugger deployment).
+//!
+//! **Liveness invariant** (the PR-3 wedge, fixed): a freeze/restore ack
+//! round must never require a reply from a crashed server. The
+//! controller cannot observe crashes directly — fault hooks are
+//! delivered only to the affected actor — so each ack-collecting phase
+//! arms a deterministic deadline timer. When the deadline fires with a
+//! *majority* of owners acked, the phase proceeds on that live quorum
+//! (the missing servers re-derive their partitions from peers on
+//! restart via the `Msg::Sync` path); below a majority the recovery
+//! aborts — servers are resumed, the state machine returns to `Idle`,
+//! and the next violation report re-queues a fresh attempt. Either way
+//! the controller can never sit in `Freezing`/`Restoring` forever.
+//! Stale deadlines are discarded by a per-phase sequence number, so a
+//! phase that completed on full acks ignores its own leftover timer.
 
 use crate::metrics::throughput::Metrics;
 use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{AdaptMsg, Msg, RollbackMsg};
 use crate::sim::{ms, ProcId, Time, MS};
+
+/// High bit tagging controller deadline timers (the low bits carry the
+/// phase sequence number, so stale deadlines self-identify).
+const DEADLINE_FLAG: u64 = 1 << 62;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RecoveryPolicy {
@@ -41,6 +59,12 @@ pub struct ControllerActor {
     pending_t_violate: i64,
     /// when the current FullRestore freeze began (stall accounting)
     freeze_started: Time,
+    /// how long an ack-collecting phase may wait before the deadline
+    /// decides on the live quorum
+    ack_deadline: Time,
+    /// bumped on every phase entry; deadline timers carry it so a timer
+    /// armed for an already-finished phase is discarded as stale
+    phase_seq: u64,
     /// the adaptive-consistency controller, if one is deployed
     /// ([`crate::adapt`]): every violation report and every finished
     /// recovery is forwarded as a signal sample. `None` (the default)
@@ -52,6 +76,14 @@ pub struct ControllerActor {
     pub recoveries: u64,
     pub window_log_restores: u64,
     pub snapshot_restores: u64,
+    /// phases that hit their ack deadline (quorum-advance or abort)
+    pub ack_timeouts: u64,
+    /// recoveries abandoned because a phase lacked even a live majority
+    pub aborted_recoveries: u64,
+    /// recoveries that ran to completion (notify-only ones count too)
+    pub completed_recoveries: u64,
+    /// summed stall time over completed recoveries (ms) — time-to-recover
+    pub recovery_ms_total: f64,
 }
 
 impl ControllerActor {
@@ -71,12 +103,18 @@ impl ControllerActor {
             last_recovery: 0,
             pending_t_violate: 0,
             freeze_started: 0,
+            ack_deadline: ms(1_000.0),
+            phase_seq: 0,
             adapt: None,
             metrics,
             violations_received: 0,
             recoveries: 0,
             window_log_restores: 0,
             snapshot_restores: 0,
+            ack_timeouts: 0,
+            aborted_recoveries: 0,
+            completed_recoveries: 0,
+            recovery_ms_total: 0.0,
         }
     }
 
@@ -103,6 +141,7 @@ impl ControllerActor {
                 // notify-only recovery never freezes the servers: the
                 // stall sample is 0, but the adapt controller still sees
                 // that a recovery happened
+                self.completed_recoveries += 1;
                 if let Some(a) = self.adapt {
                     ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms: 0.0 }));
                 }
@@ -114,7 +153,71 @@ impl ControllerActor {
                 for &s in &self.servers {
                     ctx.send(s, Msg::Rollback(RollbackMsg::Freeze { epoch: self.epoch }));
                 }
+                self.arm_deadline(ctx);
             }
+        }
+    }
+
+    /// The smallest ack count an ack-collecting phase may proceed on
+    /// when its deadline fires.
+    fn majority(&self) -> usize {
+        self.servers.len() / 2 + 1
+    }
+
+    /// Arm the deadline for the phase just entered. Only ack-collecting
+    /// phases call this, so `None`/`NotifyClients` runs schedule no
+    /// timer events at all (they reproduce the pre-deadline schedules
+    /// bit-for-bit).
+    fn arm_deadline(&mut self, ctx: &mut Ctx) {
+        self.phase_seq += 1;
+        ctx.schedule(self.ack_deadline, DEADLINE_FLAG | self.phase_seq);
+    }
+
+    /// Freeze phase settled (full acks or live quorum at the deadline):
+    /// broadcast the restore cut and start collecting restore acks.
+    fn enter_restoring(&mut self, ctx: &mut Ctx) {
+        self.state = State::Restoring { acks: 0 };
+        // restore to just before the violation started
+        let to_ms = self.pending_t_violate - 1;
+        for &s in &self.servers {
+            ctx.send(s, Msg::Rollback(RollbackMsg::Restore { epoch: self.epoch, to_ms }));
+        }
+        self.arm_deadline(ctx);
+    }
+
+    /// Restore phase settled: resume the cluster, notify clients, and
+    /// report the stall to the adapt controller.
+    fn finish_restore(&mut self, ctx: &mut Ctx) {
+        self.state = State::Idle;
+        self.phase_seq += 1; // invalidate any in-flight deadline
+        for &s in &self.servers {
+            ctx.send(s, Msg::Rollback(RollbackMsg::Resume { epoch: self.epoch }));
+        }
+        let t = self.pending_t_violate;
+        self.notify_clients(ctx, t);
+        let stall_ms = (ctx.now() - self.freeze_started) as f64 / MS as f64;
+        self.completed_recoveries += 1;
+        self.recovery_ms_total += stall_ms;
+        if let Some(a) = self.adapt {
+            // how long the cluster sat frozen for this restore — the
+            // rollback-cost signal
+            ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms }));
+        }
+    }
+
+    /// A phase deadline fired without even a live majority: unwedge by
+    /// resuming whoever did freeze and returning to `Idle`. The next
+    /// violation report re-queues a fresh recovery attempt.
+    fn abort_recovery(&mut self, ctx: &mut Ctx) {
+        self.state = State::Idle;
+        self.phase_seq += 1;
+        self.aborted_recoveries += 1;
+        for &s in &self.servers {
+            ctx.send(s, Msg::Rollback(RollbackMsg::Resume { epoch: self.epoch }));
+        }
+        let stall_ms = (ctx.now() - self.freeze_started) as f64 / MS as f64;
+        if let Some(a) = self.adapt {
+            ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms }));
         }
     }
 }
@@ -147,12 +250,7 @@ impl Actor for ControllerActor {
                 if let State::Freezing { acks } = self.state {
                     let acks = acks + 1;
                     if acks == self.servers.len() {
-                        self.state = State::Restoring { acks: 0 };
-                        // restore to just before the violation started
-                        let to_ms = self.pending_t_violate - 1;
-                        for &s in &self.servers {
-                            ctx.send(s, Msg::Rollback(RollbackMsg::Restore { epoch, to_ms }));
-                        }
+                        self.enter_restoring(ctx);
                     } else {
                         self.state = State::Freezing { acks };
                     }
@@ -167,25 +265,40 @@ impl Actor for ControllerActor {
                 if let State::Restoring { acks } = self.state {
                     let acks = acks + 1;
                     if acks == self.servers.len() {
-                        self.state = State::Idle;
-                        for &s in &self.servers {
-                            ctx.send(s, Msg::Rollback(RollbackMsg::Resume { epoch }));
-                        }
-                        let t = self.pending_t_violate;
-                        self.notify_clients(ctx, t);
-                        if let Some(a) = self.adapt {
-                            // how long the cluster sat frozen for this
-                            // restore — the rollback-cost signal
-                            let stall_ms =
-                                (ctx.now() - self.freeze_started) as f64 / MS as f64;
-                            ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms }));
-                        }
+                        self.finish_restore(ctx);
                     } else {
                         self.state = State::Restoring { acks };
                     }
                 }
             }
             _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, tag: u64) {
+        if tag & DEADLINE_FLAG == 0 || (tag & !DEADLINE_FLAG) != self.phase_seq {
+            return; // not ours, or a stale deadline of a finished phase
+        }
+        match self.state {
+            State::Idle => {}
+            State::Freezing { acks } => {
+                // a deadline in an ack phase means at least one owner
+                // never answered — count it, then decide on the quorum
+                self.ack_timeouts += 1;
+                if acks >= self.majority() {
+                    self.enter_restoring(ctx);
+                } else {
+                    self.abort_recovery(ctx);
+                }
+            }
+            State::Restoring { acks } => {
+                self.ack_timeouts += 1;
+                if acks >= self.majority() {
+                    self.finish_restore(ctx);
+                } else {
+                    self.abort_recovery(ctx);
+                }
+            }
         }
     }
 

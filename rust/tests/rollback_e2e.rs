@@ -58,6 +58,31 @@ fn notify_clients_is_cheaper_than_full_restore() {
 }
 
 #[test]
+fn crash_during_freeze_cannot_wedge_full_restore() {
+    use optikv::faults::{FaultEvent, FaultPlan};
+    // server 1 is down for most of the run, so any freeze broadcast in
+    // that window can never collect its ack — exactly the shape that
+    // used to wedge the controller in `Freezing` forever (PR-3 notes)
+    let cfg = violating_cfg(RecoveryPolicy::FullRestore, 59).with_fault_plan(
+        FaultPlan::none().with(FaultEvent::Crash {
+            server: 1,
+            at: 5 * SEC,
+            restart_after: 25 * SEC,
+        }),
+    );
+    let res = run(&cfg);
+    assert!(res.violations_detected > 0, "violations occur");
+    assert_eq!(res.crashes, 1, "the crash fired");
+    assert!(res.recoveries > 0, "recoveries started despite the crash");
+    // the deadline decides on the live majority, so restores complete
+    assert!(res.completed_recoveries > 0, "no recovery may wedge");
+    // and at least one ack phase actually hit its deadline
+    assert!(res.recovery_ack_timeouts >= 1, "deadline path exercised");
+    // the cluster keeps making progress through and after the window
+    assert!(res.ops_ok > 200, "ops_ok={}", res.ops_ok);
+}
+
+#[test]
 fn recovery_none_just_records() {
     let res = run(&violating_cfg(RecoveryPolicy::None, 55));
     assert!(res.violations_detected > 0);
