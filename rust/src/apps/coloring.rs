@@ -44,6 +44,11 @@ pub struct ColoringShared {
     pub task_size: usize,
     /// recolor forever (throughput experiments) vs one pass
     pub loop_forever: bool,
+    /// self-stabilizing variant (the `Stabilize` recovery strategy's
+    /// demonstration workload): rollback notifications are ignored — no
+    /// task aborts — because continuous re-coloring repairs conflicting
+    /// colors on its own
+    pub stabilize: bool,
 }
 
 impl ColoringShared {
@@ -56,6 +61,7 @@ impl ColoringShared {
         metrics: Metrics,
         task_size: usize,
         loop_forever: bool,
+        stabilize: bool,
     ) -> Self {
         let owner: Rc<Vec<u32>> =
             Rc::new(crate::apps::graph::partition_nodes(graph.n, n_clients));
@@ -88,7 +94,7 @@ impl ColoringShared {
                 }
             }
         }
-        Self { graph, owner, interner, oracle, metrics, hi_deg, task_size, loop_forever }
+        Self { graph, owner, interner, oracle, metrics, hi_deg, task_size, loop_forever, stabilize }
     }
 }
 
@@ -582,6 +588,12 @@ impl AppLogic for ColoringApp {
     }
 
     fn on_violation(&mut self, _env: &mut AppEnv, _t_violate_ms: Millis) -> bool {
+        if self.sh.stabilize {
+            // self-stabilizing mode: no abort — the continuous
+            // re-coloring pass repairs any conflicting colors, so the
+            // rollback notification is acknowledged and ignored
+            return false;
+        }
         if matches!(
             self.phase,
             Phase::Done
@@ -620,6 +632,7 @@ mod tests {
             MeOracle::new(),
             MetricsHub::new(1, n_clients),
             5,
+            false,
             false,
         );
         (sh, interner)
@@ -825,5 +838,22 @@ mod tests {
         drive_to_completion(&mut app, &mut store, 1);
         assert!(metrics.borrow().tasks_aborted >= 1);
         assert!(app.tasks_done > 0);
+    }
+
+    #[test]
+    fn stabilize_mode_ignores_violations_and_still_completes() {
+        let (mut sh, _) = setup(2);
+        sh.stabilize = true;
+        let metrics = sh.metrics.clone();
+        let mut app = ColoringApp::new(sh, 0);
+        let mut store: HashMap<KeyId, Value> = HashMap::new();
+        let mut rng = Rng::new(1);
+        let mut env = AppEnv { now: 0, seq: 0, client_idx: 0, pipeline: 1, rng: &mut rng };
+        // a violation at any phase is acknowledged but aborts nothing
+        assert!(!app.on_violation(&mut env, 123), "stabilize never aborts");
+        drive_to_completion(&mut app, &mut store, 1);
+        assert!(!app.on_violation(&mut env, 456), "still no aborts mid-run");
+        assert_eq!(metrics.borrow().tasks_aborted, 0);
+        assert!(app.tasks_done > 0, "the pass completes without restarts");
     }
 }

@@ -11,12 +11,26 @@ pub struct ConsistencyCfg {
     pub n: usize,
     pub r: usize,
     pub w: usize,
+    /// layer client-side session guarantees (read-your-writes +
+    /// monotonic reads, Terry-style) on top of the quorum config: the
+    /// client patches its own committed writes and previously-seen
+    /// versions into GET results, so no extra quorum round trips and no
+    /// protocol change — causal consistency per session at eventual-mode
+    /// cost. Meaningless (and ignored) under a sequential config, which
+    /// is already stronger. `false` everywhere by default.
+    pub causal: bool,
 }
 
 impl ConsistencyCfg {
     pub fn new(n: usize, r: usize, w: usize) -> Self {
         assert!(n >= 1 && r >= 1 && w >= 1 && r <= n && w <= n);
-        Self { n, r, w }
+        Self { n, r, w, causal: false }
+    }
+
+    /// Enable client-side session guarantees on this quorum config.
+    pub fn with_causal(mut self) -> Self {
+        self.causal = true;
+        self
     }
 
     /// Table II presets.
@@ -48,6 +62,9 @@ impl ConsistencyCfg {
     /// segment happened to stop evaluation before the slice panicked.
     pub fn parse(s: &str) -> Option<Self> {
         let s = s.to_ascii_uppercase();
+        if let Some(base) = s.strip_suffix("-CAUSAL") {
+            return Self::parse(base).map(Self::with_causal);
+        }
         let bytes = s.as_bytes();
         if bytes.first() != Some(&b'N') {
             return None;
@@ -61,14 +78,18 @@ impl ConsistencyCfg {
         let r: usize = s[r_pos + 1..w_pos].parse().ok()?;
         let w: usize = s[w_pos + 1..].parse().ok()?;
         if n >= 1 && r >= 1 && w >= 1 && r <= n && w <= n {
-            Some(Self { n, r, w })
+            Some(Self { n, r, w, causal: false })
         } else {
             None
         }
     }
 
     pub fn label(&self) -> String {
-        format!("N{}R{}W{}", self.n, self.r, self.w)
+        if self.causal {
+            format!("N{}R{}W{}-causal", self.n, self.r, self.w)
+        } else {
+            format!("N{}R{}W{}", self.n, self.r, self.w)
+        }
     }
 
     /// §II-B: sequential iff `W + R > N` and `W > N/2`.
@@ -83,6 +104,8 @@ impl ConsistencyCfg {
     pub fn model_name(&self) -> &'static str {
         if self.is_sequential() {
             "sequential"
+        } else if self.causal {
+            "causal"
         } else {
             "eventual"
         }
@@ -146,6 +169,12 @@ mod tests {
         assert_eq!(ConsistencyCfg::parse("n3r2w2"), Some(ConsistencyCfg::n3r2w2()));
         assert_eq!(ConsistencyCfg::parse("bogus"), None);
         assert_eq!(ConsistencyCfg::parse("N3R4W1"), None, "r > n rejected");
+        // the causal flag round-trips through its label too
+        let causal = ConsistencyCfg::n3r1w1().with_causal();
+        assert_eq!(causal.label(), "N3R1W1-causal");
+        assert_eq!(ConsistencyCfg::parse(&causal.label()), Some(causal));
+        assert_eq!(ConsistencyCfg::parse("n3r1w1-causal"), Some(causal));
+        assert_eq!(ConsistencyCfg::parse("-causal"), None);
     }
 
     #[test]
@@ -169,6 +198,16 @@ mod tests {
         // zeros fail the >= 1 shape checks
         assert_eq!(ConsistencyCfg::parse("N0R0W0"), None);
         assert_eq!(ConsistencyCfg::parse("N3R0W1"), None);
+    }
+
+    #[test]
+    fn causal_is_a_model_between_eventual_and_sequential() {
+        let c = ConsistencyCfg::n3r1w1().with_causal();
+        assert!(c.is_eventual(), "quorum math is untouched");
+        assert_eq!(c.model_name(), "causal");
+        assert_eq!(ConsistencyCfg::n3r1w1().model_name(), "eventual");
+        // a sequential config subsumes the session guarantees
+        assert_eq!(ConsistencyCfg::n3r2w2().with_causal().model_name(), "sequential");
     }
 
     #[test]

@@ -136,6 +136,11 @@ pub struct ExpConfig {
     pub workload: WorkloadCfg,
     /// pending-event scheduler backing each shard's queue
     pub sched: SchedKind,
+    /// self-stabilizing application variant: coloring clients ignore
+    /// rollback notifications and repair conflicting state by
+    /// re-coloring. Pair with [`RecoveryPolicy::Stabilize`]; `false`
+    /// (the default) leaves every app's abort path unchanged.
+    pub stabilize: bool,
 }
 
 impl ExpConfig {
@@ -169,6 +174,7 @@ impl ExpConfig {
             threaded: false,
             sched: SchedKind::Heap,
             workload: WorkloadCfg::uniform_default(),
+            stabilize: false,
         }
     }
 

@@ -104,6 +104,9 @@ pub struct ExpResult {
     pub crashes: u64,
     pub resyncs: u64,
     pub resync_keys: u64,
+    /// servers that dropped and re-derived their partitions on a
+    /// controller `Reset` (the `ResetToClean` strategy)
+    pub resets: u64,
     /// adaptive-consistency artifacts ([`crate::adapt`]): the announced
     /// mode timeline (a single span covering the whole run when no
     /// controller is deployed), the number of epoch switches, and the
@@ -274,6 +277,7 @@ fn build_world(
                 metrics.clone(),
                 *task_size,
                 *loop_forever,
+                cfg.stabilize,
             );
             for i in 0..c {
                 apps.push(Box::new(ColoringApp::new(sh.clone(), i as u32)));
@@ -429,6 +433,7 @@ struct Harvest {
     crashes: u64,
     resyncs: u64,
     resync_keys: u64,
+    resets: u64,
     recoveries: u64,
     recovery_ack_timeouts: u64,
     recovery_aborts: u64,
@@ -462,6 +467,7 @@ fn harvest(
         crashes: 0,
         resyncs: 0,
         resync_keys: 0,
+        resets: 0,
         recoveries: 0,
         recovery_ack_timeouts: 0,
         recovery_aborts: 0,
@@ -496,6 +502,7 @@ fn harvest(
                 h.crashes += sv.crashes;
                 h.resyncs += sv.resyncs;
                 h.resync_keys += sv.resync_keys;
+                h.resets += sv.resets;
             }
         }
     }
@@ -542,6 +549,7 @@ fn merge_harvests(mut hs: Vec<Harvest>) -> Harvest {
         acc.crashes += h.crashes;
         acc.resyncs += h.resyncs;
         acc.resync_keys += h.resync_keys;
+        acc.resets += h.resets;
         acc.recoveries += h.recoveries;
         acc.recovery_ack_timeouts += h.recovery_ack_timeouts;
         acc.recovery_aborts += h.recovery_aborts;
@@ -648,6 +656,7 @@ fn finalize(cfg: &ExpConfig, h: Harvest, engine: EngineRun) -> ExpResult {
         crashes: h.crashes,
         resyncs: h.resyncs,
         resync_keys: h.resync_keys,
+        resets: h.resets,
         mode_timeline,
         mode_switches,
         per_mode_tps,

@@ -9,6 +9,7 @@ use crate::adapt::{AdaptCfg, HysteresisCfg};
 use crate::client::consistency::{ClientTiming, ConsistencyCfg};
 use crate::exp::config::{AppKind, ExpConfig, TopoKind};
 use crate::faults::plan::{FaultEvent, FaultPlan};
+use crate::rollback::recovery::RecoveryPolicy;
 use crate::sim::{Time, SEC};
 
 fn dur(scale: f64, full_secs: u64) -> Time {
@@ -590,6 +591,101 @@ pub fn kvmix_churn(run: AdaptRun, scale: f64, seed: u64) -> ExpConfig {
     )
 }
 
+/// The consistency axis of the recovery-strategy matrix: the three
+/// escalation levels the adaptive controller moves between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryMode {
+    Eventual,
+    Causal,
+    Sequential,
+}
+
+impl RecoveryMode {
+    pub const ALL: [RecoveryMode; 3] =
+        [RecoveryMode::Eventual, RecoveryMode::Causal, RecoveryMode::Sequential];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RecoveryMode::Eventual => "eventual",
+            RecoveryMode::Causal => "causal",
+            RecoveryMode::Sequential => "sequential",
+        }
+    }
+
+    pub fn consistency(self) -> ConsistencyCfg {
+        match self {
+            RecoveryMode::Eventual => ConsistencyCfg::n3r1w1(),
+            RecoveryMode::Causal => ConsistencyCfg::n3r1w1().with_causal(),
+            RecoveryMode::Sequential => ConsistencyCfg::n3r2w2(),
+        }
+    }
+}
+
+/// The strategy axis of the matrix, with the short labels the perf rows
+/// and the `optikv recover` table use.
+pub const RECOVERY_STRATEGIES: [(RecoveryPolicy, &str); 3] = [
+    (RecoveryPolicy::FullRestore, "full"),
+    (RecoveryPolicy::ResetToClean, "reset"),
+    (RecoveryPolicy::Stabilize, "stab"),
+];
+
+/// One cell of the recovery-strategy matrix: the crash-churn conjunctive
+/// workload (two crash/restart cycles — every strategy must terminate
+/// through them) under consistency mode × recovery strategy. Everything
+/// except the two axes is held fixed so per-cell
+/// {violations/kop, time-to-recover, net throughput} differences are
+/// attributable to the cell coordinates.
+pub fn recovery_matrix_cell(
+    mode: RecoveryMode,
+    strategy: RecoveryPolicy,
+    scale: f64,
+    seed: u64,
+) -> ExpConfig {
+    let strat_label = RECOVERY_STRATEGIES
+        .iter()
+        .find(|(p, _)| *p == strategy)
+        .map(|(_, l)| *l)
+        .unwrap_or("custom");
+    let mut cfg = crash_churn_conjunctive(scale, seed);
+    cfg.name = format!("recmatrix-{}-{}", mode.label(), strat_label);
+    cfg.consistency = mode.consistency();
+    cfg.cluster_servers = cfg.consistency.n;
+    cfg.recovery = strategy;
+    cfg
+}
+
+/// The `Stabilize` strategy's demonstration workload: the
+/// self-stabilizing coloring variant under the crash-churn fault plan.
+/// Violations are recorded but nothing rolls back and no task aborts —
+/// the continuous re-coloring pass repairs conflicting colors, so the
+/// run must keep completing tasks with zero aborts.
+pub fn stabilize_coloring(scale: f64, seed: u64) -> ExpConfig {
+    let d = dur(scale, 300);
+    let mut cfg = ExpConfig::new(
+        "stabilize-coloring-N3R1W1",
+        ConsistencyCfg::n3r1w1(),
+        AppKind::Coloring {
+            nodes: ((10_000.0 * scale) as usize).max(240),
+            edges_per_node: 3,
+            task_size: 10,
+            loop_forever: true,
+        },
+    )
+    .with_fault_plan(
+        FaultPlan::none()
+            .with(FaultEvent::Crash { server: 1, at: d / 4, restart_after: d / 10 }),
+    );
+    cfg.stabilize = true;
+    cfg.recovery = RecoveryPolicy::Stabilize;
+    cfg.n_clients = 9;
+    cfg.monitors = true;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg.duration = d;
+    cfg.seed = seed;
+    cfg.timing = ClientTiming::with_think(2.5);
+    cfg
+}
+
 /// The paper's Table II consistency presets for N = 3 and N = 5.
 pub fn table2_n3() -> [ConsistencyCfg; 3] {
     [ConsistencyCfg::n3r1w3(), ConsistencyCfg::n3r2w2(), ConsistencyCfg::n3r1w1()]
@@ -780,6 +876,34 @@ mod tests {
         assert_eq!(ch.workload.churn.events.len(), 3, "every 4th of 12 clients");
         assert!(ch.workload.validate(ch.n_clients, ch.duration).is_ok());
         assert!(kvmix_churn(AdaptRun::Adaptive, 0.1, 3).adapt.enabled());
+    }
+
+    #[test]
+    fn recovery_matrix_varies_only_its_two_axes() {
+        let base = recovery_matrix_cell(RecoveryMode::Eventual, RecoveryPolicy::FullRestore, 0.1, 7);
+        assert_eq!(base.name, "recmatrix-eventual-full");
+        for mode in RecoveryMode::ALL {
+            for (strategy, label) in RECOVERY_STRATEGIES {
+                let cell = recovery_matrix_cell(mode, strategy, 0.1, 7);
+                assert_eq!(cell.name, format!("recmatrix-{}-{label}", mode.label()));
+                assert_eq!(cell.consistency, mode.consistency());
+                assert_eq!(cell.recovery, strategy);
+                // everything off-axis is held fixed
+                assert_eq!(cell.app, base.app);
+                assert_eq!(cell.fault_plan, base.fault_plan);
+                assert_eq!(cell.seed, base.seed);
+                assert_eq!(cell.n_clients, base.n_clients);
+                assert_eq!(cell.duration, base.duration);
+                assert!(cell.fault_plan.validate(cell.n_servers(), cell.n_regions()).is_ok());
+            }
+        }
+        assert!(RecoveryMode::Causal.consistency().causal);
+        assert!(RecoveryMode::Sequential.consistency().is_sequential());
+
+        let st = stabilize_coloring(0.1, 7);
+        assert!(st.stabilize, "the app must ignore rollback notifications");
+        assert_eq!(st.recovery, RecoveryPolicy::Stabilize);
+        assert!(st.fault_plan.validate(st.n_servers(), st.n_regions()).is_ok());
     }
 
     #[test]

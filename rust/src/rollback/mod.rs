@@ -1,6 +1,8 @@
 //! Rollback substrate (§IV): Retroscope-style window logs, periodic
-//! snapshots, and the recovery controller.
+//! snapshots, the recovery controller, and the pluggable strategy
+//! state machines it drives.
 
 pub mod recovery;
 pub mod snapshot;
+pub mod strategy;
 pub mod windowlog;

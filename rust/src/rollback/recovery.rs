@@ -8,23 +8,39 @@
 //! * `FullRestore` — stop-the-world: freeze all servers, restore each to a
 //!   cut before `T_violate` (window-log if it reaches back far enough,
 //!   periodic snapshot otherwise), resume, and notify clients.
+//! * `ResetToClean` — checkpoint-free: one server at a time drops its
+//!   owned partitions and re-derives them from preference-list peers
+//!   over the `Msg::Sync` path, no freeze (journal version, 1909.01980).
+//! * `Stabilize` — no rollback: the violation is recorded and a
+//!   self-stabilizing application converges on its own (1808.00822).
 //! * `None` — record only (the monitors-as-debugger deployment).
 //!
-//! **Liveness invariant** (the PR-3 wedge, fixed): a freeze/restore ack
-//! round must never require a reply from a crashed server. The
-//! controller cannot observe crashes directly — fault hooks are
-//! delivered only to the affected actor — so each ack-collecting phase
-//! arms a deterministic deadline timer. When the deadline fires with a
-//! *majority* of owners acked, the phase proceeds on that live quorum
-//! (the missing servers re-derive their partitions from peers on
-//! restart via the `Msg::Sync` path); below a majority the recovery
-//! aborts — servers are resumed, the state machine returns to `Idle`,
-//! and the next violation report re-queues a fresh attempt. Either way
-//! the controller can never sit in `Freezing`/`Restoring` forever.
-//! Stale deadlines are discarded by a per-phase sequence number, so a
-//! phase that completed on full acks ignores its own leftover timer.
+//! The multi-phase strategies are pure state machines behind
+//! [`RecoveryStrategy`](crate::rollback::strategy::RecoveryStrategy);
+//! this actor owns the transport: it translates emitted
+//! [`Action`](crate::rollback::strategy::Action)s into epoch-tagged
+//! `RollbackMsg` traffic, filters acks by epoch, and arms one
+//! deterministic deadline per ack-collecting phase. `None` and
+//! `NotifyClients` stay inline fast paths that schedule no timers, so
+//! default configs reproduce pre-strategy schedules bit-for-bit.
+//!
+//! **Liveness invariant** (the PR-3 wedge, fixed): an ack round must
+//! never require a reply from a crashed server. The controller cannot
+//! observe crashes directly — fault hooks are delivered only to the
+//! affected actor — so each ack-collecting phase arms a deterministic
+//! deadline timer. When the deadline fires, the strategy decides on the
+//! live quorum: FullRestore proceeds on a majority of owners (the
+//! missing servers re-derive their partitions from peers on restart)
+//! and aborts below one; ResetToClean simply skips the unresponsive
+//! server. Either way the controller can never sit in a recovery phase
+//! forever. Stale deadlines are discarded by a per-phase sequence
+//! number, so a phase that completed on full acks ignores its own
+//! leftover timer.
 
 use crate::metrics::throughput::Metrics;
+use crate::rollback::strategy::{
+    Ack, Action, FullRestoreStrategy, RecoveryStrategy, ResetToCleanStrategy, StabilizeStrategy,
+};
 use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{AdaptMsg, Msg, RollbackMsg};
 use crate::sim::{ms, ProcId, Time, MS};
@@ -38,26 +54,36 @@ pub enum RecoveryPolicy {
     None,
     NotifyClients,
     FullRestore,
+    ResetToClean,
+    Stabilize,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum State {
-    Idle,
-    Freezing { acks: usize },
-    Restoring { acks: usize },
+impl RecoveryPolicy {
+    /// Build the strategy state machine for a multi-phase policy.
+    /// `None`/`NotifyClients` return no machine — they stay inline
+    /// fast paths in the controller.
+    fn build(self) -> Option<Box<dyn RecoveryStrategy>> {
+        match self {
+            RecoveryPolicy::None | RecoveryPolicy::NotifyClients => None,
+            RecoveryPolicy::FullRestore => Some(Box::new(FullRestoreStrategy::new())),
+            RecoveryPolicy::ResetToClean => Some(Box::new(ResetToCleanStrategy::new())),
+            RecoveryPolicy::Stabilize => Some(Box::new(StabilizeStrategy)),
+        }
+    }
 }
 
 pub struct ControllerActor {
     servers: Vec<ProcId>,
     clients: Vec<ProcId>,
     policy: RecoveryPolicy,
-    state: State,
+    /// the in-flight recovery's strategy machine; `None` means idle
+    active: Option<Box<dyn RecoveryStrategy>>,
     epoch: u64,
     /// suppress recoveries closer together than this
     min_gap: Time,
     last_recovery: Time,
     pending_t_violate: i64,
-    /// when the current FullRestore freeze began (stall accounting)
+    /// when the current recovery began (stall accounting)
     freeze_started: Time,
     /// how long an ack-collecting phase may wait before the deadline
     /// decides on the live quorum
@@ -65,6 +91,10 @@ pub struct ControllerActor {
     /// bumped on every phase entry; deadline timers carry it so a timer
     /// armed for an already-finished phase is discarded as stale
     phase_seq: u64,
+    /// a recovery-policy switch requested mid-recovery (by the adapt
+    /// controller); applied once the current recovery settles so a
+    /// strategy swap can never orphan an in-flight phase
+    pending_policy: Option<RecoveryPolicy>,
     /// the adaptive-consistency controller, if one is deployed
     /// ([`crate::adapt`]): every violation report and every finished
     /// recovery is forwarded as a signal sample. `None` (the default)
@@ -97,7 +127,7 @@ impl ControllerActor {
             servers,
             clients,
             policy,
-            state: State::Idle,
+            active: None,
             epoch: 0,
             min_gap: ms(1_000.0),
             last_recovery: 0,
@@ -105,6 +135,7 @@ impl ControllerActor {
             freeze_started: 0,
             ack_deadline: ms(1_000.0),
             phase_seq: 0,
+            pending_policy: None,
             adapt: None,
             metrics,
             violations_received: 0,
@@ -146,22 +177,15 @@ impl ControllerActor {
                     ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms: 0.0 }));
                 }
             }
-            RecoveryPolicy::FullRestore => {
-                self.state = State::Freezing { acks: 0 };
+            policy => {
+                let mut strat = policy.build().expect("multi-phase policy");
                 self.pending_t_violate = t_violate_ms;
                 self.freeze_started = ctx.now();
-                for &s in &self.servers {
-                    ctx.send(s, Msg::Rollback(RollbackMsg::Freeze { epoch: self.epoch }));
-                }
-                self.arm_deadline(ctx);
+                let actions = strat.begin(self.servers.len());
+                self.active = Some(strat);
+                self.apply(ctx, actions);
             }
         }
-    }
-
-    /// The smallest ack count an ack-collecting phase may proceed on
-    /// when its deadline fires.
-    fn majority(&self) -> usize {
-        self.servers.len() / 2 + 1
     }
 
     /// Arm the deadline for the phase just entered. Only ack-collecting
@@ -173,51 +197,94 @@ impl ControllerActor {
         ctx.schedule(self.ack_deadline, DEADLINE_FLAG | self.phase_seq);
     }
 
-    /// Freeze phase settled (full acks or live quorum at the deadline):
-    /// broadcast the restore cut and start collecting restore acks.
-    fn enter_restoring(&mut self, ctx: &mut Ctx) {
-        self.state = State::Restoring { acks: 0 };
-        // restore to just before the violation started
-        let to_ms = self.pending_t_violate - 1;
-        for &s in &self.servers {
-            ctx.send(s, Msg::Rollback(RollbackMsg::Restore { epoch: self.epoch, to_ms }));
-        }
-        self.arm_deadline(ctx);
-    }
-
-    /// Restore phase settled: resume the cluster, notify clients, and
-    /// report the stall to the adapt controller.
-    fn finish_restore(&mut self, ctx: &mut Ctx) {
-        self.state = State::Idle;
-        self.phase_seq += 1; // invalidate any in-flight deadline
-        for &s in &self.servers {
-            ctx.send(s, Msg::Rollback(RollbackMsg::Resume { epoch: self.epoch }));
-        }
-        let t = self.pending_t_violate;
-        self.notify_clients(ctx, t);
-        let stall_ms = (ctx.now() - self.freeze_started) as f64 / MS as f64;
-        self.completed_recoveries += 1;
-        self.recovery_ms_total += stall_ms;
-        if let Some(a) = self.adapt {
-            // how long the cluster sat frozen for this restore — the
-            // rollback-cost signal
-            ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms }));
+    /// Forward an epoch-valid server ack to the active strategy and
+    /// carry out whatever it decides.
+    fn ack(&mut self, ctx: &mut Ctx, ack: Ack) {
+        if let Some(strat) = self.active.as_mut() {
+            let actions = strat.on_server_ack(ack);
+            self.apply(ctx, actions);
         }
     }
 
-    /// A phase deadline fired without even a live majority: unwedge by
-    /// resuming whoever did freeze and returning to `Idle`. The next
-    /// violation report re-queues a fresh recovery attempt.
-    fn abort_recovery(&mut self, ctx: &mut Ctx) {
-        self.state = State::Idle;
-        self.phase_seq += 1;
-        self.aborted_recoveries += 1;
-        for &s in &self.servers {
-            ctx.send(s, Msg::Rollback(RollbackMsg::Resume { epoch: self.epoch }));
+    /// Execute a strategy's emitted actions in order. This is the only
+    /// place strategy decisions turn into wire traffic, so every
+    /// strategy inherits the same epoch tagging and deadline handling.
+    fn apply(&mut self, ctx: &mut Ctx, actions: Vec<Action>) {
+        for a in actions {
+            match a {
+                Action::Freeze => {
+                    for &s in &self.servers {
+                        ctx.send(s, Msg::Rollback(RollbackMsg::Freeze { epoch: self.epoch }));
+                    }
+                    self.arm_deadline(ctx);
+                }
+                Action::Restore => {
+                    // restore to just before the violation started
+                    let to_ms = self.pending_t_violate - 1;
+                    for &s in &self.servers {
+                        ctx.send(
+                            s,
+                            Msg::Rollback(RollbackMsg::Restore { epoch: self.epoch, to_ms }),
+                        );
+                    }
+                    self.arm_deadline(ctx);
+                }
+                Action::Resume => {
+                    for &s in &self.servers {
+                        ctx.send(s, Msg::Rollback(RollbackMsg::Resume { epoch: self.epoch }));
+                    }
+                }
+                Action::Reset { server } => {
+                    let s = self.servers[server];
+                    ctx.send(s, Msg::Rollback(RollbackMsg::Reset { epoch: self.epoch }));
+                    self.arm_deadline(ctx);
+                }
+                Action::NotifyClients => {
+                    let t = self.pending_t_violate;
+                    self.notify_clients(ctx, t);
+                }
+                Action::Done => {
+                    self.active = None;
+                    self.phase_seq += 1; // invalidate any in-flight deadline
+                    let stall_ms = (ctx.now() - self.freeze_started) as f64 / MS as f64;
+                    self.completed_recoveries += 1;
+                    self.recovery_ms_total += stall_ms;
+                    self.apply_pending_policy();
+                    if let Some(adapt) = self.adapt {
+                        // how long the cluster sat degraded for this
+                        // recovery — the rollback-cost signal
+                        ctx.send(adapt, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms }));
+                    }
+                }
+                Action::Abort => {
+                    self.active = None;
+                    self.phase_seq += 1;
+                    self.aborted_recoveries += 1;
+                    self.apply_pending_policy();
+                    let stall_ms = (ctx.now() - self.freeze_started) as f64 / MS as f64;
+                    if let Some(adapt) = self.adapt {
+                        ctx.send(adapt, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms }));
+                    }
+                }
+            }
         }
-        let stall_ms = (ctx.now() - self.freeze_started) as f64 / MS as f64;
-        if let Some(a) = self.adapt {
-            ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms }));
+    }
+
+    /// A deferred policy switch lands only between recoveries.
+    fn apply_pending_policy(&mut self) {
+        if let Some(p) = self.pending_policy.take() {
+            self.policy = p;
+        }
+    }
+
+    /// Switch the recovery policy. Takes effect immediately when idle;
+    /// mid-recovery it is deferred until the current attempt settles so
+    /// a swap can never orphan an in-flight ack phase.
+    pub fn set_policy(&mut self, policy: RecoveryPolicy) {
+        if self.active.is_some() {
+            self.pending_policy = Some(policy);
+        } else {
+            self.policy = policy;
         }
     }
 }
@@ -240,36 +307,30 @@ impl Actor for ControllerActor {
                         (rep.detected_at / MS) as f64 - rep.t_occurred_ms as f64;
                     ctx.send(a, Msg::Adapt(AdaptMsg::ViolationSeen { detection_ms }));
                 }
-                let busy = self.state != State::Idle;
+                let busy = self.active.is_some();
                 let too_soon = ctx.now() < self.last_recovery + self.min_gap && self.recoveries > 0;
                 if self.policy != RecoveryPolicy::None && !busy && !too_soon {
                     self.begin_recovery(ctx, rep.t_violate_ms);
                 }
             }
             Msg::Rollback(RollbackMsg::FrozenAck { epoch }) if epoch == self.epoch => {
-                if let State::Freezing { acks } = self.state {
-                    let acks = acks + 1;
-                    if acks == self.servers.len() {
-                        self.enter_restoring(ctx);
-                    } else {
-                        self.state = State::Freezing { acks };
-                    }
-                }
+                self.ack(ctx, Ack::Frozen);
             }
-            Msg::Rollback(RollbackMsg::RestoredAck { epoch, from_window_log }) if epoch == self.epoch => {
+            Msg::Rollback(RollbackMsg::RestoredAck { epoch, from_window_log })
+                if epoch == self.epoch =>
+            {
                 if from_window_log {
                     self.window_log_restores += 1;
                 } else {
                     self.snapshot_restores += 1;
                 }
-                if let State::Restoring { acks } = self.state {
-                    let acks = acks + 1;
-                    if acks == self.servers.len() {
-                        self.finish_restore(ctx);
-                    } else {
-                        self.state = State::Restoring { acks };
-                    }
-                }
+                self.ack(ctx, Ack::Restored);
+            }
+            Msg::Rollback(RollbackMsg::ResetAck { epoch }) if epoch == self.epoch => {
+                self.ack(ctx, Ack::Reset);
+            }
+            Msg::Adapt(AdaptMsg::SetRecovery { policy }) => {
+                self.set_policy(policy);
             }
             _ => {}
         }
@@ -279,26 +340,13 @@ impl Actor for ControllerActor {
         if tag & DEADLINE_FLAG == 0 || (tag & !DEADLINE_FLAG) != self.phase_seq {
             return; // not ours, or a stale deadline of a finished phase
         }
-        match self.state {
-            State::Idle => {}
-            State::Freezing { acks } => {
-                // a deadline in an ack phase means at least one owner
-                // never answered — count it, then decide on the quorum
-                self.ack_timeouts += 1;
-                if acks >= self.majority() {
-                    self.enter_restoring(ctx);
-                } else {
-                    self.abort_recovery(ctx);
-                }
-            }
-            State::Restoring { acks } => {
-                self.ack_timeouts += 1;
-                if acks >= self.majority() {
-                    self.finish_restore(ctx);
-                } else {
-                    self.abort_recovery(ctx);
-                }
-            }
+        if let Some(strat) = self.active.as_mut() {
+            // a deadline in an ack phase means at least one owner never
+            // answered — count it, then let the strategy decide on the
+            // quorum it did collect
+            self.ack_timeouts += 1;
+            let actions = strat.on_deadline();
+            self.apply(ctx, actions);
         }
     }
 

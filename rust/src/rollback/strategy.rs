@@ -1,0 +1,335 @@
+//! Pluggable recovery strategies (§IV + the journal version's recovery
+//! matrix, 1909.01980): what the controller *does* about a confirmed
+//! violation is a small, pure state machine behind [`RecoveryStrategy`].
+//! The [`ControllerActor`](crate::rollback::recovery::ControllerActor)
+//! owns the transport — it broadcasts the messages an [`Action`] names,
+//! tallies acks per recovery epoch, and arms one deterministic deadline
+//! per ack-collecting phase — while the strategy decides how phases
+//! chain and what a quorum means. Three strategies ship:
+//!
+//! * [`FullRestoreStrategy`] — stop-the-world: freeze every owner,
+//!   restore each to a cut before `T_violate`, resume. A phase deadline
+//!   proceeds on a live majority (crashed owners re-derive state from
+//!   peers on restart) or aborts below one, so a crash mid-freeze can
+//!   never wedge the controller.
+//! * [`ResetToCleanStrategy`] — checkpoint-free: one server at a time
+//!   drops its owned partitions and re-derives them from its
+//!   preference-list peers over the crash-recovery `Msg::Sync` path.
+//!   No freeze — the cluster keeps serving around the resetting
+//!   replica; an unresponsive server is skipped at the deadline.
+//! * [`StabilizeStrategy`] — no rollback at all (Nguyen et al.,
+//!   1808.00822): the violation is recorded and the recovery completes
+//!   immediately; a self-stabilizing application (the `stabilize`
+//!   coloring variant) converges on its own.
+//!
+//! Strategies are deliberately sans-IO: every transition is a plain
+//! function from an event to a list of [`Action`]s, unit-tested below
+//! without a simulator.
+
+/// A server acknowledgement, already epoch-filtered by the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ack {
+    Frozen,
+    Restored,
+    Reset,
+}
+
+/// What the controller should do next. Emitted in order; `Freeze`,
+/// `Restore` and `Reset` open a new ack-collecting phase (the
+/// controller arms a fresh deadline), `Done`/`Abort` close the recovery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// broadcast `Freeze` to every server
+    Freeze,
+    /// broadcast `Restore { to_ms: T_violate − 1 }` to every server
+    Restore,
+    /// broadcast `Resume` to every server
+    Resume,
+    /// send `Reset` to server `server` (index into the owner list)
+    Reset { server: usize },
+    /// send the rollback `Notify` to every client
+    NotifyClients,
+    /// the recovery ran to completion
+    Done,
+    /// the recovery could not proceed (no live quorum); requeue on the
+    /// next violation report
+    Abort,
+}
+
+/// A recovery's decision logic: which phases run, in what order, and
+/// what happens when acks arrive or a phase deadline fires. One
+/// instance lives per recovery attempt and is dropped on `Done`/`Abort`.
+pub trait RecoveryStrategy {
+    fn name(&self) -> &'static str;
+    /// Start the recovery over `n_servers` owners.
+    fn begin(&mut self, n_servers: usize) -> Vec<Action>;
+    /// A server acked the current phase (epoch-filtered upstream).
+    fn on_server_ack(&mut self, ack: Ack) -> Vec<Action>;
+    /// The current phase's deadline fired with acks still missing.
+    fn on_deadline(&mut self) -> Vec<Action>;
+}
+
+/// Stop-the-world freeze → restore → resume, proceeding on a live
+/// majority at each phase deadline.
+pub struct FullRestoreStrategy {
+    n: usize,
+    phase: FrPhase,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FrPhase {
+    Freezing { acks: usize },
+    Restoring { acks: usize },
+    Closed,
+}
+
+impl FullRestoreStrategy {
+    pub fn new() -> Self {
+        Self { n: 0, phase: FrPhase::Closed }
+    }
+
+    fn majority(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    fn finish(&mut self) -> Vec<Action> {
+        self.phase = FrPhase::Closed;
+        vec![Action::Resume, Action::NotifyClients, Action::Done]
+    }
+}
+
+impl RecoveryStrategy for FullRestoreStrategy {
+    fn name(&self) -> &'static str {
+        "full-restore"
+    }
+
+    fn begin(&mut self, n_servers: usize) -> Vec<Action> {
+        self.n = n_servers;
+        self.phase = FrPhase::Freezing { acks: 0 };
+        vec![Action::Freeze]
+    }
+
+    fn on_server_ack(&mut self, ack: Ack) -> Vec<Action> {
+        match (self.phase, ack) {
+            (FrPhase::Freezing { acks }, Ack::Frozen) => {
+                let acks = acks + 1;
+                if acks == self.n {
+                    self.phase = FrPhase::Restoring { acks: 0 };
+                    vec![Action::Restore]
+                } else {
+                    self.phase = FrPhase::Freezing { acks };
+                    Vec::new()
+                }
+            }
+            (FrPhase::Restoring { acks }, Ack::Restored) => {
+                let acks = acks + 1;
+                if acks == self.n {
+                    self.finish()
+                } else {
+                    self.phase = FrPhase::Restoring { acks };
+                    Vec::new()
+                }
+            }
+            // a late ack for a phase already left behind
+            _ => Vec::new(),
+        }
+    }
+
+    fn on_deadline(&mut self) -> Vec<Action> {
+        match self.phase {
+            FrPhase::Freezing { acks } => {
+                if acks >= self.majority() {
+                    // proceed on the live quorum; the silent owners
+                    // re-derive their partitions from peers on restart
+                    self.phase = FrPhase::Restoring { acks: 0 };
+                    vec![Action::Restore]
+                } else {
+                    self.phase = FrPhase::Closed;
+                    vec![Action::Resume, Action::Abort]
+                }
+            }
+            FrPhase::Restoring { acks } => {
+                if acks >= self.majority() {
+                    self.finish()
+                } else {
+                    self.phase = FrPhase::Closed;
+                    vec![Action::Resume, Action::Abort]
+                }
+            }
+            FrPhase::Closed => Vec::new(),
+        }
+    }
+}
+
+/// Checkpoint-free rolling reset: servers re-derive their owned
+/// partitions from preference-list peers, one at a time so the quorum
+/// keeps serving throughout. An owner that never acks (crashed) is
+/// skipped at its deadline — its restart path runs the same
+/// re-derivation anyway.
+pub struct ResetToCleanStrategy {
+    n: usize,
+    next: usize,
+    done: bool,
+}
+
+impl ResetToCleanStrategy {
+    pub fn new() -> Self {
+        Self { n: 0, next: 0, done: true }
+    }
+
+    fn advance(&mut self) -> Vec<Action> {
+        self.next += 1;
+        if self.next >= self.n {
+            self.done = true;
+            vec![Action::NotifyClients, Action::Done]
+        } else {
+            vec![Action::Reset { server: self.next }]
+        }
+    }
+}
+
+impl RecoveryStrategy for ResetToCleanStrategy {
+    fn name(&self) -> &'static str {
+        "reset-to-clean"
+    }
+
+    fn begin(&mut self, n_servers: usize) -> Vec<Action> {
+        self.n = n_servers;
+        self.next = 0;
+        self.done = false;
+        vec![Action::Reset { server: 0 }]
+    }
+
+    fn on_server_ack(&mut self, ack: Ack) -> Vec<Action> {
+        if self.done || ack != Ack::Reset {
+            return Vec::new();
+        }
+        self.advance()
+    }
+
+    fn on_deadline(&mut self) -> Vec<Action> {
+        if self.done {
+            return Vec::new();
+        }
+        // the server under reset never answered: skip it and move on
+        self.advance()
+    }
+}
+
+/// No rollback: record the violation, complete immediately, and let the
+/// self-stabilizing application converge on its own.
+pub struct StabilizeStrategy;
+
+impl RecoveryStrategy for StabilizeStrategy {
+    fn name(&self) -> &'static str {
+        "stabilize"
+    }
+
+    fn begin(&mut self, _n_servers: usize) -> Vec<Action> {
+        vec![Action::Done]
+    }
+
+    fn on_server_ack(&mut self, _ack: Ack) -> Vec<Action> {
+        Vec::new()
+    }
+
+    fn on_deadline(&mut self) -> Vec<Action> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_restore_happy_path_chains_phases() {
+        let mut s = FullRestoreStrategy::new();
+        assert_eq!(s.begin(3), vec![Action::Freeze]);
+        assert!(s.on_server_ack(Ack::Frozen).is_empty());
+        assert!(s.on_server_ack(Ack::Frozen).is_empty());
+        assert_eq!(s.on_server_ack(Ack::Frozen), vec![Action::Restore]);
+        assert!(s.on_server_ack(Ack::Restored).is_empty());
+        assert!(s.on_server_ack(Ack::Restored).is_empty());
+        assert_eq!(
+            s.on_server_ack(Ack::Restored),
+            vec![Action::Resume, Action::NotifyClients, Action::Done]
+        );
+        // anything after Done is inert
+        assert!(s.on_server_ack(Ack::Restored).is_empty());
+        assert!(s.on_deadline().is_empty());
+    }
+
+    #[test]
+    fn full_restore_deadline_proceeds_on_live_majority() {
+        // 3 owners, one crashed: 2 freeze acks ≥ majority(2) → restore
+        let mut s = FullRestoreStrategy::new();
+        s.begin(3);
+        s.on_server_ack(Ack::Frozen);
+        s.on_server_ack(Ack::Frozen);
+        assert_eq!(s.on_deadline(), vec![Action::Restore]);
+        // restore acks from the two live owners, deadline again
+        s.on_server_ack(Ack::Restored);
+        s.on_server_ack(Ack::Restored);
+        assert_eq!(
+            s.on_deadline(),
+            vec![Action::Resume, Action::NotifyClients, Action::Done]
+        );
+    }
+
+    #[test]
+    fn full_restore_aborts_below_majority() {
+        let mut s = FullRestoreStrategy::new();
+        s.begin(3);
+        s.on_server_ack(Ack::Frozen); // 1 < majority(2)
+        assert_eq!(s.on_deadline(), vec![Action::Resume, Action::Abort]);
+        assert!(s.on_deadline().is_empty(), "closed after abort");
+    }
+
+    #[test]
+    fn full_restore_ignores_mismatched_acks() {
+        let mut s = FullRestoreStrategy::new();
+        s.begin(2);
+        // a stray Restored ack while still freezing changes nothing
+        assert!(s.on_server_ack(Ack::Restored).is_empty());
+        s.on_server_ack(Ack::Frozen);
+        assert_eq!(s.on_server_ack(Ack::Frozen), vec![Action::Restore]);
+    }
+
+    #[test]
+    fn reset_to_clean_rolls_through_every_server() {
+        let mut s = ResetToCleanStrategy::new();
+        assert_eq!(s.begin(3), vec![Action::Reset { server: 0 }]);
+        assert_eq!(s.on_server_ack(Ack::Reset), vec![Action::Reset { server: 1 }]);
+        assert_eq!(s.on_server_ack(Ack::Reset), vec![Action::Reset { server: 2 }]);
+        assert_eq!(s.on_server_ack(Ack::Reset), vec![Action::NotifyClients, Action::Done]);
+        assert!(s.on_server_ack(Ack::Reset).is_empty());
+    }
+
+    #[test]
+    fn reset_to_clean_skips_silent_servers_at_the_deadline() {
+        let mut s = ResetToCleanStrategy::new();
+        s.begin(3);
+        // server 0 never acks (crashed): the deadline moves on
+        assert_eq!(s.on_deadline(), vec![Action::Reset { server: 1 }]);
+        assert_eq!(s.on_server_ack(Ack::Reset), vec![Action::Reset { server: 2 }]);
+        // last one silent too — the recovery still terminates
+        assert_eq!(s.on_deadline(), vec![Action::NotifyClients, Action::Done]);
+        assert!(s.on_deadline().is_empty());
+    }
+
+    #[test]
+    fn reset_to_clean_single_server_cluster_terminates() {
+        let mut s = ResetToCleanStrategy::new();
+        assert_eq!(s.begin(1), vec![Action::Reset { server: 0 }]);
+        assert_eq!(s.on_server_ack(Ack::Reset), vec![Action::NotifyClients, Action::Done]);
+    }
+
+    #[test]
+    fn stabilize_completes_immediately() {
+        let mut s = StabilizeStrategy;
+        assert_eq!(s.begin(5), vec![Action::Done]);
+        assert!(s.on_server_ack(Ack::Frozen).is_empty());
+        assert!(s.on_deadline().is_empty());
+    }
+}

@@ -9,6 +9,7 @@ use crate::client::consistency::ConsistencyCfg;
 use crate::clock::hvc::{Hvc, HvcInterval, Millis};
 use crate::detect::candidate::{Candidate, ViolationReport};
 use crate::predicate::spec::{PredId, PredicateSpec};
+use crate::rollback::recovery::RecoveryPolicy;
 use crate::sim::{ProcId, Time};
 use crate::store::protocol::{ServerOp, ServerReply};
 use crate::store::value::{KeyId, Value, Versioned};
@@ -31,6 +32,12 @@ pub enum RollbackMsg {
     RestoredAck { epoch: u64, from_window_log: bool },
     /// controller → servers and clients: resume computation.
     Resume { epoch: u64 },
+    /// controller → one server (ResetToClean): drop the owned partition
+    /// state wholesale and re-derive it from preference-list peers over
+    /// the [`SyncMsg`] path — the checkpoint-free repair.
+    Reset { epoch: u64 },
+    /// server → controller: the reset's peer re-derivation settled.
+    ResetAck { epoch: u64 },
 }
 
 /// Crash-recovery re-sync (restarting server ↔ live preference-list
@@ -70,6 +77,12 @@ pub enum AdaptMsg {
     /// rollback controller → adapt controller: a recovery finished;
     /// servers sat frozen for `stall_ms` (0 for notify-only recovery).
     RecoveryDone { stall_ms: f64 },
+    /// adapt controller → rollback controller: the escalation ladder
+    /// moved to a mode whose configured recovery strategy is `policy`.
+    /// Applied immediately when idle; mid-recovery the switch is
+    /// deferred until the in-flight attempt settles, so a swap can
+    /// never orphan an ack phase.
+    SetRecovery { policy: RecoveryPolicy },
     /// client → adapt controller, once per signal window: the client's
     /// op / quorum-timeout counts and raw op-latency samples since its
     /// last report. The controller aggregates these instead of polling a

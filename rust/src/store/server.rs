@@ -109,6 +109,9 @@ pub struct ServerActor {
     recovering: bool,
     sync_epoch: u64,
     sync_pending: usize,
+    /// a `RollbackMsg::Reset` is being served: ack the controller with
+    /// this epoch once the peer re-derivation completes
+    pending_reset: Option<u64>,
     /// stats
     pub reqs_served: u64,
     pub reqs_refused: u64,
@@ -117,6 +120,8 @@ pub struct ServerActor {
     pub resyncs: u64,
     /// sibling versions merged back during re-syncs
     pub resync_keys: u64,
+    /// checkpoint-free resets served ([`RollbackMsg::Reset`])
+    pub resets: u64,
 }
 
 impl ServerActor {
@@ -153,12 +158,14 @@ impl ServerActor {
             recovering: false,
             sync_epoch: 0,
             sync_pending: 0,
+            pending_reset: None,
             reqs_served: 0,
             reqs_refused: 0,
             puts_intercepted: 0,
             crashes: 0,
             resyncs: 0,
             resync_keys: 0,
+            resets: 0,
         }
     }
 
@@ -267,7 +274,7 @@ impl ServerActor {
         let targets: Vec<ProcId> = self.peers.iter().copied().filter(|&p| p != me).collect();
         self.sync_pending = targets.len();
         if targets.is_empty() {
-            self.finish_resync();
+            self.finish_resync(ctx);
             return;
         }
         let epoch = self.sync_epoch;
@@ -278,13 +285,20 @@ impl ServerActor {
         ctx.schedule(self.cfg.resync_timeout, RESYNC_FLAG | epoch);
     }
 
-    fn finish_resync(&mut self) {
+    fn finish_resync(&mut self, ctx: &mut Ctx) {
         self.recovering = false;
         self.resyncs += 1;
         // the detector's cache (and, via reseed, the inferred registry)
         // must reflect the recovered state, exactly as after a rollback
         if let Some(det) = self.detector.as_mut() {
             det.reseed(&self.table);
+        }
+        // a controller-driven reset acks only once the re-derivation is
+        // complete — the ResetToClean strategy's per-server handshake
+        if let Some(epoch) = self.pending_reset.take() {
+            if let Some(c) = self.controller {
+                ctx.send(c, Msg::Rollback(RollbackMsg::ResetAck { epoch }));
+            }
         }
     }
 
@@ -327,7 +341,7 @@ impl ServerActor {
                 if self.recovering {
                     self.sync_pending = self.sync_pending.saturating_sub(1);
                     if self.sync_pending == 0 {
-                        self.finish_resync(); // reseeds the detector
+                        self.finish_resync(ctx); // reseeds the detector
                     }
                 } else if merged_any {
                     // straggler chunk after a timeout-based finish: the
@@ -345,6 +359,13 @@ impl ServerActor {
     }
 
     fn handle_rollback(&mut self, ctx: &mut Ctx, from: ProcId, msg: RollbackMsg) {
+        if self.recovering {
+            // mid-catch-up (fresh after a restart or serving a reset):
+            // this replica has no coherent state to freeze, restore or
+            // reset, so it stays silent — the controller's per-phase
+            // deadline covers the missing ack
+            return;
+        }
         match msg {
             RollbackMsg::Freeze { epoch } => {
                 self.frozen = Some(epoch);
@@ -366,6 +387,19 @@ impl ServerActor {
             }
             RollbackMsg::Resume { .. } => {
                 self.frozen = None;
+            }
+            RollbackMsg::Reset { epoch } => {
+                // checkpoint-free repair (ResetToClean): drop the owned
+                // partition state wholesale and re-derive it from the
+                // preference-list peers over the crash-recovery Sync
+                // path; the ack goes out when the re-derivation settles
+                self.resets += 1;
+                self.frozen = None;
+                self.table = Table::new();
+                self.windowlog = WindowLog::new(self.cfg.windowlog_ms, self.cfg.windowlog_max);
+                self.snapshots = SnapshotStore::new(self.cfg.snapshots_keep);
+                self.pending_reset = Some(epoch);
+                self.begin_resync(ctx);
             }
             _ => {}
         }
@@ -411,7 +445,7 @@ impl Actor for ServerActor {
             if !stale && !self.crashed && self.recovering {
                 // some peer never answered (crashed or partitioned away):
                 // serve with what we have — availability over completeness
-                self.finish_resync();
+                self.finish_resync(ctx);
             }
         }
     }
@@ -422,6 +456,7 @@ impl Actor for ServerActor {
                 self.crashed = true;
                 self.recovering = false;
                 self.frozen = None;
+                self.pending_reset = None;
                 self.crashes += 1;
                 // all volatile state is gone
                 self.table = Table::new();
