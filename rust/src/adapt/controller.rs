@@ -21,6 +21,7 @@ use crate::adapt::policy::{Mode, Policy};
 use crate::adapt::signals::{SignalWindow, WinSample};
 use crate::adapt::AdaptCfg;
 use crate::client::consistency::ConsistencyCfg;
+use crate::rollback::recovery::RecoveryPolicy;
 use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{AdaptMsg, Msg};
 use crate::sim::{ProcId, Time, MS};
@@ -66,7 +67,16 @@ pub struct AdaptController {
     clients: Vec<ProcId>,
     policy: Box<dyn Policy>,
     eventual: ConsistencyCfg,
+    /// the middle rung's quorum config — present iff the policy is the
+    /// three-level ladder (validated)
+    causal: Option<ConsistencyCfg>,
     sequential: ConsistencyCfg,
+    /// the rollback controller, when one is deployed — the target of
+    /// [`AdaptMsg::SetRecovery`] pushes
+    rollback: Option<ProcId>,
+    /// per-mode recovery strategies (indexed by [`Mode::rung`]); `None`
+    /// pushes nothing and leaves the rollback controller's static policy
+    recovery_by_mode: Option<[RecoveryPolicy; 3]>,
     window: Time,
     win: SignalWindow,
     mode: Mode,
@@ -99,13 +109,22 @@ impl AdaptController {
     pub fn new(clients: Vec<ProcId>, cfg: &AdaptCfg, starting: ConsistencyCfg) -> Self {
         cfg.validate(starting).expect("adapt config must validate against the experiment");
         assert!(cfg.enabled(), "a static adapt config deploys no controller");
-        let mode = if starting == cfg.sequential { Mode::Sequential } else { Mode::Eventual };
+        let mode = if starting == cfg.sequential {
+            Mode::Sequential
+        } else if cfg.causal == Some(starting) {
+            Mode::Causal
+        } else {
+            Mode::Eventual
+        };
         let n_clients = clients.len();
         Self {
             clients,
             policy: cfg.policy.build(),
             eventual: cfg.eventual,
+            causal: cfg.causal,
             sequential: cfg.sequential,
+            rollback: None,
+            recovery_by_mode: cfg.recovery_by_mode,
             window: cfg.window,
             win: SignalWindow::new(cfg.windows_kept),
             mode,
@@ -125,10 +144,27 @@ impl AdaptController {
         }
     }
 
+    /// Wire the rollback controller so mode switches can re-target the
+    /// recovery strategy. A no-op without a recovery matrix.
+    pub fn with_rollback(mut self, rollback: Option<ProcId>) -> Self {
+        self.rollback = rollback;
+        self
+    }
+
     fn mode_cfg(&self, mode: Mode) -> ConsistencyCfg {
         match mode {
             Mode::Eventual => self.eventual,
+            Mode::Causal => self.causal.expect("a causal mode requires a causal rung config"),
             Mode::Sequential => self.sequential,
+        }
+    }
+
+    /// Push the current mode's recovery strategy to the rollback
+    /// controller (which applies it between recoveries, never
+    /// mid-phase). Sends nothing unless a matrix is configured.
+    fn push_recovery_policy(&mut self, ctx: &mut Ctx) {
+        if let (Some(rb), Some(map)) = (self.rollback, self.recovery_by_mode) {
+            ctx.send(rb, Msg::Adapt(AdaptMsg::SetRecovery { policy: map[self.mode.rung()] }));
         }
     }
 
@@ -184,6 +220,9 @@ impl AdaptController {
 impl Actor for AdaptController {
     fn on_start(&mut self, ctx: &mut Ctx) {
         self.timeline.push(ModeSpan { from: 0, epoch: 0, cfg: self.mode_cfg(self.mode) });
+        // make the matrix authoritative from t = 0: the starting mode's
+        // strategy may differ from the experiment's static recovery
+        self.push_recovery_policy(ctx);
         ctx.schedule(self.window, TAG_TICK);
     }
 
@@ -228,6 +267,7 @@ impl Actor for AdaptController {
                 epoch: self.epoch,
                 cfg: self.mode_cfg(decision),
             });
+            self.push_recovery_policy(ctx);
         }
         self.announce_unacked(ctx);
         ctx.schedule(self.window, TAG_TICK);

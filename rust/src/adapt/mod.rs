@@ -1,5 +1,9 @@
 //! Adaptive consistency: a runtime controller that moves the whole
-//! cluster between *eventual* and *sequential* quorum configurations.
+//! cluster between *eventual* and *sequential* quorum configurations —
+//! optionally through a middle *causal* rung (the eventual quorum with
+//! client-side session guarantees, [`AdaptCfg::hysteresis3`]), with a
+//! per-mode recovery-strategy matrix pushed to the rollback controller
+//! on every switch ([`AdaptCfg::with_recovery_matrix`]).
 //!
 //! The paper's benefit claim — optimistic execution beats sequential
 //! consistency by 50–80% — holds **when violations are rare and
@@ -41,6 +45,7 @@ pub mod policy;
 pub mod signals;
 
 use crate::client::consistency::ConsistencyCfg;
+use crate::rollback::recovery::RecoveryPolicy;
 use crate::sim::{Time, SEC};
 
 pub use controller::{round_trips, AdaptController, ModeSpan};
@@ -54,8 +59,20 @@ pub struct AdaptCfg {
     pub policy: PolicyKind,
     /// the quorum config of [`Mode::Eventual`]
     pub eventual: ConsistencyCfg,
+    /// the quorum config of [`Mode::Causal`] — the middle rung of the
+    /// three-level ladder: an eventual-shaped quorum with the
+    /// session-guarantee flag set. `None` (the default) keeps the
+    /// controller binary, exactly the pre-ladder behavior.
+    pub causal: Option<ConsistencyCfg>,
     /// the quorum config of [`Mode::Sequential`]
     pub sequential: ConsistencyCfg,
+    /// per-mode recovery strategies, indexed by [`Mode::rung`]: on every
+    /// mode switch the adapt controller pushes the new mode's policy to
+    /// the rollback controller ([`crate::sim::msg::AdaptMsg::SetRecovery`],
+    /// applied between recoveries, never mid-phase). `None` (the
+    /// default) sends nothing — the rollback controller keeps the
+    /// experiment's static [`crate::exp::config::ExpConfig::recovery`].
+    pub recovery_by_mode: Option<[RecoveryPolicy; 3]>,
     /// signal-window length (virtual time)
     pub window: Time,
     /// sliding windows aggregated per decision
@@ -69,7 +86,9 @@ impl AdaptCfg {
         Self {
             policy: PolicyKind::Static,
             eventual: ConsistencyCfg::n3r1w1(),
+            causal: None,
             sequential: ConsistencyCfg::n3r2w2(),
+            recovery_by_mode: None,
             window: SEC,
             windows_kept: 3,
         }
@@ -84,10 +103,38 @@ impl AdaptCfg {
         Self {
             policy: PolicyKind::Hysteresis(h),
             eventual,
+            causal: None,
             sequential,
+            recovery_by_mode: None,
             window: SEC,
             windows_kept: 3,
         }
+    }
+
+    /// The three-level escalation ladder: eventual ↔ causal ↔
+    /// sequential, one rung per decision.
+    pub fn hysteresis3(
+        h: HysteresisCfg,
+        eventual: ConsistencyCfg,
+        causal: ConsistencyCfg,
+        sequential: ConsistencyCfg,
+    ) -> Self {
+        Self {
+            policy: PolicyKind::Hysteresis3(h),
+            eventual,
+            causal: Some(causal),
+            sequential,
+            recovery_by_mode: None,
+            window: SEC,
+            windows_kept: 3,
+        }
+    }
+
+    /// Attach a per-mode recovery-strategy matrix (indexed by
+    /// [`Mode::rung`]: eventual, causal, sequential).
+    pub fn with_recovery_matrix(mut self, by_mode: [RecoveryPolicy; 3]) -> Self {
+        self.recovery_by_mode = Some(by_mode);
+        self
     }
 
     /// Does this config deploy a live controller?
@@ -114,18 +161,43 @@ impl AdaptCfg {
                 self.sequential.label()
             ));
         }
-        if starting != self.eventual && starting != self.sequential {
+        if matches!(self.policy, PolicyKind::Hysteresis3(_)) != self.causal.is_some() {
+            return Err("the causal mode config and the Hysteresis3 policy go together".into());
+        }
+        if let Some(c) = self.causal {
+            // the middle rung is the eventual quorum math with session
+            // guarantees layered on — anything stronger would invert the
+            // ladder's cost ordering
+            if c.model_name() != "causal" {
+                return Err(format!(
+                    "{} is not a causal config (eventual quorum + session guarantees)",
+                    c.label()
+                ));
+            }
+            if c.n != self.eventual.n {
+                return Err(format!(
+                    "modes must share N (ring is fixed): {} vs {}",
+                    c.label(),
+                    self.eventual.label()
+                ));
+            }
+        }
+        if starting != self.eventual
+            && starting != self.sequential
+            && Some(starting) != self.causal
+        {
             return Err(format!(
-                "starting consistency {} is neither mode ({} / {})",
+                "starting consistency {} is not one of the modes ({} / {} / {})",
                 starting.label(),
                 self.eventual.label(),
+                self.causal.map(|c| c.label()).unwrap_or_else(|| "-".into()),
                 self.sequential.label()
             ));
         }
         if self.window == 0 || self.windows_kept == 0 {
             return Err("signal window and windows_kept must be positive".into());
         }
-        if let PolicyKind::Hysteresis(h) = &self.policy {
+        if let PolicyKind::Hysteresis(h) | PolicyKind::Hysteresis3(h) = &self.policy {
             // every pair must satisfy lo <= hi or hysteresis inverts into
             // an oscillator: a signal sitting between the bounds would be
             // simultaneously "hot" (escalate) and "calm" (release) and
@@ -232,5 +304,73 @@ mod tests {
         assert!(cfg.validate(start).is_ok());
         let cfg = AdaptCfg::hysteresis(HysteresisCfg::disarmed(), modes.0, modes.1);
         assert!(cfg.validate(start).is_ok());
+    }
+
+    #[test]
+    fn hysteresis3_validates_the_causal_rung() {
+        let eventual = ConsistencyCfg::n3r1w1();
+        let causal = eventual.with_causal();
+        let sequential = ConsistencyCfg::n3r2w2();
+
+        let ok = AdaptCfg::hysteresis3(HysteresisCfg::default(), eventual, causal, sequential);
+        assert!(ok.enabled());
+        assert!(ok.validate(eventual).is_ok());
+        assert!(ok.validate(causal).is_ok(), "may start on the middle rung");
+        assert!(ok.validate(sequential).is_ok());
+        assert!(ok.validate(ConsistencyCfg::new(3, 1, 2)).is_err(), "not a mode");
+
+        // the middle rung must actually be causal: a bare eventual
+        // config or a sequential one both fail the shape check
+        let bare =
+            AdaptCfg::hysteresis3(HysteresisCfg::default(), eventual, eventual, sequential);
+        assert!(bare.validate(eventual).is_err());
+        let strong = AdaptCfg::hysteresis3(
+            HysteresisCfg::default(),
+            eventual,
+            sequential.with_causal(),
+            sequential,
+        );
+        assert!(strong.validate(eventual).is_err());
+
+        // N is pinned across all three rungs
+        let n_mismatch = AdaptCfg::hysteresis3(
+            HysteresisCfg::default(),
+            eventual,
+            ConsistencyCfg::n5r1w1().with_causal(),
+            sequential,
+        );
+        assert!(n_mismatch.validate(eventual).is_err());
+
+        // a binary policy carrying a causal config (or a ladder missing
+        // one) is incoherent
+        let mut orphan = AdaptCfg::hysteresis(HysteresisCfg::default(), eventual, sequential);
+        orphan.causal = Some(causal);
+        assert!(orphan.validate(eventual).is_err());
+        let mut missing =
+            AdaptCfg::hysteresis3(HysteresisCfg::default(), eventual, causal, sequential);
+        missing.causal = None;
+        assert!(missing.validate(eventual).is_err());
+    }
+
+    #[test]
+    fn recovery_matrix_rides_along_and_compares() {
+        use crate::rollback::recovery::RecoveryPolicy;
+        let cfg = AdaptCfg::hysteresis3(
+            HysteresisCfg::default(),
+            ConsistencyCfg::n3r1w1(),
+            ConsistencyCfg::n3r1w1().with_causal(),
+            ConsistencyCfg::n3r2w2(),
+        )
+        .with_recovery_matrix([
+            RecoveryPolicy::FullRestore,
+            RecoveryPolicy::ResetToClean,
+            RecoveryPolicy::Stabilize,
+        ]);
+        assert!(cfg.validate(ConsistencyCfg::n3r1w1()).is_ok());
+        assert_eq!(
+            cfg.recovery_by_mode.unwrap()[Mode::Causal.rung()],
+            RecoveryPolicy::ResetToClean
+        );
+        assert_ne!(cfg, cfg.clone().with_recovery_matrix([RecoveryPolicy::None; 3]));
     }
 }

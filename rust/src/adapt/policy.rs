@@ -5,12 +5,18 @@
 
 use crate::adapt::signals::WindowStats;
 
-/// The two operating points of the tradeoff (Table II): optimistic
-/// execution under eventual consistency with detect-rollback, or
-/// pessimistic execution under (quorum-)sequential consistency.
+/// The operating points of the tradeoff (Table II): optimistic
+/// execution under eventual consistency with detect-rollback,
+/// pessimistic execution under (quorum-)sequential consistency — and,
+/// between them, the causal rung: the same eventual quorum config with
+/// client-side session guarantees layered on
+/// ([`crate::client::quorum::Session`]). Binary controllers only ever
+/// visit the outer two; the [`PolicyKind::Hysteresis3`] ladder walks
+/// all three one step at a time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     Eventual,
+    Causal,
     Sequential,
 }
 
@@ -18,7 +24,18 @@ impl Mode {
     pub fn label(self) -> &'static str {
         match self {
             Mode::Eventual => "eventual",
+            Mode::Causal => "causal",
             Mode::Sequential => "sequential",
+        }
+    }
+
+    /// Escalation-ladder rung (0 = weakest). Also indexes per-mode
+    /// tables such as [`crate::adapt::AdaptCfg::recovery_by_mode`].
+    pub fn rung(self) -> usize {
+        match self {
+            Mode::Eventual => 0,
+            Mode::Causal => 1,
+            Mode::Sequential => 2,
         }
     }
 }
@@ -123,16 +140,28 @@ impl HysteresisCfg {
     }
 }
 
-/// Threshold hysteresis over the sliding-window signals.
+/// Threshold hysteresis over the sliding-window signals. Binary by
+/// default (eventual ↔ sequential, today's behavior); with
+/// [`Self::three_level`] it becomes the escalation ladder
+/// eventual ↔ causal ↔ sequential, moving **one rung per window**: a
+/// hot window climbs one step, `hold_windows` consecutive calm windows
+/// descend one step (the streak restarts on each rung, so a full
+/// descent takes `2 × hold_windows` calm windows).
 #[derive(Debug)]
 pub struct HysteresisPolicy {
     cfg: HysteresisCfg,
     calm_streak: usize,
+    /// three-level ladder (causal rung exists) vs binary
+    ladder: bool,
 }
 
 impl HysteresisPolicy {
     pub fn new(cfg: HysteresisCfg) -> Self {
-        Self { cfg, calm_streak: 0 }
+        Self { cfg, calm_streak: 0, ladder: false }
+    }
+
+    pub fn three_level(cfg: HysteresisCfg) -> Self {
+        Self { cfg, calm_streak: 0, ladder: true }
     }
 
     fn hot(&self, w: &WindowStats) -> bool {
@@ -154,7 +183,11 @@ impl HysteresisPolicy {
 
 impl Policy for HysteresisPolicy {
     fn name(&self) -> &'static str {
-        "hysteresis"
+        if self.ladder {
+            "hysteresis3"
+        } else {
+            "hysteresis"
+        }
     }
 
     fn decide(&mut self, w: &WindowStats, current: Mode) -> Mode {
@@ -162,17 +195,40 @@ impl Policy for HysteresisPolicy {
             Mode::Eventual => {
                 if self.hot(w) {
                     self.calm_streak = 0;
-                    Mode::Sequential
+                    if self.ladder {
+                        Mode::Causal
+                    } else {
+                        Mode::Sequential
+                    }
                 } else {
                     Mode::Eventual
                 }
+            }
+            Mode::Causal => {
+                // the middle rung escalates like the floor and releases
+                // like the ceiling; hot wins when a window is both
+                // (impossible with coherent lo <= hi thresholds)
+                if self.hot(w) {
+                    self.calm_streak = 0;
+                    return Mode::Sequential;
+                }
+                if self.calm(w) {
+                    self.calm_streak += 1;
+                    if self.calm_streak >= self.cfg.hold_windows {
+                        self.calm_streak = 0;
+                        return Mode::Eventual;
+                    }
+                } else {
+                    self.calm_streak = 0;
+                }
+                Mode::Causal
             }
             Mode::Sequential => {
                 if self.calm(w) {
                     self.calm_streak += 1;
                     if self.calm_streak >= self.cfg.hold_windows {
                         self.calm_streak = 0;
-                        return Mode::Eventual;
+                        return if self.ladder { Mode::Causal } else { Mode::Eventual };
                     }
                 } else {
                     self.calm_streak = 0;
@@ -190,6 +246,10 @@ pub enum PolicyKind {
     /// today's behavior — no controller is deployed at all
     Static,
     Hysteresis(HysteresisCfg),
+    /// the same thresholds driving the three-level escalation ladder
+    /// (requires [`crate::adapt::AdaptCfg::causal`] to name the middle
+    /// rung's quorum config)
+    Hysteresis3(HysteresisCfg),
 }
 
 impl PolicyKind {
@@ -197,6 +257,7 @@ impl PolicyKind {
         match self {
             PolicyKind::Static => Box::new(StaticPolicy),
             PolicyKind::Hysteresis(h) => Box::new(HysteresisPolicy::new(h.clone())),
+            PolicyKind::Hysteresis3(h) => Box::new(HysteresisPolicy::three_level(h.clone())),
         }
     }
 }
@@ -313,5 +374,66 @@ mod tests {
             PolicyKind::Hysteresis(HysteresisCfg::default()).build().name(),
             "hysteresis"
         );
+        assert_eq!(
+            PolicyKind::Hysteresis3(HysteresisCfg::default()).build().name(),
+            "hysteresis3"
+        );
+    }
+
+    #[test]
+    fn ladder_climbs_one_rung_per_hot_window() {
+        let mut p = HysteresisPolicy::three_level(HysteresisCfg::default());
+        let storm = stats(1_000, 50, 0, 0.0);
+        assert_eq!(p.decide(&storm, Mode::Eventual), Mode::Causal, "never skips causal");
+        assert_eq!(p.decide(&storm, Mode::Causal), Mode::Sequential);
+        assert_eq!(p.decide(&storm, Mode::Sequential), Mode::Sequential, "already at the top");
+    }
+
+    #[test]
+    fn ladder_descends_one_rung_per_held_calm_streak() {
+        let cfg = HysteresisCfg { hold_windows: 2, ..HysteresisCfg::default() };
+        let mut p = HysteresisPolicy::three_level(cfg);
+        let calm = stats(1_000, 0, 0, 0.0);
+        assert_eq!(p.decide(&calm, Mode::Sequential), Mode::Sequential, "calm 1");
+        assert_eq!(p.decide(&calm, Mode::Sequential), Mode::Causal, "calm 2 releases a rung");
+        // the streak restarts on the causal rung: a full descent costs
+        // another hold_windows calm windows
+        assert_eq!(p.decide(&calm, Mode::Causal), Mode::Causal, "calm 1 again");
+        assert_eq!(p.decide(&calm, Mode::Causal), Mode::Eventual, "calm 2 again");
+    }
+
+    #[test]
+    fn ladder_middle_rung_is_sticky_in_the_murky_band() {
+        let cfg = HysteresisCfg { hold_windows: 1, ..HysteresisCfg::default() };
+        let mut p = HysteresisPolicy::three_level(cfg);
+        // 3 violations/kop: below hi (5), above lo (1) — neither way
+        let murky = stats(1_000, 3, 0, 0.0);
+        assert_eq!(p.decide(&murky, Mode::Causal), Mode::Causal);
+        // and a murky window resets a started calm streak
+        let cfg = HysteresisCfg { hold_windows: 2, ..HysteresisCfg::default() };
+        let mut p = HysteresisPolicy::three_level(cfg);
+        let calm = stats(1_000, 0, 0, 0.0);
+        assert_eq!(p.decide(&calm, Mode::Causal), Mode::Causal);
+        assert_eq!(p.decide(&murky, Mode::Causal), Mode::Causal, "streak reset");
+        assert_eq!(p.decide(&calm, Mode::Causal), Mode::Causal);
+        assert_eq!(p.decide(&calm, Mode::Causal), Mode::Eventual);
+    }
+
+    #[test]
+    fn binary_hysteresis_never_emits_causal() {
+        // the pre-ladder behavior is untouched: hot goes straight to
+        // sequential and release goes straight back
+        let cfg = HysteresisCfg { hold_windows: 1, ..HysteresisCfg::default() };
+        let mut p = HysteresisPolicy::new(cfg);
+        assert_eq!(p.decide(&stats(1_000, 50, 0, 0.0), Mode::Eventual), Mode::Sequential);
+        assert_eq!(p.decide(&stats(1_000, 0, 0, 0.0), Mode::Sequential), Mode::Eventual);
+    }
+
+    #[test]
+    fn mode_rungs_are_ordered() {
+        assert_eq!(Mode::Eventual.rung(), 0);
+        assert_eq!(Mode::Causal.rung(), 1);
+        assert_eq!(Mode::Sequential.rung(), 2);
+        assert_eq!(Mode::Causal.label(), "causal");
     }
 }

@@ -26,7 +26,7 @@ use std::rc::Rc;
 
 use crate::client::app::{AppAction, AppEnv, AppLogic, AppOp, LastResult, OpOutcome};
 use crate::client::consistency::{ClientTiming, ConsistencyCfg};
-use crate::client::quorum::{QuorumCall, QuorumStep};
+use crate::client::quorum::{QuorumCall, QuorumStep, Session};
 use crate::clock::hvc::Hvc;
 use crate::faults::state::FaultHook;
 use crate::metrics::throughput::Metrics;
@@ -93,6 +93,11 @@ pub struct ClientActor {
     /// request (one refcount bump per replica instead of a vector clone)
     /// and merged copy-on-write as replies arrive
     seen_hvc: Option<Rc<Hvc>>,
+    /// session-guarantee state for the causal mode
+    /// ([`ConsistencyCfg::causal`]): present exactly while the active
+    /// config is causal. `None` everywhere else — non-causal runs never
+    /// touch it, so they reproduce pre-session behavior bit-for-bit.
+    session: Option<Session>,
     metrics: Metrics,
     done: bool,
     /// false while churned out (workload [`crate::workload::churn`]
@@ -161,6 +166,7 @@ impl ClientActor {
             think_seq: 0,
             next_req: 1,
             seen_hvc: None,
+            session: cfg.causal.then(Session::new),
             metrics,
             done: false,
             active: true,
@@ -268,6 +274,20 @@ impl ClientActor {
     }
 
     fn finish_call(&mut self, ctx: &mut Ctx, slot: usize, call: QuorumCall, outcome: OpOutcome) {
+        // causal mode: run the result through the session guarantees —
+        // record committed writes, patch reads against the floor
+        let outcome = match (outcome, self.session.as_mut()) {
+            (OpOutcome::GetOk(sibs), Some(sess)) => {
+                OpOutcome::GetOk(sess.patch_get(call.app_op.key(), sibs))
+            }
+            (OpOutcome::PutOk, Some(sess)) => {
+                if let (AppOp::Put(k, v), Some(ver)) = (&call.app_op, call.version()) {
+                    sess.on_put(*k, ver, v);
+                }
+                OpOutcome::PutOk
+            }
+            (o, _) => o,
+        };
         match &outcome {
             OpOutcome::Failed => {
                 self.ops_failed += 1;
@@ -396,6 +416,16 @@ impl ClientActor {
         );
         self.epoch = epoch;
         self.cfg = cfg;
+        // the session lives exactly while the mode is causal; an
+        // escalation to sequential (stronger) or a release to eventual
+        // (weaker, no guarantees promised) both retire the floors
+        if cfg.causal {
+            if self.session.is_none() {
+                self.session = Some(Session::new());
+            }
+        } else {
+            self.session = None;
+        }
         true
     }
 }
@@ -425,6 +455,11 @@ impl Actor for ClientActor {
                 ctx.send(from, Msg::Adapt(AdaptMsg::Ack { epoch: self.epoch, client: self.idx }));
             }
             Msg::Rollback(RollbackMsg::Notify { t_violate_ms, .. }) => {
+                // server state may have rewound past the session floors:
+                // keeping them would resurrect rolled-back writes
+                if let Some(sess) = self.session.as_mut() {
+                    sess.clear();
+                }
                 let abort = {
                     let now = ctx.now();
                     let seq = ctx.event_seq();
@@ -504,6 +539,10 @@ impl Actor for ClientActor {
                 self.rep_ops = 0;
                 self.rep_timeouts = 0;
                 self.rep_lat.clear();
+                // the session died with its connection
+                if let Some(sess) = self.session.as_mut() {
+                    sess.clear();
+                }
             }
             FaultHook::Restart => {
                 if !self.active {

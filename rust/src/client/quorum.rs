@@ -20,12 +20,14 @@
 //! and multiplexes up to `pipeline_depth` concurrent calls. This split is
 //! what the transport-free unit tests below exercise.
 
+use std::collections::HashMap;
+
 use crate::client::app::{AppOp, OpOutcome};
 use crate::client::consistency::ConsistencyCfg;
 use crate::clock::vc::VectorClock;
 use crate::sim::{ProcId, Time};
 use crate::store::protocol::{ServerOp, ServerReply};
-use crate::store::value::{merge_siblings, Versioned};
+use crate::store::value::{merge_siblings, KeyId, Value, Versioned};
 
 /// Which wire operation the call is currently waiting on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -126,6 +128,13 @@ impl QuorumCall {
 
     pub fn phase(&self) -> QuorumPhase {
         self.phase
+    }
+
+    /// The merged write version (present once the GET_VERSION phase has
+    /// settled) — the causal session records it as a read-your-writes
+    /// floor when the PUT completes.
+    pub fn version(&self) -> Option<&VectorClock> {
+        self.version.as_ref()
     }
 
     /// Acks required to finish the current phase.
@@ -250,6 +259,61 @@ impl QuorumCall {
         } else {
             QuorumStep::Done(OpOutcome::Failed)
         }
+    }
+}
+
+/// Client-side session guarantees (Terry-style) for the causal mode
+/// ([`ConsistencyCfg::causal`]): **read-your-writes** and **monotonic
+/// reads** per client session, layered purely on the client — no extra
+/// quorum round trips, no protocol change, no server state.
+///
+/// The session keeps, per key it has touched, the *floor*: the sibling
+/// set the session must never observe the store regress below — its own
+/// committed writes plus every version a previous GET returned. A GET
+/// result is patched by vector-clock dominance against the floor
+/// (genuinely concurrent siblings survive, dominated stragglers from a
+/// thin R = 1 quorum are replaced), and the floor then rises to the
+/// patched result. Combined with the server-side HVC piggy-backing this
+/// gives each session a causal view at eventual-mode quorum cost.
+///
+/// Rollback interaction: a recovery that rewinds server state makes the
+/// floor a lie — the floors must be dropped ([`Session::clear`]) when
+/// the client handles the controller's rollback notification, otherwise
+/// the session would resurrect rolled-back writes into fresh reads.
+#[derive(Default)]
+pub struct Session {
+    floor: HashMap<KeyId, Vec<Versioned>>,
+}
+
+impl Session {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A committed write: the floor for `key` now includes it
+    /// (read-your-writes).
+    pub fn on_put(&mut self, key: KeyId, version: &VectorClock, value: &Value) {
+        let entry = self.floor.entry(key).or_default();
+        crate::store::value::insert_version(
+            entry,
+            Versioned::new(version.clone(), value.clone()),
+        );
+    }
+
+    /// Patch a GET result against the floor and raise the floor to the
+    /// patched result (monotonic reads).
+    pub fn patch_get(&mut self, key: KeyId, sibs: Vec<Versioned>) -> Vec<Versioned> {
+        let entry = self.floor.entry(key).or_default();
+        let patched = merge_siblings([sibs, std::mem::take(entry)]);
+        entry.clone_from(&patched);
+        patched
+    }
+
+    /// Forget every floor — required when a rollback notification
+    /// arrives (server state may have rewound past the floors) and when
+    /// the client churns out (the session died with its connection).
+    pub fn clear(&mut self) {
+        self.floor.clear();
     }
 }
 
@@ -468,6 +532,66 @@ mod tests {
             call.on_reply(ProcId(2), 1, values_reply(1, 0), no_req),
             QuorumStep::Done(OpOutcome::GetOk(_))
         ));
+    }
+
+    #[test]
+    fn session_read_your_writes() {
+        // the session's own committed write must show up in a later GET
+        // even when a thin R = 1 quorum answers from a replica the write
+        // has not reached yet (empty result)
+        let mut s = Session::new();
+        let k = KeyId(1);
+        let wrote = VectorClock::new().incremented(4);
+        s.on_put(k, &wrote, &Value::Int(9));
+        let got = s.patch_get(k, vec![]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].value, Value::Int(9));
+        assert_eq!(got[0].version, wrote);
+    }
+
+    #[test]
+    fn session_monotonic_reads_under_reordered_replies() {
+        // first GET observes v2 (dominates v1); a later GET served by a
+        // lagging replica returns only v1 — the session patches it back
+        // up to v2 instead of letting the read regress
+        let mut s = Session::new();
+        let k = KeyId(2);
+        let v1 = VectorClock::new().incremented(0);
+        let mut v2 = v1.clone();
+        v2.increment(0);
+        let first = s.patch_get(k, vec![Versioned::new(v2.clone(), Value::Int(2))]);
+        assert_eq!(first.len(), 1);
+        let second = s.patch_get(k, vec![Versioned::new(v1, Value::Int(1))]);
+        assert_eq!(second.len(), 1, "the stale sibling is dominated away");
+        assert_eq!(second[0].value, Value::Int(2), "the read never goes backwards");
+        assert_eq!(second[0].version, v2);
+    }
+
+    #[test]
+    fn session_preserves_genuinely_concurrent_siblings() {
+        let mut s = Session::new();
+        let k = KeyId(3);
+        let a = VectorClock::new().incremented(0);
+        let b = VectorClock::new().incremented(1);
+        s.on_put(k, &a, &Value::Int(10));
+        let got = s.patch_get(k, vec![Versioned::new(b, Value::Int(11))]);
+        assert_eq!(got.len(), 2, "concurrent versions both survive the patch");
+    }
+
+    #[test]
+    fn session_clear_forgets_the_floors() {
+        // after a rollback notification the floors may describe rewound
+        // state: clearing must let the next GET accept whatever the
+        // (restored) store answers
+        let mut s = Session::new();
+        let k = KeyId(4);
+        let v2 = VectorClock::new().incremented(0).incremented(0);
+        s.on_put(k, &v2, &Value::Int(2));
+        s.clear();
+        let old = VectorClock::new().incremented(0);
+        let got = s.patch_get(k, vec![Versioned::new(old.clone(), Value::Int(1))]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].version, old, "the rewound version is accepted as-is");
     }
 
     #[test]

@@ -407,7 +407,10 @@ fn build_world(
         if hosts(filter, adapt) {
             sim.add_actor_at(
                 adapt,
-                Box::new(AdaptController::new(lay.client_ids.clone(), &cfg.adapt, cfg.consistency)),
+                Box::new(
+                    AdaptController::new(lay.client_ids.clone(), &cfg.adapt, cfg.consistency)
+                        .with_rollback(Some(lay.controller_id)),
+                ),
             );
         }
     }

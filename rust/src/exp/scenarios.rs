@@ -438,6 +438,41 @@ pub fn adaptive_conjunctive(run: AdaptRun, scale: f64, seed: u64) -> ExpConfig {
     cfg
 }
 
+/// [`adaptive_conjunctive`]'s partition scenario on the **three-level
+/// escalation ladder**: the same deterministic timeout signal now walks
+/// the cluster eventual → causal → sequential one rung per window while
+/// the cut is open, and back down two held calm streaks after the heal.
+/// Each rung carries its own recovery strategy — the matrix is pushed to
+/// the rollback controller on every switch: optimistic mode restores in
+/// full, the causal rung re-derives from peers without a freeze, and the
+/// sequential rung (where mutual-exclusion violations cannot occur)
+/// records without rolling back.
+pub fn adaptive_ladder(scale: f64, seed: u64) -> ExpConfig {
+    let mut cfg = adaptive_conjunctive(AdaptRun::Adaptive, scale, seed);
+    cfg.name = "adaptive-ladder".into();
+    cfg.recovery = RecoveryPolicy::FullRestore;
+    let eventual = adaptive_eventual_mode();
+    let hysteresis = HysteresisCfg {
+        timeouts_per_sec_hi: 0.5,
+        timeouts_per_sec_lo: 0.05,
+        hold_windows: 2,
+        ..HysteresisCfg::disarmed()
+    };
+    cfg.with_adapt(
+        AdaptCfg::hysteresis3(
+            hysteresis,
+            eventual,
+            eventual.with_causal(),
+            ConsistencyCfg::n3r2w2(),
+        )
+        .with_recovery_matrix([
+            RecoveryPolicy::FullRestore,
+            RecoveryPolicy::ResetToClean,
+            RecoveryPolicy::Stabilize,
+        ]),
+    )
+}
+
 /// The zipf exponents of the skew sweep (0 = uniform).
 pub const SKEW_THETAS: [f64; 4] = [0.0, 0.8, 0.99, 1.2];
 
@@ -904,6 +939,26 @@ mod tests {
         assert!(st.stabilize, "the app must ignore rollback notifications");
         assert_eq!(st.recovery, RecoveryPolicy::Stabilize);
         assert!(st.fault_plan.validate(st.n_servers(), st.n_regions()).is_ok());
+    }
+
+    #[test]
+    fn ladder_scenario_is_three_level_with_a_recovery_matrix() {
+        use crate::adapt::{Mode, PolicyKind};
+        let cfg = adaptive_ladder(0.1, 7);
+        assert!(cfg.adapt.enabled());
+        assert!(matches!(cfg.adapt.policy, PolicyKind::Hysteresis3(_)));
+        assert_eq!(cfg.adapt.causal, Some(adaptive_eventual_mode().with_causal()));
+        assert_eq!(cfg.consistency, adaptive_eventual_mode(), "starts on the bottom rung");
+        let matrix = cfg.adapt.recovery_by_mode.expect("per-mode strategies configured");
+        assert_eq!(matrix[Mode::Eventual.rung()], RecoveryPolicy::FullRestore);
+        assert_eq!(matrix[Mode::Causal.rung()], RecoveryPolicy::ResetToClean);
+        assert_eq!(matrix[Mode::Sequential.rung()], RecoveryPolicy::Stabilize);
+        // off the adapt axis it is the adaptive_conjunctive scenario
+        let base = adaptive_conjunctive(AdaptRun::Adaptive, 0.1, 7);
+        assert_eq!(cfg.app, base.app);
+        assert_eq!(cfg.fault_plan, base.fault_plan);
+        assert_eq!(cfg.n_clients, base.n_clients);
+        assert_eq!(cfg.duration, base.duration);
     }
 
     #[test]

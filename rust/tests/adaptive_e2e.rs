@@ -8,7 +8,7 @@ use optikv::adapt::{round_trips, AdaptCfg};
 use optikv::client::consistency::ConsistencyCfg;
 use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
 use optikv::exp::runner::{run, ExpResult};
-use optikv::exp::scenarios::{adaptive_conjunctive, adaptive_eventual_mode, AdaptRun};
+use optikv::exp::scenarios::{adaptive_conjunctive, adaptive_eventual_mode, adaptive_ladder, AdaptRun};
 use optikv::rollback::recovery::RecoveryPolicy;
 use optikv::sim::msg::MsgClass;
 use optikv::sim::SEC;
@@ -150,6 +150,53 @@ fn hysteresis_round_trips_and_stays_within_the_static_envelope() {
         adaptive.app_tps,
         best_static
     );
+}
+
+// ---------------------------------------------------------------------------
+// the three-level ladder: eventual → causal → sequential and back
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ladder_walks_the_causal_rung_both_ways_one_step_at_a_time() {
+    let res = run(&adaptive_ladder(0.1, 42));
+    let labels: Vec<&str> = res.mode_timeline.iter().map(|sp| sp.label()).collect();
+    assert_eq!(labels.first(), Some(&"eventual"), "starts on the bottom rung");
+    assert!(labels.contains(&"causal"), "the middle rung was visited: {labels:?}");
+    assert!(labels.contains(&"sequential"), "the cut drove a full escalation: {labels:?}");
+    assert_eq!(labels.last(), Some(&"eventual"), "full descent after heal: {labels:?}");
+    assert!(res.mode_switches >= 4, "two rungs up, two down: {labels:?}");
+
+    // one rung per switch: no adjacent pair of spans ever skips a level
+    let rung = |l: &str| match l {
+        "eventual" => 0i64,
+        "causal" => 1,
+        _ => 2,
+    };
+    for w in res.mode_timeline.windows(2) {
+        assert_eq!(
+            (rung(w[0].label()) - rung(w[1].label())).abs(),
+            1,
+            "switches move one rung at a time: {labels:?}"
+        );
+    }
+
+    // the causal rung keeps the eventual quorum math — only the
+    // session-guarantee flag distinguishes its announced config
+    for sp in res.mode_timeline.iter().filter(|sp| sp.label() == "causal") {
+        assert!(sp.cfg.is_eventual() && sp.cfg.causal);
+        assert_eq!(sp.cfg.label(), "N3R1W2-causal");
+    }
+
+    assert!(
+        res.sim_stats.sent_class(MsgClass::Adapt) > 0,
+        "announce/ack/set-recovery traffic flowed"
+    );
+    assert!(res.ops_ok > 100, "the cluster made progress: {}", res.ops_ok);
+
+    // the ladder schedule replays under the seed
+    let again = run(&adaptive_ladder(0.1, 42));
+    assert_eq!(res.mode_timeline, again.mode_timeline);
+    assert_eq!(digest(&res), digest(&again));
 }
 
 // ---------------------------------------------------------------------------

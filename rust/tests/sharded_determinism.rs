@@ -223,6 +223,30 @@ fn threaded_adaptive_run_is_bit_identical() {
     );
 }
 
+#[test]
+fn causal_mode_is_bit_identical_on_all_engines() {
+    // client-side session guarantees: the causal floor patches GET
+    // results purely from client-local state — no extra protocol
+    // traffic, no RNG draws — so a causal run must replay bit-for-bit
+    // on the serial, sharded and threaded engines alike
+    let mk = || {
+        let mut cfg = scenarios::scaleout_conjunctive(8, 0.05, 42);
+        cfg.consistency = ConsistencyCfg::n3r1w1().with_causal();
+        cfg
+    };
+    assert_shards_match_serial(mk, &[1, 2, 4]);
+    assert_threaded_matches_serial(mk, &[1, 2]);
+}
+
+#[test]
+fn adaptive_ladder_is_bit_identical_threaded() {
+    // the full three-level composition — hysteresis3 walking the causal
+    // rung, session floors appearing and dropping with announces, and
+    // per-mode recovery pushes to the rollback controller on worker 0 —
+    // still digest-equal across engines
+    assert_threaded_matches_serial(|| scenarios::adaptive_ladder(0.05, 42), &[1, 2]);
+}
+
 // ---------------------------------------------------------------------------
 // the workload engine: inert default, skewed traffic, churn, flash crowd
 // ---------------------------------------------------------------------------
