@@ -13,6 +13,7 @@
 //! | `faulted`              | crash/restart + re-sync (fault view on every send)|
 //! | `kvmix-zipf{0.99,1.2}-s24` | the workload engine: alias-table draws + hot-key predicates on a 24-server ring |
 //! | `flashcrowd-s24`       | load-shape pacing + partition + adapt round trip  |
+//! | `recovery-matrix-s24-{mode}-{strat}` | the recovery-strategy matrix: crash churn on a 24-server ring under {eventual, causal, sequential} × {full, reset, stab} — per cell `violations_per_kop`, `recover_ms` (mean time-to-recover) and `net_tps` |
 //!
 //! The `shards{k}` rows run the *same* `scaleout-s24` deployment —
 //! servers, co-located monitors, closed-loop clients, rollback
@@ -44,7 +45,7 @@ use crate::exp::config::ExpConfig;
 use crate::exp::{runner, scenarios};
 
 /// The fixed matrix, smallest row first (CI smoke runs `MATRIX[0]`).
-pub const MATRIX: [&str; 10] = [
+pub const MATRIX: [&str; 19] = [
     "serial",
     "pipelined-d8",
     "scaleout-s24",
@@ -55,6 +56,15 @@ pub const MATRIX: [&str; 10] = [
     "kvmix-zipf0.99-s24",
     "kvmix-zipf1.2-s24",
     "flashcrowd-s24",
+    "recovery-matrix-s24-eventual-full",
+    "recovery-matrix-s24-eventual-reset",
+    "recovery-matrix-s24-eventual-stab",
+    "recovery-matrix-s24-causal-full",
+    "recovery-matrix-s24-causal-reset",
+    "recovery-matrix-s24-causal-stab",
+    "recovery-matrix-s24-sequential-full",
+    "recovery-matrix-s24-sequential-reset",
+    "recovery-matrix-s24-sequential-stab",
 ];
 
 /// One measured matrix row.
@@ -85,11 +95,36 @@ pub struct PerfRow {
     pub barriers: u64,
     /// per-shard event imbalance, max/mean − 1 (0 when not sharded)
     pub imbalance: f64,
+    /// detected violations per 1000 successful ops (the recovery-matrix
+    /// rows' first per-cell metric; meaningful on every violating row)
+    pub violations_per_kop: f64,
+    /// mean time-to-recover (ms) over completed recoveries — 0 when no
+    /// recovery ran (or the strategy recovers instantly, e.g. Stabilize)
+    pub recover_ms: f64,
+    /// net application throughput (virtual-time ops/s) — what the cell's
+    /// strategy leaves after its recovery stalls
+    pub net_tps: f64,
 }
 
 /// Parse the shard count out of a `scaleout-s24-shards{k}` row name.
 pub fn sharded_row_shards(row: &str) -> Option<usize> {
     row.strip_prefix("scaleout-s24-shards").and_then(|k| k.parse().ok())
+}
+
+/// Parse the two axes out of a `recovery-matrix-s24-{mode}-{strat}` row
+/// name (mode and strategy labels as in
+/// [`scenarios::RecoveryMode::label`] / [`scenarios::RECOVERY_STRATEGIES`]).
+pub fn recovery_row_axes(
+    row: &str,
+) -> Option<(scenarios::RecoveryMode, crate::rollback::recovery::RecoveryPolicy)> {
+    let rest = row.strip_prefix("recovery-matrix-s24-")?;
+    let mode = scenarios::RecoveryMode::ALL.into_iter().find(|m| {
+        rest.strip_prefix(m.label()).is_some_and(|r| r.starts_with('-'))
+    })?;
+    let strat = rest.strip_prefix(mode.label())?.strip_prefix('-')?;
+    let (policy, _) =
+        scenarios::RECOVERY_STRATEGIES.into_iter().find(|(_, label)| *label == strat)?;
+    Some((mode, policy))
 }
 
 /// max/mean − 1 over per-shard event counts: 0 = perfectly balanced.
@@ -136,13 +171,19 @@ pub fn matrix_cfg(row: &str, scale: f64, seed: u64) -> ExpConfig {
             scenarios::kvmix_flash_crowd(scenarios::AdaptRun::Adaptive, true, scale, seed)
                 .with_cluster_servers(24)
         }
-        other => match sharded_row_shards(other) {
-            // the scale-out deployment on the threaded engine
-            Some(k) => scenarios::scaleout_conjunctive(24, scale, seed)
-                .with_shards(k)
-                .with_threaded(),
-            None => panic!("unknown perf matrix row {other:?} (rows: {MATRIX:?})"),
-        },
+        other => {
+            if let Some(k) = sharded_row_shards(other) {
+                // the scale-out deployment on the threaded engine
+                scenarios::scaleout_conjunctive(24, scale, seed).with_shards(k).with_threaded()
+            } else if let Some((mode, strategy)) = recovery_row_axes(other) {
+                // one cell of the recovery-strategy matrix, on the same
+                // 24-server ring the other -s24 rows stress
+                scenarios::recovery_matrix_cell(mode, strategy, scale, seed)
+                    .with_cluster_servers(24)
+            } else {
+                panic!("unknown perf matrix row {other:?} (rows: {MATRIX:?})")
+            }
+        }
     }
 }
 
@@ -170,6 +211,9 @@ pub fn run_row(row: &str, scale: f64, seed: u64) -> PerfRow {
         shards,
         barriers: res.barriers,
         imbalance: imbalance(&res.shard_events),
+        violations_per_kop: res.violations_per_kop,
+        recover_ms: res.mean_recovery_ms,
+        net_tps: res.app_tps,
     }
 }
 
@@ -197,7 +241,7 @@ fn push_json_str(out: &mut String, s: &str) {
 pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenance: &str) -> String {
     let mut o = String::new();
     o.push_str("{\n");
-    o.push_str("  \"schema\": 4,\n");
+    o.push_str("  \"schema\": 5,\n");
     o.push_str("  \"bench\": \"hotpath\",\n");
     o.push_str(&format!("  \"scale\": {scale},\n"));
     o.push_str(&format!("  \"seed\": {seed},\n"));
@@ -213,7 +257,8 @@ pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenan
              \"sent_total\": {}, \"sent_bytes_proxy\": {}, \"pairs_checked\": {}, \
              \"pairs_charged\": {}, \"window_peak\": {}, \"candidates_seen\": {}, \
              \"ops_ok\": {}, \"violations\": {}, \"shards\": {}, \"barriers\": {}, \
-             \"imbalance\": {:.4}}}",
+             \"imbalance\": {:.4}, \"violations_per_kop\": {:.3}, \"recover_ms\": {:.3}, \
+             \"net_tps\": {:.2}}}",
             r.events,
             r.wall_s,
             r.events_per_sec,
@@ -228,6 +273,9 @@ pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenan
             r.shards,
             r.barriers,
             r.imbalance,
+            r.violations_per_kop,
+            r.recover_ms,
+            r.net_tps,
         ));
         o.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -269,6 +317,38 @@ mod tests {
         assert_eq!(fc.n_servers(), 24);
         assert!(fc.workload.shape.is_some(), "shape pacing is the point of the row");
         assert!(fc.adapt.enabled() && !fc.fault_plan.is_none(), "full round-trip stack");
+        let cell = matrix_cfg("recovery-matrix-s24-causal-reset", 0.05, 7);
+        assert_eq!(cell.n_servers(), 24, "the matrix rows ride the 24-server ring");
+        assert!(cell.consistency.causal);
+        assert_eq!(cell.recovery, crate::rollback::recovery::RecoveryPolicy::ResetToClean);
+        assert!(!cell.fault_plan.is_none(), "every strategy must terminate through crashes");
+    }
+
+    #[test]
+    fn recovery_row_names_parse() {
+        use crate::rollback::recovery::RecoveryPolicy;
+        use scenarios::RecoveryMode;
+        assert_eq!(
+            recovery_row_axes("recovery-matrix-s24-eventual-full"),
+            Some((RecoveryMode::Eventual, RecoveryPolicy::FullRestore))
+        );
+        assert_eq!(
+            recovery_row_axes("recovery-matrix-s24-sequential-stab"),
+            Some((RecoveryMode::Sequential, RecoveryPolicy::Stabilize))
+        );
+        assert_eq!(recovery_row_axes("recovery-matrix-s24-causal-melt"), None);
+        assert_eq!(recovery_row_axes("recovery-matrix-s24-eventual"), None);
+        assert_eq!(recovery_row_axes("scaleout-s24"), None);
+        // every matrix row of the family must parse, and the family is
+        // the full 3 × 3 grid
+        let cells: Vec<_> =
+            MATRIX.iter().filter_map(|r| recovery_row_axes(r)).collect();
+        assert_eq!(cells.len(), 9, "3 modes x 3 strategies");
+        for mode in RecoveryMode::ALL {
+            for (strategy, _) in scenarios::RECOVERY_STRATEGIES {
+                assert!(cells.contains(&(mode, strategy)), "{mode:?} x {strategy:?}");
+            }
+        }
     }
 
     #[test]
@@ -334,7 +414,7 @@ mod tests {
         assert!(row.pairs_checked <= row.pairs_charged);
         let json = to_json(&[row], 0.01, 7, true, "unit-test");
         for key in [
-            "\"schema\": 4",
+            "\"schema\": 5",
             "\"measured\": true",
             "\"name\": \"serial\"",
             "\"events_per_sec\"",
@@ -344,6 +424,9 @@ mod tests {
             "\"shards\": 0",
             "\"barriers\": 0",
             "\"imbalance\": 0.0000",
+            "\"violations_per_kop\"",
+            "\"recover_ms\"",
+            "\"net_tps\"",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }

@@ -6,7 +6,8 @@
 //!             [--cluster-servers S] [--clients 15] [--duration-s 120]
 //!             [--monitors true] [--pipeline-depth 1]
 //!             [--topo aws-global|aws-regional|lab50|lab100]
-//!             [--recovery none|notify|restore] [--accel native|xla]
+//!             [--recovery none|notify|restore|reset|stabilize]
+//!             [--accel native|xla]
 //!             [--put-pct 50] [--scale 0.05] [--seed 42] [--eps-ms inf]
 //!             [--fault-plan "partition:0,1|2@10-40;crash:1@20+15"]
 //! optikv table2        — print the consistency presets
@@ -25,6 +26,12 @@
 //!                        otherwise), flash crowd under partition (adaptive
 //!                        round trip required), client churn (rejoins
 //!                        required)
+//! optikv recover       — recovery-strategy matrix smoke: every
+//!                        {eventual, causal, sequential} × {full, reset,
+//!                        stab} cell must complete its recoveries through
+//!                        crash churn (exit 1 if any cell wedges), plus the
+//!                        self-stabilizing coloring demonstration (zero
+//!                        aborts required)
 //! ```
 //!
 //! Fault-plan DSL (windows in virtual seconds): `partition:0,1|2@10-40`
@@ -55,9 +62,10 @@ fn main() {
         Some("adapt") => cmd_adapt(&args),
         Some("shards") => cmd_shards(&args),
         Some("workload") => cmd_workload(&args),
+        Some("recover") => cmd_recover(&args),
         _ => {
             eprintln!(
-                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults|adapt|shards|workload> [flags]  (see module docs)"
+                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults|adapt|shards|workload|recover> [flags]  (see module docs)"
             );
             std::process::exit(2);
         }
@@ -113,6 +121,8 @@ fn cmd_run(args: &Args) {
         "none" => RecoveryPolicy::None,
         "notify" => RecoveryPolicy::NotifyClients,
         "restore" => RecoveryPolicy::FullRestore,
+        "reset" => RecoveryPolicy::ResetToClean,
+        "stabilize" => RecoveryPolicy::Stabilize,
         other => {
             eprintln!("unknown --recovery {other}");
             std::process::exit(2);
@@ -445,6 +455,70 @@ fn cmd_workload(args: &Args) {
     println!("rejoins {} | msgs cut by faults {}", res.rejoins, res.sim_stats.fault_dropped);
     if res.rejoins == 0 {
         eprintln!("workload-smoke FAILED: churned clients never rejoined");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_recover(args: &Args) {
+    use optikv::exp::scenarios::{RecoveryMode, RECOVERY_STRATEGIES};
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", 42);
+
+    // -- the 3x3 matrix: every cell must recover through crash churn -------
+    println!("== recovery-strategy matrix (crash churn, 2 crash/restart cycles) ==");
+    let mut t = Table::new(&[
+        "cell",
+        "app ops/s",
+        "viol/kop",
+        "recoveries",
+        "completed",
+        "aborted",
+        "recover ms",
+    ]);
+    let mut wedged = Vec::new();
+    for mode in RecoveryMode::ALL {
+        for (strategy, _) in RECOVERY_STRATEGIES {
+            let res = run(&scenarios::recovery_matrix_cell(mode, strategy, scale, seed));
+            t.row(&[
+                res.name.clone(),
+                format!("{:.0}", res.app_tps),
+                format!("{:.2}", res.violations_per_kop),
+                res.recoveries.to_string(),
+                res.completed_recoveries.to_string(),
+                res.recovery_aborts.to_string(),
+                format!("{:.1}", res.mean_recovery_ms),
+            ]);
+            if res.recoveries > 0 && res.completed_recoveries == 0 {
+                wedged.push(res.name.clone());
+            }
+        }
+    }
+    t.print();
+    if !wedged.is_empty() {
+        eprintln!("recovery-smoke FAILED: cells started but never completed a recovery: {wedged:?}");
+        std::process::exit(1);
+    }
+
+    // -- stabilize demonstration: coloring must converge with zero aborts --
+    println!("\n== stabilize demonstration (self-stabilizing coloring through a crash) ==");
+    let res = run(&scenarios::stabilize_coloring(scale, seed));
+    let (done, aborted) = {
+        let m = res.metrics.borrow();
+        (m.tasks_completed, m.tasks_aborted)
+    };
+    println!(
+        "{}: app {:.1} ops/s | violations {} | tasks done {} | tasks aborted {} | crashes {}",
+        res.name, res.app_tps, res.violations_detected, done, aborted, res.crashes
+    );
+    if res.violations_detected == 0 {
+        eprintln!("recovery-smoke FAILED: stabilize demo saw no violations — nothing demonstrated");
+        std::process::exit(1);
+    }
+    if done == 0 || aborted > 0 {
+        eprintln!(
+            "recovery-smoke FAILED: self-stabilizing coloring must complete tasks without aborts \
+             (done {done}, aborted {aborted})"
+        );
         std::process::exit(1);
     }
 }
