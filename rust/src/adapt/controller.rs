@@ -25,6 +25,7 @@ use crate::rollback::recovery::RecoveryPolicy;
 use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{AdaptMsg, Msg};
 use crate::sim::{ProcId, Time, MS};
+use crate::trace::{TraceEv, TraceRef};
 use crate::util::stats::Cdf;
 
 const TAG_TICK: u64 = 1;
@@ -95,6 +96,8 @@ pub struct AdaptController {
     cur_detect_ms_sum: f64,
     cur_detect_n: u64,
     cur_stall_ms: f64,
+    /// flight recorder handle (`None` = recording off, zero overhead)
+    trace: Option<TraceRef>,
     /// current consistency epoch (0 = the starting config)
     pub epoch: u64,
     /// announce times and configs, starting with the initial mode
@@ -137,6 +140,7 @@ impl AdaptController {
             cur_detect_ms_sum: 0.0,
             cur_detect_n: 0,
             cur_stall_ms: 0.0,
+            trace: None,
             epoch: 0,
             timeline: Vec::new(),
             switches: 0,
@@ -148,6 +152,12 @@ impl AdaptController {
     /// recovery strategy. A no-op without a recovery matrix.
     pub fn with_rollback(mut self, rollback: Option<ProcId>) -> Self {
         self.rollback = rollback;
+        self
+    }
+
+    /// Attach the flight recorder ([`crate::trace`]).
+    pub fn with_trace(mut self, trace: TraceRef) -> Self {
+        self.trace = Some(trace);
         self
     }
 
@@ -255,10 +265,29 @@ impl Actor for AdaptController {
             return;
         }
         let sample = self.close_window();
+        if let Some(tr) = &self.trace {
+            tr.borrow_mut().record(
+                ctx.self_id,
+                ctx.now(),
+                ctx.event_seq(),
+                TraceEv::AdaptWindow {
+                    ops: sample.ops,
+                    timeouts: sample.timeouts,
+                    violations: sample.violations,
+                    stall_ms: sample.stall_ms as u64,
+                    lat_p99_ms: sample.lat_p99_ms,
+                    detect_ms_sum: sample.detect_ms_sum,
+                    detect_n: sample.detect_n,
+                    span_ms: sample.span_ms as u64,
+                },
+            );
+        }
         self.win.push(sample);
         let stats = self.win.stats();
         let decision = self.policy.decide(&stats, self.mode);
         if decision != self.mode {
+            let from = self.mode_cfg(self.mode).model_name();
+            let to = self.mode_cfg(decision).model_name();
             self.mode = decision;
             self.epoch += 1;
             self.switches += 1;
@@ -267,6 +296,14 @@ impl Actor for AdaptController {
                 epoch: self.epoch,
                 cfg: self.mode_cfg(decision),
             });
+            if let Some(tr) = &self.trace {
+                tr.borrow_mut().record(
+                    ctx.self_id,
+                    ctx.now(),
+                    ctx.event_seq(),
+                    TraceEv::ModeSwitch { epoch: self.epoch, from, to },
+                );
+            }
             self.push_recovery_policy(ctx);
         }
         self.announce_unacked(ctx);

@@ -35,6 +35,7 @@ use crate::sim::msg::{AdaptMsg, Msg, RollbackMsg};
 use crate::sim::{ProcId, Time};
 use crate::store::protocol::{ServerOp, ServerReply};
 use crate::store::ring::Router;
+use crate::trace::{TraceEv, TraceRef};
 
 const TAG_WAKE: u64 = 0;
 /// think timers carry a generation in the low bits so timers from before
@@ -114,6 +115,8 @@ pub struct ClientActor {
     rep_ops: u64,
     rep_timeouts: u64,
     rep_lat: Vec<Time>,
+    /// flight recorder handle (`None` = recording off, zero overhead)
+    trace: Option<TraceRef>,
     /// stats
     pub ops_ok: u64,
     pub ops_failed: u64,
@@ -174,6 +177,7 @@ impl ClientActor {
             rep_ops: 0,
             rep_timeouts: 0,
             rep_lat: Vec::new(),
+            trace: None,
             ops_ok: 0,
             ops_failed: 0,
             restarts: 0,
@@ -188,6 +192,12 @@ impl ClientActor {
     pub fn with_adapt_reports(mut self, to: ProcId, window: Time) -> Self {
         assert!(window > 0, "report window must be positive");
         self.adapt_report = Some((to, window));
+        self
+    }
+
+    /// Attach the flight recorder ([`crate::trace`]).
+    pub fn with_trace(mut self, trace: TraceRef) -> Self {
+        self.trace = Some(trace);
         self
     }
 
@@ -232,6 +242,14 @@ impl ClientActor {
                     let call = self.calls.remove(&key).expect("re-keyed call");
                     self.calls.insert(req, call);
                 }
+                if let Some(tr) = &self.trace {
+                    tr.borrow_mut().record(
+                        ctx.self_id,
+                        ctx.now(),
+                        ctx.event_seq(),
+                        TraceEv::ClientRound { client: self.idx, req, round },
+                    );
+                }
                 self.broadcast(ctx, &to, req, op);
                 let timeout = if round == 1 {
                     self.timing.timeout_round1
@@ -242,6 +260,19 @@ impl ClientActor {
             }
             QuorumStep::Done(outcome) => {
                 let (slot, call) = self.calls.remove(&key).expect("finished call");
+                if let Some(tr) = &self.trace {
+                    tr.borrow_mut().record(
+                        ctx.self_id,
+                        ctx.now(),
+                        ctx.event_seq(),
+                        TraceEv::ClientComplete {
+                            client: self.idx,
+                            req: key,
+                            ok: !matches!(outcome, OpOutcome::Failed),
+                            latency: ctx.now() - call.started,
+                        },
+                    );
+                }
                 self.finish_call(ctx, slot, call, outcome);
             }
         }
@@ -266,6 +297,15 @@ impl ClientActor {
             let req = self.next_req;
             self.next_req += 1;
             let targets = self.resolve_targets(&op);
+            if let Some(tr) = &self.trace {
+                tr.borrow_mut().record(ctx.self_id, ctx.now(), ctx.event_seq(), TraceEv::ClientIssue {
+                    client: self.idx,
+                    req,
+                    key: op.key().0,
+                    put: matches!(op, AppOp::Put(..)),
+                    epoch: self.epoch,
+                });
+            }
             let (call, step) =
                 QuorumCall::new(self.idx, self.cfg, op, req, targets, ctx.now(), self.epoch);
             self.calls.insert(req, (slot, call));
@@ -527,6 +567,13 @@ impl Actor for ClientActor {
     }
 
     fn on_fault(&mut self, ctx: &mut Ctx, hook: FaultHook) {
+        if let Some(tr) = &self.trace {
+            let kind = match hook {
+                FaultHook::Crash => "crash",
+                FaultHook::Restart => "restart",
+            };
+            tr.borrow_mut().record(ctx.self_id, ctx.now(), ctx.event_seq(), TraceEv::Fault { kind });
+        }
         match hook {
             FaultHook::Crash => {
                 // the client left: in-flight calls, parked waves and

@@ -60,6 +60,7 @@ use crate::runtime::accel::{Accel, PairQuery};
 use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::Msg;
 use crate::sim::{ms, ProcId, Time, SEC};
+use crate::trace::{TraceEv, TraceRef, TraceWitness};
 
 const TAG_BATCH: u64 = 1;
 const TAG_GC: u64 = 2;
@@ -151,6 +152,8 @@ pub struct MonitorActor {
     states: HashMap<PredId, PredState>,
     pending: Vec<Candidate>,
     batch_scheduled: bool,
+    /// flight recorder handle (`None` = recording off, zero overhead)
+    trace: Option<TraceRef>,
     /// monotone arrival stamp for window entries
     arr_seq: u64,
     /// stats
@@ -185,6 +188,7 @@ impl MonitorActor {
             states: HashMap::new(),
             pending: Vec::new(),
             batch_scheduled: false,
+            trace: None,
             arr_seq: 0,
             candidates_seen: 0,
             violations_found: 0,
@@ -193,6 +197,12 @@ impl MonitorActor {
             window_peak: 0,
             gc_evicted: 0,
         }
+    }
+
+    /// Attach the flight recorder ([`crate::trace`]).
+    pub fn with_trace(mut self, trace: TraceRef) -> Self {
+        self.trace = Some(trace);
+        self
     }
 
     fn pred_state(&mut self, pred: PredId, now: Time) -> &mut PredState {
@@ -358,6 +368,18 @@ impl MonitorActor {
             + self.cfg.cost.per_candidate * n
             + self.cfg.cost.per_pair * pairs;
         let delay = ctx.cpu_delay(cost);
+        if let Some(tr) = &self.trace {
+            tr.borrow_mut().record(
+                ctx.self_id,
+                ctx.now(),
+                ctx.event_seq(),
+                TraceEv::MonitorBatch {
+                    monitor: self.idx,
+                    candidates: n,
+                    violations: reports.len() as u64,
+                },
+            );
+        }
         for mut rep in reports {
             rep.detected_at = ctx.now() + delay;
             self.metrics.borrow_mut().record_violation(ViolationRecord {
@@ -370,6 +392,30 @@ impl MonitorActor {
                 at: ctx.now(),
                 seq: ctx.event_seq(),
             });
+            if let Some(tr) = &self.trace {
+                tr.borrow_mut().record(
+                    ctx.self_id,
+                    ctx.now(),
+                    ctx.event_seq(),
+                    TraceEv::Violation {
+                        pred: rep.pred,
+                        name: rep.pred_name.clone(),
+                        clause: rep.clause,
+                        witnesses: rep
+                            .witnesses
+                            .iter()
+                            .map(|w| TraceWitness {
+                                server: w.server.0,
+                                cseq: w.seq,
+                                start_ms: w.start_pt_ms(),
+                                end_ms: w.end_pt_ms(),
+                            })
+                            .collect(),
+                        t_violate_ms: rep.t_violate_ms,
+                        t_occurred_ms: rep.t_occurred_ms,
+                    },
+                );
+            }
             if let Some(ctl) = self.controller {
                 ctx.send_after(delay, ctl, Msg::Violation(Box::new(rep)));
             }

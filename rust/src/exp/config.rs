@@ -11,6 +11,7 @@ use crate::rollback::recovery::RecoveryPolicy;
 use crate::sim::des::SchedKind;
 use crate::sim::{Time, SEC};
 use crate::store::server::ServerCfg;
+use crate::trace::TraceCfg;
 use crate::workload::WorkloadCfg;
 
 /// Which testbed to simulate.
@@ -141,6 +142,11 @@ pub struct ExpConfig {
     /// re-coloring. Pair with [`RecoveryPolicy::Stabilize`]; `false`
     /// (the default) leaves every app's abort path unchanged.
     pub stabilize: bool,
+    /// deterministic flight recorder ([`crate::trace`]). The default
+    /// ([`TraceCfg::off`]) builds no recorder and reproduces pre-trace
+    /// runs bit-identically; `ring`/`full` capture per-actor bounded
+    /// event rings merged in `(at, seq)` dispatch order.
+    pub trace: TraceCfg,
 }
 
 impl ExpConfig {
@@ -175,7 +181,17 @@ impl ExpConfig {
             sched: SchedKind::Heap,
             workload: WorkloadCfg::uniform_default(),
             stabilize: false,
+            trace: TraceCfg::off(),
         }
+    }
+
+    /// Attach the flight recorder ([`crate::trace`]). The default
+    /// ([`TraceCfg::off`]) records nothing and reproduces pre-trace
+    /// runs bit-identically.
+    pub fn with_trace(mut self, trace: TraceCfg) -> Self {
+        trace.validate();
+        self.trace = trace;
+        self
     }
 
     /// Run on the merged-order sharded engine with `k` shards.
@@ -303,6 +319,8 @@ mod tests {
         assert_eq!(cfg.sched, SchedKind::Heap);
         assert_eq!(cfg.workload, WorkloadCfg::uniform_default());
         assert!(cfg.workload.is_inert(), "default workload perturbs nothing");
+        assert_eq!(cfg.trace, TraceCfg::off());
+        assert!(!cfg.trace.enabled(), "no recorder by default");
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //! | `kvmix-zipf{0.99,1.2}-s24` | the workload engine: alias-table draws + hot-key predicates on a 24-server ring |
 //! | `flashcrowd-s24`       | load-shape pacing + partition + adapt round trip  |
 //! | `recovery-matrix-s24-{mode}-{strat}` | the recovery-strategy matrix: crash churn on a 24-server ring under {eventual, causal, sequential} × {full, reset, stab} — per cell `violations_per_kop`, `recover_ms` (mean time-to-recover) and `net_tps` |
+//! | `trace-overhead-s24-{off,ring,full}` | the flight recorder's cost on the scale-out row: `off` pins the inert default (digest-identical to `scaleout-s24`), `ring` the identity-only ring, `full` the forensics payloads (HVC snapshots + candidate keys) |
+//! | `monitor-overhead-s24-{on,off}`      | the paper's "<4 %" monitoring-overhead claim as a first-class pair: the same scale-out deployment with and without monitors — compare `net_tps` (virtual-time, what the paper reports) and `events_per_sec` (wall-clock) |
 //!
 //! The `shards{k}` rows run the *same* `scaleout-s24` deployment —
 //! servers, co-located monitors, closed-loop clients, rollback
@@ -45,7 +47,7 @@ use crate::exp::config::ExpConfig;
 use crate::exp::{runner, scenarios};
 
 /// The fixed matrix, smallest row first (CI smoke runs `MATRIX[0]`).
-pub const MATRIX: [&str; 19] = [
+pub const MATRIX: [&str; 24] = [
     "serial",
     "pipelined-d8",
     "scaleout-s24",
@@ -65,6 +67,11 @@ pub const MATRIX: [&str; 19] = [
     "recovery-matrix-s24-sequential-full",
     "recovery-matrix-s24-sequential-reset",
     "recovery-matrix-s24-sequential-stab",
+    "trace-overhead-s24-off",
+    "trace-overhead-s24-ring",
+    "trace-overhead-s24-full",
+    "monitor-overhead-s24-on",
+    "monitor-overhead-s24-off",
 ];
 
 /// One measured matrix row.
@@ -127,6 +134,17 @@ pub fn recovery_row_axes(
     Some((mode, policy))
 }
 
+/// The cost of row `with` relative to `baseline`, in percent of the
+/// baseline (positive = `with` is slower). Compare `net_tps` for the
+/// paper's virtual-time monitoring-overhead claim, `events_per_sec` for
+/// the recorder's wall-clock cost.
+pub fn overhead_pct(baseline: f64, with: f64) -> f64 {
+    if baseline <= 0.0 {
+        return 0.0;
+    }
+    (1.0 - with / baseline) * 100.0
+}
+
 /// max/mean − 1 over per-shard event counts: 0 = perfectly balanced.
 pub fn imbalance(per_shard: &[u64]) -> f64 {
     if per_shard.is_empty() {
@@ -170,6 +188,29 @@ pub fn matrix_cfg(row: &str, scale: f64, seed: u64) -> ExpConfig {
         "flashcrowd-s24" => {
             scenarios::kvmix_flash_crowd(scenarios::AdaptRun::Adaptive, true, scale, seed)
                 .with_cluster_servers(24)
+        }
+        // the flight recorder's three modes on the scale-out deployment:
+        // `off` must stay digest-identical to `scaleout-s24`, `ring`
+        // prices the identity-only ring, `full` the forensics payloads
+        "trace-overhead-s24-off" => {
+            scenarios::scaleout_conjunctive(24, scale, seed)
+                .with_trace(crate::trace::TraceCfg::off())
+        }
+        "trace-overhead-s24-ring" => {
+            scenarios::scaleout_conjunctive(24, scale, seed)
+                .with_trace(crate::trace::TraceCfg::ring(1 << 14))
+        }
+        "trace-overhead-s24-full" => {
+            scenarios::scaleout_conjunctive(24, scale, seed)
+                .with_trace(crate::trace::TraceCfg::full(1 << 14))
+        }
+        // the paper's monitoring-overhead claim (§VI: "typically less
+        // than 4 %"): the same deployment with the monitors on and off
+        "monitor-overhead-s24-on" => scenarios::scaleout_conjunctive(24, scale, seed),
+        "monitor-overhead-s24-off" => {
+            let mut cfg = scenarios::scaleout_conjunctive(24, scale, seed);
+            cfg.monitors = false;
+            cfg
         }
         other => {
             if let Some(k) = sharded_row_shards(other) {
@@ -241,7 +282,7 @@ fn push_json_str(out: &mut String, s: &str) {
 pub fn to_json(rows: &[PerfRow], scale: f64, seed: u64, measured: bool, provenance: &str) -> String {
     let mut o = String::new();
     o.push_str("{\n");
-    o.push_str("  \"schema\": 5,\n");
+    o.push_str("  \"schema\": 6,\n");
     o.push_str("  \"bench\": \"hotpath\",\n");
     o.push_str(&format!("  \"scale\": {scale},\n"));
     o.push_str(&format!("  \"seed\": {seed},\n"));
@@ -322,6 +363,41 @@ mod tests {
         assert!(cell.consistency.causal);
         assert_eq!(cell.recovery, crate::rollback::recovery::RecoveryPolicy::ResetToClean);
         assert!(!cell.fault_plan.is_none(), "every strategy must terminate through crashes");
+    }
+
+    #[test]
+    fn overhead_rows_vary_only_the_measured_knob() {
+        use crate::trace::TraceMode;
+        let base = matrix_cfg("scaleout-s24", 0.05, 7);
+        let off = matrix_cfg("trace-overhead-s24-off", 0.05, 7);
+        let ring = matrix_cfg("trace-overhead-s24-ring", 0.05, 7);
+        let full = matrix_cfg("trace-overhead-s24-full", 0.05, 7);
+        assert_eq!(off.trace.mode, TraceMode::Off);
+        assert_eq!(ring.trace.mode, TraceMode::Ring);
+        assert_eq!(full.trace.mode, TraceMode::Full);
+        assert!(!off.trace.enabled() && ring.trace.enabled() && full.trace.enabled());
+        for cfg in [&off, &ring, &full] {
+            assert_eq!(cfg.app, base.app, "same workload as the scale-out row");
+            assert_eq!(cfg.seed, base.seed);
+            assert_eq!(cfg.n_clients, base.n_clients);
+            assert!(cfg.monitors);
+        }
+
+        let on = matrix_cfg("monitor-overhead-s24-on", 0.05, 7);
+        let moff = matrix_cfg("monitor-overhead-s24-off", 0.05, 7);
+        assert!(on.monitors && !moff.monitors, "the pair varies only the monitors");
+        assert_eq!(on.app, moff.app);
+        assert_eq!(on.seed, moff.seed);
+        assert_eq!(on.consistency, moff.consistency);
+        assert!(!on.trace.enabled() && !moff.trace.enabled());
+    }
+
+    #[test]
+    fn overhead_pct_is_relative_slowdown() {
+        assert!((overhead_pct(100.0, 96.0) - 4.0).abs() < 1e-12);
+        assert_eq!(overhead_pct(100.0, 100.0), 0.0);
+        assert!(overhead_pct(100.0, 110.0) < 0.0, "a speedup reads negative");
+        assert_eq!(overhead_pct(0.0, 50.0), 0.0, "degenerate baseline");
     }
 
     #[test]
@@ -414,7 +490,7 @@ mod tests {
         assert!(row.pairs_checked <= row.pairs_charged);
         let json = to_json(&[row], 0.01, 7, true, "unit-test");
         for key in [
-            "\"schema\": 5",
+            "\"schema\": 6",
             "\"measured\": true",
             "\"name\": \"serial\"",
             "\"events_per_sec\"",

@@ -40,6 +40,7 @@ use crate::sim::shard::{run_threaded, ShardPlan, ThreadCfg};
 use crate::sim::{ProcId, Time};
 use crate::store::ring::Router;
 use crate::store::server::ServerActor;
+use crate::trace::{ActorKind, TraceHub, TraceRef};
 use crate::store::value::Interner;
 use crate::util::rng::Rng;
 use crate::util::stats::Cdf;
@@ -136,6 +137,9 @@ pub struct ExpResult {
     /// stable throughput per load-shape phase (empty without a shape):
     /// every full metrics window attributed to the segment covering it
     pub phase_tps: Vec<(String, f64)>,
+    /// the merged flight recording ([`crate::trace`]) — `None` unless
+    /// the config enabled a recorder; engine-invariant when present
+    pub trace: Option<TraceHub>,
 }
 
 /// Ring-block shard placement for the runner's actor layout
@@ -233,6 +237,8 @@ fn hosts(filter: Option<(&ShardPlan, u32)>, id: ProcId) -> bool {
 struct WorldHandles {
     metrics: Metrics,
     oracle: MeOracleRef,
+    /// the shard's flight recorder (`None` when tracing is off)
+    trace: Option<TraceRef>,
 }
 
 /// Construct the deployment inside `sim`, registering only the actors
@@ -255,6 +261,10 @@ fn build_world(
     let registry = Rc::new(RefCell::new(Registry::new()));
     let metrics = MetricsHub::new(s, c);
     let oracle = MeOracle::new();
+    // the flight recorder: one hub per run (per shard on the threaded
+    // engine); hosted actors register below so per-shard registries and
+    // rings stay key-disjoint and union cleanly at merge
+    let trace: Option<TraceRef> = cfg.trace.enabled().then(|| TraceHub::new(cfg.trace));
     let accel: Rc<RefCell<dyn Accel>> = match cfg.accel {
         AccelKind::Native => Rc::new(RefCell::new(NativeAccel::new())),
         AccelKind::Xla => crate::runtime::pjrt::shared_xla_accel(),
@@ -339,35 +349,39 @@ fn build_world(
                 true, // naming-convention inference on
             )
         });
-        sim.add_actor_at(
-            id,
-            Box::new(ServerActor::new(
-                i as u16,
-                router.clone(),
-                detector,
-                cfg.server_cfg.clone(),
-                metrics.clone(),
-                Some(lay.controller_id),
-                lay.server_ids.clone(),
-            )),
+        let mut server = ServerActor::new(
+            i as u16,
+            router.clone(),
+            detector,
+            cfg.server_cfg.clone(),
+            metrics.clone(),
+            Some(lay.controller_id),
+            lay.server_ids.clone(),
         );
+        if let Some(tr) = &trace {
+            tr.borrow_mut().register(id, ActorKind::Server, i as u32);
+            server = server.with_trace(tr.clone());
+        }
+        sim.add_actor_at(id, Box::new(server));
     }
     for i in 0..s {
         let id = lay.monitor_ids[i];
         if !hosts(filter, id) {
             continue;
         }
-        sim.add_actor_at(
-            id,
-            Box::new(MonitorActor::new(
-                i as u16,
-                registry.clone(),
-                accel.clone(),
-                Some(lay.controller_id),
-                cfg.monitor_cfg.clone(),
-                metrics.clone(),
-            )),
+        let mut monitor = MonitorActor::new(
+            i as u16,
+            registry.clone(),
+            accel.clone(),
+            Some(lay.controller_id),
+            cfg.monitor_cfg.clone(),
+            metrics.clone(),
         );
+        if let Some(tr) = &trace {
+            tr.borrow_mut().register(id, ActorKind::Monitor, i as u32);
+            monitor = monitor.with_trace(tr.clone());
+        }
+        sim.add_actor_at(id, Box::new(monitor));
     }
     for (i, app) in apps.into_iter().enumerate() {
         let id = lay.client_ids[i];
@@ -387,35 +401,39 @@ fn build_world(
         if let Some(adapt) = lay.adapt_id {
             client = client.with_adapt_reports(adapt, cfg.adapt.window);
         }
+        if let Some(tr) = &trace {
+            tr.borrow_mut().register(id, ActorKind::Client, i as u32);
+            client = client.with_trace(tr.clone());
+        }
         sim.add_actor_at(id, Box::new(client));
     }
     if hosts(filter, lay.controller_id) {
-        sim.add_actor_at(
-            lay.controller_id,
-            Box::new(
-                ControllerActor::new(
-                    lay.server_ids.clone(),
-                    lay.client_ids.clone(),
-                    cfg.recovery,
-                    metrics.clone(),
-                )
-                .with_adapt(lay.adapt_id),
-            ),
-        );
+        let mut controller = ControllerActor::new(
+            lay.server_ids.clone(),
+            lay.client_ids.clone(),
+            cfg.recovery,
+            metrics.clone(),
+        )
+        .with_adapt(lay.adapt_id);
+        if let Some(tr) = &trace {
+            tr.borrow_mut().register(lay.controller_id, ActorKind::Controller, 0);
+            controller = controller.with_trace(tr.clone());
+        }
+        sim.add_actor_at(lay.controller_id, Box::new(controller));
     }
     if let Some(adapt) = lay.adapt_id {
         if hosts(filter, adapt) {
-            sim.add_actor_at(
-                adapt,
-                Box::new(
-                    AdaptController::new(lay.client_ids.clone(), &cfg.adapt, cfg.consistency)
-                        .with_rollback(Some(lay.controller_id)),
-                ),
-            );
+            let mut ad = AdaptController::new(lay.client_ids.clone(), &cfg.adapt, cfg.consistency)
+                .with_rollback(Some(lay.controller_id));
+            if let Some(tr) = &trace {
+                tr.borrow_mut().register(adapt, ActorKind::Adapt, 0);
+                ad = ad.with_trace(tr.clone());
+            }
+            sim.add_actor_at(adapt, Box::new(ad));
         }
     }
 
-    WorldHandles { metrics, oracle }
+    WorldHandles { metrics, oracle, trace }
 }
 
 /// Everything a run (or one worker shard of it) yields, as plain `Send`
@@ -445,6 +463,8 @@ struct Harvest {
     /// mode timeline + switch count, from whichever shard hosts the
     /// adapt controller (at most one does)
     adapt: Option<(Vec<ModeSpan>, u64)>,
+    /// the shard's flight recording (rings of the hosted actors only)
+    trace: Option<TraceHub>,
 }
 
 /// Pull the per-actor counters out of the hosted actors plus copies of
@@ -477,6 +497,7 @@ fn harvest(
         completed_recoveries: 0,
         recovery_ms_total: 0.0,
         adapt: None,
+        trace: handles.trace.as_ref().map(|t| t.borrow().clone()),
     };
     for &id in lay.monitor_ids.iter().filter(|&&id| hosts(filter, id)) {
         if let Some(any) = sim.actor_mut(id).as_any() {
@@ -560,6 +581,11 @@ fn merge_harvests(mut hs: Vec<Harvest>) -> Harvest {
         acc.recovery_ms_total += h.recovery_ms_total;
         if acc.adapt.is_none() {
             acc.adapt = h.adapt;
+        }
+        match (&mut acc.trace, h.trace) {
+            (Some(a), Some(b)) => a.merge(&b),
+            (None, Some(b)) => acc.trace = Some(b),
+            _ => {}
         }
     }
     acc
@@ -668,6 +694,7 @@ fn finalize(cfg: &ExpConfig, h: Harvest, engine: EngineRun) -> ExpResult {
         hot_key_share,
         keys_p90,
         phase_tps,
+        trace: h.trace,
     }
 }
 

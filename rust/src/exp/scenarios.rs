@@ -11,6 +11,7 @@ use crate::exp::config::{AppKind, ExpConfig, TopoKind};
 use crate::faults::plan::{FaultEvent, FaultPlan};
 use crate::rollback::recovery::RecoveryPolicy;
 use crate::sim::{Time, SEC};
+use crate::trace::TraceCfg;
 
 fn dur(scale: f64, full_secs: u64) -> Time {
     ((full_secs as f64 * scale).max(20.0) as u64) * SEC
@@ -471,6 +472,22 @@ pub fn adaptive_ladder(scale: f64, seed: u64) -> ExpConfig {
             RecoveryPolicy::Stabilize,
         ]),
     )
+}
+
+/// The flight-recorder scenario (`optikv trace`): the three-level
+/// adaptive ladder with the deterministic recorder in `Full` mode. One
+/// faulted run exercises every event class the recorder knows —
+/// β-seeded conjunctive violations (with HVC/key payloads for the
+/// forensics walk), the partition's quorum timeouts, the controller's
+/// window samples and mode switches, and the per-rung recovery phases.
+/// The ring capacity is sized so CI-scale runs (`scale ≤ 0.25`) never
+/// evict: every seeded violation must resolve to a non-empty causal
+/// chain, which requires its guilty `ServerApply`s to still be in the
+/// ring when the walk runs.
+pub fn traced_ladder(scale: f64, seed: u64) -> ExpConfig {
+    let mut cfg = adaptive_ladder(scale, seed);
+    cfg.name = "traced-ladder".into();
+    cfg.with_trace(TraceCfg::full(1 << 17))
 }
 
 /// The zipf exponents of the skew sweep (0 = uniform).
@@ -958,6 +975,20 @@ mod tests {
         assert_eq!(cfg.app, base.app);
         assert_eq!(cfg.fault_plan, base.fault_plan);
         assert_eq!(cfg.n_clients, base.n_clients);
+        assert_eq!(cfg.duration, base.duration);
+    }
+
+    #[test]
+    fn traced_ladder_is_the_ladder_plus_a_full_recorder() {
+        let cfg = traced_ladder(0.1, 7);
+        assert_eq!(cfg.name, "traced-ladder");
+        assert!(cfg.trace.enabled());
+        assert!(cfg.trace.full_payloads(), "forensics needs HVC/key payloads");
+        let base = adaptive_ladder(0.1, 7);
+        assert!(!base.trace.enabled(), "the recorder is opt-in");
+        assert_eq!(cfg.app, base.app);
+        assert_eq!(cfg.fault_plan, base.fault_plan);
+        assert_eq!(cfg.seed, base.seed);
         assert_eq!(cfg.duration, base.duration);
     }
 

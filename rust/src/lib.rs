@@ -67,6 +67,17 @@
 //! optimistically. The default static policy deploys no controller and
 //! reproduces every pre-adapt run bit-identically.
 //!
+//! Observability: a deterministic flight recorder ([`trace`]) threads
+//! per-actor bounded rings of typed events — quorum calls, applies with
+//! HVC snapshots, candidates, verdicts, violations, recovery phases,
+//! mode switches, faults — through the whole stack, stamped with the
+//! engine-invariant `(at, seq)` dispatch key so merged traces are
+//! bit-identical across the serial/sharded/threaded engines. On each
+//! violation, [`trace::forensics`] walks the recording back to the
+//! guilty writes; [`trace::chrome`] exports a Perfetto-loadable Chrome
+//! trace plus the adapt-signal time series. The [`trace::TraceCfg::off`]
+//! default is inert and reproduces every pre-trace run bit-identically.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured numbers.
 
@@ -83,5 +94,6 @@ pub mod rollback;
 pub mod runtime;
 pub mod sim;
 pub mod store;
+pub mod trace;
 pub mod util;
 pub mod workload;

@@ -32,6 +32,13 @@
 //!                        crash churn (exit 1 if any cell wedges), plus the
 //!                        self-stabilizing coloring demonstration (zero
 //!                        aborts required)
+//! optikv trace         — flight-recorder demo: run the faulted adaptive
+//!                        ladder with the recorder in Full mode, write a
+//!                        Perfetto-loadable Chrome trace (--out trace.json),
+//!                        the per-window adapt-signal CSV (--csv) and the
+//!                        violation-forensics report (--forensics); exit 1
+//!                        if any seeded violation resolves to an empty
+//!                        causal chain
 //! ```
 //!
 //! Fault-plan DSL (windows in virtual seconds): `partition:0,1|2@10-40`
@@ -63,9 +70,10 @@ fn main() {
         Some("shards") => cmd_shards(&args),
         Some("workload") => cmd_workload(&args),
         Some("recover") => cmd_recover(&args),
+        Some("trace") => cmd_trace(&args),
         _ => {
             eprintln!(
-                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults|adapt|shards|workload|recover> [flags]  (see module docs)"
+                "usage: optikv <run|table2|latency-demo|scaleout|pipeline|faults|adapt|shards|workload|recover|trace> [flags]  (see module docs)"
             );
             std::process::exit(2);
         }
@@ -521,6 +529,68 @@ fn cmd_recover(args: &Args) {
         );
         std::process::exit(1);
     }
+}
+
+fn cmd_trace(args: &Args) {
+    use optikv::trace::chrome;
+    use optikv::trace::forensics::Forensics;
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", 42);
+    let out = args.get_or("out", "trace.json").to_string();
+    let csv = args.get_or("csv", "trace-signals.csv").to_string();
+    let forensics_out = args.get_or("forensics", "forensics.txt").to_string();
+
+    println!("== flight recorder (adaptive ladder, Full mode) ==");
+    let res = run(&scenarios::traced_ladder(scale, seed));
+    println!("{}", report::summarize(&res));
+    let hub = res.trace.as_ref().expect("traced_ladder enables the recorder");
+    println!(
+        "recorded {} events across {} actors ({} dropped by ring eviction)",
+        hub.len(),
+        hub.actors().count(),
+        hub.dropped()
+    );
+
+    let json = chrome::chrome_trace_json(hub);
+    std::fs::write(&out, &json).unwrap_or_else(|e| {
+        eprintln!("trace-smoke FAILED: cannot write {out}: {e}");
+        std::process::exit(1);
+    });
+    println!("wrote {out} ({} bytes) — load it at https://ui.perfetto.dev", json.len());
+
+    let sig = chrome::signals_csv(hub);
+    std::fs::write(&csv, &sig).unwrap_or_else(|e| {
+        eprintln!("trace-smoke FAILED: cannot write {csv}: {e}");
+        std::process::exit(1);
+    });
+    println!("wrote {csv} ({} adapt windows)", sig.lines().count().saturating_sub(1));
+
+    let forensics = Forensics::walk(hub);
+    let rendered = forensics.render();
+    std::fs::write(&forensics_out, &rendered).unwrap_or_else(|e| {
+        eprintln!("trace-smoke FAILED: cannot write {forensics_out}: {e}");
+        std::process::exit(1);
+    });
+    print!("{rendered}");
+
+    // acceptance: the run must actually seed violations, and every one of
+    // them must walk back to at least one guilty write
+    if forensics.chains.is_empty() {
+        eprintln!("trace-smoke FAILED: the faulted ladder run produced no violations");
+        std::process::exit(1);
+    }
+    let empty = forensics.empty_chains();
+    if empty > 0 {
+        eprintln!(
+            "trace-smoke FAILED: {empty}/{} violations resolved to an empty causal chain",
+            forensics.chains.len()
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "forensics: {} violations, every causal chain non-empty",
+        forensics.chains.len()
+    );
 }
 
 fn cmd_pipeline(args: &Args) {

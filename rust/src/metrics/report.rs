@@ -33,12 +33,23 @@ pub fn bench_seed() -> u64 {
     std::env::var("BENCH_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
 }
 
-/// One-line run summary.
+/// Run summary: the headline counters, then — when the run produced
+/// them — the detection-latency quantile ladder and the per-mode
+/// throughput split. Both live in [`ExpResult`] on every run; surfacing
+/// them here means every CLI path that prints a summary shows them
+/// without opting in.
 pub fn summarize(r: &ExpResult) -> String {
-    format!(
+    let mut out = format!(
         "{:<38} app {:>8.1} ops/s | server {:>9.1} ops/s | viol {:>5} | cand {:>8} | ok {:>8}",
         r.name, r.app_tps, r.server_tps, r.violations_detected, r.candidates_seen, r.ops_ok
-    )
+    );
+    if !r.detection_cdf.is_empty() {
+        out.push_str(&format!("\n  detect: {}", r.detection_cdf.summary().render(" ms")));
+    }
+    for (label, tps) in &r.per_mode_tps {
+        out.push_str(&format!("\n  mode {label:<12} {tps:>8.1} ops/s (full windows)"));
+    }
+    out
 }
 
 /// Render Table III from detection latencies.
@@ -54,12 +65,9 @@ pub fn latency_table(lat_ms: &[f64]) -> String {
     let mut out = t.render();
     if !lat_ms.is_empty() {
         out.push_str(&format!(
-            "n={} avg={:.1} ms p50={:.1} ms p99={:.1} ms max={:.1} ms\n",
-            lat_ms.len(),
+            "avg={:.1} ms {}\n",
             stats::mean(lat_ms),
-            stats::percentile(lat_ms, 50.0),
-            stats::percentile(lat_ms, 99.0),
-            stats::max(lat_ms),
+            Cdf::new(lat_ms.to_vec()).summary().render(" ms"),
         ));
     }
     out
@@ -72,11 +80,12 @@ pub fn detection_cdf_summary(cdf: &Cdf) -> String {
     if cdf.is_empty() {
         return "detection-latency CDF: no violations detected\n".to_string();
     }
+    let s = cdf.summary();
     let mut t = Table::new(&["Quantile", "Detection latency (ms)"]);
-    for (label, q) in
-        [("p50", 0.5), ("p90", 0.9), ("p99", 0.99), ("p99.9", 0.999), ("max", 1.0)]
+    for (label, v) in
+        [("p50", s.p50), ("p90", s.p90), ("p99", s.p99), ("p99.9", s.p999), ("max", s.max)]
     {
-        t.row(&[label.to_string(), format!("{:.2}", cdf.quantile(q))]);
+        t.row(&[label.to_string(), format!("{v:.2}")]);
     }
     let mut out = t.render();
     out.push_str(&format!(

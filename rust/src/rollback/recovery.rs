@@ -44,6 +44,7 @@ use crate::rollback::strategy::{
 use crate::sim::des::{Actor, Ctx};
 use crate::sim::msg::{AdaptMsg, Msg, RollbackMsg};
 use crate::sim::{ms, ProcId, Time, MS};
+use crate::trace::{TraceEv, TraceRef};
 
 /// High bit tagging controller deadline timers (the low bits carry the
 /// phase sequence number, so stale deadlines self-identify).
@@ -101,6 +102,8 @@ pub struct ControllerActor {
     /// emits nothing and reproduces the pre-adapt controller exactly.
     adapt: Option<ProcId>,
     metrics: Metrics,
+    /// flight recorder handle (`None` = recording off, zero overhead)
+    trace: Option<TraceRef>,
     /// stats
     pub violations_received: u64,
     pub recoveries: u64,
@@ -138,6 +141,7 @@ impl ControllerActor {
             pending_policy: None,
             adapt: None,
             metrics,
+            trace: None,
             violations_received: 0,
             recoveries: 0,
             window_log_restores: 0,
@@ -155,6 +159,24 @@ impl ControllerActor {
         self
     }
 
+    /// Attach the flight recorder ([`crate::trace`]).
+    pub fn with_trace(mut self, trace: TraceRef) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Record one recovery-phase transition on this actor's ring.
+    fn trace_phase(&self, ctx: &mut Ctx, phase: &'static str) {
+        if let Some(tr) = &self.trace {
+            tr.borrow_mut().record(
+                ctx.self_id,
+                ctx.now(),
+                ctx.event_seq(),
+                TraceEv::RecoveryPhase { epoch: self.epoch, phase },
+            );
+        }
+    }
+
     fn notify_clients(&mut self, ctx: &mut Ctx, t_violate_ms: i64) {
         for &c in &self.clients {
             ctx.send(c, Msg::Rollback(RollbackMsg::Notify { epoch: self.epoch, t_violate_ms }));
@@ -165,14 +187,19 @@ impl ControllerActor {
         self.epoch += 1;
         self.recoveries += 1;
         self.last_recovery = ctx.now();
+        if self.policy != RecoveryPolicy::None {
+            self.trace_phase(ctx, "begin");
+        }
         match self.policy {
             RecoveryPolicy::None => {}
             RecoveryPolicy::NotifyClients => {
+                self.trace_phase(ctx, "notify");
                 self.notify_clients(ctx, t_violate_ms);
                 // notify-only recovery never freezes the servers: the
                 // stall sample is 0, but the adapt controller still sees
                 // that a recovery happened
                 self.completed_recoveries += 1;
+                self.trace_phase(ctx, "done");
                 if let Some(a) = self.adapt {
                     ctx.send(a, Msg::Adapt(AdaptMsg::RecoveryDone { stall_ms: 0.0 }));
                 }
@@ -213,12 +240,14 @@ impl ControllerActor {
         for a in actions {
             match a {
                 Action::Freeze => {
+                    self.trace_phase(ctx, "freeze");
                     for &s in &self.servers {
                         ctx.send(s, Msg::Rollback(RollbackMsg::Freeze { epoch: self.epoch }));
                     }
                     self.arm_deadline(ctx);
                 }
                 Action::Restore => {
+                    self.trace_phase(ctx, "restore");
                     // restore to just before the violation started
                     let to_ms = self.pending_t_violate - 1;
                     for &s in &self.servers {
@@ -230,20 +259,24 @@ impl ControllerActor {
                     self.arm_deadline(ctx);
                 }
                 Action::Resume => {
+                    self.trace_phase(ctx, "resume");
                     for &s in &self.servers {
                         ctx.send(s, Msg::Rollback(RollbackMsg::Resume { epoch: self.epoch }));
                     }
                 }
                 Action::Reset { server } => {
+                    self.trace_phase(ctx, "reset");
                     let s = self.servers[server];
                     ctx.send(s, Msg::Rollback(RollbackMsg::Reset { epoch: self.epoch }));
                     self.arm_deadline(ctx);
                 }
                 Action::NotifyClients => {
+                    self.trace_phase(ctx, "notify");
                     let t = self.pending_t_violate;
                     self.notify_clients(ctx, t);
                 }
                 Action::Done => {
+                    self.trace_phase(ctx, "done");
                     self.active = None;
                     self.phase_seq += 1; // invalidate any in-flight deadline
                     let stall_ms = (ctx.now() - self.freeze_started) as f64 / MS as f64;
@@ -257,6 +290,7 @@ impl ControllerActor {
                     }
                 }
                 Action::Abort => {
+                    self.trace_phase(ctx, "abort");
                     self.active = None;
                     self.phase_seq += 1;
                     self.aborted_recoveries += 1;

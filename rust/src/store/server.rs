@@ -36,6 +36,7 @@ use crate::store::protocol::{ServerOp, ServerReply};
 use crate::store::ring::Router;
 use crate::store::table::Table;
 use crate::store::value::{KeyId, Versioned};
+use crate::trace::{TraceEv, TraceRef};
 
 const TAG_SNAPSHOT: u64 = 1;
 /// re-sync timeout timers carry the sync epoch in the low bits so a
@@ -100,6 +101,8 @@ pub struct ServerActor {
     cfg: ServerCfg,
     metrics: Metrics,
     controller: Option<ProcId>,
+    /// flight recorder handle (`None` = recording off, zero overhead)
+    trace: Option<TraceRef>,
     /// actor ids of every server in the cluster (incl. self), for
     /// crash-recovery re-sync
     peers: Vec<ProcId>,
@@ -153,6 +156,7 @@ impl ServerActor {
             cfg,
             metrics,
             controller,
+            trace: None,
             peers,
             crashed: false,
             recovering: false,
@@ -167,6 +171,12 @@ impl ServerActor {
             resync_keys: 0,
             resets: 0,
         }
+    }
+
+    /// Attach the flight recorder ([`crate::trace`]).
+    pub fn with_trace(mut self, trace: TraceRef) -> Self {
+        self.trace = Some(trace);
+        self
     }
 
     pub fn table(&self) -> &Table {
@@ -240,6 +250,22 @@ impl ServerActor {
                             + self.cfg.det_emit * out.candidates.len() as u64;
                         cands = out.candidates;
                     }
+                    if let Some(tr) = &self.trace {
+                        let mut tr = tr.borrow_mut();
+                        let hvc = if tr.full_payloads() {
+                            self.hvc.v.as_slice().to_vec()
+                        } else {
+                            Vec::new()
+                        };
+                        tr.record(ctx.self_id, ctx.now(), ctx.event_seq(), TraceEv::ServerApply {
+                            server: self.idx,
+                            key: key.0,
+                            req,
+                            client: from.0,
+                            pt_ms: pt,
+                            hvc,
+                        });
+                    }
                 }
                 reply = ServerReply::PutAck;
             }
@@ -254,6 +280,24 @@ impl ServerActor {
         for (dst, mut c) in cands {
             c.server = me;
             c.emitted_at = ctx.now() + delay;
+            if let Some(tr) = &self.trace {
+                let mut tr = tr.borrow_mut();
+                let keys = if tr.full_payloads() {
+                    c.values.iter().map(|(k, _)| k.0).collect()
+                } else {
+                    Vec::new()
+                };
+                tr.record(ctx.self_id, ctx.now(), ctx.event_seq(), TraceEv::CandidateEmit {
+                    server: self.idx,
+                    pred: c.pred,
+                    clause: c.clause,
+                    conjunct: c.conjunct,
+                    cseq: c.seq,
+                    start_ms: c.start_pt_ms(),
+                    end_ms: c.end_pt_ms(),
+                    keys,
+                });
+            }
             ctx.send_after(delay, dst, Msg::Candidate(Box::new(c)));
         }
         for (dst, spec) in regs {
@@ -451,6 +495,13 @@ impl Actor for ServerActor {
     }
 
     fn on_fault(&mut self, ctx: &mut Ctx, hook: FaultHook) {
+        if let Some(tr) = &self.trace {
+            let kind = match hook {
+                FaultHook::Crash => "crash",
+                FaultHook::Restart => "restart",
+            };
+            tr.borrow_mut().record(ctx.self_id, ctx.now(), ctx.event_seq(), TraceEv::Fault { kind });
+        }
         match hook {
             FaultHook::Crash => {
                 self.crashed = true;

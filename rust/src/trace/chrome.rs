@@ -1,0 +1,465 @@
+//! Chrome trace-event JSON export (Perfetto-loadable) plus the
+//! per-window adapt-signal CSV dump.
+//!
+//! Hand-rolled writer in the `util/xmlmini.rs` tradition — the crate is
+//! dependency-free, so no serde. The output follows the Trace Event
+//! Format: a `traceEvents` array of `"M"` metadata (one named track per
+//! registered actor under pid 1), `"X"` duration spans (quorum calls,
+//! recovery epochs, consistency-mode epochs), `"i"` instants
+//! (applies, candidates, violations, faults) and `"C"` counters (the
+//! adapt signal windows). Timestamps are integer microseconds of
+//! virtual time, so the writer is exactly reproducible — the golden
+//! test pins the bytes.
+
+use std::collections::HashMap;
+
+use crate::sim::Time;
+use crate::trace::{TraceEv, TraceHub};
+
+/// Escape a string into a JSON literal (no surrounding quotes).
+fn esc(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// One trace event object, fields in fixed order.
+struct EvJson {
+    name: String,
+    ph: &'static str,
+    tid: u32,
+    /// microseconds
+    ts: u64,
+    /// microseconds; only emitted for `ph == "X"`
+    dur: Option<u64>,
+    /// instant scope (`"g"` for global); only for `ph == "i"`
+    scope: Option<&'static str>,
+    /// pre-rendered JSON object body, e.g. `"key":5,"ok":true`
+    args: String,
+}
+
+impl EvJson {
+    fn render(&self, out: &mut String) {
+        out.push_str("{\"name\":\"");
+        esc(&self.name, out);
+        out.push_str(&format!("\",\"ph\":\"{}\",\"pid\":1,\"tid\":{},\"ts\":{}", self.ph, self.tid, self.ts));
+        if let Some(d) = self.dur {
+            out.push_str(&format!(",\"dur\":{d}"));
+        }
+        if let Some(s) = self.scope {
+            out.push_str(&format!(",\"s\":\"{s}\""));
+        }
+        if !self.args.is_empty() {
+            out.push_str(&format!(",\"args\":{{{}}}", self.args));
+        }
+        out.push('}');
+    }
+}
+
+fn us(t: Time) -> u64 {
+    t / 1_000
+}
+
+/// Render the merged trace as Chrome trace-event JSON.
+pub fn chrome_trace_json(hub: &TraceHub) -> String {
+    let entries = hub.entries();
+    let t_max = entries.last().map(|e| e.at).unwrap_or(0);
+    let mut evs: Vec<EvJson> = Vec::new();
+
+    // track metadata: one named thread per registered actor
+    evs.push(EvJson {
+        name: "process_name".into(),
+        ph: "M",
+        tid: 0,
+        ts: 0,
+        dur: None,
+        scope: None,
+        args: "\"name\":\"optikv\"".into(),
+    });
+    for (id, kind, idx) in hub.actors() {
+        evs.push(EvJson {
+            name: "thread_name".into(),
+            ph: "M",
+            tid: id,
+            ts: 0,
+            dur: None,
+            scope: None,
+            args: format!("\"name\":\"{} {}\"", kind.label(), idx),
+        });
+    }
+
+    // (client actor, req) → issue (at, key, put, epoch)
+    let mut issues: HashMap<(u32, u64), (Time, u32, bool, u64)> = HashMap::new();
+    // recovery epoch → begin time (on the controller's track)
+    let mut rec_begin: HashMap<u64, Time> = HashMap::new();
+    // the open consistency-mode epoch: (start, label, actor)
+    let mut mode_open: Option<(Time, String, u32)> = None;
+
+    for e in &entries {
+        match &e.ev {
+            TraceEv::ClientIssue { req, key, put, epoch, .. } => {
+                issues.insert((e.actor, *req), (e.at, *key, *put, *epoch));
+            }
+            TraceEv::ClientComplete { req, ok, latency, .. } => {
+                match issues.remove(&(e.actor, *req)) {
+                    Some((t0, key, put, epoch)) => evs.push(EvJson {
+                        name: format!("{} k{}", if put { "put" } else { "get" }, key),
+                        ph: "X",
+                        tid: e.actor,
+                        ts: us(t0),
+                        dur: Some(us(e.at.saturating_sub(t0))),
+                        scope: None,
+                        args: format!("\"req\":{req},\"epoch\":{epoch},\"ok\":{ok}"),
+                    }),
+                    None => evs.push(EvJson {
+                        name: format!("complete req {req}"),
+                        ph: "i",
+                        tid: e.actor,
+                        ts: us(e.at),
+                        dur: None,
+                        scope: Some("t"),
+                        args: format!("\"ok\":{ok},\"latency_us\":{}", us(*latency)),
+                    }),
+                }
+            }
+            TraceEv::ClientRound { req, round, .. } => evs.push(EvJson {
+                name: format!("round{round}"),
+                ph: "i",
+                tid: e.actor,
+                ts: us(e.at),
+                dur: None,
+                scope: Some("t"),
+                args: format!("\"req\":{req}"),
+            }),
+            TraceEv::ServerApply { key, req, client, pt_ms, .. } => evs.push(EvJson {
+                name: format!("apply k{key}"),
+                ph: "i",
+                tid: e.actor,
+                ts: us(e.at),
+                dur: None,
+                scope: Some("t"),
+                args: format!("\"req\":{req},\"client\":{client},\"pt_ms\":{pt_ms}"),
+            }),
+            TraceEv::CandidateEmit { pred, conjunct, cseq, start_ms, end_ms, .. } => {
+                evs.push(EvJson {
+                    name: format!("cand p{}c{conjunct}", pred.0),
+                    ph: "i",
+                    tid: e.actor,
+                    ts: us(e.at),
+                    dur: None,
+                    scope: Some("t"),
+                    args: format!("\"cseq\":{cseq},\"start_ms\":{start_ms},\"end_ms\":{end_ms}"),
+                })
+            }
+            TraceEv::MonitorBatch { candidates, violations, .. } => evs.push(EvJson {
+                name: "batch".into(),
+                ph: "i",
+                tid: e.actor,
+                ts: us(e.at),
+                dur: None,
+                scope: Some("t"),
+                args: format!("\"candidates\":{candidates},\"violations\":{violations}"),
+            }),
+            TraceEv::Violation { name, witnesses, t_violate_ms, t_occurred_ms, .. } => {
+                evs.push(EvJson {
+                    name: format!("violation {name}"),
+                    ph: "i",
+                    tid: e.actor,
+                    ts: us(e.at),
+                    dur: None,
+                    scope: Some("g"),
+                    args: format!(
+                        "\"witnesses\":{},\"t_violate_ms\":{t_violate_ms},\"t_occurred_ms\":{t_occurred_ms}",
+                        witnesses.len()
+                    ),
+                })
+            }
+            TraceEv::RecoveryPhase { epoch, phase } => {
+                evs.push(EvJson {
+                    name: format!("recovery:{phase}"),
+                    ph: "i",
+                    tid: e.actor,
+                    ts: us(e.at),
+                    dur: None,
+                    scope: Some("t"),
+                    args: format!("\"epoch\":{epoch}"),
+                });
+                match *phase {
+                    "begin" => {
+                        rec_begin.insert(*epoch, e.at);
+                    }
+                    "done" | "abort" => {
+                        if let Some(t0) = rec_begin.remove(epoch) {
+                            evs.push(EvJson {
+                                name: format!("recovery e{epoch}"),
+                                ph: "X",
+                                tid: e.actor,
+                                ts: us(t0),
+                                dur: Some(us(e.at.saturating_sub(t0))),
+                                scope: None,
+                                args: format!("\"outcome\":\"{phase}\""),
+                            });
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            TraceEv::ModeSwitch { epoch, from, to } => {
+                if let Some((t0, label, tid)) = mode_open.take() {
+                    evs.push(EvJson {
+                        name: format!("mode {label}"),
+                        ph: "X",
+                        tid,
+                        ts: us(t0),
+                        dur: Some(us(e.at.saturating_sub(t0))),
+                        scope: None,
+                        args: String::new(),
+                    });
+                }
+                evs.push(EvJson {
+                    name: format!("switch {from}->{to}"),
+                    ph: "i",
+                    tid: e.actor,
+                    ts: us(e.at),
+                    dur: None,
+                    scope: Some("t"),
+                    args: format!("\"epoch\":{epoch}"),
+                });
+                mode_open = Some((e.at, (*to).to_string(), e.actor));
+            }
+            TraceEv::AdaptWindow { ops, timeouts, violations, stall_ms, .. } => {
+                evs.push(EvJson {
+                    name: "adapt-signals".into(),
+                    ph: "C",
+                    tid: e.actor,
+                    ts: us(e.at),
+                    dur: None,
+                    scope: None,
+                    args: format!(
+                        "\"ops\":{ops},\"timeouts\":{timeouts},\"violations\":{violations},\"stall_ms\":{stall_ms}"
+                    ),
+                })
+            }
+            TraceEv::Fault { kind } => evs.push(EvJson {
+                name: (*kind).into(),
+                ph: "i",
+                tid: e.actor,
+                ts: us(e.at),
+                dur: None,
+                scope: Some("g"),
+                args: String::new(),
+            }),
+        }
+    }
+    // close the final consistency-mode epoch at the trace horizon
+    if let Some((t0, label, tid)) = mode_open {
+        evs.push(EvJson {
+            name: format!("mode {label}"),
+            ph: "X",
+            tid,
+            ts: us(t0),
+            dur: Some(us(t_max.saturating_sub(t0))),
+            scope: None,
+            args: String::new(),
+        });
+    }
+
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, ev) in evs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('\n');
+        ev.render(&mut out);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// The per-window adapt-signal time series as CSV — every input the
+/// controller's policy consumed, one row per closed window.
+pub fn signals_csv(hub: &TraceHub) -> String {
+    let mut out = String::from(
+        "at_ms,ops,timeouts,violations,stall_ms,lat_p99_ms,detect_ms_sum,detect_n,span_ms\n",
+    );
+    for e in hub.entries() {
+        let TraceEv::AdaptWindow {
+            ops,
+            timeouts,
+            violations,
+            stall_ms,
+            lat_p99_ms,
+            detect_ms_sum,
+            detect_n,
+            span_ms,
+        } = e.ev
+        else {
+            continue;
+        };
+        out.push_str(&format!(
+            "{},{ops},{timeouts},{violations},{stall_ms},{lat_p99_ms:.3},{detect_ms_sum:.3},{detect_n},{span_ms}\n",
+            e.at / crate::sim::MS
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predicate::spec::PredId;
+    use crate::sim::{ProcId, MS};
+    use crate::trace::{ActorKind, TraceCfg, TraceWitness};
+
+    /// The golden hub: one quorum call, one apply + candidate, one
+    /// violation, one adapt window — every writer branch that renders
+    /// instants, spans and counters.
+    fn golden_hub() -> TraceHub {
+        let hub = crate::trace::TraceHub::new(TraceCfg::full(64));
+        {
+            let mut h = hub.borrow_mut();
+            h.register(ProcId(0), ActorKind::Server, 0);
+            h.register(ProcId(2), ActorKind::Monitor, 0);
+            h.register(ProcId(4), ActorKind::Client, 0);
+            h.register(ProcId(6), ActorKind::Adapt, 0);
+            h.record(
+                ProcId(4),
+                10 * MS,
+                1,
+                TraceEv::ClientIssue { client: 0, req: 7, key: 5, put: true, epoch: 0 },
+            );
+            h.record(
+                ProcId(0),
+                12 * MS,
+                2,
+                TraceEv::ServerApply {
+                    server: 0,
+                    key: 5,
+                    req: 7,
+                    client: 4,
+                    pt_ms: 12,
+                    hvc: vec![12, 0],
+                },
+            );
+            h.record(
+                ProcId(0),
+                12 * MS,
+                2,
+                TraceEv::CandidateEmit {
+                    server: 0,
+                    pred: PredId(0),
+                    clause: 0,
+                    conjunct: 0,
+                    cseq: 0,
+                    start_ms: 12,
+                    end_ms: 12,
+                    keys: vec![5],
+                },
+            );
+            h.record(
+                ProcId(4),
+                15 * MS,
+                3,
+                TraceEv::ClientComplete { client: 0, req: 7, ok: true, latency: 5 * MS },
+            );
+            h.record(
+                ProcId(2),
+                20 * MS,
+                4,
+                TraceEv::Violation {
+                    pred: PredId(0),
+                    name: "me_1_2".into(),
+                    clause: 0,
+                    witnesses: vec![TraceWitness { server: 0, cseq: 0, start_ms: 12, end_ms: 12 }],
+                    t_violate_ms: 12,
+                    t_occurred_ms: 12,
+                },
+            );
+            h.record(
+                ProcId(6),
+                30 * MS,
+                5,
+                TraceEv::AdaptWindow {
+                    ops: 9,
+                    timeouts: 1,
+                    violations: 1,
+                    stall_ms: 0,
+                    lat_p99_ms: 4.5,
+                    detect_ms_sum: 8.0,
+                    detect_n: 1,
+                    span_ms: 1000,
+                },
+            );
+        }
+        std::rc::Rc::try_unwrap(hub).unwrap().into_inner()
+    }
+
+    /// Byte-exact golden for the writer — the seeded hub is built by
+    /// hand, so this pins the format itself, not a simulation.
+    #[test]
+    fn golden_chrome_json() {
+        let expected = concat!(
+            "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n",
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\"ts\":0,\"args\":{\"name\":\"optikv\"}},\n",
+            "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\"ts\":0,\"args\":{\"name\":\"server 0\"}},\n",
+            "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":2,\"ts\":0,\"args\":{\"name\":\"monitor 0\"}},\n",
+            "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":4,\"ts\":0,\"args\":{\"name\":\"client 0\"}},\n",
+            "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":6,\"ts\":0,\"args\":{\"name\":\"adapt 0\"}},\n",
+            "{\"name\":\"apply k5\",\"ph\":\"i\",\"pid\":1,\"tid\":0,\"ts\":12000,\"s\":\"t\",\"args\":{\"req\":7,\"client\":4,\"pt_ms\":12}},\n",
+            "{\"name\":\"cand p0c0\",\"ph\":\"i\",\"pid\":1,\"tid\":0,\"ts\":12000,\"s\":\"t\",\"args\":{\"cseq\":0,\"start_ms\":12,\"end_ms\":12}},\n",
+            "{\"name\":\"put k5\",\"ph\":\"X\",\"pid\":1,\"tid\":4,\"ts\":10000,\"dur\":5000,\"args\":{\"req\":7,\"epoch\":0,\"ok\":true}},\n",
+            "{\"name\":\"violation me_1_2\",\"ph\":\"i\",\"pid\":1,\"tid\":2,\"ts\":20000,\"s\":\"g\",\"args\":{\"witnesses\":1,\"t_violate_ms\":12,\"t_occurred_ms\":12}},\n",
+            "{\"name\":\"adapt-signals\",\"ph\":\"C\",\"pid\":1,\"tid\":6,\"ts\":30000,\"args\":{\"ops\":9,\"timeouts\":1,\"violations\":1,\"stall_ms\":0}}\n",
+            "]}\n"
+        );
+        assert_eq!(chrome_trace_json(&golden_hub()), expected);
+    }
+
+    #[test]
+    fn signals_csv_rows() {
+        let csv = signals_csv(&golden_hub());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("at_ms,ops,"));
+        assert_eq!(lines[1], "30,9,1,1,0,4.500,8.000,1,1000");
+    }
+
+    #[test]
+    fn mode_and_recovery_spans_pair_up() {
+        let hub = crate::trace::TraceHub::new(TraceCfg::ring(64));
+        {
+            let mut h = hub.borrow_mut();
+            h.record(
+                ProcId(6),
+                5 * MS,
+                1,
+                TraceEv::ModeSwitch { epoch: 1, from: "eventual", to: "sequential" },
+            );
+            h.record(ProcId(5), 10 * MS, 2, TraceEv::RecoveryPhase { epoch: 1, phase: "begin" });
+            h.record(ProcId(5), 11 * MS, 3, TraceEv::RecoveryPhase { epoch: 1, phase: "freeze" });
+            h.record(ProcId(5), 18 * MS, 4, TraceEv::RecoveryPhase { epoch: 1, phase: "done" });
+            h.record(
+                ProcId(6),
+                25 * MS,
+                5,
+                TraceEv::ModeSwitch { epoch: 2, from: "sequential", to: "eventual" },
+            );
+            h.record(ProcId(0), 40 * MS, 6, TraceEv::Fault { kind: "crash" });
+        }
+        let hub = std::rc::Rc::try_unwrap(hub).unwrap().into_inner();
+        let json = chrome_trace_json(&hub);
+        assert!(json.contains("\"name\":\"mode sequential\",\"ph\":\"X\",\"pid\":1,\"tid\":6,\"ts\":5000,\"dur\":20000"), "{json}");
+        assert!(json.contains("\"name\":\"recovery e1\",\"ph\":\"X\",\"pid\":1,\"tid\":5,\"ts\":10000,\"dur\":8000"), "{json}");
+        // the trailing mode epoch closes at the trace horizon (40ms)
+        assert!(json.contains("\"name\":\"mode eventual\",\"ph\":\"X\",\"pid\":1,\"tid\":6,\"ts\":25000,\"dur\":15000"), "{json}");
+        assert!(json.contains("\"name\":\"crash\",\"ph\":\"i\""));
+    }
+}

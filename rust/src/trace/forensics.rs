@@ -1,0 +1,414 @@
+//! Violation forensics: walk the flight recorder backward from each
+//! recorded violation to the minimal causal chain that produced it
+//! (DESIGN.md §14).
+//!
+//! The walk follows the identity links the recorder stamps on every
+//! event:
+//!
+//! 1. a [`TraceEv::Violation`] names its witness candidates by
+//!    `(server actor, cseq)`;
+//! 2. each witness's [`TraceEv::CandidateEmit`] (on the owning server's
+//!    ring) carries the conjunct's variable keys;
+//! 3. for each key, the **guilty write** is the latest
+//!    [`TraceEv::ServerApply`] on that server at or before the
+//!    candidate's dispatch key — the PUT whose post-state made the
+//!    conjunct hold during the certified interval;
+//! 4. the apply's `(client, req)` link names the client call that issued
+//!    the write.
+//!
+//! The monitor's certificate itself is reproduced as the physical
+//! interval overlap `[max start, min end]` across the witnesses — the
+//! pairwise-concurrency evidence the detection was based on.
+//!
+//! Guilty-write resolution needs forensics-grade payloads
+//! ([`crate::trace::TraceMode::Full`]): under `Ring` the candidate
+//! events carry no key lists and every chain is empty (identity-only
+//! flight recording is for overhead runs, not debugging).
+
+use std::collections::HashMap;
+
+use crate::clock::hvc::Millis;
+use crate::sim::Time;
+use crate::trace::{TraceEntry, TraceEv, TraceHub};
+use crate::util::stats::Cdf;
+
+/// A write the walk holds responsible for one witness interval.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GuiltyWrite {
+    pub server: u16,
+    pub key: u32,
+    /// wire request id of the write
+    pub req: u64,
+    /// actor id of the writing client
+    pub client: u32,
+    /// dispatch time of the apply
+    pub at: Time,
+    /// server physical time of the apply (ms)
+    pub pt_ms: Millis,
+}
+
+/// One witness candidate resolved back to its writes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WitnessChain {
+    /// actor id of the emitting server
+    pub server_actor: u32,
+    pub server: u16,
+    pub cseq: u64,
+    /// physical candidate interval at the owning server (ms)
+    pub interval: (Millis, Millis),
+    /// the conjunct's variable keys (empty under identity-only tracing)
+    pub keys: Vec<u32>,
+    pub writes: Vec<GuiltyWrite>,
+}
+
+/// The reconstructed causal chain of one violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CausalChain {
+    /// dispatch key of the monitor flush that certified it
+    pub at: Time,
+    pub seq: u64,
+    pub pred_name: String,
+    pub clause: u16,
+    pub t_violate_ms: Millis,
+    pub t_occurred_ms: Millis,
+    /// the certified physical interval overlap `[max start, min end]`
+    /// across witnesses — the monitor's concurrency evidence
+    pub overlap: (Millis, Millis),
+    pub witnesses: Vec<WitnessChain>,
+}
+
+impl CausalChain {
+    /// Total guilty writes named across witnesses.
+    pub fn n_writes(&self) -> usize {
+        self.witnesses.iter().map(|w| w.writes.len()).sum()
+    }
+
+    /// A chain is empty when the walk could not tie a single write to
+    /// the violation — the `optikv trace` failure condition.
+    pub fn is_empty(&self) -> bool {
+        self.n_writes() == 0
+    }
+
+    /// ms from the earliest guilty write to the certifying flush.
+    pub fn depth_ms(&self) -> f64 {
+        let first = self
+            .witnesses
+            .iter()
+            .flat_map(|w| w.writes.iter().map(|g| g.at))
+            .min();
+        match first {
+            Some(t) => (self.at.saturating_sub(t)) as f64 / crate::sim::MS as f64,
+            None => 0.0,
+        }
+    }
+}
+
+/// The forensics report over one recorded run.
+#[derive(Debug, Clone, Default)]
+pub struct Forensics {
+    pub chains: Vec<CausalChain>,
+}
+
+impl Forensics {
+    /// Reconstruct every recorded violation's causal chain from the
+    /// merged trace.
+    pub fn walk(hub: &TraceHub) -> Self {
+        let entries = hub.entries();
+        // (server actor, cseq) → candidate entry index
+        let mut cand_ix: HashMap<(u32, u64), usize> = HashMap::new();
+        // (server actor, key) → apply entry indices, in dispatch order
+        let mut applies: HashMap<(u32, u32), Vec<usize>> = HashMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            match &e.ev {
+                TraceEv::CandidateEmit { cseq, .. } => {
+                    cand_ix.insert((e.actor, *cseq), i);
+                }
+                TraceEv::ServerApply { key, .. } => {
+                    applies.entry((e.actor, *key)).or_default().push(i);
+                }
+                _ => {}
+            }
+        }
+
+        let mut chains = Vec::new();
+        for e in &entries {
+            let TraceEv::Violation { name, clause, witnesses, t_violate_ms, t_occurred_ms, .. } =
+                &e.ev
+            else {
+                continue;
+            };
+            let overlap = (
+                witnesses.iter().map(|w| w.start_ms).max().unwrap_or(0),
+                witnesses.iter().map(|w| w.end_ms).min().unwrap_or(0),
+            );
+            let mut wchains = Vec::with_capacity(witnesses.len());
+            for w in witnesses {
+                let mut chain = WitnessChain {
+                    server_actor: w.server,
+                    server: 0,
+                    cseq: w.cseq,
+                    interval: (w.start_ms, w.end_ms),
+                    keys: Vec::new(),
+                    writes: Vec::new(),
+                };
+                if let Some(&ci) = cand_ix.get(&(w.server, w.cseq)) {
+                    let cand = &entries[ci];
+                    if let TraceEv::CandidateEmit { server, keys, .. } = &cand.ev {
+                        chain.server = *server;
+                        chain.keys = keys.clone();
+                        for &key in keys {
+                            if let Some(g) =
+                                latest_apply_before(&entries, &applies, w.server, key, cand)
+                            {
+                                if !chain.writes.contains(&g) {
+                                    chain.writes.push(g);
+                                }
+                            }
+                        }
+                    }
+                }
+                wchains.push(chain);
+            }
+            chains.push(CausalChain {
+                at: e.at,
+                seq: e.seq,
+                pred_name: name.clone(),
+                clause: *clause,
+                t_violate_ms: *t_violate_ms,
+                t_occurred_ms: *t_occurred_ms,
+                overlap,
+                witnesses: wchains,
+            });
+        }
+        Self { chains }
+    }
+
+    pub fn empty_chains(&self) -> usize {
+        self.chains.iter().filter(|c| c.is_empty()).count()
+    }
+
+    /// Human-readable report: one block per violation plus the
+    /// write-to-certification depth ladder
+    /// ([`crate::util::stats::Cdf::summary`]).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "forensics: {} violation(s), {} with an empty causal chain\n",
+            self.chains.len(),
+            self.empty_chains()
+        ));
+        for (i, c) in self.chains.iter().enumerate() {
+            out.push_str(&format!(
+                "[{i}] {} clause {} at t={:.3}ms (seq {}) overlap=[{}, {}]ms \
+                 t_violate={}ms t_occurred={}ms\n",
+                c.pred_name,
+                c.clause,
+                c.at as f64 / crate::sim::MS as f64,
+                c.seq,
+                c.overlap.0,
+                c.overlap.1,
+                c.t_violate_ms,
+                c.t_occurred_ms
+            ));
+            for w in &c.witnesses {
+                out.push_str(&format!(
+                    "    witness server {} (actor {}) cseq {} interval [{}, {}]ms\n",
+                    w.server, w.server_actor, w.cseq, w.interval.0, w.interval.1
+                ));
+                for g in &w.writes {
+                    out.push_str(&format!(
+                        "        guilty write: key {} req {} by client actor {} \
+                         applied at {:.3}ms (pt {}ms)\n",
+                        g.key,
+                        g.req,
+                        g.client,
+                        g.at as f64 / crate::sim::MS as f64,
+                        g.pt_ms
+                    ));
+                }
+                if w.writes.is_empty() {
+                    out.push_str("        (no write resolved — chain incomplete)\n");
+                }
+            }
+        }
+        let depths = Cdf::new(
+            self.chains.iter().filter(|c| !c.is_empty()).map(|c| c.depth_ms()).collect(),
+        );
+        out.push_str(&format!("write-to-certification depth: {}\n", depths.summary().render("ms")));
+        out
+    }
+}
+
+/// The latest `ServerApply` of `key` on `server_actor` whose dispatch
+/// key is at or before the candidate's — the write the interval's
+/// post-state came from.
+fn latest_apply_before(
+    entries: &[TraceEntry],
+    applies: &HashMap<(u32, u32), Vec<usize>>,
+    server_actor: u32,
+    key: u32,
+    cand: &TraceEntry,
+) -> Option<GuiltyWrite> {
+    let ix = applies.get(&(server_actor, key))?;
+    // entries are (at, seq)-sorted, so the per-key index lists are too
+    let pos = ix.partition_point(|&i| (entries[i].at, entries[i].seq) <= (cand.at, cand.seq));
+    if pos == 0 {
+        return None;
+    }
+    let e = &entries[ix[pos - 1]];
+    let TraceEv::ServerApply { server, key, req, client, pt_ms, .. } = &e.ev else {
+        return None;
+    };
+    Some(GuiltyWrite {
+        server: *server,
+        key: *key,
+        req: *req,
+        client: *client,
+        at: e.at,
+        pt_ms: *pt_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predicate::spec::PredId;
+    use crate::sim::{ProcId, MS};
+    use crate::trace::{TraceCfg, TraceWitness};
+
+    /// Hand-seeded hub: client 20 writes key 5 to server 0 (actor 0) and
+    /// client 21 writes key 6 to server 1 (actor 1); both applies spawn
+    /// candidates whose overlap the monitor (actor 10) certifies.
+    fn seeded_hub() -> TraceHub {
+        let hub = crate::trace::TraceHub::new(TraceCfg::full(64));
+        let mut h = hub.borrow_mut();
+        h.record(
+            ProcId(0),
+            100 * MS,
+            1,
+            TraceEv::ServerApply { server: 0, key: 5, req: 40, client: 20, pt_ms: 100, hvc: vec![] },
+        );
+        h.record(
+            ProcId(0),
+            100 * MS,
+            1,
+            TraceEv::CandidateEmit {
+                server: 0,
+                pred: PredId(0),
+                clause: 0,
+                conjunct: 0,
+                cseq: 0,
+                start_ms: 100,
+                end_ms: 100,
+                keys: vec![5],
+            },
+        );
+        // an even older apply of key 5 must NOT be blamed
+        h.record(
+            ProcId(0),
+            50 * MS,
+            0,
+            TraceEv::ServerApply { server: 0, key: 5, req: 39, client: 20, pt_ms: 50, hvc: vec![] },
+        );
+        h.record(
+            ProcId(1),
+            105 * MS,
+            2,
+            TraceEv::ServerApply { server: 1, key: 6, req: 41, client: 21, pt_ms: 105, hvc: vec![] },
+        );
+        h.record(
+            ProcId(1),
+            105 * MS,
+            2,
+            TraceEv::CandidateEmit {
+                server: 1,
+                pred: PredId(0),
+                clause: 0,
+                conjunct: 1,
+                cseq: 0,
+                start_ms: 105,
+                end_ms: 110,
+                keys: vec![6],
+            },
+        );
+        h.record(
+            ProcId(10),
+            120 * MS,
+            3,
+            TraceEv::Violation {
+                pred: PredId(0),
+                name: "me_1_2".into(),
+                clause: 0,
+                witnesses: vec![
+                    TraceWitness { server: 0, cseq: 0, start_ms: 100, end_ms: 100 },
+                    TraceWitness { server: 1, cseq: 0, start_ms: 105, end_ms: 110 },
+                ],
+                t_violate_ms: 100,
+                t_occurred_ms: 105,
+            },
+        );
+        drop(h);
+        Rc::try_unwrap(hub).unwrap().into_inner()
+    }
+
+    use std::rc::Rc;
+
+    #[test]
+    fn walk_names_the_true_guilty_writes() {
+        let f = Forensics::walk(&seeded_hub());
+        assert_eq!(f.chains.len(), 1);
+        assert_eq!(f.empty_chains(), 0);
+        let c = &f.chains[0];
+        assert_eq!(c.pred_name, "me_1_2");
+        assert_eq!(c.overlap, (105, 100), "max start / min end");
+        assert_eq!(c.n_writes(), 2);
+        let w0 = &c.witnesses[0].writes[0];
+        assert_eq!((w0.key, w0.req, w0.client), (5, 40, 20), "latest apply, not the older one");
+        let w1 = &c.witnesses[1].writes[0];
+        assert_eq!((w1.key, w1.req, w1.client), (6, 41, 21));
+        assert!((c.depth_ms() - 20.0).abs() < 1e-9, "violation at 120ms, first write at 100ms");
+        let txt = f.render();
+        assert!(txt.contains("guilty write: key 5 req 40 by client actor 20"), "{txt}");
+        assert!(txt.contains("0 with an empty causal chain"), "{txt}");
+    }
+
+    #[test]
+    fn identity_only_trace_yields_empty_chains() {
+        // same shape but Ring mode: candidates carry no keys
+        let hub = crate::trace::TraceHub::new(TraceCfg::ring(64));
+        let mut h = hub.borrow_mut();
+        h.record(
+            ProcId(0),
+            100 * MS,
+            1,
+            TraceEv::CandidateEmit {
+                server: 0,
+                pred: PredId(0),
+                clause: 0,
+                conjunct: 0,
+                cseq: 0,
+                start_ms: 100,
+                end_ms: 100,
+                keys: vec![],
+            },
+        );
+        h.record(
+            ProcId(10),
+            120 * MS,
+            2,
+            TraceEv::Violation {
+                pred: PredId(0),
+                name: "me_1_2".into(),
+                clause: 0,
+                witnesses: vec![TraceWitness { server: 0, cseq: 0, start_ms: 100, end_ms: 100 }],
+                t_violate_ms: 100,
+                t_occurred_ms: 100,
+            },
+        );
+        drop(h);
+        let hub = Rc::try_unwrap(hub).unwrap().into_inner();
+        let f = Forensics::walk(&hub);
+        assert_eq!(f.chains.len(), 1);
+        assert_eq!(f.empty_chains(), 1);
+    }
+}

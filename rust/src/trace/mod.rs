@@ -1,0 +1,465 @@
+//! Deterministic flight recorder (DESIGN.md §14).
+//!
+//! A per-actor bounded ring buffer of typed [`TraceEv`]s, each stamped
+//! with the engine-invariant `(at, seq)` dispatch key
+//! ([`crate::sim::des::Ctx::event_seq`]). Because every event is recorded
+//! on the ring of the actor whose dispatch produced it, and an actor's
+//! dispatch stream is identical across the serial, merged-order sharded
+//! and threaded engines, the merged trace is **bit-identical across all
+//! three engines** at every shard count: per-shard hubs are harvested as
+//! plain data and their rings unioned (each actor lives on exactly one
+//! shard), and [`TraceHub::entries`] stable-sorts the union by
+//! `(at, seq)` — the exact order a serial run records them in.
+//!
+//! [`TraceCfg::off`] is the inert default, following the
+//! `WorkloadCfg::uniform_default` / `AdaptCfg::static_default` pattern:
+//! actors hold `Option<TraceRef>` = `None`, so a disabled recorder does
+//! zero allocations, draws zero RNG values, sends zero messages and is
+//! digest-pinned identical to pre-trace builds (enforced by
+//! `rust/tests/trace_determinism.rs`).
+//!
+//! The recorder never adds messages or timers — it is a pure side
+//! channel like [`crate::metrics::throughput::MetricsHub`], so
+//! `N_MSG_CLASSES` and every event schedule stay untouched even when
+//! recording is on.
+//!
+//! Submodules: [`forensics`] walks a recorded violation back through HVC
+//! causality to the guilty writes; [`chrome`] exports the merged trace
+//! as Chrome trace-event JSON (Perfetto-loadable) and the per-window
+//! adapt-signal time series as CSV.
+
+pub mod chrome;
+pub mod forensics;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::clock::hvc::Millis;
+use crate::predicate::spec::PredId;
+use crate::sim::{ProcId, Time};
+
+/// How much the recorder captures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    /// inert: no hub is built, actors hold no handle
+    Off,
+    /// bounded rings of identity-only events (no HVC snapshots, no key
+    /// lists) — the low-overhead always-on flavour
+    Ring,
+    /// forensics-grade payloads: server applies carry their HVC
+    /// snapshot, candidates carry their variable keys — what the
+    /// causal-chain walk needs
+    Full,
+}
+
+/// Recorder configuration. [`TraceCfg::off`] must stay the inert
+/// default of [`crate::exp::config::ExpConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCfg {
+    pub mode: TraceMode,
+    /// per-actor ring capacity in events (oldest events overwrite first)
+    pub ring_cap: usize,
+}
+
+impl TraceCfg {
+    /// The inert default: no recorder, bit-identical to pre-trace runs.
+    pub fn off() -> Self {
+        Self { mode: TraceMode::Off, ring_cap: 0 }
+    }
+
+    /// Identity-only events in rings of `cap` per actor.
+    pub fn ring(cap: usize) -> Self {
+        Self { mode: TraceMode::Ring, ring_cap: cap }
+    }
+
+    /// Forensics-grade payloads in rings of `cap` per actor.
+    pub fn full(cap: usize) -> Self {
+        Self { mode: TraceMode::Full, ring_cap: cap }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.mode != TraceMode::Off
+    }
+
+    pub fn full_payloads(&self) -> bool {
+        self.mode == TraceMode::Full
+    }
+
+    pub fn validate(&self) {
+        if self.enabled() {
+            assert!(self.ring_cap > 0, "bad trace config: ring capacity must be positive");
+        }
+    }
+}
+
+/// What kind of actor a ring belongs to (set at world build; drives the
+/// export's track naming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActorKind {
+    Server,
+    Monitor,
+    Client,
+    Controller,
+    Adapt,
+}
+
+impl ActorKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ActorKind::Server => "server",
+            ActorKind::Monitor => "monitor",
+            ActorKind::Client => "client",
+            ActorKind::Controller => "controller",
+            ActorKind::Adapt => "adapt",
+        }
+    }
+}
+
+/// Witness identity inside a recorded violation: enough to find the
+/// matching [`TraceEv::CandidateEmit`] on the owning server's ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceWitness {
+    /// actor id of the emitting server (the ring key)
+    pub server: u32,
+    /// the candidate's per-server monotone sequence number
+    pub cseq: u64,
+    /// physical interval of the candidate at the owning server (ms)
+    pub start_ms: Millis,
+    pub end_ms: Millis,
+}
+
+/// One typed recorder event. Identity fields are always present; the
+/// payload fields marked *(full)* are empty under [`TraceMode::Ring`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEv {
+    /// a client opened a quorum call
+    ClientIssue {
+        client: u32,
+        req: u64,
+        key: u32,
+        /// true for PUT-shaped ops (PUT / GET_VERSION→PUT chains)
+        put: bool,
+        /// consistency epoch the call was issued under
+        epoch: u64,
+    },
+    /// a quorum round was (re)sent — round 2 is the serial fallback
+    ClientRound {
+        client: u32,
+        req: u64,
+        round: u8,
+    },
+    /// a quorum call finished
+    ClientComplete {
+        client: u32,
+        req: u64,
+        ok: bool,
+        latency: Time,
+    },
+    /// a server applied a PUT that changed its table
+    ServerApply {
+        server: u16,
+        key: u32,
+        /// wire request id of the write (links back to the client call)
+        req: u64,
+        /// actor id of the writing client
+        client: u32,
+        /// server physical time of the apply (ms)
+        pt_ms: Millis,
+        /// *(full)* the server's HVC snapshot after the apply
+        hvc: Vec<Millis>,
+    },
+    /// the local detector emitted a candidate interval
+    CandidateEmit {
+        server: u16,
+        pred: PredId,
+        clause: u16,
+        conjunct: u16,
+        cseq: u64,
+        start_ms: Millis,
+        end_ms: Millis,
+        /// *(full)* the conjunct's variable keys carried by the candidate
+        keys: Vec<u32>,
+    },
+    /// a monitor flushed one candidate batch (its verdict summary)
+    MonitorBatch {
+        monitor: u16,
+        candidates: u64,
+        violations: u64,
+    },
+    /// a monitor certified a pairwise-concurrent witness tuple
+    Violation {
+        pred: PredId,
+        name: String,
+        clause: u16,
+        witnesses: Vec<TraceWitness>,
+        t_violate_ms: Millis,
+        t_occurred_ms: Millis,
+    },
+    /// the rollback controller moved through a recovery phase
+    RecoveryPhase {
+        /// recovery epoch (0 for the inline notify-only path)
+        epoch: u64,
+        /// phase name: "begin", "freeze", "restore", "resume", "reset",
+        /// "notify", "done", "abort"
+        phase: &'static str,
+    },
+    /// the adapt controller switched the cluster's consistency mode
+    ModeSwitch {
+        epoch: u64,
+        from: &'static str,
+        to: &'static str,
+    },
+    /// one closed adapt signal window — the exact inputs the controller's
+    /// policy consumed (PCAP-style inspectability)
+    AdaptWindow {
+        ops: u64,
+        timeouts: u64,
+        violations: u64,
+        stall_ms: u64,
+        lat_p99_ms: f64,
+        detect_ms_sum: f64,
+        detect_n: u64,
+        span_ms: u64,
+    },
+    /// a fault-timeline transition hit this actor
+    Fault {
+        /// "crash" or "restart"
+        kind: &'static str,
+    },
+}
+
+/// One recorded entry: the dispatch key plus the recording actor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    pub at: Time,
+    pub seq: u64,
+    pub actor: u32,
+    pub ev: TraceEv,
+}
+
+/// Bounded per-actor ring. Events are appended in the actor's dispatch
+/// order (engine-invariant); once full, the oldest event is overwritten.
+/// Because each ring belongs to exactly one actor, drops are themselves
+/// deterministic and engine-invariant.
+#[derive(Debug, Clone, PartialEq)]
+struct Ring {
+    cap: usize,
+    buf: Vec<TraceEntry>,
+    /// index of the oldest entry once the ring wrapped
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Self { cap, buf: Vec::new(), head: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, e: TraceEntry) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Entries oldest → newest.
+    fn iter_ordered(&self) -> impl Iterator<Item = &TraceEntry> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+}
+
+/// The flight recorder: per-actor rings plus the actor registry. Plain
+/// data (`Clone + Send`) so the threaded engine harvests per-shard hubs
+/// exactly like [`crate::metrics::throughput::MetricsHub`].
+#[derive(Debug, Clone)]
+pub struct TraceHub {
+    cfg: TraceCfg,
+    /// actor id → ring (BTreeMap: deterministic iteration)
+    rings: BTreeMap<u32, Ring>,
+    /// actor id → (kind, index within kind)
+    actors: BTreeMap<u32, (ActorKind, u32)>,
+    /// events recorded (before ring eviction)
+    pub recorded: u64,
+}
+
+/// Shared recorder handle, cloned into every actor at world build —
+/// the shared-hub pattern of [`crate::metrics::throughput::Metrics`].
+pub type TraceRef = Rc<RefCell<TraceHub>>;
+
+impl TraceHub {
+    pub fn new(cfg: TraceCfg) -> TraceRef {
+        cfg.validate();
+        assert!(cfg.enabled(), "an Off recorder must not be built — pass None instead");
+        Rc::new(RefCell::new(Self {
+            cfg,
+            rings: BTreeMap::new(),
+            actors: BTreeMap::new(),
+            recorded: 0,
+        }))
+    }
+
+    pub fn cfg(&self) -> TraceCfg {
+        self.cfg
+    }
+
+    /// Does this hub capture forensics-grade payloads?
+    pub fn full_payloads(&self) -> bool {
+        self.cfg.full_payloads()
+    }
+
+    /// Declare an actor (called at world build for hosted actors only,
+    /// so per-shard registries stay disjoint and merge cleanly).
+    pub fn register(&mut self, id: ProcId, kind: ActorKind, idx: u32) {
+        self.actors.insert(id.0, (kind, idx));
+    }
+
+    pub fn actor_kind(&self, id: u32) -> Option<(ActorKind, u32)> {
+        self.actors.get(&id).copied()
+    }
+
+    pub fn actors(&self) -> impl Iterator<Item = (u32, ActorKind, u32)> + '_ {
+        self.actors.iter().map(|(&id, &(k, i))| (id, k, i))
+    }
+
+    /// Record one event on `actor`'s ring, stamped with its dispatch key.
+    pub fn record(&mut self, actor: ProcId, at: Time, seq: u64, ev: TraceEv) {
+        self.recorded += 1;
+        let cap = self.cfg.ring_cap;
+        self.rings
+            .entry(actor.0)
+            .or_insert_with(|| Ring::new(cap))
+            .push(TraceEntry { at, seq, actor: actor.0, ev });
+    }
+
+    /// Events evicted by ring wraps, across all rings.
+    pub fn dropped(&self) -> u64 {
+        self.rings.values().map(|r| r.dropped).sum()
+    }
+
+    /// Retained events across all rings.
+    pub fn len(&self) -> usize {
+        self.rings.values().map(|r| r.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Union a per-shard hub into this one (threaded engine, shards in
+    /// shard order). Each actor is hosted by exactly one shard, so rings
+    /// and registry entries are key-disjoint; ragged overlap would mean
+    /// a layout bug and trips the assert.
+    pub fn merge(&mut self, other: &TraceHub) {
+        assert_eq!(self.cfg, other.cfg, "hubs must share a trace config");
+        for (&id, ring) in &other.rings {
+            let prev = self.rings.insert(id, ring.clone());
+            assert!(prev.is_none(), "actor {id} recorded on two shards");
+        }
+        for (&id, &meta) in &other.actors {
+            self.actors.insert(id, meta);
+        }
+        self.recorded += other.recorded;
+    }
+
+    /// The merged trace: all rings flattened and stable-sorted by the
+    /// `(at, seq)` dispatch key — the global recording order, identical
+    /// across engines. Ties (several events from one dispatch) keep
+    /// their within-ring order; a dispatch key is globally unique, so
+    /// ties never span rings.
+    pub fn entries(&self) -> Vec<TraceEntry> {
+        let mut all: Vec<TraceEntry> =
+            self.rings.values().flat_map(|r| r.iter_ordered().cloned()).collect();
+        all.sort_by_key(|e| (e.at, e.seq));
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(n: u64) -> TraceEv {
+        TraceEv::ClientRound { client: 0, req: n, round: 1 }
+    }
+
+    #[test]
+    fn off_is_inert_and_validates() {
+        let c = TraceCfg::off();
+        assert!(!c.enabled());
+        c.validate();
+        assert_eq!(c, TraceCfg::off());
+    }
+
+    #[test]
+    #[should_panic(expected = "ring capacity")]
+    fn enabled_needs_capacity() {
+        TraceCfg { mode: TraceMode::Ring, ring_cap: 0 }.validate();
+    }
+
+    #[test]
+    fn ring_drops_oldest_deterministically() {
+        let hub = TraceHub::new(TraceCfg::ring(3));
+        let mut h = hub.borrow_mut();
+        for i in 0..5u64 {
+            h.record(ProcId(7), i * 10, i, ev(i));
+        }
+        assert_eq!(h.recorded, 5);
+        assert_eq!(h.dropped(), 2);
+        let reqs: Vec<u64> = h
+            .entries()
+            .iter()
+            .map(|e| match &e.ev {
+                TraceEv::ClientRound { req, .. } => *req,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(reqs, vec![2, 3, 4], "oldest evicted first");
+    }
+
+    #[test]
+    fn entries_merge_rings_by_dispatch_key() {
+        let hub = TraceHub::new(TraceCfg::ring(8));
+        let mut h = hub.borrow_mut();
+        // actor 9 records late, actor 3 early — entries() re-interleaves
+        h.record(ProcId(9), 200, 5, ev(1));
+        h.record(ProcId(3), 100, 2, ev(0));
+        h.record(ProcId(9), 300, 9, ev(2));
+        let order: Vec<u32> = h.entries().iter().map(|e| e.actor).collect();
+        assert_eq!(order, vec![3, 9, 9]);
+    }
+
+    #[test]
+    fn shard_merge_unions_disjoint_rings() {
+        let a = TraceHub::new(TraceCfg::full(8));
+        let b = TraceHub::new(TraceCfg::full(8));
+        a.borrow_mut().register(ProcId(0), ActorKind::Server, 0);
+        b.borrow_mut().register(ProcId(1), ActorKind::Server, 1);
+        a.borrow_mut().record(ProcId(0), 50, 1, ev(0));
+        b.borrow_mut().record(ProcId(1), 25, 0, ev(1));
+        let mut m = a.borrow().clone();
+        m.merge(&b.borrow());
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.recorded, 2);
+        let order: Vec<u32> = m.entries().iter().map(|e| e.actor).collect();
+        assert_eq!(order, vec![1, 0], "dispatch-key order, not shard order");
+        assert_eq!(m.actor_kind(1), Some((ActorKind::Server, 1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "two shards")]
+    fn shard_merge_rejects_overlapping_rings() {
+        let a = TraceHub::new(TraceCfg::ring(4));
+        let b = TraceHub::new(TraceCfg::ring(4));
+        a.borrow_mut().record(ProcId(0), 1, 1, ev(0));
+        b.borrow_mut().record(ProcId(0), 2, 2, ev(1));
+        a.borrow_mut().merge(&b.borrow());
+    }
+}

@@ -150,6 +150,49 @@ impl Cdf {
     pub fn max(&self) -> f64 {
         self.xs.last().copied().unwrap_or(0.0)
     }
+
+    /// The crate's one quantile ladder (p50/p90/p99/p99.9/max), computed
+    /// in a single call. Every report that prints a latency ladder goes
+    /// through this instead of repeating ad-hoc `quantile` call sites.
+    pub fn summary(&self) -> CdfSummary {
+        CdfSummary {
+            n: self.len(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            p999: self.quantile(0.999),
+            max: self.max(),
+        }
+    }
+}
+
+/// One row of quantiles from [`Cdf::summary`]. All 0.0 on an empty
+/// sample set (the `Cdf` convention).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CdfSummary {
+    pub n: usize,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub max: f64,
+}
+
+impl CdfSummary {
+    /// One-line rendering with a unit suffix, shared by the experiment
+    /// reports and the forensics dump.
+    pub fn render(&self, unit: &str) -> String {
+        format!(
+            "n={} p50={:.2}{u} p90={:.2}{u} p99={:.2}{u} p99.9={:.2}{u} max={:.2}{u}",
+            self.n,
+            self.p50,
+            self.p90,
+            self.p99,
+            self.p999,
+            self.max,
+            u = unit
+        )
+    }
 }
 
 fn fmt_num(x: f64) -> String {
@@ -293,6 +336,22 @@ mod tests {
         assert_eq!(c.fraction_le(2000.0), 1.0);
         let pts: Vec<_> = c.points().take(2).collect();
         assert_eq!(pts[0], (1.0, 0.001));
+    }
+
+    #[test]
+    fn cdf_summary_matches_quantiles() {
+        let c = Cdf::new((1..=1000).map(|i| i as f64).collect());
+        let s = c.summary();
+        assert_eq!(s.n, 1000);
+        assert_eq!(s.p50, c.quantile(0.50));
+        assert_eq!(s.p90, c.quantile(0.90));
+        assert_eq!(s.p99, c.quantile(0.99));
+        assert_eq!(s.p999, c.quantile(0.999));
+        assert_eq!(s.max, 1000.0);
+        let line = s.render("ms");
+        assert!(line.contains("n=1000") && line.contains("p99.9="), "{line}");
+        let empty = Cdf::default().summary();
+        assert_eq!(empty, CdfSummary { n: 0, p50: 0.0, p90: 0.0, p99: 0.0, p999: 0.0, max: 0.0 });
     }
 
     #[test]

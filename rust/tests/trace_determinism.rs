@@ -1,0 +1,246 @@
+//! Determinism suite for the flight recorder ([`optikv::trace`]):
+//!
+//! * the **disabled-recorder digest pin**: `TraceCfg::off()` (and the
+//!   default config, which is the same value) reproduces pre-trace
+//!   schedules bit-identically on the serial, sharded and threaded
+//!   engines — including a faulted adaptive run;
+//! * **trace digest identity**: with the recorder enabled, the merged
+//!   trace is bit-identical across serial / merged-order sharded /
+//!   threaded engines at shards {1, 2, 4, 8}, and the behavioral digest
+//!   still matches the untraced run (recording is a pure side channel);
+//! * the enabled recorder captures every event class end-to-end on the
+//!   faulted adaptive ladder;
+//! * forensics resolves every seeded violation to a non-empty causal
+//!   chain whose guilty writes hit the violated candidates' keys.
+
+use optikv::client::consistency::ConsistencyCfg;
+use optikv::exp::config::{AppKind, ExpConfig, TopoKind};
+use optikv::exp::runner::{run, ExpResult};
+use optikv::exp::scenarios;
+use optikv::sim::SEC;
+use optikv::trace::forensics::Forensics;
+use optikv::trace::{chrome, TraceCfg, TraceEv};
+
+/// Everything observable a schedule change would perturb (the
+/// [`sharded_determinism`] digest, minus fields the small scenarios here
+/// never populate).
+#[derive(Debug, PartialEq)]
+struct Digest {
+    events: u64,
+    sent: Vec<u64>,
+    ops_ok: u64,
+    ops_failed: u64,
+    quorum_timeouts: u64,
+    violations: usize,
+    candidates: u64,
+    recoveries: u64,
+    app_tps_bits: u64,
+    detection_ms_bits: Vec<u64>,
+    mode_timeline: Vec<(u64, u64, String)>,
+}
+
+fn digest(r: &ExpResult) -> Digest {
+    Digest {
+        events: r.sim_stats.events,
+        sent: r.sim_stats.sent.to_vec(),
+        ops_ok: r.ops_ok,
+        ops_failed: r.ops_failed,
+        quorum_timeouts: r.quorum_timeouts,
+        violations: r.violations_detected,
+        candidates: r.candidates_seen,
+        recoveries: r.recoveries,
+        app_tps_bits: r.app_tps.to_bits(),
+        detection_ms_bits: r.detection_latencies_ms.iter().map(|x| x.to_bits()).collect(),
+        mode_timeline: r
+            .mode_timeline
+            .iter()
+            .map(|sp| (sp.from, sp.epoch, sp.label().to_string()))
+            .collect(),
+    }
+}
+
+/// The merged trace as comparable bytes: the `(at, seq)`-ordered entry
+/// list plus the registry, Debug-rendered. Any reordering, loss or
+/// payload difference between engines shows up here.
+fn trace_digest(r: &ExpResult) -> String {
+    let hub = r.trace.as_ref().expect("recorder enabled");
+    let mut out = String::new();
+    for (id, kind, idx) in hub.actors() {
+        out.push_str(&format!("actor {id} = {kind:?}[{idx}]\n"));
+    }
+    for e in hub.entries() {
+        out.push_str(&format!("{e:?}\n"));
+    }
+    out
+}
+
+/// A violation-dense conjunctive run, small enough for CI: β = 10 % over
+/// 3-conjunct predicates seeds plenty of certified overlaps in 20 s.
+fn small_conj(name: &str) -> ExpConfig {
+    let mut cfg = ExpConfig::new(
+        name,
+        ConsistencyCfg::n3r1w1(),
+        AppKind::Conjunctive { n_preds: 6, n_conjuncts: 3, beta: 0.1, put_pct: 0.5 },
+    );
+    cfg.n_clients = 6;
+    cfg.duration = 20 * SEC;
+    cfg.topo = TopoKind::AwsRegional { zones: 3 };
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// the disabled-recorder digest pin
+// ---------------------------------------------------------------------------
+
+#[test]
+fn off_recorder_is_digest_identical_to_pre_trace_schedules() {
+    // the regression pin for the whole subsystem: a config that never
+    // mentions the recorder and one that sets `TraceCfg::off()`
+    // explicitly must replay bit-for-bit on every engine
+    let base = || scenarios::scaleout_conjunctive(8, 0.05, 42);
+    let off = || base().with_trace(TraceCfg::off());
+    let want = digest(&run(&base()));
+    let res = run(&off());
+    assert!(res.trace.is_none(), "Off builds no hub at all");
+    assert_eq!(digest(&res), want, "TraceCfg::off() perturbed the serial schedule");
+    for k in [2usize, 4] {
+        assert_eq!(digest(&run(&off().with_shards(k))), want, "sharded, k = {k}");
+        assert_eq!(
+            digest(&run(&off().with_shards(k).with_threaded())),
+            want,
+            "threaded, k = {k}"
+        );
+    }
+}
+
+#[test]
+fn off_recorder_is_digest_identical_on_a_faulted_adaptive_run() {
+    // the hooks sit in every actor the ladder exercises — clients,
+    // servers, monitors, rollback controller, adapt controller — so the
+    // faulted adaptive run is the maximal surface for an accidental
+    // schedule perturbation
+    let base = || scenarios::adaptive_ladder(0.1, 42);
+    let off = || base().with_trace(TraceCfg::off());
+    let want = digest(&run(&base()));
+    assert_eq!(digest(&run(&off())), want, "serial");
+    assert_eq!(digest(&run(&off().with_shards(2))), want, "sharded");
+    assert_eq!(digest(&run(&off().with_shards(2).with_threaded())), want, "threaded");
+}
+
+// ---------------------------------------------------------------------------
+// trace digest identity across engines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traces_are_bit_identical_across_engines_at_every_shard_count() {
+    // 8 servers so 8 shards get a server block each; Full mode so the
+    // payloads (HVC snapshots, candidate keys) are compared too
+    let mk = || scenarios::scaleout_conjunctive(8, 0.05, 42).with_trace(TraceCfg::full(1 << 16));
+    let untraced = digest(&run(&scenarios::scaleout_conjunctive(8, 0.05, 42)));
+    let serial = run(&mk());
+    assert_eq!(digest(&serial), untraced, "an enabled recorder must not change the schedule");
+    let want_trace = trace_digest(&serial);
+    let want = digest(&serial);
+    assert!(!serial.trace.as_ref().unwrap().is_empty(), "the run recorded events");
+    for k in [1usize, 2, 4, 8] {
+        let sharded = run(&mk().with_shards(k));
+        assert_eq!(digest(&sharded), want, "sharded behavior, k = {k}");
+        assert_eq!(trace_digest(&sharded), want_trace, "sharded trace, k = {k}");
+        let threaded = run(&mk().with_shards(k).with_threaded());
+        assert_eq!(digest(&threaded), want, "threaded behavior, k = {k}");
+        assert_eq!(trace_digest(&threaded), want_trace, "threaded trace, k = {k}");
+    }
+}
+
+#[test]
+fn chrome_export_is_identical_across_engines() {
+    // the export is a pure function of the merged trace, so this mostly
+    // re-checks entry identity — but it also pins that actor/track
+    // metadata (registered per shard) merges identically
+    let mk = || small_conj("trace-chrome").with_trace(TraceCfg::full(1 << 16));
+    let serial = run(&mk());
+    let want_json = chrome::chrome_trace_json(serial.trace.as_ref().unwrap());
+    let want_csv = chrome::signals_csv(serial.trace.as_ref().unwrap());
+    let threaded = run(&mk().with_shards(2).with_threaded());
+    assert_eq!(chrome::chrome_trace_json(threaded.trace.as_ref().unwrap()), want_json);
+    assert_eq!(chrome::signals_csv(threaded.trace.as_ref().unwrap()), want_csv);
+    assert!(want_json.starts_with("{\"displayTimeUnit\":\"ms\""));
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end capture and forensics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traced_ladder_captures_every_event_class() {
+    let res = run(&scenarios::traced_ladder(0.1, 42));
+    let hub = res.trace.as_ref().expect("traced_ladder enables the recorder");
+    let entries = hub.entries();
+    let has = |pred: &dyn Fn(&TraceEv) -> bool| entries.iter().any(|e| pred(&e.ev));
+    assert!(has(&|e| matches!(e, TraceEv::ClientIssue { .. })));
+    assert!(has(&|e| matches!(e, TraceEv::ClientRound { .. })));
+    assert!(has(&|e| matches!(e, TraceEv::ClientComplete { .. })));
+    assert!(has(&|e| matches!(e, TraceEv::ServerApply { .. })));
+    assert!(has(&|e| matches!(e, TraceEv::CandidateEmit { .. })));
+    assert!(has(&|e| matches!(e, TraceEv::MonitorBatch { .. })));
+    assert!(has(&|e| matches!(e, TraceEv::AdaptWindow { .. })), "controller window samples");
+    assert!(
+        has(&|e| matches!(e, TraceEv::ModeSwitch { .. })),
+        "the partition must drive at least one switch"
+    );
+    // full payloads are present: some apply carries an HVC snapshot
+    assert!(
+        entries.iter().any(|e| matches!(&e.ev, TraceEv::ServerApply { hvc, .. } if !hvc.is_empty())),
+        "Full mode records HVC snapshots"
+    );
+}
+
+#[test]
+fn forensics_resolves_every_seeded_violation() {
+    let res = run(&small_conj("trace-forensics").with_trace(TraceCfg::full(1 << 16)));
+    assert!(res.violations_detected > 0, "β = 10 % must seed violations in 20 s");
+    let hub = res.trace.as_ref().unwrap();
+    let forensics = Forensics::walk(hub);
+    assert!(!forensics.chains.is_empty(), "every violation event yields a chain record");
+    assert_eq!(forensics.empty_chains(), 0, "no violation may lose its causal chain");
+    for chain in &forensics.chains {
+        assert!(!chain.witnesses.is_empty());
+        assert!(chain.overlap.0 <= chain.overlap.1, "certified interval overlap is real");
+        for w in &chain.witnesses {
+            assert!(!w.writes.is_empty(), "every witness names its guilty writes");
+            for wr in &w.writes {
+                assert!(
+                    w.keys.contains(&wr.key),
+                    "guilty write key {} outside the candidate's key set {:?}",
+                    wr.key,
+                    w.keys
+                );
+            }
+        }
+    }
+    // the report renders without panicking and mentions the chains
+    let text = forensics.render();
+    assert!(text.contains("violation"), "render is human-readable: {text}");
+}
+
+#[test]
+fn ring_mode_records_but_skips_payloads() {
+    let res = run(&small_conj("trace-ring").with_trace(TraceCfg::ring(1 << 16)));
+    let hub = res.trace.as_ref().unwrap();
+    assert!(!hub.is_empty());
+    for e in hub.entries() {
+        match &e.ev {
+            TraceEv::ServerApply { hvc, .. } => assert!(hvc.is_empty(), "Ring skips HVC snapshots"),
+            TraceEv::CandidateEmit { keys, .. } => {
+                assert!(keys.is_empty(), "Ring skips candidate key lists")
+            }
+            _ => {}
+        }
+    }
+    // identity-only traces cannot be walked: the chains come back empty
+    // rather than wrong
+    let forensics = Forensics::walk(hub);
+    for chain in &forensics.chains {
+        assert_eq!(chain.n_writes(), 0);
+    }
+}
